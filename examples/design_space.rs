@@ -1,0 +1,124 @@
+//! Design-space exploration over the modeled Agilex accelerator.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+//!
+//! Sweeps the paper's architecture knobs — number form, unified vs PA+PD,
+//! scaling S, reduction strategy, IS-RBAM k₂ — and prints resources, fmax,
+//! fit, throughput and efficiency for each point, reproducing the §IV
+//! design narrative (PAPD-Mont → UDA-Mont → UDA-Standard) as one table.
+
+use ifzkp::fpga::rbam::ReductionKind;
+use ifzkp::fpga::{
+    device::IA840F, power, CurveId, DesignVariant, NumberForm, ResourceModel, SabConfig, SabModel,
+};
+use ifzkp::report::ascii_table;
+
+fn main() {
+    let rm = ResourceModel;
+    let m = 16_000_000u64;
+
+    // ---- 1. the §IV evolution: architecture × number form ----------------
+    let mut rows = Vec::new();
+    for (curve, bits) in [(CurveId::Bn254, 254u32), (CurveId::Bls12381, 381)] {
+        for (unified, form) in [
+            (false, NumberForm::Montgomery),
+            (true, NumberForm::Montgomery),
+            (true, NumberForm::Standard),
+        ] {
+            let v = DesignVariant { bits, form, unified };
+            for s in [1u32, 2] {
+                let r = rm.system(v, s);
+                let fits = IA840F.fits(&r);
+                let cfg = SabConfig {
+                    curve,
+                    variant: v,
+                    scaling: s,
+                    reduction: ReductionKind::Recursive { k2: 6 },
+                    rbam_units: 1,
+                };
+                let t = SabModel::new(cfg).time_msm(m);
+                let p = power::estimate(v, s);
+                rows.push(vec![
+                    format!("{} {}", curve.name(), v.label()),
+                    format!("S={s}"),
+                    format!("{:.0}k", r.alms / 1e3),
+                    format!("{:.0}", r.dsps),
+                    format!("{:.0}", r.m20ks),
+                    if fits { "yes".into() } else { "NO".into() },
+                    format!("{:.2}", t.m_msm_pps(m)),
+                    format!("{:.4}", t.m_msm_pps(m) / p.active_w),
+                ]);
+            }
+        }
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &format!("Design space: architecture x form x scaling (throughput @ {}M points)", m / 1_000_000),
+            &["design", "S", "ALM", "DSP", "M20K", "fits?", "M-PPS", "M-PPS/W"],
+            &rows,
+        )
+    );
+
+    // ---- 2. IS-RBAM k2 sweep (the reduction knob) -------------------------
+    let mut rows = Vec::new();
+    for k2 in 1..=12u32 {
+        let cfg = SabConfig {
+            reduction: ReductionKind::Recursive { k2 },
+            ..SabConfig::paper(CurveId::Bls12381, 2)
+        };
+        let small = SabModel::new(cfg).time_msm(10_000).total_s();
+        let large = SabModel::new(cfg).time_msm(m).total_s();
+        rows.push(vec![
+            format!("k2={k2}"),
+            format!("{:.4}", small),
+            format!("{:.3}", large),
+        ]);
+    }
+    {
+        let cfg = SabConfig {
+            reduction: ReductionKind::RunningSum,
+            ..SabConfig::paper(CurveId::Bls12381, 2)
+        };
+        rows.push(vec![
+            "running-sum".into(),
+            format!("{:.4}", SabModel::new(cfg).time_msm(10_000).total_s()),
+            format!("{:.3}", SabModel::new(cfg).time_msm(m).total_s()),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            "IS-RBAM sub-window sweep (BLS12-381 S=2; seconds per MSM)",
+            &["reduction", "t(10K)", "t(16M)"],
+            &rows,
+        )
+    );
+
+    // ---- 3. hypothetical larger device: where does scaling stop? ---------
+    let mut rows = Vec::new();
+    for s in 1..=4u32 {
+        let v = DesignVariant { bits: 381, form: NumberForm::Standard, unified: true };
+        let r = rm.system(v, s);
+        let cfg = SabConfig { scaling: s, ..SabConfig::paper(CurveId::Bls12381, s) };
+        let t = SabModel::new(cfg).time_msm(64_000_000);
+        rows.push(vec![
+            format!("S={s}"),
+            format!("{:.0}%", 100.0 * r.alms / IA840F.alms as f64),
+            if IA840F.fits(&r) { "fits".into() } else { "exceeds IA-840f".into() },
+            format!("{:.2}", t.m_msm_pps(64_000_000)),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            "Scaling beyond the paper (64M BLS12-381) — the paper's future-work projection",
+            &["S", "ALM util", "fit", "M-PPS"],
+            &rows,
+        )
+    );
+    println!("max feasible scaling on IA-840f (model): S={}",
+        IA840F.max_scaling(&rm, DesignVariant { bits: 381, form: NumberForm::Standard, unified: true }));
+}

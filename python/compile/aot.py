@@ -1,0 +1,83 @@
+"""AOT pipeline: lower the L2 graphs to HLO text for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--batch 256]
+
+Emits per curve:
+    uda_<curve>_b<batch>.hlo.txt     the batched UDA point processor
+plus a manifest.json the rust `runtime::artifact` module consumes.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model, params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_uda(curve: params.Curve, batch: int, block: int) -> str:
+    fn = model.uda_batch_fn(curve, block=block)
+    lowered = jax.jit(fn).lower(*model.example_args(curve, batch))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=256,
+                    help="engine batch size (rows per execute call)")
+    ap.add_argument("--block", type=int, default=64,
+                    help="pallas grid tile rows")
+    ap.add_argument("--curves", nargs="*", default=list(params.CURVES),
+                    choices=list(params.CURVES))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"batch": args.batch, "block": args.block, "artifacts": {}}
+    for name in args.curves:
+        curve = params.CURVES[name]
+        text = lower_uda(curve, args.batch, args.block)
+        fname = f"uda_{name}_b{args.batch}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "kind": "uda",
+            "curve": name,
+            "batch": args.batch,
+            "nlimb16": curve.nlimb16,
+            "sha256_16": digest,
+            "inputs": 6,
+            "outputs": 3,
+        }
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

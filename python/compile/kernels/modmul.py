@@ -1,0 +1,196 @@
+"""L1 Pallas kernel: batched Montgomery modular multiplication, 16-bit limbs.
+
+The paper's entire point processor reduces to a handful of modular
+operations (§IV-B1); the multiplier is the resource/latency driver. The
+hardware insight — replace the 3-integer-multiplier Montgomery pipeline
+with a single multiplier plus table-based reduction in carry-save form
+(§IV-B4) — maps to vectors as follows:
+
+* 16-bit limbs (`NLIMB16` per element) so every partial product and every
+  delayed-carry column sum fits a u64 lane with headroom (the carry-save
+  analogue: no carry chains inside the accumulation loop);
+* one fused product/column pass, then an interleaved Montgomery reduction
+  whose per-limb quotient digit `m = (t·(−p⁻¹)) mod 2¹⁶` is a pure lane-
+  local multiply — the software stand-in for the paper's M20K lookup;
+* a single carry-propagation + conditional-subtract epilogue.
+
+REPRESENTATION (perf-critical, see EXPERIMENTS.md §Perf/L1): limbs are
+carried through the computation as a **python list of (B,) u64 vectors**
+("lanes"), not as one (B, nl) tensor. Limb indexing then happens at trace
+time, so the lowered HLO is pure element-wise arithmetic — zero
+dynamic-update-slice ops. The first formulation used `.at[:, i].add(...)`
+scatters; XLA took ~280 s to compile the resulting UDA graph vs ~3 s for
+the lane form, and the artifact is ~5× smaller. The prime's limbs enter as
+python-int literals (folded into the graph), so kernels take no parameter
+input.
+
+Everything is batched over a leading dimension; the Pallas grid tiles that
+dimension in VMEM-sized blocks (`BLOCK`). `interpret=True` everywhere: the
+CPU PJRT client cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation for the real-TPU notes).
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import Curve
+
+MASK16 = 0xFFFF  # python int: folds as a literal
+
+
+def lanes(x, nl):
+    """(B, nl) array -> list of nl (B,) u64 lanes."""
+    x = x.astype(jnp.uint64)
+    return [x[:, i] for i in range(nl)]
+
+
+def unlanes(ls):
+    """list of (B,) lanes -> (B, nl) array."""
+    return jnp.stack(ls, axis=1)
+
+
+def _column_products(a, b, nl):
+    """Delayed-carry column sums of the schoolbook product.
+
+    a, b: lane lists of 16-bit values. Returns 2*nl lanes with column
+    k = sum_{i+j=k} a_i * b_j (each < nl * 2^32 — no overflow in u64).
+    """
+    cols = [None] * (2 * nl)
+    for i in range(nl):
+        for j in range(nl):
+            prod = a[i] * b[j]
+            k = i + j
+            cols[k] = prod if cols[k] is None else cols[k] + prod
+    zero = jnp.zeros_like(a[0])
+    return [c if c is not None else zero for c in cols]
+
+
+def _mont_reduce(t, p_limbs, inv16, nl):
+    """Interleaved Montgomery reduction of delayed-carry columns.
+
+    t: 2*nl lanes of column sums; p_limbs: python ints. Returns nl clean
+    16-bit lanes of a*b*R^-1 mod p, canonical (< p).
+    """
+    t = list(t)
+    for i in range(nl):
+        m = ((t[i] & MASK16) * inv16) & MASK16  # quotient digit
+        for j in range(nl):
+            if p_limbs[j]:
+                t[i + j] = t[i + j] + m * p_limbs[j]
+        # t[i] ≡ 0 mod 2^16 now; push its upper bits into column i+1.
+        t[i + 1] = t[i + 1] + (t[i] >> 16)
+    res = t[nl:]
+    out = []
+    carry = None
+    for i in range(nl):
+        v = res[i] if carry is None else res[i] + carry
+        out.append(v & MASK16)
+        carry = v >> 16
+    # Montgomery bound: result < 2p < 2^(16·nl) ⇒ final carry == 0.
+    return _cond_sub_p(out, p_limbs, nl)
+
+
+def _cond_sub_p(x, p_limbs, nl):
+    """If x >= p subtract p (branchless borrow chain over lanes)."""
+    diff = []
+    borrow = None
+    for i in range(nl):
+        d = x[i] - p_limbs[i] if borrow is None else x[i] - p_limbs[i] - borrow
+        borrow = (d >> 63) & 1  # wraparound ⇒ borrowed
+        diff.append(d & MASK16)
+    ge = borrow == 0  # no final borrow -> x >= p
+    return [jnp.where(ge, d, xi) for d, xi in zip(diff, x)]
+
+
+def mod_add(a, b, p_limbs, nl):
+    """(a + b) mod p over lanes."""
+    s = []
+    carry = None
+    for i in range(nl):
+        v = a[i] + b[i] if carry is None else a[i] + b[i] + carry
+        s.append(v & MASK16)
+        carry = v >> 16
+    # a, b < p ⇒ sum < 2p < 2^(16·nl): carry == 0.
+    return _cond_sub_p(s, p_limbs, nl)
+
+
+def mod_sub(a, b, p_limbs, nl):
+    """(a - b) mod p over lanes."""
+    d = []
+    borrow = None
+    for i in range(nl):
+        v = a[i] - b[i] if borrow is None else a[i] - b[i] - borrow
+        borrow = (v >> 63) & 1
+        d.append(v & MASK16)
+    underflow = borrow == 1
+    withp = []
+    carry = None
+    for i in range(nl):
+        v = d[i] + p_limbs[i] if carry is None else d[i] + p_limbs[i] + carry
+        withp.append(v & MASK16)
+        carry = v >> 16
+    return [jnp.where(underflow, w, di) for w, di in zip(withp, d)]
+
+
+def mont_mul_lanes(a, b, curve: Curve):
+    """Montgomery product over lanes."""
+    nl = curve.nlimb16
+    t = _column_products(a, b, nl)
+    return _mont_reduce(t, curve.limbs16(curve.p), curve.inv16, nl)
+
+
+def mont_mul(a, b, curve: Curve):
+    """Montgomery product over (B, nl) arrays (test/reference entry)."""
+    nl = curve.nlimb16
+    return unlanes(mont_mul_lanes(lanes(a, nl), lanes(b, nl), curve))
+
+
+def _modmul_kernel_body(curve: Curve):
+    nl = curve.nlimb16
+    p_limbs = curve.limbs16(curve.p)
+    inv16 = curve.inv16
+
+    def kernel(a_ref, b_ref, o_ref):
+        a = lanes(a_ref[...], nl)
+        b = lanes(b_ref[...], nl)
+        t = _column_products(a, b, nl)
+        out = _mont_reduce(t, p_limbs, inv16, nl)
+        o_ref[...] = unlanes(out).astype(jnp.uint32)
+
+    return kernel
+
+
+@functools.lru_cache(maxsize=None)
+def modmul_pallas(curve: Curve, block: int = 64):
+    """Build the batched Pallas modmul: (B, nl) u32 × (B, nl) u32 → same.
+
+    The grid walks the batch dimension in `block`-row tiles; each tile's
+    operands live in VMEM for the whole fused multiply-reduce (the BlockSpec
+    is the software form of the paper's "feed the pipelined multiplier a new
+    operand every cycle"). Cached per (curve, block) so the jit trace is
+    paid once per process.
+    """
+    nl = curve.nlimb16
+
+    @jax.jit
+    def call(a, b):
+        batch = a.shape[0]
+        assert batch % block == 0, f"batch {batch} % block {block} != 0"
+        grid = (batch // block,)
+        spec = pl.BlockSpec((block, nl), lambda i: (i, 0))
+        return pl.pallas_call(
+            _modmul_kernel_body(curve),
+            out_shape=jax.ShapeDtypeStruct((batch, nl), jnp.uint32),
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+            interpret=True,
+        )(a, b)
+
+    return call

@@ -1,0 +1,167 @@
+"""L1 Pallas kernel: the batched Unified Double-Add (UDA) point processor.
+
+§IV-B3 of the paper fuses point-add and point-double into one pipeline: both
+datapaths start, a join-mux keyed on a "PD check" (same-point detection)
+selects the surviving intermediates, and a shared tail finishes the result.
+One operation enters per cycle regardless of whether it is a PA or a PD.
+
+This kernel is that unit re-thought for a batched vector engine (the
+DESIGN.md §Hardware-Adaptation mapping): a block of B independent
+(accumulator, operand) Jacobian pairs streams in; both the `add-2007-bl`
+and `dbl-2009-l` dataflows are evaluated on the whole block; lane-wise
+`where` selects play the role of the join-mux. Infinity (Z = 0) and the
+P + (−P) → infinity corner follow the same select tree, so the kernel is
+total: any pair of curve points in, correct curve point out.
+
+All coordinates are (B, NLIMB16) u32 arrays of 16-bit Montgomery limbs at
+the boundary; internally everything is lane lists (see modmul.py's
+representation note — this keeps the lowered HLO scatter-free).
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import Curve
+from .modmul import _column_products, _mont_reduce, lanes, mod_add, mod_sub, unlanes
+
+
+def _uda_lanes(curve: Curve):
+    """Build the lane-level UDA computation."""
+    nl = curve.nlimb16
+    p_limbs = curve.limbs16(curve.p)
+    inv16 = curve.inv16
+
+    def mul(a, b):
+        return _mont_reduce(_column_products(a, b, nl), p_limbs, inv16, nl)
+
+    def add(a, b):
+        return mod_add(a, b, p_limbs, nl)
+
+    def sub(a, b):
+        return mod_sub(a, b, p_limbs, nl)
+
+    def dbl(x):
+        return add(x, x)
+
+    def is_zero(x):
+        z = x[0] == 0
+        for xi in x[1:]:
+            z = z & (xi == 0)
+        return z
+
+    def eq(a, b):
+        e = a[0] == b[0]
+        for ai, bi in zip(a[1:], b[1:]):
+            e = e & (ai == bi)
+        return e
+
+    def select(cond, a, b):
+        return [jnp.where(cond, ai, bi) for ai, bi in zip(a, b)]
+
+    def uda(x1, y1, z1, x2, y2, z2):
+        inf1 = is_zero(z1)
+        inf2 = is_zero(z2)
+
+        # ---- PA branch prefix (add-2007-bl) -----------------------------
+        z1z1 = mul(z1, z1)
+        z2z2 = mul(z2, z2)
+        u1 = mul(x1, z2z2)
+        u2 = mul(x2, z1z1)
+        s1 = mul(mul(y1, z2), z2z2)
+        s2 = mul(mul(y2, z1), z1z1)
+        h = sub(u2, u1)
+        r = dbl(sub(s2, s1))
+
+        # PD check — the join-mux condition (same x- and y-class).
+        pd = eq(u1, u2) & eq(s1, s2) & ~inf1 & ~inf2
+        # P + (−P): same x-class, different y ⇒ infinity.
+        cancel = eq(u1, u2) & ~eq(s1, s2) & ~inf1 & ~inf2
+
+        # ---- PA tail ----------------------------------------------------
+        h2 = dbl(h)
+        i = mul(h2, h2)
+        j = mul(h, i)
+        v = mul(u1, i)
+        r2 = mul(r, r)
+        x3a = sub(sub(r2, j), dbl(v))
+        y3a = sub(mul(r, sub(v, x3a)), dbl(mul(s1, j)))
+        zsum = add(z1, z2)
+        z3a = mul(sub(sub(mul(zsum, zsum), z1z1), z2z2), h)
+
+        # ---- PD branch (dbl-2009-l on P1, a = 0) ------------------------
+        a_ = mul(x1, x1)
+        b_ = mul(y1, y1)
+        c_ = mul(b_, b_)
+        t = add(x1, b_)
+        d_ = dbl(sub(sub(mul(t, t), a_), c_))
+        e_ = add(dbl(a_), a_)
+        f_ = mul(e_, e_)
+        x3d = sub(f_, dbl(d_))
+        y3d = sub(mul(e_, sub(d_, x3d)), dbl(dbl(dbl(c_))))
+        z3d = dbl(mul(y1, z1))
+
+        # ---- join-mux ---------------------------------------------------
+        x3 = select(pd, x3d, x3a)
+        y3 = select(pd, y3d, y3a)
+        z3 = select(pd, z3d, z3a)
+        # cancellation → infinity
+        zero = [jnp.zeros_like(l) for l in z3]
+        z3 = select(cancel, zero, z3)
+        # identity cases
+        x3 = select(inf1, x2, select(inf2, x1, x3))
+        y3 = select(inf1, y2, select(inf2, y1, y3))
+        z3 = select(inf1, z2, select(inf2, z1, z3))
+        return x3, y3, z3
+
+    return uda
+
+
+def _uda_kernel_body(curve: Curve):
+    nl = curve.nlimb16
+    uda = _uda_lanes(curve)
+
+    def kernel(x1, y1, z1, x2, y2, z2, ox, oy, oz):
+        args = [lanes(ref[...], nl) for ref in (x1, y1, z1, x2, y2, z2)]
+        rx, ry, rz = uda(*args)
+        ox[...] = unlanes(rx).astype(jnp.uint32)
+        oy[...] = unlanes(ry).astype(jnp.uint32)
+        oz[...] = unlanes(rz).astype(jnp.uint32)
+
+    return kernel
+
+
+@functools.lru_cache(maxsize=None)
+def uda_pallas(curve: Curve, block: int = 64):
+    """Batched UDA: six (B, nl) u32 inputs → three (B, nl) u32 outputs.
+
+    The Pallas grid tiles the batch in `block` rows; per tile the full UDA
+    dataflow (both branches + join-mux) runs out of VMEM. On a real TPU the
+    natural tiling is (8·k, 128) lanes with the limb dimension padded onto
+    the 128-lane axis; see DESIGN.md §Hardware-Adaptation.
+    Cached per (curve, block) so jit tracing amortizes across calls.
+    """
+    nl = curve.nlimb16
+
+    @jax.jit
+    def call(x1, y1, z1, x2, y2, z2):
+        batch = x1.shape[0]
+        assert batch % block == 0, f"batch {batch} % block {block} != 0"
+        grid = (batch // block,)
+        spec = pl.BlockSpec((block, nl), lambda i: (i, 0))
+        shape = jax.ShapeDtypeStruct((batch, nl), jnp.uint32)
+        return pl.pallas_call(
+            _uda_kernel_body(curve),
+            out_shape=(shape, shape, shape),
+            grid=grid,
+            in_specs=[spec] * 6,
+            out_specs=(spec, spec, spec),
+            interpret=True,
+        )(x1, y1, z1, x2, y2, z2)
+
+    return call

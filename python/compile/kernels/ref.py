@@ -1,0 +1,118 @@
+"""Pure python-int oracles for the L1/L2 kernels.
+
+Everything here is computed with arbitrary-precision integers and the
+textbook formulas — no JAX, no limbs. The pytest suites check the Pallas
+kernel and the AOT'd HLO against these, and the rust side is checked against
+the same math through its own tests, closing the cross-language loop.
+"""
+
+from ..params import Curve
+
+# EFD add-2007-bl / dbl-2009-l over Jacobian (X, Y, Z), a = 0.
+# Points are triples of canonical ints; infinity is Z == 0.
+INF = (0, 1, 0)
+
+
+def jac_is_inf(p):
+    return p[2] == 0
+
+
+def jac_double(p, curve: Curve):
+    """dbl-2009-l (a=0)."""
+    P = curve.p
+    x1, y1, z1 = p
+    if z1 == 0:
+        return INF
+    a = x1 * x1 % P
+    b = y1 * y1 % P
+    c = b * b % P
+    d = 2 * ((x1 + b) * (x1 + b) % P - a - c) % P
+    e = 3 * a % P
+    f = e * e % P
+    x3 = (f - 2 * d) % P
+    y3 = (e * (d - x3) - 8 * c) % P
+    z3 = 2 * y1 * z1 % P
+    return (x3, y3, z3)
+
+
+def jac_add(p1, p2, curve: Curve):
+    """add-2007-bl with unified double/infinity handling (UDA semantics)."""
+    P = curve.p
+    if jac_is_inf(p1):
+        return p2
+    if jac_is_inf(p2):
+        return p1
+    x1, y1, z1 = p1
+    x2, y2, z2 = p2
+    z1z1 = z1 * z1 % P
+    z2z2 = z2 * z2 % P
+    u1 = x1 * z2z2 % P
+    u2 = x2 * z1z1 % P
+    s1 = y1 * z2 * z2z2 % P
+    s2 = y2 * z1 * z1z1 % P
+    if u1 == u2:
+        if s1 == s2:
+            return jac_double(p1, curve)
+        return INF
+    h = (u2 - u1) % P
+    i = 4 * h * h % P
+    j = h * i % P
+    r = 2 * (s2 - s1) % P
+    v = u1 * i % P
+    x3 = (r * r - j - 2 * v) % P
+    y3 = (r * (v - x3) - 2 * s1 * j) % P
+    z3 = ((z1 + z2) * (z1 + z2) % P - z1z1 - z2z2) * h % P
+    return (x3, y3, z3)
+
+
+def jac_to_affine(p, curve: Curve):
+    if jac_is_inf(p):
+        return None
+    P = curve.p
+    zinv = pow(p[2], -1, P)
+    zi2 = zinv * zinv % P
+    return (p[0] * zi2 % P, p[1] * zi2 * zinv % P)
+
+
+def jac_scalar_mul(p, k, curve: Curve):
+    """Double-and-add (Algorithm 1 of the paper)."""
+    q = INF
+    for bit in bin(k)[2:] if k else "":
+        q = jac_double(q, curve)
+        if bit == "1":
+            q = jac_add(q, p, curve)
+    return q
+
+
+def generator_jac(curve: Curve):
+    x, y = curve.g1
+    return (x, y, 1)
+
+
+def is_on_curve_jac(p, curve: Curve):
+    if jac_is_inf(p):
+        return True
+    P = curve.p
+    x, y, z = p
+    z2 = z * z % P
+    z6 = z2 * z2 * z2 % P
+    return (y * y - x * x * x - curve.b * z6) % P == 0
+
+
+# --- Montgomery-domain helpers (the engine's number format) ---------------
+
+
+def mont_mul_int(a_mont, b_mont, curve: Curve):
+    """Montgomery product in the R = 2^(16·nlimb) domain."""
+    rinv = pow(curve.r16, -1, curve.p)
+    return a_mont * b_mont * rinv % curve.p
+
+
+def point_to_mont_limbs(p, curve: Curve):
+    """Jacobian int point -> 3 lists of 16-bit limbs in Montgomery form."""
+    return tuple(curve.limbs16(curve.to_mont(c)) for c in p)
+
+
+def point_from_mont_limbs(limbs3, curve: Curve):
+    """Inverse of point_to_mont_limbs."""
+    return tuple(curve.from_mont(curve.from_limbs16(c)) for c in limbs3)

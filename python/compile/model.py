@@ -1,0 +1,55 @@
+"""L2: the jit-able compute graphs that get AOT-compiled for the rust host.
+
+Two graph families per curve:
+
+* ``uda_batch`` — one batched UDA step (the paper's point processor): six
+  (B, nl) u32 coordinate arrays in, three out. The rust BAM drives bucket
+  accumulation by repeatedly invoking this executable on conflict-free
+  batches — exactly how the hardware BAM feeds its pipelined UDA.
+* ``uda_chain`` — ``steps`` dependent UDA applications folded inside one
+  executable (lax-unrolled): amortizes host↔engine transfer for the serial
+  reduction phases; used by the perf pass to pick the sweet spot.
+
+Python is build-time only; the rust runtime loads the lowered HLO text.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from . import params
+from .kernels import point_ops
+
+
+def uda_batch_fn(curve: params.Curve, block: int = 64):
+    """Returns f(x1,y1,z1,x2,y2,z2) -> (x3,y3,z3), all (B, nl) u32."""
+    kernel = point_ops.uda_pallas(curve, block=block)
+
+    def f(x1, y1, z1, x2, y2, z2):
+        return kernel(x1, y1, z1, x2, y2, z2)
+
+    return f
+
+def uda_chain_fn(curve: params.Curve, steps: int, block: int = 64):
+    """Returns f(x1..z2) that applies UDA `steps` times, folding the result
+    into the accumulator side each step: acc <- UDA(acc, operand). The
+    operand arrays are reused every step (useful shape for doubling chains:
+    pass the same point and it doubles `steps` times)."""
+    kernel = point_ops.uda_pallas(curve, block=block)
+
+    def f(x1, y1, z1, x2, y2, z2):
+        ax, ay, az = x1, y1, z1
+        for _ in range(steps):
+            ax, ay, az = kernel(ax, ay, az, x2, y2, z2)
+        return ax, ay, az
+
+    return f
+
+
+def example_args(curve: params.Curve, batch: int):
+    """ShapeDtypeStructs for lowering."""
+    nl = curve.nlimb16
+    spec = jax.ShapeDtypeStruct((batch, nl), jnp.uint32)
+    return tuple([spec] * 6)

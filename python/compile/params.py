@@ -1,0 +1,178 @@
+"""Canonical curve/field constants for BN254 ("BN128") and BLS12-381.
+
+Single source of truth shared by the L1/L2 kernels, the AOT pipeline and —
+via `gen_rust_params.py` — the rust substrate. Every constant is
+self-checked on import (Fermat primality witnesses, curve membership,
+subgroup order, NTT root existence), so a typo here fails loudly rather
+than corrupting test vectors.
+"""
+
+# --- BN254 (a.k.a. BN128 / alt_bn128): y^2 = x^3 + 3 over F_p -------------
+BN254_P = 21888242871839275222246405745257275088696311157297823662689037894645226208583
+BN254_R = 21888242871839275222246405745257275088548364400416034343698204186575808495617
+BN254_B = 3
+BN254_G1 = (1, 2)
+BN254_FR_GEN = 5          # multiplicative generator of F_r
+BN254_FR_TWO_ADICITY = 28
+BN254_FP_GEN = 3
+
+# BN254 G2 over F_p2 (u^2 = -1), curve y^2 = x^3 + 3/(9+u); EIP-197 generator.
+BN254_G2_X = (
+    10857046999023057135944570762232829481370756359578518086990519993285655852781,
+    11559732032986387107991004021392285783925812861821192530917403151452391805634,
+)
+BN254_G2_Y = (
+    8495653923123431417604973247489272438418190587263600148770280649306958101930,
+    4082367875863433681332203403145435568316851327593401208105741076214120093531,
+)
+
+# --- BLS12-381: y^2 = x^3 + 4 over F_p ------------------------------------
+BLS12_381_P = int(
+    "1a0111ea397fe69a4b1ba7b6434bacd764774b84f38512bf6730d2a0f6b0f624"
+    "1eabfffeb153ffffb9feffffffffaaab",
+    16,
+)
+BLS12_381_R = int("73eda753299d7d483339d80809a1d80553bda402fffe5bfeffffffff00000001", 16)
+BLS12_381_B = 4
+BLS12_381_G1 = (
+    int(
+        "17f1d3a73197d7942695638c4fa9ac0fc3688c4f9774b905a14e3a3f171bac58"
+        "6c55e83ff97a1aeffb3af00adb22c6bb",
+        16,
+    ),
+    int(
+        "08b3f481e3aaa0f1a09e30ed741d8ae4fcf5e095d5d00af600db18cb2c04b3ed"
+        "d03cc744a2888ae40caa232946c5e7e1",
+        16,
+    ),
+)
+BLS12_381_FR_GEN = 7
+BLS12_381_FR_TWO_ADICITY = 32
+BLS12_381_FP_GEN = 2
+
+# BLS12-381 G2 over F_p2 (u^2 = -1), curve y^2 = x^3 + 4(1+u); standard generator.
+BLS12_381_G2_X = (
+    int(
+        "024aa2b2f08f0a91260805272dc51051c6e47ad4fa403b02b4510b647ae3d177"
+        "0bac0326a805bbefd48056c8c121bdb8",
+        16,
+    ),
+    int(
+        "13e02b6052719f607dacd3a088274f65596bd0d09920b61ab5da61bbdc7f5049"
+        "334cf11213945d57e5ac7d055d042b7e",
+        16,
+    ),
+)
+BLS12_381_G2_Y = (
+    int(
+        "0ce5d527727d6e118cc9cdc6da2e351aadfd9baa8cbdd3a76d429a695160d12c"
+        "923ac9cc3baca289e193548608b82801",
+        16,
+    ),
+    int(
+        "0606c4a02ea734cc32acd2b02bc28b99cb3e287e85a763af267492ab572e99ab"
+        "3f370d275cec1da1aaa9075ff05f79be",
+        16,
+    ),
+)
+
+# 16-bit limb counts used by the L1 kernels (batch point engine).
+LIMB_BITS = 16
+BN254_NLIMB16 = 16   # 256 bits
+BLS12_381_NLIMB16 = 24  # 384 bits
+
+
+class Curve:
+    """Bundle of parameters for one curve family."""
+
+    def __init__(self, name, p, r, b, g1, fr_gen, fr_two_adicity, fp_gen,
+                 g2_x, g2_y, nlimb16, scalar_bits):
+        self.name = name
+        self.p = p
+        self.r = r
+        self.b = b
+        self.g1 = g1
+        self.fr_gen = fr_gen
+        self.fr_two_adicity = fr_two_adicity
+        self.fp_gen = fp_gen
+        self.g2_x = g2_x
+        self.g2_y = g2_y
+        self.nlimb16 = nlimb16
+        self.scalar_bits = scalar_bits
+        # Montgomery parameters for the 16-bit-limb kernel domain:
+        # R16 = 2**(16*nlimb16) (equals the rust 64-bit-limb R, by design).
+        self.r16 = 1 << (LIMB_BITS * nlimb16)
+        self.inv16 = (-pow(p, -1, 1 << LIMB_BITS)) % (1 << LIMB_BITS)
+        self.r2 = (self.r16 * self.r16) % p
+
+    def to_mont(self, x):
+        return (x * self.r16) % self.p
+
+    def from_mont(self, x):
+        return (x * pow(self.r16, -1, self.p)) % self.p
+
+    def limbs16(self, x):
+        """Little-endian 16-bit limbs of x (length nlimb16)."""
+        return [(x >> (LIMB_BITS * i)) & 0xFFFF for i in range(self.nlimb16)]
+
+    def from_limbs16(self, limbs):
+        return sum(int(v) << (LIMB_BITS * i) for i, v in enumerate(limbs))
+
+
+BN254 = Curve("bn254", BN254_P, BN254_R, BN254_B, BN254_G1, BN254_FR_GEN,
+              BN254_FR_TWO_ADICITY, BN254_FP_GEN, BN254_G2_X, BN254_G2_Y,
+              BN254_NLIMB16, 254)
+BLS12_381 = Curve("bls12_381", BLS12_381_P, BLS12_381_R, BLS12_381_B,
+                  BLS12_381_G1, BLS12_381_FR_GEN, BLS12_381_FR_TWO_ADICITY,
+                  BLS12_381_FP_GEN, BLS12_381_G2_X, BLS12_381_G2_Y,
+                  BLS12_381_NLIMB16, 381)
+
+CURVES = {c.name: c for c in (BN254, BLS12_381)}
+
+
+def _selfcheck():
+    for c in CURVES.values():
+        # Fermat witnesses (not full primality proofs, but catch any typo).
+        for a in (2, 3, 5, 7):
+            assert pow(a, c.p - 1, c.p) == 1, f"{c.name}: p fails Fermat base {a}"
+            assert pow(a, c.r - 1, c.r) == 1, f"{c.name}: r fails Fermat base {a}"
+        # G1 on curve.
+        x, y = c.g1
+        assert (y * y - x * x * x - c.b) % c.p == 0, f"{c.name}: G1 not on curve"
+        # F_r multiplicative generator has full order (check via factors 2 and
+        # the odd part: g^((r-1)/2) != 1).
+        assert pow(c.fr_gen, (c.r - 1) // 2, c.r) == c.r - 1
+        # 2-adicity: r-1 divisible by 2^s and the 2^s-th root is primitive.
+        s = c.fr_two_adicity
+        assert (c.r - 1) % (1 << s) == 0 and (c.r - 1) % (1 << (s + 1)) != 0
+        root = pow(c.fr_gen, (c.r - 1) >> s, c.r)
+        assert pow(root, 1 << (s - 1), c.r) == c.r - 1, f"{c.name}: bad 2^s root"
+        # fp_gen is a quadratic nonresidue (needed as Tonelli-Shanks seed).
+        assert pow(c.fp_gen, (c.p - 1) // 2, c.p) == c.p - 1
+        # p = 3 mod 4 (enables the fast sqrt both curves rely on).
+        assert c.p % 4 == 3
+        # G2 on curve over F_p2 with u^2 = -1 and b2 = b/(9+u) [BN] or b(1+u) [BLS].
+        p = c.p
+
+        def f2_mul(a, b):
+            return ((a[0] * b[0] - a[1] * b[1]) % p, (a[0] * b[1] + a[1] * b[0]) % p)
+
+        def f2_inv(a):
+            n = pow(a[0] * a[0] + a[1] * a[1], -1, p)
+            return (a[0] * n % p, (-a[1]) * n % p)
+
+        if c.name == "bn254":
+            b2 = f2_mul((c.b, 0), f2_inv((9, 1)))
+        else:
+            b2 = ((c.b) % p, (c.b) % p)  # 4*(1+u)
+        xx = f2_mul(c.g2_x, c.g2_x)
+        x3 = f2_mul(xx, c.g2_x)
+        yy = f2_mul(c.g2_y, c.g2_y)
+        lhs = ((yy[0] - x3[0] - b2[0]) % p, (yy[1] - x3[1] - b2[1]) % p)
+        assert lhs == (0, 0), f"{c.name}: G2 not on curve"
+        # Montgomery 16-bit parameters.
+        assert (c.p * ((-pow(c.p, -1, 1 << 16)) % (1 << 16)) + 1) % (1 << 16) == 0
+        assert c.from_mont(c.to_mont(12345)) == 12345
+
+
+_selfcheck()

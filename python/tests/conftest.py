@@ -1,0 +1,11 @@
+"""Test-session configuration.
+
+XLA's CPU backend takes minutes to optimize the large integer graphs the
+UDA kernel lowers to (thousands of u64 ops). Correctness tests don't need
+optimized code, so default the backend to -O0 unless the caller already
+set XLA_FLAGS. Must run before the first jax import.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_backend_optimization_level=0")

@@ -1,0 +1,124 @@
+"""L1 modmul kernel vs the python-int oracle (hypothesis-swept)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.params import BLS12_381, BN254, CURVES
+from compile.kernels import modmul as mm
+
+CURVE_LIST = list(CURVES.values())
+
+
+def limbs_arr(curve, values):
+    return np.array([curve.limbs16(v) for v in values], dtype=np.uint32)
+
+
+def from_limbs(curve, arr):
+    return [curve.from_limbs16(row) for row in np.asarray(arr)]
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+def test_mont_mul_known_values(curve):
+    # (1·R) ∘ (1·R) = 1·R  (Montgomery one is idempotent)
+    one_m = curve.to_mont(1)
+    a = limbs_arr(curve, [one_m] * 4)
+    out = mm.mont_mul(a.astype(np.uint64), a.astype(np.uint64), curve)
+    assert from_limbs(curve, out) == [one_m] * 4
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+def test_mont_mul_random_batch(curve):
+    rng = np.random.default_rng(1234)
+    vals_a = [int(rng.integers(0, 2**63)) * 7919 % curve.p for _ in range(16)]
+    vals_b = [curve.p - 1 - v for v in vals_a]
+    am = [curve.to_mont(v) for v in vals_a]
+    bm = [curve.to_mont(v) for v in vals_b]
+    a = limbs_arr(curve, am).astype(np.uint64)
+    b = limbs_arr(curve, bm).astype(np.uint64)
+    out = from_limbs(curve, mm.mont_mul(a, b, curve))
+    for am_i, bm_i, got in zip(am, bm, out):
+        want = am_i * bm_i * pow(curve.r16, -1, curve.p) % curve.p
+        assert got == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    a=st.integers(min_value=0),
+    b=st.integers(min_value=0),
+    ci=st.integers(min_value=0, max_value=1),
+)
+def test_mont_mul_hypothesis(a, b, ci):
+    curve = CURVE_LIST[ci]
+    a %= curve.p
+    b %= curve.p
+    am, bm = curve.to_mont(a), curve.to_mont(b)
+    arr_a = limbs_arr(curve, [am]).astype(np.uint64)
+    arr_b = limbs_arr(curve, [bm]).astype(np.uint64)
+    got = from_limbs(curve, mm.mont_mul(arr_a, arr_b, curve))[0]
+    assert curve.from_mont(got) == a * b % curve.p
+
+
+def run_lanes(fn, curve, a_vals, b_vals):
+    """Apply a lane-level op to canonical ints; return canonical ints."""
+    nl = curve.nlimb16
+    a = mm.lanes(limbs_arr(curve, a_vals), nl)
+    b = mm.lanes(limbs_arr(curve, b_vals), nl)
+    out = mm.unlanes(fn(a, b, curve.limbs16(curve.p), nl))
+    return from_limbs(curve, out)
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=st.integers(min_value=0), b=st.integers(min_value=0), ci=st.integers(0, 1))
+def test_mod_add_sub_hypothesis(a, b, ci):
+    curve = CURVE_LIST[ci]
+    a %= curve.p
+    b %= curve.p
+    s = run_lanes(mm.mod_add, curve, [a], [b])[0]
+    d = run_lanes(mm.mod_sub, curve, [a], [b])[0]
+    assert s == (a + b) % curve.p
+    assert d == (a - b) % curve.p
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+def test_edge_values(curve):
+    pm1 = curve.p - 1
+    cases_a = [0, 1, pm1, curve.to_mont(1)]
+    cases_b = [pm1, pm1, pm1, 0]
+    a = limbs_arr(curve, cases_a).astype(np.uint64)
+    b = limbs_arr(curve, cases_b).astype(np.uint64)
+    rinv = pow(curve.r16, -1, curve.p)
+    got = from_limbs(curve, mm.mont_mul(a, b, curve))
+    for x, y, g in zip(cases_a, cases_b, got):
+        assert g == x * y * rinv % curve.p
+    s = run_lanes(mm.mod_add, curve, cases_a, cases_b)
+    for x, y, g in zip(cases_a, cases_b, s):
+        assert g == (x + y) % curve.p
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+@pytest.mark.parametrize("block", [32, 64])
+def test_pallas_modmul_matches_jnp(curve, block):
+    rng = np.random.default_rng(99)
+    batch = 128
+    vals_a = [int.from_bytes(rng.bytes(32), "little") % curve.p for _ in range(batch)]
+    vals_b = [int.from_bytes(rng.bytes(32), "little") % curve.p for _ in range(batch)]
+    a = limbs_arr(curve, [curve.to_mont(v) for v in vals_a])
+    b = limbs_arr(curve, [curve.to_mont(v) for v in vals_b])
+    kernel = mm.modmul_pallas(curve, block=block)
+    out = from_limbs(curve, np.asarray(kernel(a, b)))
+    for va, vb, got in zip(vals_a, vals_b, out):
+        assert curve.from_mont(got) == va * vb % curve.p
+
+
+def test_pallas_rejects_ragged_batch():
+    kernel = mm.modmul_pallas(BN254, block=64)
+    a = np.zeros((65, BN254.nlimb16), dtype=np.uint32)
+    with pytest.raises(AssertionError):
+        kernel(a, a)
+
+
+def test_r16_radix_matches_u64_radix():
+    # The repack-without-arithmetic property the rust runtime relies on.
+    assert BN254.r16 == 1 << 256
+    assert BLS12_381.r16 == 1 << 384

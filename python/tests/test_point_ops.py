@@ -1,0 +1,166 @@
+"""Batched UDA kernel vs the python-int EC oracle.
+
+Two execution modes of the SAME kernel body (`_uda_lanes`):
+
+* **eager** (default) — the lane dataflow evaluated op-by-op, no jit, no
+  XLA compile: runs in seconds, used for the full semantic matrix;
+* **pallas** (`IFZKP_UDA_PALLAS=1`) — the real `pallas_call(interpret=True)`
+  + jit path the AOT artifact uses. XLA takes ~10 minutes to compile the
+  UDA graph per curve on this CPU, so it is opt-in; the recorded runs are
+  in EXPERIMENTS.md (§E2E also replays the compiled artifact from rust).
+"""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.params import BN254, CURVES
+from compile.kernels import modmul, point_ops, ref
+
+CURVE_LIST = list(CURVES.values())
+PALLAS = bool(os.environ.get("IFZKP_UDA_PALLAS"))
+BATCH = 4
+
+
+def pts_to_arrays(points, curve):
+    cols = [[], [], []]
+    for p in points:
+        limbs = ref.point_to_mont_limbs(p, curve)
+        for c in range(3):
+            cols[c].append(limbs[c])
+    return [np.array(c, dtype=np.uint32) for c in cols]
+
+
+def eq_jac(p, q, curve):
+    P = curve.p
+    if p[2] == 0 or q[2] == 0:
+        return p[2] == 0 and q[2] == 0
+    z1z1, z2z2 = p[2] * p[2] % P, q[2] * q[2] % P
+    if p[0] * z2z2 % P != q[0] * z1z1 % P:
+        return False
+    return p[1] * z2z2 * q[2] % P == q[1] * z1z1 * p[2] % P
+
+
+def run_uda(curve, pairs):
+    """Run pairs through the kernel body (eager or pallas per PALLAS)."""
+    n = len(pairs)
+    assert n <= BATCH
+    padded = list(pairs) + [(ref.INF, ref.INF)] * (BATCH - n)
+    a = pts_to_arrays([p for p, _ in padded], curve)
+    b = pts_to_arrays([q for _, q in padded], curve)
+    if PALLAS:
+        kernel = point_ops.uda_pallas(curve, block=BATCH)
+        out = kernel(a[0], a[1], a[2], b[0], b[1], b[2])
+        xs, ys, zs = [np.asarray(o) for o in out]
+    else:
+        import jax.numpy as jnp
+
+        nl = curve.nlimb16
+        uda = point_ops._uda_lanes(curve)
+        args = [
+            modmul.lanes(jnp.asarray(arr), nl) for arr in (a[0], a[1], a[2], b[0], b[1], b[2])
+        ]
+        rx, ry, rz = uda(*args)
+        xs = np.stack([np.asarray(v) for v in rx], axis=1)
+        ys = np.stack([np.asarray(v) for v in ry], axis=1)
+        zs = np.stack([np.asarray(v) for v in rz], axis=1)
+    out_pts = []
+    for i in range(n):
+        out_pts.append(
+            ref.point_from_mont_limbs(
+                (list(xs[i].astype(int)), list(ys[i].astype(int)), list(zs[i].astype(int))),
+                curve,
+            )
+        )
+    return out_pts
+
+
+def some_points(curve, count, seed=7):
+    g = ref.generator_jac(curve)
+    return [
+        ref.jac_scalar_mul(g, (seed * 0x9E3779B9 + i * 1237) % (curve.r - 3) + 2, curve)
+        for i in range(count)
+    ]
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+def test_uda_generic_adds(curve):
+    pts = some_points(curve, 8)
+    pairs = list(zip(pts[:4], pts[4:]))
+    got = run_uda(curve, pairs)
+    for (p, q), r in zip(pairs, got):
+        want = ref.jac_add(p, q, curve)
+        assert eq_jac(r, want, curve)
+        assert ref.is_on_curve_jac(r, curve)
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+def test_uda_pd_check_fires_on_equal_points(curve):
+    pts = some_points(curve, 3, seed=11)
+    pairs = [(p, p) for p in pts]
+    got = run_uda(curve, pairs)
+    for p, r in zip(pts, got):
+        assert eq_jac(r, ref.jac_double(p, curve), curve)
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+def test_uda_pd_check_fires_across_representations(curve):
+    # same point, different Z (the U/S-class comparison, not raw coords)
+    g = ref.generator_jac(curve)
+    p5 = ref.jac_scalar_mul(g, 5, curve)
+    P = curve.p
+    x, y, z = p5
+    p5b = (x * 9 % P, y * 27 % P, z * 3 % P)
+    assert eq_jac(p5, p5b, curve)
+    got = run_uda(curve, [(p5, p5b)])
+    assert eq_jac(got[0], ref.jac_double(p5, curve), curve)
+
+
+@pytest.mark.parametrize("curve", CURVE_LIST, ids=lambda c: c.name)
+def test_uda_cancellation_and_infinity(curve):
+    g = ref.generator_jac(curve)
+    p = ref.jac_scalar_mul(g, 777, curve)
+    neg = (p[0], (-p[1]) % curve.p, p[2])
+    pairs = [
+        (p, neg),            # P + (−P) = O
+        (ref.INF, p),        # O + P = P
+        (p, ref.INF),        # P + O = P
+        (ref.INF, ref.INF),  # O + O = O
+    ]
+    got = run_uda(curve, pairs)
+    assert got[0][2] == 0
+    assert eq_jac(got[1], p, curve)
+    assert eq_jac(got[2], p, curve)
+    assert got[3][2] == 0
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    ka=st.integers(min_value=1, max_value=1 << 200),
+    kb=st.integers(min_value=1, max_value=1 << 200),
+    ci=st.integers(0, 1),
+)
+def test_uda_hypothesis_random_multiples(ka, kb, ci):
+    curve = CURVE_LIST[ci]
+    g = ref.generator_jac(curve)
+    p = ref.jac_scalar_mul(g, ka % curve.r or 1, curve)
+    q = ref.jac_scalar_mul(g, kb % curve.r or 1, curve)
+    got = run_uda(curve, [(p, q)])
+    assert eq_jac(got[0], ref.jac_add(p, q, curve), curve)
+
+
+@pytest.mark.skipif(not PALLAS, reason="set IFZKP_UDA_PALLAS=1 (XLA compiles ~10min/curve)")
+def test_uda_pallas_grid_tiling_matches_single_block():
+    # same batch through 1 tile (block=4) vs 2 tiles (block=2)
+    pts = some_points(BN254, 8, seed=13)
+    pairs = list(zip(pts[:4], pts[4:]))
+    a = pts_to_arrays([p for p, _ in pairs], BN254)
+    b = pts_to_arrays([q for _, q in pairs], BN254)
+    k4 = point_ops.uda_pallas(BN254, block=4)
+    k2 = point_ops.uda_pallas(BN254, block=2)
+    o4 = [np.asarray(o) for o in k4(a[0], a[1], a[2], b[0], b[1], b[2])]
+    o2 = [np.asarray(o) for o in k2(a[0], a[1], a[2], b[0], b[1], b[2])]
+    for x, y in zip(o4, o2):
+        assert np.array_equal(x, y)

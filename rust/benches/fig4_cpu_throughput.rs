@@ -1,0 +1,19 @@
+//! Bench: regenerate Figure 4 (CPU MSM throughput vs size, M-MSM-PPS).
+//!
+//! Prints the libsnark-calibrated model series plus locally measured rows
+//! for sizes this host can execute quickly.
+
+use ifzkp::baseline::cpu;
+use ifzkp::ec::{Bls12381G1, Bn254G1};
+
+fn main() {
+    println!("{}", ifzkp::report::figures::fig4_cpu_throughput());
+
+    println!("# measured on this host (serial Pippenger)");
+    println!("msm_size,bn128_mpps_measured,bls12_381_mpps_measured");
+    for m in [1usize << 10, 1 << 12, 1 << 14, 1 << 16] {
+        let bn = cpu::measure_serial::<Bn254G1>(m, 0xF164 + m as u64);
+        let bls = cpu::measure_serial::<Bls12381G1>(m, 0xF164 + m as u64);
+        println!("{m},{:.4},{:.4}", bn.mpps, bls.mpps);
+    }
+}

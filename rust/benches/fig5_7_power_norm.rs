@@ -1,0 +1,9 @@
+//! Bench: regenerate Figures 5 and 7 (power-normalized FPGA throughput,
+//! S=1 vs S=2, per curve).
+
+use ifzkp::fpga::CurveId;
+
+fn main() {
+    println!("{}", ifzkp::report::figures::fig5_7_power_normalized(CurveId::Bn254));
+    println!("{}", ifzkp::report::figures::fig5_7_power_normalized(CurveId::Bls12381));
+}

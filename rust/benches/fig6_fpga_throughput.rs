@@ -1,0 +1,5 @@
+//! Bench: regenerate Figure 6 (FPGA throughput across curve and scaling).
+
+fn main() {
+    println!("{}", ifzkp::report::figures::fig6_fpga_throughput());
+}

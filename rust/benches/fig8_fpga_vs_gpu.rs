@@ -1,0 +1,6 @@
+//! Bench: regenerate Figure 8 (FPGA vs GPU normalized throughput and
+//! per-watt, BLS12-381).
+
+fn main() {
+    println!("{}", ifzkp::report::figures::fig8_fpga_vs_gpu());
+}

@@ -1,0 +1,168 @@
+//! Hot-path microbenchmarks (the §Perf instrumentation): field mul, EC
+//! point ops, MSM per-point cost, NTT butterflies — ns/op so the perf pass
+//! can track improvements without criterion.
+
+use ifzkp::ec::{points, Bls12381G1, Bn254G1, CurveParams, Jacobian};
+use ifzkp::ff::{Field, FpBls12381, FpBn254, FrBn254};
+use ifzkp::msm::{self, MsmConfig, Reduction};
+use ifzkp::ntt;
+use ifzkp::util::rng::Rng;
+use ifzkp::util::Stopwatch;
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+    for _ in 0..iters / 10 + 1 {
+        f(); // warmup
+    }
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        f();
+    }
+    let total = sw.secs();
+    println!("{name:<44} {:>12.1} ns/op   ({iters} iters)", total * 1e9 / iters as f64);
+}
+
+fn bench_field<F: Field>(label: &str, iters: u64) {
+    let mut rng = Rng::new(1);
+    let a = F::random(&mut rng);
+    let b = F::random(&mut rng);
+    let mut acc = a;
+    bench(&format!("{label} mul"), iters, || {
+        acc = acc.mul(&b);
+    });
+    bench(&format!("{label} square"), iters, || {
+        acc = acc.square();
+    });
+    bench(&format!("{label} add"), iters, || {
+        acc = acc.add(&b);
+    });
+    let mut inv_in = a;
+    bench(&format!("{label} inverse"), iters / 100 + 1, || {
+        inv_in = inv_in.inv().unwrap();
+    });
+    std::hint::black_box(acc);
+}
+
+fn bench_curve<C: CurveParams>(label: &str, iters: u64) {
+    let pts = points::generate_points_walk::<C>(4, 2);
+    let mut p = pts[0].to_jacobian();
+    let q = pts[1].to_jacobian();
+    let qa = pts[2];
+    bench(&format!("{label} jacobian add"), iters, || {
+        p = p.add(&q);
+    });
+    bench(&format!("{label} mixed add"), iters, || {
+        p = p.add_mixed(&qa);
+    });
+    bench(&format!("{label} double"), iters, || {
+        p = p.double();
+    });
+    std::hint::black_box(&p);
+}
+
+fn main() {
+    println!("== hot-path microbenchmarks ==");
+    bench_field::<FpBn254>("Fp(BN254, 4x64)", 200_000);
+    bench_field::<FpBls12381>("Fp(BLS12-381, 6x64)", 100_000);
+    bench_field::<ifzkp::ff::Fp2Bn254>("Fp2(BN254)", 50_000);
+
+    bench_curve::<Bn254G1>("BN254 G1", 20_000);
+    bench_curve::<Bls12381G1>("BLS12-381 G1", 10_000);
+
+    // MSM per-point cost at a realistic size
+    for (label, red) in
+        [("running-sum", Reduction::RunningSum), ("IS-RBAM k2=6", Reduction::Recursive { k2: 6 })]
+    {
+        let m = 1 << 14;
+        let w = points::workload::<Bn254G1>(m, 3);
+        let cfg = MsmConfig { window_bits: 12, reduction: red };
+        let sw = Stopwatch::start();
+        let out = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+        let t = sw.secs();
+        std::hint::black_box(out);
+        println!(
+            "BN254 MSM 2^14 ({label:<13})              {:>12.1} ns/point  ({:.3}s total)",
+            t * 1e9 / m as f64,
+            t
+        );
+    }
+
+    // batch-affine fills (the §Perf/L3 optimization) vs Jacobian fills
+    for (label, k) in [("k=8 fill-heavy", 8u32), ("k=12 hw window", 12)] {
+        let m = 1 << 14;
+        let w = points::workload::<Bn254G1>(m, 3);
+        let cfg = MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 6 } };
+        let sw = Stopwatch::start();
+        let jac = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+        let t_jac = sw.secs();
+        let sw = Stopwatch::start();
+        let aff = msm::batch_affine::msm(&w.points, &w.scalars, &cfg);
+        let t_aff = sw.secs();
+        assert!(jac.eq_point(&aff));
+        println!(
+            "BN254 MSM 2^14 batch-affine ({label})      {:>12.1} ns/point (vs jacobian {:.1}; {:.2}x)",
+            t_aff * 1e9 / m as f64,
+            t_jac * 1e9 / m as f64,
+            t_jac / t_aff
+        );
+    }
+
+    // parallel scaling
+    for threads in [1usize, 2, 4] {
+        let m = 1 << 14;
+        let w = points::workload::<Bn254G1>(m, 3);
+        let cfg = MsmConfig::default();
+        let sw = Stopwatch::start();
+        let out = msm::parallel::msm(&w.points, &w.scalars, &cfg, threads);
+        let t = sw.secs();
+        std::hint::black_box(out);
+        println!(
+            "BN254 MSM 2^14 parallel x{threads}                  {:>12.1} ns/point",
+            t * 1e9 / m as f64
+        );
+    }
+
+    // NTT
+    let mut rng = Rng::new(4);
+    let dom = ntt::domain::Domain::<ifzkp::ff::params::Bn254FrParams, 4>::new(1 << 14).unwrap();
+    let mut v: Vec<FrBn254> = (0..1 << 14).map(|_| FrBn254::random(&mut rng)).collect();
+    let sw = Stopwatch::start();
+    let reps = 10;
+    for _ in 0..reps {
+        ntt::ntt_in_place(&mut v, &dom.omega);
+    }
+    let t = sw.secs() / reps as f64;
+    println!(
+        "NTT 2^14 (BN254 Fr)                          {:>12.1} ns/element  ({:.1}ms per transform)",
+        t * 1e9 / (1 << 14) as f64,
+        t * 1e3
+    );
+
+    // engine (if artifacts present): batched UDA throughput
+    let dir = ifzkp::runtime::artifact::default_dir();
+    if dir.join("manifest.json").exists() && std::env::var("IFZKP_BENCH_ENGINE").is_ok() {
+        println!("\n== PJRT UDA engine ==");
+        let ctx = ifzkp::runtime::PjrtContext::cpu().unwrap();
+        let manifest = ifzkp::runtime::ArtifactManifest::load(&dir).unwrap();
+        let sw = Stopwatch::start();
+        let engine = ifzkp::runtime::UdaEngine::<Bn254G1>::load(&ctx, &manifest).unwrap();
+        println!("artifact compile: {:.1}s", sw.secs());
+        let b = engine.batch();
+        let pts = points::generate_points_walk::<Bn254G1>(2 * b, 5);
+        let pairs: Vec<(Jacobian<Bn254G1>, Jacobian<Bn254G1>)> =
+            (0..b).map(|i| (pts[i].to_jacobian(), pts[i + b].to_jacobian())).collect();
+        let _ = engine.uda_batch(&pairs).unwrap(); // warm
+        let sw = Stopwatch::start();
+        let reps = 20;
+        for _ in 0..reps {
+            let _ = engine.uda_batch(&pairs).unwrap();
+        }
+        let t = sw.secs() / reps as f64;
+        println!(
+            "engine UDA batch={b}: {:.2} ms/batch = {:.1} us/point-op",
+            t * 1e3,
+            t * 1e6 / b as f64
+        );
+    } else {
+        println!("\n(engine bench skipped: set IFZKP_BENCH_ENGINE=1 with artifacts built)");
+    }
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Tables II + III (measured modmul counts: naive
+//! double-and-add vs the bucket method at the hardware window k=12),
+//! plus the IS-RBAM ablation table.
+
+fn main() {
+    let m: usize = std::env::var("IFZKP_BENCH_MSM_SIZE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    println!("{}", ifzkp::report::tables::table2_3(m, 20240710));
+    println!("{}", ifzkp::report::tables::ablation_reduction());
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Tables IV, V and VII (resource model vs the paper's
+//! synthesis results).
+
+fn main() {
+    println!("{}", ifzkp::report::tables::table4_5());
+    println!("{}", ifzkp::report::tables::table7());
+}

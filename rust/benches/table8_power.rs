@@ -1,0 +1,5 @@
+//! Bench: regenerate Table VIII (standby/active power model vs paper).
+
+fn main() {
+    println!("{}", ifzkp::report::tables::table8());
+}

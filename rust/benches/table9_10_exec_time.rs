@@ -1,0 +1,15 @@
+//! Bench: regenerate Tables IX and X (execution-time comparison CPU / GPU /
+//! FPGA for BLS12-381, and the 64M summary).
+//!
+//! The CPU column is both modeled (libsnark-calibrated) and measured (this
+//! crate's parallel MSM, for sizes up to IFZKP_BENCH_CPU_MEASURE, default
+//! 2^17 — keeps `cargo bench` fast; raise it for a fuller sweep).
+
+fn main() {
+    let cap: usize = std::env::var("IFZKP_BENCH_CPU_MEASURE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 17);
+    println!("{}", ifzkp::report::tables::table9(cap));
+    println!("{}", ifzkp::report::tables::table10());
+}

@@ -1,0 +1,127 @@
+//! GPU baseline model: Bellperson BLS12-381 MSM on an NVIDIA T4
+//! (AWS g4dn.16xlarge) — §V-A/§V-C4.
+//!
+//! No GPU exists in this environment, so per the substitution rule the GPU
+//! series is the paper's own published Table IX column, log-log
+//! interpolated between anchors (and extended by the asymptotic
+//! points-per-second rate beyond them):
+//!
+//! ```text
+//! m:      1e3   1e4   1e5    1e6   2e6   4e6   8e6   16e6  32e6  64e6
+//! t(s):   0.01  0.02  0.09   0.36  0.68  1.21  2.21  4.28  8.63  17.10
+//! ```
+//!
+//! Power: 70 W board power under load (Table X).
+
+use crate::fpga::CurveId;
+
+/// Published (m, seconds) anchor points (Table IX GPU column).
+const T4_ANCHORS: [(f64, f64); 10] = [
+    (1e3, 0.01),
+    (1e4, 0.02),
+    (1e5, 0.09),
+    (1e6, 0.36),
+    (2e6, 0.68),
+    (4e6, 1.21),
+    (8e6, 2.21),
+    (16e6, 4.28),
+    (32e6, 8.63),
+    (64e6, 17.10),
+];
+
+/// T4/Bellperson model.
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    anchors: &'static [(f64, f64)],
+    /// Board power under load (W), Table X.
+    pub power_w: f64,
+}
+
+impl GpuModel {
+    /// The paper's benchmarked configuration (BLS12-381 only — bellperson
+    /// is a Filecoin library; no BN128 GPU column exists in the paper,
+    /// Table X marks it NA).
+    pub fn t4_bellperson(curve: CurveId) -> Option<GpuModel> {
+        match curve {
+            CurveId::Bls12381 => Some(GpuModel { anchors: &T4_ANCHORS, power_w: 70.0 }),
+            CurveId::Bn254 => None,
+        }
+    }
+
+    /// Seconds for an m-point MSM: log-log interpolation between the
+    /// published anchors; constant-rate extrapolation outside them.
+    pub fn seconds(&self, m: u64) -> f64 {
+        let m = m as f64;
+        let a = self.anchors;
+        if m <= a[0].0 {
+            // below the smallest anchor: launch overhead dominates
+            return a[0].1;
+        }
+        let last = a[a.len() - 1];
+        if m >= last.0 {
+            // beyond the table: asymptotic per-point rate of the last span
+            let prev = a[a.len() - 2];
+            let rate = (last.1 - prev.1) / (last.0 - prev.0);
+            return last.1 + (m - last.0) * rate;
+        }
+        let i = a.partition_point(|&(am, _)| am < m);
+        let (m0, t0) = a[i - 1];
+        let (m1, t1) = a[i];
+        let f = (m.ln() - m0.ln()) / (m1.ln() - m0.ln());
+        (t0.ln() + f * (t1.ln() - t0.ln())).exp()
+    }
+
+    pub fn throughput_mpps(&self, m: u64) -> f64 {
+        m as f64 / self.seconds(m) / 1e6
+    }
+
+    pub fn throughput_per_watt(&self, m: u64) -> f64 {
+        self.throughput_mpps(m) / self.power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table_ix_gpu_column_exactly_at_anchors() {
+        let g = GpuModel::t4_bellperson(CurveId::Bls12381).unwrap();
+        for &(m, want) in &T4_ANCHORS {
+            let got = g.seconds(m as u64);
+            assert!((got - want).abs() < 1e-9, "m={m}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn interpolation_monotone_between_anchors() {
+        let g = GpuModel::t4_bellperson(CurveId::Bls12381).unwrap();
+        let mut last = 0.0;
+        for m in [1_500u64, 50_000, 500_000, 3_000_000, 48_000_000] {
+            let t = g.seconds(m);
+            assert!(t > last, "monotone at {m}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn extrapolates_sanely() {
+        let g = GpuModel::t4_bellperson(CurveId::Bls12381).unwrap();
+        assert_eq!(g.seconds(10), 0.01); // overhead floor
+        let t128m = g.seconds(128_000_000);
+        assert!((t128m - 34.0).abs() < 2.0, "{t128m}"); // ~2× the 64M time
+    }
+
+    #[test]
+    fn no_bn128_gpu_baseline() {
+        assert!(GpuModel::t4_bellperson(CurveId::Bn254).is_none());
+    }
+
+    #[test]
+    fn throughput_saturates_near_3_75_mpps() {
+        let g = GpuModel::t4_bellperson(CurveId::Bls12381).unwrap();
+        let t64m = g.throughput_mpps(64_000_000);
+        assert!((t64m - 3.74).abs() < 0.1, "{t64m}");
+        assert!(g.throughput_mpps(1_000) < 0.2);
+    }
+}

@@ -1,0 +1,17 @@
+//! CPU and GPU baselines (§V-B, §V-C4).
+//!
+//! * [`cpu`] — two forms: **measured** (this crate's own MSM, timed on the
+//!   actual host — the honest baseline for our Table IX) and
+//!   **libsnark-calibrated** (a throughput model pinned to the paper's
+//!   published libsnark/Clearmatics numbers, so the paper's speedup
+//!   factors can be reproduced at sizes impractical to execute here);
+//! * [`gpu`] — a throughput model of Bellperson on the NVIDIA T4
+//!   (g4dn.16xlarge), calibrated to Table IX's GPU column — the paper
+//!   itself used a cloud instance it didn't control; our substitution is
+//!   one step further removed but preserves the published curve.
+
+pub mod cpu;
+pub mod gpu;
+
+pub use cpu::{CpuBaseline, CpuMeasurement};
+pub use gpu::GpuModel;

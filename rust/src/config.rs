@@ -1,0 +1,272 @@
+//! Configuration system: a TOML-subset parser plus the typed system config.
+//!
+//! The offline dependency set has no serde/toml, so the needed subset is
+//! implemented here: `[section]` headers, `key = value` with strings,
+//! integers, floats, booleans and flat arrays, `#` comments. That covers
+//! launcher configs like:
+//!
+//! ```toml
+//! [serve]
+//! curve = "bls12_381"        # or "bn254"
+//! devices = ["sim_fpga", "cpu"]
+//! scaling = 2
+//! queue_capacity = 256
+//! batch_max = 8
+//! batch_wait_ms = 2.0
+//!
+//! [msm]
+//! window_bits = 12
+//! reduction = "recursive"
+//! k2 = 6
+//! ```
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// section → key → value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn get_int(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+/// Parse a config document.
+pub fn parse(src: &str) -> Result<Config, String> {
+    let mut cfg = Config::default();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+            section = name.trim().to_string();
+            cfg.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let v = parse_value(value.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        cfg.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(key.trim().to_string(), v);
+    }
+    Ok(cfg)
+}
+
+/// Load from a file path.
+pub fn load(path: &std::path::Path) -> Result<Config, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+    parse(&src)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_items(inner)?.into_iter().map(|it| parse_value(&it)).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_items(s: &str) -> Result<Vec<String>, String> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                items.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur.trim().to_string());
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+[serve]
+curve = "bls12_381"
+devices = ["sim_fpga", "cpu"]   # device list
+scaling = 2
+batch_wait_ms = 2.5
+verbose = true
+
+[msm]
+window_bits = 12
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("serve", "curve", ""), "bls12_381");
+        assert_eq!(c.get_int("serve", "scaling", 0), 2);
+        assert!((c.get_float("serve", "batch_wait_ms", 0.0) - 2.5).abs() < 1e-12);
+        assert!(c.get_bool("serve", "verbose", false));
+        assert_eq!(c.get_int("msm", "window_bits", 0), 12);
+        let devs = c.get("serve", "devices").unwrap().as_array().unwrap();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[0].as_str(), Some("sim_fpga"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse("").unwrap();
+        assert_eq!(c.get_int("nope", "x", 42), 42);
+        assert_eq!(c.get_str("nope", "y", "d"), "d");
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let c = parse("[s]\nk = \"a#b\"").unwrap();
+        assert_eq!(c.get_str("s", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn int_with_underscores() {
+        let c = parse("[s]\nn = 64_000_000").unwrap();
+        assert_eq!(c.get_int("s", "n", 0), 64_000_000);
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("[s\n").is_err());
+        assert!(parse("[s]\ngarbage").is_err());
+        assert!(parse("[s]\nk = [1, \"x]").is_err());
+    }
+
+    #[test]
+    fn float_and_int_coercion() {
+        let c = parse("[s]\na = 2\nb = 2.5").unwrap();
+        assert_eq!(c.get_float("s", "a", 0.0), 2.0);
+        assert_eq!(c.get_float("s", "b", 0.0), 2.5);
+        assert_eq!(c.get_int("s", "b", 7), 7); // floats don't silently truncate
+    }
+}

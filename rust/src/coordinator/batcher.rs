@@ -1,0 +1,137 @@
+//! Job batcher: groups same-point-set jobs so a device runs them
+//! back-to-back (the point set streams from DDR while the scalars change —
+//! §IV-A's cheap path). A batch flushes when it reaches `max_batch` or its
+//! oldest job has waited `max_wait`.
+
+use super::request::{MsmJob, PointSetId};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates jobs per point set.
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: HashMap<PointSetId, Vec<MsmJob>>,
+    oldest: HashMap<PointSetId, Instant>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: HashMap::new(), oldest: HashMap::new() }
+    }
+
+    /// Add a job; returns a full batch if this push filled one.
+    pub fn push(&mut self, job: MsmJob) -> Option<(PointSetId, Vec<MsmJob>)> {
+        let ps = job.point_set;
+        let entry = self.pending.entry(ps).or_default();
+        self.oldest.entry(ps).or_insert_with(Instant::now);
+        entry.push(job);
+        if entry.len() >= self.policy.max_batch {
+            return self.take(ps);
+        }
+        None
+    }
+
+    /// Pop every batch whose oldest job exceeded the wait budget.
+    pub fn expired(&mut self, now: Instant) -> Vec<(PointSetId, Vec<MsmJob>)> {
+        let ready: Vec<PointSetId> = self
+            .oldest
+            .iter()
+            .filter(|(_, &t)| now.duration_since(t) >= self.policy.max_wait)
+            .map(|(&ps, _)| ps)
+            .collect();
+        ready.into_iter().filter_map(|ps| self.take(ps)).collect()
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<(PointSetId, Vec<MsmJob>)> {
+        let keys: Vec<PointSetId> = self.pending.keys().copied().collect();
+        keys.into_iter().filter_map(|ps| self.take(ps)).collect()
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+
+    fn take(&mut self, ps: PointSetId) -> Option<(PointSetId, Vec<MsmJob>)> {
+        self.oldest.remove(&ps);
+        let jobs = self.pending.remove(&ps)?;
+        if jobs.is_empty() {
+            None
+        } else {
+            Some((ps, jobs))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::JobId;
+    use std::sync::Arc;
+
+    fn job(id: u64, ps: u64) -> MsmJob {
+        MsmJob {
+            id: JobId(id),
+            point_set: PointSetId(ps),
+            scalars: Arc::new(vec![[id, 0, 0, 0]]),
+            submitted_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(9) });
+        assert!(b.push(job(1, 5)).is_none());
+        assert!(b.push(job(2, 5)).is_none());
+        let (ps, jobs) = b.push(job(3, 5)).expect("full batch");
+        assert_eq!(ps, PointSetId(5));
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn separate_point_sets_dont_mix() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(9) });
+        assert!(b.push(job(1, 1)).is_none());
+        assert!(b.push(job(2, 2)).is_none());
+        assert_eq!(b.pending_jobs(), 2);
+        let full = b.push(job(3, 1)).expect("set 1 fills");
+        assert_eq!(full.1.len(), 2);
+        assert_eq!(b.pending_jobs(), 1);
+    }
+
+    #[test]
+    fn expiry_flushes_old_batches() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        b.push(job(1, 3));
+        std::thread::sleep(Duration::from_millis(3));
+        b.push(job(2, 4)); // fresh — wait, also >1ms by flush time? use now
+        let now = Instant::now() + Duration::from_millis(2);
+        let expired = b.expired(now);
+        assert_eq!(expired.len(), 2);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.push(job(1, 1));
+        b.push(job(2, 2));
+        let drained = b.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(b.pending_jobs(), 0);
+        assert!(b.drain().is_empty());
+    }
+}

@@ -1,0 +1,238 @@
+//! Device backends: where an MSM job actually runs.
+//!
+//! * [`DeviceBackend::Native`] — this crate's multi-threaded Pippenger
+//!   (the CPU of Table IX);
+//! * [`DeviceBackend::SimFpga`] — bit-exact native compute **plus** the
+//!   SAB model's virtual latency: results are real, reported timing is the
+//!   modeled accelerator's (how every Table IX FPGA row is produced);
+//! * [`DeviceBackend::Engine`] — the PJRT UDA engine (real offloaded
+//!   compute through the AOT artifact). PJRT handles are thread-pinned
+//!   (`!Send` — Rc/raw pointers inside the xla crate), so the backend
+//!   carries a **factory** and each worker thread constructs its engine
+//!   locally at startup — mirroring the one-bitstream-per-board reality.
+
+use super::request::PointSetId;
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+use crate::fpga::{SabConfig, SabModel};
+use crate::msm::{self, MsmConfig};
+use crate::runtime::{msm_engine, EngineCurve, UdaEngine};
+use crate::util::Stopwatch;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Thread-local MSM executor built from an [`DeviceBackend::Engine`]
+/// factory (deliberately not `Send`: PJRT state stays on its thread).
+pub trait EngineHolder<C: CurveParams> {
+    fn msm(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+        cfg: &MsmConfig,
+    ) -> anyhow::Result<Jacobian<C>>;
+}
+
+impl<C: EngineCurve> EngineHolder<C> for UdaEngine<C> {
+    fn msm(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+        cfg: &MsmConfig,
+    ) -> anyhow::Result<Jacobian<C>> {
+        msm_engine::msm_engine(self, points, scalars, cfg).map(|(p, _)| p)
+    }
+}
+
+/// Constructor for a thread-local engine.
+pub type EngineFactory<C> =
+    Box<dyn FnOnce() -> anyhow::Result<Box<dyn EngineHolder<C>>> + Send>;
+
+/// Execution backend of one device slot (the movable description).
+pub enum DeviceBackend<C: CurveParams> {
+    /// Host CPU, `threads`-way parallel Pippenger.
+    Native { threads: usize },
+    /// Modeled FPGA: native compute, virtual (modeled) device time.
+    SimFpga { model: SabModel },
+    /// PJRT UDA engine, constructed on the worker thread.
+    Engine { factory: EngineFactory<C> },
+}
+
+/// Descriptor of one device (moved into its worker thread).
+pub struct DeviceDesc<C: CurveParams> {
+    pub name: String,
+    pub backend: DeviceBackend<C>,
+    /// DDR byte budget for resident point sets.
+    pub ddr_capacity: u64,
+    pub msm_cfg: MsmConfig,
+}
+
+impl<C: CurveParams> DeviceDesc<C> {
+    pub fn native(threads: usize) -> Self {
+        DeviceDesc {
+            name: format!("cpu{threads}"),
+            backend: DeviceBackend::Native { threads },
+            ddr_capacity: u64::MAX, // host memory: effectively unbounded here
+            msm_cfg: MsmConfig::default(),
+        }
+    }
+
+    pub fn sim_fpga(cfg: SabConfig, ddr_capacity: u64) -> Self {
+        DeviceDesc {
+            name: format!("fpga-{}-s{}", cfg.curve.name(), cfg.scaling),
+            backend: DeviceBackend::SimFpga { model: SabModel::new(cfg) },
+            ddr_capacity,
+            msm_cfg: MsmConfig::default(),
+        }
+    }
+
+    /// A PJRT-engine device loading the curve's artifact from the default
+    /// manifest (construction deferred to the worker thread).
+    pub fn engine_default<E: EngineCurve>(ddr_capacity: u64) -> DeviceDesc<E> {
+        DeviceDesc {
+            name: format!("engine-{}", E::MANIFEST_KEY),
+            backend: DeviceBackend::Engine {
+                factory: Box::new(|| {
+                    let ctx = crate::runtime::PjrtContext::cpu()?;
+                    let manifest = crate::runtime::ArtifactManifest::load(
+                        &crate::runtime::artifact::default_dir(),
+                    )?;
+                    let engine = UdaEngine::<E>::load(&ctx, &manifest)?;
+                    Ok(Box::new(engine) as Box<dyn EngineHolder<E>>)
+                }),
+            },
+            ddr_capacity,
+            msm_cfg: MsmConfig { window_bits: 8, reduction: Default::default() },
+        }
+    }
+
+    /// Materialize into a runnable device (constructs engine state on the
+    /// *calling* thread — do this from the owning worker).
+    pub fn into_runtime(self) -> anyhow::Result<RunningDevice<C>> {
+        let backend = match self.backend {
+            DeviceBackend::Native { threads } => RunningBackend::Native { threads },
+            DeviceBackend::SimFpga { model } => RunningBackend::SimFpga { model },
+            DeviceBackend::Engine { factory } => RunningBackend::Engine { engine: factory()? },
+        };
+        Ok(RunningDevice { name: self.name, backend, msm_cfg: self.msm_cfg })
+    }
+}
+
+/// The thread-local runnable form.
+pub struct RunningDevice<C: CurveParams> {
+    pub name: String,
+    backend: RunningBackend<C>,
+    pub msm_cfg: MsmConfig,
+}
+
+enum RunningBackend<C: CurveParams> {
+    Native { threads: usize },
+    SimFpga { model: SabModel },
+    Engine { engine: Box<dyn EngineHolder<C>> },
+}
+
+impl<C: CurveParams> RunningDevice<C> {
+    /// Execute an MSM; returns (result, wall seconds, modeled device
+    /// seconds).
+    pub fn execute(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+    ) -> anyhow::Result<(Jacobian<C>, f64, f64)> {
+        let sw = Stopwatch::start();
+        match &self.backend {
+            RunningBackend::Native { threads } => {
+                let out = msm::parallel::msm(points, scalars, &self.msm_cfg, *threads);
+                let wall = sw.secs();
+                Ok((out, wall, wall))
+            }
+            RunningBackend::SimFpga { model } => {
+                let out = msm::parallel::msm(
+                    points,
+                    scalars,
+                    &self.msm_cfg,
+                    msm::parallel::default_threads(),
+                );
+                let wall = sw.secs();
+                let device = model.time_msm(points.len() as u64).total_s();
+                Ok((out, wall, device))
+            }
+            RunningBackend::Engine { engine } => {
+                let out = engine.msm(points, scalars, &self.msm_cfg)?;
+                let wall = sw.secs();
+                Ok((out, wall, wall))
+            }
+        }
+    }
+}
+
+/// Registry of base-point sets shared across devices (host-side master
+/// copy; device DDR residency is tracked in the point cache).
+pub struct PointSetRegistry<C: CurveParams> {
+    sets: HashMap<PointSetId, Arc<Vec<Affine<C>>>>,
+    next: u64,
+}
+
+impl<C: CurveParams> Default for PointSetRegistry<C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<C: CurveParams> PointSetRegistry<C> {
+    pub fn new() -> Self {
+        PointSetRegistry { sets: HashMap::new(), next: 1 }
+    }
+
+    pub fn register(&mut self, points: Vec<Affine<C>>) -> PointSetId {
+        let id = PointSetId(self.next);
+        self.next += 1;
+        self.sets.insert(id, Arc::new(points));
+        id
+    }
+
+    pub fn get(&self, id: PointSetId) -> Option<Arc<Vec<Affine<C>>>> {
+        self.sets.get(&id).cloned()
+    }
+
+    /// DDR footprint of a set (paper layout: affine coordinates).
+    pub fn bytes_of(&self, id: PointSetId) -> u64 {
+        self.sets.get(&id).map(|s| s.len() as u64 * C::AFFINE_BYTES).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bn254G1};
+    use crate::fpga::CurveId;
+
+    #[test]
+    fn native_device_executes() {
+        let d = DeviceDesc::<Bn254G1>::native(2).into_runtime().unwrap();
+        let w = points::workload::<Bn254G1>(64, 201);
+        let (out, wall, dev) = d.execute(&w.points, &w.scalars).unwrap();
+        assert!(out.eq_point(&msm::naive::msm(&w.points, &w.scalars)));
+        assert_eq!(wall, dev);
+    }
+
+    #[test]
+    fn sim_fpga_reports_model_time() {
+        let d = DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 34)
+            .into_runtime()
+            .unwrap();
+        let w = points::workload::<Bn254G1>(128, 202);
+        let (out, _wall, dev) = d.execute(&w.points, &w.scalars).unwrap();
+        assert!(out.eq_point(&msm::naive::msm(&w.points, &w.scalars)));
+        // modeled time for 128 points ≈ call overhead ≈ 9–20 ms
+        assert!(dev > 0.005 && dev < 0.05, "modeled {dev}");
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut r = PointSetRegistry::<Bn254G1>::new();
+        let pts = points::generate_points_walk::<Bn254G1>(10, 203);
+        let id = r.register(pts);
+        assert_eq!(r.get(id).unwrap().len(), 10);
+        assert_eq!(r.bytes_of(id), 640);
+        assert!(r.get(PointSetId(999)).is_none());
+    }
+}

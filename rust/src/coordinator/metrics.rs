@@ -1,0 +1,161 @@
+//! Serving metrics: counters and a fixed-bucket latency histogram
+//! (lock-free enough for the worker threads via atomics).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram from 1 µs to ~1000 s.
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_secs(&self, s: f64) {
+        let us = (s * 1e6).max(1.0) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+
+    /// Approximate quantile (upper edge of the containing bucket).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1e6;
+            }
+        }
+        (1u64 << self.buckets.len()) as f64 / 1e6
+    }
+}
+
+/// Coordinator-wide counters.
+#[derive(Default)]
+pub struct Counters {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub affinity_hits: AtomicU64,
+    pub affinity_misses: AtomicU64,
+    pub uploads_bytes: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            affinity_hits: self.affinity_hits.load(Ordering::Relaxed),
+            affinity_misses: self.affinity_misses.load(Ordering::Relaxed),
+            uploads_bytes: self.uploads_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    pub uploads_bytes: u64,
+}
+
+impl CounterSnapshot {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.affinity_hits + self.affinity_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.affinity_hits as f64 / total as f64
+        }
+    }
+
+    /// JSON rendering for the CLI/metrics endpoint.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("affinity_hits", self.affinity_hits)
+            .set("affinity_misses", self.affinity_misses)
+            .set("uploads_bytes", self.uploads_bytes)
+            .set("hit_rate", self.hit_rate());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record_secs(i as f64 * 0.001); // 1..100 ms
+        }
+        assert_eq!(h.count(), 100);
+        let mean = h.mean_secs();
+        assert!((mean - 0.0505).abs() < 0.002, "{mean}");
+        let p50 = h.quantile_secs(0.5);
+        assert!(p50 >= 0.03 && p50 <= 0.07, "{p50}");
+        let p99 = h.quantile_secs(0.99);
+        assert!(p99 >= p50);
+    }
+
+    #[test]
+    fn snapshot_hit_rate() {
+        let c = Counters::default();
+        c.affinity_hits.store(3, Ordering::Relaxed);
+        c.affinity_misses.store(1, Ordering::Relaxed);
+        assert!((c.snapshot().hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(Counters::default().snapshot().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn json_snapshot() {
+        let c = Counters::default();
+        c.submitted.store(5, Ordering::Relaxed);
+        let j = c.snapshot().to_json();
+        assert_eq!(j.get("submitted").unwrap().as_f64(), Some(5.0));
+    }
+}

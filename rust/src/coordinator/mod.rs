@@ -1,0 +1,36 @@
+//! L3 coordinator: a prover-serving layer around the MSM accelerators.
+//!
+//! The paper's host/device split (§IV-A, §V-C) generalized into the
+//! serving system a proving farm actually deploys:
+//!
+//! * [`request`] — MSM jobs and their lifecycle;
+//! * [`pointcache`] — the paper's key observation operationalized: *"the
+//!   set of elliptic curve points remains constant throughout the lifetime
+//!   of a given proof … moved to FPGA DDR once"* — a residency manager
+//!   that tracks which device DDR holds which named point set, with
+//!   capacity-aware LRU eviction;
+//! * [`router`] — affinity routing: a job goes to a device that already
+//!   holds its point set; uploads are charged otherwise;
+//! * [`batcher`] — groups same-point-set jobs so consecutive calls
+//!   amortize DDR residency (the serving analogue of the paper's
+//!   scalars-only per-call transfer);
+//! * [`devices`] — backend abstraction: native CPU executor, modeled-FPGA
+//!   executor (bit-exact native compute + SAB-model virtual latency), and
+//!   the PJRT UDA engine;
+//! * [`server`] — bounded-queue thread server with backpressure and
+//!   latency metrics ([`metrics`]).
+//!
+//! The coordinator is generic over the curve (one instance per curve —
+//! matching the hardware reality of one bitstream per curve).
+
+pub mod request;
+pub mod pointcache;
+pub mod router;
+pub mod batcher;
+pub mod devices;
+pub mod server;
+pub mod metrics;
+
+pub use devices::{DeviceBackend, DeviceDesc, PointSetRegistry, RunningDevice};
+pub use request::{JobId, JobResult, MsmJob, PointSetId};
+pub use server::{Coordinator, CoordinatorConfig};

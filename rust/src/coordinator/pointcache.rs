@@ -1,0 +1,123 @@
+//! Point-set residency manager.
+//!
+//! The paper moves the base points to FPGA DDR once per proof lifetime
+//! (§IV-A: storage "can be in the range of tens of GBs") and then sends
+//! only scalars per call. A proving service juggles many circuits whose
+//! point sets compete for device DDR; this cache tracks residency per
+//! device with LRU eviction under a byte budget — the L3 analogue of a
+//! KV-cache manager in an LLM server.
+
+use super::request::PointSetId;
+use std::collections::HashMap;
+
+/// Residency state for one device's DDR.
+#[derive(Debug)]
+pub struct DeviceDdr {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    /// point set → (bytes, last-use tick)
+    resident: HashMap<PointSetId, (u64, u64)>,
+    tick: u64,
+}
+
+/// Result of a residency request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Already resident — zero upload cost.
+    Hit,
+    /// Admitted after uploading `upload_bytes` (and evicting `evicted`
+    /// sets).
+    Miss { upload_bytes: u64, evicted: usize },
+    /// Cannot fit even after evicting everything.
+    TooLarge,
+}
+
+impl DeviceDdr {
+    pub fn new(capacity_bytes: u64) -> Self {
+        DeviceDdr { capacity_bytes, used_bytes: 0, resident: HashMap::new(), tick: 0 }
+    }
+
+    pub fn is_resident(&self, id: PointSetId) -> bool {
+        self.resident.contains_key(&id)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Touch-or-admit a point set of `bytes`; LRU-evicts as needed.
+    pub fn admit(&mut self, id: PointSetId, bytes: u64) -> Admission {
+        self.tick += 1;
+        if let Some(entry) = self.resident.get_mut(&id) {
+            entry.1 = self.tick;
+            return Admission::Hit;
+        }
+        if bytes > self.capacity_bytes {
+            return Admission::TooLarge;
+        }
+        let mut evicted = 0;
+        while self.used_bytes + bytes > self.capacity_bytes {
+            // evict the least-recently-used set
+            let lru = self
+                .resident
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| *k)
+                .expect("used>0 implies nonempty");
+            let (b, _) = self.resident.remove(&lru).unwrap();
+            self.used_bytes -= b;
+            evicted += 1;
+        }
+        self.resident.insert(id, (bytes, self.tick));
+        self.used_bytes += bytes;
+        Admission::Miss { upload_bytes: bytes, evicted }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_admit() {
+        let mut d = DeviceDdr::new(1000);
+        assert_eq!(d.admit(PointSetId(1), 400), Admission::Miss { upload_bytes: 400, evicted: 0 });
+        assert_eq!(d.admit(PointSetId(1), 400), Admission::Hit);
+        assert_eq!(d.used_bytes(), 400);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut d = DeviceDdr::new(1000);
+        d.admit(PointSetId(1), 400);
+        d.admit(PointSetId(2), 400);
+        d.admit(PointSetId(1), 400); // touch 1 → 2 becomes LRU
+        let adm = d.admit(PointSetId(3), 400);
+        assert_eq!(adm, Admission::Miss { upload_bytes: 400, evicted: 1 });
+        assert!(d.is_resident(PointSetId(1)));
+        assert!(!d.is_resident(PointSetId(2)));
+        assert!(d.is_resident(PointSetId(3)));
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        let mut d = DeviceDdr::new(100);
+        assert_eq!(d.admit(PointSetId(1), 101), Admission::TooLarge);
+        assert_eq!(d.resident_count(), 0);
+    }
+
+    #[test]
+    fn multi_eviction() {
+        let mut d = DeviceDdr::new(1000);
+        d.admit(PointSetId(1), 300);
+        d.admit(PointSetId(2), 300);
+        d.admit(PointSetId(3), 300);
+        let adm = d.admit(PointSetId(4), 900);
+        assert_eq!(adm, Admission::Miss { upload_bytes: 900, evicted: 3 });
+        assert_eq!(d.used_bytes(), 900);
+    }
+}

@@ -1,0 +1,57 @@
+//! Job types flowing through the coordinator.
+
+use crate::ec::ScalarLimbs;
+use std::sync::Arc;
+
+/// Identifies a registered base-point set (the MSM's constant input — one
+/// per circuit/CRS in a proving farm).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PointSetId(pub u64);
+
+/// Job identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct JobId(pub u64);
+
+/// One MSM request: scalars against a resident point set.
+#[derive(Clone, Debug)]
+pub struct MsmJob {
+    pub id: JobId,
+    pub point_set: PointSetId,
+    /// Scalars (shared — jobs are fanned out to worker threads).
+    pub scalars: Arc<Vec<ScalarLimbs>>,
+    /// Submission timestamp (for latency accounting).
+    pub submitted_at: std::time::Instant,
+}
+
+/// Result of a completed job.
+#[derive(Clone, Debug)]
+pub struct JobResult<P> {
+    pub id: JobId,
+    /// The MSM output point.
+    pub output: P,
+    /// Wall-clock service time (host side).
+    pub service_s: f64,
+    /// Modeled device time (for sim-FPGA backends; equals wall time for
+    /// native backends).
+    pub device_s: f64,
+    /// Which device executed it.
+    pub device: usize,
+    /// Whether the point set had to be uploaded first (affinity miss).
+    pub upload_miss: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_ordered_and_hashable() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(PointSetId(1));
+        s.insert(PointSetId(1));
+        s.insert(PointSetId(2));
+        assert_eq!(s.len(), 2);
+        assert!(PointSetId(1) < PointSetId(2));
+    }
+}

@@ -1,0 +1,102 @@
+//! Affinity router: pick a device for each job.
+//!
+//! Policy (in priority order):
+//! 1. a device whose DDR already holds the job's point set (affinity hit —
+//!    the scalars-only fast path of §IV-A);
+//! 2. otherwise the least-loaded device (queued jobs as the load proxy),
+//!    charging the upload.
+//!
+//! Load is tracked by the server; the router is a pure decision function so
+//! the property tests can drive it directly.
+
+use super::pointcache::{Admission, DeviceDdr};
+use super::request::PointSetId;
+
+/// Routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    pub device: usize,
+    pub admission: Admission,
+}
+
+/// Decide a device for a point set of `bytes`, given per-device DDR states
+/// and load estimates. Mutates the chosen device's DDR (admission).
+pub fn route(
+    ddrs: &mut [DeviceDdr],
+    loads: &[usize],
+    point_set: PointSetId,
+    bytes: u64,
+) -> Option<Route> {
+    assert_eq!(ddrs.len(), loads.len());
+    if ddrs.is_empty() {
+        return None;
+    }
+    // 1. affinity hit on the least-loaded holder
+    let holder = (0..ddrs.len())
+        .filter(|&i| ddrs[i].is_resident(point_set))
+        .min_by_key(|&i| loads[i]);
+    if let Some(i) = holder {
+        let adm = ddrs[i].admit(point_set, bytes); // touch (refresh LRU)
+        debug_assert_eq!(adm, Admission::Hit);
+        return Some(Route { device: i, admission: adm });
+    }
+    // 2. least-loaded device that can take the set
+    let mut order: Vec<usize> = (0..ddrs.len()).collect();
+    order.sort_by_key(|&i| loads[i]);
+    for i in order {
+        match ddrs[i].admit(point_set, bytes) {
+            Admission::TooLarge => continue,
+            adm => return Some(Route { device: i, admission: adm }),
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ddrs(n: usize, cap: u64) -> Vec<DeviceDdr> {
+        (0..n).map(|_| DeviceDdr::new(cap)).collect()
+    }
+
+    #[test]
+    fn prefers_resident_device() {
+        let mut d = ddrs(2, 1000);
+        d[1].admit(PointSetId(7), 500);
+        // device 1 holds set 7 but is more loaded — affinity still wins
+        let r = route(&mut d, &[0, 10], PointSetId(7), 500).unwrap();
+        assert_eq!(r.device, 1);
+        assert_eq!(r.admission, Admission::Hit);
+    }
+
+    #[test]
+    fn least_loaded_on_miss() {
+        let mut d = ddrs(3, 1000);
+        let r = route(&mut d, &[5, 2, 9], PointSetId(1), 100).unwrap();
+        assert_eq!(r.device, 1);
+        assert!(matches!(r.admission, Admission::Miss { .. }));
+    }
+
+    #[test]
+    fn skips_too_small_devices() {
+        let mut d = vec![DeviceDdr::new(50), DeviceDdr::new(5000)];
+        let r = route(&mut d, &[0, 10], PointSetId(1), 100).unwrap();
+        assert_eq!(r.device, 1);
+    }
+
+    #[test]
+    fn none_when_nothing_fits() {
+        let mut d = ddrs(2, 10);
+        assert_eq!(route(&mut d, &[0, 0], PointSetId(1), 100), None);
+    }
+
+    #[test]
+    fn ties_break_to_holder_with_lowest_load() {
+        let mut d = ddrs(3, 1000);
+        d[0].admit(PointSetId(3), 100);
+        d[2].admit(PointSetId(3), 100);
+        let r = route(&mut d, &[7, 0, 4], PointSetId(3), 100).unwrap();
+        assert_eq!(r.device, 2);
+    }
+}

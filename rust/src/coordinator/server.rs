@@ -1,0 +1,278 @@
+//! The coordinator server: bounded ingress, batching dispatcher, per-device
+//! worker threads — the process topology of a proving-farm MSM tier.
+//!
+//! ```text
+//!  submit() ──bounded──► dispatcher ──route──► device queue ──► worker 0
+//!   (backpressure)        (batcher)                        └──► worker 1 …
+//!                                                            reply channels
+//! ```
+//!
+//! Everything is std-thread + mpsc (no async runtime exists in the offline
+//! dependency set — and none is needed: the workload is compute-bound with
+//! small fan-out).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::devices::{DeviceDesc, PointSetRegistry};
+use super::metrics::{Counters, LatencyHistogram};
+use super::pointcache::{Admission, DeviceDdr};
+use super::request::{JobId, JobResult, MsmJob, PointSetId};
+use super::router;
+use crate::ec::{CurveParams, Jacobian, ScalarLimbs};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Ingress queue bound (jobs) — the backpressure knob.
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { queue_capacity: 256, batch: BatchPolicy::default() }
+    }
+}
+
+struct Dispatch<C: CurveParams> {
+    job: MsmJob,
+    reply: mpsc::Sender<JobResult<Jacobian<C>>>,
+}
+
+enum WorkerMsg<C: CurveParams> {
+    Batch { point_set: PointSetId, jobs: Vec<Dispatch<C>>, upload_miss: bool },
+    Stop,
+}
+
+/// A running coordinator for one curve.
+pub struct Coordinator<C: CurveParams> {
+    /// `None` after shutdown (dropping the sender stops the dispatcher).
+    ingress: Option<mpsc::SyncSender<Dispatch<C>>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub counters: Arc<Counters>,
+    pub latency: Arc<LatencyHistogram>,
+    next_job: AtomicU64,
+    registry: Arc<PointSetRegistry<C>>,
+}
+
+impl<C: CurveParams> Coordinator<C> {
+    /// Start the server over a set of devices and a pre-registered point
+    /// registry (points move to devices lazily, once, on first use — the
+    /// paper's "moved once and consumed on every call" lifecycle).
+    pub fn start(
+        cfg: CoordinatorConfig,
+        devices: Vec<DeviceDesc<C>>,
+        registry: PointSetRegistry<C>,
+    ) -> Coordinator<C> {
+        assert!(!devices.is_empty(), "need at least one device");
+        let registry = Arc::new(registry);
+        let counters = Arc::new(Counters::default());
+        let latency = Arc::new(LatencyHistogram::new());
+        let loads: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..devices.len()).map(|_| AtomicUsize::new(0)).collect());
+        let ddrs: Arc<Mutex<Vec<DeviceDdr>>> = Arc::new(Mutex::new(
+            devices.iter().map(|d| DeviceDdr::new(d.ddr_capacity)).collect(),
+        ));
+
+        // per-device worker threads
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for (idx, dev) in devices.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<WorkerMsg<C>>();
+            worker_txs.push(tx);
+            let registry = registry.clone();
+            let counters = counters.clone();
+            let latency = latency.clone();
+            let loads = loads.clone();
+            workers.push(std::thread::spawn(move || {
+                // PJRT engines must be constructed on their owning thread.
+                let dev = match dev.into_runtime() {
+                    Ok(d) => d,
+                    Err(e) => {
+                        eprintln!("[ERROR] device worker {idx} failed to start: {e:#}");
+                        return; // replies drop ⇒ callers observe RecvError
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        WorkerMsg::Stop => break,
+                        WorkerMsg::Batch { point_set, jobs, upload_miss } => {
+                            let points = match registry.get(point_set) {
+                                Some(p) => p,
+                                None => continue, // validated at submit; defensive
+                            };
+                            for (pos, d) in jobs.into_iter().enumerate() {
+                                let res = dev.execute(&points, &d.job.scalars);
+                                loads[idx].fetch_sub(1, Ordering::Relaxed);
+                                if let Ok((output, wall, device_s)) = res {
+                                    let service_s =
+                                        d.job.submitted_at.elapsed().as_secs_f64();
+                                    latency.record_secs(service_s);
+                                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                                    let _ = d.reply.send(JobResult {
+                                        id: d.job.id,
+                                        output,
+                                        service_s,
+                                        device_s,
+                                        device: idx,
+                                        upload_miss: upload_miss && pos == 0,
+                                    });
+                                    let _ = wall;
+                                }
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+
+        // dispatcher thread
+        let (ingress, ingress_rx) = mpsc::sync_channel::<Dispatch<C>>(cfg.queue_capacity);
+        let dispatcher = {
+            let registry = registry.clone();
+            let counters = counters.clone();
+            let loads = loads.clone();
+            let worker_txs = worker_txs.clone();
+            std::thread::spawn(move || {
+                let mut batcher = Batcher::new(cfg.batch);
+                let flush = |ps: PointSetId, jobs: Vec<MsmJob>, replies: &mut JobReplies<C>| {
+                    let bytes = registry.bytes_of(ps);
+                    let load_now: Vec<usize> =
+                        loads.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+                    let mut ddrs = ddrs.lock().unwrap();
+                    let route = router::route(&mut ddrs, &load_now, ps, bytes);
+                    drop(ddrs);
+                    if let Some(r) = route {
+                        let miss = matches!(r.admission, Admission::Miss { .. });
+                        if miss {
+                            counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
+                            counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
+                        } else {
+                            counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let dispatches: Vec<Dispatch<C>> = jobs
+                            .into_iter()
+                            .filter_map(|j| {
+                                replies.take(j.id).map(|reply| Dispatch { job: j, reply })
+                            })
+                            .collect();
+                        loads[r.device].fetch_add(dispatches.len(), Ordering::Relaxed);
+                        let _ = worker_txs[r.device].send(WorkerMsg::Batch {
+                            point_set: ps,
+                            jobs: dispatches,
+                            upload_miss: miss,
+                        });
+                    } else {
+                        counters.rejected.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+                    }
+                };
+
+                let mut replies = JobReplies::<C>::default();
+                loop {
+                    match ingress_rx.recv_timeout(cfg.batch.max_wait) {
+                        Ok(d) => {
+                            replies.put(d.job.id, d.reply);
+                            if let Some((ps, jobs)) = batcher.push(d.job) {
+                                flush(ps, jobs, &mut replies);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                    for (ps, jobs) in batcher.expired(Instant::now()) {
+                        flush(ps, jobs, &mut replies);
+                    }
+                }
+                for (ps, jobs) in batcher.drain() {
+                    flush(ps, jobs, &mut replies);
+                }
+                for tx in &worker_txs {
+                    let _ = tx.send(WorkerMsg::Stop);
+                }
+            })
+        };
+
+        Coordinator {
+            ingress: Some(ingress),
+            dispatcher: Some(dispatcher),
+            workers,
+            counters,
+            latency,
+            next_job: AtomicU64::new(1),
+            registry,
+        }
+    }
+
+    /// Submit an MSM; returns the job id and the reply channel.
+    /// `Err` when the ingress queue is full (backpressure) or the point
+    /// set is unknown.
+    pub fn submit(
+        &self,
+        point_set: PointSetId,
+        scalars: Arc<Vec<ScalarLimbs>>,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult<Jacobian<C>>>)> {
+        let set_len = match self.registry.get(point_set) {
+            Some(s) => s.len(),
+            None => return Err(anyhow!("unknown point set {point_set:?}")),
+        };
+        if scalars.len() != set_len {
+            return Err(anyhow!(
+                "scalar count {} != point set size {set_len}",
+                scalars.len()
+            ));
+        }
+        let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let d = Dispatch {
+            job: MsmJob { id, point_set, scalars, submitted_at: Instant::now() },
+            reply: reply_tx,
+        };
+        let ingress = self.ingress.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))?;
+        ingress.try_send(d).map_err(|e| match e {
+            mpsc::TrySendError::Full(_) => {
+                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow!("ingress queue full (backpressure)")
+            }
+            mpsc::TrySendError::Disconnected(_) => anyhow!("coordinator stopped"),
+        })?;
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok((id, reply_rx))
+    }
+
+    /// Stop accepting work, drain in-flight batches, join all threads.
+    pub fn shutdown(mut self) {
+        drop(self.ingress.take()); // dispatcher's recv disconnects → drain
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in std::mem::take(&mut self.workers) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Reply-channel stash keyed by job id (the batcher only carries jobs).
+struct JobReplies<C: CurveParams> {
+    map: std::collections::HashMap<JobId, mpsc::Sender<JobResult<Jacobian<C>>>>,
+}
+
+impl<C: CurveParams> Default for JobReplies<C> {
+    fn default() -> Self {
+        JobReplies { map: Default::default() }
+    }
+}
+
+impl<C: CurveParams> JobReplies<C> {
+    fn put(&mut self, id: JobId, tx: mpsc::Sender<JobResult<Jacobian<C>>>) {
+        self.map.insert(id, tx);
+    }
+
+    fn take(&mut self, id: JobId) -> Option<mpsc::Sender<JobResult<Jacobian<C>>>> {
+        self.map.remove(&id)
+    }
+}

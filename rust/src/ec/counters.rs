@@ -1,0 +1,121 @@
+//! Point-operation counters (thread-local, like [`crate::ff::opcount`]).
+//!
+//! Tables II/III of the paper account MSM cost in point operations × the
+//! per-operation modmul budget (16 for PA, 9 for PD in their hardware).
+//! These counters record what the algorithms *actually* execute so the
+//! benches can report both measured point-ops and measured modmuls.
+
+use std::cell::Cell;
+
+thread_local! {
+    static ADD: Cell<u64> = const { Cell::new(0) };
+    static DOUBLE: Cell<u64> = const { Cell::new(0) };
+    static MIXED: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline(always)]
+pub fn count_add() {
+    ADD.with(|c| c.set(c.get() + 1));
+}
+#[inline(always)]
+pub fn uncount_add() {
+    ADD.with(|c| c.set(c.get() - 1));
+}
+#[inline(always)]
+pub fn count_double() {
+    DOUBLE.with(|c| c.set(c.get() + 1));
+}
+#[inline(always)]
+pub fn count_mixed() {
+    MIXED.with(|c| c.set(c.get() + 1));
+}
+#[inline(always)]
+pub fn uncount_mixed() {
+    MIXED.with(|c| c.set(c.get() - 1));
+}
+
+/// Snapshot of point-op counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PointOps {
+    /// Full Jacobian + Jacobian additions.
+    pub add: u64,
+    /// Doublings.
+    pub double: u64,
+    /// Mixed (Jacobian + affine) additions.
+    pub mixed: u64,
+}
+
+impl PointOps {
+    /// Total point operations (the unit of Table III).
+    pub fn total(&self) -> u64 {
+        self.add + self.double + self.mixed
+    }
+
+    /// Modmul budget under the paper's hardware accounting
+    /// (16 per full/mixed add — the UDA always runs the full datapath —
+    /// and 9 per double).
+    pub fn hardware_modmuls(&self) -> u64 {
+        16 * (self.add + self.mixed) + 9 * self.double
+    }
+}
+
+impl std::ops::Sub for PointOps {
+    type Output = PointOps;
+    fn sub(self, rhs: PointOps) -> PointOps {
+        PointOps {
+            add: self.add - rhs.add,
+            double: self.double - rhs.double,
+            mixed: self.mixed - rhs.mixed,
+        }
+    }
+}
+
+pub fn snapshot() -> PointOps {
+    PointOps {
+        add: ADD.with(Cell::get),
+        double: DOUBLE.with(Cell::get),
+        mixed: MIXED.with(Cell::get),
+    }
+}
+
+/// Run `f`, returning its output and the point-ops it consumed.
+pub fn measure<T>(f: impl FnOnce() -> T) -> (T, PointOps) {
+    let before = snapshot();
+    let out = f();
+    (out, snapshot() - before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{Bn254G1, Jacobian};
+
+    #[test]
+    fn counts_adds_and_doubles() {
+        let g = Jacobian::<Bn254G1>::generator();
+        let g2 = g.double();
+        let (_, ops) = measure(|| {
+            let mut p = g; // odd multiples of g: always distinct from g2
+            for _ in 0..5 {
+                p = p.add(&g2);
+            }
+            p.double()
+        });
+        assert_eq!(ops.double, 1);
+        assert_eq!(ops.add, 5);
+    }
+
+    #[test]
+    fn unified_add_counts_as_double_when_equal() {
+        let g = Jacobian::<Bn254G1>::generator();
+        let (_, ops) = measure(|| g.add(&g));
+        assert_eq!(ops, PointOps { add: 0, double: 1, mixed: 0 });
+    }
+
+    #[test]
+    fn hardware_modmul_budget() {
+        let ops = PointOps { add: 2, double: 3, mixed: 1 };
+        assert_eq!(ops.hardware_modmuls(), 16 * 3 + 9 * 3);
+        assert_eq!(ops.total(), 6);
+    }
+}

@@ -1,0 +1,110 @@
+//! G2 groups over Fp² — the second MSM of the Groth16 prover (Table I's
+//! dominant MSM-𝔾₂ column). The paper leaves G2 MSM hardware as future
+//! work but its *profiling motivation* (Table I) requires real G2 compute,
+//! so the groups are implemented in full.
+//!
+//! Twists: BN254 G2 is `y² = x³ + 3/(9+u)`; BLS12-381 G2 is
+//! `y² = x³ + 4(1+u)`; both over Fp² with u² = −1.
+
+use super::point::CurveParams;
+use crate::ff::params::curve_constants as cc;
+use crate::ff::{Field, Fp2Bls12381, Fp2Bn254, FpBls12381, FpBn254};
+use once_cell::sync::Lazy;
+
+/// BN254 G2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bn254G2;
+
+static BN254_B2: Lazy<Fp2Bn254> = Lazy::new(|| {
+    // b2 = 3 / (9 + u)
+    let three = Fp2Bn254::from_base(FpBn254::from_u64(3));
+    let nine_u = Fp2Bn254::new(FpBn254::from_u64(9), FpBn254::from_u64(1));
+    three.mul(&nine_u.inv().expect("9+u invertible"))
+});
+
+impl CurveParams for Bn254G2 {
+    type Base = Fp2Bn254;
+
+    fn b() -> Fp2Bn254 {
+        *BN254_B2
+    }
+
+    fn generator_xy() -> (Fp2Bn254, Fp2Bn254) {
+        let x = Fp2Bn254::new(
+            FpBn254::from_canonical(cc::BN254_G2_X_C0).unwrap(),
+            FpBn254::from_canonical(cc::BN254_G2_X_C1).unwrap(),
+        );
+        let y = Fp2Bn254::new(
+            FpBn254::from_canonical(cc::BN254_G2_Y_C0).unwrap(),
+            FpBn254::from_canonical(cc::BN254_G2_Y_C1).unwrap(),
+        );
+        (x, y)
+    }
+
+    const SCALAR_BITS: u32 = 254;
+    const MSM_SCALAR_BITS: u32 = 254;
+    const NAME: &'static str = "bn254_g2";
+    // 4 × 32-byte field elements.
+    const AFFINE_BYTES: u64 = 128;
+}
+
+/// BLS12-381 G2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bls12381G2;
+
+impl CurveParams for Bls12381G2 {
+    type Base = Fp2Bls12381;
+
+    fn b() -> Fp2Bls12381 {
+        // b2 = 4·(1 + u)
+        Fp2Bls12381::new(FpBls12381::from_u64(4), FpBls12381::from_u64(4))
+    }
+
+    fn generator_xy() -> (Fp2Bls12381, Fp2Bls12381) {
+        let x = Fp2Bls12381::new(
+            FpBls12381::from_canonical(cc::BLS12_381_G2_X_C0).unwrap(),
+            FpBls12381::from_canonical(cc::BLS12_381_G2_X_C1).unwrap(),
+        );
+        let y = Fp2Bls12381::new(
+            FpBls12381::from_canonical(cc::BLS12_381_G2_Y_C0).unwrap(),
+            FpBls12381::from_canonical(cc::BLS12_381_G2_Y_C1).unwrap(),
+        );
+        (x, y)
+    }
+
+    const SCALAR_BITS: u32 = 255;
+    const MSM_SCALAR_BITS: u32 = 381;
+    const NAME: &'static str = "bls12_381_g2";
+    // 4 × 48-byte field elements.
+    const AFFINE_BYTES: u64 = 192;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::point::Jacobian;
+    use crate::ec::scalar;
+
+    #[test]
+    fn g2_generators_on_twist() {
+        assert!(Jacobian::<Bn254G2>::generator().is_on_curve());
+        assert!(Jacobian::<Bls12381G2>::generator().is_on_curve());
+    }
+
+    #[test]
+    fn g2_group_law() {
+        let g = Jacobian::<Bls12381G2>::generator();
+        let five_g = scalar::mul::<Bls12381G2>(&g, &[5, 0, 0, 0]);
+        let check = g.double().double().add(&g);
+        assert!(five_g.eq_point(&check));
+        assert!(five_g.is_on_curve());
+    }
+
+    #[test]
+    fn g2_add_commutes() {
+        let g = Jacobian::<Bn254G2>::generator();
+        let a = scalar::mul::<Bn254G2>(&g, &[1234, 0, 0, 0]);
+        let b = scalar::mul::<Bn254G2>(&g, &[9876, 0, 0, 0]);
+        assert!(a.add(&b).eq_point(&b.add(&a)));
+    }
+}

@@ -1,0 +1,172 @@
+//! Deterministic point-set and scalar-set generation for MSM workloads.
+//!
+//! The paper generates test vectors with libsnark (§V-A); in this repo every
+//! workload derives from an explicit seed. Two generators are provided:
+//!
+//! * [`generate_points_walk`] — fast additive walk (1 point-add per point):
+//!   `P_i = Q_i + T[i mod 2^t]` with `Q_{i+1} = Q_i + D`. Points are
+//!   distinct subgroup elements; this is what the benches use to build
+//!   multi-million-point MSM inputs in reasonable time.
+//! * [`hash_to_curve`] — independent try-and-increment points via
+//!   Tonelli–Shanks (no linear relation between outputs); used by the
+//!   correctness tests where algebraic independence matters.
+
+use super::point::{Affine, CurveParams, Jacobian};
+use super::scalar;
+use super::ScalarLimbs;
+use crate::ff::{sqrt, Field};
+use crate::util::rng::Rng;
+
+/// Fast deterministic point set: distinct points in the generator subgroup.
+pub fn generate_points_walk<C: CurveParams>(n: usize, seed: u64) -> Vec<Affine<C>> {
+    let mut rng = Rng::new(seed);
+    let g = Jacobian::<C>::generator();
+    // Small table of random multiples breaks the pure arithmetic progression.
+    let t = 16usize;
+    let table: Vec<Jacobian<C>> = (0..t)
+        .map(|_| {
+            let k = [rng.next_u64() | 1, rng.next_u64(), 0, 0];
+            scalar::mul::<C>(&g, &k)
+        })
+        .collect();
+    let step = {
+        let k = [rng.next_u64() | 1, rng.next_u64(), rng.next_u64(), 0];
+        scalar::mul::<C>(&g, &k)
+    };
+    let mut q = {
+        let k = [rng.next_u64() | 1, 0, 0, 0];
+        scalar::mul::<C>(&g, &k)
+    };
+    let mut jac = Vec::with_capacity(n);
+    for i in 0..n {
+        jac.push(q.add(&table[i % t]));
+        q = q.add(&step);
+    }
+    Jacobian::batch_to_affine(&jac)
+}
+
+/// Independent points by try-and-increment: x ← random, bump until
+/// x³ + b is a square, y ← sqrt (sign from one more random bit).
+pub fn hash_to_curve<C: CurveParams>(n: usize, seed: u64) -> Vec<Affine<C>> {
+    let mut rng = Rng::new(seed ^ 0x4861_7368_3243_7276); // "Hash2Crv"
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let mut x = C::Base::random(&mut rng);
+        loop {
+            let rhs = x.square().mul(&x).add(&C::b());
+            if let Some(y) = sqrt::sqrt(&rhs) {
+                let y = if rng.bool() { y } else { y.neg() };
+                out.push(Affine::new(x, y));
+                break;
+            }
+            x = x.add(&C::Base::one());
+        }
+    }
+    out
+}
+
+/// Uniform random scalars below `2^bits` (canonical limbs). The paper's MSM
+/// inputs are field scalars; `bits` defaults to the curve's scalar width.
+pub fn generate_scalars(n: usize, bits: u32, seed: u64) -> Vec<ScalarLimbs> {
+    assert!(bits >= 1 && bits <= 256);
+    let mut rng = Rng::new(seed ^ 0x5343_414c_4152_5321); // "SCALARS!"
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut s = [
+            rng.next_u64(),
+            rng.next_u64(),
+            rng.next_u64(),
+            rng.next_u64(),
+        ];
+        // mask to `bits`
+        for (i, limb) in s.iter_mut().enumerate() {
+            let lo = 64 * i as u32;
+            if lo >= bits {
+                *limb = 0;
+            } else if bits - lo < 64 {
+                *limb &= (1u64 << (bits - lo)) - 1;
+            }
+        }
+        out.push(s);
+    }
+    out
+}
+
+/// A complete deterministic MSM workload.
+pub struct MsmWorkload<C: CurveParams> {
+    pub points: Vec<Affine<C>>,
+    pub scalars: Vec<ScalarLimbs>,
+}
+
+/// Standard workload: walk points + uniform scalars of the curve's MSM width
+/// (the paper's Table IX setup for a given size).
+pub fn workload<C: CurveParams>(n: usize, seed: u64) -> MsmWorkload<C> {
+    MsmWorkload {
+        points: generate_points_walk::<C>(n, seed),
+        scalars: generate_scalars(n, C::SCALAR_BITS.min(256), seed.wrapping_add(1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{Bls12381G1, Bn254G1, Bn254G2};
+    use std::collections::HashSet;
+
+    #[test]
+    fn walk_points_on_curve_and_distinct() {
+        let pts = generate_points_walk::<Bn254G1>(64, 7);
+        assert_eq!(pts.len(), 64);
+        let mut seen = HashSet::new();
+        for p in &pts {
+            assert!(p.is_on_curve());
+            assert!(!p.infinity);
+            assert!(seen.insert(p.x.to_hex()), "duplicate point");
+        }
+    }
+
+    #[test]
+    fn walk_deterministic() {
+        let a = generate_points_walk::<Bls12381G1>(8, 42);
+        let b = generate_points_walk::<Bls12381G1>(8, 42);
+        for (p, q) in a.iter().zip(&b) {
+            assert_eq!(p.x, q.x);
+            assert_eq!(p.y, q.y);
+        }
+        let c = generate_points_walk::<Bls12381G1>(8, 43);
+        assert_ne!(a[0].x, c[0].x);
+    }
+
+    #[test]
+    fn hash_to_curve_on_curve() {
+        let pts = hash_to_curve::<Bn254G1>(8, 3);
+        for p in &pts {
+            assert!(p.is_on_curve());
+        }
+        // works over Fp2 as well
+        let pts2 = hash_to_curve::<Bn254G2>(2, 3);
+        for p in &pts2 {
+            assert!(p.is_on_curve());
+        }
+    }
+
+    #[test]
+    fn scalars_respect_bit_width() {
+        let ss = generate_scalars(100, 254, 9);
+        for s in &ss {
+            assert_eq!(s[3] >> (254 - 192), 0);
+        }
+        let narrow = generate_scalars(100, 16, 9);
+        for s in &narrow {
+            assert!(s[0] < (1 << 16));
+            assert_eq!(s[1] | s[2] | s[3], 0);
+        }
+    }
+
+    #[test]
+    fn workload_sizes_match() {
+        let w = workload::<Bn254G1>(33, 5);
+        assert_eq!(w.points.len(), 33);
+        assert_eq!(w.scalars.len(), 33);
+    }
+}

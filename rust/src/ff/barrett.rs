@@ -1,0 +1,234 @@
+//! "Standard form" (non-Montgomery) modular multiplication.
+//!
+//! §IV-B4 of the paper: for BLS12-381 the design moved off Montgomery form
+//! to a LUT-based reduction (Öztürk [27]) so each modular multiply needs one
+//! integer multiplier instead of three. In software the natural analogue of
+//! a precomputed-table reduction is **Barrett reduction** with a precomputed
+//! μ = ⌊2^(2·64·N) / p⌋: one wide multiply plus two truncated multiplies and
+//! a couple of subtractions — no per-step division, exactly one full-width
+//! integer product on the critical path.
+//!
+//! This backend operates on **canonical** (standard-form) limbs and is used
+//! (a) to cross-check the Montgomery core, (b) by the resource/power models
+//! which distinguish the two hardware variants, and (c) as the reference
+//! semantics of the L1 kernel's final-compare path.
+
+use super::bigint::{self, mac};
+use once_cell::sync::Lazy;
+
+/// Precomputed Barrett context for one modulus.
+#[derive(Debug)]
+pub struct BarrettCtx {
+    /// Modulus limbs, little-endian.
+    pub p: Vec<u64>,
+    /// μ = ⌊2^(2·64·n) / p⌋ (n = p limb count) — n+1 limbs.
+    pub mu: Vec<u64>,
+    /// limb count of p.
+    pub n: usize,
+}
+
+impl BarrettCtx {
+    /// Build a context (one-time cost: a 2·64·n-bit long division).
+    pub fn new(p: &[u64]) -> BarrettCtx {
+        let mut p = p.to_vec();
+        bigint::normalize(&mut p);
+        let n = p.len();
+        let mu = bigint::div_pow2(2 * 64 * n, &p);
+        BarrettCtx { p, mu, n }
+    }
+
+    /// Multiply canonical a·b mod p. `a`, `b` must be < p.
+    pub fn mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        super::opcount::count_mul();
+        let n = self.n;
+        // x = a*b, 2n limbs
+        let x = mul_slices(a, b, 2 * n);
+        self.reduce(&x)
+    }
+
+    /// Barrett-reduce a 2n-limb value x < p² to x mod p.
+    pub fn reduce(&self, x: &[u64]) -> Vec<u64> {
+        let n = self.n;
+        // q1 = x >> 64(n-1)
+        let q1 = &x[(n - 1).min(x.len())..];
+        // q2 = q1 * mu ; q3 = q2 >> 64(n+1)
+        let q2 = mul_slices(q1, &self.mu, q1.len() + self.mu.len());
+        let q3 = if q2.len() > n + 1 { q2[n + 1..].to_vec() } else { vec![0] };
+        // r = x mod 2^(64(n+1)) − (q3·p mod 2^(64(n+1)))
+        let r1 = &x[..x.len().min(n + 1)];
+        let q3p = mul_slices(&q3, &self.p, n + 1); // truncated product
+        let mut r = sub_mod_pow(r1, &q3p, n + 1);
+        // At most two corrective subtractions (Barrett bound).
+        let mut guard = 0;
+        while bigint::cmp_slices(&r, &self.p) != std::cmp::Ordering::Less {
+            r = bigint::sub_slices(&r, &self.p);
+            guard += 1;
+            assert!(guard <= 3, "Barrett correction out of bounds");
+        }
+        bigint::normalize(&mut r);
+        r
+    }
+
+    /// a + b mod p (canonical operands).
+    pub fn add(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        super::opcount::count_add();
+        let mut s = add_slices(a, b);
+        if bigint::cmp_slices(&s, &self.p) != std::cmp::Ordering::Less {
+            s = bigint::sub_slices(&s, &self.p);
+        }
+        s
+    }
+
+    /// a − b mod p.
+    pub fn sub(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        super::opcount::count_add();
+        if bigint::cmp_slices(a, b) != std::cmp::Ordering::Less {
+            bigint::sub_slices(a, b)
+        } else {
+            let t = add_slices(a, &self.p);
+            bigint::sub_slices(&t, b)
+        }
+    }
+}
+
+/// Truncated schoolbook multiply: low `out_limbs` limbs of a·b.
+fn mul_slices(a: &[u64], b: &[u64], out_limbs: usize) -> Vec<u64> {
+    let mut t = vec![0u64; out_limbs + 1];
+    for (i, &ai) in a.iter().enumerate() {
+        if i >= out_limbs {
+            break;
+        }
+        let mut carry = 0u64;
+        for (j, &bj) in b.iter().enumerate() {
+            if i + j >= out_limbs {
+                break;
+            }
+            let (lo, hi) = mac(t[i + j], ai, bj, carry);
+            t[i + j] = lo;
+            carry = hi;
+        }
+        if i + b.len() < out_limbs {
+            t[i + b.len()] = carry;
+        }
+    }
+    t.truncate(out_limbs);
+    bigint::normalize(&mut t);
+    t
+}
+
+fn add_slices(a: &[u64], b: &[u64]) -> Vec<u64> {
+    let n = a.len().max(b.len());
+    let mut out = vec![0u64; n + 1];
+    let mut carry = 0u64;
+    for i in 0..n {
+        let av = a.get(i).copied().unwrap_or(0);
+        let bv = b.get(i).copied().unwrap_or(0);
+        let (s, c) = bigint::adc(av, bv, carry);
+        out[i] = s;
+        carry = c;
+    }
+    out[n] = carry;
+    bigint::normalize(&mut out);
+    out
+}
+
+/// (a − b) mod 2^(64·k), assuming the true difference taken mod 2^(64k).
+fn sub_mod_pow(a: &[u64], b: &[u64], k: usize) -> Vec<u64> {
+    let mut out = vec![0u64; k];
+    let mut borrow = 0u64;
+    for i in 0..k {
+        let av = a.get(i).copied().unwrap_or(0);
+        let bv = b.get(i).copied().unwrap_or(0);
+        let (d, bo) = bigint::sbb(av, bv, borrow);
+        out[i] = d;
+        borrow = bo;
+    }
+    // wraparound ignored: Barrett guarantees the true r ≥ 0 and < 2^(64k)
+    bigint::normalize(&mut out);
+    out
+}
+
+/// Shared contexts for the two base fields (built once).
+pub static BN254_FP_BARRETT: Lazy<BarrettCtx> = Lazy::new(|| {
+    use crate::ff::fp::FieldParams;
+    BarrettCtx::new(&crate::ff::params::Bn254FpParams::MODULUS)
+});
+pub static BLS12_381_FP_BARRETT: Lazy<BarrettCtx> = Lazy::new(|| {
+    use crate::ff::fp::FieldParams;
+    BarrettCtx::new(&crate::ff::params::Bls12381FpParams::MODULUS)
+});
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::fp::{Field, Fp};
+    use crate::ff::params::{Bls12381FpParams, Bn254FpParams};
+    use crate::util::rng::Rng;
+
+    type FpBn = Fp<Bn254FpParams, 4>;
+    type FpBls = Fp<Bls12381FpParams, 6>;
+
+    #[test]
+    fn small_modulus_mul() {
+        let ctx = BarrettCtx::new(&[97]);
+        assert_eq!(ctx.mul(&[13], &[15]), vec![13 * 15 % 97]);
+        assert_eq!(ctx.mul(&[96], &[96]), vec![1]); // (-1)^2
+    }
+
+    #[test]
+    fn agrees_with_montgomery_bn254() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let a = FpBn::random(&mut rng);
+            let b = FpBn::random(&mut rng);
+            let want = a.mul(&b).to_canonical().to_vec();
+            let got = BN254_FP_BARRETT.mul(&a.to_canonical(), &b.to_canonical());
+            let mut want = want;
+            crate::ff::bigint::normalize(&mut want);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn agrees_with_montgomery_bls() {
+        let mut rng = Rng::new(12);
+        for _ in 0..50 {
+            let a = FpBls::random(&mut rng);
+            let b = FpBls::random(&mut rng);
+            let want = a.mul(&b).to_canonical().to_vec();
+            let got = BLS12_381_FP_BARRETT.mul(&a.to_canonical(), &b.to_canonical());
+            let mut want = want;
+            crate::ff::bigint::normalize(&mut want);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn add_sub_agree_with_montgomery() {
+        let mut rng = Rng::new(13);
+        let a = FpBls::random(&mut rng);
+        let b = FpBls::random(&mut rng);
+        let ctx = &BLS12_381_FP_BARRETT;
+        let mut want_add = a.add(&b).to_canonical().to_vec();
+        crate::ff::bigint::normalize(&mut want_add);
+        assert_eq!(ctx.add(&a.to_canonical(), &b.to_canonical()), want_add);
+        let mut want_sub = a.sub(&b).to_canonical().to_vec();
+        crate::ff::bigint::normalize(&mut want_sub);
+        assert_eq!(ctx.sub(&a.to_canonical(), &b.to_canonical()), want_sub);
+    }
+
+    #[test]
+    fn edge_values() {
+        let ctx = &BN254_FP_BARRETT;
+        let zero = vec![0u64];
+        let one = vec![1u64];
+        let pm1 = {
+            let mut p = ctx.p.clone();
+            p[0] -= 1;
+            p
+        };
+        assert_eq!(ctx.mul(&zero, &pm1), vec![0]);
+        assert_eq!(ctx.mul(&one, &pm1), pm1);
+        assert_eq!(ctx.mul(&pm1, &pm1), vec![1]);
+    }
+}

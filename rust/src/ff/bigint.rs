@@ -1,0 +1,400 @@
+//! Fixed-size little-endian multi-precision integer helpers.
+//!
+//! All routines are `const fn` where the Montgomery-constant derivation
+//! needs them (R, R², −p⁻¹ mod 2⁶⁴ are computed at compile time from the
+//! modulus alone — no hand-transcribed magic numbers anywhere in the crate).
+
+/// carry-propagating add: returns (sum, carry_out).
+#[inline(always)]
+pub const fn adc(a: u64, b: u64, carry: u64) -> (u64, u64) {
+    let t = a as u128 + b as u128 + carry as u128;
+    (t as u64, (t >> 64) as u64)
+}
+
+/// borrow-propagating sub: returns (diff, borrow_out ∈ {0,1}).
+#[inline(always)]
+pub const fn sbb(a: u64, b: u64, borrow: u64) -> (u64, u64) {
+    let t = (a as u128).wrapping_sub(b as u128 + borrow as u128);
+    (t as u64, ((t >> 64) as u64) & 1)
+}
+
+/// multiply-accumulate: acc + a*b + carry → (lo, hi).
+#[inline(always)]
+pub const fn mac(acc: u64, a: u64, b: u64, carry: u64) -> (u64, u64) {
+    let t = acc as u128 + (a as u128) * (b as u128) + carry as u128;
+    (t as u64, (t >> 64) as u64)
+}
+
+/// a < b over equal-length little-endian limbs.
+#[inline]
+pub const fn lt<const N: usize>(a: &[u64; N], b: &[u64; N]) -> bool {
+    let mut i = N;
+    while i > 0 {
+        i -= 1;
+        if a[i] < b[i] {
+            return true;
+        }
+        if a[i] > b[i] {
+            return false;
+        }
+    }
+    false
+}
+
+/// a >= b.
+#[inline]
+pub const fn gte<const N: usize>(a: &[u64; N], b: &[u64; N]) -> bool {
+    !lt(a, b)
+}
+
+/// a + b with carry-out.
+#[inline]
+pub const fn add<const N: usize>(a: &[u64; N], b: &[u64; N]) -> ([u64; N], u64) {
+    let mut out = [0u64; N];
+    let mut carry = 0u64;
+    let mut i = 0;
+    while i < N {
+        let (s, c) = adc(a[i], b[i], carry);
+        out[i] = s;
+        carry = c;
+        i += 1;
+    }
+    (out, carry)
+}
+
+/// a - b with borrow-out.
+#[inline]
+pub const fn sub<const N: usize>(a: &[u64; N], b: &[u64; N]) -> ([u64; N], u64) {
+    let mut out = [0u64; N];
+    let mut borrow = 0u64;
+    let mut i = 0;
+    while i < N {
+        let (d, bo) = sbb(a[i], b[i], borrow);
+        out[i] = d;
+        borrow = bo;
+        i += 1;
+    }
+    (out, borrow)
+}
+
+/// Double in place, returning carry-out.
+#[inline]
+pub const fn double<const N: usize>(a: &[u64; N]) -> ([u64; N], u64) {
+    let mut out = [0u64; N];
+    let mut carry = 0u64;
+    let mut i = 0;
+    while i < N {
+        out[i] = (a[i] << 1) | carry;
+        carry = a[i] >> 63;
+        i += 1;
+    }
+    (out, carry)
+}
+
+/// Is zero?
+#[inline]
+pub const fn is_zero<const N: usize>(a: &[u64; N]) -> bool {
+    let mut i = 0;
+    while i < N {
+        if a[i] != 0 {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+/// Bit `i` (little-endian).
+#[inline]
+pub fn bit<const N: usize>(a: &[u64; N], i: usize) -> bool {
+    debug_assert!(i < 64 * N);
+    (a[i / 64] >> (i % 64)) & 1 == 1
+}
+
+/// Index of the highest set bit, or None for zero.
+pub fn msb<const N: usize>(a: &[u64; N]) -> Option<usize> {
+    for i in (0..N).rev() {
+        if a[i] != 0 {
+            return Some(64 * i + 63 - a[i].leading_zeros() as usize);
+        }
+    }
+    None
+}
+
+/// −p⁻¹ mod 2⁶⁴ via Newton/Hensel lifting; p must be odd.
+pub const fn mont_inv64(p0: u64) -> u64 {
+    // Each iteration doubles the number of correct low bits (start: 1 bit
+    // because p0 odd ⇒ p0·p0 ≡ 1 mod 2... use standard 63-step-safe loop).
+    let mut inv = 1u64;
+    let mut i = 0;
+    while i < 6 {
+        inv = inv.wrapping_mul(2u64.wrapping_sub(p0.wrapping_mul(inv)));
+        i += 1;
+    }
+    inv.wrapping_neg()
+}
+
+/// 2^(64·N) mod p (the Montgomery radix), computed by 64·N modular doublings.
+pub const fn compute_r<const N: usize>(p: &[u64; N]) -> [u64; N] {
+    // start from 1, double 64*N times, reducing mod p each step.
+    let mut x = [0u64; N];
+    x[0] = 1;
+    let mut i = 0;
+    while i < 64 * N {
+        let (d, carry) = double(&x);
+        // reduce: if carry or d >= p, subtract p
+        if carry == 1 || gte(&d, p) {
+            let (r, _) = sub(&d, p);
+            x = r;
+        } else {
+            x = d;
+        }
+        i += 1;
+    }
+    x
+}
+
+/// R² = 2^(128·N) mod p.
+pub const fn compute_r2<const N: usize>(p: &[u64; N]) -> [u64; N] {
+    let mut x = compute_r(p);
+    let mut i = 0;
+    while i < 64 * N {
+        let (d, carry) = double(&x);
+        if carry == 1 || gte(&d, p) {
+            let (r, _) = sub(&d, p);
+            x = r;
+        } else {
+            x = d;
+        }
+        i += 1;
+    }
+    x
+}
+
+/// Schoolbook widening multiply into hi/lo halves (runtime use: Barrett path
+/// and tests; the Montgomery hot path uses fused CIOS instead).
+pub fn mul_wide<const N: usize>(a: &[u64; N], b: &[u64; N]) -> ([u64; N], [u64; N]) {
+    let mut t = vec![0u64; 2 * N];
+    for i in 0..N {
+        let mut carry = 0u64;
+        for j in 0..N {
+            let (lo, c) = mac(t[i + j], a[i], b[j], carry);
+            t[i + j] = lo;
+            carry = c;
+        }
+        t[i + N] = carry;
+    }
+    let mut lo = [0u64; N];
+    let mut hi = [0u64; N];
+    lo.copy_from_slice(&t[..N]);
+    hi.copy_from_slice(&t[N..]);
+    (lo, hi)
+}
+
+// ---------------------------------------------------------------------------
+// Slice-based helpers for the variable-width paths (Barrett μ, exponent
+// manipulation for Tonelli–Shanks). Little-endian, arbitrary length.
+// ---------------------------------------------------------------------------
+
+/// Strip high zero limbs.
+pub fn normalize(a: &mut Vec<u64>) {
+    while a.len() > 1 && *a.last().unwrap() == 0 {
+        a.pop();
+    }
+}
+
+/// Compare variable-length little-endian numbers.
+pub fn cmp_slices(a: &[u64], b: &[u64]) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    let n = a.len().max(b.len());
+    for i in (0..n).rev() {
+        let av = a.get(i).copied().unwrap_or(0);
+        let bv = b.get(i).copied().unwrap_or(0);
+        match av.cmp(&bv) {
+            Ordering::Equal => continue,
+            o => return o,
+        }
+    }
+    Ordering::Equal
+}
+
+/// a - b for slices (a >= b required).
+pub fn sub_slices(a: &[u64], b: &[u64]) -> Vec<u64> {
+    debug_assert!(cmp_slices(a, b) != std::cmp::Ordering::Less);
+    let mut out = vec![0u64; a.len()];
+    let mut borrow = 0u64;
+    for i in 0..a.len() {
+        let bv = b.get(i).copied().unwrap_or(0);
+        let (d, bo) = sbb(a[i], bv, borrow);
+        out[i] = d;
+        borrow = bo;
+    }
+    debug_assert_eq!(borrow, 0);
+    normalize(&mut out);
+    out
+}
+
+/// Shift left by `k` bits.
+pub fn shl_slices(a: &[u64], k: usize) -> Vec<u64> {
+    let limb_shift = k / 64;
+    let bit_shift = k % 64;
+    let mut out = vec![0u64; a.len() + limb_shift + 1];
+    for (i, &w) in a.iter().enumerate() {
+        out[i + limb_shift] |= w << bit_shift;
+        if bit_shift > 0 {
+            out[i + limb_shift + 1] |= w >> (64 - bit_shift);
+        }
+    }
+    normalize(&mut out);
+    out
+}
+
+/// Shift right by `k` bits.
+pub fn shr_slices(a: &[u64], k: usize) -> Vec<u64> {
+    let limb_shift = k / 64;
+    let bit_shift = k % 64;
+    if limb_shift >= a.len() {
+        return vec![0];
+    }
+    let mut out = vec![0u64; a.len() - limb_shift];
+    for i in 0..out.len() {
+        let lo = a[i + limb_shift] >> bit_shift;
+        let hi = if bit_shift > 0 {
+            a.get(i + limb_shift + 1).copied().unwrap_or(0) << (64 - bit_shift)
+        } else {
+            0
+        };
+        out[i] = lo | hi;
+    }
+    normalize(&mut out);
+    out
+}
+
+/// Number of trailing zero bits (None for zero value).
+pub fn trailing_zeros(a: &[u64]) -> Option<u32> {
+    for (i, &w) in a.iter().enumerate() {
+        if w != 0 {
+            return Some(64 * i as u32 + w.trailing_zeros());
+        }
+    }
+    None
+}
+
+/// floor(2^k / d) via restoring long division (one-time Barrett μ setup).
+pub fn div_pow2(k: usize, d: &[u64]) -> Vec<u64> {
+    assert!(!d.iter().all(|&w| w == 0), "division by zero");
+    let mut quotient = vec![0u64; k / 64 + 1];
+    let mut rem: Vec<u64> = vec![0];
+    // Process bits of 2^k from MSB (bit k) to LSB. Numerator bits: bit k is
+    // 1, the rest 0.
+    for bitpos in (0..=k).rev() {
+        // rem <<= 1; rem |= numerator bit
+        rem = shl_slices(&rem, 1);
+        if bitpos == k {
+            rem[0] |= 1;
+        }
+        if cmp_slices(&rem, d) != std::cmp::Ordering::Less {
+            rem = sub_slices(&rem, d);
+            quotient[bitpos / 64] |= 1 << (bitpos % 64);
+        }
+    }
+    normalize(&mut quotient);
+    quotient
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_sbb_roundtrip() {
+        let (s, c) = adc(u64::MAX, 1, 0);
+        assert_eq!((s, c), (0, 1));
+        let (d, b) = sbb(0, 1, 0);
+        assert_eq!((d, b), (u64::MAX, 1));
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        let a = [1u64, 2, 3, 4];
+        let b = [5u64, 6, 7, 8];
+        let (s, c) = add(&a, &b);
+        assert_eq!(c, 0);
+        let (d, bo) = sub(&s, &b);
+        assert_eq!(bo, 0);
+        assert_eq!(d, a);
+    }
+
+    #[test]
+    fn lt_works() {
+        assert!(lt(&[0, 1], &[0, 2]));
+        assert!(lt(&[5, 1], &[0, 2]));
+        assert!(!lt(&[0, 2], &[0, 2]));
+        assert!(!lt(&[1, 2], &[0, 2]));
+    }
+
+    #[test]
+    fn mont_inv64_property() {
+        for p0 in [0x43e1f593f0000001u64, 0xb9feffffffffaaab, 3, 0xffffffffffffffff] {
+            let inv = mont_inv64(p0);
+            assert_eq!(p0.wrapping_mul(inv.wrapping_neg()), 1, "p0={p0:#x}");
+        }
+    }
+
+    #[test]
+    fn compute_r_small_modulus() {
+        // p = 2^64 - 59 (prime); R = 2^64 mod p = 59.
+        let p = [u64::MAX - 58];
+        assert_eq!(compute_r(&p), [59]);
+        // R2 = 59^2 mod p = 3481.
+        assert_eq!(compute_r2(&p), [3481]);
+    }
+
+    #[test]
+    fn mul_wide_small() {
+        let (lo, hi) = mul_wide(&[u64::MAX], &[u64::MAX]);
+        // (2^64-1)^2 = 2^128 - 2^65 + 1
+        assert_eq!(lo, [1]);
+        assert_eq!(hi, [u64::MAX - 1]);
+    }
+
+    #[test]
+    fn msb_and_bit() {
+        let a = [0u64, 0b1000];
+        assert_eq!(msb(&a), Some(67));
+        assert!(bit(&a, 67));
+        assert!(!bit(&a, 66));
+        assert_eq!(msb(&[0u64, 0]), None);
+    }
+
+    #[test]
+    fn slice_shifts() {
+        let a = vec![0x8000_0000_0000_0000u64];
+        assert_eq!(shl_slices(&a, 1), vec![0, 1]);
+        assert_eq!(shr_slices(&shl_slices(&a, 5), 5), a);
+        assert_eq!(shr_slices(&a, 64), vec![0]);
+    }
+
+    #[test]
+    fn div_pow2_exact() {
+        // 2^10 / 8 = 128
+        assert_eq!(div_pow2(10, &[8]), vec![128]);
+        // 2^64 / 3 = 6148914691236517205
+        assert_eq!(div_pow2(64, &[3]), vec![6148914691236517205]);
+    }
+
+    #[test]
+    fn trailing_zeros_works() {
+        assert_eq!(trailing_zeros(&[0, 0b100]), Some(66));
+        assert_eq!(trailing_zeros(&[0, 0]), None);
+        assert_eq!(trailing_zeros(&[1]), Some(0));
+    }
+
+    #[test]
+    fn cmp_handles_unequal_lengths() {
+        use std::cmp::Ordering::*;
+        assert_eq!(cmp_slices(&[1, 0, 0], &[1]), Equal);
+        assert_eq!(cmp_slices(&[0, 1], &[5]), Greater);
+        assert_eq!(cmp_slices(&[5], &[0, 1]), Less);
+    }
+}

@@ -1,0 +1,231 @@
+//! Quadratic extension field Fp² = Fp[u]/(u² + 1).
+//!
+//! Both BN254 and BLS12-381 have p ≡ 3 (mod 4), so −1 is a quadratic
+//! nonresidue and u² = −1 is a valid (and the conventional) tower for the
+//! G2 groups the prover's second MSM runs over (Table I's MSM-𝔾₂ column).
+//! Multiplication is Karatsuba (3 base multiplications — the 3× cost factor
+//! the paper's G2 future-work discussion refers to).
+
+use super::fp::{Field, FieldParams, Fp};
+use crate::util::rng::Rng;
+use std::hash::Hash;
+
+/// Element c0 + c1·u of Fp².
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fp2<P: FieldParams<N>, const N: usize> {
+    pub c0: Fp<P, N>,
+    pub c1: Fp<P, N>,
+}
+
+impl<P: FieldParams<N>, const N: usize> Fp2<P, N> {
+    pub const fn new(c0: Fp<P, N>, c1: Fp<P, N>) -> Self {
+        Fp2 { c0, c1 }
+    }
+
+    /// Embed a base-field element.
+    pub fn from_base(c0: Fp<P, N>) -> Self {
+        Fp2 { c0, c1: Fp::<P, N>::zero() }
+    }
+
+    /// Conjugate c0 − c1·u.
+    pub fn conjugate(&self) -> Self {
+        Fp2 { c0: self.c0, c1: self.c1.neg() }
+    }
+
+    /// Norm map N(a) = a·ā = c0² + c1² ∈ Fp.
+    pub fn norm(&self) -> Fp<P, N> {
+        self.c0.square().add(&self.c1.square())
+    }
+
+    /// Multiply by a base-field scalar (2 base muls).
+    pub fn scale(&self, k: &Fp<P, N>) -> Self {
+        Fp2 { c0: self.c0.mul(k), c1: self.c1.mul(k) }
+    }
+}
+
+impl<P: FieldParams<N>, const N: usize> std::fmt::Debug for Fp2<P, N> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({:?} + {:?}*u)", self.c0, self.c1)
+    }
+}
+
+impl<P: FieldParams<N>, const N: usize> Field for Fp2<P, N> {
+    fn zero() -> Self {
+        Fp2 { c0: Fp::zero(), c1: Fp::zero() }
+    }
+
+    fn one() -> Self {
+        Fp2 { c0: Fp::one(), c1: Fp::zero() }
+    }
+
+    fn is_zero(&self) -> bool {
+        self.c0.is_zero() && self.c1.is_zero()
+    }
+
+    fn add(&self, o: &Self) -> Self {
+        Fp2 { c0: self.c0.add(&o.c0), c1: self.c1.add(&o.c1) }
+    }
+
+    fn sub(&self, o: &Self) -> Self {
+        Fp2 { c0: self.c0.sub(&o.c0), c1: self.c1.sub(&o.c1) }
+    }
+
+    fn neg(&self) -> Self {
+        Fp2 { c0: self.c0.neg(), c1: self.c1.neg() }
+    }
+
+    fn mul(&self, o: &Self) -> Self {
+        // Karatsuba over u² = −1:
+        //   v0 = a0·b0, v1 = a1·b1
+        //   c0 = v0 − v1
+        //   c1 = (a0+a1)(b0+b1) − v0 − v1
+        let v0 = self.c0.mul(&o.c0);
+        let v1 = self.c1.mul(&o.c1);
+        let s = self.c0.add(&self.c1).mul(&o.c0.add(&o.c1));
+        Fp2 { c0: v0.sub(&v1), c1: s.sub(&v0).sub(&v1) }
+    }
+
+    fn square(&self) -> Self {
+        // (a0+a1·u)² with u²=−1: c0 = (a0+a1)(a0−a1), c1 = 2·a0·a1
+        let t0 = self.c0.add(&self.c1);
+        let t1 = self.c0.sub(&self.c1);
+        let c1 = self.c0.mul(&self.c1).double();
+        Fp2 { c0: t0.mul(&t1), c1 }
+    }
+
+    fn inv(&self) -> Option<Self> {
+        // a⁻¹ = ā / N(a)
+        let n = self.norm();
+        let ninv = n.inv()?;
+        Some(Fp2 { c0: self.c0.mul(&ninv), c1: self.c1.neg().mul(&ninv) })
+    }
+
+    fn from_u64(v: u64) -> Self {
+        Fp2::from_base(Fp::from_u64(v))
+    }
+
+    fn random(rng: &mut Rng) -> Self {
+        Fp2 { c0: Fp::random(rng), c1: Fp::random(rng) }
+    }
+
+    fn order_minus_one() -> Vec<u64> {
+        // p² − 1 = (p−1)(p+1): multiply slices then no subtraction needed —
+        // compute p² then subtract 1.
+        let p = P::MODULUS.to_vec();
+        let mut sq = vec![0u64; 2 * N];
+        for i in 0..N {
+            let mut carry = 0u64;
+            for j in 0..N {
+                let (lo, hi) = super::bigint::mac(sq[i + j], p[i], p[j], carry);
+                sq[i + j] = lo;
+                carry = hi;
+            }
+            sq[i + N] = carry;
+        }
+        // subtract 1 (p² is odd² = odd, so limb 0 ≥ 1)
+        sq[0] -= 1;
+        sq
+    }
+}
+
+impl<P: FieldParams<N>, const N: usize> std::ops::Add for Fp2<P, N> {
+    type Output = Self;
+    fn add(self, rhs: Self) -> Self {
+        Field::add(&self, &rhs)
+    }
+}
+impl<P: FieldParams<N>, const N: usize> std::ops::Sub for Fp2<P, N> {
+    type Output = Self;
+    fn sub(self, rhs: Self) -> Self {
+        Field::sub(&self, &rhs)
+    }
+}
+impl<P: FieldParams<N>, const N: usize> std::ops::Mul for Fp2<P, N> {
+    type Output = Self;
+    fn mul(self, rhs: Self) -> Self {
+        Field::mul(&self, &rhs)
+    }
+}
+impl<P: FieldParams<N>, const N: usize> std::ops::Neg for Fp2<P, N> {
+    type Output = Self;
+    fn neg(self) -> Self {
+        Field::neg(&self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::{Bls12381FpParams, Bn254FpParams};
+
+    type F2Bn = Fp2<Bn254FpParams, 4>;
+    type F2Bls = Fp2<Bls12381FpParams, 6>;
+
+    #[test]
+    fn u_squared_is_minus_one() {
+        let u = F2Bn { c0: Fp::zero(), c1: Fp::one() };
+        assert_eq!(u.square(), F2Bn::one().neg());
+        let u = F2Bls { c0: Fp::zero(), c1: Fp::one() };
+        assert_eq!(u.mul(&u), F2Bls::one().neg());
+    }
+
+    #[test]
+    fn mul_matches_schoolbook() {
+        let mut rng = Rng::new(21);
+        for _ in 0..30 {
+            let a = F2Bls::random(&mut rng);
+            let b = F2Bls::random(&mut rng);
+            // schoolbook: (a0b0 - a1b1) + (a0b1 + a1b0) u
+            let c0 = a.c0.mul(&b.c0).sub(&a.c1.mul(&b.c1));
+            let c1 = a.c0.mul(&b.c1).add(&a.c1.mul(&b.c0));
+            assert_eq!(a.mul(&b), Fp2 { c0, c1 });
+        }
+    }
+
+    #[test]
+    fn square_matches_mul() {
+        let mut rng = Rng::new(22);
+        let a = F2Bn::random(&mut rng);
+        assert_eq!(a.square(), a.mul(&a));
+    }
+
+    #[test]
+    fn inverse() {
+        let mut rng = Rng::new(23);
+        for _ in 0..10 {
+            let a = F2Bn::random(&mut rng);
+            if a.is_zero() {
+                continue;
+            }
+            assert_eq!(a.mul(&a.inv().unwrap()), F2Bn::one());
+        }
+        assert!(F2Bn::zero().inv().is_none());
+    }
+
+    #[test]
+    fn norm_multiplicative() {
+        let mut rng = Rng::new(24);
+        let a = F2Bls::random(&mut rng);
+        let b = F2Bls::random(&mut rng);
+        assert_eq!(a.mul(&b).norm(), a.norm().mul(&b.norm()));
+    }
+
+    #[test]
+    fn base_field_embeds() {
+        let mut rng = Rng::new(25);
+        let x = Fp::<Bn254FpParams, 4>::random(&mut rng);
+        let y = Fp::<Bn254FpParams, 4>::random(&mut rng);
+        let ex = F2Bn::from_base(x);
+        let ey = F2Bn::from_base(y);
+        assert_eq!(ex.mul(&ey), F2Bn::from_base(x.mul(&y)));
+    }
+
+    #[test]
+    fn fermat_in_extension() {
+        // a^(p²−1) = 1
+        let mut rng = Rng::new(26);
+        let a = F2Bn::random(&mut rng);
+        let e = F2Bn::order_minus_one();
+        assert_eq!(a.pow_limbs(&e), F2Bn::one());
+    }
+}

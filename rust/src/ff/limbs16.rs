@@ -1,0 +1,74 @@
+//! Repacking between the host's 64-bit limbs and the engine's 16-bit limbs.
+//!
+//! The L1 Pallas kernel computes Montgomery arithmetic over 16-bit limbs
+//! (chosen so all delayed-carry accumulations fit u64 — the software
+//! analogue of the paper's carry-save LUT reduction, §IV-B1/B4). Because
+//! the kernel's radix satisfies `R16 = 2^(16·4N) = 2^(64·N) = R64`, an
+//! element's **Montgomery representation is identical in both domains**;
+//! converting is pure limb-splitting with no arithmetic.
+
+/// Split little-endian u64 limbs into 4× as many 16-bit limbs (stored u32,
+/// the engine's I/O dtype).
+pub fn u64_to_u16_limbs(limbs: &[u64]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(limbs.len() * 4);
+    for &l in limbs {
+        out.push((l & 0xFFFF) as u32);
+        out.push(((l >> 16) & 0xFFFF) as u32);
+        out.push(((l >> 32) & 0xFFFF) as u32);
+        out.push(((l >> 48) & 0xFFFF) as u32);
+    }
+    out
+}
+
+/// Inverse of [`u64_to_u16_limbs`]. `u16s.len()` must be a multiple of 4 and
+/// each entry must fit in 16 bits.
+pub fn u16_limbs_to_u64(u16s: &[u32]) -> Result<Vec<u64>, String> {
+    if u16s.len() % 4 != 0 {
+        return Err(format!("16-bit limb count {} not a multiple of 4", u16s.len()));
+    }
+    let mut out = Vec::with_capacity(u16s.len() / 4);
+    for chunk in u16s.chunks_exact(4) {
+        for &v in chunk {
+            if v > 0xFFFF {
+                return Err(format!("limb value {v:#x} exceeds 16 bits"));
+            }
+        }
+        out.push(
+            chunk[0] as u64
+                | (chunk[1] as u64) << 16
+                | (chunk[2] as u64) << 32
+                | (chunk[3] as u64) << 48,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(41);
+        for n in [1usize, 4, 6] {
+            let limbs = rng.words(n);
+            let u16s = u64_to_u16_limbs(&limbs);
+            assert_eq!(u16s.len(), 4 * n);
+            assert!(u16s.iter().all(|&v| v <= 0xFFFF));
+            assert_eq!(u16_limbs_to_u64(&u16s).unwrap(), limbs);
+        }
+    }
+
+    #[test]
+    fn known_value() {
+        let u16s = u64_to_u16_limbs(&[0x0123_4567_89ab_cdef]);
+        assert_eq!(u16s, vec![0xcdef, 0x89ab, 0x4567, 0x0123]);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(u16_limbs_to_u64(&[1, 2, 3]).is_err());
+        assert!(u16_limbs_to_u64(&[0x10000, 0, 0, 0]).is_err());
+    }
+}

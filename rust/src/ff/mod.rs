@@ -1,0 +1,62 @@
+//! Finite-field arithmetic substrate.
+//!
+//! The paper's entire compute reduces to modular arithmetic over the base
+//! fields of BN254 ("BN128") and BLS12-381 (§II-C, §IV-B1). This module
+//! provides:
+//!
+//! * [`bigint`] — fixed-width multi-precision primitives (compile-time
+//!   Montgomery constant derivation included);
+//! * [`fp`] — the generic Montgomery-form prime field [`fp::Fp`];
+//! * [`barrett`] — the paper's "standard form" (non-Montgomery) backend
+//!   (§IV-B4), used for cross-checking and by the hardware resource models;
+//! * [`fp2`] — the quadratic extension for G2;
+//! * [`sqrt`] — generic Tonelli–Shanks (deterministic point generation);
+//! * [`limbs16`] — repacking to the PJRT engine's 16-bit limb domain;
+//! * [`opcount`] — the modmul counters behind Tables II/III.
+
+pub mod bigint;
+pub mod fp;
+pub mod opcount;
+pub mod barrett;
+pub mod fp2;
+pub mod sqrt;
+pub mod limbs16;
+pub mod params;
+
+pub use fp::{Field, FieldParams, Fp};
+pub use fp2::Fp2;
+pub use opcount::OpCounts;
+
+/// BN254 base field (4 × 64-bit limbs, 254 bits).
+pub type FpBn254 = Fp<params::Bn254FpParams, 4>;
+/// BN254 scalar field.
+pub type FrBn254 = Fp<params::Bn254FrParams, 4>;
+/// BLS12-381 base field (6 × 64-bit limbs, 381 bits).
+pub type FpBls12381 = Fp<params::Bls12381FpParams, 6>;
+/// BLS12-381 scalar field.
+pub type FrBls12381 = Fp<params::Bls12381FrParams, 4>;
+/// BN254 quadratic extension (G2 coordinates).
+pub type Fp2Bn254 = Fp2<params::Bn254FpParams, 4>;
+/// BLS12-381 quadratic extension (G2 coordinates).
+pub type Fp2Bls12381 = Fp2<params::Bls12381FpParams, 6>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_bit_widths() {
+        use fp::FieldParams;
+        assert_eq!(params::Bn254FpParams::BITS, 254);
+        assert_eq!(params::Bn254FrParams::BITS, 254);
+        assert_eq!(params::Bls12381FpParams::BITS, 381);
+        assert_eq!(params::Bls12381FrParams::BITS, 255);
+    }
+
+    #[test]
+    fn two_adicity_matches_known() {
+        use fp::FieldParams;
+        assert_eq!(params::Bn254FrParams::TWO_ADICITY, 28);
+        assert_eq!(params::Bls12381FrParams::TWO_ADICITY, 32);
+    }
+}

@@ -1,0 +1,171 @@
+//! Generic Tonelli–Shanks square root over any [`Field`].
+//!
+//! Used by the deterministic point generators (`ec::points`) to build large
+//! MSM test workloads without a trusted setup: sample x, solve
+//! y² = x³ + b. Works for both Fp (G1) and Fp² (G2) through the `Field`
+//! abstraction — the Fp² case needs a randomized nonresidue search because
+//! every base-subfield element is a square in Fp².
+
+use super::fp::Field;
+use crate::util::rng::Rng;
+use crate::ff::bigint;
+
+/// Legendre-style symbol via Euler's criterion: returns 1, 0, or −1 encoded
+/// as `Some(true)` (square), `None` (zero), `Some(false)` (nonsquare).
+pub fn euler_criterion<F: Field>(a: &F) -> Option<bool> {
+    if a.is_zero() {
+        return None;
+    }
+    let e = bigint::shr_slices(&F::order_minus_one(), 1);
+    let l = a.pow_limbs(&e);
+    Some(l == F::one())
+}
+
+/// Find a quadratic nonresidue: try small integers first (fast path for
+/// prime fields), then deterministic pseudo-random elements (needed for
+/// Fp², where all base-subfield elements are squares).
+fn find_nonresidue<F: Field>() -> F {
+    for k in 2u64..32 {
+        let c = F::from_u64(k);
+        if euler_criterion(&c) == Some(false) {
+            return c;
+        }
+    }
+    // Fixed seed: the search is deterministic so repeated sqrt calls agree.
+    let mut rng = Rng::new(NONRESIDUE_SEARCH_SEED);
+    loop {
+        let c = F::random(&mut rng);
+        if euler_criterion(&c) == Some(false) {
+            return c;
+        }
+    }
+}
+
+/// Seed for the randomized nonresidue search (recorded for reproducibility).
+const NONRESIDUE_SEARCH_SEED: u64 = 0x5eed_0f05_0a12_e000;
+
+/// sqrt(a) if it exists. Returns the "positive" root (either root works for
+/// point construction; callers that care pick a sign).
+pub fn sqrt<F: Field>(a: &F) -> Option<F> {
+    if a.is_zero() {
+        return Some(F::zero());
+    }
+    if euler_criterion(a) != Some(true) {
+        return None;
+    }
+    // q − 1 = 2^s · t with t odd
+    let q1 = F::order_minus_one();
+    let s = bigint::trailing_zeros(&q1).expect("q-1 nonzero");
+    let t = bigint::shr_slices(&q1, s as usize);
+
+    // R = a^((t+1)/2), b = a^t, c = z^t
+    let t_plus_1 = {
+        let mut v = t.clone();
+        let mut i = 0;
+        loop {
+            let (s_, c) = bigint::adc(v[i], if i == 0 { 1 } else { 0 }, 0);
+            v[i] = s_;
+            if c == 0 {
+                break;
+            }
+            i += 1;
+            if i == v.len() {
+                v.push(0);
+            }
+        }
+        v
+    };
+    let half_t1 = bigint::shr_slices(&t_plus_1, 1);
+    let mut r = a.pow_limbs(&half_t1);
+    let mut b = a.pow_limbs(&t);
+    let z: F = find_nonresidue();
+    let mut c = z.pow_limbs(&t);
+    let mut m = s;
+
+    while b != F::one() {
+        // least i in (0, m): b^(2^i) = 1
+        let mut i = 0u32;
+        let mut t2 = b;
+        while t2 != F::one() {
+            t2 = t2.square();
+            i += 1;
+            if i == m {
+                return None; // not a residue (shouldn't happen post-Euler)
+            }
+        }
+        // c^(2^(m-i-1))
+        let mut cexp = c;
+        for _ in 0..(m - i - 1) {
+            cexp = cexp.square();
+        }
+        r = r.mul(&cexp);
+        c = cexp.square();
+        b = b.mul(&c);
+        m = i;
+    }
+    debug_assert_eq!(r.square(), *a);
+    Some(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::fp::Fp;
+    use crate::ff::fp2::Fp2;
+    use crate::ff::params::{Bls12381FpParams, Bn254FpParams};
+
+    type FpBn = Fp<Bn254FpParams, 4>;
+    type FpBls = Fp<Bls12381FpParams, 6>;
+    type F2Bls = Fp2<Bls12381FpParams, 6>;
+
+    #[test]
+    fn sqrt_of_squares_roundtrips() {
+        let mut rng = Rng::new(31);
+        for _ in 0..10 {
+            let a = FpBn::random(&mut rng);
+            let sq = a.square();
+            let r = sqrt(&sq).expect("square must have a root");
+            assert!(r == a || r == a.neg());
+        }
+    }
+
+    #[test]
+    fn sqrt_rejects_nonsquares() {
+        let mut rng = Rng::new(32);
+        let mut rejected = 0;
+        for _ in 0..20 {
+            let a = FpBls::random(&mut rng);
+            if euler_criterion(&a) == Some(false) {
+                assert!(sqrt(&a).is_none());
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 0, "should have seen some nonsquares");
+    }
+
+    #[test]
+    fn sqrt_zero_and_one() {
+        assert_eq!(sqrt(&FpBn::zero()), Some(FpBn::zero()));
+        let r = sqrt(&FpBn::one()).unwrap();
+        assert!(r == FpBn::one() || r == FpBn::one().neg());
+    }
+
+    #[test]
+    fn sqrt_in_fp2() {
+        let mut rng = Rng::new(33);
+        for _ in 0..5 {
+            let a = F2Bls::random(&mut rng);
+            let sq = a.square();
+            let r = sqrt(&sq).expect("square in Fp2 must have a root");
+            assert!(r == a || r == a.neg());
+            assert_eq!(r.square(), sq);
+        }
+    }
+
+    #[test]
+    fn euler_on_known_values() {
+        // 4 is always a square; generator is configured to be a nonresidue.
+        assert_eq!(euler_criterion(&FpBn::from_u64(4)), Some(true));
+        assert_eq!(euler_criterion(&FpBn::zero()), None);
+    }
+}

@@ -1,0 +1,87 @@
+//! Target device: Intel Agilex AGFB027R25A2E2V on the BittWare IA-840f
+//! ([30] in the paper). Capacities from the public device tables; the
+//! paper's §V-C1 "912,800 ALMs … 91% utilization" confirms the ALM figure.
+
+/// Static FPGA device description.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub alms: u64,
+    pub dsps: u64,
+    pub m20ks: u64,
+    /// DDR4 channel groups usable by BAM instances (IA-840f: 4 banks).
+    pub ddr_groups: u32,
+}
+
+/// The paper's target card.
+pub const IA840F: Device = Device {
+    name: "BittWare IA-840f (Agilex AGFB027R25A2E2V)",
+    alms: 912_800,
+    dsps: 8_528,
+    m20ks: 13_272,
+    ddr_groups: 4,
+};
+
+impl Device {
+    /// Does a resource vector fit — with the practical place-and-route
+    /// ceiling on ALM utilization (§V-C1: 91% was already "very close to
+    /// FPGA capacity ceiling")?
+    pub fn fits(&self, r: &super::Resources) -> bool {
+        r.alms <= self.alms as f64 * super::calib::ALM_UTIL_CEILING
+            && (r.dsps as u64) <= self.dsps
+            && (r.m20ks as u64) <= self.m20ks
+    }
+
+    /// ALM utilization fraction of a build.
+    pub fn alm_utilization(&self, r: &super::Resources) -> f64 {
+        r.alms as f64 / self.alms as f64
+    }
+
+    /// Largest scaling factor S of a variant that fits this device (the
+    /// paper: "scaling is currently limited only by the availability of
+    /// resources").
+    pub fn max_scaling(&self, model: &super::ResourceModel, variant: super::DesignVariant) -> u32 {
+        let mut s = 1;
+        while s < self.ddr_groups {
+            let r = model.system(variant, s + 1);
+            if !self.fits(&r) {
+                break;
+            }
+            s += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DesignVariant, NumberForm, ResourceModel};
+    use super::*;
+
+    #[test]
+    fn paper_alm_count() {
+        assert_eq!(IA840F.alms, 912_800);
+    }
+
+    #[test]
+    fn bls_s2_utilization_matches_91_percent() {
+        // §V-C1: "for BLS12-381 curve with scaling=2 the ALM utilization
+        // peaks at 91%"
+        let model = ResourceModel::default();
+        let r = model.system(
+            DesignVariant { bits: 381, form: NumberForm::Standard, unified: true },
+            2,
+        );
+        let u = IA840F.alm_utilization(&r);
+        assert!((u - 0.91).abs() < 0.02, "utilization {u}");
+    }
+
+    #[test]
+    fn max_scaling_bls_is_two() {
+        // The paper could only fit S=2 ("evaluation is possible for only
+        // two scaling factors because of the resources available").
+        let model = ResourceModel::default();
+        let v = DesignVariant { bits: 381, form: NumberForm::Standard, unified: true };
+        assert_eq!(IA840F.max_scaling(&model, v), 2);
+    }
+}

@@ -1,0 +1,37 @@
+//! DNA (Double-aNd-Add) combine-phase model (§IV-A): folds the per-window
+//! MSM results into the final point via Horner — k doublings + 1 add per
+//! window, inherently serial (each step consumes the previous result).
+
+use super::uda::UdaPipe;
+
+/// Combine-phase model.
+#[derive(Clone, Copy, Debug)]
+pub struct DnaModel {
+    pub pipe: UdaPipe,
+}
+
+impl DnaModel {
+    /// Cycles to combine `windows` window results at slice width k.
+    pub fn combine_cycles(&self, k: u32, windows: u32) -> u64 {
+        // (k doublings + 1 add) per window, all on one dependency chain
+        self.pipe.serial_cycles(windows as u64 * (k as u64 + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::resources::NumberForm;
+    use super::*;
+
+    #[test]
+    fn combine_is_small_vs_fill() {
+        // BLS12-381: 32 windows × 13 ops × 270 cycles ≈ 112k cycles —
+        // microseconds at 351 MHz; negligible next to 64M-point fills,
+        // exactly why the paper keeps DNA simple.
+        let d = DnaModel { pipe: UdaPipe::unified(NumberForm::Standard) };
+        let c = d.combine_cycles(12, 32);
+        assert_eq!(c, 32 * 13 * 270);
+        let seconds = c as f64 / 351e6;
+        assert!(seconds < 0.001);
+    }
+}

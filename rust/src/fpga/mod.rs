@@ -1,0 +1,96 @@
+//! Cycle-level model of the paper's SAB accelerator on Intel Agilex.
+//!
+//! The physical artifact (bitstream on a BittWare IA-840f) cannot be
+//! rebuilt here, so per the substitution rule (DESIGN.md §0) this module
+//! models the architecture the paper describes, calibrated against every
+//! number the paper publishes:
+//!
+//! * [`device`] — Agilex AGFB027R25A2E2V capacities, DDR banks, PCIe;
+//! * [`uda`] — the Unified-Double-Add pipeline unit (§IV-B3): II=1,
+//!   latency 270 (standard form) / 425 (Montgomery) cycles, fmax model;
+//! * [`bam`] — Bucket-Array-Manager fill phase: pipelined mixed adds with
+//!   the bucket-conflict hazard (in-flight bucket ⇒ replay);
+//! * [`sps`] — Scalar-Point-Streamer: DDR channel bandwidth, one point
+//!   stream pass per scalar window;
+//! * [`rbam`] — IS-RBAM recursive reduction vs serial running sum;
+//! * [`dna`] — the final Double-aNd-Add combine;
+//! * [`sab`] — composition into an end-to-end [`sab::MsmTiming`];
+//! * [`resources`] — ALM/DSP/M20K model (Tables IV, V, VII);
+//! * [`power`] — standby/active power model (Table VIII, Figs 5/7);
+//! * [`calib`] — every calibration constant, with provenance notes.
+
+pub mod calib;
+pub mod device;
+pub mod uda;
+pub mod bam;
+pub mod sps;
+pub mod rbam;
+pub mod dna;
+pub mod sab;
+pub mod resources;
+pub mod power;
+
+pub use resources::{DesignVariant, NumberForm, ResourceModel, Resources};
+pub use sab::{MsmTiming, SabConfig, SabModel};
+
+/// The two curves as the model keys them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CurveId {
+    Bn254,
+    Bls12381,
+}
+
+impl CurveId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CurveId::Bn254 => "BN128",
+            CurveId::Bls12381 => "BLS12-381",
+        }
+    }
+
+    /// Base-field bit width (the paper's MSM accounting width).
+    pub fn field_bits(&self) -> u32 {
+        match self {
+            CurveId::Bn254 => 254,
+            CurveId::Bls12381 => 381,
+        }
+    }
+
+    /// Affine point bytes in DDR (2 coordinates, word-padded).
+    pub fn affine_bytes(&self) -> u64 {
+        match self {
+            CurveId::Bn254 => 64,
+            CurveId::Bls12381 => 96,
+        }
+    }
+
+    /// Scalar bytes as transferred from the host per MSM call.
+    pub fn scalar_bytes(&self) -> u64 {
+        match self {
+            CurveId::Bn254 => 32,
+            CurveId::Bls12381 => 48,
+        }
+    }
+
+    /// Windows at the hardware slice width k=12 (Table III: 22 / 32).
+    pub fn hw_windows(&self) -> u32 {
+        self.field_bits().div_ceil(calib::HW_WINDOW_BITS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_counts_match_table_iii() {
+        assert_eq!(CurveId::Bn254.hw_windows(), 22);
+        assert_eq!(CurveId::Bls12381.hw_windows(), 32);
+    }
+
+    #[test]
+    fn point_sizes() {
+        assert_eq!(CurveId::Bn254.affine_bytes(), 64);
+        assert_eq!(CurveId::Bls12381.affine_bytes(), 96);
+    }
+}

@@ -1,0 +1,113 @@
+//! Power model (Table VIII, Figures 5/7/8).
+//!
+//! Fitted surrogate (EXPERIMENTS.md §Calibration):
+//!
+//! * standby = BSP + αA·ALM + αD·DSP + αM·M20K — least squares over the
+//!   five Table VIII builds (max residual 0.8 W). The coefficients are a
+//!   *fit*, not physics: αD/αM come out slightly negative because ALM
+//!   count dominates and correlates with everything; the model is only
+//!   used inside the envelope of builds it was fitted on.
+//! * active = standby + dyn_base(form) + γS·S — the Montgomery datapath's
+//!   dynamic base is ≈2.2× the standard form's (three integer multipliers
+//!   toggling per modmul), which is the §IV-B4 power story.
+
+use super::calib;
+use super::resources::{DesignVariant, NumberForm, ResourceModel};
+
+/// Power model output (watts).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerEstimate {
+    pub standby_w: f64,
+    pub active_w: f64,
+}
+
+/// Compute the power estimate of a build.
+pub fn estimate(variant: DesignVariant, scaling: u32) -> PowerEstimate {
+    let r = ResourceModel.system(variant, scaling);
+    let standby_w = (calib::POWER_BSP_W
+        + calib::POWER_STANDBY_PER_MALM * r.alms / 1e6
+        + calib::POWER_STANDBY_PER_KDSP * r.dsps / 1e3
+        + calib::POWER_STANDBY_PER_KM20K * r.m20ks / 1e3)
+        .max(calib::POWER_BSP_W);
+    let dyn_base = match variant.form {
+        NumberForm::Standard => calib::POWER_DYN_BASE_STD_W,
+        NumberForm::Montgomery => calib::POWER_DYN_BASE_MONT_W,
+    };
+    let active_w = standby_w + dyn_base + calib::POWER_DYN_PER_S_W * scaling as f64;
+    PowerEstimate { standby_w, active_w }
+}
+
+/// Power-normalized throughput (the y-axis of Figs 5/7/8):
+/// millions of MSM points per second per watt.
+pub fn throughput_per_watt(m_msm_pps: f64, active_w: f64) -> f64 {
+    m_msm_pps / active_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn variant(bits: u32, form: NumberForm, unified: bool) -> DesignVariant {
+        DesignVariant { bits, form, unified }
+    }
+
+    #[test]
+    fn table_viii_standby_within_one_watt() {
+        let cases = [
+            (variant(254, NumberForm::Standard, true), 1, 42.6),
+            (variant(254, NumberForm::Standard, true), 2, 44.7),
+            (variant(381, NumberForm::Standard, true), 1, 48.8),
+            (variant(381, NumberForm::Standard, true), 2, 50.4),
+        ];
+        for (v, s, want) in cases {
+            let got = estimate(v, s).standby_w;
+            assert!((got - want).abs() < 1.2, "{} S={s}: {got} vs {want}", v.label());
+        }
+    }
+
+    #[test]
+    fn table_viii_active_within_two_watts() {
+        let cases = [
+            (variant(254, NumberForm::Standard, true), 1, 58.0),
+            (variant(254, NumberForm::Standard, true), 2, 63.5),
+            (variant(381, NumberForm::Standard, true), 1, 63.1),
+            (variant(381, NumberForm::Standard, true), 2, 68.6),
+        ];
+        for (v, s, want) in cases {
+            let got = estimate(v, s).active_w;
+            assert!((got - want).abs() < 2.5, "{} S={s}: {got} vs {want}", v.label());
+        }
+    }
+
+    #[test]
+    fn montgomery_burns_more_dynamic_power() {
+        let papd = estimate(variant(254, NumberForm::Montgomery, false), 1);
+        let uda = estimate(variant(254, NumberForm::Standard, true), 1);
+        let dyn_papd = papd.active_w - papd.standby_w;
+        let dyn_uda = uda.active_w - uda.standby_w;
+        assert!(dyn_papd > 1.8 * dyn_uda, "{dyn_papd} vs {dyn_uda}");
+    }
+
+    #[test]
+    fn power_sublinear_in_scaling() {
+        // §V-C3: "power consumption doesn't go up linearly with scaling"
+        let s1 = estimate(variant(381, NumberForm::Standard, true), 1);
+        let s2 = estimate(variant(381, NumberForm::Standard, true), 2);
+        assert!(s2.active_w < 1.2 * s1.active_w, "{} vs {}", s2.active_w, s1.active_w);
+    }
+
+    #[test]
+    fn scaling_improves_perf_per_watt_near_2x() {
+        // Fig. 5/7: "higher scaling factor of 2 is almost giving a power
+        // efficiency that is 2x better"
+        use super::super::{CurveId, SabConfig, SabModel};
+        let m = 32_000_000u64;
+        let v = variant(381, NumberForm::Standard, true);
+        let tp = |s: u32| {
+            let t = SabModel::new(SabConfig::paper(CurveId::Bls12381, s)).time_msm(m);
+            throughput_per_watt(t.m_msm_pps(m), estimate(v, s).active_w)
+        };
+        let ratio = tp(2) / tp(1);
+        assert!((1.6..2.1).contains(&ratio), "perf/W ratio {ratio}");
+    }
+}

@@ -1,0 +1,105 @@
+//! IS-RBAM: the Independently-Scalable Recursive Bucket-Array-Manager
+//! (§IV-A) — reduction-phase timing.
+//!
+//! The classic Algorithm-2 running sum is a chain of 2·(2^k − 1) point adds
+//! in which *every add depends on the previous one*: on a pipelined UDA it
+//! pays full latency per add. IS-RBAM re-expresses Σ b·B[b] as a second,
+//! tiny bucket MSM over k₂-bit sub-slices of the bucket index: the fills
+//! are independent (II=1), and only (k/k₂) running sums of 2^k₂ buckets
+//! each remain serial. Its instance count (`rbam_units`) scales
+//! independently of the BAM — the "Independently Scalable" in the name.
+
+use super::uda::UdaPipe;
+
+/// Reduction strategies the model can time (mirrors `msm::Reduction`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReductionKind {
+    RunningSum,
+    Recursive { k2: u32 },
+}
+
+/// Reduction-phase model for one window of 2^k buckets.
+#[derive(Clone, Copy, Debug)]
+pub struct RbamModel {
+    pub pipe: UdaPipe,
+    /// Parallel IS-RBAM instances (reduces the serial sections of distinct
+    /// windows concurrently).
+    pub rbam_units: u32,
+}
+
+impl RbamModel {
+    /// Cycles to reduce one window.
+    pub fn window_cycles(&self, k: u32, kind: ReductionKind) -> u64 {
+        let buckets = 1u64 << k;
+        match kind {
+            ReductionKind::RunningSum => {
+                // 2·(2^k − 1) fully serial adds
+                self.pipe.serial_cycles(2 * (buckets - 1))
+            }
+            ReductionKind::Recursive { k2 } => {
+                let k2 = k2.clamp(1, k);
+                let sub_windows = k.div_ceil(k2) as u64;
+                // fills: each nonzero bucket feeds `sub_windows` second-level
+                // buckets, pipelined at II=1
+                let fills = self.pipe.stream_cycles(buckets * sub_windows, 0);
+                // serial tails: one short running sum per sub-window plus k
+                // Horner doublings
+                let serial = self
+                    .pipe
+                    .serial_cycles(sub_windows * 2 * ((1u64 << k2) - 1) + k as u64);
+                fills + serial
+            }
+        }
+    }
+
+    /// Cycles to reduce all `windows` windows, with `rbam_units` working
+    /// window-parallel.
+    pub fn total_cycles(&self, k: u32, windows: u32, kind: ReductionKind) -> u64 {
+        let per = self.window_cycles(k, kind);
+        let rounds = windows.div_ceil(self.rbam_units.max(1)) as u64;
+        per * rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::resources::NumberForm;
+    use super::*;
+
+    fn model(units: u32) -> RbamModel {
+        RbamModel { pipe: UdaPipe::unified(NumberForm::Standard), rbam_units: units }
+    }
+
+    #[test]
+    fn recursive_crushes_running_sum() {
+        // k=12: running sum = 2·4095·270 ≈ 2.2M cycles/window;
+        // IS-RBAM(k2=6) ≈ 8192 fills + short serial ≈ 0.05M
+        let m = model(1);
+        let rs = m.window_cycles(12, ReductionKind::RunningSum);
+        let rec = m.window_cycles(12, ReductionKind::Recursive { k2: 6 });
+        assert!(rs > 2_000_000);
+        assert!(rec < rs / 10, "recursive {rec} vs running-sum {rs}");
+    }
+
+    #[test]
+    fn k2_tradeoff_has_interior_optimum() {
+        // tiny k2 → many sub-windows (fill-heavy); k2=k → degenerate
+        // running sum. Some interior k2 must beat both ends.
+        let m = model(1);
+        let ends = m
+            .window_cycles(12, ReductionKind::Recursive { k2: 1 })
+            .min(m.window_cycles(12, ReductionKind::Recursive { k2: 12 }));
+        let best = (2..12)
+            .map(|k2| m.window_cycles(12, ReductionKind::Recursive { k2 }))
+            .min()
+            .unwrap();
+        assert!(best < ends);
+    }
+
+    #[test]
+    fn units_scale_reduction() {
+        let one = model(1).total_cycles(12, 32, ReductionKind::Recursive { k2: 6 });
+        let four = model(4).total_cycles(12, 32, ReductionKind::Recursive { k2: 6 });
+        assert_eq!(one / four, 4);
+    }
+}

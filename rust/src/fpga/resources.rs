@@ -1,0 +1,221 @@
+//! Resource model: ALM / DSP / M20K for every design variant the paper
+//! builds (Tables IV, V, VII).
+//!
+//! Structure (§IV-B): a point processor is `modmuls × modmul(bits, form)`
+//! plus wiring; the system adds the shell/SPS/IS-RBAM/DNA overhead and S
+//! BAM instances. The per-modmul and overhead coefficients are calibrated
+//! in [`super::calib`]; this module is the composition.
+
+use super::calib;
+
+/// Number representation of the datapath (§IV-B4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NumberForm {
+    /// Montgomery multipliers: 3 integer multipliers per modmul.
+    Montgomery,
+    /// "Standard" (non-Montgomery) with LUT-based reduction: 1 integer
+    /// multiplier per modmul + M20K tables.
+    Standard,
+}
+
+/// A point-processor design point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DesignVariant {
+    /// Field width (254 = BN128, 381 = BLS12-381).
+    pub bits: u32,
+    pub form: NumberForm,
+    /// Unified double-add pipeline (true) vs separate PA + folded PD.
+    pub unified: bool,
+}
+
+impl DesignVariant {
+    pub fn label(&self) -> String {
+        let arch = if self.unified { "UDA" } else { "PA+PD" };
+        let form = match self.form {
+            NumberForm::Montgomery => "Montgomery",
+            NumberForm::Standard => "Standard",
+        };
+        format!("{arch}-{}-{form}", self.bits)
+    }
+}
+
+/// A resource vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub alms: f64,
+    pub dsps: f64,
+    pub m20ks: f64,
+}
+
+impl Resources {
+    fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            alms: self.alms + o.alms,
+            dsps: self.dsps + o.dsps,
+            m20ks: self.m20ks + o.m20ks,
+        }
+    }
+
+    fn scale(&self, k: f64) -> Resources {
+        Resources { alms: self.alms * k, dsps: self.dsps * k, m20ks: self.m20ks * k }
+    }
+}
+
+/// The resource model (stateless; a struct so alternative calibrations can
+/// be injected in ablation benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResourceModel;
+
+impl ResourceModel {
+    /// One modular multiplier instance.
+    pub fn modmul(&self, bits: u32, form: NumberForm) -> Resources {
+        let mont = form == NumberForm::Montgomery;
+        let int_muls = if mont { 3.0 } else { 1.0 };
+        Resources {
+            alms: calib::alm_per_modmul(bits, mont),
+            dsps: int_muls * calib::dsp_per_intmul(bits, mont),
+            m20ks: calib::m20k_per_modmul(bits, mont),
+        }
+    }
+
+    /// A complete point processor (Table V rows).
+    pub fn point_processor(&self, v: DesignVariant) -> Resources {
+        let mm = self.modmul(v.bits, v.form);
+        if v.unified {
+            mm.scale(calib::UDA_MODMULS as f64)
+        } else {
+            // Separate fully-pipelined PA + folded PD — Table IV blocks
+            // verbatim (built only at 254-bit Montgomery; other widths
+            // scale by the modmul area ratio).
+            let scale_vs_254mont = mm.alms / self.modmul(254, NumberForm::Montgomery).alms;
+            Resources {
+                alms: (calib::PA_BLOCK_ALM + calib::PD_BLOCK_ALM) * scale_vs_254mont,
+                dsps: (calib::PA_BLOCK_DSP + calib::PD_BLOCK_DSP) * scale_vs_254mont,
+                m20ks: (calib::PA_BLOCK_M20K + calib::PD_BLOCK_M20K) * scale_vs_254mont,
+            }
+        }
+    }
+
+    /// Full system build (Table VII rows): processor + shell + S × BAM.
+    pub fn system(&self, v: DesignVariant, s: u32) -> Resources {
+        let proc = self.point_processor(v);
+        let shell = Resources {
+            alms: calib::SHELL_ALM,
+            dsps: 0.0,
+            m20ks: calib::SHELL_M20K,
+        };
+        let bam = Resources {
+            alms: calib::bam_alm(v.bits),
+            dsps: 0.0,
+            m20ks: calib::bam_m20k(v.bits),
+        };
+        proc.add(&shell).add(&bam.scale(s as f64))
+    }
+
+    /// System fmax (Hz) under the congestion model, clamped to the paper's
+    /// observed 334–367 MHz range.
+    pub fn system_fmax(&self, v: DesignVariant, s: u32) -> f64 {
+        let r = self.system(v, s);
+        let util = r.alms / super::device::IA840F.alms as f64;
+        (calib::SYS_FMAX_A_HZ - calib::SYS_FMAX_B_HZ * util)
+            .min(calib::SYS_FMAX_CEIL_HZ)
+            .max(calib::SYS_FMAX_FLOOR_HZ)
+    }
+}
+
+/// The four Table V variants in paper order.
+pub const TABLE_V_VARIANTS: [DesignVariant; 4] = [
+    DesignVariant { bits: 254, form: NumberForm::Montgomery, unified: false },
+    DesignVariant { bits: 254, form: NumberForm::Montgomery, unified: true },
+    DesignVariant { bits: 254, form: NumberForm::Standard, unified: true },
+    DesignVariant { bits: 381, form: NumberForm::Standard, unified: true },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(got: f64, want: f64, tol: f64) -> bool {
+        (got - want).abs() / want <= tol
+    }
+
+    #[test]
+    fn table_v_alm_within_tolerance() {
+        let m = ResourceModel;
+        let want = [372_700.0, 290_400.0, 207_000.0, 419_000.0];
+        for (v, w) in TABLE_V_VARIANTS.iter().zip(want) {
+            let r = m.point_processor(*v);
+            assert!(close(r.alms, w, 0.06), "{}: alm {} vs {w}", v.label(), r.alms);
+        }
+    }
+
+    #[test]
+    fn table_v_dsp_matches() {
+        let m = ResourceModel;
+        let want = [5005.0, 5400.0, 1975.0, 4425.0];
+        for (v, w) in TABLE_V_VARIANTS.iter().zip(want) {
+            let r = m.point_processor(*v);
+            assert!(close(r.dsps, w, 0.05), "{}: dsp {} vs {w}", v.label(), r.dsps);
+        }
+    }
+
+    #[test]
+    fn table_vii_system_alm_within_tolerance() {
+        let m = ResourceModel;
+        let cases = [
+            (DesignVariant { bits: 254, form: NumberForm::Standard, unified: true }, 2, 571_408.0),
+            (DesignVariant { bits: 254, form: NumberForm::Standard, unified: true }, 1, 537_348.0),
+            (DesignVariant { bits: 381, form: NumberForm::Standard, unified: true }, 2, 831_972.0),
+            (DesignVariant { bits: 381, form: NumberForm::Standard, unified: true }, 1, 770_561.0),
+        ];
+        for (v, s, want) in cases {
+            let r = m.system(v, s);
+            assert!(close(r.alms, want, 0.03), "{} S={s}: {} vs {want}", v.label(), r.alms);
+        }
+    }
+
+    #[test]
+    fn uda_standard_saves_dsps_63_percent() {
+        // §IV-B4: "63% reduction of DSP resources" Montgomery → standard.
+        let m = ResourceModel;
+        let mont = m.point_processor(DesignVariant {
+            bits: 254,
+            form: NumberForm::Montgomery,
+            unified: true,
+        });
+        let std = m.point_processor(DesignVariant {
+            bits: 254,
+            form: NumberForm::Standard,
+            unified: true,
+        });
+        let saving = 1.0 - std.dsps / mont.dsps;
+        assert!((saving - 0.63).abs() < 0.03, "saving {saving}");
+    }
+
+    #[test]
+    fn uda_saves_alms_vs_papd() {
+        // §IV-B3: "ALM utilization was also improved by roughly 22%".
+        let m = ResourceModel;
+        let papd = m.point_processor(TABLE_V_VARIANTS[0]);
+        let uda = m.point_processor(TABLE_V_VARIANTS[1]);
+        let saving = 1.0 - uda.alms / papd.alms;
+        assert!((saving - 0.22).abs() < 0.04, "saving {saving}");
+    }
+
+    #[test]
+    fn fmax_in_paper_range() {
+        let m = ResourceModel;
+        for v in TABLE_V_VARIANTS {
+            for s in [1, 2] {
+                let f = m.system_fmax(v, s);
+                assert!((334e6..=367e6).contains(&f), "{} S={s}: {f}", v.label());
+            }
+        }
+        // BLS S=2 specifically ≈ 351 MHz (§V-C1)
+        let f = m.system_fmax(
+            DesignVariant { bits: 381, form: NumberForm::Standard, unified: true },
+            2,
+        );
+        assert!((f - 351e6).abs() < 8e6, "{f}");
+    }
+}

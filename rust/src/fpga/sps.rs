@@ -1,0 +1,82 @@
+//! Scalar-Point-Streamer model (§IV-A, Fig. 2 "layered memory channels").
+//!
+//! Base points live in FPGA DDR (moved once per proof lifetime); every MSM
+//! call streams them back through the BAM once per scalar window. Each BAM
+//! instance is fed by its own DDR channel group, so stream bandwidth scales
+//! with S — this is what makes Fig. 6's throughput scale linearly with S
+//! even in the stream-bound regime.
+
+use super::calib;
+use super::CurveId;
+
+/// Streaming model.
+#[derive(Clone, Copy, Debug)]
+pub struct SpsModel {
+    /// Effective bytes/s per channel group (one BAM's feed).
+    pub bw_per_group: f64,
+    /// Number of groups in use (= scaling factor S, capped by the card).
+    pub groups: u32,
+}
+
+impl SpsModel {
+    pub fn new(s: u32) -> SpsModel {
+        SpsModel {
+            bw_per_group: calib::DDR_BW_PER_GROUP,
+            groups: s.min(super::device::IA840F.ddr_groups),
+        }
+    }
+
+    /// Seconds to stream the point set once (one window pass), split
+    /// across groups.
+    pub fn pass_seconds(&self, curve: CurveId, m: u64) -> f64 {
+        let bytes = m as f64 * curve.affine_bytes() as f64;
+        bytes / (self.bw_per_group * self.groups as f64)
+    }
+
+    /// Seconds of DDR streaming for a full MSM (all windows).
+    pub fn msm_stream_seconds(&self, curve: CurveId, m: u64) -> f64 {
+        self.pass_seconds(curve, m) * curve.hw_windows() as f64
+    }
+
+    /// One-time point upload over PCIe (per point-set, not per call).
+    pub fn upload_seconds(&self, curve: CurveId, m: u64) -> f64 {
+        m as f64 * curve.affine_bytes() as f64 / calib::PCIE_BW
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_time_scales_with_windows_and_size() {
+        let s = SpsModel::new(1);
+        let t1 = s.msm_stream_seconds(CurveId::Bn254, 1 << 20);
+        let t2 = s.msm_stream_seconds(CurveId::Bn254, 1 << 21);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        // BLS streams more bytes over more windows
+        assert!(
+            s.msm_stream_seconds(CurveId::Bls12381, 1 << 20)
+                > s.msm_stream_seconds(CurveId::Bn254, 1 << 20)
+        );
+    }
+
+    #[test]
+    fn bandwidth_scales_with_s() {
+        let t1 = SpsModel::new(1).msm_stream_seconds(CurveId::Bls12381, 64_000_000);
+        let t2 = SpsModel::new(2).msm_stream_seconds(CurveId::Bls12381, 64_000_000);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_ix_anchor_64m_bls_s2() {
+        // the calibration anchor: ≈ 15.0 s stream-bound
+        let t = SpsModel::new(2).msm_stream_seconds(CurveId::Bls12381, 64_000_000);
+        assert!((t - 15.03).abs() < 0.5, "stream {t}");
+    }
+
+    #[test]
+    fn groups_capped_by_card() {
+        assert_eq!(SpsModel::new(64).groups, super::super::device::IA840F.ddr_groups);
+    }
+}

@@ -1,0 +1,91 @@
+//! UDA pipeline unit model (§IV-B3, Fig. 3).
+//!
+//! Fully pipelined: initiation interval 1 (one point operation per system
+//! clock), latency L cycles (270 standard-form, 425 Montgomery). The
+//! PA/PD distinction costs nothing — the join-mux absorbs it — which is
+//! exactly why the paper moved off the separate folded-PD design whose
+//! 1/650 throughput occasionally throttled the whole system (§IV-B2/B3).
+
+use super::resources::NumberForm;
+
+/// Pipeline description of one point-processor configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct UdaPipe {
+    /// Initiation interval in cycles (1 for the pipelined designs).
+    pub ii: u64,
+    /// Result latency in cycles.
+    pub latency: u64,
+    /// Folded-PD throughput penalty: II for doubles (PA+PD design only).
+    pub pd_ii: u64,
+}
+
+impl UdaPipe {
+    /// The unified pipeline of a given number form.
+    pub fn unified(form: NumberForm) -> UdaPipe {
+        UdaPipe {
+            ii: 1,
+            latency: match form {
+                NumberForm::Standard => super::calib::UDA_LATENCY_STD,
+                NumberForm::Montgomery => super::calib::UDA_LATENCY_MONT,
+            },
+            pd_ii: 1,
+        }
+    }
+
+    /// The initial separate PA + folded PD architecture (§IV-B2): adds are
+    /// pipelined; doubles recirculate through a single multiplier for ~650
+    /// cycles (Table IV: "approx 1/650").
+    pub fn papd() -> UdaPipe {
+        UdaPipe { ii: 1, latency: super::calib::UDA_LATENCY_MONT, pd_ii: 650 }
+    }
+
+    /// Cycles to issue a stream of `adds` independent additions and
+    /// `doubles` doublings, fully overlapped (throughput view).
+    pub fn stream_cycles(&self, adds: u64, doubles: u64) -> u64 {
+        adds * self.ii + doubles * self.pd_ii
+    }
+
+    /// Cycles for a *serial dependency chain* of `n` operations (each must
+    /// wait for the previous result): n × latency. This is what makes the
+    /// classic bucket running-sum expensive in hardware and motivates
+    /// IS-RBAM.
+    pub fn serial_cycles(&self, n: u64) -> u64 {
+        n * self.latency.max(self.ii)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unified_ii_one() {
+        let p = UdaPipe::unified(NumberForm::Standard);
+        assert_eq!(p.stream_cycles(1000, 500), 1500);
+        assert_eq!(p.latency, 270);
+    }
+
+    #[test]
+    fn montgomery_longer_latency() {
+        let m = UdaPipe::unified(NumberForm::Montgomery);
+        let s = UdaPipe::unified(NumberForm::Standard);
+        assert!(m.latency > s.latency);
+        assert_eq!(m.latency, 425);
+    }
+
+    #[test]
+    fn papd_doubles_throttle() {
+        // the §IV-B2 bottleneck: doubles at 1/650
+        let p = UdaPipe::papd();
+        assert_eq!(p.stream_cycles(0, 10), 6500);
+        assert_eq!(p.stream_cycles(10, 0), 10);
+    }
+
+    #[test]
+    fn serial_chain_costs_latency_per_op() {
+        let p = UdaPipe::unified(NumberForm::Standard);
+        assert_eq!(p.serial_cycles(100), 27_000);
+        // serial is 270× worse than streamed at II=1
+        assert_eq!(p.serial_cycles(100) / p.stream_cycles(100, 0), 270);
+    }
+}

@@ -1,0 +1,39 @@
+//! # ifzkp — if-ZKP reproduction
+//!
+//! Full-system reproduction of *"if-ZKP: Intel FPGA-Based Acceleration of
+//! Zero Knowledge Proofs"* (Butt et al., Intel, 2024): FPGA acceleration of
+//! the multi-scalar multiplication (MSM) at the heart of zk-SNARK provers,
+//! for the BN254 ("BN128") and BLS12-381 curves in Jacobian coordinates.
+//!
+//! The crate is organised in three layers (see `DESIGN.md`):
+//!
+//! * **substrates** — finite fields ([`ff`]), elliptic curves ([`ec`]),
+//!   MSM algorithms ([`msm`]), NTT ([`ntt`]) and a Groth16-shaped prover
+//!   ([`snark`]) — everything the paper's evaluation depends on, built from
+//!   scratch;
+//! * **device models** — a cycle-level model of the paper's SAB/UDA Agilex
+//!   design ([`fpga`]) plus the CPU/GPU baselines ([`baseline`]);
+//! * **runtime + coordinator** — a PJRT-backed batched point-operation
+//!   engine ([`runtime`]) that executes the AOT-compiled JAX/Pallas UDA
+//!   datapath, orchestrated by a serving-style coordinator
+//!   ([`coordinator`]).
+//!
+//! The [`report`] module regenerates every table and figure of the paper's
+//! evaluation section; `rust/benches/` contains one harness per table and
+//! figure.
+
+pub mod util;
+pub mod config;
+pub mod ff;
+pub mod ec;
+pub mod msm;
+pub mod ntt;
+pub mod snark;
+pub mod fpga;
+pub mod baseline;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

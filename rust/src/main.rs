@@ -1,0 +1,309 @@
+//! `ifzkp` — launcher CLI (hand-rolled arg parsing; clap is not in the
+//! offline dependency set).
+//!
+//! ```text
+//! ifzkp msm     --curve bn254|bls12_381 --size N [--backend native|sim|engine] [--threads T]
+//! ifzkp prove   --constraints N
+//! ifzkp serve   [--config serve.toml] [--jobs N] [--size N]
+//! ifzkp sim     --curve ... [--size N] [--scaling S]
+//! ifzkp tables  [--id 1|2|4|7|8|9|10|all]
+//! ifzkp figures [--id 4|5|6|7|8|all]
+//! ifzkp info
+//! ```
+
+use ifzkp::baseline::cpu;
+use ifzkp::ec::{points, Bls12381G1, Bn254G1, CurveParams};
+use ifzkp::fpga::{CurveId, SabConfig, SabModel};
+use ifzkp::msm::{self, MsmConfig};
+use ifzkp::report::{figures, tables};
+use ifzkp::util::{human_count, human_secs, Stopwatch};
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn curve_id(name: &str) -> CurveId {
+    match name {
+        "bn254" | "bn128" => CurveId::Bn254,
+        "bls12_381" | "bls12-381" | "bls" => CurveId::Bls12381,
+        other => {
+            eprintln!("unknown curve {other:?} (use bn254 | bls12_381)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_msm(args: &Args) -> anyhow::Result<()> {
+    let curve = curve_id(&args.get("curve", "bn254"));
+    let size = args.get_usize("size", 1 << 14);
+    let backend = args.get("backend", "native");
+    let threads = args.get_usize("threads", msm::parallel::default_threads());
+    println!("MSM: curve={} size={} backend={backend}", curve.name(), human_count(size as u64));
+
+    fn run_native<C: CurveParams>(size: usize, threads: usize) -> f64 {
+        let w = points::workload::<C>(size, 1);
+        let sw = Stopwatch::start();
+        let out = msm::parallel::msm(&w.points, &w.scalars, &MsmConfig::default(), threads);
+        let t = sw.secs();
+        std::hint::black_box(out);
+        t
+    }
+
+    match backend.as_str() {
+        "native" => {
+            let t = match curve {
+                CurveId::Bn254 => run_native::<Bn254G1>(size, threads),
+                CurveId::Bls12381 => run_native::<Bls12381G1>(size, threads),
+            };
+            println!(
+                "native ({threads} threads): {} ({:.3} M points/s)",
+                human_secs(t),
+                size as f64 / t / 1e6
+            );
+        }
+        "sim" => {
+            let s = args.get_usize("scaling", 2) as u32;
+            let model = SabModel::new(SabConfig::paper(curve, s));
+            let timing = model.time_msm(size as u64);
+            println!(
+                "modeled FPGA (S={s}): {} ({:.3} M points/s){}",
+                human_secs(timing.total_s()),
+                timing.m_msm_pps(size as u64),
+                if timing.stream_bound { " [stream-bound]" } else { "" }
+            );
+            println!(
+                "  transfer {:.4}s fill {:.4}s stream {:.4}s reduce {:.4}s combine {:.5}s",
+                timing.transfer_s, timing.fill_s, timing.stream_s, timing.reduce_s,
+                timing.combine_s
+            );
+        }
+        "engine" => {
+            if curve != CurveId::Bn254 {
+                anyhow::bail!("engine CLI path is wired for bn254 (see examples for bls)");
+            }
+            let ctx = ifzkp::runtime::PjrtContext::cpu()?;
+            let manifest =
+                ifzkp::runtime::ArtifactManifest::load(&ifzkp::runtime::artifact::default_dir())?;
+            let sw = Stopwatch::start();
+            let engine = ifzkp::runtime::UdaEngine::<Bn254G1>::load(&ctx, &manifest)?;
+            println!("engine compiled in {}", human_secs(sw.secs()));
+            let w = points::workload::<Bn254G1>(size, 1);
+            let cfg = MsmConfig { window_bits: 8, reduction: Default::default() };
+            let sw = Stopwatch::start();
+            let (out, stats) =
+                ifzkp::runtime::msm_engine::msm_engine(&engine, &w.points, &w.scalars, &cfg)?;
+            let t = sw.secs();
+            let want = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+            anyhow::ensure!(out.eq_point(&want), "engine result mismatch!");
+            println!(
+                "engine MSM: {} — verified vs native; {} engine ops in {} batches (occ {:.2})",
+                human_secs(t),
+                stats.engine_ops,
+                stats.engine_batches,
+                stats.mean_occupancy
+            );
+        }
+        other => anyhow::bail!("unknown backend {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let jobs = args.get_usize("jobs", 32);
+    let size = args.get_usize("size", 2048);
+    let cfg_path = args.get("config", "");
+    let mut queue_capacity = 256usize;
+    if !cfg_path.is_empty() {
+        let cfg = ifzkp::config::load(std::path::Path::new(&cfg_path))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        queue_capacity = cfg.get_int("serve", "queue_capacity", 256) as usize;
+    }
+    use ifzkp::coordinator::{Coordinator, CoordinatorConfig, DeviceDesc, PointSetRegistry};
+    use std::sync::Arc;
+    let mut registry = PointSetRegistry::<Bn254G1>::new();
+    let ps = registry.register(points::generate_points_walk::<Bn254G1>(size, 11));
+    let coord = Coordinator::start(
+        CoordinatorConfig { queue_capacity, ..Default::default() },
+        vec![
+            DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 30),
+            DeviceDesc::<Bn254G1>::native(2),
+        ],
+        registry,
+    );
+    let sw = Stopwatch::start();
+    let mut rxs = Vec::new();
+    for i in 0..jobs {
+        let scalars = Arc::new(points::generate_scalars(size, 254, 1000 + i as u64));
+        rxs.push(coord.submit(ps, scalars)?.1);
+    }
+    for rx in rxs {
+        rx.recv()?;
+    }
+    let wall = sw.secs();
+    let snap = coord.counters.snapshot();
+    println!(
+        "{} jobs in {} — {:.1} jobs/s, hit rate {:.0}%, p99 {}",
+        snap.completed,
+        human_secs(wall),
+        snap.completed as f64 / wall,
+        100.0 * snap.hit_rate(),
+        human_secs(coord.latency.quantile_secs(0.99))
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let curve = curve_id(&args.get("curve", "bls12_381"));
+    let s = args.get_usize("scaling", 2) as u32;
+    let model = SabModel::new(SabConfig::paper(curve, s));
+    println!("SAB model: {} S={s} fmax={:.0}MHz", curve.name(), model.fmax_hz / 1e6);
+    let size = args.get_usize("size", 0);
+    let sizes: Vec<u64> = if size > 0 {
+        vec![size as u64]
+    } else {
+        vec![1_000, 10_000, 100_000, 1_000_000, 8_000_000, 64_000_000]
+    };
+    for m in sizes {
+        let t = model.time_msm(m);
+        println!(
+            "m={:>6}: total {:>10} throughput {:>7.3} M-PPS{}",
+            human_count(m),
+            human_secs(t.total_s()),
+            t.m_msm_pps(m),
+            if t.stream_bound { " [stream]" } else { " [compute]" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> anyhow::Result<()> {
+    let id = args.get("id", "all");
+    let all = id == "all";
+    if all || id == "1" {
+        println!("{}", tables::table1(1 << 12, 20240710));
+    }
+    if all || id == "2" || id == "3" {
+        println!("{}", tables::table2_3(512, 20240710));
+    }
+    if all || id == "4" || id == "5" {
+        println!("{}", tables::table4_5());
+    }
+    if all || id == "7" {
+        println!("{}", tables::table7());
+    }
+    if all || id == "8" {
+        println!("{}", tables::table8());
+    }
+    if all || id == "9" {
+        println!("{}", tables::table9(args.get_usize("cpu-measure", 1 << 16)));
+    }
+    if all || id == "10" {
+        println!("{}", tables::table10());
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let id = args.get("id", "all");
+    let all = id == "all";
+    if all || id == "4" {
+        println!("{}", figures::fig4_cpu_throughput());
+    }
+    if all || id == "5" {
+        println!("{}", figures::fig5_7_power_normalized(CurveId::Bn254));
+    }
+    if all || id == "6" {
+        println!("{}", figures::fig6_fpga_throughput());
+    }
+    if all || id == "7" {
+        println!("{}", figures::fig5_7_power_normalized(CurveId::Bls12381));
+    }
+    if all || id == "8" {
+        println!("{}", figures::fig8_fpga_vs_gpu());
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("ifzkp — reproduction of 'if-ZKP: Intel FPGA-Based Acceleration of Zero Knowledge Proofs'");
+    println!("curves   : BN254 (BN128), BLS12-381 — Weierstrass, Jacobian coordinates");
+    println!("device   : {} (modeled)", ifzkp::fpga::device::IA840F.name);
+    let dir = ifzkp::runtime::artifact::default_dir();
+    match ifzkp::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} (batch={})", dir.display(), m.batch);
+            for e in &m.entries {
+                println!("  - {} ({}, {} limbs)", e.file, e.curve, e.nlimb16);
+            }
+        }
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    let meas = cpu::measure_serial::<Bn254G1>(4096, 1);
+    println!("host MSM : {:.3} M points/s (BN254, serial, m=4096)", meas.mpps);
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ifzkp <msm|prove|serve|sim|tables|figures|info> [flags]\n\
+         see rust/src/main.rs header for per-command flags"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    if let Some(pos) = argv.iter().position(|a| a == "--log-level") {
+        if let Some(l) = argv.get(pos + 1).and_then(|v| ifzkp::util::log::parse_level(v)) {
+            ifzkp::util::log::set_level(l);
+        }
+    }
+    let args = Args::parse(&argv[1..]);
+    match argv[0].as_str() {
+        "msm" => cmd_msm(&args),
+        "prove" => {
+            let n = args.get_usize("constraints", 1 << 12);
+            println!("{}", tables::table1(n, 20240710));
+            Ok(())
+        }
+        "serve" => cmd_serve(&args),
+        "sim" => cmd_sim(&args),
+        "tables" => cmd_tables(&args),
+        "figures" => cmd_figures(&args),
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,366 @@
+//! Batch-affine bucket accumulation — the §Perf/L3 optimization.
+//!
+//! The bucket-fill phase is mixed Jacobian+affine addition (7M+4S each).
+//! Keeping the buckets **affine** and batching one add per bucket per round
+//! lets all the slope inversions share a single Montgomery-trick batch
+//! inversion: amortized cost ≈ 6M per add (λ = Δy/Δx via shared inversion,
+//! then 1S+2M to finish) instead of 11M — the same trick production MSM
+//! libraries (gnark, arkworks, bellman) use, and a faithful software
+//! echo of the paper's BAM conflict rule: one in-flight op per bucket per
+//! round, conflicts replay next round.
+//!
+//! Edge lanes (doubling: same x same y; cancellation: same x opposite y;
+//! first touch: empty bucket) are resolved in the same round without
+//! inversions.
+
+use super::pippenger::{self, MsmConfig, Reduction};
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+use crate::ff::Field;
+
+/// One window's buckets, affine with explicit emptiness.
+struct AffineBuckets<C: CurveParams> {
+    slots: Vec<Option<Affine<C>>>,
+}
+
+impl<C: CurveParams> AffineBuckets<C> {
+    fn new(n: usize) -> Self {
+        AffineBuckets { slots: (0..n).map(|_| None).collect() }
+    }
+
+    /// Fold all buckets into Jacobian form for the reduction phase.
+    fn into_jacobian(self) -> Vec<Jacobian<C>> {
+        self.slots
+            .into_iter()
+            .map(|s| s.map(|a| a.to_jacobian()).unwrap_or_else(Jacobian::infinity))
+            .collect()
+    }
+}
+
+/// Affine addition state for one batched lane.
+enum Lane<C: CurveParams> {
+    /// generic add: needs λ = (y2−y1)/(x2−x1)
+    Add { bucket: usize, p: Affine<C>, q: Affine<C> },
+    /// doubling: needs λ = 3x²/(2y)
+    Double { bucket: usize, p: Affine<C> },
+}
+
+/// Below this many lanes a round's shared Fermat inversion (≈380 modmuls)
+/// costs more than it saves — finish such tails on the Jacobian path.
+/// (Degenerate example: the top scalar window has only a couple of bits ⇒
+/// 3 buckets ⇒ thousands of single-lane rounds without this fallback.)
+const MIN_BATCH: usize = 48;
+
+/// Fill one window's buckets with batch-affine adds, returning Jacobian
+/// buckets ready for reduction.
+///
+/// `ops` yields (bucket, point). Rounds: at most one op per bucket; all
+/// inversions in a round share one batch inversion. Once a round falls
+/// under [`MIN_BATCH`] lanes, the remaining (conflict-tail) ops finish as
+/// ordinary mixed-Jacobian adds.
+fn fill_batch_affine<C: CurveParams>(
+    nbuckets: usize,
+    ops: impl Iterator<Item = (usize, Affine<C>)>,
+) -> Vec<Jacobian<C>> {
+    let mut buckets = AffineBuckets::<C>::new(nbuckets);
+    let mut pending: Vec<(usize, Affine<C>)> = ops.collect();
+    let mut deferred: Vec<(usize, Affine<C>)> = Vec::new();
+    let mut in_round = vec![false; nbuckets];
+
+    while !pending.is_empty() {
+        let mut lanes: Vec<Lane<C>> = Vec::new();
+        for (b, p) in pending.drain(..) {
+            if in_round[b] {
+                deferred.push((b, p)); // BAM conflict FIFO
+                continue;
+            }
+            match buckets.slots[b] {
+                None => {
+                    // first touch: free
+                    buckets.slots[b] = Some(p);
+                }
+                Some(q) => {
+                    in_round[b] = true;
+                    if q.x == p.x {
+                        if q.y == p.y {
+                            lanes.push(Lane::Double { bucket: b, p });
+                        } else {
+                            // cancellation: bucket empties, no arithmetic
+                            buckets.slots[b] = None;
+                            in_round[b] = false;
+                        }
+                    } else {
+                        lanes.push(Lane::Add { bucket: b, p: q, q: p });
+                    }
+                }
+            }
+        }
+
+        if !lanes.is_empty() && lanes.len() < MIN_BATCH {
+            // Tail regime: finish everything on the Jacobian path.
+            let mut jac = buckets.into_jacobian();
+            for lane in lanes {
+                match lane {
+                    Lane::Add { bucket, q, .. } => {
+                        // `q` is the incoming point; the bucket value is
+                        // already inside jac[bucket].
+                        jac[bucket] = jac[bucket].add_mixed(&q);
+                    }
+                    Lane::Double { bucket, .. } => {
+                        jac[bucket] = jac[bucket].double();
+                    }
+                }
+            }
+            for (b, p) in deferred.drain(..).chain(pending.drain(..)) {
+                jac[b] = jac[b].add_mixed(&p);
+            }
+            return jac;
+        }
+
+        if !lanes.is_empty() {
+            // batch inversion over every lane's denominator
+            let denoms: Vec<C::Base> = lanes
+                .iter()
+                .map(|l| match l {
+                    Lane::Add { p, q, .. } => q.x.sub(&p.x),
+                    Lane::Double { p, .. } => p.y.double(),
+                })
+                .collect();
+            let invs = batch_invert(&denoms);
+            for (lane, dinv) in lanes.into_iter().zip(invs) {
+                match lane {
+                    Lane::Add { bucket, p, q } => {
+                        let lambda = q.y.sub(&p.y).mul(&dinv);
+                        let x3 = lambda.square().sub(&p.x).sub(&q.x);
+                        let y3 = lambda.mul(&p.x.sub(&x3)).sub(&p.y);
+                        buckets.slots[bucket] = Some(Affine::new(x3, y3));
+                        in_round[bucket] = false;
+                    }
+                    Lane::Double { bucket, p } => {
+                        // λ = 3x² / 2y (a = 0)
+                        let xx = p.x.square();
+                        let lambda = xx.double().add(&xx).mul(&dinv);
+                        let x3 = lambda.square().sub(&p.x.double());
+                        let y3 = lambda.mul(&p.x.sub(&x3)).sub(&p.y);
+                        buckets.slots[bucket] = Some(Affine::new(x3, y3));
+                        in_round[bucket] = false;
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut pending, &mut deferred);
+    }
+    buckets.into_jacobian()
+}
+
+/// Montgomery-trick batch inversion (3 muls per element + 1 inversion).
+/// All inputs must be nonzero (guaranteed by lane construction).
+fn batch_invert<F: Field>(xs: &[F]) -> Vec<F> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let mut prefix = Vec::with_capacity(xs.len());
+    let mut acc = F::one();
+    for x in xs {
+        prefix.push(acc);
+        acc = acc.mul(x);
+    }
+    let mut inv = acc.inv().expect("nonzero denominators");
+    let mut out = vec![F::zero(); xs.len()];
+    for i in (0..xs.len()).rev() {
+        out[i] = inv.mul(&prefix[i]);
+        inv = inv.mul(&xs[i]);
+    }
+    out
+}
+
+/// Pippenger MSM with batch-affine bucket accumulation.
+pub fn msm<C: CurveParams>(
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+) -> Jacobian<C> {
+    assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+    if points.is_empty() {
+        return Jacobian::infinity();
+    }
+    let k = cfg.window_bits;
+    let windows = pippenger::window_count(C::SCALAR_BITS.min(256), k);
+    let mut result = Jacobian::<C>::infinity();
+    for j in (0..windows).rev() {
+        for _ in 0..k {
+            result = result.double();
+        }
+        let ops = points.iter().zip(scalars).filter_map(move |(p, s)| {
+            let b = pippenger::slice_bits(s, j * k, k) as usize;
+            if b != 0 && !p.infinity {
+                Some((b, *p))
+            } else {
+                None
+            }
+        });
+        let buckets = fill_batch_affine(1usize << k, ops);
+        let wj = match cfg.reduction {
+            Reduction::RunningSum => pippenger::reduce_running_sum(&buckets),
+            Reduction::Recursive { k2 } => pippenger::reduce_recursive(&buckets, k, k2.min(k)),
+        };
+        result = result.add(&wj);
+    }
+    result
+}
+
+/// Multi-threaded batch-affine MSM (window-parallel like
+/// [`super::parallel`]).
+pub fn msm_parallel<C: CurveParams>(
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+    threads: usize,
+) -> Jacobian<C> {
+    assert_eq!(points.len(), scalars.len());
+    if points.is_empty() {
+        return Jacobian::infinity();
+    }
+    let threads = threads.max(1);
+    let k = cfg.window_bits;
+    let windows = pippenger::window_count(C::SCALAR_BITS.min(256), k);
+    if threads == 1 || windows == 1 {
+        return msm(points, scalars, cfg);
+    }
+    let mut window_results = vec![Jacobian::<C>::infinity(); windows as usize];
+    std::thread::scope(|scope| {
+        let per = windows.div_ceil(threads as u32) as usize;
+        for (t, chunk) in window_results.chunks_mut(per).enumerate() {
+            let first = t * per;
+            scope.spawn(move || {
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    let j = (first + i) as u32;
+                    let ops = points.iter().zip(scalars).filter_map(move |(p, s)| {
+                        let b = pippenger::slice_bits(s, j * k, k) as usize;
+                        if b != 0 && !p.infinity {
+                            Some((b, *p))
+                        } else {
+                            None
+                        }
+                    });
+                    let buckets = fill_batch_affine(1usize << k, ops);
+                    *slot = match cfg.reduction {
+                        Reduction::RunningSum => pippenger::reduce_running_sum(&buckets),
+                        Reduction::Recursive { k2 } => {
+                            pippenger::reduce_recursive(&buckets, k, k2.min(k))
+                        }
+                    };
+                }
+            });
+        }
+    });
+    let mut result = Jacobian::<C>::infinity();
+    for wj in window_results.iter().rev() {
+        for _ in 0..k {
+            result = result.double();
+        }
+        result = result.add(wj);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, scalar, Bls12381G1, Bn254G1};
+    use crate::msm::naive;
+
+    #[test]
+    fn batch_invert_matches_individual() {
+        use crate::ff::FpBn254;
+        let mut rng = crate::util::rng::Rng::new(77);
+        let xs: Vec<FpBn254> = (0..17).map(|_| {
+            loop {
+                let x = FpBn254::random(&mut rng);
+                if !x.is_zero() {
+                    break x;
+                }
+            }
+        }).collect();
+        let invs = batch_invert(&xs);
+        for (x, i) in xs.iter().zip(&invs) {
+            assert_eq!(x.mul(i), FpBn254::one());
+        }
+        assert!(batch_invert::<FpBn254>(&[]).is_empty());
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let w = points::workload::<Bn254G1>(100, 881);
+        let want = naive::msm(&w.points, &w.scalars);
+        for k in [4u32, 8, 12] {
+            let cfg = MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 4 } };
+            let got = msm(&w.points, &w.scalars, &cfg);
+            assert!(got.eq_point(&want), "k={k}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_bls() {
+        let w = points::workload::<Bls12381G1>(64, 882);
+        let want = naive::msm(&w.points, &w.scalars);
+        let got = msm(&w.points, &w.scalars, &MsmConfig::default());
+        assert!(got.eq_point(&want));
+    }
+
+    #[test]
+    fn handles_duplicates_doubling_lanes() {
+        // many identical points in the same bucket force Double lanes
+        let g = crate::ec::Jacobian::<Bn254G1>::generator().to_affine();
+        let pts = vec![g; 40];
+        let scalars = vec![[5u64, 0, 0, 0]; 40]; // all in bucket 5
+        let want = naive::msm(&pts, &scalars);
+        let cfg = MsmConfig { window_bits: 4, reduction: Reduction::RunningSum };
+        let got = msm(&pts, &scalars, &cfg);
+        assert!(got.eq_point(&want));
+    }
+
+    #[test]
+    fn handles_cancellation_lanes() {
+        // P and −P with the same scalar cancel inside a bucket
+        let g = scalar::mul::<Bn254G1>(&crate::ec::Jacobian::generator(), &[9, 0, 0, 0])
+            .to_affine();
+        let pts = vec![g, g.neg(), g, g.neg(), g];
+        let scalars = vec![[3u64, 0, 0, 0]; 5];
+        let want = naive::msm(&pts, &scalars);
+        let got = msm(&pts, &scalars, &MsmConfig { window_bits: 4, reduction: Reduction::RunningSum });
+        assert!(got.eq_point(&want));
+        // net = 1·(3·G)
+        let check = scalar::mul::<Bn254G1>(&g.to_jacobian(), &[3, 0, 0, 0]);
+        assert!(got.eq_point(&check));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let w = points::workload::<Bn254G1>(256, 883);
+        let want = msm(&w.points, &w.scalars, &MsmConfig::default());
+        for t in [2usize, 4] {
+            let got = msm_parallel(&w.points, &w.scalars, &MsmConfig::default(), t);
+            assert!(got.eq_point(&want), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn uses_fewer_modmuls_than_jacobian_fill() {
+        // The win shows in the fill-dominated regime (m ≫ 2^k): ≈6M per
+        // add incl. the amortized batch inversion vs 11M+4S mixed-
+        // Jacobian. With m ≈ 2^k the bucket *reduction* dominates both
+        // variants equally and the ratio drifts toward 1 — that crossover
+        // is by design (measured in the hotpath bench).
+        let w = points::workload::<Bn254G1>(8192, 884);
+        let cfg = MsmConfig { window_bits: 8, reduction: Reduction::Recursive { k2: 6 } };
+        let (_, jac_ops) =
+            crate::ff::opcount::measure(|| pippenger::msm(&w.points, &w.scalars, &cfg));
+        let (_, aff_ops) = crate::ff::opcount::measure(|| msm(&w.points, &w.scalars, &cfg));
+        assert!(
+            (aff_ops.modmuls() as f64) < 0.8 * jac_ops.modmuls() as f64,
+            "batch-affine {} vs jacobian {} modmuls",
+            aff_ops.modmuls(),
+            jac_ops.modmuls()
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Multi-scalar multiplication: `R = Σ sᵢ·Pᵢ` (§II-E).
+//!
+//! The paper's subject. Implementations, in increasing sophistication:
+//!
+//! * [`naive`] — per-point double-and-add then accumulate: the Table II
+//!   baseline, O(m·N) point-ops;
+//! * [`pippenger`] — the Bucket Algorithm (Algorithm 2 / Pippenger [21])
+//!   over k-bit scalar slices, with **two bucket-reduction strategies**:
+//!   the classic serial running sum, and the paper's novel **recursive
+//!   bucket reduction (IS-RBAM, §IV-A)** which converts the latency-bound
+//!   running sum into pipeline-friendly bucket fills — identical results,
+//!   different op/latency profile (the FPGA model exploits the
+//!   difference);
+//! * [`parallel`] — multi-threaded Pippenger (windows fan out across
+//!   threads; the software analogue of replicated BAM units);
+//! * [`batch_affine`] — bucket fills with shared batch inversion (≈6M per
+//!   add instead of 11M): the §Perf/L3 optimization, also the software
+//!   echo of the BAM's one-op-per-bucket-per-round conflict rule.
+//!
+//! All variants are bit-exact against each other; property tests in
+//! `rust/tests/prop_msm.rs` enforce it.
+
+pub mod naive;
+pub mod pippenger;
+pub mod parallel;
+pub mod batch_affine;
+
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+
+pub use pippenger::{msm as msm_pippenger, MsmConfig, Reduction};
+
+/// Heuristic window width: balances m/window bucket fills against 2^k
+/// reduction work. Matches the usual c ≈ log2(m) − 3 rule, clamped to the
+/// paper's hardware point k = 12.
+pub fn auto_window(m: usize) -> u32 {
+    let lg = (usize::BITS - m.leading_zeros()).max(1);
+    (lg.saturating_sub(3)).clamp(2, 16)
+}
+
+/// Top-level convenience: Pippenger with auto window and recursive
+/// reduction (the paper's configuration).
+pub fn msm<C: CurveParams>(points: &[Affine<C>], scalars: &[ScalarLimbs]) -> Jacobian<C> {
+    pippenger::msm(
+        points,
+        scalars,
+        &MsmConfig { window_bits: auto_window(points.len()), reduction: Reduction::default() },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bn254G1};
+
+    #[test]
+    fn auto_window_monotone() {
+        assert!(auto_window(1 << 10) <= auto_window(1 << 20));
+        assert_eq!(auto_window(1), 2);
+        assert!(auto_window(usize::MAX / 2) <= 16);
+    }
+
+    #[test]
+    fn msm_toplevel_matches_naive() {
+        let w = points::workload::<Bn254G1>(100, 17);
+        let a = msm(&w.points, &w.scalars);
+        let b = naive::msm(&w.points, &w.scalars);
+        assert!(a.eq_point(&b));
+    }
+}

@@ -1,0 +1,55 @@
+//! Naive MSM: m independent double-and-add scalar multiplications followed
+//! by a sum — the cost baseline of the paper's Table II
+//! (`m × (2 × N × 16)` modular multiplications).
+
+use crate::ec::{scalar, Affine, CurveParams, Jacobian, ScalarLimbs};
+
+/// Σ sᵢ·Pᵢ by Algorithm 1 per point.
+pub fn msm<C: CurveParams>(points: &[Affine<C>], scalars: &[ScalarLimbs]) -> Jacobian<C> {
+    assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+    let mut acc = Jacobian::<C>::infinity();
+    for (p, s) in points.iter().zip(scalars) {
+        let term = scalar::mul::<C>(&p.to_jacobian(), s);
+        acc = acc.add(&term);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, scalar, Bls12381G1, Bn254G1};
+
+    #[test]
+    fn empty_msm_is_infinity() {
+        let out = msm::<Bn254G1>(&[], &[]);
+        assert!(out.is_infinity());
+    }
+
+    #[test]
+    fn single_point_matches_scalar_mul() {
+        let w = points::workload::<Bls12381G1>(1, 23);
+        let out = msm(&w.points, &w.scalars);
+        let want = scalar::mul::<Bls12381G1>(&w.points[0].to_jacobian(), &w.scalars[0]);
+        assert!(out.eq_point(&want));
+    }
+
+    #[test]
+    fn linear_in_scalars() {
+        // MSM(s, P) + MSM(t, P) == MSM(s+t, P) for small carry-free scalars
+        let pts = points::generate_points_walk::<Bn254G1>(10, 31);
+        let s: Vec<_> = (0..10u64).map(|i| [i + 1, 0, 0, 0]).collect();
+        let t: Vec<_> = (0..10u64).map(|i| [100 - i, 0, 0, 0]).collect();
+        let st: Vec<_> = (0..10u64).map(|i| [101, 0, 0, 0].map(|x| x + 0 * i)).collect();
+        let lhs = msm(&pts, &s).add(&msm(&pts, &t));
+        let rhs = msm(&pts, &st);
+        assert!(lhs.eq_point(&rhs));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn rejects_mismatched_lengths() {
+        let pts = points::generate_points_walk::<Bn254G1>(3, 1);
+        let _ = msm(&pts, &[[1, 0, 0, 0]]);
+    }
+}

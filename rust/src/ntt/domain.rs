@@ -1,0 +1,142 @@
+//! Evaluation domains: the 2-adic multiplicative subgroups of Fr plus coset
+//! shifts — the QAP prover evaluates over a coset to divide by the domain's
+//! vanishing polynomial safely.
+
+use crate::ff::bigint;
+use crate::ff::{Field, FieldParams, Fp};
+
+/// A power-of-two evaluation domain in Fr.
+#[derive(Clone, Debug)]
+pub struct Domain<P: FieldParams<N>, const N: usize> {
+    /// Domain size n (power of two).
+    pub n: usize,
+    /// Primitive n-th root of unity.
+    pub omega: Fp<P, N>,
+    /// Coset generator g (the field's multiplicative generator).
+    pub coset_gen: Fp<P, N>,
+}
+
+impl<P: FieldParams<N>, const N: usize> Domain<P, N> {
+    /// Build a domain of size `n`; None if n isn't a power of two or
+    /// exceeds the field's 2-adicity.
+    pub fn new(n: usize) -> Option<Self> {
+        if !n.is_power_of_two() || n == 0 {
+            return None;
+        }
+        let log_n = n.trailing_zeros();
+        if log_n > P::TWO_ADICITY {
+            return None;
+        }
+        // omega = g^((p−1) / n)
+        let g = Fp::<P, N>::from_u64(P::GENERATOR);
+        let mut exp = P::MODULUS.to_vec();
+        exp[0] -= 1; // p odd
+        let exp = bigint::shr_slices(&exp, log_n as usize);
+        let omega = g.pow_limbs(&exp);
+        debug_assert!(super::is_primitive_root(&omega, n));
+        Some(Domain { n, omega, coset_gen: g })
+    }
+
+    /// Evaluate the vanishing polynomial Z(x) = xⁿ − 1 at a point.
+    pub fn vanishing_at(&self, x: &Fp<P, N>) -> Fp<P, N> {
+        x.pow_u64(self.n as u64).sub(&Fp::<P, N>::one())
+    }
+
+    /// Forward NTT over the coset g·⟨ω⟩: scales coefficients by gⁱ first.
+    pub fn coset_ntt(&self, values: &mut [Fp<P, N>]) {
+        let mut scale = Fp::<P, N>::one();
+        for v in values.iter_mut() {
+            *v = v.mul(&scale);
+            scale = scale.mul(&self.coset_gen);
+        }
+        super::ntt_in_place(values, &self.omega);
+    }
+
+    /// Inverse of [`Self::coset_ntt`].
+    pub fn coset_intt(&self, values: &mut [Fp<P, N>]) {
+        super::intt_in_place(values, &self.omega);
+        let ginv = self.coset_gen.inv().expect("generator nonzero");
+        let mut scale = Fp::<P, N>::one();
+        for v in values.iter_mut() {
+            *v = v.mul(&scale);
+            scale = scale.mul(&ginv);
+        }
+    }
+
+    /// All n domain elements ωⁱ.
+    pub fn elements(&self) -> Vec<Fp<P, N>> {
+        let mut out = Vec::with_capacity(self.n);
+        let mut x = Fp::<P, N>::one();
+        for _ in 0..self.n {
+            out.push(x);
+            x = x.mul(&self.omega);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::Bn254FrParams;
+    use crate::ff::FrBn254;
+    use crate::util::rng::Rng;
+
+    type D = Domain<Bn254FrParams, 4>;
+
+    #[test]
+    fn domain_sizes() {
+        assert!(D::new(1 << 10).is_some());
+        assert!(D::new(1 << 28).is_some()); // exactly the 2-adicity
+        assert!(D::new(1 << 29).is_none()); // beyond it
+        assert!(D::new(3).is_none());
+    }
+
+    #[test]
+    fn vanishing_zero_on_domain_nonzero_on_coset() {
+        let d = D::new(16).unwrap();
+        for x in d.elements() {
+            assert!(d.vanishing_at(&x).is_zero());
+        }
+        let on_coset = d.coset_gen.mul(&d.omega);
+        assert!(!d.vanishing_at(&on_coset).is_zero());
+    }
+
+    #[test]
+    fn coset_ntt_roundtrip() {
+        let mut rng = Rng::new(95);
+        let d = D::new(32).unwrap();
+        let orig: Vec<FrBn254> = (0..32).map(|_| FrBn254::random(&mut rng)).collect();
+        let mut v = orig.clone();
+        d.coset_ntt(&mut v);
+        d.coset_intt(&mut v);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn coset_ntt_evaluates_on_coset() {
+        // degree-1 poly a + b·x evaluated at g·ωⁱ
+        let mut rng = Rng::new(96);
+        let d = D::new(8).unwrap();
+        let a = FrBn254::random(&mut rng);
+        let b = FrBn254::random(&mut rng);
+        let mut v = vec![FrBn254::zero(); 8];
+        v[0] = a;
+        v[1] = b;
+        d.coset_ntt(&mut v);
+        for i in 0..8 {
+            let x = d.coset_gen.mul(&d.omega.pow_u64(i as u64));
+            assert_eq!(v[i as usize], a.add(&b.mul(&x)));
+        }
+    }
+
+    #[test]
+    fn elements_are_distinct_roots() {
+        let d = D::new(16).unwrap();
+        let els = d.elements();
+        assert_eq!(els.len(), 16);
+        for (i, x) in els.iter().enumerate() {
+            assert_eq!(*x, d.omega.pow_u64(i as u64));
+        }
+    }
+}

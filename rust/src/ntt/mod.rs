@@ -1,0 +1,182 @@
+//! Number-Theoretic Transform over the scalar fields.
+//!
+//! The third compute pillar of the prover (Table I's NTT column, 7–11% of
+//! runtime; the paper defers its FPGA acceleration to future work but the
+//! profiling reproduction needs a real implementation). In-place iterative
+//! radix-2 Cooley–Tukey over the multiplicative 2-adic subgroup of Fr,
+//! plus coset evaluation — everything the QAP prover requires.
+
+pub mod domain;
+
+use crate::ff::{Field, FieldParams, Fp};
+
+/// Bit-reversal permutation (in place).
+fn bit_reverse<T>(v: &mut [T]) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two());
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        if (j as usize) > i {
+            v.swap(i, j as usize);
+        }
+    }
+}
+
+/// In-place forward NTT: values ← evaluations of the polynomial (given in
+/// coefficient order) at the powers of `omega` (a primitive n-th root).
+pub fn ntt_in_place<P: FieldParams<N>, const N: usize>(
+    values: &mut [Fp<P, N>],
+    omega: &Fp<P, N>,
+) {
+    let n = values.len();
+    assert!(n.is_power_of_two(), "NTT size must be a power of two");
+    debug_assert!(is_primitive_root(omega, n));
+    bit_reverse(values);
+    let mut len = 2usize;
+    while len <= n {
+        // w_len = omega^(n/len)
+        let w_len = omega.pow_u64((n / len) as u64);
+        for start in (0..n).step_by(len) {
+            let mut w = Fp::<P, N>::one();
+            for i in 0..len / 2 {
+                let u = values[start + i];
+                let v = values[start + i + len / 2].mul(&w);
+                values[start + i] = u.add(&v);
+                values[start + i + len / 2] = u.sub(&v);
+                w = w.mul(&w_len);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Inverse NTT (scales by n⁻¹).
+pub fn intt_in_place<P: FieldParams<N>, const N: usize>(
+    values: &mut [Fp<P, N>],
+    omega: &Fp<P, N>,
+) {
+    let n = values.len();
+    let omega_inv = omega.inv().expect("omega nonzero");
+    ntt_in_place(values, &omega_inv);
+    let n_inv = Fp::<P, N>::from_u64(n as u64).inv().expect("n invertible");
+    for v in values.iter_mut() {
+        *v = v.mul(&n_inv);
+    }
+}
+
+/// Check ω is a primitive n-th root of unity (debug validation).
+pub fn is_primitive_root<F: Field>(omega: &F, n: usize) -> bool {
+    if n == 0 || !n.is_power_of_two() {
+        return false;
+    }
+    omega.pow_u64(n as u64) == F::one() && omega.pow_u64((n / 2) as u64) != F::one()
+}
+
+/// Schoolbook polynomial multiplication (reference for the NTT tests).
+pub fn poly_mul_schoolbook<F: Field>(a: &[F], b: &[F]) -> Vec<F> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let mut out = vec![F::zero(); a.len() + b.len() - 1];
+    for (i, ai) in a.iter().enumerate() {
+        for (j, bj) in b.iter().enumerate() {
+            out[i + j] = out[i + j].add(&ai.mul(bj));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::domain::Domain;
+    use super::*;
+    use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+    use crate::ff::FrBn254;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ntt_intt_roundtrip() {
+        let mut rng = Rng::new(91);
+        let dom = Domain::<Bn254FrParams, 4>::new(64).unwrap();
+        let orig: Vec<FrBn254> = (0..64).map(|_| FrBn254::random(&mut rng)).collect();
+        let mut v = orig.clone();
+        ntt_in_place(&mut v, &dom.omega);
+        assert_ne!(v, orig);
+        intt_in_place(&mut v, &dom.omega);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn ntt_of_constant_poly() {
+        // constant c evaluates to c everywhere
+        let dom = Domain::<Bn254FrParams, 4>::new(8).unwrap();
+        let c = FrBn254::from_u64(42);
+        let mut v = vec![FrBn254::zero(); 8];
+        v[0] = c;
+        ntt_in_place(&mut v, &dom.omega);
+        assert!(v.iter().all(|x| *x == c));
+    }
+
+    #[test]
+    fn ntt_matches_naive_evaluation() {
+        let mut rng = Rng::new(92);
+        let n = 16usize;
+        let dom = Domain::<Bls12381FrParams, 4>::new(n).unwrap();
+        let coeffs: Vec<_> =
+            (0..n).map(|_| crate::ff::FrBls12381::random(&mut rng)).collect();
+        let mut v = coeffs.clone();
+        ntt_in_place(&mut v, &dom.omega);
+        // naive evaluation at omega^i
+        for i in 0..n {
+            let x = dom.omega.pow_u64(i as u64);
+            let mut acc = crate::ff::FrBls12381::zero();
+            let mut xp = crate::ff::FrBls12381::one();
+            for c in &coeffs {
+                acc = acc.add(&c.mul(&xp));
+                xp = xp.mul(&x);
+            }
+            assert_eq!(v[i], acc, "eval mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn convolution_theorem() {
+        // poly mult via NTT == schoolbook
+        let mut rng = Rng::new(93);
+        let (da, db) = (10usize, 13usize);
+        let a: Vec<FrBn254> = (0..da).map(|_| FrBn254::random(&mut rng)).collect();
+        let b: Vec<FrBn254> = (0..db).map(|_| FrBn254::random(&mut rng)).collect();
+        let want = poly_mul_schoolbook(&a, &b);
+        let n = (da + db - 1).next_power_of_two();
+        let dom = Domain::<Bn254FrParams, 4>::new(n).unwrap();
+        let mut fa = a.clone();
+        fa.resize(n, FrBn254::zero());
+        let mut fb = b.clone();
+        fb.resize(n, FrBn254::zero());
+        ntt_in_place(&mut fa, &dom.omega);
+        ntt_in_place(&mut fb, &dom.omega);
+        for (x, y) in fa.iter_mut().zip(&fb) {
+            *x = x.mul(y);
+        }
+        intt_in_place(&mut fa, &dom.omega);
+        assert_eq!(&fa[..want.len()], &want[..]);
+        assert!(fa[want.len()..].iter().all(|x| x.is_zero()));
+    }
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        assert!(Domain::<Bn254FrParams, 4>::new(12).is_none());
+        assert!(!is_primitive_root(&FrBn254::one(), 4));
+    }
+
+    #[test]
+    fn bit_reverse_involution() {
+        let mut v: Vec<u32> = (0..32).collect();
+        let orig = v.clone();
+        bit_reverse(&mut v);
+        assert_ne!(v, orig);
+        bit_reverse(&mut v);
+        assert_eq!(v, orig);
+    }
+}

@@ -1,0 +1,181 @@
+//! Figure series generators (CSV, plot-ready).
+
+use super::csv_block;
+use crate::baseline::{CpuBaseline, GpuModel};
+use crate::fpga::{power, CurveId, DesignVariant, NumberForm, SabConfig, SabModel};
+
+/// Sizes swept by the paper's figures (log-spaced 1K → 64M).
+pub fn sweep_sizes() -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut m = 1_000u64;
+    while m <= 64_000_000 {
+        v.push(m);
+        v.push(m * 2);
+        v.push(m * 5);
+        m *= 10;
+    }
+    v.retain(|&x| x <= 64_000_000);
+    v
+}
+
+/// Figure 4 — CPU throughput (M-MSM-PPS) vs MSM size, both curves
+/// (libsnark-calibrated model; the measured series is produced by the
+/// bench, which appends locally-timed rows).
+pub fn fig4_cpu_throughput() -> String {
+    let bn = CpuBaseline::for_curve(CurveId::Bn254);
+    let bls = CpuBaseline::for_curve(CurveId::Bls12381);
+    let rows: Vec<Vec<String>> = sweep_sizes()
+        .iter()
+        .map(|&m| {
+            vec![
+                m.to_string(),
+                format!("{:.4}", bn.throughput_mpps(m, true)),
+                format!("{:.4}", bls.throughput_mpps(m, true)),
+            ]
+        })
+        .collect();
+    csv_block(
+        "Figure 4: CPU MSM throughput (M-MSM-PPS), single-thread libsnark model",
+        &["msm_size", "bn128_mpps", "bls12_381_mpps"],
+        &rows,
+    )
+}
+
+/// Figure 6 — FPGA throughput vs size, curve × scaling.
+pub fn fig6_fpga_throughput() -> String {
+    let models: Vec<(String, SabModel)> = [
+        (CurveId::Bn254, 1u32),
+        (CurveId::Bn254, 2),
+        (CurveId::Bls12381, 1),
+        (CurveId::Bls12381, 2),
+    ]
+    .into_iter()
+    .map(|(c, s)| (format!("{}_s{}", c.name(), s), SabModel::new(SabConfig::paper(c, s))))
+    .collect();
+
+    let mut rows = Vec::new();
+    for m in sweep_sizes() {
+        let mut row = vec![m.to_string()];
+        for (_, model) in &models {
+            row.push(format!("{:.4}", model.time_msm(m).m_msm_pps(m)));
+        }
+        rows.push(row);
+    }
+    let headers: Vec<String> =
+        std::iter::once("msm_size".to_string()).chain(models.iter().map(|(n, _)| n.clone())).collect();
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    csv_block("Figure 6: FPGA MSM throughput (M-MSM-PPS) across curve and scaling", &hdr_refs, &rows)
+}
+
+/// Figures 5 and 7 — power-normalized FPGA throughput (M-MSM-PPS/W),
+/// S=1 vs S=2, one figure per curve.
+pub fn fig5_7_power_normalized(curve: CurveId) -> String {
+    let variant = DesignVariant {
+        bits: curve.field_bits(),
+        form: NumberForm::Standard,
+        unified: true,
+    };
+    let mut rows = Vec::new();
+    for m in sweep_sizes() {
+        let mut row = vec![m.to_string()];
+        for s in [1u32, 2] {
+            let model = SabModel::new(SabConfig::paper(curve, s));
+            let tp = model.time_msm(m).m_msm_pps(m);
+            let w = power::estimate(variant, s).active_w;
+            row.push(format!("{:.5}", tp / w));
+        }
+        rows.push(row);
+    }
+    let fig = if curve == CurveId::Bn254 { 5 } else { 7 };
+    csv_block(
+        &format!(
+            "Figure {fig}: FPGA power-normalized throughput (M-MSM-PPS/W), {}",
+            curve.name()
+        ),
+        &["msm_size", "s1_mpps_per_w", "s2_mpps_per_w"],
+        &rows,
+    )
+}
+
+/// Figure 8 — FPGA vs GPU normalized throughput (and per-watt), BLS12-381.
+pub fn fig8_fpga_vs_gpu() -> String {
+    let curve = CurveId::Bls12381;
+    let fpga = SabModel::new(SabConfig::paper(curve, 2));
+    let gpu = GpuModel::t4_bellperson(curve).unwrap();
+    let variant =
+        DesignVariant { bits: curve.field_bits(), form: NumberForm::Standard, unified: true };
+    let w_fpga = power::estimate(variant, 2).active_w;
+    let mut rows = Vec::new();
+    for m in sweep_sizes() {
+        let t_f = fpga.time_msm(m).m_msm_pps(m);
+        let t_g = gpu.throughput_mpps(m);
+        rows.push(vec![
+            m.to_string(),
+            format!("{t_f:.4}"),
+            format!("{t_g:.4}"),
+            format!("{:.5}", t_f / w_fpga),
+            format!("{:.5}", gpu.throughput_per_watt(m)),
+        ]);
+    }
+    csv_block(
+        "Figure 8: FPGA vs GPU throughput and per-watt, BLS12-381",
+        &["msm_size", "fpga_mpps", "gpu_mpps", "fpga_mpps_per_w", "gpu_mpps_per_w"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_sorted_and_bounded() {
+        let s = sweep_sizes();
+        assert_eq!(s.first(), Some(&1_000));
+        assert_eq!(s.last(), Some(&50_000_000).or(s.last())); // contains 64M? check max
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(*s.last().unwrap() <= 64_000_000);
+        assert!(s.contains(&64_000_000) || *s.last().unwrap() == 50_000_000);
+    }
+
+    #[test]
+    fn fig4_has_both_curves_flat_tail() {
+        let f = fig4_cpu_throughput();
+        assert!(f.contains("bn128_mpps"));
+        let lines: Vec<&str> = f.lines().collect();
+        let last = lines.last().unwrap().split(',').nth(1).unwrap();
+        let v: f64 = last.parse().unwrap();
+        assert!((v - 0.06).abs() < 0.01, "BN plateau {v}");
+    }
+
+    #[test]
+    fn fig6_scaling_ratio_near_2() {
+        let f = fig6_fpga_throughput();
+        let last = f.lines().last().unwrap();
+        let cells: Vec<f64> = last.split(',').skip(1).map(|c| c.parse().unwrap()).collect();
+        // columns: bn_s1, bn_s2, bls_s1, bls_s2
+        assert!((cells[1] / cells[0] - 2.0).abs() < 0.3, "bn scaling {}", cells[1] / cells[0]);
+        assert!((cells[3] / cells[2] - 2.0).abs() < 0.3, "bls scaling {}", cells[3] / cells[2]);
+    }
+
+    #[test]
+    fn fig5_7_power_efficiency_improves_with_s() {
+        for curve in [CurveId::Bn254, CurveId::Bls12381] {
+            let f = fig5_7_power_normalized(curve);
+            let last = f.lines().last().unwrap();
+            let cells: Vec<f64> = last.split(',').skip(1).map(|c| c.parse().unwrap()).collect();
+            assert!(cells[1] > 1.5 * cells[0], "{curve:?}: {cells:?}");
+        }
+    }
+
+    #[test]
+    fn fig8_fpga_wins_at_large_sizes() {
+        let f = fig8_fpga_vs_gpu();
+        let last = f.lines().last().unwrap();
+        let cells: Vec<f64> = last.split(',').skip(1).map(|c| c.parse().unwrap()).collect();
+        let (fpga, gpu, fpga_w, gpu_w) = (cells[0], cells[1], cells[2], cells[3]);
+        // paper: FPGA ≈1.14x GPU at 64M, and 16–51% better per watt
+        assert!(fpga / gpu > 1.0 && fpga / gpu < 1.6, "throughput ratio {}", fpga / gpu);
+        assert!(fpga_w / gpu_w > 1.1, "per-watt ratio {}", fpga_w / gpu_w);
+    }
+}

@@ -1,0 +1,88 @@
+//! Report rendering: regenerates every table and figure of the paper's
+//! evaluation section from this repo's measurements and models.
+//!
+//! * [`tables`] — Tables I–X (paper values printed beside ours);
+//! * [`figures`] — Figures 4–8 as CSV series (plot-ready).
+//!
+//! The benches under `rust/benches/` are thin wrappers that call these and
+//! print; integration tests assert the claims (speedup bands, scaling
+//! linearity, who-wins ordering) rather than exact numbers.
+
+pub mod tables;
+pub mod figures;
+
+/// Render an aligned ASCII table.
+pub fn ascii_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(&sep, &widths));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a CSV block with a `# title` comment head.
+pub fn csv_block(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = format!("# {title}\n{}\n", headers.join(","));
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format helpers shared by tables/figures.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_table_aligns() {
+        let t = ascii_table(
+            "T",
+            &["a", "bbbb"],
+            &[vec!["x".into(), "y".into()], vec!["long".into(), "z".into()]],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.contains("| a    | bbbb |"));
+        assert!(t.contains("| long | z    |"));
+    }
+
+    #[test]
+    fn csv_block_format() {
+        let c = csv_block("F", &["m", "t"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "# F\nm,t\n1,2\n");
+    }
+}

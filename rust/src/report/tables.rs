@@ -1,0 +1,429 @@
+//! Table generators (paper values printed beside measured/modeled ones).
+
+use super::{ascii_table, f2};
+use crate::baseline::{CpuBaseline, GpuModel};
+use crate::ec::{Bls12381G1, Bls12381G2, Bn254G1, Bn254G2};
+use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+use crate::fpga::rbam::ReductionKind;
+use crate::fpga::{
+    power, resources::TABLE_V_VARIANTS, CurveId, DesignVariant, NumberForm, ResourceModel,
+    SabConfig, SabModel,
+};
+use crate::msm::{self, pippenger, MsmConfig, Reduction};
+use crate::snark::{circuits, prover::Prover, setup::Crs};
+
+/// Table I — prover profiling (measured on this host vs paper).
+pub fn table1(n_constraints: usize, seed: u64) -> String {
+    let mut rows = Vec::new();
+
+    // BN254 family
+    {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(n_constraints, seed);
+        let n = cs.num_constraints().max(2).next_power_of_two();
+        let crs = Crs::<Bn254G1, Bn254G2>::synthesize(cs.num_variables(), n, seed ^ 1);
+        let (_, prof) = Prover::new(crs).prove(&cs);
+        rows.push(vec![
+            "BN128 (ours)".into(),
+            f2(prof.msm_g1_pct),
+            f2(prof.msm_g2_pct),
+            f2(prof.ntt_pct),
+            f2(prof.other_pct),
+        ]);
+        rows.push(vec![
+            "BN128 (paper)".into(),
+            "37".into(),
+            "51".into(),
+            "11".into(),
+            "1".into(),
+        ]);
+    }
+    // BLS12-381 family
+    {
+        let cs = circuits::mul_chain::<Bls12381FrParams, 4>(n_constraints, seed);
+        let n = cs.num_constraints().max(2).next_power_of_two();
+        let crs = Crs::<Bls12381G1, Bls12381G2>::synthesize(cs.num_variables(), n, seed ^ 2);
+        let (_, prof) = Prover::new(crs).prove(&cs);
+        rows.push(vec![
+            "BLS12-381 (ours)".into(),
+            f2(prof.msm_g1_pct),
+            f2(prof.msm_g2_pct),
+            f2(prof.ntt_pct),
+            f2(prof.other_pct),
+        ]);
+        rows.push(vec![
+            "BLS12-381 (paper)".into(),
+            "33".into(),
+            "59".into(),
+            "7".into(),
+            "1".into(),
+        ]);
+    }
+    ascii_table(
+        &format!("Table I: prover profiling, {} constraints (%)", n_constraints),
+        &["curve", "MSM-G1", "MSM-G2", "NTT", "other"],
+        &rows,
+    )
+}
+
+/// Tables II + III — modular-multiplication counts, double-and-add vs
+/// bucket method, *measured* by the op counters.
+pub fn table2_3(m: usize, seed: u64) -> String {
+    let mut rows = Vec::new();
+    // Work on BN254 G1 and BLS12-381 G1 with paper-width scalars.
+    fn measure<C: crate::ec::CurveParams>(
+        m: usize,
+        seed: u64,
+        label: &str,
+        rows: &mut Vec<Vec<String>>,
+        paper_naive_per_point: u64,
+        paper_bucket_point_ops: u64,
+    ) {
+        let w = crate::ec::points::workload::<C>(m, seed);
+        // naive double-and-add
+        let before = crate::ff::opcount::snapshot();
+        let a = msm::naive::msm(&w.points, &w.scalars);
+        let naive_ops = crate::ff::opcount::snapshot() - before;
+
+        // bucket method, hardware window k=12
+        let cfg = MsmConfig { window_bits: 12, reduction: Reduction::Recursive { k2: 6 } };
+        let before = crate::ff::opcount::snapshot();
+        let (b, cost) = pippenger::msm_with_cost(&w.points, &w.scalars, &cfg);
+        let bucket_ops = crate::ff::opcount::snapshot() - before;
+        assert!(a.eq_point(&b), "algorithms disagree");
+
+        let naive_mm = naive_ops.modmuls();
+        let bucket_mm = bucket_ops.modmuls();
+        rows.push(vec![
+            label.to_string(),
+            format!("m x {} (paper m x {})", naive_mm / m as u64, paper_naive_per_point),
+            format!("{bucket_mm}"),
+            format!("{:.1}x", naive_mm as f64 / bucket_mm as f64),
+            // Table III counts the BAM's *fill* ops (reduce is recursive/
+            // amortized in hardware): ours per point vs paper's m×22/32
+            format!(
+                "m x {:.1} (paper m x {})",
+                cost.fill_ops as f64 / m as f64,
+                paper_bucket_point_ops
+            ),
+            format!("m x {:.1}", cost.total_point_ops() as f64 / m as f64),
+        ]);
+    }
+    // paper: BN m×(2·254·16) modmuls naive; bucket m×22 fill point-ops
+    measure::<Bn254G1>(m, seed, "BN128", &mut rows, 2 * 254 * 16, 22);
+    measure::<Bls12381G1>(m, seed, "BLS12-381", &mut rows, 2 * 381 * 16, 32);
+    ascii_table(
+        &format!("Tables II+III: measured op counts, m = {m} (reduce-phase cost amortizes as m grows)"),
+        &[
+            "curve",
+            "naive modmuls/pt",
+            "bucket modmuls",
+            "reduction",
+            "fill ops/pt",
+            "total ops/pt",
+        ],
+        &rows,
+    )
+}
+
+/// Tables IV + V — point-processor resources (model vs paper).
+pub fn table4_5() -> String {
+    let model = ResourceModel;
+    let paper = [
+        (372_700.0, 5005.0, 742.0),
+        (290_400.0, 5400.0, 647.0),
+        (207_000.0, 1975.0, 3367.0),
+        (419_000.0, 4425.0, 6770.0),
+    ];
+    let mut rows = Vec::new();
+    for (v, (pa, pd, pm)) in TABLE_V_VARIANTS.iter().zip(paper) {
+        let r = model.point_processor(*v);
+        rows.push(vec![
+            v.label(),
+            format!("{:.0} / {pa:.0}", r.alms),
+            format!("{:.0} / {pd:.0}", r.dsps),
+            format!("{:.0} / {pm:.0}", r.m20ks),
+        ]);
+    }
+    ascii_table(
+        "Tables IV+V: EC adder resources (model / paper)",
+        &["variant", "ALMs", "DSPs", "M20K"],
+        &rows,
+    )
+}
+
+/// Table VII — system-level resources.
+pub fn table7() -> String {
+    let model = ResourceModel;
+    let cases: [(DesignVariant, u32, [f64; 3]); 5] = [
+        (
+            DesignVariant { bits: 254, form: NumberForm::Montgomery, unified: false },
+            2,
+            [715_603.0, 5005.0, 4642.0],
+        ),
+        (
+            DesignVariant { bits: 254, form: NumberForm::Standard, unified: true },
+            2,
+            [571_408.0, 1975.0, 6501.0],
+        ),
+        (
+            DesignVariant { bits: 254, form: NumberForm::Standard, unified: true },
+            1,
+            [537_348.0, 1975.0, 5616.0],
+        ),
+        (
+            DesignVariant { bits: 381, form: NumberForm::Standard, unified: true },
+            2,
+            [831_972.0, 4425.0, 10_973.0],
+        ),
+        (
+            DesignVariant { bits: 381, form: NumberForm::Standard, unified: true },
+            1,
+            [770_561.0, 4425.0, 9_662.0],
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (v, s, p) in cases {
+        let r = model.system(v, s);
+        let fmax = model.system_fmax(v, s) / 1e6;
+        rows.push(vec![
+            format!("{} (S={s})", v.label()),
+            format!("{:.0} / {:.0}", r.alms, p[0]),
+            format!("{:.0} / {:.0}", r.dsps, p[1]),
+            format!("{:.0} / {:.0}", r.m20ks, p[2]),
+            format!("{fmax:.0} MHz"),
+        ]);
+    }
+    ascii_table(
+        "Table VII: system resources (model / paper)",
+        &["variant", "ALMs", "DSPs", "M20K", "fmax (model)"],
+        &rows,
+    )
+}
+
+/// Table VIII — power (model vs paper).
+pub fn table8() -> String {
+    let cases: [(&str, Option<(DesignVariant, u32)>, f64, f64); 6] = [
+        ("oneAPI BSP only", None, 17.25, f64::NAN),
+        (
+            "BN128 PAPD (S=1)",
+            Some((DesignVariant { bits: 254, form: NumberForm::Montgomery, unified: false }, 1)),
+            44.6,
+            72.7,
+        ),
+        (
+            "BN128 UDA (S=1)",
+            Some((DesignVariant { bits: 254, form: NumberForm::Standard, unified: true }, 1)),
+            42.6,
+            58.0,
+        ),
+        (
+            "BN128 UDA (S=2)",
+            Some((DesignVariant { bits: 254, form: NumberForm::Standard, unified: true }, 2)),
+            44.7,
+            63.5,
+        ),
+        (
+            "BLS12-381 UDA (S=1)",
+            Some((DesignVariant { bits: 381, form: NumberForm::Standard, unified: true }, 1)),
+            48.8,
+            63.1,
+        ),
+        (
+            "BLS12-381 UDA (S=2)",
+            Some((DesignVariant { bits: 381, form: NumberForm::Standard, unified: true }, 2)),
+            50.4,
+            68.6,
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (label, build, p_standby, p_active) in cases {
+        match build {
+            None => rows.push(vec![
+                label.into(),
+                format!("{:.2} / {:.2}", crate::fpga::calib::POWER_BSP_W, p_standby),
+                "N/A".into(),
+            ]),
+            Some((v, s)) => {
+                let e = power::estimate(v, s);
+                rows.push(vec![
+                    label.into(),
+                    format!("{:.1} / {:.1}", e.standby_w, p_standby),
+                    format!("{:.1} / {:.1}", e.active_w, p_active),
+                ]);
+            }
+        }
+    }
+    ascii_table(
+        "Table VIII: power, 64M-point MSM (model / paper, W)",
+        &["design variant", "standby", "active"],
+        &rows,
+    )
+}
+
+/// Table IX — execution-time comparison for BLS12-381 (CPU model+measured,
+/// GPU model, FPGA model). `measure_cpu_up_to` caps the locally-executed
+/// sizes.
+pub fn table9(measure_cpu_up_to: usize) -> String {
+    let sizes: [u64; 10] = [
+        1_000, 10_000, 100_000, 1_000_000, 2_000_000, 4_000_000, 8_000_000, 16_000_000,
+        32_000_000, 64_000_000,
+    ];
+    let cpu = CpuBaseline::for_curve(CurveId::Bls12381);
+    let gpu = GpuModel::t4_bellperson(CurveId::Bls12381).unwrap();
+    let fpga = SabModel::new(SabConfig::paper(CurveId::Bls12381, 2));
+    let paper_fpga = [0.01, 0.02, 0.03, 0.24, 0.47, 0.94, 1.88, 3.76, 7.51, 15.03];
+
+    let mut rows = Vec::new();
+    for (i, &m) in sizes.iter().enumerate() {
+        let t_cpu = cpu.model_seconds(m);
+        let cpu_meas = if (m as usize) <= measure_cpu_up_to {
+            let meas =
+                crate::baseline::cpu::measure_parallel::<Bls12381G1>(m as usize, 0xC0FE + m, 0);
+            format!("{:.2}", meas.seconds)
+        } else {
+            "-".into()
+        };
+        let t_gpu = gpu.seconds(m);
+        let t_fpga = fpga.time_msm(m).total_s();
+        rows.push(vec![
+            crate::util::human_count(m),
+            format!("{t_cpu:.2}"),
+            cpu_meas,
+            format!("{t_gpu:.2}"),
+            format!("{t_fpga:.2} / {:.2}", paper_fpga[i]),
+            format!("{:.0}x", t_cpu / t_fpga),
+            format!("{:.2}x", t_gpu / t_fpga),
+        ]);
+    }
+    ascii_table(
+        "Table IX: BLS12-381 execution time (s); FPGA column: model / paper",
+        &["MSM size", "CPU(model)", "CPU(measured)", "GPU(model)", "FPGA", "xCPU", "xGPU"],
+        &rows,
+    )
+}
+
+/// Table X — 64M summary: time + power for the three devices.
+pub fn table10() -> String {
+    let m = 64_000_000u64;
+    let mut rows = Vec::new();
+    for curve in [CurveId::Bn254, CurveId::Bls12381] {
+        let cpu = CpuBaseline::for_curve(curve).model_seconds(m);
+        let fpga_model = SabModel::new(SabConfig::paper(curve, 2));
+        let t_fpga = fpga_model.time_msm(m).total_s();
+        let p_fpga = power::estimate(
+            DesignVariant { bits: curve.field_bits(), form: NumberForm::Standard, unified: true },
+            2,
+        )
+        .active_w;
+        let (t_gpu, p_gpu) = match GpuModel::t4_bellperson(curve) {
+            Some(g) => (format!("{:.1}", g.seconds(m)), format!("{:.0}", g.power_w)),
+            None => ("NA".into(), "NA".into()),
+        };
+        rows.push(vec![
+            curve.name().into(),
+            format!("{cpu:.0}"),
+            t_gpu,
+            format!("{t_fpga:.1}"),
+            "NA".into(),
+            p_gpu,
+            format!("{p_fpga:.0}"),
+        ]);
+    }
+    ascii_table(
+        "Table X: 64M-point MSM — exec time (s) and power (W) [CPU, GPU, FPGA]",
+        &["curve", "t CPU", "t GPU", "t FPGA", "P CPU", "P GPU", "P FPGA"],
+        &rows,
+    )
+}
+
+/// Ablation (beyond the paper's tables, motivated by §IV-A): IS-RBAM vs
+/// running-sum reduction at system level.
+pub fn ablation_reduction() -> String {
+    let mut rows = Vec::new();
+    for curve in [CurveId::Bn254, CurveId::Bls12381] {
+        for m in [10_000u64, 1_000_000, 64_000_000] {
+            let mut cfg = SabConfig::paper(curve, 2);
+            let rec = SabModel::new(cfg).time_msm(m).total_s();
+            cfg.reduction = ReductionKind::RunningSum;
+            let rs = SabModel::new(cfg).time_msm(m).total_s();
+            rows.push(vec![
+                curve.name().into(),
+                crate::util::human_count(m),
+                format!("{rs:.4}"),
+                format!("{rec:.4}"),
+                format!("{:.2}x", rs / rec),
+            ]);
+        }
+    }
+    ascii_table(
+        "Ablation: bucket-reduction strategy (total MSM seconds)",
+        &["curve", "size", "running-sum", "IS-RBAM", "speedup"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_5_renders() {
+        let t = table4_5();
+        assert!(t.contains("UDA-254-Standard"));
+        assert!(t.contains("1975"));
+    }
+
+    #[test]
+    fn table7_renders_with_fmax() {
+        let t = table7();
+        assert!(t.contains("MHz"));
+        assert!(t.contains("S=2"));
+    }
+
+    #[test]
+    fn table8_renders() {
+        let t = table8();
+        assert!(t.contains("BSP"));
+        assert!(t.contains("BLS12-381 UDA (S=2)"));
+    }
+
+    #[test]
+    fn table9_speedups_exceed_100x_at_large_sizes() {
+        let t = table9(0); // no local measurement in unit tests
+        // paper: ≥110x for the largest sizes; our modeled CPU/FPGA ratio
+        // should be in the same regime — spot check text content
+        assert!(t.contains("64M"));
+        let lines: Vec<&str> = t.lines().collect();
+        let last = lines.last().unwrap();
+        let x: f64 = last
+            .split('|')
+            .nth(6)
+            .unwrap()
+            .trim()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(x > 90.0 && x < 160.0, "CPU speedup at 64M: {x}");
+    }
+
+    #[test]
+    fn table2_3_small_runs() {
+        let t = table2_3(64, 5);
+        assert!(t.contains("BN128"));
+        assert!(t.contains("BLS12-381"));
+    }
+
+    #[test]
+    fn ablation_shows_isrbam_wins() {
+        let t = ablation_reduction();
+        assert!(t.contains("IS-RBAM"));
+        // every speedup cell should be ≥ 1.0
+        for line in t.lines().skip(3) {
+            if let Some(cell) = line.split('|').nth(5) {
+                if let Ok(x) = cell.trim().trim_end_matches('x').parse::<f64>() {
+                    assert!(x >= 0.99, "IS-RBAM slower? {x}");
+                }
+            }
+        }
+    }
+}

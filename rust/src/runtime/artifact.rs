@@ -1,0 +1,137 @@
+//! Artifact manifest: what `python/compile/aot.py` produced, as consumed by
+//! the rust runtime (name → file, batch size, limb count, io arity).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata for one compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: String,
+    pub curve: String,
+    pub batch: usize,
+    pub nlimb16: usize,
+    pub inputs: usize,
+    pub outputs: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+/// Default artifact directory: `$IFZKP_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("IFZKP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+impl ArtifactManifest {
+    /// Load and validate `manifest.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let batch = j
+            .get("batch")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest missing batch"))? as usize;
+        let arts = match j.get("artifacts") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err(anyhow!("manifest missing artifacts object")),
+        };
+        let mut entries = Vec::new();
+        for (curve, meta) in arts {
+            let get_num = |k: &str| -> Result<usize> {
+                meta.get(k)
+                    .and_then(Json::as_f64)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| anyhow!("artifact {curve}: missing {k}"))
+            };
+            let entry = ArtifactMeta {
+                file: meta
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {curve}: missing file"))?
+                    .to_string(),
+                kind: meta.get("kind").and_then(Json::as_str).unwrap_or("uda").to_string(),
+                curve: curve.clone(),
+                batch: get_num("batch")?,
+                nlimb16: get_num("nlimb16")?,
+                inputs: get_num("inputs")?,
+                outputs: get_num("outputs")?,
+            };
+            let fpath = dir.join(&entry.file);
+            if !fpath.exists() {
+                return Err(anyhow!("artifact file missing: {fpath:?}"));
+            }
+            entries.push(entry);
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), batch, entries })
+    }
+
+    /// Find the artifact for a curve (by manifest key, e.g. "bn254").
+    pub fn for_curve(&self, curve: &str) -> Result<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.curve == curve)
+            .ok_or_else(|| anyhow!("no artifact for curve {curve}"))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        // Runs against the checked-out artifacts dir when it exists (CI
+        // builds it first); skips silently otherwise so unit tests don't
+        // depend on `make artifacts`.
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts dir");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).expect("manifest loads");
+        assert!(m.batch > 0);
+        let bn = m.for_curve("bn254").expect("bn254 artifact");
+        assert_eq!(bn.nlimb16, 16);
+        assert_eq!(bn.inputs, 6);
+        assert_eq!(bn.outputs, 3);
+        let bls = m.for_curve("bls12_381").expect("bls artifact");
+        assert_eq!(bls.nlimb16, 24);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactManifest::load(Path::new("/no/such/dir")).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ifzkp_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("uda_x_b8.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch":8,"block":4,"artifacts":{"x":{"file":"uda_x_b8.hlo.txt","kind":"uda","curve":"x","batch":8,"nlimb16":16,"inputs":6,"outputs":3}}}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.for_curve("x").unwrap().batch, 8);
+        assert!(m.for_curve("y").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,57 @@
+//! PJRT client bootstrap (the oneAPI-BSP analogue: one per process, owns
+//! the device).
+
+use anyhow::{Context as _, Result};
+
+/// Owns the PJRT CPU client. Compilation of each artifact happens once; the
+/// resulting executables are cheap to share per-thread afterwards.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtContext { client })
+    }
+
+    /// Platform string (e.g. "cpu") — surfaced in metrics/logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let ctx = PjrtContext::cpu().expect("PJRT cpu client");
+        assert!(ctx.device_count() >= 1);
+        assert_eq!(ctx.platform().to_lowercase(), "cpu");
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let ctx = PjrtContext::cpu().unwrap();
+        assert!(ctx.compile_hlo_text(std::path::Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+}

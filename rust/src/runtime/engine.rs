@@ -1,0 +1,160 @@
+//! The UDA engine: a compiled batched point processor.
+//!
+//! One `execute` call performs `batch` independent unified double-adds —
+//! the vector-engine re-expression of the paper's 1-op/cycle pipelined UDA
+//! (see DESIGN.md §Hardware-Adaptation). Operands cross the boundary as
+//! packed 16-bit Montgomery limbs; because the engine's radix equals the
+//! host's (R = 2^(64·N) = 2^(16·4N)), packing is pure bit-splitting — no
+//! arithmetic on the hot path.
+
+use super::artifact::{ArtifactManifest, ArtifactMeta};
+use super::context::PjrtContext;
+use crate::ec::{Bls12381G1, Bn254G1, CurveParams, Jacobian};
+use crate::ff::{limbs16, Field, Fp};
+use anyhow::{anyhow, Context, Result};
+
+/// Curves the engine can serve: those whose base field is a prime field
+/// with a 16-bit-limb artifact (G1 of both paper curves; G2 is the paper's
+/// future work and stays on the native path).
+pub trait EngineCurve: CurveParams {
+    /// Manifest key ("bn254" / "bls12_381").
+    const MANIFEST_KEY: &'static str;
+    /// 16-bit limbs per coordinate.
+    const NLIMB16: usize;
+    /// Pack one coordinate into `out` as NLIMB16 u32 entries.
+    fn pack_coord(c: &Self::Base, out: &mut Vec<u32>);
+    /// Unpack one coordinate from 16-bit limbs.
+    fn unpack_coord(limbs: &[u32]) -> Result<Self::Base>;
+}
+
+macro_rules! impl_engine_curve {
+    ($curve:ty, $params:ty, $n:expr, $key:expr) => {
+        impl EngineCurve for $curve {
+            const MANIFEST_KEY: &'static str = $key;
+            const NLIMB16: usize = 4 * $n;
+
+            fn pack_coord(c: &Self::Base, out: &mut Vec<u32>) {
+                out.extend(limbs16::u64_to_u16_limbs(c.mont_limbs()));
+            }
+
+            fn unpack_coord(limbs: &[u32]) -> Result<Self::Base> {
+                let u64s = limbs16::u16_limbs_to_u64(limbs).map_err(|e| anyhow!(e))?;
+                let arr: [u64; $n] =
+                    u64s.try_into().map_err(|_| anyhow!("bad limb count"))?;
+                Fp::<$params, $n>::from_mont_limbs(arr)
+                    .ok_or_else(|| anyhow!("engine returned non-canonical value"))
+            }
+        }
+    };
+}
+
+impl_engine_curve!(Bn254G1, crate::ff::params::Bn254FpParams, 4, "bn254");
+impl_engine_curve!(Bls12381G1, crate::ff::params::Bls12381FpParams, 6, "bls12_381");
+
+/// A loaded, compiled UDA executable for one curve.
+pub struct UdaEngine<C: EngineCurve> {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Engine invocations so far (metrics).
+    calls: std::cell::Cell<u64>,
+    /// Point-ops processed (metrics).
+    ops: std::cell::Cell<u64>,
+    _c: std::marker::PhantomData<C>,
+}
+
+impl<C: EngineCurve> UdaEngine<C> {
+    /// Load the curve's artifact from the manifest and compile it.
+    pub fn load(ctx: &PjrtContext, manifest: &ArtifactManifest) -> Result<Self> {
+        let meta = manifest.for_curve(C::MANIFEST_KEY)?.clone();
+        if meta.nlimb16 != C::NLIMB16 {
+            return Err(anyhow!(
+                "artifact limb count {} != curve limb count {}",
+                meta.nlimb16,
+                C::NLIMB16
+            ));
+        }
+        let exe = ctx
+            .compile_hlo_text(&manifest.path_of(&meta))
+            .with_context(|| format!("loading UDA engine for {}", C::MANIFEST_KEY))?;
+        Ok(UdaEngine {
+            exe,
+            meta,
+            calls: std::cell::Cell::new(0),
+            ops: std::cell::Cell::new(0),
+            _c: std::marker::PhantomData,
+        })
+    }
+
+    /// Engine batch width.
+    pub fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    /// (calls, point-ops) processed so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.calls.get(), self.ops.get())
+    }
+
+    /// Execute one batch of unified double-adds: `out[i] = a[i] + b[i]`
+    /// (with the full UDA semantics: doubling / infinity / cancellation).
+    /// `pairs.len()` must be ≤ batch; short batches are padded with
+    /// (∞, ∞) lanes.
+    pub fn uda_batch(
+        &self,
+        pairs: &[(Jacobian<C>, Jacobian<C>)],
+    ) -> Result<Vec<Jacobian<C>>> {
+        let b = self.meta.batch;
+        let nl = C::NLIMB16;
+        if pairs.is_empty() || pairs.len() > b {
+            return Err(anyhow!("batch size {} out of range 1..={b}", pairs.len()));
+        }
+        // Pack the six coordinate planes.
+        let mut planes: [Vec<u32>; 6] = Default::default();
+        for plane in planes.iter_mut() {
+            plane.reserve(b * nl);
+        }
+        let inf = Jacobian::<C>::infinity();
+        for i in 0..b {
+            let (p, q) = if i < pairs.len() { pairs[i] } else { (inf, inf) };
+            C::pack_coord(&p.x, &mut planes[0]);
+            C::pack_coord(&p.y, &mut planes[1]);
+            C::pack_coord(&p.z, &mut planes[2]);
+            C::pack_coord(&q.x, &mut planes[3]);
+            C::pack_coord(&q.y, &mut planes[4]);
+            C::pack_coord(&q.z, &mut planes[5]);
+        }
+        let lits: Vec<xla::Literal> = planes
+            .iter()
+            .map(|p| {
+                xla::Literal::vec1(p)
+                    .reshape(&[b as i64, nl as i64])
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (xs, ys, zs) = tuple.to_tuple3()?;
+        let (xs, ys, zs) =
+            (xs.to_vec::<u32>()?, ys.to_vec::<u32>()?, zs.to_vec::<u32>()?);
+
+        self.calls.set(self.calls.get() + 1);
+        self.ops.set(self.ops.get() + pairs.len() as u64);
+
+        let mut out = Vec::with_capacity(pairs.len());
+        for i in 0..pairs.len() {
+            let sl = i * nl..(i + 1) * nl;
+            let z = C::unpack_coord(&zs[sl.clone()])?;
+            if z.is_zero() {
+                out.push(Jacobian::infinity());
+            } else {
+                out.push(Jacobian {
+                    x: C::unpack_coord(&xs[sl.clone()])?,
+                    y: C::unpack_coord(&ys[sl.clone()])?,
+                    z,
+                });
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: the "FPGA board" of this reproduction.
+//!
+//! The paper's host sees the FPGA as an offload engine reached through a
+//! load/execute interface (§V-C); here the rust host loads AOT-compiled XLA
+//! executables (`artifacts/*.hlo.txt`, produced once by
+//! `python/compile/aot.py`) onto a PJRT CPU client and drives them from the
+//! request path. The analogy is kept deliberately tight:
+//!
+//! | paper                      | this repo                     |
+//! |----------------------------|-------------------------------|
+//! | bitstream on Agilex        | HLO text compiled on PJRT     |
+//! | oneAPI BSP shell           | [`context::PjrtContext`]      |
+//! | UDA pipelined point unit   | [`engine::UdaEngine`] batch   |
+//! | DDR-resident point banks   | host-side packed limb buffers |
+//!
+//! Python never runs at request time; the HLO artifacts are the only thing
+//! that crosses the language boundary.
+
+pub mod artifact;
+pub mod context;
+pub mod engine;
+pub mod msm_engine;
+
+pub use artifact::{ArtifactManifest, ArtifactMeta};
+pub use context::PjrtContext;
+pub use engine::{EngineCurve, UdaEngine};

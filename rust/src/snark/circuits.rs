@@ -1,0 +1,113 @@
+//! Synthetic circuits for prover workloads.
+//!
+//! The paper's profiling workloads are production circuits (Filecoin-scale,
+//! up to 2^27 constraints); these generators produce structurally similar
+//! R1CS at any size: long multiplication chains with periodic additions —
+//! dense witness interaction, no shortcuts for the prover.
+
+use super::r1cs::ConstraintSystem;
+use crate::ff::{Field, FieldParams, Fp};
+use crate::util::rng::Rng;
+
+/// A multiplication-chain circuit with `n` constraints:
+/// x_{i+2} = x_{i+1} · x_i (with periodic re-randomized linear terms so
+/// coefficients aren't all 1).
+pub fn mul_chain<P: FieldParams<N>, const N: usize>(
+    n: usize,
+    seed: u64,
+) -> ConstraintSystem<P, N> {
+    let mut rng = Rng::new(seed);
+    let mut cs = ConstraintSystem::<P, N>::new();
+    let mut prev = cs.alloc(Fp::<P, N>::random(&mut rng));
+    let mut cur = cs.alloc(Fp::<P, N>::random(&mut rng));
+    cs.num_public = 2;
+    for i in 0..n {
+        // every 8th constraint uses an affine LHS to vary the structure
+        if i % 8 == 7 {
+            let k = Fp::<P, N>::random(&mut rng);
+            let lhs = cs.witness[cur].add(&k);
+            let out = cs.alloc(lhs.mul(&cs.witness[prev]));
+            cs.enforce(
+                vec![(cur, Fp::<P, N>::one()), (0, k)],
+                vec![(prev, Fp::<P, N>::one())],
+                vec![(out, Fp::<P, N>::one())],
+            );
+            prev = cur;
+            cur = out;
+        } else {
+            let out = cs.alloc(cs.witness[cur].mul(&cs.witness[prev]));
+            cs.enforce(
+                vec![(cur, Fp::<P, N>::one())],
+                vec![(prev, Fp::<P, N>::one())],
+                vec![(out, Fp::<P, N>::one())],
+            );
+            prev = cur;
+            cur = out;
+        }
+    }
+    cs
+}
+
+/// A square-accumulate circuit (x ← x² + c_i), n constraints — the shape of
+/// algebraic-hash chains (MiMC-like rounds, which dominate many real SNARK
+/// workloads).
+pub fn square_chain<P: FieldParams<N>, const N: usize>(
+    n: usize,
+    seed: u64,
+) -> ConstraintSystem<P, N> {
+    let mut rng = Rng::new(seed ^ SQUARE_CHAIN_SEED);
+    let mut cs = ConstraintSystem::<P, N>::new();
+    let mut x = cs.alloc(Fp::<P, N>::random(&mut rng));
+    cs.num_public = 1;
+    for _ in 0..n {
+        let c = Fp::<P, N>::random(&mut rng);
+        let next_val = cs.witness[x].square().add(&c);
+        let next = cs.alloc(next_val);
+        // x·x = next − c   ⇔   ⟨x⟩·⟨x⟩ = ⟨next − c·1⟩
+        cs.enforce(
+            vec![(x, Fp::<P, N>::one())],
+            vec![(x, Fp::<P, N>::one())],
+            vec![(next, Fp::<P, N>::one()), (0, c.neg())],
+        );
+        x = next;
+    }
+    cs
+}
+
+/// Domain-separation constant for the square-chain generator.
+const SQUARE_CHAIN_SEED: u64 = 0x5a5a_1357_9bdf_2468;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+
+    #[test]
+    fn mul_chain_satisfied_both_fields() {
+        assert!(mul_chain::<Bn254FrParams, 4>(100, 1).is_satisfied());
+        assert!(mul_chain::<Bls12381FrParams, 4>(100, 1).is_satisfied());
+    }
+
+    #[test]
+    fn square_chain_satisfied() {
+        let cs = square_chain::<Bn254FrParams, 4>(64, 2);
+        assert!(cs.is_satisfied());
+        assert_eq!(cs.num_constraints(), 64);
+        assert_eq!(cs.num_variables(), 66); // 1 + input + 64 rounds
+    }
+
+    #[test]
+    fn different_seeds_different_witnesses() {
+        let a = mul_chain::<Bn254FrParams, 4>(10, 3);
+        let b = mul_chain::<Bn254FrParams, 4>(10, 4);
+        assert_ne!(a.witness[1], b.witness[1]);
+    }
+
+    #[test]
+    fn tampered_chain_fails() {
+        let mut cs = mul_chain::<Bn254FrParams, 4>(50, 5);
+        let last = cs.witness.len() - 1;
+        cs.witness[last] = cs.witness[last].add(&crate::ff::FrBn254::one());
+        assert!(!cs.is_satisfied());
+    }
+}

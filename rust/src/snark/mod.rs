@@ -1,0 +1,26 @@
+//! Groth16-shaped prover pipeline — the workload behind Table I.
+//!
+//! The paper motivates MSM acceleration by profiling the libsnark prover
+//! (§II-D): MSM-𝔾₁ + MSM-𝔾₂ consume ~88–92% of prover time, NTT most of
+//! the rest. To *measure* (not assume) that breakdown, this module
+//! implements the full prover compute pipeline:
+//!
+//! * [`r1cs`] — rank-1 constraint systems with a builder and synthetic
+//!   circuit generators ([`circuits`]);
+//! * [`qap`] — the R1CS→QAP reduction: witness evaluation over the NTT
+//!   domain, coset division by the vanishing polynomial, h(x) extraction;
+//! * [`setup`] — a *structure-preserving synthetic CRS* (sizes and group
+//!   placement match Groth16; the points are deterministic generator
+//!   multiples rather than toxic-waste powers — the proof is not
+//!   cryptographically sound, but every MSM/NTT the real prover executes
+//!   is executed here with the right sizes, fields and groups);
+//! * [`prover`] — the instrumented prover producing the Table I split.
+
+pub mod r1cs;
+pub mod circuits;
+pub mod qap;
+pub mod setup;
+pub mod prover;
+
+pub use prover::{ProfileBreakdown, Proof, Prover};
+pub use r1cs::ConstraintSystem;

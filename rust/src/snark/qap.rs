@@ -1,0 +1,156 @@
+//! R1CS → QAP: the NTT-heavy half of the prover (§II-D).
+//!
+//! Given constraint evaluations over an n-point domain, compute the
+//! quotient polynomial h(x) = (A(x)·B(x) − C(x)) / Z(x):
+//!
+//! 1. iNTT the per-constraint evaluation vectors → coefficient form
+//!    (3 inverse transforms);
+//! 2. coset-NTT each back to evaluations on g·⟨ω⟩ (3 forward transforms);
+//! 3. pointwise h_eval = (a·b − c) · Z(coset)⁻¹ — Z is constant on the
+//!    coset: Z(g·ωⁱ) = gⁿ − 1;
+//! 4. coset-iNTT → h coefficients (1 transform).
+//!
+//! Seven transforms of size n — matching the NTT share the paper's Table I
+//! attributes to a Groth16 prover.
+
+use crate::ff::{Field, FieldParams, Fp};
+use crate::ntt::domain::Domain;
+
+/// The quotient polynomial h and the domain it was computed over.
+pub struct QapWitness<P: FieldParams<N>, const N: usize> {
+    pub domain: Domain<P, N>,
+    /// Coefficients of h(x), degree < n − 1.
+    pub h_coeffs: Vec<Fp<P, N>>,
+}
+
+/// Compute h(x) from constraint evaluations (padded with zeros to the next
+/// power of two ≥ len + 1).
+pub fn compute_h<P: FieldParams<N>, const N: usize>(
+    a_evals: &[Fp<P, N>],
+    b_evals: &[Fp<P, N>],
+    c_evals: &[Fp<P, N>],
+) -> Option<QapWitness<P, N>> {
+    assert_eq!(a_evals.len(), b_evals.len());
+    assert_eq!(a_evals.len(), c_evals.len());
+    let n = (a_evals.len().max(2)).next_power_of_two();
+    let domain = Domain::<P, N>::new(n)?;
+
+    let mut a = a_evals.to_vec();
+    let mut b = b_evals.to_vec();
+    let mut c = c_evals.to_vec();
+    for v in [&mut a, &mut b, &mut c] {
+        v.resize(n, Fp::<P, N>::zero());
+    }
+
+    // evaluations → coefficients (3 iNTTs)
+    crate::ntt::intt_in_place(&mut a, &domain.omega);
+    crate::ntt::intt_in_place(&mut b, &domain.omega);
+    crate::ntt::intt_in_place(&mut c, &domain.omega);
+
+    // coefficients → coset evaluations (3 coset NTTs)
+    domain.coset_ntt(&mut a);
+    domain.coset_ntt(&mut b);
+    domain.coset_ntt(&mut c);
+
+    // Z(g·ωⁱ) = gⁿ − 1, constant over the coset
+    let z_coset = domain
+        .coset_gen
+        .pow_u64(n as u64)
+        .sub(&Fp::<P, N>::one());
+    let z_inv = z_coset.inv()?;
+
+    let mut h = Vec::with_capacity(n);
+    for i in 0..n {
+        h.push(a[i].mul(&b[i]).sub(&c[i]).mul(&z_inv));
+    }
+
+    // coset evaluations → h coefficients (1 coset iNTT)
+    domain.coset_intt(&mut h);
+    Some(QapWitness { domain, h_coeffs: h })
+}
+
+/// Verify the QAP identity A(x)·B(x) − C(x) = h(x)·Z(x) at a random point
+/// outside the domain — a Schwartz–Zippel self-check of the whole
+/// transformation (and, transitively, of the NTT stack).
+pub fn check_identity<P: FieldParams<N>, const N: usize>(
+    a_evals: &[Fp<P, N>],
+    b_evals: &[Fp<P, N>],
+    c_evals: &[Fp<P, N>],
+    qap: &QapWitness<P, N>,
+    rng: &mut crate::util::rng::Rng,
+) -> bool {
+    let n = qap.domain.n;
+    let x = Fp::<P, N>::random(rng);
+    if qap.domain.vanishing_at(&x).is_zero() {
+        return true; // astronomically unlikely; x in domain trivially holds
+    }
+    // interpolate A,B,C coefficient forms again for evaluation
+    let mut a = a_evals.to_vec();
+    let mut b = b_evals.to_vec();
+    let mut c = c_evals.to_vec();
+    for v in [&mut a, &mut b, &mut c] {
+        v.resize(n, Fp::<P, N>::zero());
+    }
+    crate::ntt::intt_in_place(&mut a, &qap.domain.omega);
+    crate::ntt::intt_in_place(&mut b, &qap.domain.omega);
+    crate::ntt::intt_in_place(&mut c, &qap.domain.omega);
+
+    let eval = |coeffs: &[Fp<P, N>]| {
+        let mut acc = Fp::<P, N>::zero();
+        for co in coeffs.iter().rev() {
+            acc = acc.mul(&x).add(co);
+        }
+        acc
+    };
+    let lhs = eval(&a).mul(&eval(&b)).sub(&eval(&c));
+    let rhs = eval(&qap.h_coeffs).mul(&qap.domain.vanishing_at(&x));
+    lhs == rhs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::Bn254FrParams;
+    use crate::snark::circuits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qap_identity_holds_for_satisfied_circuit() {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(50, 11);
+        assert!(cs.is_satisfied());
+        let (a, b, c) = cs.constraint_evals();
+        let qap = compute_h(&a, &b, &c).expect("domain fits");
+        let mut rng = Rng::new(42);
+        for _ in 0..3 {
+            assert!(check_identity(&a, &b, &c, &qap, &mut rng));
+        }
+    }
+
+    #[test]
+    fn qap_identity_fails_for_unsatisfied_circuit() {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(50, 12);
+        let (a, b, mut c) = cs.constraint_evals();
+        // corrupt one constraint's C evaluation: AB−C no longer divisible
+        c[7] = c[7].add(&crate::ff::FrBn254::one());
+        let qap = compute_h(&a, &b, &c).expect("computes regardless");
+        let mut rng = Rng::new(43);
+        assert!(!check_identity(&a, &b, &c, &qap, &mut rng));
+    }
+
+    #[test]
+    fn h_degree_bound() {
+        let cs = circuits::square_chain::<Bn254FrParams, 4>(30, 13);
+        let (a, b, c) = cs.constraint_evals();
+        let qap = compute_h(&a, &b, &c).unwrap();
+        // h degree ≤ n−2 ⇒ top coefficient zero
+        assert!(qap.h_coeffs.last().unwrap().is_zero());
+    }
+
+    #[test]
+    fn pads_to_power_of_two() {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(33, 14);
+        let (a, b, c) = cs.constraint_evals();
+        let qap = compute_h(&a, &b, &c).unwrap();
+        assert_eq!(qap.domain.n, 64);
+    }
+}

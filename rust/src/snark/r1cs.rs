@@ -1,0 +1,152 @@
+//! Rank-1 constraint systems: ⟨A_i, w⟩ · ⟨B_i, w⟩ = ⟨C_i, w⟩ for each
+//! constraint i, over the scalar field Fr.
+
+use crate::ff::{Field, FieldParams, Fp};
+
+/// A sparse linear combination over witness indices.
+pub type Lc<F> = Vec<(usize, F)>;
+
+/// An R1CS instance together with a satisfying witness.
+///
+/// Witness layout: `w[0] = 1` (the constant), then public inputs, then
+/// private assignments.
+#[derive(Clone, Debug)]
+pub struct ConstraintSystem<P: FieldParams<N>, const N: usize> {
+    pub a: Vec<Lc<Fp<P, N>>>,
+    pub b: Vec<Lc<Fp<P, N>>>,
+    pub c: Vec<Lc<Fp<P, N>>>,
+    pub witness: Vec<Fp<P, N>>,
+    pub num_public: usize,
+}
+
+impl<P: FieldParams<N>, const N: usize> ConstraintSystem<P, N> {
+    pub fn new() -> Self {
+        ConstraintSystem {
+            a: Vec::new(),
+            b: Vec::new(),
+            c: Vec::new(),
+            witness: vec![Fp::<P, N>::one()],
+            num_public: 0,
+        }
+    }
+
+    pub fn num_constraints(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn num_variables(&self) -> usize {
+        self.witness.len()
+    }
+
+    /// Add a variable with an assignment; returns its index.
+    pub fn alloc(&mut self, value: Fp<P, N>) -> usize {
+        self.witness.push(value);
+        self.witness.len() - 1
+    }
+
+    /// Add a constraint ⟨a,w⟩·⟨b,w⟩ = ⟨c,w⟩.
+    pub fn enforce(&mut self, a: Lc<Fp<P, N>>, b: Lc<Fp<P, N>>, c: Lc<Fp<P, N>>) {
+        self.a.push(a);
+        self.b.push(b);
+        self.c.push(c);
+    }
+
+    /// Evaluate a linear combination against the witness.
+    pub fn eval_lc(&self, lc: &Lc<Fp<P, N>>) -> Fp<P, N> {
+        let mut acc = Fp::<P, N>::zero();
+        for (idx, coeff) in lc {
+            acc = acc.add(&self.witness[*idx].mul(coeff));
+        }
+        acc
+    }
+
+    /// Check every constraint against the witness.
+    pub fn is_satisfied(&self) -> bool {
+        self.a
+            .iter()
+            .zip(&self.b)
+            .zip(&self.c)
+            .all(|((a, b), c)| self.eval_lc(a).mul(&self.eval_lc(b)) == self.eval_lc(c))
+    }
+
+    /// Per-constraint evaluations (⟨A_i,w⟩, ⟨B_i,w⟩, ⟨C_i,w⟩) — the QAP
+    /// prover's starting vectors.
+    pub fn constraint_evals(&self) -> (Vec<Fp<P, N>>, Vec<Fp<P, N>>, Vec<Fp<P, N>>) {
+        let n = self.num_constraints();
+        let mut av = Vec::with_capacity(n);
+        let mut bv = Vec::with_capacity(n);
+        let mut cv = Vec::with_capacity(n);
+        for i in 0..n {
+            av.push(self.eval_lc(&self.a[i]));
+            bv.push(self.eval_lc(&self.b[i]));
+            cv.push(self.eval_lc(&self.c[i]));
+        }
+        (av, bv, cv)
+    }
+}
+
+impl<P: FieldParams<N>, const N: usize> Default for ConstraintSystem<P, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::Bn254FrParams;
+    type Fr = crate::ff::FrBn254;
+    type Cs = ConstraintSystem<Bn254FrParams, 4>;
+
+    fn mul_constraint(cs: &mut Cs, x: usize, y: usize) -> usize {
+        let z = cs.alloc(cs.witness[x].mul(&cs.witness[y]));
+        cs.enforce(vec![(x, Fr::one())], vec![(y, Fr::one())], vec![(z, Fr::one())]);
+        z
+    }
+
+    #[test]
+    fn simple_multiplication_satisfied() {
+        let mut cs = Cs::new();
+        let x = cs.alloc(Fr::from_u64(3));
+        let y = cs.alloc(Fr::from_u64(5));
+        let z = mul_constraint(&mut cs, x, y);
+        assert_eq!(cs.witness[z], Fr::from_u64(15));
+        assert!(cs.is_satisfied());
+    }
+
+    #[test]
+    fn wrong_witness_fails() {
+        let mut cs = Cs::new();
+        let x = cs.alloc(Fr::from_u64(3));
+        let y = cs.alloc(Fr::from_u64(5));
+        let z = cs.alloc(Fr::from_u64(16)); // wrong product
+        cs.enforce(vec![(x, Fr::one())], vec![(y, Fr::one())], vec![(z, Fr::one())]);
+        assert!(!cs.is_satisfied());
+    }
+
+    #[test]
+    fn linear_combinations_with_constants() {
+        // (2x + 1) * y = z with x=4, y=3 → z=27
+        let mut cs = Cs::new();
+        let x = cs.alloc(Fr::from_u64(4));
+        let y = cs.alloc(Fr::from_u64(3));
+        let z = cs.alloc(Fr::from_u64(27));
+        cs.enforce(
+            vec![(x, Fr::from_u64(2)), (0, Fr::one())],
+            vec![(y, Fr::one())],
+            vec![(z, Fr::one())],
+        );
+        assert!(cs.is_satisfied());
+    }
+
+    #[test]
+    fn constraint_evals_match() {
+        let mut cs = Cs::new();
+        let x = cs.alloc(Fr::from_u64(7));
+        mul_constraint(&mut cs, x, x);
+        let (a, b, c) = cs.constraint_evals();
+        assert_eq!(a[0], Fr::from_u64(7));
+        assert_eq!(b[0], Fr::from_u64(7));
+        assert_eq!(c[0], Fr::from_u64(49));
+    }
+}

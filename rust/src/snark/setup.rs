@@ -1,0 +1,67 @@
+//! Structure-preserving synthetic CRS.
+//!
+//! Groth16's prover consumes query vectors of group elements whose *sizes*
+//! determine the MSM workload: per-variable 𝔾₁ queries (A, B₁, L), a
+//! per-variable 𝔾₂ query (B₂) and a per-degree 𝔾₁ query (H). This setup
+//! generates deterministic distinct points of exactly those shapes. It
+//! deliberately does **not** embed τ-power structure — no trusted setup,
+//! no toxic waste, not sound as a SNARK — because Table I only depends on
+//! the compute shape (documented in DESIGN.md §7).
+
+use crate::ec::{points, Affine, Bls12381G1, Bls12381G2, Bn254G1, Bn254G2, CurveParams};
+
+/// CRS query vectors for one curve family.
+pub struct Crs<G1: CurveParams, G2: CurveParams> {
+    /// Per-variable 𝔾₁ queries.
+    pub a_query: Vec<Affine<G1>>,
+    pub b1_query: Vec<Affine<G1>>,
+    pub l_query: Vec<Affine<G1>>,
+    /// Per-variable 𝔾₂ query.
+    pub b2_query: Vec<Affine<G2>>,
+    /// Degree-indexed 𝔾₁ query for h(x).
+    pub h_query: Vec<Affine<G1>>,
+}
+
+impl<G1: CurveParams, G2: CurveParams> Crs<G1, G2> {
+    /// Build for `num_vars` variables and an h-query of `domain_n − 1`.
+    pub fn synthesize(num_vars: usize, domain_n: usize, seed: u64) -> Self {
+        Crs {
+            a_query: points::generate_points_walk::<G1>(num_vars, seed ^ 0xA1),
+            b1_query: points::generate_points_walk::<G1>(num_vars, seed ^ 0xB1),
+            l_query: points::generate_points_walk::<G1>(num_vars, seed ^ 0x11),
+            b2_query: points::generate_points_walk::<G2>(num_vars, seed ^ 0xB2),
+            h_query: points::generate_points_walk::<G1>(domain_n.saturating_sub(1), seed ^ 0x41),
+        }
+    }
+}
+
+/// The two concrete families the paper evaluates.
+pub type CrsBn254 = Crs<Bn254G1, Bn254G2>;
+pub type CrsBls12381 = Crs<Bls12381G1, Bls12381G2>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_request() {
+        let crs = CrsBn254::synthesize(100, 128, 7);
+        assert_eq!(crs.a_query.len(), 100);
+        assert_eq!(crs.b2_query.len(), 100);
+        assert_eq!(crs.h_query.len(), 127);
+    }
+
+    #[test]
+    fn queries_are_distinct_streams() {
+        let crs = CrsBls12381::synthesize(10, 16, 8);
+        assert_ne!(crs.a_query[0].x, crs.b1_query[0].x);
+        assert_ne!(crs.a_query[0].x, crs.l_query[0].x);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = CrsBn254::synthesize(5, 8, 9);
+        let b = CrsBn254::synthesize(5, 8, 9);
+        assert_eq!(a.a_query[3].x, b.a_query[3].x);
+    }
+}

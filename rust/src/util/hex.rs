@@ -1,0 +1,92 @@
+//! Hex codecs for big integers stored as little-endian `u64` limb vectors.
+
+/// Parse a (optionally `0x`-prefixed) big-endian hex string into `n` little-
+/// endian u64 limbs. Errors if the value needs more than `n` limbs or
+/// contains a non-hex character.
+pub fn hex_to_limbs(s: &str, n: usize) -> Result<Vec<u64>, String> {
+    let s = s.trim().trim_start_matches("0x").trim_start_matches("0X");
+    if s.is_empty() {
+        return Err("empty hex string".into());
+    }
+    let mut limbs = vec![0u64; n];
+    // Walk nibbles from the least-significant end ('_' separators skipped
+    // *before* positions are assigned).
+    for (i, c) in s.bytes().rev().filter(|&c| c != b'_').enumerate() {
+        let v = match c {
+            b'0'..=b'9' => (c - b'0') as u64,
+            b'a'..=b'f' => (c - b'a' + 10) as u64,
+            b'A'..=b'F' => (c - b'A' + 10) as u64,
+            _ => return Err(format!("invalid hex char {:?}", c as char)),
+        };
+        let limb = i / 16;
+        if limb >= n {
+            if v != 0 {
+                return Err(format!("hex value does not fit in {n} limbs"));
+            }
+            continue;
+        }
+        limbs[limb] |= v << (4 * (i % 16));
+    }
+    Ok(limbs)
+}
+
+/// Render little-endian limbs as a `0x…` big-endian hex string without
+/// leading zeros (but at least one digit).
+pub fn limbs_to_hex(limbs: &[u64]) -> String {
+    let mut s = String::new();
+    let mut started = false;
+    for &l in limbs.iter().rev() {
+        if started {
+            s.push_str(&format!("{l:016x}"));
+        } else if l != 0 {
+            s.push_str(&format!("{l:x}"));
+            started = true;
+        }
+    }
+    if !started {
+        s.push('0');
+    }
+    format!("0x{s}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let l = hex_to_limbs("0xdeadbeef", 2).unwrap();
+        assert_eq!(l, vec![0xdeadbeef, 0]);
+        assert_eq!(limbs_to_hex(&l), "0xdeadbeef");
+    }
+
+    #[test]
+    fn roundtrip_multi_limb() {
+        let h = "0x1a0111ea397fe69a4b1ba7b6434bacd764774b84f38512bf6730d2a0f6b0f6241eabfffeb153ffffb9feffffffffaaab";
+        let l = hex_to_limbs(h, 6).unwrap();
+        assert_eq!(limbs_to_hex(&l), h);
+    }
+
+    #[test]
+    fn rejects_overflow() {
+        assert!(hex_to_limbs("0x10000000000000000", 1).is_err());
+        // leading zeros beyond capacity are fine
+        assert!(hex_to_limbs("0x0000000000000000f", 1).is_ok());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(hex_to_limbs("0xzz", 1).is_err());
+        assert!(hex_to_limbs("", 1).is_err());
+    }
+
+    #[test]
+    fn zero_renders() {
+        assert_eq!(limbs_to_hex(&[0, 0]), "0x0");
+    }
+
+    #[test]
+    fn underscores_allowed() {
+        assert_eq!(hex_to_limbs("0xdead_beef", 1).unwrap(), vec![0xdeadbeef]);
+    }
+}

@@ -1,0 +1,60 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment carries no `rand`, `serde`, `proptest` or
+//! `criterion`, so the pieces of those crates the project needs are
+//! implemented here from scratch: a seedable RNG ([`rng`]), a JSON emitter
+//! ([`json`]), hex codecs ([`hex`]), wall-clock instrumentation
+//! ([`stopwatch`]), a tiny leveled logger ([`log`]) and a miniature
+//! property-testing harness ([`prop`]).
+
+pub mod rng;
+pub mod hex;
+pub mod json;
+pub mod stopwatch;
+pub mod log;
+pub mod prop;
+
+pub use rng::Rng;
+pub use stopwatch::Stopwatch;
+
+/// Format a point count like the paper's axes: `1K`, `64M`, …
+pub fn human_count(n: u64) -> String {
+    if n >= 1_000_000 && n % 1_000_000 == 0 {
+        format!("{}M", n / 1_000_000)
+    } else if n >= 1_000 && n % 1_000 == 0 {
+        format!("{}K", n / 1_000)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Format seconds with adaptive precision (matches the paper's tables).
+pub fn human_secs(s: f64) -> String {
+    if s < 0.001 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_count_formats() {
+        assert_eq!(human_count(1_000), "1K");
+        assert_eq!(human_count(64_000_000), "64M");
+        assert_eq!(human_count(123), "123");
+        assert_eq!(human_count(1_500), "1500"); // not a round K
+    }
+
+    #[test]
+    fn human_secs_formats() {
+        assert_eq!(human_secs(2.5), "2.50s");
+        assert_eq!(human_secs(0.0021), "2.10ms");
+        assert_eq!(human_secs(0.0000005), "0.5us");
+    }
+}

@@ -1,0 +1,120 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure `FnMut(&mut Rng) -> Result<(), String>` run for a
+//! configurable number of cases with deterministic per-case seeds; on
+//! failure the harness reports the case index and seed so the exact case can
+//! be replayed with `check_seeded`.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Config {
+    /// Fixed default seed, recorded so failures are reproducible.
+    pub const DEFAULT_SEED: u64 = 0x1f2b_a5e5_eed5_2024;
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // IFZKP_PROP_CASES scales CI effort without touching code.
+        let cases = std::env::var("IFZKP_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Config { cases, seed: Config::DEFAULT_SEED }
+    }
+}
+
+/// Run `prop` for `cfg.cases` cases; panic with diagnostics on failure.
+pub fn check_with(cfg: Config, name: &str, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (replay seed {case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Run with default config.
+pub fn check(name: &str, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check_with(Config::default(), name, prop)
+}
+
+/// Replay a single case by seed (for debugging a reported failure).
+pub fn check_seeded(seed: u64, name: &str, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed for seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Equality helper producing a useful message.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 addition commutes", |rng| {
+            let (a, b) = (rng.next_u64() >> 1, rng.next_u64() >> 1);
+            prop_assert!(a + b == b + a, "{a} + {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |_| Err("always fails".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen1 = Vec::new();
+        check_with(Config { cases: 5, seed: 1 }, "collect", |rng| {
+            seen1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check_with(Config { cases: 5, seed: 1 }, "collect", |rng| {
+            seen2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

@@ -1,0 +1,114 @@
+//! Wall-clock instrumentation mirroring the paper's methodology (§V-A):
+//! "a high-resolution stopwatch on the host side" plus named accumulating
+//! timers for the prover profiling breakdown (Table I).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates time under string labels — the instrumentation used to
+/// regenerate the paper's Table I prover breakdown.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    acc: BTreeMap<String, Duration>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `label`.
+    pub fn time<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(label, t0.elapsed());
+        out
+    }
+
+    /// Add externally-measured time under `label`.
+    pub fn add(&mut self, label: &str, d: Duration) {
+        *self.acc.entry(label.to_string()).or_default() += d;
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.values().sum()
+    }
+
+    pub fn get(&self, label: &str) -> Duration {
+        self.acc.get(label).copied().unwrap_or_default()
+    }
+
+    /// Percentage breakdown (label → % of total), the Table I format.
+    pub fn percentages(&self) -> Vec<(String, f64)> {
+        let total = self.total().as_secs_f64();
+        self.acc
+            .iter()
+            .map(|(k, v)| {
+                let pct = if total > 0.0 {
+                    100.0 * v.as_secs_f64() / total
+                } else {
+                    0.0
+                };
+                (k.clone(), pct)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.secs() >= 0.002);
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = Profiler::new();
+        p.add("msm_g1", Duration::from_millis(30));
+        p.add("msm_g1", Duration::from_millis(30));
+        p.add("ntt", Duration::from_millis(40));
+        assert_eq!(p.get("msm_g1"), Duration::from_millis(60));
+        let pct = p.percentages();
+        let g1 = pct.iter().find(|(k, _)| k == "msm_g1").unwrap().1;
+        assert!((g1 - 60.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn profiler_time_closure() {
+        let mut p = Profiler::new();
+        let v = p.time("work", || 7);
+        assert_eq!(v, 7);
+        assert!(p.total() > Duration::ZERO);
+    }
+}

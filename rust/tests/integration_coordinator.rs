@@ -1,0 +1,198 @@
+//! Integration: the coordinator end-to-end — correctness of served results,
+//! affinity behaviour, backpressure, batching, shutdown.
+
+use ifzkp::coordinator::{Coordinator, CoordinatorConfig, DeviceDesc, PointSetRegistry};
+use ifzkp::coordinator::batcher::BatchPolicy;
+use ifzkp::ec::{points, Bn254G1};
+use ifzkp::fpga::{CurveId, SabConfig};
+use ifzkp::msm;
+use std::sync::Arc;
+
+fn registry_with_sets(
+    sizes: &[usize],
+) -> (PointSetRegistry<Bn254G1>, Vec<ifzkp::coordinator::PointSetId>, Vec<Vec<ifzkp::ec::Affine<Bn254G1>>>)
+{
+    let mut reg = PointSetRegistry::new();
+    let mut ids = Vec::new();
+    let mut raw = Vec::new();
+    for (i, &n) in sizes.iter().enumerate() {
+        let pts = points::generate_points_walk::<Bn254G1>(n, 5000 + i as u64);
+        ids.push(reg.register(pts.clone()));
+        raw.push(pts);
+    }
+    (reg, ids, raw)
+}
+
+#[test]
+fn served_results_match_direct_computation() {
+    let (reg, ids, raw) = registry_with_sets(&[256, 256]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![
+            DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 30),
+            DeviceDesc::<Bn254G1>::native(2),
+        ],
+        reg,
+    );
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for (i, &ps) in ids.iter().cycle().take(8).enumerate() {
+        let scalars = Arc::new(points::generate_scalars(256, 254, 100 + i as u64));
+        expected.push(msm::msm(&raw[if i % 2 == 0 { 0 } else { 1 }], &scalars));
+        rxs.push(coord.submit(ps, scalars).expect("submit ok").1);
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let res = rx.recv().expect("job completes");
+        assert!(res.output.eq_point(&want), "served result mismatch");
+        assert!(res.service_s >= 0.0 && res.device_s > 0.0);
+    }
+    let snap = coord.counters.snapshot();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.submitted, 8);
+    coord.shutdown();
+}
+
+#[test]
+fn affinity_hits_accumulate_for_hot_set() {
+    let (reg, ids, _) = registry_with_sets(&[128]);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            // batches of 1 so every submit is routed individually
+            batch: BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(100) },
+            ..Default::default()
+        },
+        vec![DeviceDesc::<Bn254G1>::native(1), DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..10 {
+        let scalars = Arc::new(points::generate_scalars(128, 254, i));
+        rxs.push(coord.submit(ids[0], scalars).unwrap().1);
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let snap = coord.counters.snapshot();
+    // first route uploads, the rest should hit
+    assert_eq!(snap.affinity_misses, 1, "exactly one upload: {snap:?}");
+    assert_eq!(snap.affinity_hits, 9, "{snap:?}");
+    assert!(snap.hit_rate() > 0.85);
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_point_set_rejected() {
+    let (reg, _, _) = registry_with_sets(&[16]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let scalars = Arc::new(points::generate_scalars(16, 254, 1));
+    assert!(coord.submit(ifzkp::coordinator::PointSetId(999), scalars).is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let (reg, ids, _) = registry_with_sets(&[512]);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            queue_capacity: 2,
+            batch: BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_millis(50) },
+        },
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    // flood much faster than one slow device drains
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for i in 0..200 {
+        let scalars = Arc::new(points::generate_scalars(512, 254, i));
+        match coord.submit(ids[0], scalars) {
+            Ok((_, rx)) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections (accepted={accepted})");
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn batching_groups_same_point_set() {
+    let (reg, ids, _) = registry_with_sets(&[64]);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            batch: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(20) },
+            ..Default::default()
+        },
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        let scalars = Arc::new(points::generate_scalars(64, 254, 300 + i));
+        rxs.push(coord.submit(ids[0], scalars).unwrap().1);
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let snap = coord.counters.snapshot();
+    // 8 jobs in batches of ≤4 → at least 2 route decisions, at most 8;
+    // affinity ⇒ exactly 1 miss
+    assert_eq!(snap.affinity_misses, 1);
+    assert!(snap.affinity_hits >= 1);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_pending_work() {
+    let (reg, ids, _) = registry_with_sets(&[128]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let scalars = Arc::new(points::generate_scalars(128, 254, 400 + i));
+        rxs.push(coord.submit(ids[0], scalars).unwrap().1);
+    }
+    coord.shutdown(); // must drain, not drop
+    let mut done = 0;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            done += 1;
+        }
+    }
+    assert_eq!(done, 4, "shutdown must drain all accepted jobs");
+}
+
+#[test]
+fn latency_histogram_populated() {
+    let (reg, ids, _) = registry_with_sets(&[64]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(2)],
+        reg,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let scalars = Arc::new(points::generate_scalars(64, 254, 500 + i));
+        rxs.push(coord.submit(ids[0], scalars).unwrap().1);
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert_eq!(coord.latency.count(), 6);
+    assert!(coord.latency.mean_secs() > 0.0);
+    assert!(coord.latency.quantile_secs(0.99) >= coord.latency.quantile_secs(0.5));
+    coord.shutdown();
+}

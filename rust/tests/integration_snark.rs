@@ -1,0 +1,85 @@
+//! Integration: the Groth16-shaped prover pipeline end-to-end on both curve
+//! families, including the Table I shape assertions at a non-trivial size.
+
+use ifzkp::ec::{Bls12381G1, Bls12381G2, Bn254G1, Bn254G2};
+use ifzkp::ff::params::{Bls12381FrParams, Bn254FrParams};
+use ifzkp::snark::{circuits, prover::Prover, qap, setup::Crs};
+use ifzkp::util::rng::Rng;
+
+#[test]
+fn full_pipeline_bn254() {
+    let cs = circuits::mul_chain::<Bn254FrParams, 4>(1000, 31337);
+    assert!(cs.is_satisfied());
+    let n = cs.num_constraints().next_power_of_two();
+    let crs = Crs::<Bn254G1, Bn254G2>::synthesize(cs.num_variables(), n, 1);
+    let (proof, prof) = Prover::new(crs).prove(&cs);
+    assert!(!proof.a.is_infinity() && !proof.b.is_infinity() && !proof.c.is_infinity());
+    assert!(proof.a.is_on_curve() && proof.b.is_on_curve() && proof.c.is_on_curve());
+    // Table I shape: MSM dominates; G2 share substantial
+    assert!(prof.msm_g1_pct + prof.msm_g2_pct > 65.0, "{prof:?}");
+    assert!(prof.msm_g2_pct > 15.0, "{prof:?}");
+    assert!(prof.ntt_pct < 30.0, "{prof:?}");
+}
+
+#[test]
+fn full_pipeline_bls12_381() {
+    let cs = circuits::square_chain::<Bls12381FrParams, 4>(800, 31338);
+    assert!(cs.is_satisfied());
+    let n = cs.num_constraints().next_power_of_two();
+    let crs = Crs::<Bls12381G1, Bls12381G2>::synthesize(cs.num_variables(), n, 2);
+    let (proof, prof) = Prover::new(crs).prove(&cs);
+    assert!(!proof.a.is_infinity());
+    assert!(prof.msm_g1_pct + prof.msm_g2_pct > 60.0, "{prof:?}");
+}
+
+#[test]
+fn qap_identity_is_the_correctness_seal() {
+    // satisfied circuit ⇒ identity holds at random points;
+    // corrupt one witness value ⇒ identity breaks.
+    let mut cs = circuits::mul_chain::<Bn254FrParams, 4>(500, 31339);
+    let (a, b, c) = cs.constraint_evals();
+    let qapw = qap::compute_h(&a, &b, &c).unwrap();
+    let mut rng = Rng::new(55);
+    for _ in 0..5 {
+        assert!(qap::check_identity(&a, &b, &c, &qapw, &mut rng));
+    }
+
+    // corrupt
+    use ifzkp::ff::Field;
+    let idx = cs.witness.len() / 2;
+    cs.witness[idx] = cs.witness[idx].add(&ifzkp::ff::FrBn254::one());
+    assert!(!cs.is_satisfied());
+    let (a2, b2, c2) = cs.constraint_evals();
+    let qapw2 = qap::compute_h(&a2, &b2, &c2).unwrap();
+    assert!(!qap::check_identity(&a2, &b2, &c2, &qapw2, &mut rng));
+}
+
+#[test]
+fn profile_split_stable_across_runs() {
+    let cs = circuits::mul_chain::<Bn254FrParams, 4>(600, 31340);
+    let n = cs.num_constraints().next_power_of_two();
+    let crs = Crs::<Bn254G1, Bn254G2>::synthesize(cs.num_variables(), n, 3);
+    let prover = Prover::new(crs);
+    let (_, p1) = prover.prove(&cs);
+    let (_, p2) = prover.prove(&cs);
+    // percentages shouldn't swing wildly between identical runs
+    assert!((p1.msm_g2_pct - p2.msm_g2_pct).abs() < 15.0, "{p1:?} vs {p2:?}");
+}
+
+#[test]
+fn g2_share_grows_with_circuit_size() {
+    // Table I's G2 dominance emerges with scale (fixed costs wash out).
+    let share = |n: usize| {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(n, 31341);
+        let dn = cs.num_constraints().next_power_of_two();
+        let crs = Crs::<Bn254G1, Bn254G2>::synthesize(cs.num_variables(), dn, 4);
+        let (_, prof) = Prover::new(crs).prove(&cs);
+        prof.msm_g2_pct
+    };
+    let small = share(200);
+    let large = share(2000);
+    assert!(
+        large > small - 8.0,
+        "G2 share should not collapse with size: {small} -> {large}"
+    );
+}

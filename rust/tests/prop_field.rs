@@ -1,0 +1,128 @@
+//! Property tests: field axioms, backend agreement, encoding roundtrips.
+
+use ifzkp::ff::{barrett, bigint, limbs16, Field, Fp2Bn254, FpBls12381, FpBn254, FrBls12381};
+use ifzkp::util::prop::{check, check_with, Config};
+use ifzkp::{prop_assert, prop_assert_eq};
+
+fn axioms<F: Field>(name: &'static str) {
+    check(&format!("{name}: ring axioms"), |rng| {
+        let a = F::random(rng);
+        let b = F::random(rng);
+        let c = F::random(rng);
+        prop_assert_eq!(a.add(&b), b.add(&a));
+        prop_assert_eq!(a.mul(&b), b.mul(&a));
+        prop_assert_eq!(a.add(&b).add(&c), a.add(&b.add(&c)));
+        prop_assert_eq!(a.mul(&b).mul(&c), a.mul(&b.mul(&c)));
+        prop_assert_eq!(a.mul(&b.add(&c)), a.mul(&b).add(&a.mul(&c)));
+        prop_assert_eq!(a.add(&F::zero()), a);
+        prop_assert_eq!(a.mul(&F::one()), a);
+        prop_assert_eq!(a.mul(&F::zero()), F::zero());
+        prop_assert_eq!(a.sub(&a), F::zero());
+        prop_assert_eq!(a.square(), a.mul(&a));
+        prop_assert_eq!(a.neg().neg(), a);
+        Ok(())
+    });
+    check(&format!("{name}: inverses"), |rng| {
+        let a = F::random(rng);
+        if !a.is_zero() {
+            let inv = a.inv().ok_or("inverse must exist")?;
+            prop_assert_eq!(a.mul(&inv), F::one());
+        }
+        Ok(())
+    });
+    check(&format!("{name}: pow laws"), |rng| {
+        let a = F::random(rng);
+        let e1 = rng.below(1 << 20);
+        let e2 = rng.below(1 << 20);
+        prop_assert_eq!(a.pow_u64(e1).mul(&a.pow_u64(e2)), a.pow_u64(e1 + e2));
+        Ok(())
+    });
+}
+
+#[test]
+fn fp_bn254_axioms() {
+    axioms::<FpBn254>("FpBn254");
+}
+
+#[test]
+fn fp_bls_axioms() {
+    axioms::<FpBls12381>("FpBls12381");
+}
+
+#[test]
+fn fr_bls_axioms() {
+    axioms::<FrBls12381>("FrBls12381");
+}
+
+#[test]
+fn fp2_axioms() {
+    axioms::<Fp2Bn254>("Fp2Bn254");
+}
+
+#[test]
+fn montgomery_and_barrett_backends_agree() {
+    check("mont == barrett (bn254 + bls)", |rng| {
+        let a = FpBn254::random(rng);
+        let b = FpBn254::random(rng);
+        let mut want = a.mul(&b).to_canonical().to_vec();
+        bigint::normalize(&mut want);
+        let got = barrett::BN254_FP_BARRETT.mul(&a.to_canonical(), &b.to_canonical());
+        prop_assert_eq!(got, want);
+
+        let a = FpBls12381::random(rng);
+        let b = FpBls12381::random(rng);
+        let mut want = a.mul(&b).to_canonical().to_vec();
+        bigint::normalize(&mut want);
+        let got = barrett::BLS12_381_FP_BARRETT.mul(&a.to_canonical(), &b.to_canonical());
+        prop_assert_eq!(got, want);
+        Ok(())
+    });
+}
+
+#[test]
+fn limb16_roundtrip_prop() {
+    check("u64 <-> u16 limbs roundtrip", |rng| {
+        let n = 1 + rng.below(8) as usize;
+        let limbs = rng.words(n);
+        let u16s = limbs16::u64_to_u16_limbs(&limbs);
+        prop_assert_eq!(limbs16::u16_limbs_to_u64(&u16s)?, limbs);
+        Ok(())
+    });
+}
+
+#[test]
+fn canonical_roundtrip_prop() {
+    check_with(Config { cases: 128, seed: 7 }, "to/from canonical", |rng| {
+        let a = FpBls12381::random(rng);
+        let c = a.to_canonical();
+        let back = FpBls12381::from_canonical(c).ok_or("canonical must be < p")?;
+        prop_assert_eq!(back, a);
+        // hex roundtrip too
+        prop_assert_eq!(FpBls12381::from_hex(&a.to_hex())?, a);
+        Ok(())
+    });
+}
+
+#[test]
+fn sqrt_of_square_roundtrips_prop() {
+    check_with(Config { cases: 16, seed: 8 }, "sqrt(a^2) = +-a", |rng| {
+        let a = FpBn254::random(rng);
+        let sq = a.square();
+        let r = ifzkp::ff::sqrt::sqrt(&sq).ok_or("square must have root")?;
+        prop_assert!(r == a || r == a.neg(), "root mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn frobenius_fixes_base_field_prop() {
+    // a^p = a for a ∈ Fp (Frobenius is identity on the prime field) —
+    // exercises pow_limbs against the modulus itself.
+    use ifzkp::ff::fp::FieldParams;
+    check_with(Config { cases: 8, seed: 9 }, "frobenius", |rng| {
+        let a = FpBn254::random(rng);
+        let p = ifzkp::ff::params::Bn254FpParams::MODULUS;
+        prop_assert_eq!(a.pow_limbs(&p), a);
+        Ok(())
+    });
+}

@@ -1,0 +1,147 @@
+//! Property tests: MSM algorithm equivalence and coordinator invariants
+//! under randomized workloads.
+
+use ifzkp::coordinator::pointcache::{Admission, DeviceDdr};
+use ifzkp::coordinator::request::PointSetId;
+use ifzkp::coordinator::router;
+use ifzkp::ec::{points, Bn254G1};
+use ifzkp::msm::{self, MsmConfig, Reduction};
+use ifzkp::prop_assert;
+use ifzkp::util::prop::{check_with, Config};
+
+#[test]
+fn pippenger_equals_naive_random_sizes() {
+    check_with(Config { cases: 12, seed: 0xA11CE }, "pippenger == naive", |rng| {
+        let m = 1 + rng.below(200) as usize;
+        let k = 2 + rng.below(13) as u32;
+        let k2 = 1 + rng.below(k as u64) as u32;
+        let red = if rng.bool() {
+            Reduction::RunningSum
+        } else {
+            Reduction::Recursive { k2 }
+        };
+        let w = points::workload::<Bn254G1>(m, rng.next_u64());
+        let naive = msm::naive::msm(&w.points, &w.scalars);
+        let fast = msm::msm_pippenger(
+            &w.points,
+            &w.scalars,
+            &MsmConfig { window_bits: k, reduction: red },
+        );
+        prop_assert!(fast.eq_point(&naive), "m={m} k={k} {red:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_equals_serial_random_threads() {
+    check_with(Config { cases: 8, seed: 0xB0B }, "parallel == serial", |rng| {
+        let m = 16 + rng.below(150) as usize;
+        let threads = 1 + rng.below(9) as usize;
+        let w = points::workload::<Bn254G1>(m, rng.next_u64());
+        let cfg = MsmConfig::default();
+        let a = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+        let b = msm::parallel::msm(&w.points, &w.scalars, &cfg, threads);
+        prop_assert!(a.eq_point(&b), "threads={threads}");
+        Ok(())
+    });
+}
+
+#[test]
+fn ddr_cache_invariants() {
+    check_with(Config { cases: 64, seed: 0xCACE }, "DDR cache invariants", |rng| {
+        let cap = 1000 + rng.below(9000);
+        let mut ddr = DeviceDdr::new(cap);
+        let mut resident_model: std::collections::HashSet<u64> = Default::default();
+        for _ in 0..50 {
+            let id = rng.below(12);
+            let bytes = 100 + rng.below(cap);
+            match ddr.admit(PointSetId(id), bytes) {
+                Admission::Hit => {
+                    prop_assert!(resident_model.contains(&id), "hit on non-resident {id}");
+                }
+                Admission::Miss { upload_bytes, .. } => {
+                    prop_assert!(upload_bytes == bytes, "upload bytes mismatch");
+                    resident_model.insert(id);
+                }
+                Admission::TooLarge => {
+                    prop_assert!(bytes > cap, "TooLarge but fits: {bytes} <= {cap}");
+                    continue;
+                }
+            }
+            prop_assert!(ddr.used_bytes() <= cap, "over capacity");
+            // the model over-approximates (evictions happen underneath);
+            // prune it to the truth and check agreement
+            resident_model.retain(|&x| ddr.is_resident(PointSetId(x)));
+            prop_assert!(
+                resident_model.len() == ddr.resident_count(),
+                "residency divergence"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_routes_and_places_correctly() {
+    check_with(Config { cases: 64, seed: 0x40FE }, "router placement", |rng| {
+        let ndev = 1 + rng.below(4) as usize;
+        let caps: Vec<u64> = (0..ndev).map(|_| 1000 + rng.below(5000)).collect();
+        let mut ddrs: Vec<DeviceDdr> = caps.iter().map(|&c| DeviceDdr::new(c)).collect();
+        let loads: Vec<usize> = (0..ndev).map(|_| rng.below(100) as usize).collect();
+        for _ in 0..20 {
+            let ps = PointSetId(rng.below(6));
+            let bytes = 1 + rng.below(7000);
+            let feasible = caps.iter().any(|&c| bytes <= c);
+            match router::route(&mut ddrs, &loads, ps, bytes) {
+                None => prop_assert!(!feasible, "router refused feasible {bytes}"),
+                Some(r) => {
+                    prop_assert!(r.device < ndev, "device index out of range");
+                    prop_assert!(
+                        ddrs[r.device].is_resident(ps),
+                        "routed device must hold the set afterwards"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_affinity_is_sticky() {
+    check_with(Config { cases: 32, seed: 0x57CC }, "affinity stickiness", |rng| {
+        let mut ddrs: Vec<DeviceDdr> = (0..3).map(|_| DeviceDdr::new(10_000)).collect();
+        let loads =
+            vec![rng.below(10) as usize, rng.below(10) as usize, rng.below(10) as usize];
+        let ps = PointSetId(1);
+        let first = router::route(&mut ddrs, &loads, ps, 500).ok_or("must route")?;
+        for _ in 0..5 {
+            let again = router::route(&mut ddrs, &loads, ps, 500).ok_or("must route")?;
+            prop_assert!(again.admission == Admission::Hit, "expected hit");
+            prop_assert!(again.device == first.device, "affinity moved");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reduction_strategies_equivalent_on_random_buckets() {
+    use ifzkp::ec::Jacobian;
+    check_with(Config { cases: 10, seed: 0xBCE7 }, "reduce equivalence", |rng| {
+        let k = 3 + rng.below(7) as u32;
+        let nb = 1usize << k;
+        let g = Jacobian::<Bn254G1>::generator();
+        let mut buckets = vec![Jacobian::<Bn254G1>::infinity(); nb];
+        for b in buckets.iter_mut() {
+            if rng.f64() < 0.4 {
+                let mult = 1 + rng.below(1 << 20);
+                *b = ifzkp::ec::scalar::mul::<Bn254G1>(&g, &[mult, 0, 0, 0]);
+            }
+        }
+        let want = msm::pippenger::reduce_running_sum(&buckets);
+        let k2 = 1 + rng.below(k as u64) as u32;
+        let got = msm::pippenger::reduce_recursive(&buckets, k, k2);
+        prop_assert!(got.eq_point(&want), "k={k} k2={k2}");
+        Ok(())
+    });
+}
