@@ -32,11 +32,9 @@ fn main() {
                 let r = rm.system(v, s);
                 let fits = IA840F.fits(&r);
                 let cfg = SabConfig {
-                    curve,
                     variant: v,
-                    scaling: s,
                     reduction: ReductionKind::Recursive { k2: 6 },
-                    rbam_units: 1,
+                    ..SabConfig::paper(curve, s)
                 };
                 let t = SabModel::new(cfg).time_msm(m);
                 let p = power::estimate(v, s);
@@ -93,6 +91,44 @@ fn main() {
         ascii_table(
             "IS-RBAM sub-window sweep (BLS12-381 S=2; seconds per MSM)",
             &["reduction", "t(10K)", "t(16M)"],
+            &rows,
+        )
+    );
+
+    // ---- 2b. signed-digit buckets (the slicing knob) ---------------------
+    let mut rows = Vec::new();
+    for (label, cfg) in [
+        ("unsigned (paper)", SabConfig::paper(CurveId::Bls12381, 2)),
+        ("signed", SabConfig::paper_signed(CurveId::Bls12381, 2)),
+        (
+            "unsigned run-sum",
+            SabConfig {
+                reduction: ReductionKind::RunningSum,
+                ..SabConfig::paper(CurveId::Bls12381, 2)
+            },
+        ),
+        (
+            "signed run-sum",
+            SabConfig {
+                reduction: ReductionKind::RunningSum,
+                ..SabConfig::paper_signed(CurveId::Bls12381, 2)
+            },
+        ),
+    ] {
+        let plan = cfg.plan();
+        rows.push(vec![
+            label.into(),
+            format!("{}", plan.live_buckets()),
+            format!("{}", plan.windows),
+            format!("{:.4}", SabModel::new(cfg).time_msm(100_000).total_s()),
+            format!("{:.3}", SabModel::new(cfg).time_msm(m).total_s()),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            "Signed-digit buckets (BLS12-381 S=2): half the buckets, half the serial chain",
+            &["slicing", "buckets/window", "windows", "t(100K)", "t(16M)"],
             &rows,
         )
     );

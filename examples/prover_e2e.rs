@@ -90,6 +90,15 @@ fn main() -> anyhow::Result<()> {
     let res_b1 = rx_b1.recv()?;
     let res_l = rx_l.recv()?;
     let res_h = rx_h.recv()?;
+    // a delivered-but-failed result carries the identity point — refuse to
+    // assemble a proof from it
+    for (name, res) in
+        [("A", &res_a), ("B1", &res_b1), ("L", &res_l), ("H", &res_h)]
+    {
+        if let Some(err) = &res.error {
+            anyhow::bail!("{name} MSM failed on device {}: {err}", res.device);
+        }
+    }
     println!(
         "[4] 4x G1 MSM served ({}): device times {:.4}/{:.4}/{:.4}/{:.4} s (modeled FPGA)",
         human_secs(sw.secs()),
@@ -118,14 +127,14 @@ fn main() -> anyhow::Result<()> {
     // 6. optional: replay the A MSM through the PJRT UDA engine
     if use_engine {
         let dir = ifzkp::runtime::artifact::default_dir();
-        if dir.join("manifest.json").exists() {
+        if dir.join("manifest.json").exists() && ifzkp::runtime::PjrtContext::available() {
             println!("[7] engine replay: loading AOT artifact + compiling on PJRT…");
             let ctx = ifzkp::runtime::PjrtContext::cpu()?;
             let manifest = ifzkp::runtime::ArtifactManifest::load(&dir)?;
             let sw = Stopwatch::start();
             let engine = ifzkp::runtime::UdaEngine::<Bn254G1>::load(&ctx, &manifest)?;
             println!("    compiled in {}", human_secs(sw.secs()));
-            let cfg = MsmConfig { window_bits: 8, reduction: Default::default() };
+            let cfg = MsmConfig::new(8, Default::default());
             let take = 512.min(cs.num_variables());
             let sw = Stopwatch::start();
             let (eng_out, stats) = ifzkp::runtime::msm_engine::msm_engine(

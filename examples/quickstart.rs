@@ -28,7 +28,9 @@ fn demo<C: CurveParams>(label: &str, m: usize) {
     );
 
     // 2. bucket method (Algorithm 2), the paper's hardware window k=12
-    let cfg = MsmConfig { window_bits: 12, reduction: Reduction::Recursive { k2: 6 } };
+    // (signed-digit buckets by default: half the buckets, half the serial
+    // reduce chain)
+    let cfg = MsmConfig::new(12, Reduction::Recursive { k2: 6 });
     let sw = Stopwatch::start();
     let (bucket, bucket_ops) =
         ifzkp::ff::opcount::measure(|| msm::msm_pippenger(&w.points, &w.scalars, &cfg));

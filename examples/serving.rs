@@ -60,10 +60,18 @@ fn main() -> anyhow::Result<()> {
     }
     let mut device_hist = [0usize; 8];
     let mut sum_device_s = 0.0;
+    let mut failed = 0usize;
     for rx in receivers {
         let res = rx.recv()?;
+        if !res.is_ok() {
+            failed += 1; // delivered device failure (distinct from shutdown)
+            continue;
+        }
         device_hist[res.device.min(7)] += 1;
         sum_device_s += res.device_s;
+    }
+    if failed > 0 {
+        println!("WARNING: {failed} jobs returned device failures");
     }
     let wall = sw.secs();
 

@@ -1,0 +1,63 @@
+"""Deterministic, dependency-free fallback for the tiny slice of the
+`hypothesis` API these tests use (`given`, `settings`,
+`strategies.integers`).
+
+The real hypothesis is preferred when installed (CI installs it); this
+fallback keeps the oracle sweeps runnable in offline environments. Cases
+are drawn from a fixed-seed RNG, so runs are reproducible. Unbounded
+integer strategies sample across magnitudes (8..384 bits) to hit both
+small edge cases and full-width operands.
+"""
+
+import functools
+import random
+
+
+class _IntStrategy:
+    def __init__(self, min_value=None, max_value=None):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rng):
+        lo = self.min_value if self.min_value is not None else -(1 << 64)
+        if self.max_value is not None:
+            return rng.randint(lo, self.max_value)
+        # unbounded above: mixed magnitudes, biased toward small values
+        bits = rng.choice([1, 2, 8, 16, 64, 128, 192, 256, 320, 384])
+        return lo + rng.getrandbits(bits)
+
+
+def integers(min_value=None, max_value=None):
+    return _IntStrategy(min_value, max_value)
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._mini_hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies_kw):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_hyp_max_examples", 20)
+            rng = random.Random(0xC0FFEE ^ hash(fn.__name__))
+            for case in range(n):
+                drawn = {k: s.example(rng) for k, s in strategies_kw.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed at case {case} with {drawn}: {e}"
+                    ) from e
+
+        # pytest resolves fixtures from the *visible* signature; without
+        # this, functools.wraps' __wrapped__ exposes the strategy params
+        # (a, b, ...) and pytest treats them as missing fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -4,8 +4,36 @@ XLA's CPU backend takes minutes to optimize the large integer graphs the
 UDA kernel lowers to (thousands of u64 ops). Correctness tests don't need
 optimized code, so default the backend to -O0 unless the caller already
 set XLA_FLAGS. Must run before the first jax import.
+
+Also makes the suite self-contained:
+- puts `python/` on sys.path so `from compile import ...` resolves no
+  matter the pytest invocation directory;
+- installs the deterministic `_mini_hypothesis` fallback when the real
+  hypothesis package is not installed (offline environments).
 """
 
 import os
+import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_backend_optimization_level=0")
+
+_PY_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _PY_ROOT not in sys.path:
+    sys.path.insert(0, _PY_ROOT)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import types
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _mini_hypothesis
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _mini_hypothesis.integers
+    _hyp.given = _mini_hypothesis.given
+    _hyp.settings = _mini_hypothesis.settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -4,7 +4,7 @@
 
 use ifzkp::ec::{points, Bls12381G1, Bn254G1, CurveParams, Jacobian};
 use ifzkp::ff::{Field, FpBls12381, FpBn254, FrBn254};
-use ifzkp::msm::{self, MsmConfig, Reduction};
+use ifzkp::msm::{self, pippenger, MsmConfig, MsmPlan, Reduction, Slicing};
 use ifzkp::ntt;
 use ifzkp::util::rng::Rng;
 use ifzkp::util::Stopwatch;
@@ -74,7 +74,7 @@ fn main() {
     {
         let m = 1 << 14;
         let w = points::workload::<Bn254G1>(m, 3);
-        let cfg = MsmConfig { window_bits: 12, reduction: red };
+        let cfg = MsmConfig::new(12, red);
         let sw = Stopwatch::start();
         let out = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
         let t = sw.secs();
@@ -86,11 +86,38 @@ fn main() {
         );
     }
 
+    // signed vs unsigned buckets at equal k: the reduce-phase serial chain
+    // (the quantity the hardware pays 270-cycle latency per op for) halves
+    let mut signed_cmp: Vec<(Slicing, Jacobian<Bn254G1>, u64, u64, f64)> = Vec::new();
+    for slicing in [Slicing::Unsigned, Slicing::Signed] {
+        let m = 1 << 14;
+        let w = points::workload::<Bn254G1>(m, 3);
+        let cfg = MsmConfig { window_bits: 12, reduction: Reduction::RunningSum, slicing };
+        let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        let sw = Stopwatch::start();
+        let (out, cost) = pippenger::msm_with_cost(&w.points, &w.scalars, &cfg);
+        let t = sw.secs();
+        println!(
+            "BN254 MSM 2^14 ({:<9} k=12, run-sum)       {:>12.1} ns/point  (serial reduce ops: {} plan / {} measured)",
+            format!("{slicing:?}"),
+            t * 1e9 / m as f64,
+            plan.serial_reduce_ops(),
+            cost.reduce_ops,
+        );
+        signed_cmp.push((slicing, out, plan.serial_reduce_ops(), cost.reduce_ops, t));
+    }
+    assert!(signed_cmp[0].1.eq_point(&signed_cmp[1].1), "signed != unsigned result");
+    println!(
+        "  signed-digit serial-chain reduction:        {:.2}x (plan), {:.2}x (measured)",
+        signed_cmp[0].2 as f64 / signed_cmp[1].2 as f64,
+        signed_cmp[0].3 as f64 / signed_cmp[1].3 as f64,
+    );
+
     // batch-affine fills (the §Perf/L3 optimization) vs Jacobian fills
     for (label, k) in [("k=8 fill-heavy", 8u32), ("k=12 hw window", 12)] {
         let m = 1 << 14;
         let w = points::workload::<Bn254G1>(m, 3);
-        let cfg = MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 6 } };
+        let cfg = MsmConfig::new(k, Reduction::Recursive { k2: 6 });
         let sw = Stopwatch::start();
         let jac = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
         let t_jac = sw.secs();

@@ -15,7 +15,7 @@
 
 use crate::ec::{points, CurveParams};
 use crate::fpga::CurveId;
-use crate::msm::{self, MsmConfig};
+use crate::msm::{self, Backend, MsmConfig};
 use crate::util::Stopwatch;
 
 /// Published libsnark operating points (M-MSM-PPS plateaus).
@@ -74,26 +74,25 @@ pub struct CpuMeasurement {
     pub mpps: f64,
 }
 
-/// Measure this crate's serial Pippenger on the local host.
-pub fn measure_serial<C: CurveParams>(m: usize, seed: u64) -> CpuMeasurement {
+/// Measure one MSM backend on the local host with the default config.
+pub fn measure_backend<C: CurveParams>(m: usize, seed: u64, backend: Backend) -> CpuMeasurement {
     let w = points::workload::<C>(m, seed);
     let cfg = MsmConfig::default();
     let sw = Stopwatch::start();
-    let out = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+    let out = msm::execute(backend, &w.points, &w.scalars, &cfg);
     let seconds = sw.secs();
     std::hint::black_box(out);
     CpuMeasurement { m: m as u64, seconds, mpps: m as f64 / seconds / 1e6 }
 }
 
-/// Measure the multi-threaded Pippenger.
+/// Measure this crate's serial Pippenger on the local host.
+pub fn measure_serial<C: CurveParams>(m: usize, seed: u64) -> CpuMeasurement {
+    measure_backend::<C>(m, seed, Backend::Pippenger)
+}
+
+/// Measure the multi-threaded Pippenger (`threads == 0` ⇒ single thread).
 pub fn measure_parallel<C: CurveParams>(m: usize, seed: u64, threads: usize) -> CpuMeasurement {
-    let w = points::workload::<C>(m, seed);
-    let cfg = MsmConfig::default();
-    let sw = Stopwatch::start();
-    let out = msm::parallel::msm(&w.points, &w.scalars, &cfg, threads);
-    let seconds = sw.secs();
-    std::hint::black_box(out);
-    CpuMeasurement { m: m as u64, seconds, mpps: m as f64 / seconds / 1e6 }
+    measure_backend::<C>(m, seed, Backend::Parallel { threads: threads.max(1) })
 }
 
 #[cfg(test)]

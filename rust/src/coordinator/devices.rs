@@ -100,7 +100,7 @@ impl<C: CurveParams> DeviceDesc<C> {
                 }),
             },
             ddr_capacity,
-            msm_cfg: MsmConfig { window_bits: 8, reduction: Default::default() },
+            msm_cfg: MsmConfig::new(8, Default::default()),
         }
     }
 
@@ -140,16 +140,21 @@ impl<C: CurveParams> RunningDevice<C> {
         let sw = Stopwatch::start();
         match &self.backend {
             RunningBackend::Native { threads } => {
-                let out = msm::parallel::msm(points, scalars, &self.msm_cfg, *threads);
+                let out = msm::execute(
+                    msm::Backend::Parallel { threads: *threads },
+                    points,
+                    scalars,
+                    &self.msm_cfg,
+                );
                 let wall = sw.secs();
                 Ok((out, wall, wall))
             }
             RunningBackend::SimFpga { model } => {
-                let out = msm::parallel::msm(
+                let out = msm::execute(
+                    msm::Backend::Parallel { threads: msm::parallel::default_threads() },
                     points,
                     scalars,
                     &self.msm_cfg,
-                    msm::parallel::default_threads(),
                 );
                 let wall = sw.secs();
                 let device = model.time_msm(points.len() as u64).total_s();

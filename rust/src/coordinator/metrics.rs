@@ -69,6 +69,9 @@ impl LatencyHistogram {
 pub struct Counters {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
+    /// Jobs whose device `execute` returned an error (the error result is
+    /// still delivered to the caller — see `request::JobResult::error`).
+    pub failed: AtomicU64,
     pub rejected: AtomicU64,
     pub affinity_hits: AtomicU64,
     pub affinity_misses: AtomicU64,
@@ -80,6 +83,7 @@ impl Counters {
         CounterSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             affinity_hits: self.affinity_hits.load(Ordering::Relaxed),
             affinity_misses: self.affinity_misses.load(Ordering::Relaxed),
@@ -93,6 +97,7 @@ impl Counters {
 pub struct CounterSnapshot {
     pub submitted: u64,
     pub completed: u64,
+    pub failed: u64,
     pub rejected: u64,
     pub affinity_hits: u64,
     pub affinity_misses: u64,
@@ -114,6 +119,7 @@ impl CounterSnapshot {
         let mut j = crate::util::json::Json::obj();
         j.set("submitted", self.submitted)
             .set("completed", self.completed)
+            .set("failed", self.failed)
             .set("rejected", self.rejected)
             .set("affinity_hits", self.affinity_hits)
             .set("affinity_misses", self.affinity_misses)

@@ -23,21 +23,34 @@ pub struct MsmJob {
     pub submitted_at: std::time::Instant,
 }
 
-/// Result of a completed job.
+/// Result of a completed job. Device failures are **delivered**, not
+/// dropped: a worker whose `execute` errors sends a result with
+/// [`JobResult::error`] set (and `output` at the identity), so callers can
+/// distinguish "the device failed on this job" from "the coordinator shut
+/// down" (reply channel disconnect → `RecvError`).
 #[derive(Clone, Debug)]
 pub struct JobResult<P> {
     pub id: JobId,
-    /// The MSM output point.
+    /// The MSM output point (the group identity when `error` is set).
     pub output: P,
     /// Wall-clock service time (host side).
     pub service_s: f64,
     /// Modeled device time (for sim-FPGA backends; equals wall time for
-    /// native backends).
+    /// native backends; 0 on failure).
     pub device_s: f64,
     /// Which device executed it.
     pub device: usize,
     /// Whether the point set had to be uploaded first (affinity miss).
     pub upload_miss: bool,
+    /// Device-failure message, `None` on success.
+    pub error: Option<String>,
+}
+
+impl<P> JobResult<P> {
+    /// Did the device produce a valid output?
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 #[cfg(test)]

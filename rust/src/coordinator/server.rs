@@ -109,20 +109,37 @@ impl<C: CurveParams> Coordinator<C> {
                             for (pos, d) in jobs.into_iter().enumerate() {
                                 let res = dev.execute(&points, &d.job.scalars);
                                 loads[idx].fetch_sub(1, Ordering::Relaxed);
-                                if let Ok((output, wall, device_s)) = res {
-                                    let service_s =
-                                        d.job.submitted_at.elapsed().as_secs_f64();
-                                    latency.record_secs(service_s);
-                                    counters.completed.fetch_add(1, Ordering::Relaxed);
-                                    let _ = d.reply.send(JobResult {
-                                        id: d.job.id,
-                                        output,
-                                        service_s,
-                                        device_s,
-                                        device: idx,
-                                        upload_miss: upload_miss && pos == 0,
-                                    });
-                                    let _ = wall;
+                                let service_s = d.job.submitted_at.elapsed().as_secs_f64();
+                                match res {
+                                    Ok((output, _wall, device_s)) => {
+                                        latency.record_secs(service_s);
+                                        counters.completed.fetch_add(1, Ordering::Relaxed);
+                                        let _ = d.reply.send(JobResult {
+                                            id: d.job.id,
+                                            output,
+                                            service_s,
+                                            device_s,
+                                            device: idx,
+                                            upload_miss: upload_miss && pos == 0,
+                                            error: None,
+                                        });
+                                    }
+                                    Err(e) => {
+                                        // Deliver the failure: callers must be
+                                        // able to tell "device failed" apart
+                                        // from "coordinator shut down" (which
+                                        // drops the channel instead).
+                                        counters.failed.fetch_add(1, Ordering::Relaxed);
+                                        let _ = d.reply.send(JobResult {
+                                            id: d.job.id,
+                                            output: Jacobian::<C>::infinity(),
+                                            service_s,
+                                            device_s: 0.0,
+                                            device: idx,
+                                            upload_miss: upload_miss && pos == 0,
+                                            error: Some(format!("{e:#}")),
+                                        });
+                                    }
                                 }
                             }
                         }

@@ -9,7 +9,7 @@
 use super::point::CurveParams;
 use crate::ff::params::curve_constants as cc;
 use crate::ff::{Field, Fp2Bls12381, Fp2Bn254, FpBls12381, FpBn254};
-use once_cell::sync::Lazy;
+use std::sync::LazyLock as Lazy;
 
 /// BN254 G2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

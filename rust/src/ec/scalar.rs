@@ -1,13 +1,41 @@
-//! Scalar multiplication.
+//! Scalar multiplication and scalar window slicing.
 //!
 //! [`mul`] is Algorithm 1 of the paper (MSB-first double-and-add) — the
 //! baseline whose O(N) point-op cost motivates the bucket method (Table II).
 //! [`mul_window`] is a fixed-window variant used where the walk generator
 //! and the prover need many multiplications of the *same* base.
+//!
+//! [`slice_bits`]/[`window_count`] are the §II-F scalar-slicing primitives.
+//! They live here — at the field-ops layer — because every consumer above
+//! (the windowed multiplier below, `msm::plan`'s bucket pipeline, and
+//! through it the FPGA timing model) slices scalars the same way; the MSM
+//! plan layer builds signed-digit decomposition on top of them.
 
 use super::point::{CurveParams, Jacobian};
 use super::ScalarLimbs;
 use crate::ff::bigint;
+
+/// Extract the k-bit slice of `scalar` starting at bit `lo` (k ≤ 32).
+/// Bits beyond the 256-bit limb range read as zero.
+#[inline]
+pub fn slice_bits(scalar: &ScalarLimbs, lo: u32, k: u32) -> u64 {
+    debug_assert!(k <= 32);
+    let limb = (lo / 64) as usize;
+    let shift = lo % 64;
+    if limb >= 4 {
+        return 0;
+    }
+    let mut v = scalar[limb] >> shift;
+    if shift + k > 64 && limb + 1 < 4 {
+        v |= scalar[limb + 1] << (64 - shift);
+    }
+    v & ((1u64 << k) - 1)
+}
+
+/// Number of k-bit windows covering an N-bit scalar.
+pub fn window_count(scalar_bits: u32, k: u32) -> u32 {
+    scalar_bits.div_ceil(k)
+}
 
 /// Algorithm 1: MSB-first double-and-add. `scalar` is canonical little-
 /// endian limbs (not reduced — the loop runs from the scalar's MSB).
@@ -51,13 +79,7 @@ pub fn mul_window<C: CurveParams>(
         for _ in 0..w {
             q = q.double();
         }
-        let mut digit = 0usize;
-        for b in (0..w).rev() {
-            let bitpos = win * w + b;
-            if bitpos <= msb && bigint::bit(scalar, bitpos) {
-                digit |= 1 << b;
-            }
-        }
+        let digit = slice_bits(scalar, (win * w) as u32, w as u32) as usize;
         if digit != 0 {
             q = q.add(&table[digit]);
         }
@@ -71,6 +93,25 @@ mod tests {
     use crate::ec::counters;
     use crate::ec::{Bls12381G1, Bn254G1};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn slice_bits_extracts_correctly() {
+        let s: ScalarLimbs = [0xABCD_EF01_2345_6789, 0x1122_3344_5566_7788, 0, 0];
+        assert_eq!(slice_bits(&s, 0, 8), 0x89);
+        assert_eq!(slice_bits(&s, 4, 8), 0x78);
+        // straddles the limb boundary: bits 60..72 = low 4 of limb1 (0x8) ++ top nibble of limb0 (0xA)
+        assert_eq!(slice_bits(&s, 60, 12), 0x88A);
+        assert_eq!(slice_bits(&s, 192, 16), 0);
+        assert_eq!(slice_bits(&s, 300, 8), 0); // beyond the limbs: zero
+    }
+
+    #[test]
+    fn window_count_matches_paper_table_iii() {
+        // k=12: BN254 → 22 windows, BLS12-381 → 32 windows (Table III's
+        // m×22 / m×32 point-op accounting).
+        assert_eq!(window_count(254, 12), 22);
+        assert_eq!(window_count(381, 12), 32);
+    }
 
     #[test]
     fn small_scalars_match_repeated_add() {

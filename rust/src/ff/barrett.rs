@@ -14,7 +14,7 @@
 //! semantics of the L1 kernel's final-compare path.
 
 use super::bigint::{self, mac};
-use once_cell::sync::Lazy;
+use std::sync::LazyLock as Lazy;
 
 /// Precomputed Barrett context for one modulus.
 #[derive(Debug)]

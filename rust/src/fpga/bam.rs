@@ -15,7 +15,10 @@ use crate::util::rng::Rng;
 /// Fill-phase model for one window pass over m points.
 #[derive(Clone, Copy, Debug)]
 pub struct BamModel {
-    /// Bucket count per window (2^k).
+    /// Live bucket count per window, taken from the software plan
+    /// (`msm::plan::MsmPlan::live_buckets`): 2^k − 1 unsigned, 2^(k−1)
+    /// signed. Fewer buckets ⇒ more pipeline conflicts, which this model
+    /// prices — the flip side of signed slicing's halved reduce chain.
     pub buckets: u64,
     /// The UDA pipe this BAM feeds.
     pub pipe: UdaPipe,

@@ -50,7 +50,10 @@ pub const PCIE_BW: f64 = 12.0e9;
 /// ≈ 0.01–0.02 s).
 pub const CALL_OVERHEAD_S: f64 = 0.009;
 
-/// Bucket count per window = 2^k.
+/// Unsigned bucket count per window = 2^k — the published hardware's
+/// reference value. The timing model no longer consumes this directly:
+/// live bucket counts come from `msm::plan::MsmPlan` (signed-digit builds
+/// halve them), keeping model and software consistent.
 pub const HW_BUCKETS: u64 = 1 << HW_WINDOW_BITS as u64;
 
 /// IS-RBAM sub-window width k₂ used by the hardware reduction.

@@ -1,13 +1,19 @@
 //! IS-RBAM: the Independently-Scalable Recursive Bucket-Array-Manager
 //! (§IV-A) — reduction-phase timing.
 //!
-//! The classic Algorithm-2 running sum is a chain of 2·(2^k − 1) point adds
-//! in which *every add depends on the previous one*: on a pipelined UDA it
-//! pays full latency per add. IS-RBAM re-expresses Σ b·B[b] as a second,
-//! tiny bucket MSM over k₂-bit sub-slices of the bucket index: the fills
-//! are independent (II=1), and only (k/k₂) running sums of 2^k₂ buckets
-//! each remain serial. Its instance count (`rbam_units`) scales
+//! The classic Algorithm-2 running sum is a chain of 2·live_buckets point
+//! adds in which *every add depends on the previous one*: on a pipelined
+//! UDA it pays full latency per add. IS-RBAM re-expresses Σ b·B[b] as a
+//! second, tiny bucket MSM over k₂-bit sub-slices of the bucket index: the
+//! fills are independent (II=1), and only (k/k₂) running sums of 2^k₂
+//! buckets each remain serial. Its instance count (`rbam_units`) scales
 //! independently of the BAM — the "Independently Scalable" in the name.
+//!
+//! The **bucket count is a parameter**, taken from the software's
+//! `msm::plan::MsmPlan` rather than hard-coded `2^k`: signed-digit slicing
+//! halves it (2^k − 1 → 2^(k−1)), which halves the running-sum chain and
+//! the recursive variant's fill traffic — the model and the software stay
+//! consistent by construction.
 
 use super::uda::UdaPipe;
 
@@ -18,7 +24,7 @@ pub enum ReductionKind {
     Recursive { k2: u32 },
 }
 
-/// Reduction-phase model for one window of 2^k buckets.
+/// Reduction-phase model for one window of buckets.
 #[derive(Clone, Copy, Debug)]
 pub struct RbamModel {
     pub pipe: UdaPipe,
@@ -28,20 +34,20 @@ pub struct RbamModel {
 }
 
 impl RbamModel {
-    /// Cycles to reduce one window.
-    pub fn window_cycles(&self, k: u32, kind: ReductionKind) -> u64 {
-        let buckets = 1u64 << k;
+    /// Cycles to reduce one window of `live_buckets` coefficient-carrying
+    /// buckets whose indices are `k` bits wide.
+    pub fn window_cycles(&self, k: u32, live_buckets: u64, kind: ReductionKind) -> u64 {
         match kind {
             ReductionKind::RunningSum => {
-                // 2·(2^k − 1) fully serial adds
-                self.pipe.serial_cycles(2 * (buckets - 1))
+                // 2·live fully serial adds
+                self.pipe.serial_cycles(2 * live_buckets)
             }
             ReductionKind::Recursive { k2 } => {
                 let k2 = k2.clamp(1, k);
                 let sub_windows = k.div_ceil(k2) as u64;
-                // fills: each nonzero bucket feeds `sub_windows` second-level
+                // fills: each live bucket feeds `sub_windows` second-level
                 // buckets, pipelined at II=1
-                let fills = self.pipe.stream_cycles(buckets * sub_windows, 0);
+                let fills = self.pipe.stream_cycles(live_buckets * sub_windows, 0);
                 // serial tails: one short running sum per sub-window plus k
                 // Horner doublings
                 let serial = self
@@ -54,8 +60,14 @@ impl RbamModel {
 
     /// Cycles to reduce all `windows` windows, with `rbam_units` working
     /// window-parallel.
-    pub fn total_cycles(&self, k: u32, windows: u32, kind: ReductionKind) -> u64 {
-        let per = self.window_cycles(k, kind);
+    pub fn total_cycles(
+        &self,
+        k: u32,
+        live_buckets: u64,
+        windows: u32,
+        kind: ReductionKind,
+    ) -> u64 {
+        let per = self.window_cycles(k, live_buckets, kind);
         let rounds = windows.div_ceil(self.rbam_units.max(1)) as u64;
         per * rounds
     }
@@ -70,15 +82,31 @@ mod tests {
         RbamModel { pipe: UdaPipe::unified(NumberForm::Standard), rbam_units: units }
     }
 
+    const UNSIGNED_K12: u64 = (1 << 12) - 1;
+    const SIGNED_K12: u64 = 1 << 11;
+
     #[test]
     fn recursive_crushes_running_sum() {
         // k=12: running sum = 2·4095·270 ≈ 2.2M cycles/window;
-        // IS-RBAM(k2=6) ≈ 8192 fills + short serial ≈ 0.05M
+        // IS-RBAM(k2=6) ≈ 8190 fills + short serial ≈ 0.05M
         let m = model(1);
-        let rs = m.window_cycles(12, ReductionKind::RunningSum);
-        let rec = m.window_cycles(12, ReductionKind::Recursive { k2: 6 });
+        let rs = m.window_cycles(12, UNSIGNED_K12, ReductionKind::RunningSum);
+        let rec = m.window_cycles(12, UNSIGNED_K12, ReductionKind::Recursive { k2: 6 });
         assert!(rs > 2_000_000);
         assert!(rec < rs / 10, "recursive {rec} vs running-sum {rs}");
+    }
+
+    #[test]
+    fn signed_buckets_halve_the_running_sum() {
+        let m = model(1);
+        let rs_u = m.window_cycles(12, UNSIGNED_K12, ReductionKind::RunningSum);
+        let rs_s = m.window_cycles(12, SIGNED_K12, ReductionKind::RunningSum);
+        let ratio = rs_u as f64 / rs_s as f64;
+        assert!((1.9..=2.0).contains(&ratio), "ratio {ratio}");
+        // and the recursive variant's fill traffic halves too
+        let rec_u = m.window_cycles(12, UNSIGNED_K12, ReductionKind::Recursive { k2: 6 });
+        let rec_s = m.window_cycles(12, SIGNED_K12, ReductionKind::Recursive { k2: 6 });
+        assert!(rec_s < rec_u);
     }
 
     #[test]
@@ -87,10 +115,10 @@ mod tests {
         // running sum. Some interior k2 must beat both ends.
         let m = model(1);
         let ends = m
-            .window_cycles(12, ReductionKind::Recursive { k2: 1 })
-            .min(m.window_cycles(12, ReductionKind::Recursive { k2: 12 }));
+            .window_cycles(12, UNSIGNED_K12, ReductionKind::Recursive { k2: 1 })
+            .min(m.window_cycles(12, UNSIGNED_K12, ReductionKind::Recursive { k2: 12 }));
         let best = (2..12)
-            .map(|k2| m.window_cycles(12, ReductionKind::Recursive { k2 }))
+            .map(|k2| m.window_cycles(12, UNSIGNED_K12, ReductionKind::Recursive { k2 }))
             .min()
             .unwrap();
         assert!(best < ends);
@@ -98,8 +126,8 @@ mod tests {
 
     #[test]
     fn units_scale_reduction() {
-        let one = model(1).total_cycles(12, 32, ReductionKind::Recursive { k2: 6 });
-        let four = model(4).total_cycles(12, 32, ReductionKind::Recursive { k2: 6 });
+        let one = model(1).total_cycles(12, UNSIGNED_K12, 32, ReductionKind::Recursive { k2: 6 });
+        let four = model(4).total_cycles(12, UNSIGNED_K12, 32, ReductionKind::Recursive { k2: 6 });
         assert_eq!(one / four, 4);
     }
 }

@@ -20,6 +20,7 @@ use super::resources::{DesignVariant, NumberForm, ResourceModel};
 use super::sps::SpsModel;
 use super::uda::UdaPipe;
 use super::CurveId;
+use crate::msm::plan::{MsmConfig, MsmPlan, Reduction, Slicing};
 
 /// One accelerator build.
 #[derive(Clone, Copy, Debug)]
@@ -33,10 +34,16 @@ pub struct SabConfig {
     pub reduction: ReductionKind,
     /// IS-RBAM instances.
     pub rbam_units: u32,
+    /// Digit encoding: window count and bucket count derive from it via
+    /// the shared `msm::plan` (signed halves bucket memory and the serial
+    /// reduce chain; a carry window is added only when the top slice can
+    /// carry — never at the paper's k = 12 scalar widths).
+    pub slicing: Slicing,
 }
 
 impl SabConfig {
-    /// The paper's shipping configuration for a curve and scaling factor.
+    /// The paper's shipping configuration for a curve and scaling factor
+    /// (unsigned 2^k buckets, as published).
     pub fn paper(curve: CurveId, scaling: u32) -> SabConfig {
         SabConfig {
             curve,
@@ -48,7 +55,14 @@ impl SabConfig {
             scaling,
             reduction: ReductionKind::Recursive { k2: calib::HW_RBAM_K2 },
             rbam_units: 1,
+            slicing: Slicing::Unsigned,
         }
+    }
+
+    /// The paper design with signed-digit buckets (half the bucket M20K,
+    /// half the serial reduce chain — the SZKP-style what-if).
+    pub fn paper_signed(curve: CurveId, scaling: u32) -> SabConfig {
+        SabConfig { slicing: Slicing::Signed, ..SabConfig::paper(curve, scaling) }
     }
 
     /// The pre-UDA Montgomery build (Table VII row 1, BN128 only).
@@ -59,7 +73,21 @@ impl SabConfig {
             scaling,
             reduction: ReductionKind::RunningSum,
             rbam_units: 1,
+            slicing: Slicing::Unsigned,
         }
+    }
+
+    /// The software-plan view of this build: window count, bucket count,
+    /// and serial-chain accounting all come from here.
+    pub fn plan(&self) -> MsmPlan {
+        let reduction = match self.reduction {
+            ReductionKind::RunningSum => Reduction::RunningSum,
+            ReductionKind::Recursive { k2 } => Reduction::Recursive { k2 },
+        };
+        MsmPlan::new(
+            self.curve.field_bits(),
+            &MsmConfig { window_bits: calib::HW_WINDOW_BITS, reduction, slicing: self.slicing },
+        )
     }
 }
 
@@ -112,11 +140,17 @@ impl SabModel {
         SabModel { cfg, fmax_hz, pipe }
     }
 
-    /// Time one MSM of `m` points.
+    /// Time one MSM of `m` points. Window and bucket counts come from the
+    /// shared software plan ([`SabConfig::plan`]), never from hard-coded
+    /// `2^k` — signed-digit builds automatically see half the buckets
+    /// (and a carry window only for scalar widths whose top slice can
+    /// carry; not at the paper's operating points).
     pub fn time_msm(&self, m: u64) -> MsmTiming {
         let curve = self.cfg.curve;
         let k = calib::HW_WINDOW_BITS;
-        let windows = curve.hw_windows();
+        let plan = self.cfg.plan();
+        let windows = plan.windows;
+        let live_buckets = plan.live_buckets();
         let s = self.cfg.scaling.max(1);
 
         // 1. scalar transfer (PCIe)
@@ -125,20 +159,21 @@ impl SabModel {
         // 2. fills: windows are processed sequentially; within a window the
         // m ops are split across S BAM instances. PA+PD builds also pay the
         // folded-PD penalty on the ~m/2^k doubling-class ops mixed in.
-        let bam = BamModel { buckets: calib::HW_BUCKETS, pipe: self.pipe };
+        let bam = BamModel { buckets: live_buckets, pipe: self.pipe };
         let per_window_ops = m.div_ceil(s as u64);
         let fill_cycles = bam.fill_cycles(per_window_ops) * windows as u64;
         let fill_s = fill_cycles as f64 / self.fmax_hz;
 
         // concurrent stream passes
         let sps = SpsModel::new(s);
-        let stream_s = sps.msm_stream_seconds(curve, m);
+        let stream_s = sps.msm_stream_seconds(curve, m, windows);
 
         // 3. reduction: in steady state a window's reduction overlaps the
         // next window's fill; only the non-overlapped remainder is exposed.
         let rbam = RbamModel { pipe: self.pipe, rbam_units: self.cfg.rbam_units };
-        let reduce_total =
-            rbam.total_cycles(k, windows, self.cfg.reduction) as f64 / self.fmax_hz;
+        let reduce_total = rbam.total_cycles(k, live_buckets, windows, self.cfg.reduction)
+            as f64
+            / self.fmax_hz;
         let per_window_fill_s = bam.fill_cycles(per_window_ops) as f64 / self.fmax_hz;
         let hidden = per_window_fill_s * (windows as f64 - 1.0);
         let reduce_s = (reduce_total - hidden).max(reduce_total / windows as f64);
@@ -215,6 +250,24 @@ mod tests {
         let t64m = m.time_msm(64_000_000).m_msm_pps(64_000_000);
         assert!(t10k < t1m, "ramp: {t10k} < {t1m}");
         assert!((t1m / t64m - 1.0).abs() < 0.25, "plateau: {t1m} vs {t64m}");
+    }
+
+    #[test]
+    fn signed_build_halves_buckets_and_serial_chain() {
+        let u = SabConfig::paper(CurveId::Bn254, 2);
+        let s = SabConfig::paper_signed(CurveId::Bn254, 2);
+        // bucket memory: 4095 live → 2048 live; and at k=12 the 254-bit
+        // top slice (2 bits) can never carry, so no extra window either
+        assert_eq!(u.plan().live_buckets(), 4095);
+        assert_eq!(s.plan().live_buckets(), 2048);
+        assert_eq!(s.plan().windows, u.plan().windows);
+        // in the reduce-exposed (running-sum) regime the halved chain wins
+        // end to end despite the extra window
+        let ur = SabConfig { reduction: ReductionKind::RunningSum, ..u };
+        let sr = SabConfig { reduction: ReductionKind::RunningSum, ..s };
+        let t_u = SabModel::new(ur).time_msm(100_000).total_s();
+        let t_s = SabModel::new(sr).time_msm(100_000).total_s();
+        assert!(t_s < t_u, "signed {t_s} vs unsigned {t_u}");
     }
 
     #[test]

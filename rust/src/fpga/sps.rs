@@ -33,9 +33,11 @@ impl SpsModel {
         bytes / (self.bw_per_group * self.groups as f64)
     }
 
-    /// Seconds of DDR streaming for a full MSM (all windows).
-    pub fn msm_stream_seconds(&self, curve: CurveId, m: u64) -> f64 {
-        self.pass_seconds(curve, m) * curve.hw_windows() as f64
+    /// Seconds of DDR streaming for a full MSM: one pass per window. The
+    /// window count comes from the caller's `msm::plan::MsmPlan` (signed
+    /// slicing adds a carry window; unsigned reproduces Table III's 22/32).
+    pub fn msm_stream_seconds(&self, curve: CurveId, m: u64, windows: u32) -> f64 {
+        self.pass_seconds(curve, m) * windows as f64
     }
 
     /// One-time point upload over PCIe (per point-set, not per call).
@@ -51,27 +53,36 @@ mod tests {
     #[test]
     fn stream_time_scales_with_windows_and_size() {
         let s = SpsModel::new(1);
-        let t1 = s.msm_stream_seconds(CurveId::Bn254, 1 << 20);
-        let t2 = s.msm_stream_seconds(CurveId::Bn254, 1 << 21);
+        let w = CurveId::Bn254.hw_windows();
+        let t1 = s.msm_stream_seconds(CurveId::Bn254, 1 << 20, w);
+        let t2 = s.msm_stream_seconds(CurveId::Bn254, 1 << 21, w);
         assert!((t2 / t1 - 2.0).abs() < 1e-9);
         // BLS streams more bytes over more windows
         assert!(
-            s.msm_stream_seconds(CurveId::Bls12381, 1 << 20)
-                > s.msm_stream_seconds(CurveId::Bn254, 1 << 20)
+            s.msm_stream_seconds(CurveId::Bls12381, 1 << 20, CurveId::Bls12381.hw_windows())
+                > s.msm_stream_seconds(CurveId::Bn254, 1 << 20, w)
         );
+        // one extra (signed carry) window costs exactly one extra pass
+        let t3 = s.msm_stream_seconds(CurveId::Bn254, 1 << 20, w + 1);
+        assert!((t3 / t1 - (w + 1) as f64 / w as f64).abs() < 1e-9);
     }
 
     #[test]
     fn bandwidth_scales_with_s() {
-        let t1 = SpsModel::new(1).msm_stream_seconds(CurveId::Bls12381, 64_000_000);
-        let t2 = SpsModel::new(2).msm_stream_seconds(CurveId::Bls12381, 64_000_000);
+        let w = CurveId::Bls12381.hw_windows();
+        let t1 = SpsModel::new(1).msm_stream_seconds(CurveId::Bls12381, 64_000_000, w);
+        let t2 = SpsModel::new(2).msm_stream_seconds(CurveId::Bls12381, 64_000_000, w);
         assert!((t1 / t2 - 2.0).abs() < 1e-9);
     }
 
     #[test]
     fn table_ix_anchor_64m_bls_s2() {
         // the calibration anchor: ≈ 15.0 s stream-bound
-        let t = SpsModel::new(2).msm_stream_seconds(CurveId::Bls12381, 64_000_000);
+        let t = SpsModel::new(2).msm_stream_seconds(
+            CurveId::Bls12381,
+            64_000_000,
+            CurveId::Bls12381.hw_windows(),
+        );
         assert!((t - 15.03).abs() < 0.5, "stream {t}");
     }
 

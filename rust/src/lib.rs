@@ -8,9 +8,11 @@
 //! The crate is organised in three layers (see `DESIGN.md`):
 //!
 //! * **substrates** — finite fields ([`ff`]), elliptic curves ([`ec`]),
-//!   MSM algorithms ([`msm`]), NTT ([`ntt`]) and a Groth16-shaped prover
-//!   ([`snark`]) — everything the paper's evaluation depends on, built from
-//!   scratch;
+//!   MSM algorithms ([`msm`]: one shared `MsmKernel` plan — window slicing,
+//!   signed-digit buckets, reduction strategy — consumed by every backend
+//!   behind the [`msm::Backend`] dispatch), NTT ([`ntt`]) and a
+//!   Groth16-shaped prover ([`snark`]) — everything the paper's evaluation
+//!   depends on, built from scratch;
 //! * **device models** — a cycle-level model of the paper's SAB/UDA Agilex
 //!   design ([`fpga`]) plus the CPU/GPU baselines ([`baseline`]);
 //! * **runtime + coordinator** — a PJRT-backed batched point-operation

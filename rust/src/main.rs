@@ -6,7 +6,7 @@
 //! ifzkp prove   --constraints N
 //! ifzkp serve   [--config serve.toml] [--jobs N] [--size N]
 //! ifzkp sim     --curve ... [--size N] [--scaling S]
-//! ifzkp tables  [--id 1|2|4|7|8|9|10|all]
+//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|all]
 //! ifzkp figures [--id 4|5|6|7|8|all]
 //! ifzkp info
 //! ```
@@ -117,7 +117,7 @@ fn cmd_msm(args: &Args) -> anyhow::Result<()> {
             let engine = ifzkp::runtime::UdaEngine::<Bn254G1>::load(&ctx, &manifest)?;
             println!("engine compiled in {}", human_secs(sw.secs()));
             let w = points::workload::<Bn254G1>(size, 1);
-            let cfg = MsmConfig { window_bits: 8, reduction: Default::default() };
+            let cfg = MsmConfig::new(8, Default::default());
             let sw = Stopwatch::start();
             let (out, stats) =
                 ifzkp::runtime::msm_engine::msm_engine(&engine, &w.points, &w.scalars, &cfg)?;
@@ -229,6 +229,10 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
     }
     if all || id == "10" {
         println!("{}", tables::table10());
+    }
+    if all || id == "ablation" {
+        println!("{}", tables::ablation_reduction());
+        println!("{}", tables::ablation_signed(2048, 20240710));
     }
     Ok(())
 }

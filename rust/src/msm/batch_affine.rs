@@ -13,7 +13,7 @@
 //! first touch: empty bucket) are resolved in the same round without
 //! inversions.
 
-use super::pippenger::{self, MsmConfig, Reduction};
+use super::plan::{MsmConfig, MsmPlan};
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 use crate::ff::Field;
 
@@ -173,6 +173,23 @@ fn batch_invert<F: Field>(xs: &[F]) -> Vec<F> {
     out
 }
 
+/// The (bucket, signed point) op stream for one window: negative digits
+/// contribute the negated point (free: y ↦ −y), per the shared plan.
+fn window_ops<'a, C: CurveParams>(
+    plan: &'a MsmPlan,
+    points: &'a [Affine<C>],
+    scalars: &'a [ScalarLimbs],
+    j: u32,
+) -> impl Iterator<Item = (usize, Affine<C>)> + 'a {
+    points.iter().zip(scalars).filter_map(move |(p, s)| {
+        if p.infinity {
+            return None;
+        }
+        plan.bucket_op(s, j)
+            .map(|(b, negate)| (b, if negate { p.neg() } else { *p }))
+    })
+}
+
 /// Pippenger MSM with batch-affine bucket accumulation.
 pub fn msm<C: CurveParams>(
     points: &[Affine<C>],
@@ -183,29 +200,15 @@ pub fn msm<C: CurveParams>(
     if points.is_empty() {
         return Jacobian::infinity();
     }
-    let k = cfg.window_bits;
-    let windows = pippenger::window_count(C::SCALAR_BITS.min(256), k);
-    let mut result = Jacobian::<C>::infinity();
-    for j in (0..windows).rev() {
-        for _ in 0..k {
-            result = result.double();
-        }
-        let ops = points.iter().zip(scalars).filter_map(move |(p, s)| {
-            let b = pippenger::slice_bits(s, j * k, k) as usize;
-            if b != 0 && !p.infinity {
-                Some((b, *p))
-            } else {
-                None
-            }
-        });
-        let buckets = fill_batch_affine(1usize << k, ops);
-        let wj = match cfg.reduction {
-            Reduction::RunningSum => pippenger::reduce_running_sum(&buckets),
-            Reduction::Recursive { k2 } => pippenger::reduce_recursive(&buckets, k, k2.min(k)),
-        };
-        result = result.add(&wj);
-    }
-    result
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    let per_window: Vec<Jacobian<C>> = (0..plan.windows)
+        .map(|j| {
+            let buckets =
+                fill_batch_affine(plan.bucket_slots(), window_ops(&plan, points, scalars, j));
+            plan.reduce(&buckets)
+        })
+        .collect();
+    plan.combine(&per_window)
 }
 
 /// Multi-threaded batch-affine MSM (window-parallel like
@@ -221,8 +224,8 @@ pub fn msm_parallel<C: CurveParams>(
         return Jacobian::infinity();
     }
     let threads = threads.max(1);
-    let k = cfg.window_bits;
-    let windows = pippenger::window_count(C::SCALAR_BITS.min(256), k);
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    let windows = plan.windows;
     if threads == 1 || windows == 1 {
         return msm(points, scalars, cfg);
     }
@@ -231,36 +234,20 @@ pub fn msm_parallel<C: CurveParams>(
         let per = windows.div_ceil(threads as u32) as usize;
         for (t, chunk) in window_results.chunks_mut(per).enumerate() {
             let first = t * per;
+            let plan = &plan;
             scope.spawn(move || {
                 for (i, slot) in chunk.iter_mut().enumerate() {
                     let j = (first + i) as u32;
-                    let ops = points.iter().zip(scalars).filter_map(move |(p, s)| {
-                        let b = pippenger::slice_bits(s, j * k, k) as usize;
-                        if b != 0 && !p.infinity {
-                            Some((b, *p))
-                        } else {
-                            None
-                        }
-                    });
-                    let buckets = fill_batch_affine(1usize << k, ops);
-                    *slot = match cfg.reduction {
-                        Reduction::RunningSum => pippenger::reduce_running_sum(&buckets),
-                        Reduction::Recursive { k2 } => {
-                            pippenger::reduce_recursive(&buckets, k, k2.min(k))
-                        }
-                    };
+                    let buckets = fill_batch_affine(
+                        plan.bucket_slots(),
+                        window_ops(plan, points, scalars, j),
+                    );
+                    *slot = plan.reduce(&buckets);
                 }
             });
         }
     });
-    let mut result = Jacobian::<C>::infinity();
-    for wj in window_results.iter().rev() {
-        for _ in 0..k {
-            result = result.double();
-        }
-        result = result.add(wj);
-    }
-    result
+    plan.combine(&window_results)
 }
 
 #[cfg(test)]
@@ -268,6 +255,8 @@ mod tests {
     use super::*;
     use crate::ec::{points, scalar, Bls12381G1, Bn254G1};
     use crate::msm::naive;
+    use crate::msm::plan::{Reduction, Slicing};
+    use crate::msm::pippenger;
 
     #[test]
     fn batch_invert_matches_individual() {
@@ -293,9 +282,15 @@ mod tests {
         let w = points::workload::<Bn254G1>(100, 881);
         let want = naive::msm(&w.points, &w.scalars);
         for k in [4u32, 8, 12] {
-            let cfg = MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 4 } };
-            let got = msm(&w.points, &w.scalars, &cfg);
-            assert!(got.eq_point(&want), "k={k}");
+            for slicing in [Slicing::Unsigned, Slicing::Signed] {
+                let cfg = MsmConfig {
+                    window_bits: k,
+                    reduction: Reduction::Recursive { k2: 4 },
+                    slicing,
+                };
+                let got = msm(&w.points, &w.scalars, &cfg);
+                assert!(got.eq_point(&want), "k={k} {slicing:?}");
+            }
         }
     }
 
@@ -314,7 +309,7 @@ mod tests {
         let pts = vec![g; 40];
         let scalars = vec![[5u64, 0, 0, 0]; 40]; // all in bucket 5
         let want = naive::msm(&pts, &scalars);
-        let cfg = MsmConfig { window_bits: 4, reduction: Reduction::RunningSum };
+        let cfg = MsmConfig::new(4, Reduction::RunningSum);
         let got = msm(&pts, &scalars, &cfg);
         assert!(got.eq_point(&want));
     }
@@ -327,7 +322,7 @@ mod tests {
         let pts = vec![g, g.neg(), g, g.neg(), g];
         let scalars = vec![[3u64, 0, 0, 0]; 5];
         let want = naive::msm(&pts, &scalars);
-        let got = msm(&pts, &scalars, &MsmConfig { window_bits: 4, reduction: Reduction::RunningSum });
+        let got = msm(&pts, &scalars, &MsmConfig::new(4, Reduction::RunningSum));
         assert!(got.eq_point(&want));
         // net = 1·(3·G)
         let check = scalar::mul::<Bn254G1>(&g.to_jacobian(), &[3, 0, 0, 0]);
@@ -352,7 +347,7 @@ mod tests {
         // variants equally and the ratio drifts toward 1 — that crossover
         // is by design (measured in the hotpath bench).
         let w = points::workload::<Bn254G1>(8192, 884);
-        let cfg = MsmConfig { window_bits: 8, reduction: Reduction::Recursive { k2: 6 } };
+        let cfg = MsmConfig::new(8, Reduction::Recursive { k2: 6 });
         let (_, jac_ops) =
             crate::ff::opcount::measure(|| pippenger::msm(&w.points, &w.scalars, &cfg));
         let (_, aff_ops) = crate::ff::opcount::measure(|| msm(&w.points, &w.scalars, &cfg));

@@ -1,25 +1,31 @@
 //! Multi-scalar multiplication: `R = Σ sᵢ·Pᵢ` (§II-E).
 //!
-//! The paper's subject. Implementations, in increasing sophistication:
+//! The paper's subject. The subsystem is layered as **one kernel, many
+//! executors** (see `rust/DESIGN.md` §MsmKernel):
 //!
-//! * [`naive`] — per-point double-and-add then accumulate: the Table II
-//!   baseline, O(m·N) point-ops;
-//! * [`pippenger`] — the Bucket Algorithm (Algorithm 2 / Pippenger [21])
-//!   over k-bit scalar slices, with **two bucket-reduction strategies**:
-//!   the classic serial running sum, and the paper's novel **recursive
-//!   bucket reduction (IS-RBAM, §IV-A)** which converts the latency-bound
-//!   running sum into pipeline-friendly bucket fills — identical results,
-//!   different op/latency profile (the FPGA model exploits the
-//!   difference);
-//! * [`parallel`] — multi-threaded Pippenger (windows fan out across
-//!   threads; the software analogue of replicated BAM units);
-//! * [`batch_affine`] — bucket fills with shared batch inversion (≈6M per
-//!   add instead of 11M): the §Perf/L3 optimization, also the software
-//!   echo of the BAM's one-op-per-bucket-per-round conflict rule.
+//! * [`plan`] — the shared `MsmPlan`: window slicing, digit encoding
+//!   (unsigned or **signed**, which halves bucket memory and the serial
+//!   reduce chain), bucket indexing, reduction strategy, and the serial
+//!   op accounting the FPGA model consumes. Signed decomposition itself
+//!   lives in [`signed`]; the raw slice primitives at
+//!   [`crate::ec::scalar`].
+//! * Backends, all consuming the same plan and bit-exact against
+//!   [`naive`]:
+//!   [`pippenger`] (serial fills, Algorithm 2 + IS-RBAM reduction),
+//!   [`parallel`] (windows fan out across threads — the software analogue
+//!   of replicated BAM units), [`batch_affine`] (bucket fills with shared
+//!   batch inversion, ≈6M per add — the §Perf/L3 optimization), and
+//!   `runtime::msm_engine` (the PJRT UDA engine, conflict-free batches).
+//! * [`Backend`]/[`execute`] — the dispatch surface callers
+//!   (`snark::prover`, `baseline::cpu`, `coordinator::devices`) use
+//!   instead of hand-picking implementations; [`msm`] auto-selects both
+//!   backend and config.
 //!
-//! All variants are bit-exact against each other; property tests in
-//! `rust/tests/prop_msm.rs` enforce it.
+//! Property tests in `rust/tests/prop_msm.rs` enforce bit-exactness of
+//! every backend × slicing × reduction combination against [`naive`].
 
+pub mod plan;
+pub mod signed;
 pub mod naive;
 pub mod pippenger;
 pub mod parallel;
@@ -27,24 +33,73 @@ pub mod batch_affine;
 
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
-pub use pippenger::{msm as msm_pippenger, MsmConfig, Reduction};
+pub use pippenger::msm as msm_pippenger;
+pub use plan::{MsmConfig, MsmPlan, Reduction, Slicing};
 
 /// Heuristic window width: balances m/window bucket fills against 2^k
-/// reduction work. Matches the usual c ≈ log2(m) − 3 rule, clamped to the
-/// paper's hardware point k = 12.
+/// reduction work. The usual c ≈ log2(m) − 3 rule, clamped to the paper's
+/// hardware point k = 12 (larger windows trade reduce work the hardware
+/// cannot hide for bucket memory it does not have).
 pub fn auto_window(m: usize) -> u32 {
     let lg = (usize::BITS - m.leading_zeros()).max(1);
-    (lg.saturating_sub(3)).clamp(2, 16)
+    (lg.saturating_sub(3)).clamp(2, 12)
 }
 
-/// Top-level convenience: Pippenger with auto window and recursive
-/// reduction (the paper's configuration).
+/// Which executor carries the bucket fills.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Per-point double-and-add (the Table II baseline; ignores the
+    /// window/reduction config).
+    Naive,
+    /// Serial Pippenger through the shared plan.
+    Pippenger,
+    /// Window-parallel Pippenger over OS threads.
+    Parallel { threads: usize },
+    /// Batch-affine bucket fills (shared batch inversion), serial.
+    BatchAffine,
+    /// Batch-affine fills, window-parallel.
+    BatchAffineParallel { threads: usize },
+}
+
+impl Backend {
+    /// Pick an executor for an m-point MSM: tiny inputs skip bucket setup
+    /// entirely; mid sizes run serial fills; large inputs go wide with
+    /// batch-affine fills (the fill-dominated regime where ≈6M/add wins).
+    pub fn auto(m: usize) -> Backend {
+        if m < 32 {
+            Backend::Naive
+        } else if m < 1024 {
+            Backend::Pippenger
+        } else {
+            Backend::BatchAffineParallel { threads: parallel::default_threads() }
+        }
+    }
+}
+
+/// Run an MSM on the chosen backend. Every backend routes through the same
+/// [`MsmPlan`], so results are bit-exact across backends for any config.
+pub fn execute<C: CurveParams>(
+    backend: Backend,
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+) -> Jacobian<C> {
+    match backend {
+        Backend::Naive => naive::msm(points, scalars),
+        Backend::Pippenger => pippenger::msm(points, scalars, cfg),
+        Backend::Parallel { threads } => parallel::msm(points, scalars, cfg, threads),
+        Backend::BatchAffine => batch_affine::msm(points, scalars, cfg),
+        Backend::BatchAffineParallel { threads } => {
+            batch_affine::msm_parallel(points, scalars, cfg, threads)
+        }
+    }
+}
+
+/// Top-level convenience: auto backend + auto config (signed digits and
+/// the paper's recursive reduction once the window is wide enough).
 pub fn msm<C: CurveParams>(points: &[Affine<C>], scalars: &[ScalarLimbs]) -> Jacobian<C> {
-    pippenger::msm(
-        points,
-        scalars,
-        &MsmConfig { window_bits: auto_window(points.len()), reduction: Reduction::default() },
-    )
+    let m = points.len();
+    execute(Backend::auto(m), points, scalars, &MsmConfig::auto(m))
 }
 
 #[cfg(test)]
@@ -56,7 +111,20 @@ mod tests {
     fn auto_window_monotone() {
         assert!(auto_window(1 << 10) <= auto_window(1 << 20));
         assert_eq!(auto_window(1), 2);
-        assert!(auto_window(usize::MAX / 2) <= 16);
+        assert!(auto_window(usize::MAX / 2) <= 12);
+    }
+
+    #[test]
+    fn auto_window_clamps_at_hardware_k() {
+        // the documented clamp: never exceed the paper's hardware point
+        // k = 12, reached at m = 2^15 and held from there on
+        assert_eq!(auto_window(1 << 15), 12);
+        assert_eq!(auto_window(1 << 20), 12);
+        assert_eq!(auto_window(usize::MAX), 12);
+        // below the clamp the log rule is live
+        assert_eq!(auto_window(1 << 10), 8);
+        assert_eq!(auto_window(1 << 14), 12);
+        assert_eq!(auto_window(1 << 13), 11);
     }
 
     #[test]
@@ -65,5 +133,29 @@ mod tests {
         let a = msm(&w.points, &w.scalars);
         let b = naive::msm(&w.points, &w.scalars);
         assert!(a.eq_point(&b));
+    }
+
+    #[test]
+    fn auto_backend_tiers() {
+        assert_eq!(Backend::auto(8), Backend::Naive);
+        assert_eq!(Backend::auto(100), Backend::Pippenger);
+        assert!(matches!(Backend::auto(1 << 20), Backend::BatchAffineParallel { .. }));
+    }
+
+    #[test]
+    fn all_backends_agree_through_execute() {
+        let w = points::workload::<Bn254G1>(160, 18);
+        let cfg = MsmConfig::auto(160);
+        let want = naive::msm(&w.points, &w.scalars);
+        for backend in [
+            Backend::Naive,
+            Backend::Pippenger,
+            Backend::Parallel { threads: 3 },
+            Backend::BatchAffine,
+            Backend::BatchAffineParallel { threads: 3 },
+        ] {
+            let got = execute(backend, &w.points, &w.scalars, &cfg);
+            assert!(got.eq_point(&want), "{backend:?}");
+        }
     }
 }

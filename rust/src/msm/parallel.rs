@@ -2,8 +2,11 @@
 //! software analogue of the paper's replicated BAM units (scaling knob S,
 //! §IV-A), and the engine behind the multi-core CPU baseline column of
 //! Table IX (the paper's CPU reference uses OpenMP libsnark).
+//!
+//! All window slicing / bucket indexing / reduction comes from the shared
+//! [`MsmPlan`]; this file only owns the thread fan-out.
 
-use super::pippenger::{self, MsmConfig};
+use super::plan::{MsmConfig, MsmPlan};
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
 /// Parallel MSM over `threads` OS threads (window-level parallelism: each
@@ -20,64 +23,30 @@ pub fn msm<C: CurveParams>(
         return Jacobian::infinity();
     }
     let threads = threads.max(1);
-    let k = cfg.window_bits;
-    let windows = pippenger::window_count(C::SCALAR_BITS.min(256), k);
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    let windows = plan.windows;
     if threads == 1 || windows == 1 {
-        return pippenger::msm(points, scalars, cfg);
+        return super::pippenger::msm(points, scalars, cfg);
     }
 
     // Window results, computed in parallel.
     let mut window_results = vec![Jacobian::<C>::infinity(); windows as usize];
     std::thread::scope(|scope| {
-        let chunks: Vec<&mut [Jacobian<C>]> = {
-            // round-robin would interleave; contiguous chunks keep it simple
-            let per = windows.div_ceil(threads as u32) as usize;
-            window_results.chunks_mut(per).collect()
-        };
-        for (t, chunk) in chunks.into_iter().enumerate() {
-            let per = windows.div_ceil(threads as u32) as usize;
+        let per = windows.div_ceil(threads as u32) as usize;
+        for (t, chunk) in window_results.chunks_mut(per).enumerate() {
             let first = t * per;
+            let plan = &plan;
             scope.spawn(move || {
                 for (i, slot) in chunk.iter_mut().enumerate() {
                     let j = (first + i) as u32;
-                    *slot = window_msm::<C>(points, scalars, j * k, k, cfg);
+                    *slot = plan.reduce(&plan.fill_window(points, scalars, j));
                 }
             });
         }
     });
 
     // DNA combine.
-    let mut result = Jacobian::<C>::infinity();
-    for wj in window_results.iter().rev() {
-        for _ in 0..k {
-            result = result.double();
-        }
-        result = result.add(wj);
-    }
-    result
-}
-
-/// One window's bucket MSM (fill + reduce).
-fn window_msm<C: CurveParams>(
-    points: &[Affine<C>],
-    scalars: &[ScalarLimbs],
-    lo: u32,
-    k: u32,
-    cfg: &MsmConfig,
-) -> Jacobian<C> {
-    let mut buckets = vec![Jacobian::<C>::infinity(); 1 << k];
-    for (p, s) in points.iter().zip(scalars) {
-        let b = pippenger::slice_bits(s, lo, k) as usize;
-        if b != 0 {
-            buckets[b] = buckets[b].add_mixed(p);
-        }
-    }
-    match cfg.reduction {
-        super::Reduction::RunningSum => pippenger::reduce_running_sum(&buckets),
-        super::Reduction::Recursive { k2 } => {
-            pippenger::reduce_recursive(&buckets, k, k2.min(k))
-        }
-    }
+    plan.combine(&window_results)
 }
 
 /// Default thread count: physical parallelism minus one for the OS, at
@@ -91,6 +60,7 @@ mod tests {
     use super::*;
     use crate::ec::{points, Bls12381G1, Bn254G1};
     use crate::msm::naive;
+    use crate::msm::plan::{Reduction, Slicing};
 
     #[test]
     fn parallel_matches_serial() {
@@ -99,6 +69,17 @@ mod tests {
         for threads in [1usize, 2, 4, 32] {
             let got = msm(&w.points, &w.scalars, &MsmConfig::default(), threads);
             assert!(got.eq_point(&want), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_in_both_slicing_modes() {
+        let w = points::workload::<Bn254G1>(96, 84);
+        let want = naive::msm(&w.points, &w.scalars);
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            let cfg = MsmConfig { window_bits: 9, reduction: Reduction::RunningSum, slicing };
+            let got = msm(&w.points, &w.scalars, &cfg, 3);
+            assert!(got.eq_point(&want), "{slicing:?}");
         }
     }
 
@@ -113,7 +94,7 @@ mod tests {
     #[test]
     fn more_threads_than_windows_is_fine() {
         let w = points::workload::<Bn254G1>(16, 83);
-        let cfg = MsmConfig { window_bits: 16, reduction: Default::default() };
+        let cfg = MsmConfig::new(16, Default::default());
         // 16 windows, 64 threads
         let got = msm(&w.points, &w.scalars, &cfg, 64);
         assert!(got.eq_point(&naive::msm(&w.points, &w.scalars)));

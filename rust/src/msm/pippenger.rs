@@ -1,147 +1,30 @@
-//! The Bucket Algorithm (Pippenger) — Algorithm 2 of the paper — plus the
-//! paper's recursive bucket reduction (IS-RBAM).
+//! The Bucket Algorithm (Pippenger) — Algorithm 2 of the paper — executed
+//! through the shared [`MsmPlan`] kernel layer.
 //!
-//! The scalar is sliced into ⌈N/k⌉ windows of k bits (§II-F). Per window:
+//! The scalar is sliced into windows of k bits (§II-F; the plan decides
+//! unsigned or signed digits). Per window:
 //!
-//! 1. **Fill** (the BAM's job): `bucket[slice] += Pᵢ` — one mixed add per
-//!    point with a nonzero slice; fully pipelineable, II=1 in hardware.
-//! 2. **Reduce**: combine buckets into `MSM_j = Σ_b b·bucket[b]`.
-//!    * [`Reduction::RunningSum`] — Algorithm 2's second loop
-//!      (`A += E; E += B[i-1]`): 2·(2^k − 1) *serially dependent* adds —
-//!      each one stalls a 270-cycle hardware pipeline.
-//!    * [`Reduction::Recursive`] — IS-RBAM: treat the bucket index b as a
-//!      scalar and compute `Σ b·bucket[b]` as a second, much smaller bucket
-//!      MSM with window k₂ | k. The fills are independent (pipeline
-//!      friendly); only the tiny 2^k₂ running sums remain serial.
-//! 3. **Combine** (the DNA unit): Horner over windows —
-//!    `R = Σ_j 2^(k·j) MSM_j` via k doublings per window plus one add.
+//! 1. **Fill** (the BAM's job): `bucket[|d|] += ±Pᵢ` — one mixed add per
+//!    point with a nonzero digit; fully pipelineable, II=1 in hardware.
+//! 2. **Reduce**: combine buckets into `MSM_j = Σ_b b·bucket[b]` with the
+//!    planned strategy ([`Reduction::RunningSum`] — Algorithm 2's serial
+//!    loop — or [`Reduction::Recursive`], the paper's IS-RBAM).
+//! 3. **Combine** (the DNA unit): Horner over windows.
+//!
+//! This file owns the instrumented variant ([`msm_with_cost`]) that feeds
+//! Tables II/III and the FPGA model's op accounting; the slicing/bucket
+//! logic itself lives in [`super::plan`] and [`super::signed`], shared with
+//! every other backend.
 
+use super::plan::MsmPlan;
 use crate::ec::{counters, Affine, CurveParams, Jacobian, ScalarLimbs};
 
-/// Bucket-reduction strategy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Reduction {
-    /// Classic serial running sum (Algorithm 2).
-    RunningSum,
-    /// The paper's IS-RBAM recursive bucket reduction with sub-window k₂.
-    Recursive { k2: u32 },
-}
+// Compatibility re-exports: the config/strategy types live in the plan
+// layer, the slicing primitives at the field-ops layer.
+pub use super::plan::{reduce_recursive, reduce_running_sum, MsmConfig, Reduction, Slicing};
+pub use crate::ec::scalar::{slice_bits, window_count};
 
-impl Default for Reduction {
-    fn default() -> Self {
-        // k₂ = 6 halves the serial chain at negligible extra fills for the
-        // k ∈ [10, 16] range the hardware uses.
-        Reduction::Recursive { k2: 6 }
-    }
-}
-
-/// MSM configuration.
-#[derive(Clone, Copy, Debug)]
-pub struct MsmConfig {
-    /// Window (slice) width k in bits. The paper's hardware uses k = 12
-    /// (Table III: ⌈254/12⌉ = 22 and ⌈381/12⌉ = 32 windows).
-    pub window_bits: u32,
-    pub reduction: Reduction,
-}
-
-impl Default for MsmConfig {
-    fn default() -> Self {
-        MsmConfig { window_bits: 12, reduction: Reduction::default() }
-    }
-}
-
-/// Extract the k-bit slice of `scalar` starting at bit `lo`.
-#[inline]
-pub fn slice_bits(scalar: &ScalarLimbs, lo: u32, k: u32) -> u64 {
-    debug_assert!(k <= 32);
-    let limb = (lo / 64) as usize;
-    let shift = lo % 64;
-    if limb >= 4 {
-        return 0;
-    }
-    let mut v = scalar[limb] >> shift;
-    if shift + k > 64 && limb + 1 < 4 {
-        v |= scalar[limb + 1] << (64 - shift);
-    }
-    v & ((1u64 << k) - 1)
-}
-
-/// Number of k-bit windows covering an N-bit scalar.
-pub fn window_count(scalar_bits: u32, k: u32) -> u32 {
-    scalar_bits.div_ceil(k)
-}
-
-/// One window's bucket fill: `buckets[slice − 1] += Pᵢ` (bucket 0 unused —
-/// index shifted so bucket b holds coefficient b+1... here we keep the
-/// natural indexing with a dummy slot 0 for clarity; slice 0 contributes
-/// nothing).
-fn fill_window<C: CurveParams>(
-    points: &[Affine<C>],
-    scalars: &[ScalarLimbs],
-    lo: u32,
-    k: u32,
-) -> Vec<Jacobian<C>> {
-    let mut buckets = vec![Jacobian::<C>::infinity(); 1 << k];
-    for (p, s) in points.iter().zip(scalars) {
-        let b = slice_bits(s, lo, k) as usize;
-        if b != 0 {
-            buckets[b] = buckets[b].add_mixed(p);
-        }
-    }
-    buckets
-}
-
-/// Algorithm 2's reconstruction loop: Σ b·B[b] via the running sum.
-/// 2·(2^k − 1) point adds, all serially dependent.
-pub fn reduce_running_sum<C: CurveParams>(buckets: &[Jacobian<C>]) -> Jacobian<C> {
-    let mut acc = Jacobian::<C>::infinity(); // E: running suffix sum
-    let mut sum = Jacobian::<C>::infinity(); // A: accumulated answer
-    for b in buckets.iter().skip(1).rev() {
-        acc = acc.add(b);
-        sum = sum.add(&acc);
-    }
-    sum
-}
-
-/// IS-RBAM: Σ b·B[b] as a second-level bucket MSM over k₂-bit sub-slices
-/// of the bucket index. Identical output; the serial chain shrinks from
-/// 2·2^k to (k/k₂)·2·2^k₂ (plus k doublings), everything else is
-/// independent fills.
-pub fn reduce_recursive<C: CurveParams>(
-    buckets: &[Jacobian<C>],
-    k: u32,
-    k2: u32,
-) -> Jacobian<C> {
-    assert!(k2 >= 1 && k2 <= k, "invalid sub-window");
-    let sub_windows = k.div_ceil(k2);
-    let mut l2: Vec<Vec<Jacobian<C>>> =
-        vec![vec![Jacobian::<C>::infinity(); 1 << k2]; sub_windows as usize];
-    for (b, point) in buckets.iter().enumerate().skip(1) {
-        if point.is_infinity() {
-            continue;
-        }
-        let mut idx = b as u64;
-        for t in 0..sub_windows {
-            let sub = (idx & ((1 << k2) - 1)) as usize;
-            if sub != 0 {
-                l2[t as usize][sub] = l2[t as usize][sub].add(point);
-            }
-            idx >>= k2;
-        }
-    }
-    // Each sub-window reduces with the (short) running sum, then Horner.
-    let mut result = Jacobian::<C>::infinity();
-    for t in (0..sub_windows).rev() {
-        for _ in 0..k2 {
-            result = result.double();
-        }
-        let w = reduce_running_sum(&l2[t as usize]);
-        result = result.add(&w);
-    }
-    result
-}
-
-/// Full Pippenger MSM.
+/// Full Pippenger MSM through the shared plan.
 pub fn msm<C: CurveParams>(
     points: &[Affine<C>],
     scalars: &[ScalarLimbs],
@@ -151,24 +34,11 @@ pub fn msm<C: CurveParams>(
     if points.is_empty() {
         return Jacobian::infinity();
     }
-    let k = cfg.window_bits;
-    assert!((1..=16).contains(&k), "window bits out of range");
-    let windows = window_count(C::SCALAR_BITS.min(256), k);
-
-    // DNA combine (Horner), MSB window first.
-    let mut result = Jacobian::<C>::infinity();
-    for j in (0..windows).rev() {
-        for _ in 0..k {
-            result = result.double();
-        }
-        let buckets = fill_window(points, scalars, j * k, k);
-        let wj = match cfg.reduction {
-            Reduction::RunningSum => reduce_running_sum(&buckets),
-            Reduction::Recursive { k2 } => reduce_recursive(&buckets, k, k2.min(k)),
-        };
-        result = result.add(&wj);
-    }
-    result
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    let per_window: Vec<Jacobian<C>> = (0..plan.windows)
+        .map(|j| plan.reduce(&plan.fill_window(points, scalars, j)))
+        .collect();
+    plan.combine(&per_window)
 }
 
 /// Measured cost breakdown of one MSM configuration (drives Tables II/III
@@ -198,31 +68,26 @@ pub fn msm_with_cost<C: CurveParams>(
     cfg: &MsmConfig,
 ) -> (Jacobian<C>, MsmCost) {
     assert_eq!(points.len(), scalars.len());
-    let k = cfg.window_bits;
-    let windows = window_count(C::SCALAR_BITS.min(256), k);
+    let plan = MsmPlan::for_curve::<C>(cfg);
     let mm0 = crate::ff::opcount::snapshot();
 
     let mut cost = MsmCost::default();
     let mut result = Jacobian::<C>::infinity();
-    for j in (0..windows).rev() {
+    for j in (0..plan.windows).rev() {
         let (r2, combine) = counters::measure(|| {
             let mut r = result;
-            for _ in 0..k {
+            for _ in 0..plan.window_bits {
                 r = r.double();
             }
             r
         });
-        let buckets = fill_window(points, scalars, j * k, k);
+        let buckets = plan.fill_window(points, scalars, j);
         // Fill ops are counted as *issued* UDA operations (one per nonzero
-        // slice), matching the hardware: a first touch of an empty bucket
+        // digit), matching the hardware: a first touch of an empty bucket
         // still flows through the pipeline even though the software
         // shortcut skips the arithmetic.
-        let issued: u64 =
-            scalars.iter().filter(|s| slice_bits(s, j * k, k) != 0).count() as u64;
-        let (wj, reduce) = counters::measure(|| match cfg.reduction {
-            Reduction::RunningSum => reduce_running_sum(&buckets),
-            Reduction::Recursive { k2 } => reduce_recursive(&buckets, k, k2.min(k)),
-        });
+        let issued: u64 = scalars.iter().filter(|s| plan.digit(s, j) != 0).count() as u64;
+        let (wj, reduce) = counters::measure(|| plan.reduce(&buckets));
         let (r3, combine2) = counters::measure(|| r2.add(&wj));
         result = r3;
         cost.fill_ops += issued;
@@ -240,31 +105,19 @@ mod tests {
     use crate::msm::naive;
 
     #[test]
-    fn slice_bits_extracts_correctly() {
-        let s: ScalarLimbs = [0xABCD_EF01_2345_6789, 0x1122_3344_5566_7788, 0, 0];
-        assert_eq!(slice_bits(&s, 0, 8), 0x89);
-        assert_eq!(slice_bits(&s, 4, 8), 0x78);
-        // straddles the limb boundary: bits 60..72 = low 4 of limb1 (0x8) ++ top nibble of limb0 (0xA)
-        assert_eq!(slice_bits(&s, 60, 12), 0x88A);
-        assert_eq!(slice_bits(&s, 192, 16), 0);
-    }
-
-    #[test]
-    fn window_count_matches_paper_table_iii() {
-        // k=12: BN254 → 22 windows, BLS12-381 → 32 windows (Table III's
-        // m×22 / m×32 point-op accounting).
-        assert_eq!(window_count(254, 12), 22);
-        assert_eq!(window_count(381, 12), 32);
-    }
-
-    #[test]
-    fn matches_naive_small() {
+    fn matches_naive_small_all_modes() {
         let w = points::workload::<Bn254G1>(50, 71);
         let want = naive::msm(&w.points, &w.scalars);
         for k in [4u32, 8, 12] {
             for red in [Reduction::RunningSum, Reduction::Recursive { k2: 3 }] {
-                let got = msm(&w.points, &w.scalars, &MsmConfig { window_bits: k, reduction: red });
-                assert!(got.eq_point(&want), "k={k} red={red:?}");
+                for slicing in [Slicing::Unsigned, Slicing::Signed] {
+                    let got = msm(
+                        &w.points,
+                        &w.scalars,
+                        &MsmConfig { window_bits: k, reduction: red, slicing },
+                    );
+                    assert!(got.eq_point(&want), "k={k} red={red:?} {slicing:?}");
+                }
             }
         }
     }
@@ -280,16 +133,12 @@ mod tests {
     #[test]
     fn reduction_strategies_agree() {
         let w = points::workload::<Bn254G1>(200, 73);
-        let a = msm(
-            &w.points,
-            &w.scalars,
-            &MsmConfig { window_bits: 10, reduction: Reduction::RunningSum },
-        );
+        let a = msm(&w.points, &w.scalars, &MsmConfig::new(10, Reduction::RunningSum));
         for k2 in [1u32, 2, 5, 10] {
             let b = msm(
                 &w.points,
                 &w.scalars,
-                &MsmConfig { window_bits: 10, reduction: Reduction::Recursive { k2 } },
+                &MsmConfig::new(10, Reduction::Recursive { k2 }),
             );
             assert!(a.eq_point(&b), "k2={k2}");
         }
@@ -315,6 +164,26 @@ mod tests {
     }
 
     #[test]
+    fn recursive_reduction_on_signed_sized_buckets() {
+        // a signed plan's bucket array (2^(k−1) + 1 slots) reduces with the
+        // same functions: index_bits stays k
+        let g = Jacobian::<Bn254G1>::generator();
+        let k = 6u32;
+        let slots = (1usize << (k - 1)) + 1;
+        let mut buckets = vec![Jacobian::<Bn254G1>::infinity(); slots];
+        for (b, mult) in [(1usize, 3u64), (19, 7), (32, 2)] {
+            buckets[b] = crate::ec::scalar::mul::<Bn254G1>(&g, &[mult, 0, 0, 0]);
+        }
+        let want = reduce_running_sum(&buckets);
+        for k2 in 1..=k {
+            assert!(reduce_recursive(&buckets, k, k2).eq_point(&want), "k2={k2}");
+        }
+        // 1·3 + 19·7 + 32·2 = 200
+        let check = crate::ec::scalar::mul::<Bn254G1>(&g, &[200, 0, 0, 0]);
+        assert!(want.eq_point(&check));
+    }
+
+    #[test]
     fn zero_scalars_give_infinity() {
         let pts = points::generate_points_walk::<Bn254G1>(10, 74);
         let zeros = vec![[0u64; 4]; 10];
@@ -324,7 +193,7 @@ mod tests {
     #[test]
     fn cost_split_sums_to_total() {
         let w = points::workload::<Bn254G1>(64, 75);
-        let cfg = MsmConfig { window_bits: 8, reduction: Reduction::RunningSum };
+        let cfg = MsmConfig::unsigned(8, Reduction::RunningSum);
         let (r, cost) = msm_with_cost(&w.points, &w.scalars, &cfg);
         let want = naive::msm(&w.points, &w.scalars);
         assert!(r.eq_point(&want));
@@ -333,21 +202,59 @@ mod tests {
     }
 
     #[test]
+    fn cost_agrees_with_naive_in_signed_mode() {
+        let w = points::workload::<Bn254G1>(64, 78);
+        let cfg = MsmConfig::new(8, Reduction::Recursive { k2: 4 });
+        assert_eq!(cfg.slicing, Slicing::Signed);
+        let (r, cost) = msm_with_cost(&w.points, &w.scalars, &cfg);
+        assert!(r.eq_point(&naive::msm(&w.points, &w.scalars)));
+        assert!(cost.fill_ops > 0);
+    }
+
+    #[test]
+    fn signed_halves_measured_reduce_chain_when_dense() {
+        // With m ≫ buckets every bucket is occupied, so the measured
+        // running-sum reduce ops land at the analytic chain length: the
+        // signed plan's chain is half the unsigned one at equal k.
+        let k = 6u32;
+        let w = points::workload::<Bn254G1>(2048, 79);
+        let (ru, cu) = msm_with_cost(
+            &w.points,
+            &w.scalars,
+            &MsmConfig::unsigned(k, Reduction::RunningSum),
+        );
+        let (rs, cs) = msm_with_cost(
+            &w.points,
+            &w.scalars,
+            &MsmConfig { window_bits: k, reduction: Reduction::RunningSum, slicing: Slicing::Signed },
+        );
+        assert!(ru.eq_point(&rs));
+        // compare per-window reduce ops (window counts can differ when the
+        // signed plan needs a carry window)
+        let pu = MsmPlan::for_curve::<Bn254G1>(&MsmConfig::unsigned(k, Reduction::RunningSum));
+        let ps = MsmPlan::for_curve::<Bn254G1>(&MsmConfig {
+            window_bits: k,
+            reduction: Reduction::RunningSum,
+            slicing: Slicing::Signed,
+        });
+        let per_u = cu.reduce_ops as f64 / pu.windows as f64;
+        let per_s = cs.reduce_ops as f64 / ps.windows as f64;
+        let ratio = per_u / per_s;
+        assert!(
+            ratio > 1.7 && ratio < 2.3,
+            "per-window reduce ops: unsigned {per_u:.0} signed {per_s:.0} ratio {ratio:.2}"
+        );
+    }
+
+    #[test]
     fn recursive_shrinks_serial_reduce_ops_fraction() {
-        // IS-RBAM trades serial reduce adds for parallel fills; measured
-        // reduce-phase ops should exceed running-sum? No: total ops shift.
-        // What the hardware cares about: the serial-chain length, which the
-        // FPGA model derives from the reduction kind. Here we simply check
-        // both have the documented op counts: running sum ≈ 2·(2^k−1) per
-        // window.
+        // Running-sum reduce ops per window are bounded by 2·live_buckets;
+        // adds with an infinity operand short-circuit (not counted), so
+        // with only 32 points most buckets are empty ⇒ counted ops ≪ bound.
         let w = points::workload::<Bn254G1>(32, 76);
-        let k = 8u32;
-        let cfg = MsmConfig { window_bits: k, reduction: Reduction::RunningSum };
+        let cfg = MsmConfig::unsigned(8, Reduction::RunningSum);
         let (_, cost) = msm_with_cost(&w.points, &w.scalars, &cfg);
-        let windows = window_count(254, k) as u64;
-        // Each window's running sum performs 2·(2^k −1) adds, but adds with
-        // an infinity operand short-circuit (not counted). With only 32
-        // points most buckets are empty ⇒ counted ops ≪ bound.
-        assert!(cost.reduce_ops <= windows * 2 * ((1 << k) - 1));
+        let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        assert!(cost.reduce_ops <= plan.serial_reduce_ops());
     }
 }

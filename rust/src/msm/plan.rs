@@ -1,0 +1,447 @@
+//! The shared MSM kernel plan: one place that decides window slicing,
+//! digit encoding (unsigned vs signed), bucket indexing, and the
+//! bucket-reduction strategy — consumed by **every** backend
+//! ([`super::pippenger`], [`super::parallel`], [`super::batch_affine`],
+//! `runtime::msm_engine`) and by the FPGA timing model
+//! (`fpga::sab`/`fpga::rbam`), so software and hardware model can never
+//! disagree on bucket counts or window counts again.
+//!
+//! A plan answers, for a fixed curve + [`MsmConfig`]:
+//!
+//! * how many k-bit windows cover the scalar ([`MsmPlan::windows`] —
+//!   signed mode adds a carry window only when the top slice can carry);
+//! * how many bucket slots a window needs ([`MsmPlan::bucket_slots`],
+//!   [`MsmPlan::live_buckets`] — **halved** by signed digits);
+//! * which bucket a (scalar, window) pair touches and with which point
+//!   sign ([`MsmPlan::bucket_op`]);
+//! * how a filled window reduces ([`MsmPlan::reduce`]) and how window
+//!   results combine ([`MsmPlan::combine`], the DNA Horner pass);
+//! * the length of the serial reduce chain the hardware pays latency for
+//!   ([`MsmPlan::serial_reduce_ops`] — the quantity IS-RBAM and signed
+//!   digits each attack).
+//!
+//! Buckets use natural indexing: slot `b` holds the points whose digit has
+//! magnitude `b`; slot 0 is a dummy (digit 0 contributes nothing).
+
+use super::signed;
+use crate::ec::{scalar, Affine, CurveParams, Jacobian, ScalarLimbs};
+
+/// Digit encoding for scalar slices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Slicing {
+    /// Classic Pippenger: digits in [0, 2^k), 2^k − 1 live buckets.
+    Unsigned,
+    /// Signed digits in [−2^(k−1), 2^(k−1)): negative digits add −P, so
+    /// only 2^(k−1) live buckets — half the memory, half the running-sum
+    /// chain. Needs k ≥ 2.
+    Signed,
+}
+
+impl Slicing {
+    /// Default policy: signed for k ≥ 4 (at tiny windows the saved chain
+    /// is a handful of adds while the extra carry window costs a full
+    /// fill pass).
+    pub fn auto(window_bits: u32) -> Slicing {
+        if window_bits >= 4 {
+            Slicing::Signed
+        } else {
+            Slicing::Unsigned
+        }
+    }
+}
+
+impl Default for Slicing {
+    fn default() -> Self {
+        // the crate default window (k = 12) is well past the k ≥ 4 threshold
+        Slicing::Signed
+    }
+}
+
+/// Bucket-reduction strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduction {
+    /// Classic serial running sum (Algorithm 2).
+    RunningSum,
+    /// The paper's IS-RBAM recursive bucket reduction with sub-window k₂.
+    Recursive { k2: u32 },
+}
+
+impl Default for Reduction {
+    fn default() -> Self {
+        // k₂ = 6 halves the serial chain at negligible extra fills for the
+        // k ∈ [10, 16] range the hardware uses.
+        Reduction::Recursive { k2: 6 }
+    }
+}
+
+/// MSM configuration (the user-facing knobs; [`MsmPlan`] derives the rest).
+#[derive(Clone, Copy, Debug)]
+pub struct MsmConfig {
+    /// Window (slice) width k in bits. The paper's hardware uses k = 12
+    /// (Table III: ⌈254/12⌉ = 22 and ⌈381/12⌉ = 32 windows).
+    pub window_bits: u32,
+    pub reduction: Reduction,
+    pub slicing: Slicing,
+}
+
+impl Default for MsmConfig {
+    fn default() -> Self {
+        MsmConfig {
+            window_bits: 12,
+            reduction: Reduction::default(),
+            slicing: Slicing::auto(12),
+        }
+    }
+}
+
+impl MsmConfig {
+    /// Config with the default slicing policy for the window width.
+    pub fn new(window_bits: u32, reduction: Reduction) -> MsmConfig {
+        MsmConfig { window_bits, reduction, slicing: Slicing::auto(window_bits) }
+    }
+
+    /// Config pinned to unsigned (paper-faithful) buckets.
+    pub fn unsigned(window_bits: u32, reduction: Reduction) -> MsmConfig {
+        MsmConfig { window_bits, reduction, slicing: Slicing::Unsigned }
+    }
+
+    /// Auto-tuned config for an m-point MSM (window via the c ≈ log2 m − 3
+    /// rule clamped to the hardware point, default reduction + slicing).
+    pub fn auto(m: usize) -> MsmConfig {
+        MsmConfig::new(super::auto_window(m), Reduction::default())
+    }
+}
+
+/// A fully resolved execution plan for one MSM shape.
+#[derive(Clone, Copy, Debug)]
+pub struct MsmPlan {
+    pub window_bits: u32,
+    pub slicing: Slicing,
+    pub reduction: Reduction,
+    /// Scalar bit width the windows must cover.
+    pub scalar_bits: u32,
+    /// Window count (signed mode adds a carry window only when the top
+    /// slice is wide enough to carry — see `signed::signed_window_count`).
+    pub windows: u32,
+}
+
+impl MsmPlan {
+    /// Build a plan for `scalar_bits`-wide scalars under `cfg`.
+    pub fn new(scalar_bits: u32, cfg: &MsmConfig) -> MsmPlan {
+        let k = cfg.window_bits;
+        assert!((1..=16).contains(&k), "window bits out of range");
+        if cfg.slicing == Slicing::Signed {
+            assert!(k >= 2, "signed slicing needs k >= 2");
+        }
+        let windows = match cfg.slicing {
+            Slicing::Unsigned => scalar::window_count(scalar_bits, k),
+            Slicing::Signed => signed::signed_window_count(scalar_bits, k),
+        };
+        MsmPlan {
+            window_bits: k,
+            slicing: cfg.slicing,
+            reduction: cfg.reduction,
+            scalar_bits,
+            windows,
+        }
+    }
+
+    /// Plan for a curve's scalars (the width every backend uses).
+    pub fn for_curve<C: CurveParams>(cfg: &MsmConfig) -> MsmPlan {
+        MsmPlan::new(C::SCALAR_BITS.min(256), cfg)
+    }
+
+    /// Bucket-array length per window, **including** the dummy slot 0.
+    pub fn bucket_slots(&self) -> usize {
+        match self.slicing {
+            Slicing::Unsigned => 1usize << self.window_bits,
+            Slicing::Signed => (1usize << (self.window_bits - 1)) + 1,
+        }
+    }
+
+    /// Live (coefficient-carrying) buckets per window: 2^k − 1 unsigned,
+    /// 2^(k−1) signed. This is what sizes hardware bucket memory and the
+    /// running-sum serial chain.
+    pub fn live_buckets(&self) -> u64 {
+        self.bucket_slots() as u64 - 1
+    }
+
+    /// Digit of `scalar` at window `j`: [0, 2^k) unsigned,
+    /// [−2^(k−1), 2^(k−1)) signed.
+    #[inline]
+    pub fn digit(&self, scalar: &ScalarLimbs, j: u32) -> i64 {
+        match self.slicing {
+            Slicing::Unsigned => {
+                scalar::slice_bits(scalar, j * self.window_bits, self.window_bits) as i64
+            }
+            Slicing::Signed => signed::signed_digit(scalar, j, self.window_bits),
+        }
+    }
+
+    /// All digits of one scalar, LSB window first (length [`Self::windows`]).
+    pub fn digits(&self, scalar: &ScalarLimbs) -> Vec<i64> {
+        match self.slicing {
+            Slicing::Unsigned => (0..self.windows)
+                .map(|j| {
+                    scalar::slice_bits(scalar, j * self.window_bits, self.window_bits) as i64
+                })
+                .collect(),
+            Slicing::Signed => {
+                signed::signed_digits(scalar, self.window_bits, self.windows)
+            }
+        }
+    }
+
+    /// The bucket operation for (scalar, window): `None` when the digit is
+    /// zero, else `(bucket_index, negate_point)`. The index is the digit's
+    /// magnitude (natural indexing), never 0, and < [`Self::bucket_slots`].
+    #[inline]
+    pub fn bucket_op(&self, scalar: &ScalarLimbs, j: u32) -> Option<(usize, bool)> {
+        let d = self.digit(scalar, j);
+        match d.cmp(&0) {
+            std::cmp::Ordering::Equal => None,
+            std::cmp::Ordering::Greater => Some((d as usize, false)),
+            std::cmp::Ordering::Less => Some((d.unsigned_abs() as usize, true)),
+        }
+    }
+
+    /// Fill one window's Jacobian buckets (mixed adds, sign-aware). The
+    /// shared fill loop of the serial and window-parallel backends; the
+    /// batch-affine and engine backends drive [`Self::bucket_op`] through
+    /// their own batched executors.
+    pub fn fill_window<C: CurveParams>(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+        j: u32,
+    ) -> Vec<Jacobian<C>> {
+        let mut buckets = vec![Jacobian::<C>::infinity(); self.bucket_slots()];
+        for (p, s) in points.iter().zip(scalars) {
+            if let Some((b, negate)) = self.bucket_op(s, j) {
+                if negate {
+                    buckets[b] = buckets[b].add_mixed(&p.neg());
+                } else {
+                    buckets[b] = buckets[b].add_mixed(p);
+                }
+            }
+        }
+        buckets
+    }
+
+    /// Reduce one window's (natural-indexed) buckets to Σ b·B[b] with the
+    /// planned strategy.
+    pub fn reduce<C: CurveParams>(&self, buckets: &[Jacobian<C>]) -> Jacobian<C> {
+        match self.reduction {
+            Reduction::RunningSum => reduce_running_sum(buckets),
+            Reduction::Recursive { k2 } => {
+                reduce_recursive(buckets, self.window_bits, k2.clamp(1, self.window_bits))
+            }
+        }
+    }
+
+    /// DNA combine: Horner over window results (index j = window j, LSB
+    /// first), k doublings per window plus one add.
+    pub fn combine<C: CurveParams>(&self, window_results: &[Jacobian<C>]) -> Jacobian<C> {
+        let mut result = Jacobian::<C>::infinity();
+        for wj in window_results.iter().rev() {
+            for _ in 0..self.window_bits {
+                result = result.double();
+            }
+            result = result.add(wj);
+        }
+        result
+    }
+
+    /// Length of the *serially dependent* point-op chain in one window's
+    /// reduction — each of these stalls a full pipeline latency in
+    /// hardware. Running sum: 2·live_buckets (signed mode halves it);
+    /// IS-RBAM: (k/k₂) short sums of 2^k₂ buckets plus k Horner doublings.
+    pub fn serial_reduce_ops_per_window(&self) -> u64 {
+        match self.reduction {
+            Reduction::RunningSum => 2 * self.live_buckets(),
+            Reduction::Recursive { k2 } => {
+                let k2 = k2.clamp(1, self.window_bits);
+                let sub = self.window_bits.div_ceil(k2) as u64;
+                sub * 2 * ((1u64 << k2) - 1) + self.window_bits as u64
+            }
+        }
+    }
+
+    /// Serial reduce chain across all windows.
+    pub fn serial_reduce_ops(&self) -> u64 {
+        self.serial_reduce_ops_per_window() * self.windows as u64
+    }
+}
+
+/// Algorithm 2's reconstruction loop: Σ b·B[b] via the running sum.
+/// 2·(len − 1) point adds, all serially dependent.
+pub fn reduce_running_sum<C: CurveParams>(buckets: &[Jacobian<C>]) -> Jacobian<C> {
+    let mut acc = Jacobian::<C>::infinity(); // E: running suffix sum
+    let mut sum = Jacobian::<C>::infinity(); // A: accumulated answer
+    for b in buckets.iter().skip(1).rev() {
+        acc = acc.add(b);
+        sum = sum.add(&acc);
+    }
+    sum
+}
+
+/// IS-RBAM: Σ b·B[b] as a second-level bucket MSM over k₂-bit sub-slices
+/// of the bucket index. `index_bits` is the bit width of the largest
+/// bucket index (= k for both unsigned [max 2^k − 1] and signed
+/// [max 2^(k−1)] plans). Identical output to the running sum; the serial
+/// chain shrinks from 2·live to (k/k₂)·2·2^k₂ (plus k doublings) — the
+/// rest is independent, pipeline-friendly fills.
+pub fn reduce_recursive<C: CurveParams>(
+    buckets: &[Jacobian<C>],
+    index_bits: u32,
+    k2: u32,
+) -> Jacobian<C> {
+    assert!(k2 >= 1 && k2 <= index_bits, "invalid sub-window");
+    let sub_windows = index_bits.div_ceil(k2);
+    let mut l2: Vec<Vec<Jacobian<C>>> =
+        vec![vec![Jacobian::<C>::infinity(); 1 << k2]; sub_windows as usize];
+    for (b, point) in buckets.iter().enumerate().skip(1) {
+        if point.is_infinity() {
+            continue;
+        }
+        let mut idx = b as u64;
+        for t in 0..sub_windows {
+            let sub = (idx & ((1 << k2) - 1)) as usize;
+            if sub != 0 {
+                l2[t as usize][sub] = l2[t as usize][sub].add(point);
+            }
+            idx >>= k2;
+        }
+    }
+    // Each sub-window reduces with the (short) running sum, then Horner.
+    let mut result = Jacobian::<C>::infinity();
+    for t in (0..sub_windows).rev() {
+        for _ in 0..k2 {
+            result = result.double();
+        }
+        let w = reduce_running_sum(&l2[t as usize]);
+        result = result.add(&w);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bls12381G1, Bn254G1};
+
+    #[test]
+    fn plan_window_counts() {
+        let unsigned = MsmPlan::new(254, &MsmConfig::unsigned(12, Reduction::RunningSum));
+        assert_eq!(unsigned.windows, 22); // Table III
+        // 254-bit scalars at k=12: the top window has only 2 live bits —
+        // it can never carry, so signed mode needs no extra window
+        let signed = MsmPlan::new(254, &MsmConfig::new(12, Reduction::RunningSum));
+        assert_eq!(signed.slicing, Slicing::Signed);
+        assert_eq!(signed.windows, 22);
+        // a full-width top window (24 = 2·12 bits) can carry: +1
+        let carrying = MsmPlan::new(24, &MsmConfig::new(12, Reduction::RunningSum));
+        assert_eq!(carrying.windows, 3);
+        assert_eq!(MsmPlan::new(24, &MsmConfig::unsigned(12, Reduction::RunningSum)).windows, 2);
+    }
+
+    #[test]
+    fn signed_halves_buckets() {
+        for k in [4u32, 8, 12, 16] {
+            let u = MsmPlan::new(254, &MsmConfig::unsigned(k, Reduction::RunningSum));
+            let s = MsmPlan::new(254, &MsmConfig::new(k, Reduction::RunningSum));
+            assert_eq!(u.live_buckets(), (1 << k) - 1);
+            assert_eq!(s.live_buckets(), 1 << (k - 1));
+            assert_eq!(u.bucket_slots(), 1 << k);
+            assert_eq!(s.bucket_slots(), (1 << (k - 1)) + 1);
+            // the halving the reduce chain inherits: (2^k − 1)/2^(k−1),
+            // i.e. 1.875 at k = 4 and → 2 as k grows
+            let ratio = u.serial_reduce_ops_per_window() as f64
+                / s.serial_reduce_ops_per_window() as f64;
+            assert!(ratio > 1.8 && ratio <= 2.0, "k={k} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn slicing_auto_threshold() {
+        assert_eq!(Slicing::auto(2), Slicing::Unsigned);
+        assert_eq!(Slicing::auto(3), Slicing::Unsigned);
+        assert_eq!(Slicing::auto(4), Slicing::Signed);
+        assert_eq!(Slicing::auto(12), Slicing::Signed);
+        // the crate default is the paper window, so signed mode is on
+        assert_eq!(MsmConfig::default().slicing, Slicing::Signed);
+    }
+
+    #[test]
+    fn digits_match_digit_and_stay_in_range() {
+        let w = points::workload::<Bn254G1>(6, 411);
+        for cfg in [
+            MsmConfig::unsigned(8, Reduction::RunningSum),
+            MsmConfig::new(8, Reduction::RunningSum),
+            MsmConfig::new(13, Reduction::RunningSum),
+        ] {
+            let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+            for s in &w.scalars {
+                let all = plan.digits(s);
+                assert_eq!(all.len(), plan.windows as usize);
+                for (j, &d) in all.iter().enumerate() {
+                    assert_eq!(plan.digit(s, j as u32), d);
+                    assert!(d.unsigned_abs() <= plan.live_buckets(), "digit {d}");
+                    match plan.bucket_op(s, j as u32) {
+                        None => assert_eq!(d, 0),
+                        Some((b, neg)) => {
+                            assert_eq!(b as u64, d.unsigned_abs());
+                            assert_eq!(neg, d < 0);
+                            assert!(b < plan.bucket_slots());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_reduce_combine_matches_naive_both_modes() {
+        let w = points::workload::<Bn254G1>(60, 412);
+        let want = crate::msm::naive::msm(&w.points, &w.scalars);
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            for red in [Reduction::RunningSum, Reduction::Recursive { k2: 3 }] {
+                let cfg = MsmConfig { window_bits: 7, reduction: red, slicing };
+                let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+                let per_window: Vec<_> = (0..plan.windows)
+                    .map(|j| plan.reduce(&plan.fill_window(&w.points, &w.scalars, j)))
+                    .collect();
+                let got = plan.combine(&per_window);
+                assert!(got.eq_point(&want), "{slicing:?} {red:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bls_signed_matches_naive() {
+        let w = points::workload::<Bls12381G1>(40, 413);
+        let want = crate::msm::naive::msm(&w.points, &w.scalars);
+        let plan = MsmPlan::for_curve::<Bls12381G1>(&MsmConfig::default());
+        let per_window: Vec<_> = (0..plan.windows)
+            .map(|j| plan.reduce(&plan.fill_window(&w.points, &w.scalars, j)))
+            .collect();
+        assert!(plan.combine(&per_window).eq_point(&want));
+    }
+
+    #[test]
+    fn serial_ops_accounting() {
+        // running sum, unsigned, k=12: 2·(2^12 − 1) per window × 22 windows
+        let p = MsmPlan::new(254, &MsmConfig::unsigned(12, Reduction::RunningSum));
+        assert_eq!(p.serial_reduce_ops_per_window(), 2 * 4095);
+        assert_eq!(p.serial_reduce_ops(), 2 * 4095 * 22);
+        // recursive: (12/6) sub-sums of 2·63 plus 12 doublings
+        let r = MsmPlan::new(254, &MsmConfig::unsigned(12, Reduction::Recursive { k2: 6 }));
+        assert_eq!(r.serial_reduce_ops_per_window(), 2 * 2 * 63 + 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "window bits out of range")]
+    fn rejects_zero_window() {
+        MsmPlan::new(254, &MsmConfig::unsigned(0, Reduction::RunningSum));
+    }
+}

@@ -1,0 +1,233 @@
+//! Signed-digit scalar decomposition (the SZKP/CycloneMSM bucket-halving
+//! trick, applied on top of the paper's §II-F window slicing).
+//!
+//! A k-bit unsigned slice d ∈ [0, 2^k) indexes one of 2^k − 1 live buckets.
+//! Re-coding the slices with carry propagation,
+//!
+//! ```text
+//!   v = slice + carry_in;   if v ≥ 2^(k−1) { d = v − 2^k; carry_out = 1 }
+//!                           else           { d = v;       carry_out = 0 }
+//! ```
+//!
+//! yields digits d ∈ [−2^(k−1), 2^(k−1)−1] with Σ dⱼ·2^(k·j) equal to the
+//! original scalar. When the top window's slice is wide enough to carry
+//! (≥ k−1 live bits), one extra window absorbs the final carry (its digit
+//! is 0 or 1); for narrower top slices — including both paper curves at
+//! the hardware k = 12 — no extra window is needed at all. Because
+//! negating a Weierstrass point is free
+//! (y ↦ −y), a negative digit becomes an add of −P into bucket |d| — so
+//! only 2^(k−1) live buckets are needed: **half the bucket memory and half
+//! the serial running-sum chain** the reduction phase walks. The MSM plan
+//! ([`super::plan`]) threads these digits through every backend and into
+//! the FPGA model's bucket counts.
+//!
+//! Requires k ≥ 2 (with k = 1 the digit set {−1, 0} cannot absorb a carry).
+
+use crate::ec::scalar::slice_bits;
+use crate::ec::ScalarLimbs;
+
+/// Windows needed to cover an N-bit scalar with signed k-bit digits: the
+/// unsigned count, plus one carry-absorbing top window **only when the
+/// top slice can actually carry**. The top window holds
+/// `r = N − (windows−1)·k` live bits, so its value v ≤ (2^r − 1) + 1;
+/// a carry out (v ≥ 2^(k−1)) is possible iff r ≥ k − 1. Both paper
+/// curves at the hardware k = 12 (254: r = 2; 381: r = 9) never carry —
+/// signed mode there costs no extra window or stream pass.
+pub fn signed_window_count(scalar_bits: u32, k: u32) -> u32 {
+    let base = crate::ec::scalar::window_count(scalar_bits, k);
+    let top_bits = scalar_bits - (base - 1) * k;
+    base + (top_bits >= k - 1) as u32
+}
+
+/// The signed digit of `scalar` at window `j` (k-bit windows, k ∈ [2, 16]).
+///
+/// Recomputes the carry chain from window 0 — O(j) slice reads, which is
+/// noise next to the ≥1 point operation each nonzero digit triggers. Use
+/// [`signed_digits`] when all windows of one scalar are needed at once.
+pub fn signed_digit(scalar: &ScalarLimbs, j: u32, k: u32) -> i64 {
+    debug_assert!((2..=16).contains(&k), "signed slicing needs 2 <= k <= 16");
+    let half = 1u64 << (k - 1);
+    let mut carry = 0u64;
+    for t in 0..j {
+        let v = slice_bits(scalar, t * k, k) + carry;
+        carry = (v >= half) as u64;
+    }
+    let v = slice_bits(scalar, j * k, k) + carry;
+    if v >= half {
+        v as i64 - (1i64 << k)
+    } else {
+        v as i64
+    }
+}
+
+/// All signed digits of one scalar, LSB window first, in a single carry
+/// pass. `windows` should be [`signed_window_count`] of the scalar width.
+pub fn signed_digits(scalar: &ScalarLimbs, k: u32, windows: u32) -> Vec<i64> {
+    debug_assert!((2..=16).contains(&k));
+    let half = 1u64 << (k - 1);
+    let mut out = Vec::with_capacity(windows as usize);
+    let mut carry = 0u64;
+    for j in 0..windows {
+        let v = slice_bits(scalar, j * k, k) + carry;
+        if v >= half {
+            out.push(v as i64 - (1i64 << k));
+            carry = 1;
+        } else {
+            out.push(v as i64);
+            carry = 0;
+        }
+    }
+    debug_assert_eq!(carry, 0, "carry must be absorbed by the top window");
+    out
+}
+
+/// Exact inverse of the decomposition: Σ dⱼ·2^(k·j) computed in 320-bit
+/// integer arithmetic (positive and negative magnitudes accumulated
+/// separately, then subtracted). Returns `None` if the sum is negative or
+/// overflows 320 bits — both impossible for digits produced by
+/// [`signed_digits`], so the round-trip tests treat `None` as failure.
+/// The low 4 limbs of the result must equal the original scalar and the
+/// 5th must be zero.
+pub fn reconstruct(digits: &[i64], k: u32) -> Option<[u64; 5]> {
+    let mut pos = [0u64; 5];
+    let mut neg = [0u64; 5];
+    for (j, &d) in digits.iter().enumerate() {
+        let acc = if d >= 0 { &mut pos } else { &mut neg };
+        let shift = j as u32 * k;
+        let limb = (shift / 64) as usize;
+        let off = shift % 64;
+        let wide = (d.unsigned_abs() as u128) << off;
+        let mut carry = 0u128;
+        for (t, part) in [wide as u64, (wide >> 64) as u64].iter().enumerate() {
+            if limb + t >= 5 {
+                if *part != 0 {
+                    return None; // contribution past 320 bits
+                }
+                continue;
+            }
+            let sum = acc[limb + t] as u128 + *part as u128 + carry;
+            acc[limb + t] = sum as u64;
+            carry = sum >> 64;
+        }
+        let mut i = limb + 2;
+        while carry > 0 {
+            if i >= 5 {
+                return None;
+            }
+            let sum = acc[i] as u128 + carry;
+            acc[i] = sum as u64;
+            carry = sum >> 64;
+            i += 1;
+        }
+    }
+    let mut out = [0u64; 5];
+    let mut borrow = 0i128;
+    for i in 0..5 {
+        let d = pos[i] as i128 - neg[i] as i128 - borrow;
+        if d < 0 {
+            out[i] = (d + (1i128 << 64)) as u64;
+            borrow = 1;
+        } else {
+            out[i] = d as u64;
+            borrow = 0;
+        }
+    }
+    if borrow != 0 {
+        return None; // negative sum
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Exact check: Σ dⱼ·2^(k·j) == scalar, via [`reconstruct`].
+    fn assert_roundtrip(scalar: &ScalarLimbs, k: u32, bits: u32) {
+        let windows = signed_window_count(bits, k);
+        let digits = signed_digits(scalar, k, windows);
+        let half = 1i64 << (k - 1);
+        for &d in &digits {
+            assert!((-half..half).contains(&d), "digit {d} out of range (k={k})");
+        }
+        let got = reconstruct(&digits, k).expect("non-negative, in-range sum");
+        assert_eq!(&got[..4], &scalar[..], "k={k}");
+        assert_eq!(got[4], 0, "k={k}");
+    }
+
+    #[test]
+    fn reconstruct_rejects_bad_digit_vectors() {
+        // net-negative sum
+        assert_eq!(reconstruct(&[-1], 4), None);
+        // overflow past 320 bits: a digit at window 21 of k=16 lands at
+        // bit 336
+        let mut digits = vec![0i64; 22];
+        digits[21] = 1;
+        assert_eq!(reconstruct(&digits, 16), None);
+        // plain positive value survives
+        assert_eq!(reconstruct(&[5, 1], 4), Some([21, 0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn roundtrip_small_known_values() {
+        for k in 2u32..=8 {
+            for v in [0u64, 1, 2, 7, 8, 255, 256, 1000, u32::MAX as u64] {
+                assert_roundtrip(&[v, 0, 0, 0], k, 64);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_full_width_random() {
+        let mut rng = Rng::new(0x519D);
+        for k in [2u32, 3, 4, 7, 12, 13, 16] {
+            for _ in 0..20 {
+                let s = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64() >> 1];
+                assert_roundtrip(&s, k, 255);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_adversarial_patterns() {
+        // all-ones (maximal carry chains), alternating, single high bit
+        let patterns: [ScalarLimbs; 4] = [
+            [u64::MAX, u64::MAX, u64::MAX, u64::MAX >> 2],
+            [0xAAAA_AAAA_AAAA_AAAA; 4],
+            [0, 0, 0, 1 << 61],
+            [1, 0, 0, u64::MAX >> 3],
+        ];
+        for s in &patterns {
+            for k in [2u32, 5, 12, 16] {
+                assert_roundtrip(s, k, 254.max(256 - s[3].leading_zeros()));
+            }
+        }
+    }
+
+    #[test]
+    fn digit_matches_digits_vector() {
+        let mut rng = Rng::new(0xD161);
+        for _ in 0..10 {
+            let s = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64() >> 2];
+            for k in [2u32, 6, 12] {
+                let windows = signed_window_count(254, k);
+                let all = signed_digits(&s, k, windows);
+                for j in 0..windows {
+                    assert_eq!(signed_digit(&s, j, k), all[j as usize], "j={j} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_magnitude_is_half_window() {
+        // the digit that triggers the carry: slice exactly 2^(k−1)
+        let k = 8u32;
+        let s: ScalarLimbs = [0x80, 0, 0, 0];
+        let d = signed_digits(&s, k, signed_window_count(16, k));
+        assert_eq!(d[0], -128);
+        assert_eq!(d[1], 1);
+        assert_eq!(d[2], 0);
+    }
+}

@@ -10,6 +10,12 @@ pub struct PjrtContext {
 }
 
 impl PjrtContext {
+    /// Whether a real PJRT backend is linked in. `false` with the vendored
+    /// offline `xla` stub — callers should fall back to native backends.
+    pub fn available() -> bool {
+        xla::available()
+    }
+
     /// Create the CPU client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -44,6 +50,11 @@ mod tests {
 
     #[test]
     fn cpu_client_boots() {
+        if !PjrtContext::available() {
+            // vendored xla stub: construction must fail loudly, not hang
+            assert!(PjrtContext::cpu().is_err());
+            return;
+        }
         let ctx = PjrtContext::cpu().expect("PJRT cpu client");
         assert!(ctx.device_count() >= 1);
         assert_eq!(ctx.platform().to_lowercase(), "cpu");
@@ -51,6 +62,9 @@ mod tests {
 
     #[test]
     fn missing_artifact_is_error() {
+        if !PjrtContext::available() {
+            return;
+        }
         let ctx = PjrtContext::cpu().unwrap();
         assert!(ctx.compile_hlo_text(std::path::Path::new("/nonexistent.hlo.txt")).is_err());
     }

@@ -5,6 +5,11 @@
 //! the reduction/combination phases (IS-RBAM/DNA roles) drain the remaining
 //! serial work.
 //!
+//! Window slicing, digit signs, and bucket indexing all come from the
+//! shared [`MsmPlan`] — the engine is just one more executor of the same
+//! kernel, so signed-digit mode (negated operand, half the buckets, and
+//! with it half the BAM conflict surface) works here unchanged.
+//!
 //! The engine performs the bucket-fill phase, which is ≥90% of all point
 //! operations at realistic sizes — matching the paper's claim that the BAM
 //! "may account for generating 90% or more" of the point ops. The short
@@ -13,7 +18,7 @@
 
 use super::engine::{EngineCurve, UdaEngine};
 use crate::ec::{Affine, Jacobian, ScalarLimbs};
-use crate::msm::pippenger::{self, MsmConfig};
+use crate::msm::plan::{MsmConfig, MsmPlan};
 use anyhow::Result;
 
 /// Outcome stats of an engine MSM.
@@ -41,44 +46,45 @@ pub fn msm_engine<C: EngineCurve>(
     if points.is_empty() {
         return Ok((Jacobian::infinity(), stats));
     }
-    let k = cfg.window_bits;
-    let windows = pippenger::window_count(C::SCALAR_BITS.min(256), k);
-    let nbuckets = 1usize << k;
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    let nbuckets = plan.bucket_slots();
     let bsz = engine.batch();
 
     let native0 = crate::ec::counters::snapshot();
-    let mut result = Jacobian::<C>::infinity();
-    for j in (0..windows).rev() {
+    let mut window_results = Vec::with_capacity(plan.windows as usize);
+    for j in 0..plan.windows {
         // ---- fill phase on the engine, conflict-free batches ------------
         let mut buckets = vec![Jacobian::<C>::infinity(); nbuckets];
-        // op queue: (bucket, point index); simple two-pass scheduling —
-        // take ops whose bucket is not yet used in the current batch, defer
-        // conflicts to the next round (the BAM's replay FIFO).
-        let mut queue: Vec<(usize, usize)> = Vec::with_capacity(points.len());
+        // op queue: (bucket, point index, negate); simple two-pass
+        // scheduling — take ops whose bucket is not yet used in the current
+        // batch, defer conflicts to the next round (the BAM's replay FIFO).
+        let mut queue: Vec<(usize, usize, bool)> = Vec::with_capacity(points.len());
         for (i, s) in scalars.iter().enumerate() {
-            let b = pippenger::slice_bits(s, j * k, k) as usize;
-            if b != 0 {
-                queue.push((b, i));
+            if let Some((b, negate)) = plan.bucket_op(s, j) {
+                queue.push((b, i, negate));
             }
         }
         let mut in_batch = vec![false; nbuckets];
         while !queue.is_empty() {
-            let mut batch_ops: Vec<(usize, usize)> = Vec::with_capacity(bsz);
-            let mut deferred: Vec<(usize, usize)> = Vec::new();
-            for (b, i) in queue.drain(..) {
+            let mut batch_ops: Vec<(usize, usize, bool)> = Vec::with_capacity(bsz);
+            let mut deferred: Vec<(usize, usize, bool)> = Vec::new();
+            for (b, i, negate) in queue.drain(..) {
                 if batch_ops.len() < bsz && !in_batch[b] {
                     in_batch[b] = true;
-                    batch_ops.push((b, i));
+                    batch_ops.push((b, i, negate));
                 } else {
-                    deferred.push((b, i));
+                    deferred.push((b, i, negate));
                 }
             }
             let pairs: Vec<(Jacobian<C>, Jacobian<C>)> = batch_ops
                 .iter()
-                .map(|&(b, i)| (buckets[b], points[i].to_jacobian()))
+                .map(|&(b, i, negate)| {
+                    let p = if negate { points[i].neg() } else { points[i] };
+                    (buckets[b], p.to_jacobian())
+                })
                 .collect();
             let outs = engine.uda_batch(&pairs)?;
-            for (&(b, _), out) in batch_ops.iter().zip(outs) {
+            for (&(b, _, _), out) in batch_ops.iter().zip(outs) {
                 buckets[b] = out;
                 in_batch[b] = false;
             }
@@ -88,18 +94,11 @@ pub fn msm_engine<C: EngineCurve>(
             queue = deferred;
         }
 
-        // ---- reduce + combine tails natively (IS-RBAM / DNA) ------------
-        for _ in 0..k {
-            result = result.double();
-        }
-        let wj = match cfg.reduction {
-            crate::msm::Reduction::RunningSum => pippenger::reduce_running_sum(&buckets),
-            crate::msm::Reduction::Recursive { k2 } => {
-                pippenger::reduce_recursive(&buckets, k, k2.min(k))
-            }
-        };
-        result = result.add(&wj);
+        // ---- reduce tail natively (IS-RBAM role) ------------------------
+        window_results.push(plan.reduce(&buckets));
     }
+    // ---- DNA combine -----------------------------------------------------
+    let result = plan.combine(&window_results);
     stats.native_ops = (crate::ec::counters::snapshot() - native0).total();
     if stats.engine_batches > 0 {
         stats.mean_occupancy /= stats.engine_batches as f64;

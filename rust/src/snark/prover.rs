@@ -14,7 +14,7 @@ use super::r1cs::ConstraintSystem;
 use super::setup::Crs;
 use crate::ec::{CurveParams, Jacobian, ScalarLimbs};
 use crate::ff::{Field, FieldParams, Fp};
-use crate::msm::{self, MsmConfig};
+use crate::msm::{self, Backend, MsmConfig};
 use crate::util::stopwatch::Profiler;
 
 /// A (structurally) Groth16-like proof.
@@ -35,10 +35,14 @@ pub struct ProfileBreakdown {
     pub total_s: f64,
 }
 
-/// The prover, bound to a curve family.
+/// The prover, bound to a curve family. All five MSMs route through the
+/// shared kernel dispatch ([`msm::execute`]) — pick the executor with
+/// [`Self::with_backend`] (serial Pippenger by default so the Table I
+/// profile measures single-thread phase shares, as the paper's does).
 pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     pub crs: Crs<G1, G2>,
     pub msm_cfg: MsmConfig,
+    pub backend: Backend,
     _p: std::marker::PhantomData<P>,
 }
 
@@ -49,7 +53,18 @@ where
     P: FieldParams<4>,
 {
     pub fn new(crs: Crs<G1, G2>) -> Self {
-        Prover { crs, msm_cfg: MsmConfig::default(), _p: std::marker::PhantomData }
+        Prover {
+            crs,
+            msm_cfg: MsmConfig::default(),
+            backend: Backend::Pippenger,
+            _p: std::marker::PhantomData,
+        }
+    }
+
+    /// Same prover, different MSM executor.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
     }
 
     /// Run the prover pipeline over a satisfied constraint system,
@@ -82,14 +97,15 @@ where
 
         // -- msm_g1: A, B1, L, H -------------------------------------------
         let a_msm = prof.time("msm_g1", || {
-            msm::msm_pippenger(&self.crs.a_query[..nv], &witness_scalars, &self.msm_cfg)
+            msm::execute(self.backend, &self.crs.a_query[..nv], &witness_scalars, &self.msm_cfg)
         });
         let _b1_msm = prof.time("msm_g1", || {
-            msm::msm_pippenger(&self.crs.b1_query[..nv], &witness_scalars, &self.msm_cfg)
+            msm::execute(self.backend, &self.crs.b1_query[..nv], &witness_scalars, &self.msm_cfg)
         });
         let l_start = 1 + cs.num_public;
         let l_msm = prof.time("msm_g1", || {
-            msm::msm_pippenger(
+            msm::execute(
+                self.backend,
                 &self.crs.l_query[l_start..nv],
                 &witness_scalars[l_start..],
                 &self.msm_cfg,
@@ -97,12 +113,17 @@ where
         });
         let h_len = h_scalars.len().min(self.crs.h_query.len());
         let h_msm = prof.time("msm_g1", || {
-            msm::msm_pippenger(&self.crs.h_query[..h_len], &h_scalars[..h_len], &self.msm_cfg)
+            msm::execute(
+                self.backend,
+                &self.crs.h_query[..h_len],
+                &h_scalars[..h_len],
+                &self.msm_cfg,
+            )
         });
 
         // -- msm_g2: B2 -----------------------------------------------------
         let b2_msm = prof.time("msm_g2", || {
-            msm::msm_pippenger(&self.crs.b2_query[..nv], &witness_scalars, &self.msm_cfg)
+            msm::execute(self.backend, &self.crs.b2_query[..nv], &witness_scalars, &self.msm_cfg)
         });
 
         // -- other: final assembly -----------------------------------------
@@ -186,6 +207,18 @@ mod tests {
         // 4 G1 MSMs vs 1 G2 MSM: per-MSM G2 > per-MSM G1 requires
         // g2_pct > g1_pct / 4 with margin.
         assert!(prof.msm_g2_pct > prof.msm_g1_pct / 4.0);
+    }
+
+    #[test]
+    fn proof_identical_across_backends() {
+        // the dispatch layer must be invisible in the output
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        let prover2 = prover.with_backend(Backend::BatchAffineParallel { threads: 2 });
+        let (p2, _) = prover2.prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Integration: the coordinator end-to-end — correctness of served results,
 //! affinity behaviour, backpressure, batching, shutdown.
 
+use ifzkp::coordinator::devices::{DeviceBackend, EngineHolder};
 use ifzkp::coordinator::{Coordinator, CoordinatorConfig, DeviceDesc, PointSetRegistry};
 use ifzkp::coordinator::batcher::BatchPolicy;
-use ifzkp::ec::{points, Bn254G1};
+use ifzkp::ec::{points, Affine, Bn254G1, Jacobian, ScalarLimbs};
 use ifzkp::fpga::{CurveId, SabConfig};
-use ifzkp::msm;
+use ifzkp::msm::{self, MsmConfig};
 use std::sync::Arc;
 
 fn registry_with_sets(
@@ -43,6 +44,7 @@ fn served_results_match_direct_computation() {
     }
     for (rx, want) in rxs.into_iter().zip(expected) {
         let res = rx.recv().expect("job completes");
+        assert!(res.is_ok(), "unexpected device failure: {:?}", res.error);
         assert!(res.output.eq_point(&want), "served result mismatch");
         assert!(res.service_s >= 0.0 && res.device_s > 0.0);
     }
@@ -173,6 +175,70 @@ fn shutdown_drains_pending_work() {
         }
     }
     assert_eq!(done, 4, "shutdown must drain all accepted jobs");
+}
+
+/// An engine that always errors — injected through the public Engine
+/// factory to exercise the device-failure path.
+struct FailingEngine;
+
+impl EngineHolder<Bn254G1> for FailingEngine {
+    fn msm(
+        &self,
+        _points: &[Affine<Bn254G1>],
+        _scalars: &[ScalarLimbs],
+        _cfg: &MsmConfig,
+    ) -> anyhow::Result<Jacobian<Bn254G1>> {
+        Err(anyhow::anyhow!("injected device fault"))
+    }
+}
+
+#[test]
+fn device_failure_is_delivered_and_counted() {
+    let (reg, ids, _) = registry_with_sets(&[64]);
+    let failing = DeviceDesc {
+        name: "failing-engine".into(),
+        backend: DeviceBackend::Engine {
+            factory: Box::new(|| Ok(Box::new(FailingEngine) as Box<dyn EngineHolder<Bn254G1>>)),
+        },
+        ddr_capacity: u64::MAX,
+        msm_cfg: MsmConfig::default(),
+    };
+    let coord = Coordinator::start(CoordinatorConfig::default(), vec![failing], reg);
+    let mut rxs = Vec::new();
+    for i in 0..3 {
+        let scalars = Arc::new(points::generate_scalars(64, 254, 600 + i));
+        rxs.push(coord.submit(ids[0], scalars).unwrap().1);
+    }
+    for rx in rxs {
+        // the error is *delivered* (recv succeeds) — a dropped channel
+        // would be indistinguishable from shutdown
+        let res = rx.recv().expect("failure result must be delivered, not dropped");
+        assert!(!res.is_ok(), "expected a failed result");
+        assert!(res.error.as_deref().unwrap().contains("injected device fault"));
+        assert!(res.output.is_infinity());
+    }
+    let snap = coord.counters.snapshot();
+    assert_eq!(snap.failed, 3, "{snap:?}");
+    assert_eq!(snap.completed, 0, "{snap:?}");
+    assert_eq!(snap.submitted, 3, "{snap:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn successful_results_report_ok() {
+    let (reg, ids, _) = registry_with_sets(&[32]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let scalars = Arc::new(points::generate_scalars(32, 254, 700));
+    let (_, rx) = coord.submit(ids[0], scalars).unwrap();
+    let res = rx.recv().unwrap();
+    assert!(res.is_ok());
+    assert!(res.error.is_none());
+    assert_eq!(coord.counters.snapshot().failed, 0);
+    coord.shutdown();
 }
 
 #[test]

@@ -3,7 +3,7 @@
 
 use ifzkp::ec::{points, scalar, Bls12381G1, Bn254G1, Jacobian};
 use ifzkp::ff::Field;
-use ifzkp::msm::{self, MsmConfig, Reduction};
+use ifzkp::msm::{self, Backend, MsmConfig, Reduction, Slicing};
 
 #[test]
 fn all_algorithms_agree_bn254_2k() {
@@ -11,12 +11,30 @@ fn all_algorithms_agree_bn254_2k() {
     let naive = msm::naive::msm(&w.points, &w.scalars);
     for k in [8u32, 12, 16] {
         for red in [Reduction::RunningSum, Reduction::Recursive { k2: 6 }] {
-            let cfg = MsmConfig { window_bits: k, reduction: red };
-            let serial = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
-            let par = msm::parallel::msm(&w.points, &w.scalars, &cfg, 4);
-            assert!(serial.eq_point(&naive), "serial k={k} {red:?}");
-            assert!(par.eq_point(&naive), "parallel k={k} {red:?}");
+            for slicing in [Slicing::Unsigned, Slicing::Signed] {
+                let cfg = MsmConfig { window_bits: k, reduction: red, slicing };
+                let serial = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+                let par = msm::parallel::msm(&w.points, &w.scalars, &cfg, 4);
+                assert!(serial.eq_point(&naive), "serial k={k} {red:?} {slicing:?}");
+                assert!(par.eq_point(&naive), "parallel k={k} {red:?} {slicing:?}");
+            }
         }
+    }
+}
+
+#[test]
+fn backend_dispatch_agrees_at_2k() {
+    let w = points::workload::<Bn254G1>(2048, 9010);
+    let naive = msm::naive::msm(&w.points, &w.scalars);
+    let cfg = MsmConfig::auto(2048);
+    for backend in [
+        Backend::Pippenger,
+        Backend::Parallel { threads: 4 },
+        Backend::BatchAffine,
+        Backend::BatchAffineParallel { threads: 4 },
+    ] {
+        let got = msm::execute(backend, &w.points, &w.scalars, &cfg);
+        assert!(got.eq_point(&naive), "{backend:?}");
     }
 }
 
@@ -59,8 +77,14 @@ fn msm_with_adversarial_scalars() {
     }
     let naive = msm::naive::msm(&pts, &scalars);
     for k in [4u32, 12] {
-        let cfg = MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 4 } };
-        assert!(msm::msm_pippenger(&pts, &scalars, &cfg).eq_point(&naive), "k={k}");
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            let cfg =
+                MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 4 }, slicing };
+            assert!(
+                msm::msm_pippenger(&pts, &scalars, &cfg).eq_point(&naive),
+                "k={k} {slicing:?}"
+            );
+        }
     }
 }
 
@@ -104,7 +128,8 @@ fn window_fill_accounting_matches_paper() {
     // skip — scalars are 254/255-bit).
     let m = 512;
     let w = points::workload::<Bn254G1>(m, 9007);
-    let cfg = MsmConfig { window_bits: 12, reduction: Reduction::Recursive { k2: 6 } };
+    // unsigned buckets: the Table III accounting the paper publishes
+    let cfg = MsmConfig::unsigned(12, Reduction::Recursive { k2: 6 });
     let (_, cost) = msm::pippenger::msm_with_cost(&w.points, &w.scalars, &cfg);
     let per_point = cost.fill_ops as f64 / m as f64;
     assert!(

@@ -1,11 +1,12 @@
-//! Property tests: MSM algorithm equivalence and coordinator invariants
-//! under randomized workloads.
+//! Property tests: MSM algorithm equivalence (every backend × slicing ×
+//! reduction against naive), signed-digit decomposition round-trips, and
+//! coordinator invariants under randomized workloads.
 
 use ifzkp::coordinator::pointcache::{Admission, DeviceDdr};
 use ifzkp::coordinator::request::PointSetId;
 use ifzkp::coordinator::router;
 use ifzkp::ec::{points, Bn254G1};
-use ifzkp::msm::{self, MsmConfig, Reduction};
+use ifzkp::msm::{self, signed, Backend, MsmConfig, MsmPlan, Reduction, Slicing};
 use ifzkp::prop_assert;
 use ifzkp::util::prop::{check_with, Config};
 
@@ -20,14 +21,103 @@ fn pippenger_equals_naive_random_sizes() {
         } else {
             Reduction::Recursive { k2 }
         };
+        let slicing = if rng.bool() { Slicing::Signed } else { Slicing::Unsigned };
         let w = points::workload::<Bn254G1>(m, rng.next_u64());
         let naive = msm::naive::msm(&w.points, &w.scalars);
         let fast = msm::msm_pippenger(
             &w.points,
             &w.scalars,
-            &MsmConfig { window_bits: k, reduction: red },
+            &MsmConfig { window_bits: k, reduction: red, slicing },
         );
-        prop_assert!(fast.eq_point(&naive), "m={m} k={k} {red:?}");
+        prop_assert!(fast.eq_point(&naive), "m={m} k={k} {red:?} {slicing:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn all_backends_slicings_reductions_equal_naive() {
+    // the acceptance matrix: backends × {unsigned, signed} × {RunningSum,
+    // Recursive} all bit-exact against naive
+    check_with(Config { cases: 4, seed: 0xFAB }, "backend matrix == naive", |rng| {
+        let m = 8 + rng.below(120) as usize;
+        let k = 4 + rng.below(10) as u32;
+        let w = points::workload::<Bn254G1>(m, rng.next_u64());
+        let naive = msm::naive::msm(&w.points, &w.scalars);
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            for red in [Reduction::RunningSum, Reduction::Recursive { k2: 1 + (k / 2) }] {
+                let cfg = MsmConfig { window_bits: k, reduction: red, slicing };
+                for backend in [
+                    Backend::Pippenger,
+                    Backend::Parallel { threads: 1 + rng.below(5) as usize },
+                    Backend::BatchAffine,
+                    Backend::BatchAffineParallel { threads: 2 },
+                ] {
+                    let got = msm::execute(backend, &w.points, &w.scalars, &cfg);
+                    prop_assert!(
+                        got.eq_point(&naive),
+                        "m={m} k={k} {red:?} {slicing:?} {backend:?}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn signed_digits_roundtrip_to_scalar() {
+    // Σ dᵢ·2^(k·i) == scalar, checked in exact 320-bit integer arithmetic
+    check_with(Config { cases: 64, seed: 0x51D }, "signed digit round-trip", |rng| {
+        let k = 2 + rng.below(15) as u32;
+        let bits = 1 + rng.below(255) as u32;
+        let mut s = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()];
+        // mask to `bits`
+        for (i, limb) in s.iter_mut().enumerate() {
+            let lo = 64 * i as u32;
+            if lo >= bits {
+                *limb = 0;
+            } else if bits - lo < 64 {
+                *limb &= (1u64 << (bits - lo)) - 1;
+            }
+        }
+        let windows = signed::signed_window_count(bits, k);
+        let digits = signed::signed_digits(&s, k, windows);
+        let half = 1i64 << (k - 1);
+        for &d in &digits {
+            prop_assert!((-half..half).contains(&d), "digit {d} out of range k={k}");
+        }
+        // exact 320-bit reconstruction (shared checker in msm::signed)
+        let diff = match signed::reconstruct(&digits, k) {
+            Some(v) => v,
+            None => return Err(format!("negative/overflowing sum k={k} bits={bits}")),
+        };
+        prop_assert!(diff[4] == 0, "overflow limb nonzero");
+        prop_assert!(&diff[..4] == &s[..], "k={k} bits={bits}: {diff:?} != {s:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_digits_agree_with_bucket_ops() {
+    check_with(Config { cases: 24, seed: 0xB0C4 }, "plan digit consistency", |rng| {
+        let k = 2 + rng.below(15) as u32;
+        let slicing = if k >= 2 && rng.bool() { Slicing::Signed } else { Slicing::Unsigned };
+        let cfg = MsmConfig { window_bits: k, reduction: Reduction::RunningSum, slicing };
+        let plan = MsmPlan::new(254, &cfg);
+        let s = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64() >> 2];
+        let digits = plan.digits(&s);
+        prop_assert!(digits.len() == plan.windows as usize, "digit count");
+        for (j, &d) in digits.iter().enumerate() {
+            prop_assert!(plan.digit(&s, j as u32) == d, "digit mismatch at {j}");
+            match plan.bucket_op(&s, j as u32) {
+                None => prop_assert!(d == 0, "zero digit maps to no op"),
+                Some((b, negate)) => {
+                    prop_assert!(b as u64 == d.unsigned_abs(), "bucket index");
+                    prop_assert!(negate == (d < 0), "negate flag");
+                    prop_assert!(b < plan.bucket_slots(), "bucket in range");
+                }
+            }
+        }
         Ok(())
     });
 }
