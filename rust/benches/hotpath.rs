@@ -1,15 +1,53 @@
 //! Hot-path microbenchmarks (the §Perf instrumentation): field mul, EC
-//! point ops, MSM per-point cost, NTT butterflies — ns/op so the perf pass
-//! can track improvements without criterion.
+//! point ops, MSM per-point cost, sharded multi-device MSM, NTT
+//! butterflies — ns/op so the perf pass can track improvements without
+//! criterion.
+//!
+//! CI knobs:
+//! * `IFZKP_BENCH_QUICK=1` — small-n smoke (seconds, not minutes);
+//! * `IFZKP_BENCH_JSON=path` — also write the results as a flat JSON
+//!   array (`BENCH_hotpath.json` in CI, uploaded as an artifact so the
+//!   perf trajectory accumulates run over run).
 
+use ifzkp::coordinator::shard::ShardPool;
 use ifzkp::ec::{points, Bls12381G1, Bn254G1, CurveParams, Jacobian};
 use ifzkp::ff::{Field, FpBls12381, FpBn254, FrBn254};
-use ifzkp::msm::{self, pippenger, MsmConfig, MsmPlan, Reduction, Slicing};
+use ifzkp::msm::{self, pippenger, MsmConfig, MsmPlan, Reduction, ShardPolicy, Slicing};
 use ifzkp::ntt;
+use ifzkp::util::json::Json;
 use ifzkp::util::rng::Rng;
 use ifzkp::util::Stopwatch;
 
-fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+/// Collected (name, ns/op) pairs for the JSON artifact.
+struct Results {
+    entries: Vec<(String, f64)>,
+}
+
+impl Results {
+    fn record(&mut self, name: &str, ns_per_op: f64) {
+        self.entries.push((name.to_string(), ns_per_op));
+    }
+
+    fn emit_json(&self) {
+        let Ok(path) = std::env::var("IFZKP_BENCH_JSON") else {
+            return;
+        };
+        let mut arr = Vec::with_capacity(self.entries.len());
+        for (name, ns) in &self.entries {
+            let mut j = Json::obj();
+            j.set("name", name.as_str()).set("ns_per_op", *ns);
+            arr.push(j);
+        }
+        let mut root = Json::obj();
+        root.set("bench", "hotpath").set("results", Json::Arr(arr));
+        match std::fs::write(&path, format!("{root}\n")) {
+            Ok(()) => println!("\nwrote bench JSON: {path}"),
+            Err(e) => eprintln!("\nfailed to write bench JSON {path}: {e}"),
+        }
+    }
+}
+
+fn bench(results: &mut Results, name: &str, iters: u64, mut f: impl FnMut()) {
     for _ in 0..iters / 10 + 1 {
         f(); // warmup
     }
@@ -18,92 +56,97 @@ fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
         f();
     }
     let total = sw.secs();
-    println!("{name:<44} {:>12.1} ns/op   ({iters} iters)", total * 1e9 / iters as f64);
+    let ns = total * 1e9 / iters as f64;
+    println!("{name:<44} {ns:>12.1} ns/op   ({iters} iters)");
+    results.record(name, ns);
 }
 
-fn bench_field<F: Field>(label: &str, iters: u64) {
+fn bench_field<F: Field>(results: &mut Results, label: &str, iters: u64) {
     let mut rng = Rng::new(1);
     let a = F::random(&mut rng);
     let b = F::random(&mut rng);
     let mut acc = a;
-    bench(&format!("{label} mul"), iters, || {
+    bench(results, &format!("{label} mul"), iters, || {
         acc = acc.mul(&b);
     });
-    bench(&format!("{label} square"), iters, || {
+    bench(results, &format!("{label} square"), iters, || {
         acc = acc.square();
     });
-    bench(&format!("{label} add"), iters, || {
+    bench(results, &format!("{label} add"), iters, || {
         acc = acc.add(&b);
     });
     let mut inv_in = a;
-    bench(&format!("{label} inverse"), iters / 100 + 1, || {
+    bench(results, &format!("{label} inverse"), iters / 100 + 1, || {
         inv_in = inv_in.inv().unwrap();
     });
     std::hint::black_box(acc);
 }
 
-fn bench_curve<C: CurveParams>(label: &str, iters: u64) {
+fn bench_curve<C: CurveParams>(results: &mut Results, label: &str, iters: u64) {
     let pts = points::generate_points_walk::<C>(4, 2);
     let mut p = pts[0].to_jacobian();
     let q = pts[1].to_jacobian();
     let qa = pts[2];
-    bench(&format!("{label} jacobian add"), iters, || {
+    bench(results, &format!("{label} jacobian add"), iters, || {
         p = p.add(&q);
     });
-    bench(&format!("{label} mixed add"), iters, || {
+    bench(results, &format!("{label} mixed add"), iters, || {
         p = p.add_mixed(&qa);
     });
-    bench(&format!("{label} double"), iters, || {
+    bench(results, &format!("{label} double"), iters, || {
         p = p.double();
     });
     std::hint::black_box(&p);
 }
 
 fn main() {
-    println!("== hot-path microbenchmarks ==");
-    bench_field::<FpBn254>("Fp(BN254, 4x64)", 200_000);
-    bench_field::<FpBls12381>("Fp(BLS12-381, 6x64)", 100_000);
-    bench_field::<ifzkp::ff::Fp2Bn254>("Fp2(BN254)", 50_000);
+    let quick = std::env::var("IFZKP_BENCH_QUICK").is_ok();
+    let scale = if quick { 50 } else { 1 };
+    let msm_m: usize = if quick { 1 << 10 } else { 1 << 14 };
+    let msm_label = if quick { "2^10" } else { "2^14" };
+    let mut results = Results { entries: Vec::new() };
+    println!("== hot-path microbenchmarks{} ==", if quick { " (quick)" } else { "" });
+    bench_field::<FpBn254>(&mut results, "Fp(BN254, 4x64)", 200_000 / scale);
+    bench_field::<FpBls12381>(&mut results, "Fp(BLS12-381, 6x64)", 100_000 / scale);
+    bench_field::<ifzkp::ff::Fp2Bn254>(&mut results, "Fp2(BN254)", 50_000 / scale);
 
-    bench_curve::<Bn254G1>("BN254 G1", 20_000);
-    bench_curve::<Bls12381G1>("BLS12-381 G1", 10_000);
+    bench_curve::<Bn254G1>(&mut results, "BN254 G1", 20_000 / scale);
+    bench_curve::<Bls12381G1>(&mut results, "BLS12-381 G1", 10_000 / scale);
 
     // MSM per-point cost at a realistic size
     for (label, red) in
         [("running-sum", Reduction::RunningSum), ("IS-RBAM k2=6", Reduction::Recursive { k2: 6 })]
     {
-        let m = 1 << 14;
-        let w = points::workload::<Bn254G1>(m, 3);
+        let w = points::workload::<Bn254G1>(msm_m, 3);
         let cfg = MsmConfig::new(12, red);
         let sw = Stopwatch::start();
         let out = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
         let t = sw.secs();
         std::hint::black_box(out);
-        println!(
-            "BN254 MSM 2^14 ({label:<13})              {:>12.1} ns/point  ({:.3}s total)",
-            t * 1e9 / m as f64,
-            t
-        );
+        let ns = t * 1e9 / msm_m as f64;
+        println!("BN254 MSM {msm_label} ({label:<13})              {ns:>12.1} ns/point  ({t:.3}s total)");
+        results.record(&format!("BN254 MSM {msm_label} {label} ns/point"), ns);
     }
 
     // signed vs unsigned buckets at equal k: the reduce-phase serial chain
     // (the quantity the hardware pays 270-cycle latency per op for) halves
     let mut signed_cmp: Vec<(Slicing, Jacobian<Bn254G1>, u64, u64, f64)> = Vec::new();
     for slicing in [Slicing::Unsigned, Slicing::Signed] {
-        let m = 1 << 14;
-        let w = points::workload::<Bn254G1>(m, 3);
+        let w = points::workload::<Bn254G1>(msm_m, 3);
         let cfg = MsmConfig { window_bits: 12, reduction: Reduction::RunningSum, slicing };
         let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
         let sw = Stopwatch::start();
         let (out, cost) = pippenger::msm_with_cost(&w.points, &w.scalars, &cfg);
         let t = sw.secs();
         println!(
-            "BN254 MSM 2^14 ({:<9} k=12, run-sum)       {:>12.1} ns/point  (serial reduce ops: {} plan / {} measured)",
+            "BN254 MSM {msm_label} ({:<9} k=12, run-sum)       {:>12.1} ns/point  (serial reduce ops: {} plan / {} measured)",
             format!("{slicing:?}"),
-            t * 1e9 / m as f64,
+            t * 1e9 / msm_m as f64,
             plan.serial_reduce_ops(),
             cost.reduce_ops,
         );
+        results
+            .record(&format!("BN254 MSM {msm_label} {slicing:?} run-sum ns/point"), t * 1e9 / msm_m as f64);
         signed_cmp.push((slicing, out, plan.serial_reduce_ops(), cost.reduce_ops, t));
     }
     assert!(signed_cmp[0].1.eq_point(&signed_cmp[1].1), "signed != unsigned result");
@@ -115,8 +158,7 @@ fn main() {
 
     // batch-affine fills (the §Perf/L3 optimization) vs Jacobian fills
     for (label, k) in [("k=8 fill-heavy", 8u32), ("k=12 hw window", 12)] {
-        let m = 1 << 14;
-        let w = points::workload::<Bn254G1>(m, 3);
+        let w = points::workload::<Bn254G1>(msm_m, 3);
         let cfg = MsmConfig::new(k, Reduction::Recursive { k2: 6 });
         let sw = Stopwatch::start();
         let jac = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
@@ -126,32 +168,65 @@ fn main() {
         let t_aff = sw.secs();
         assert!(jac.eq_point(&aff));
         println!(
-            "BN254 MSM 2^14 batch-affine ({label})      {:>12.1} ns/point (vs jacobian {:.1}; {:.2}x)",
-            t_aff * 1e9 / m as f64,
-            t_jac * 1e9 / m as f64,
+            "BN254 MSM {msm_label} batch-affine ({label})      {:>12.1} ns/point (vs jacobian {:.1}; {:.2}x)",
+            t_aff * 1e9 / msm_m as f64,
+            t_jac * 1e9 / msm_m as f64,
             t_jac / t_aff
+        );
+        results.record(
+            &format!("BN254 MSM {msm_label} batch-affine {label} ns/point"),
+            t_aff * 1e9 / msm_m as f64,
         );
     }
 
     // parallel scaling
     for threads in [1usize, 2, 4] {
-        let m = 1 << 14;
-        let w = points::workload::<Bn254G1>(m, 3);
+        let w = points::workload::<Bn254G1>(msm_m, 3);
         let cfg = MsmConfig::default();
         let sw = Stopwatch::start();
         let out = msm::parallel::msm(&w.points, &w.scalars, &cfg, threads);
         let t = sw.secs();
         std::hint::black_box(out);
         println!(
-            "BN254 MSM 2^14 parallel x{threads}                  {:>12.1} ns/point",
-            t * 1e9 / m as f64
+            "BN254 MSM {msm_label} parallel x{threads}                  {:>12.1} ns/point",
+            t * 1e9 / msm_m as f64
         );
+        results.record(&format!("BN254 MSM {msm_label} parallel x{threads} ns/point"), t * 1e9 / msm_m as f64);
+    }
+
+    // sharded multi-device path: the coordinator's fan-out/merge, in
+    // process (1 device = the unsharded baseline)
+    let w = points::workload::<Bn254G1>(msm_m, 3);
+    let cfg = MsmConfig::default();
+    let mut base_s = 0.0f64;
+    for devices in [1usize, 2, 4] {
+        for policy in [ShardPolicy::ChunkPoints, ShardPolicy::WindowRange] {
+            if devices == 1 && policy == ShardPolicy::WindowRange {
+                continue; // one device has no window split
+            }
+            let pool = ShardPool::<Bn254G1>::native(devices, 1).with_policy(policy);
+            let sw = Stopwatch::start();
+            let out = pool.execute(&w.points, &w.scalars, &cfg).expect("pool msm");
+            let t = sw.secs();
+            std::hint::black_box(out);
+            if devices == 1 {
+                base_s = t;
+            }
+            let tag = format!("sharded x{devices} {policy:?}");
+            println!(
+                "BN254 MSM {msm_label} {tag:<28} {:>10.1} ns/point  ({:.2}x vs 1 device)",
+                t * 1e9 / msm_m as f64,
+                base_s / t
+            );
+            results.record(&format!("BN254 MSM {msm_label} {tag} ns/point"), t * 1e9 / msm_m as f64);
+        }
     }
 
     // NTT
     let mut rng = Rng::new(4);
-    let dom = ntt::domain::Domain::<ifzkp::ff::params::Bn254FrParams, 4>::new(1 << 14).unwrap();
-    let mut v: Vec<FrBn254> = (0..1 << 14).map(|_| FrBn254::random(&mut rng)).collect();
+    let ntt_n: usize = if quick { 1 << 10 } else { 1 << 14 };
+    let dom = ntt::domain::Domain::<ifzkp::ff::params::Bn254FrParams, 4>::new(ntt_n).unwrap();
+    let mut v: Vec<FrBn254> = (0..ntt_n).map(|_| FrBn254::random(&mut rng)).collect();
     let sw = Stopwatch::start();
     let reps = 10;
     for _ in 0..reps {
@@ -159,10 +234,12 @@ fn main() {
     }
     let t = sw.secs() / reps as f64;
     println!(
-        "NTT 2^14 (BN254 Fr)                          {:>12.1} ns/element  ({:.1}ms per transform)",
-        t * 1e9 / (1 << 14) as f64,
+        "NTT {} (BN254 Fr)                          {:>12.1} ns/element  ({:.1}ms per transform)",
+        if quick { "2^10" } else { "2^14" },
+        t * 1e9 / ntt_n as f64,
         t * 1e3
     );
+    results.record("NTT ns/element", t * 1e9 / ntt_n as f64);
 
     // engine (if artifacts present): batched UDA throughput
     let dir = ifzkp::runtime::artifact::default_dir();
@@ -192,4 +269,6 @@ fn main() {
     } else {
         println!("\n(engine bench skipped: set IFZKP_BENCH_ENGINE=1 with artifacts built)");
     }
+
+    results.emit_json();
 }

@@ -13,6 +13,7 @@
 //! `measure_*` functions time this crate's own Pippenger on the local
 //! host — both are reported side by side in the benches.
 
+use crate::coordinator::shard::{ShardPolicy, ShardPool};
 use crate::ec::{points, CurveParams};
 use crate::fpga::CurveId;
 use crate::msm::{self, Backend, MsmConfig};
@@ -95,6 +96,26 @@ pub fn measure_parallel<C: CurveParams>(m: usize, seed: u64, threads: usize) -> 
     measure_backend::<C>(m, seed, Backend::Parallel { threads: threads.max(1) })
 }
 
+/// Measure an MSM submitted through the sharded multi-device path: the
+/// job splits across `devices` simulated native devices under `policy`
+/// and the partials merge deterministically (single device ⇒ the direct
+/// path, same as [`measure_parallel`] with one thread per device).
+pub fn measure_sharded<C: CurveParams>(
+    m: usize,
+    seed: u64,
+    devices: usize,
+    policy: ShardPolicy,
+) -> CpuMeasurement {
+    let w = points::workload::<C>(m, seed);
+    let pool = ShardPool::<C>::native(devices.max(1), 1).with_policy(policy);
+    let cfg = MsmConfig::default();
+    let sw = Stopwatch::start();
+    let out = pool.execute(&w.points, &w.scalars, &cfg).expect("native devices do not fail");
+    let seconds = sw.secs();
+    std::hint::black_box(out);
+    CpuMeasurement { m: m as u64, seconds, mpps: m as f64 / seconds / 1e6 }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +160,14 @@ mod tests {
         let m = measure_serial::<crate::ec::Bn254G1>(2_000, 99);
         assert_eq!(m.m, 2_000);
         assert!(m.seconds > 0.0 && m.mpps > 0.0);
+    }
+
+    #[test]
+    fn sharded_measurement_runs_both_policies() {
+        for policy in [ShardPolicy::ChunkPoints, ShardPolicy::WindowRange] {
+            let m = measure_sharded::<crate::ec::Bn254G1>(512, 99, 3, policy);
+            assert_eq!(m.m, 512);
+            assert!(m.seconds > 0.0 && m.mpps > 0.0, "{policy:?}");
+        }
     }
 }

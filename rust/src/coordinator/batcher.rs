@@ -2,6 +2,15 @@
 //! back-to-back (the point set streams from DDR while the scalars change —
 //! §IV-A's cheap path). A batch flushes when it reaches `max_batch` or its
 //! oldest job has waited `max_wait`.
+//!
+//! **Shard awareness**: sub-jobs of one shard group (see
+//! [`super::shard::ShardGroup`]) batch under their own key, separate from
+//! plain jobs of the same point set, and a group flushes in **exactly one
+//! batch** — it is released the moment its last member arrives, `max_batch`
+//! never cuts it mid-group, and `expired`/`drain` only ever emit it whole.
+//! Splitting a group across two flushes would let the router place its
+//! halves independently and break the group's atomic complete-or-fail
+//! contract downstream.
 
 use super::request::{MsmJob, PointSetId};
 use std::collections::HashMap;
@@ -20,11 +29,19 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Accumulates jobs per point set.
+/// Pending-batch key: plain jobs batch per point set; shard sub-jobs batch
+/// per (point set, group), so groups never mix with singles.
+type Key = (PointSetId, Option<u64>);
+
+fn key_of(job: &MsmJob) -> Key {
+    (job.point_set, job.shard.map(|s| s.group))
+}
+
+/// Accumulates jobs per point set (and per shard group).
 pub struct Batcher {
     policy: BatchPolicy,
-    pending: HashMap<PointSetId, Vec<MsmJob>>,
-    oldest: HashMap<PointSetId, Instant>,
+    pending: HashMap<Key, Vec<MsmJob>>,
+    oldest: HashMap<Key, Instant>,
 }
 
 impl Batcher {
@@ -32,46 +49,75 @@ impl Batcher {
         Batcher { policy, pending: HashMap::new(), oldest: HashMap::new() }
     }
 
-    /// Add a job; returns a full batch if this push filled one.
+    /// Add a job; returns a full batch if this push released one. A plain
+    /// batch fills at `max_batch`; a shard group fills exactly when its
+    /// last member arrives (its size wins over `max_batch` — atomicity
+    /// beats batch shaping).
     pub fn push(&mut self, job: MsmJob) -> Option<(PointSetId, Vec<MsmJob>)> {
-        let ps = job.point_set;
-        let entry = self.pending.entry(ps).or_default();
-        self.oldest.entry(ps).or_insert_with(Instant::now);
+        let key = key_of(&job);
+        let group_total = job.shard.map(|s| s.total as usize);
+        let entry = self.pending.entry(key).or_default();
+        self.oldest.entry(key).or_insert_with(Instant::now);
         entry.push(job);
-        if entry.len() >= self.policy.max_batch {
-            return self.take(ps);
+        let ready = match group_total {
+            Some(total) => entry.len() >= total.max(1),
+            None => entry.len() >= self.policy.max_batch,
+        };
+        if ready {
+            return self.take(key);
         }
         None
     }
 
-    /// Pop every batch whose oldest job exceeded the wait budget.
+    /// Pop every batch whose oldest job exceeded the wait budget. An
+    /// incomplete shard group is *not* popped (it would split across this
+    /// flush and a later one); it stays pending until its last member
+    /// arrives or `drain` runs.
     pub fn expired(&mut self, now: Instant) -> Vec<(PointSetId, Vec<MsmJob>)> {
-        let ready: Vec<PointSetId> = self
+        let ready: Vec<Key> = self
             .oldest
             .iter()
-            .filter(|(_, &t)| now.duration_since(t) >= self.policy.max_wait)
-            .map(|(&ps, _)| ps)
+            .filter(|(key, t)| {
+                now.duration_since(**t) >= self.policy.max_wait && self.complete(**key)
+            })
+            .map(|(&k, _)| k)
             .collect();
-        ready.into_iter().filter_map(|ps| self.take(ps)).collect()
+        ready.into_iter().filter_map(|key| self.take(key)).collect()
     }
 
-    /// Drain everything (shutdown path).
+    /// Drain everything (shutdown path). Each key — shard groups included —
+    /// comes out as one batch.
     pub fn drain(&mut self) -> Vec<(PointSetId, Vec<MsmJob>)> {
-        let keys: Vec<PointSetId> = self.pending.keys().copied().collect();
-        keys.into_iter().filter_map(|ps| self.take(ps)).collect()
+        let keys: Vec<Key> = self.pending.keys().copied().collect();
+        keys.into_iter().filter_map(|key| self.take(key)).collect()
     }
 
     pub fn pending_jobs(&self) -> usize {
         self.pending.values().map(Vec::len).sum()
     }
 
-    fn take(&mut self, ps: PointSetId) -> Option<(PointSetId, Vec<MsmJob>)> {
-        self.oldest.remove(&ps);
-        let jobs = self.pending.remove(&ps)?;
+    /// Is the batch under `key` safe to flush? Plain batches always are; a
+    /// shard group only once every member is present.
+    fn complete(&self, key: Key) -> bool {
+        if key.1.is_none() {
+            return true;
+        }
+        match self.pending.get(&key) {
+            Some(jobs) => jobs
+                .last()
+                .and_then(|j| j.shard)
+                .map_or(true, |s| jobs.len() >= s.total as usize),
+            None => true,
+        }
+    }
+
+    fn take(&mut self, key: Key) -> Option<(PointSetId, Vec<MsmJob>)> {
+        self.oldest.remove(&key);
+        let jobs = self.pending.remove(&key)?;
         if jobs.is_empty() {
             None
         } else {
-            Some((ps, jobs))
+            Some((key.0, jobs))
         }
     }
 }
@@ -79,7 +125,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::JobId;
+    use crate::coordinator::request::{JobId, ShardAssignment};
     use std::sync::Arc;
 
     fn job(id: u64, ps: u64) -> MsmJob {
@@ -88,7 +134,12 @@ mod tests {
             point_set: PointSetId(ps),
             scalars: Arc::new(vec![[id, 0, 0, 0]]),
             submitted_at: Instant::now(),
+            shard: None,
         }
+    }
+
+    fn shard_job(id: u64, ps: u64, group: u64, index: u32, total: u32) -> MsmJob {
+        MsmJob { shard: Some(ShardAssignment { group, index, total }), ..job(id, ps) }
     }
 
     #[test]
@@ -133,5 +184,62 @@ mod tests {
         assert_eq!(drained.len(), 2);
         assert_eq!(b.pending_jobs(), 0);
         assert!(b.drain().is_empty());
+    }
+
+    #[test]
+    fn shard_group_ignores_max_batch_and_flushes_whole() {
+        // group of 5 under max_batch = 2: the old size rule would cut the
+        // group at 2 — it must instead flush once, complete, at member 5
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(9) });
+        for i in 0..4 {
+            assert!(b.push(shard_job(100 + i, 7, 42, i as u32, 5)).is_none(), "shard {i}");
+        }
+        let (ps, jobs) = b.push(shard_job(104, 7, 42, 4, 5)).expect("complete group flushes");
+        assert_eq!(ps, PointSetId(7));
+        assert_eq!(jobs.len(), 5);
+        assert!(jobs.iter().all(|j| j.shard.unwrap().group == 42));
+        assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn shard_group_does_not_mix_with_plain_jobs_of_same_set() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(9) });
+        assert!(b.push(job(1, 7)).is_none());
+        assert!(b.push(shard_job(2, 7, 9, 0, 2)).is_none());
+        // plain batch of set 7 fills on its own, without the shard job
+        let (_, plain) = b.push(job(3, 7)).expect("plain batch fills");
+        assert_eq!(plain.len(), 2);
+        assert!(plain.iter().all(|j| j.shard.is_none()));
+        // the group still completes independently
+        let (_, grp) = b.push(shard_job(4, 7, 9, 1, 2)).expect("group completes");
+        assert_eq!(grp.len(), 2);
+        assert!(grp.iter().all(|j| j.shard.is_some()));
+    }
+
+    #[test]
+    fn expired_never_splits_incomplete_group() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        b.push(shard_job(1, 3, 11, 0, 3));
+        b.push(shard_job(2, 3, 11, 1, 3));
+        // well past the wait budget, but the group is incomplete: hold it
+        let late = Instant::now() + Duration::from_secs(1);
+        assert!(b.expired(late).is_empty(), "incomplete group must not flush on expiry");
+        assert_eq!(b.pending_jobs(), 2);
+        // last member arrives → one flush with all three
+        let (_, jobs) = b.push(shard_job(3, 3, 11, 2, 3)).expect("now complete");
+        assert_eq!(jobs.len(), 3);
+    }
+
+    #[test]
+    fn drain_emits_group_as_single_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(9) });
+        b.push(shard_job(1, 5, 13, 0, 3));
+        b.push(shard_job(2, 5, 13, 1, 3));
+        b.push(shard_job(3, 5, 13, 2, 3)); // completes → flushed by push
+        b.push(shard_job(4, 5, 14, 0, 2));
+        let drained = b.drain();
+        assert_eq!(drained.len(), 1, "group 14 comes out whole in one batch");
+        assert_eq!(drained[0].1.len(), 1);
+        assert_eq!(drained[0].1[0].shard.unwrap().group, 14);
     }
 }

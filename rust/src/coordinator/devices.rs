@@ -14,7 +14,9 @@
 use super::request::PointSetId;
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 use crate::fpga::{SabConfig, SabModel};
+use crate::msm::partial::{self, ShardSpec};
 use crate::msm::{self, MsmConfig};
+use anyhow::anyhow;
 use crate::runtime::{msm_engine, EngineCurve, UdaEngine};
 use crate::util::Stopwatch;
 use std::collections::HashMap;
@@ -167,6 +169,59 @@ impl<C: CurveParams> RunningDevice<C> {
             }
         }
     }
+
+    /// Execute one shard of a sharded MSM under the group's uniform `cfg`
+    /// (window-range shards need identical window boundaries on every
+    /// device, so the device's own `msm_cfg` is deliberately ignored).
+    /// Returns (partial, wall seconds, modeled device seconds).
+    pub fn execute_shard(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+        spec: &ShardSpec,
+        cfg: &MsmConfig,
+    ) -> anyhow::Result<(Jacobian<C>, f64, f64)> {
+        let sw = Stopwatch::start();
+        match &self.backend {
+            RunningBackend::Native { threads } => {
+                let out = partial::execute_shard(
+                    msm::Backend::Parallel { threads: *threads },
+                    points,
+                    scalars,
+                    cfg,
+                    spec,
+                );
+                let wall = sw.secs();
+                Ok((out, wall, wall))
+            }
+            RunningBackend::SimFpga { model } => {
+                let out = partial::execute_shard(
+                    msm::Backend::Parallel { threads: msm::parallel::default_threads() },
+                    points,
+                    scalars,
+                    cfg,
+                    spec,
+                );
+                let wall = sw.secs();
+                // window indices in `spec` live in the *group's* plan, so
+                // the fraction must use its window count, not the model's
+                let plan_windows = msm::MsmPlan::for_curve::<C>(cfg).windows;
+                let device = model.time_shard(points.len() as u64, spec, plan_windows);
+                Ok((out, wall, device))
+            }
+            RunningBackend::Engine { engine } => match *spec {
+                ShardSpec::PointChunk { lo, hi } => {
+                    let out = engine.msm(&points[lo..hi], &scalars[lo..hi], cfg)?;
+                    let wall = sw.secs();
+                    Ok((out, wall, wall))
+                }
+                ShardSpec::WindowRange { .. } => Err(anyhow!(
+                    "window-range shards are not supported on the engine backend \
+                     (it owns the whole window loop)"
+                )),
+            },
+        }
+    }
 }
 
 /// Registry of base-point sets shared across devices (host-side master
@@ -229,6 +284,44 @@ mod tests {
         assert!(out.eq_point(&msm::naive::msm(&w.points, &w.scalars)));
         // modeled time for 128 points ≈ call overhead ≈ 9–20 ms
         assert!(dev > 0.005 && dev < 0.05, "modeled {dev}");
+    }
+
+    #[test]
+    fn device_shards_merge_bit_exact() {
+        let d = DeviceDesc::<Bn254G1>::native(2).into_runtime().unwrap();
+        let w = points::workload::<Bn254G1>(96, 204);
+        let cfg = MsmConfig::default();
+        let want = msm::naive::msm(&w.points, &w.scalars);
+        let windows = crate::msm::MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+        for specs in [partial::chunk_specs(96, 3), partial::window_specs(windows, 3)] {
+            let mut parts: Vec<crate::msm::PartialMsm<Bn254G1>> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let (out, wall, dev) = d.execute_shard(&w.points, &w.scalars, s, &cfg).unwrap();
+                    assert!(wall >= 0.0 && dev >= 0.0);
+                    crate::msm::PartialMsm { index: i, spec: *s, output: out }
+                })
+                .collect();
+            assert!(partial::merge(&mut parts).eq_point(&want), "{specs:?}");
+        }
+    }
+
+    #[test]
+    fn sim_fpga_shard_time_scales_with_shape() {
+        let d = DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 34)
+            .into_runtime()
+            .unwrap();
+        let w = points::workload::<Bn254G1>(128, 205);
+        let cfg = MsmConfig::default();
+        let windows = crate::msm::MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+        let (_, _, full) = d.execute(&w.points, &w.scalars).unwrap();
+        let half_spec = ShardSpec::WindowRange { lo: 0, hi: windows / 2 };
+        let (_, _, half) = d.execute_shard(&w.points, &w.scalars, &half_spec, &cfg).unwrap();
+        assert!(half < full, "half the windows must model faster: {half} vs {full}");
+        let chunk_spec = ShardSpec::PointChunk { lo: 0, hi: 64 };
+        let (_, _, chunk) = d.execute_shard(&w.points, &w.scalars, &chunk_spec, &cfg).unwrap();
+        assert!(chunk > 0.0 && chunk <= full);
     }
 
     #[test]

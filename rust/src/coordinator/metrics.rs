@@ -1,7 +1,10 @@
-//! Serving metrics: counters and a fixed-bucket latency histogram
-//! (lock-free enough for the worker threads via atomics).
+//! Serving metrics: counters, a fixed-bucket latency histogram, and
+//! per-device utilization lanes (lock-free enough for the worker threads
+//! via atomics). The shard counters (groups, retries, atomic failures,
+//! skew) instrument the multi-device sharded path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 /// Log-spaced latency histogram from 1 µs to ~1000 s.
 pub struct LatencyHistogram {
@@ -64,6 +67,93 @@ impl LatencyHistogram {
     }
 }
 
+/// One device's serving lane: how much work (and modeled device time) the
+/// slot has absorbed. `busy_us` uses the *device* clock — for sim-FPGA
+/// slots that is the modeled accelerator time, so utilization reads as
+/// "how loaded the modeled hardware would be".
+#[derive(Default)]
+pub struct DeviceLane {
+    /// Whole (unsharded) jobs executed.
+    pub jobs: AtomicU64,
+    /// Shard executions (pieces of sharded jobs).
+    pub shards: AtomicU64,
+    /// Executions that returned a device error.
+    pub failures: AtomicU64,
+    /// Device-seconds consumed, in microseconds.
+    pub busy_us: AtomicU64,
+}
+
+impl DeviceLane {
+    pub fn record(&self, device_secs: f64, is_shard: bool) {
+        if is_shard {
+            self.shards.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.jobs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.busy_us.fetch_add((device_secs.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Per-device metrics for a fixed device set (one lane per slot).
+pub struct DeviceMetrics {
+    lanes: Vec<DeviceLane>,
+    started: Instant,
+}
+
+impl DeviceMetrics {
+    pub fn new(devices: usize) -> DeviceMetrics {
+        DeviceMetrics {
+            lanes: (0..devices).map(|_| DeviceLane::default()).collect(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane(&self, device: usize) -> &DeviceLane {
+        &self.lanes[device]
+    }
+
+    pub fn lanes(&self) -> &[DeviceLane] {
+        &self.lanes
+    }
+
+    /// Per-device utilization: device-busy seconds over wall seconds since
+    /// construction. Sim-FPGA lanes can exceed 1.0 (the modeled hardware
+    /// would be oversubscribed) — that is the signal, so it is not clamped.
+    pub fn utilization(&self) -> Vec<f64> {
+        let wall = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.lanes.iter().map(|l| l.busy_secs() / wall).collect()
+    }
+
+    /// JSON rendering for the CLI/metrics endpoint.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let util = self.utilization();
+        let mut arr = Vec::with_capacity(self.lanes.len());
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let mut j = crate::util::json::Json::obj();
+            j.set("device", i)
+                .set("jobs", lane.jobs.load(Ordering::Relaxed))
+                .set("shards", lane.shards.load(Ordering::Relaxed))
+                .set("failures", lane.failures.load(Ordering::Relaxed))
+                .set("busy_s", lane.busy_secs())
+                .set("utilization", util[i]);
+            arr.push(j);
+        }
+        crate::util::json::Json::Arr(arr)
+    }
+}
+
 /// Coordinator-wide counters.
 #[derive(Default)]
 pub struct Counters {
@@ -76,10 +166,29 @@ pub struct Counters {
     pub affinity_hits: AtomicU64,
     pub affinity_misses: AtomicU64,
     pub uploads_bytes: AtomicU64,
+    /// Shard groups dispatched (one per sharded job reaching the devices).
+    pub shard_groups: AtomicU64,
+    /// Individual shards re-dispatched after a device failure.
+    pub shard_retries: AtomicU64,
+    /// Shard groups that failed atomically (a shard ran out of devices).
+    pub shard_group_failures: AtomicU64,
+    /// Shard-skew accumulator: per group, (max − min)/max of the shard
+    /// device times, in permille (0 = perfectly balanced shards).
+    skew_permille_sum: AtomicU64,
+    skew_samples: AtomicU64,
 }
 
 impl Counters {
+    /// Record one completed group's shard skew (0.0 balanced … 1.0 one
+    /// shard did all the waiting).
+    pub fn record_shard_skew(&self, skew: f64) {
+        let pm = (skew.clamp(0.0, 1.0) * 1000.0).round() as u64;
+        self.skew_permille_sum.fetch_add(pm, Ordering::Relaxed);
+        self.skew_samples.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> CounterSnapshot {
+        let samples = self.skew_samples.load(Ordering::Relaxed);
         CounterSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -88,6 +197,14 @@ impl Counters {
             affinity_hits: self.affinity_hits.load(Ordering::Relaxed),
             affinity_misses: self.affinity_misses.load(Ordering::Relaxed),
             uploads_bytes: self.uploads_bytes.load(Ordering::Relaxed),
+            shard_groups: self.shard_groups.load(Ordering::Relaxed),
+            shard_retries: self.shard_retries.load(Ordering::Relaxed),
+            shard_group_failures: self.shard_group_failures.load(Ordering::Relaxed),
+            mean_shard_skew_permille: if samples == 0 {
+                0
+            } else {
+                self.skew_permille_sum.load(Ordering::Relaxed) / samples
+            },
         }
     }
 }
@@ -102,6 +219,11 @@ pub struct CounterSnapshot {
     pub affinity_hits: u64,
     pub affinity_misses: u64,
     pub uploads_bytes: u64,
+    pub shard_groups: u64,
+    pub shard_retries: u64,
+    pub shard_group_failures: u64,
+    /// Mean shard skew across completed groups, in permille.
+    pub mean_shard_skew_permille: u64,
 }
 
 impl CounterSnapshot {
@@ -114,6 +236,11 @@ impl CounterSnapshot {
         }
     }
 
+    /// Mean shard skew across completed groups as a ratio in [0, 1].
+    pub fn mean_shard_skew(&self) -> f64 {
+        self.mean_shard_skew_permille as f64 / 1000.0
+    }
+
     /// JSON rendering for the CLI/metrics endpoint.
     pub fn to_json(&self) -> crate::util::json::Json {
         let mut j = crate::util::json::Json::obj();
@@ -124,7 +251,11 @@ impl CounterSnapshot {
             .set("affinity_hits", self.affinity_hits)
             .set("affinity_misses", self.affinity_misses)
             .set("uploads_bytes", self.uploads_bytes)
-            .set("hit_rate", self.hit_rate());
+            .set("hit_rate", self.hit_rate())
+            .set("shard_groups", self.shard_groups)
+            .set("shard_retries", self.shard_retries)
+            .set("shard_group_failures", self.shard_group_failures)
+            .set("mean_shard_skew", self.mean_shard_skew());
         j
     }
 }
@@ -163,5 +294,38 @@ mod tests {
         c.submitted.store(5, Ordering::Relaxed);
         let j = c.snapshot().to_json();
         assert_eq!(j.get("submitted").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("shard_groups").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn shard_skew_mean() {
+        let c = Counters::default();
+        c.record_shard_skew(0.2);
+        c.record_shard_skew(0.4);
+        let snap = c.snapshot();
+        assert_eq!(snap.mean_shard_skew_permille, 300);
+        assert!((snap.mean_shard_skew() - 0.3).abs() < 1e-9);
+        // out-of-range input is clamped, not wrapped
+        c.record_shard_skew(7.0);
+        assert!(c.snapshot().mean_shard_skew() <= 1.0);
+    }
+
+    #[test]
+    fn device_lanes_track_busy_time_and_kind() {
+        let m = DeviceMetrics::new(3);
+        m.lane(0).record(0.5, false);
+        m.lane(1).record(0.25, true);
+        m.lane(1).record(0.25, true);
+        m.lane(2).record_failure();
+        assert_eq!(m.device_count(), 3);
+        assert_eq!(m.lane(0).jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(m.lane(1).shards.load(Ordering::Relaxed), 2);
+        assert_eq!(m.lane(2).failures.load(Ordering::Relaxed), 1);
+        assert!((m.lane(1).busy_secs() - 0.5).abs() < 1e-6);
+        let util = m.utilization();
+        assert_eq!(util.len(), 3);
+        assert!(util[0] > 0.0 && util[2] == 0.0);
+        let j = m.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 3);
     }
 }

@@ -17,8 +17,14 @@
 //! * [`devices`] — backend abstraction: native CPU executor, modeled-FPGA
 //!   executor (bit-exact native compute + SAB-model virtual latency), and
 //!   the PJRT UDA engine;
+//! * [`shard`] — the multi-device path: one large MSM splits into
+//!   per-device shards (point chunks or window ranges, selected by a
+//!   [`shard::ShardPolicy`]), fans out across every device, and merges
+//!   back deterministically; shard groups complete or fail atomically,
+//!   with per-shard retry on device failure;
 //! * [`server`] — bounded-queue thread server with backpressure and
-//!   latency metrics ([`metrics`]).
+//!   latency metrics ([`metrics`] — including per-device utilization
+//!   lanes and shard-skew counters).
 //!
 //! The coordinator is generic over the curve (one instance per curve —
 //! matching the hardware reality of one bitstream per curve).
@@ -28,9 +34,12 @@ pub mod pointcache;
 pub mod router;
 pub mod batcher;
 pub mod devices;
+pub mod shard;
 pub mod server;
 pub mod metrics;
 
 pub use devices::{DeviceBackend, DeviceDesc, PointSetRegistry, RunningDevice};
-pub use request::{JobId, JobResult, MsmJob, PointSetId};
+pub use metrics::{CounterSnapshot, Counters, DeviceMetrics};
+pub use request::{JobId, JobResult, MsmJob, PointSetId, ShardAssignment};
 pub use server::{Coordinator, CoordinatorConfig};
+pub use shard::{PoolDevice, ShardGroup, ShardPolicy, ShardPool};

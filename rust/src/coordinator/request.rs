@@ -12,6 +12,20 @@ pub struct PointSetId(pub u64);
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct JobId(pub u64);
 
+/// Membership of a shard sub-job in its shard group. The batcher uses
+/// this to keep a group together (a group flushes in exactly one batch —
+/// it completes or fails atomically downstream); the dispatcher uses it to
+/// look up the group state and spread shards across devices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardAssignment {
+    /// Group key (the client-visible sharded job's id).
+    pub group: u64,
+    /// Shard position within the group's spec list.
+    pub index: u32,
+    /// Total shards in the group.
+    pub total: u32,
+}
+
 /// One MSM request: scalars against a resident point set.
 #[derive(Clone, Debug)]
 pub struct MsmJob {
@@ -21,6 +35,8 @@ pub struct MsmJob {
     pub scalars: Arc<Vec<ScalarLimbs>>,
     /// Submission timestamp (for latency accounting).
     pub submitted_at: std::time::Instant,
+    /// `Some` when this job is one shard of a sharded job.
+    pub shard: Option<ShardAssignment>,
 }
 
 /// Result of a completed job. Device failures are **delivered**, not

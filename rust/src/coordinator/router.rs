@@ -8,6 +8,10 @@
 //!
 //! Load is tracked by the server; the router is a pure decision function so
 //! the property tests can drive it directly.
+//!
+//! Sharded jobs use [`route_spread`] instead: one route per shard, distinct
+//! devices while they last (holders first, then least-loaded), every chosen
+//! device charged an admission for the point set.
 
 use super::pointcache::{Admission, DeviceDdr};
 use super::request::PointSetId;
@@ -50,6 +54,42 @@ pub fn route(
         }
     }
     None
+}
+
+/// Route the `shards` shards of one group across the device set. Every
+/// executing device needs the point set resident, so each chosen device
+/// is charged an admission. Preference order: devices already holding the
+/// set first, then by load. Distinct devices are used while they last;
+/// when fewer devices can admit the set than there are shards, the
+/// admitting devices are reused round-robin (degraded but correct).
+/// Returns `None` when no device can hold the set at all.
+pub fn route_spread(
+    ddrs: &mut [DeviceDdr],
+    loads: &[usize],
+    point_set: PointSetId,
+    bytes: u64,
+    shards: usize,
+) -> Option<Vec<Route>> {
+    assert_eq!(ddrs.len(), loads.len());
+    if ddrs.is_empty() || shards == 0 {
+        return None;
+    }
+    let mut order: Vec<usize> = (0..ddrs.len()).collect();
+    order.sort_by_key(|&i| (!ddrs[i].is_resident(point_set), loads[i], i));
+    let mut admitted: Vec<Route> = Vec::new();
+    for i in order {
+        if admitted.len() >= shards {
+            break;
+        }
+        match ddrs[i].admit(point_set, bytes) {
+            Admission::TooLarge => continue,
+            adm => admitted.push(Route { device: i, admission: adm }),
+        }
+    }
+    if admitted.is_empty() {
+        return None;
+    }
+    Some((0..shards).map(|s| admitted[s % admitted.len()]).collect())
 }
 
 #[cfg(test)]
@@ -98,5 +138,45 @@ mod tests {
         d[2].admit(PointSetId(3), 100);
         let r = route(&mut d, &[7, 0, 4], PointSetId(3), 100).unwrap();
         assert_eq!(r.device, 2);
+    }
+
+    #[test]
+    fn spread_uses_distinct_devices() {
+        let mut d = ddrs(4, 1000);
+        let routes = route_spread(&mut d, &[0, 0, 0, 0], PointSetId(1), 100, 4).unwrap();
+        let mut devs: Vec<usize> = routes.iter().map(|r| r.device).collect();
+        devs.sort_unstable();
+        devs.dedup();
+        assert_eq!(devs.len(), 4, "4 shards over 4 devices must not share");
+        // every chosen device now holds the set
+        for r in &routes {
+            assert!(d[r.device].is_resident(PointSetId(1)));
+        }
+    }
+
+    #[test]
+    fn spread_prefers_resident_then_least_loaded() {
+        let mut d = ddrs(3, 1000);
+        d[2].admit(PointSetId(5), 100);
+        let routes = route_spread(&mut d, &[1, 0, 9], PointSetId(5), 100, 2).unwrap();
+        // holder (2) first despite its load, then the least-loaded (1)
+        assert_eq!(routes[0].device, 2);
+        assert_eq!(routes[0].admission, Admission::Hit);
+        assert_eq!(routes[1].device, 1);
+    }
+
+    #[test]
+    fn spread_wraps_when_fewer_devices_admit() {
+        // only device 1 can hold the set: all 3 shards land there
+        let mut d = vec![DeviceDdr::new(50), DeviceDdr::new(5000)];
+        let routes = route_spread(&mut d, &[0, 0], PointSetId(1), 100, 3).unwrap();
+        assert_eq!(routes.len(), 3);
+        assert!(routes.iter().all(|r| r.device == 1));
+    }
+
+    #[test]
+    fn spread_none_when_nothing_fits() {
+        let mut d = ddrs(2, 10);
+        assert!(route_spread(&mut d, &[0, 0], PointSetId(1), 100, 2).is_none());
     }
 }

@@ -2,23 +2,36 @@
 //! worker threads — the process topology of a proving-farm MSM tier.
 //!
 //! ```text
-//!  submit() ──bounded──► dispatcher ──route──► device queue ──► worker 0
-//!   (backpressure)        (batcher)                        └──► worker 1 …
-//!                                                            reply channels
+//!  submit() ─────bounded──► dispatcher ──route───► device queue ──► worker 0
+//!   (backpressure)           (batcher)                          └──► worker 1 …
+//!  submit_sharded() ──────►  split ► spread ──► shard per device ──► merge
+//!                               ▲                                      │
+//!                               └────────── retry (failed shard) ◄─────┘
 //! ```
 //!
 //! Everything is std-thread + mpsc (no async runtime exists in the offline
 //! dependency set — and none is needed: the workload is compute-bound with
 //! small fan-out).
+//!
+//! A sharded job ([`Coordinator::submit_sharded`]) splits into one shard
+//! per device under a [`ShardPolicy`], travels the batcher as an atomic
+//! group, spreads across distinct devices via `router::route_spread`, and
+//! merges deterministically in the last-finishing worker. A failed shard
+//! bounces back to the dispatcher and is re-routed to a device it has not
+//! tried; when a shard runs out of devices the whole group fails
+//! atomically through [`JobResult::error`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::devices::{DeviceDesc, PointSetRegistry};
-use super::metrics::{Counters, LatencyHistogram};
+use super::metrics::{Counters, DeviceMetrics, LatencyHistogram};
 use super::pointcache::{Admission, DeviceDdr};
-use super::request::{JobId, JobResult, MsmJob, PointSetId};
+use super::request::{JobId, JobResult, MsmJob, PointSetId, ShardAssignment};
 use super::router;
+use super::shard::{ShardGroup, ShardPolicy, ShardRetry};
 use crate::ec::{CurveParams, Jacobian, ScalarLimbs};
+use crate::msm::MsmConfig;
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -30,21 +43,34 @@ pub struct CoordinatorConfig {
     /// Ingress queue bound (jobs) — the backpressure knob.
     pub queue_capacity: usize,
     pub batch: BatchPolicy,
+    /// The uniform MSM plan config sharded jobs run with (window-range
+    /// shards need identical window boundaries on every device).
+    pub shard_cfg: MsmConfig,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { queue_capacity: 256, batch: BatchPolicy::default() }
+        CoordinatorConfig {
+            queue_capacity: 256,
+            batch: BatchPolicy::default(),
+            shard_cfg: MsmConfig::default(),
+        }
     }
 }
 
-struct Dispatch<C: CurveParams> {
+struct SingleDispatch<C: CurveParams> {
     job: MsmJob,
     reply: mpsc::Sender<JobResult<Jacobian<C>>>,
 }
 
+enum Dispatch<C: CurveParams> {
+    Single(SingleDispatch<C>),
+    Group(Arc<ShardGroup<C>>),
+}
+
 enum WorkerMsg<C: CurveParams> {
-    Batch { point_set: PointSetId, jobs: Vec<Dispatch<C>>, upload_miss: bool },
+    Batch { point_set: PointSetId, jobs: Vec<SingleDispatch<C>>, upload_miss: bool },
+    Shard { group: Arc<ShardGroup<C>>, shard_index: usize },
     Stop,
 }
 
@@ -56,8 +82,170 @@ pub struct Coordinator<C: CurveParams> {
     workers: Vec<std::thread::JoinHandle<()>>,
     pub counters: Arc<Counters>,
     pub latency: Arc<LatencyHistogram>,
+    /// Per-device lanes: jobs/shards executed, busy device-time,
+    /// utilization.
+    pub device_metrics: Arc<DeviceMetrics>,
     next_job: AtomicU64,
     registry: Arc<PointSetRegistry<C>>,
+    retry_tx: mpsc::Sender<ShardRetry<C>>,
+    n_devices: usize,
+    shard_cfg: MsmConfig,
+}
+
+/// Dispatcher-side state shared by the flush paths.
+struct DispatchCtx<C: CurveParams> {
+    registry: Arc<PointSetRegistry<C>>,
+    counters: Arc<Counters>,
+    loads: Arc<Vec<AtomicUsize>>,
+    ddrs: Arc<Mutex<Vec<DeviceDdr>>>,
+    worker_txs: Vec<mpsc::Sender<WorkerMsg<C>>>,
+    groups: HashMap<u64, Arc<ShardGroup<C>>>,
+    replies: JobReplies<C>,
+}
+
+impl<C: CurveParams> DispatchCtx<C> {
+    fn loads_now(&self) -> Vec<usize> {
+        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    fn flush(&mut self, ps: PointSetId, jobs: Vec<MsmJob>) {
+        if jobs.first().and_then(|j| j.shard).is_some() {
+            self.flush_group(ps, jobs);
+        } else {
+            self.flush_batch(ps, jobs);
+        }
+    }
+
+    /// Route one same-point-set batch to a single device (affinity path).
+    fn flush_batch(&mut self, ps: PointSetId, jobs: Vec<MsmJob>) {
+        let bytes = self.registry.bytes_of(ps);
+        let load_now = self.loads_now();
+        let mut ddrs = self.ddrs.lock().unwrap();
+        let route = router::route(&mut ddrs, &load_now, ps, bytes);
+        drop(ddrs);
+        if let Some(r) = route {
+            let miss = matches!(r.admission, Admission::Miss { .. });
+            if miss {
+                self.counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
+                self.counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
+            } else {
+                self.counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            let dispatches: Vec<SingleDispatch<C>> = jobs
+                .into_iter()
+                .filter_map(|j| {
+                    self.replies.take(j.id).map(|reply| SingleDispatch { job: j, reply })
+                })
+                .collect();
+            self.loads[r.device].fetch_add(dispatches.len(), Ordering::Relaxed);
+            let _ = self.worker_txs[r.device].send(WorkerMsg::Batch {
+                point_set: ps,
+                jobs: dispatches,
+                upload_miss: miss,
+            });
+        } else {
+            self.counters.rejected.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Spread one shard group across the device set (one shard per
+    /// distinct device while they last) and hand each shard to its worker.
+    fn flush_group(&mut self, ps: PointSetId, mut jobs: Vec<MsmJob>) {
+        jobs.sort_by_key(|j| j.shard.map_or(0, |s| s.index));
+        let gid = match jobs[0].shard {
+            Some(s) => s.group,
+            None => return, // unreachable: flush() checked
+        };
+        let group = match self.groups.remove(&gid) {
+            Some(g) => g,
+            None => return, // group already failed/settled
+        };
+        // counted before any failure path, so shard_group_failures can
+        // never exceed shard_groups (ShardPool counts in the same order)
+        self.counters.shard_groups.fetch_add(1, Ordering::Relaxed);
+        if jobs.len() != group.shard_count() {
+            group.fail_group("shard group arrived incomplete at flush", &self.counters);
+            return;
+        }
+        let bytes = self.registry.bytes_of(ps);
+        let load_now = self.loads_now();
+        let mut ddrs = self.ddrs.lock().unwrap();
+        let routes = router::route_spread(&mut ddrs, &load_now, ps, bytes, jobs.len());
+        drop(ddrs);
+        let routes = match routes {
+            Some(r) => r,
+            None => {
+                group.fail_group("no device can hold the point set", &self.counters);
+                return;
+            }
+        };
+        // upload accounting: once per distinct device the group touches
+        let mut seen: Vec<usize> = Vec::new();
+        for r in &routes {
+            if seen.contains(&r.device) {
+                continue;
+            }
+            seen.push(r.device);
+            if matches!(r.admission, Admission::Miss { .. }) {
+                self.counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
+                self.counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
+            } else {
+                self.counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        for (job, route) in jobs.iter().zip(&routes) {
+            let shard_index = job.shard.expect("group job").index as usize;
+            group.note_dispatch(shard_index, route.device);
+            self.loads[route.device].fetch_add(1, Ordering::Relaxed);
+            let _ = self.worker_txs[route.device]
+                .send(WorkerMsg::Shard { group: group.clone(), shard_index });
+        }
+    }
+
+    /// Re-route one failed shard to the least-loaded device it has not
+    /// tried yet; fail the group atomically when none is left.
+    fn handle_retry(&mut self, r: ShardRetry<C>) {
+        if r.group.is_settled() {
+            return; // another shard already failed the group — drop the retry
+        }
+        let tried = r.group.tried_devices(r.shard_index);
+        let bytes = self.registry.bytes_of(r.group.point_set);
+        let load_now = self.loads_now();
+        let mut order: Vec<usize> =
+            (0..self.worker_txs.len()).filter(|d| !tried.contains(d)).collect();
+        order.sort_by_key(|&d| load_now[d]);
+        let mut dest = None;
+        let mut ddrs = self.ddrs.lock().unwrap();
+        for d in order {
+            match ddrs[d].admit(r.group.point_set, bytes) {
+                Admission::TooLarge => continue,
+                adm => {
+                    dest = Some((d, adm));
+                    break;
+                }
+            }
+        }
+        drop(ddrs);
+        match dest {
+            Some((d, adm)) => {
+                // the retry's admission is a real upload/hit like any other
+                if matches!(adm, Admission::Miss { .. }) {
+                    self.counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
+                    self.counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
+                } else {
+                    self.counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                r.group.note_dispatch(r.shard_index, d);
+                self.loads[d].fetch_add(1, Ordering::Relaxed);
+                let _ = self.worker_txs[d]
+                    .send(WorkerMsg::Shard { group: r.group, shard_index: r.shard_index });
+            }
+            None => r.group.fail_group(
+                &format!("shard {} has no untried device left", r.shard_index),
+                &self.counters,
+            ),
+        }
+    }
 }
 
 impl<C: CurveParams> Coordinator<C> {
@@ -70,14 +258,17 @@ impl<C: CurveParams> Coordinator<C> {
         registry: PointSetRegistry<C>,
     ) -> Coordinator<C> {
         assert!(!devices.is_empty(), "need at least one device");
+        let n_devices = devices.len();
         let registry = Arc::new(registry);
         let counters = Arc::new(Counters::default());
         let latency = Arc::new(LatencyHistogram::new());
+        let device_metrics = Arc::new(DeviceMetrics::new(n_devices));
         let loads: Arc<Vec<AtomicUsize>> =
-            Arc::new((0..devices.len()).map(|_| AtomicUsize::new(0)).collect());
+            Arc::new((0..n_devices).map(|_| AtomicUsize::new(0)).collect());
         let ddrs: Arc<Mutex<Vec<DeviceDdr>>> = Arc::new(Mutex::new(
             devices.iter().map(|d| DeviceDdr::new(d.ddr_capacity)).collect(),
         ));
+        let (retry_tx, retry_rx) = mpsc::channel::<ShardRetry<C>>();
 
         // per-device worker threads
         let mut worker_txs = Vec::new();
@@ -88,6 +279,7 @@ impl<C: CurveParams> Coordinator<C> {
             let registry = registry.clone();
             let counters = counters.clone();
             let latency = latency.clone();
+            let device_metrics = device_metrics.clone();
             let loads = loads.clone();
             workers.push(std::thread::spawn(move || {
                 // PJRT engines must be constructed on their owning thread.
@@ -114,6 +306,7 @@ impl<C: CurveParams> Coordinator<C> {
                                     Ok((output, _wall, device_s)) => {
                                         latency.record_secs(service_s);
                                         counters.completed.fetch_add(1, Ordering::Relaxed);
+                                        device_metrics.lane(idx).record(device_s, false);
                                         let _ = d.reply.send(JobResult {
                                             id: d.job.id,
                                             output,
@@ -130,6 +323,7 @@ impl<C: CurveParams> Coordinator<C> {
                                         // from "coordinator shut down" (which
                                         // drops the channel instead).
                                         counters.failed.fetch_add(1, Ordering::Relaxed);
+                                        device_metrics.lane(idx).record_failure();
                                         let _ = d.reply.send(JobResult {
                                             id: d.job.id,
                                             output: Jacobian::<C>::infinity(),
@@ -143,6 +337,48 @@ impl<C: CurveParams> Coordinator<C> {
                                 }
                             }
                         }
+                        WorkerMsg::Shard { group, shard_index } => {
+                            if group.is_settled() {
+                                // group already failed atomically — the
+                                // result would be discarded, skip the work
+                                loads[idx].fetch_sub(1, Ordering::Relaxed);
+                                continue;
+                            }
+                            let spec = group.specs[shard_index];
+                            let res = match registry.get(group.point_set) {
+                                Some(points) => dev.execute_shard(
+                                    &points,
+                                    &group.scalars,
+                                    &spec,
+                                    &group.cfg,
+                                ),
+                                None => Err(anyhow!("point set disappeared")),
+                            };
+                            loads[idx].fetch_sub(1, Ordering::Relaxed);
+                            match res {
+                                Ok((output, _wall, device_s)) => {
+                                    device_metrics.lane(idx).record(device_s, true);
+                                    group.complete(
+                                        shard_index,
+                                        output,
+                                        device_s,
+                                        idx,
+                                        &counters,
+                                        &latency,
+                                    );
+                                }
+                                Err(e) => {
+                                    device_metrics.lane(idx).record_failure();
+                                    ShardGroup::fail(
+                                        &group,
+                                        shard_index,
+                                        idx,
+                                        &format!("{e:#}"),
+                                        &counters,
+                                    );
+                                }
+                            }
+                        }
                     }
                 }
             }));
@@ -151,64 +387,70 @@ impl<C: CurveParams> Coordinator<C> {
         // dispatcher thread
         let (ingress, ingress_rx) = mpsc::sync_channel::<Dispatch<C>>(cfg.queue_capacity);
         let dispatcher = {
-            let registry = registry.clone();
-            let counters = counters.clone();
-            let loads = loads.clone();
-            let worker_txs = worker_txs.clone();
+            let mut ctx = DispatchCtx {
+                registry: registry.clone(),
+                counters: counters.clone(),
+                loads: loads.clone(),
+                ddrs,
+                worker_txs,
+                groups: HashMap::new(),
+                replies: JobReplies::default(),
+            };
             std::thread::spawn(move || {
                 let mut batcher = Batcher::new(cfg.batch);
-                let flush = |ps: PointSetId, jobs: Vec<MsmJob>, replies: &mut JobReplies<C>| {
-                    let bytes = registry.bytes_of(ps);
-                    let load_now: Vec<usize> =
-                        loads.iter().map(|l| l.load(Ordering::Relaxed)).collect();
-                    let mut ddrs = ddrs.lock().unwrap();
-                    let route = router::route(&mut ddrs, &load_now, ps, bytes);
-                    drop(ddrs);
-                    if let Some(r) = route {
-                        let miss = matches!(r.admission, Admission::Miss { .. });
-                        if miss {
-                            counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
-                            counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
-                        } else {
-                            counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
-                        }
-                        let dispatches: Vec<Dispatch<C>> = jobs
-                            .into_iter()
-                            .filter_map(|j| {
-                                replies.take(j.id).map(|reply| Dispatch { job: j, reply })
-                            })
-                            .collect();
-                        loads[r.device].fetch_add(dispatches.len(), Ordering::Relaxed);
-                        let _ = worker_txs[r.device].send(WorkerMsg::Batch {
-                            point_set: ps,
-                            jobs: dispatches,
-                            upload_miss: miss,
-                        });
-                    } else {
-                        counters.rejected.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-                    }
-                };
-
-                let mut replies = JobReplies::<C>::default();
                 loop {
                     match ingress_rx.recv_timeout(cfg.batch.max_wait) {
-                        Ok(d) => {
-                            replies.put(d.job.id, d.reply);
+                        Ok(Dispatch::Single(d)) => {
+                            ctx.replies.put(d.job.id, d.reply);
                             if let Some((ps, jobs)) = batcher.push(d.job) {
-                                flush(ps, jobs, &mut replies);
+                                ctx.flush(ps, jobs);
+                            }
+                        }
+                        Ok(Dispatch::Group(group)) => {
+                            ctx.groups.insert(group.id.0, group.clone());
+                            // all members enter the batcher back-to-back;
+                            // the group-completing push releases them as
+                            // one atomic batch
+                            let total = group.shard_count() as u32;
+                            let mut flushed = None;
+                            for index in 0..total {
+                                let job = MsmJob {
+                                    id: group.id,
+                                    point_set: group.point_set,
+                                    scalars: group.scalars.clone(),
+                                    submitted_at: group.submitted_at,
+                                    shard: Some(ShardAssignment {
+                                        group: group.id.0,
+                                        index,
+                                        total,
+                                    }),
+                                };
+                                if let Some(f) = batcher.push(job) {
+                                    flushed = Some(f);
+                                }
+                            }
+                            if let Some((ps, jobs)) = flushed {
+                                ctx.flush(ps, jobs);
                             }
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
+                    while let Ok(r) = retry_rx.try_recv() {
+                        ctx.handle_retry(r);
+                    }
                     for (ps, jobs) in batcher.expired(Instant::now()) {
-                        flush(ps, jobs, &mut replies);
+                        ctx.flush(ps, jobs);
                     }
                 }
                 for (ps, jobs) in batcher.drain() {
-                    flush(ps, jobs, &mut replies);
+                    ctx.flush(ps, jobs);
                 }
-                for tx in &worker_txs {
+                // best-effort: re-route retries that raced the shutdown
+                while let Ok(r) = retry_rx.try_recv() {
+                    ctx.handle_retry(r);
+                }
+                for tx in &ctx.worker_txs {
                     let _ = tx.send(WorkerMsg::Stop);
                 }
             })
@@ -220,9 +462,42 @@ impl<C: CurveParams> Coordinator<C> {
             workers,
             counters,
             latency,
+            device_metrics,
             next_job: AtomicU64::new(1),
             registry,
+            retry_tx,
+            n_devices,
+            shard_cfg: cfg.shard_cfg,
         }
+    }
+
+    /// Registered device count.
+    pub fn device_count(&self) -> usize {
+        self.n_devices
+    }
+
+    fn validate(&self, point_set: PointSetId, scalars: &[ScalarLimbs]) -> Result<usize> {
+        let set_len = match self.registry.get(point_set) {
+            Some(s) => s.len(),
+            None => return Err(anyhow!("unknown point set {point_set:?}")),
+        };
+        if scalars.len() != set_len {
+            return Err(anyhow!("scalar count {} != point set size {set_len}", scalars.len()));
+        }
+        Ok(set_len)
+    }
+
+    fn enqueue(&self, d: Dispatch<C>) -> Result<()> {
+        let ingress = self.ingress.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))?;
+        ingress.try_send(d).map_err(|e| match e {
+            mpsc::TrySendError::Full(_) => {
+                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow!("ingress queue full (backpressure)")
+            }
+            mpsc::TrySendError::Disconnected(_) => anyhow!("coordinator stopped"),
+        })?;
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Submit an MSM; returns the job id and the reply channel.
@@ -233,31 +508,46 @@ impl<C: CurveParams> Coordinator<C> {
         point_set: PointSetId,
         scalars: Arc<Vec<ScalarLimbs>>,
     ) -> Result<(JobId, mpsc::Receiver<JobResult<Jacobian<C>>>)> {
-        let set_len = match self.registry.get(point_set) {
-            Some(s) => s.len(),
-            None => return Err(anyhow!("unknown point set {point_set:?}")),
-        };
-        if scalars.len() != set_len {
-            return Err(anyhow!(
-                "scalar count {} != point set size {set_len}",
-                scalars.len()
-            ));
-        }
+        self.validate(point_set, &scalars)?;
         let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
         let (reply_tx, reply_rx) = mpsc::channel();
-        let d = Dispatch {
-            job: MsmJob { id, point_set, scalars, submitted_at: Instant::now() },
+        self.enqueue(Dispatch::Single(SingleDispatch {
+            job: MsmJob { id, point_set, scalars, submitted_at: Instant::now(), shard: None },
             reply: reply_tx,
-        };
-        let ingress = self.ingress.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))?;
-        ingress.try_send(d).map_err(|e| match e {
-            mpsc::TrySendError::Full(_) => {
-                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow!("ingress queue full (backpressure)")
-            }
-            mpsc::TrySendError::Disconnected(_) => anyhow!("coordinator stopped"),
-        })?;
-        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        }))?;
+        Ok((id, reply_rx))
+    }
+
+    /// Submit an MSM to shard across every registered device under
+    /// `policy`. With one device this degrades to [`Self::submit`]. The
+    /// reply channel delivers exactly one [`JobResult`]: the
+    /// deterministically merged point, or — after per-shard retries
+    /// exhaust the device set — an atomic failure via
+    /// [`JobResult::error`].
+    pub fn submit_sharded(
+        &self,
+        point_set: PointSetId,
+        scalars: Arc<Vec<ScalarLimbs>>,
+        policy: ShardPolicy,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult<Jacobian<C>>>)> {
+        if self.n_devices == 1 {
+            return self.submit(point_set, scalars);
+        }
+        let set_len = self.validate(point_set, &scalars)?;
+        let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let specs = policy.plan::<C>(set_len, &self.shard_cfg, self.n_devices);
+        let group = Arc::new(ShardGroup::new(
+            id,
+            point_set,
+            scalars,
+            specs,
+            self.shard_cfg,
+            self.n_devices as u32, // dispatch budget: one try per device
+            reply_tx,
+            self.retry_tx.clone(),
+        ));
+        self.enqueue(Dispatch::Group(group))?;
         Ok((id, reply_rx))
     }
 

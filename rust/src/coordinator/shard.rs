@@ -1,0 +1,542 @@
+//! Sharded multi-device MSM execution — the device half of the sharding
+//! layer (`msm::partial` owns the kernel half: specs, window-range
+//! execution, deterministic merge).
+//!
+//! One large MSM splits into per-device shards under a
+//! [`ShardPolicy`] (point chunks or window ranges), fans out to every
+//! registered device, and merges back with a deterministic reduce (shard-
+//! index order), so the served point never depends on completion order.
+//!
+//! Two embeddings share this module:
+//!
+//! * **Serving path** — [`ShardGroup`]: the server-side state of one
+//!   sharded job flowing through `Coordinator::submit_sharded`. Shards
+//!   travel the normal batcher → router → device-worker pipeline; the
+//!   group settles exactly once — a merged success, or an **atomic
+//!   failure** after per-shard retries exhaust the device set. A failed
+//!   shard bounces back to the dispatcher as a [`ShardRetry`] and is
+//!   re-routed to a device it has not tried yet; the caller observes
+//!   failures only through [`JobResult::error`], never a dropped channel.
+//! * **In-process path** — [`ShardPool`]: a synchronous multi-device
+//!   executor for callers that hold their inputs as slices
+//!   (`snark::prover`, `baseline::cpu`). Same planning, retry, and merge
+//!   semantics, scoped threads instead of server workers.
+//!
+//! Shutdown caveat (serving path): a retry requested after the dispatcher
+//! drained its queue cannot be re-routed; the group's channel then closes,
+//! which callers already treat as "coordinator shut down".
+
+use super::metrics::{Counters, DeviceMetrics, LatencyHistogram};
+use super::request::{JobId, JobResult, PointSetId};
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+use crate::fpga::{SabConfig, SabModel};
+use crate::msm::partial::{self, PartialMsm, ShardSpec};
+use crate::msm::{self, Backend, MsmConfig};
+use crate::util::Stopwatch;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+pub use crate::msm::partial::ShardPolicy;
+
+/// A failed shard bounced back to the dispatcher for re-routing onto a
+/// device it has not tried yet.
+pub struct ShardRetry<C: CurveParams> {
+    pub group: Arc<ShardGroup<C>>,
+    pub shard_index: usize,
+}
+
+struct PartialShard<C: CurveParams> {
+    output: Jacobian<C>,
+    device_s: f64,
+}
+
+struct GroupState<C: CurveParams> {
+    partials: Vec<Option<PartialShard<C>>>,
+    remaining: usize,
+    /// Dispatch count per shard (first dispatch included).
+    attempts: Vec<u32>,
+    /// Devices each shard has been dispatched to (retries exclude these).
+    tried: Vec<Vec<usize>>,
+    settled: bool,
+}
+
+/// Server-side state of one sharded job: specs, partials, retry
+/// bookkeeping, and the caller's reply channel. Settles exactly once.
+pub struct ShardGroup<C: CurveParams> {
+    pub id: JobId,
+    pub point_set: PointSetId,
+    pub scalars: Arc<Vec<ScalarLimbs>>,
+    pub specs: Vec<ShardSpec>,
+    /// The uniform plan config every shard runs (window-range shards
+    /// require identical window boundaries across devices).
+    pub cfg: MsmConfig,
+    pub submitted_at: Instant,
+    /// Dispatch budget per shard (one try per registered device).
+    pub max_attempts: u32,
+    reply: mpsc::Sender<JobResult<Jacobian<C>>>,
+    retry_tx: mpsc::Sender<ShardRetry<C>>,
+    state: Mutex<GroupState<C>>,
+}
+
+impl<C: CurveParams> ShardGroup<C> {
+    #[allow(clippy::too_many_arguments)] // constructor mirrors the wire format
+    pub fn new(
+        id: JobId,
+        point_set: PointSetId,
+        scalars: Arc<Vec<ScalarLimbs>>,
+        specs: Vec<ShardSpec>,
+        cfg: MsmConfig,
+        max_attempts: u32,
+        reply: mpsc::Sender<JobResult<Jacobian<C>>>,
+        retry_tx: mpsc::Sender<ShardRetry<C>>,
+    ) -> ShardGroup<C> {
+        let n = specs.len();
+        ShardGroup {
+            id,
+            point_set,
+            scalars,
+            specs,
+            cfg,
+            submitted_at: Instant::now(),
+            max_attempts: max_attempts.max(1),
+            reply,
+            retry_tx,
+            state: Mutex::new(GroupState {
+                partials: (0..n).map(|_| None).collect(),
+                remaining: n,
+                attempts: vec![0; n],
+                tried: vec![Vec::new(); n],
+                settled: false,
+            }),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Record a dispatch decision (router side), so a retry never lands on
+    /// a device that already ran this shard.
+    pub fn note_dispatch(&self, shard_index: usize, device: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.attempts[shard_index] += 1;
+        if !st.tried[shard_index].contains(&device) {
+            st.tried[shard_index].push(device);
+        }
+    }
+
+    /// Devices this shard has already been dispatched to.
+    pub fn tried_devices(&self, shard_index: usize) -> Vec<usize> {
+        self.state.lock().unwrap().tried[shard_index].clone()
+    }
+
+    /// Has the group already settled (merged or failed atomically)?
+    /// Dispatch paths use this to drop work whose result would be
+    /// discarded anyway.
+    pub fn is_settled(&self) -> bool {
+        self.state.lock().unwrap().settled
+    }
+
+    /// Deliver one shard's partial result. When it is the last one, merge
+    /// deterministically and reply; returns true iff this call settled the
+    /// group.
+    pub fn complete(
+        &self,
+        shard_index: usize,
+        output: Jacobian<C>,
+        device_s: f64,
+        device: usize,
+        counters: &Counters,
+        latency: &LatencyHistogram,
+    ) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.settled {
+            return false;
+        }
+        if st.partials[shard_index].is_none() {
+            st.remaining -= 1;
+        }
+        st.partials[shard_index] = Some(PartialShard { output, device_s });
+        if st.remaining > 0 {
+            return false;
+        }
+        st.settled = true;
+        let mut parts: Vec<PartialMsm<C>> = Vec::with_capacity(self.specs.len());
+        let mut max_s = 0.0f64;
+        let mut min_s = f64::INFINITY;
+        for (i, p) in st.partials.iter().enumerate() {
+            let p = p.as_ref().expect("remaining == 0 implies all partials present");
+            max_s = max_s.max(p.device_s);
+            min_s = min_s.min(p.device_s);
+            parts.push(PartialMsm { index: i, spec: self.specs[i], output: p.output });
+        }
+        drop(st);
+        let output = partial::merge(&mut parts);
+        let skew = if max_s > 0.0 { (max_s - min_s) / max_s } else { 0.0 };
+        counters.record_shard_skew(skew);
+        counters.completed.fetch_add(1, Ordering::Relaxed);
+        let service_s = self.submitted_at.elapsed().as_secs_f64();
+        latency.record_secs(service_s);
+        let _ = self.reply.send(JobResult {
+            id: self.id,
+            output,
+            service_s,
+            // the group's modeled device time is its makespan: the slowest
+            // shard (they run concurrently on distinct devices)
+            device_s: max_s,
+            device,
+            upload_miss: false,
+            error: None,
+        });
+        true
+    }
+
+    /// A shard failed on `device`: request a retry while the dispatch
+    /// budget lasts, otherwise fail the whole group atomically.
+    pub fn fail(
+        group: &Arc<ShardGroup<C>>,
+        shard_index: usize,
+        device: usize,
+        err: &str,
+        counters: &Counters,
+    ) {
+        let retry = {
+            let mut st = group.state.lock().unwrap();
+            if st.settled {
+                return;
+            }
+            if !st.tried[shard_index].contains(&device) {
+                st.tried[shard_index].push(device);
+            }
+            st.attempts[shard_index] < group.max_attempts
+        };
+        if retry {
+            counters.shard_retries.fetch_add(1, Ordering::Relaxed);
+            let sent = group
+                .retry_tx
+                .send(ShardRetry { group: group.clone(), shard_index })
+                .is_ok();
+            if sent {
+                return;
+            }
+            // dispatcher is gone (shutdown) — fall through to atomic failure
+        }
+        group.fail_group(
+            &format!(
+                "shard {shard_index} ({}) failed on device {device}: {err}",
+                group.specs[shard_index].describe()
+            ),
+            counters,
+        );
+    }
+
+    /// Fail the group atomically: one error [`JobResult`] is delivered,
+    /// every not-yet-merged partial is discarded.
+    pub fn fail_group(&self, err: &str, counters: &Counters) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.settled {
+                return;
+            }
+            st.settled = true;
+        }
+        counters.shard_group_failures.fetch_add(1, Ordering::Relaxed);
+        counters.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = self.reply.send(JobResult {
+            id: self.id,
+            output: Jacobian::<C>::infinity(),
+            service_s: self.submitted_at.elapsed().as_secs_f64(),
+            device_s: 0.0,
+            device: 0,
+            upload_miss: false,
+            error: Some(format!("shard group failed atomically: {err}")),
+        });
+    }
+}
+
+/// A device slot of an in-process [`ShardPool`]. Cloneable descriptions —
+/// workers materialize nothing; shards execute on scoped threads.
+#[derive(Clone, Debug)]
+pub enum PoolDevice {
+    /// Host CPU, `threads`-way window-parallel fills.
+    Native { threads: usize },
+    /// Bit-exact native compute; per-shard device time comes from the SAB
+    /// model (chunk shards: an (hi−lo)-point MSM; window shards: the
+    /// window fraction of the full MSM).
+    SimFpga { cfg: SabConfig },
+    /// Chaos slot for exercising the retry path: fails the next
+    /// `failures` shards handed to it, then behaves like `Native`.
+    Flaky { failures: Arc<AtomicUsize>, threads: usize },
+}
+
+impl PoolDevice {
+    /// Execute one shard; returns (partial, device seconds).
+    fn run_shard<C: CurveParams>(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+        cfg: &MsmConfig,
+        spec: &ShardSpec,
+    ) -> anyhow::Result<(Jacobian<C>, f64)> {
+        let threads = match self {
+            PoolDevice::Native { threads } | PoolDevice::Flaky { threads, .. } => {
+                (*threads).max(1)
+            }
+            PoolDevice::SimFpga { .. } => msm::parallel::default_threads(),
+        };
+        if let PoolDevice::Flaky { failures, .. } = self {
+            let armed = failures
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                .is_ok();
+            if armed {
+                anyhow::bail!("injected flaky-device fault");
+            }
+        }
+        let sw = Stopwatch::start();
+        let out = partial::execute_shard(
+            Backend::Parallel { threads },
+            points,
+            scalars,
+            cfg,
+            spec,
+        );
+        let wall = sw.secs();
+        let device_s = match self {
+            PoolDevice::SimFpga { cfg: sab } => {
+                // spec window indices live in the job's plan, not the
+                // model's hardware plan — time_shard needs its window count
+                let plan_windows = crate::msm::MsmPlan::for_curve::<C>(cfg).windows;
+                SabModel::new(*sab).time_shard(points.len() as u64, spec, plan_windows)
+            }
+            _ => wall,
+        };
+        Ok((out, device_s))
+    }
+}
+
+/// In-process multi-device MSM executor: shard across every device, retry
+/// failed shards on untried devices, merge deterministically. This is the
+/// sharded path `snark::prover` and `baseline::cpu` submit through when
+/// more than one device is registered.
+pub struct ShardPool<C: CurveParams> {
+    devices: Vec<PoolDevice>,
+    pub policy: ShardPolicy,
+    pub metrics: DeviceMetrics,
+    pub counters: Counters,
+    _curve: PhantomData<C>,
+}
+
+impl<C: CurveParams> ShardPool<C> {
+    pub fn new(devices: Vec<PoolDevice>, policy: ShardPolicy) -> ShardPool<C> {
+        assert!(!devices.is_empty(), "need at least one device");
+        let n = devices.len();
+        ShardPool {
+            devices,
+            policy,
+            metrics: DeviceMetrics::new(n),
+            counters: Counters::default(),
+            _curve: PhantomData,
+        }
+    }
+
+    /// `n` identical native devices (the multi-socket / multi-board CPU
+    /// stand-in), default policy.
+    pub fn native(n: usize, threads_per_device: usize) -> ShardPool<C> {
+        ShardPool::new(
+            (0..n.max(1)).map(|_| PoolDevice::Native { threads: threads_per_device }).collect(),
+            ShardPolicy::default(),
+        )
+    }
+
+    /// `n` identical modeled-FPGA devices.
+    pub fn sim_fpga(n: usize, cfg: SabConfig, policy: ShardPolicy) -> ShardPool<C> {
+        ShardPool::new((0..n.max(1)).map(|_| PoolDevice::SimFpga { cfg }).collect(), policy)
+    }
+
+    pub fn with_policy(mut self, policy: ShardPolicy) -> ShardPool<C> {
+        self.policy = policy;
+        self
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Execute one MSM across the pool. Single-device pools run directly;
+    /// otherwise the job shards per the policy, failed shards retry on
+    /// devices they have not tried, and the group fails atomically (Err)
+    /// when any shard exhausts the device set.
+    pub fn execute(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+        cfg: &MsmConfig,
+    ) -> anyhow::Result<Jacobian<C>> {
+        assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+        let m = points.len();
+        if self.devices.len() == 1 || m < 2 {
+            let spec = ShardSpec::PointChunk { lo: 0, hi: m };
+            let (out, secs) = self.devices[0].run_shard(points, scalars, cfg, &spec)?;
+            self.metrics.lane(0).record(secs, false);
+            return Ok(out);
+        }
+        let specs = self.policy.plan::<C>(m, cfg, self.devices.len());
+        let n = specs.len();
+        self.counters.shard_groups.fetch_add(1, Ordering::Relaxed);
+
+        let mut assignment: Vec<usize> = (0..n).map(|i| i % self.devices.len()).collect();
+        let mut tried: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut results: Vec<Option<PartialMsm<C>>> = (0..n).map(|_| None).collect();
+        let mut shard_secs = vec![0.0f64; n];
+
+        loop {
+            let pending: Vec<usize> =
+                (0..n).filter(|&i| results[i].is_none()).collect();
+            if pending.is_empty() {
+                break;
+            }
+            let wave: Mutex<Vec<(usize, anyhow::Result<(Jacobian<C>, f64)>, usize)>> =
+                Mutex::new(Vec::with_capacity(pending.len()));
+            std::thread::scope(|scope| {
+                for &i in &pending {
+                    let dev_idx = assignment[i];
+                    let dev = &self.devices[dev_idx];
+                    let spec = specs[i];
+                    let wave = &wave;
+                    scope.spawn(move || {
+                        let r = dev.run_shard::<C>(points, scalars, cfg, &spec);
+                        wave.lock().unwrap().push((i, r, dev_idx));
+                    });
+                }
+            });
+            for (i, r, dev_idx) in wave.into_inner().unwrap() {
+                if !tried[i].contains(&dev_idx) {
+                    tried[i].push(dev_idx);
+                }
+                match r {
+                    Ok((out, secs)) => {
+                        self.metrics.lane(dev_idx).record(secs, true);
+                        shard_secs[i] = secs;
+                        results[i] = Some(PartialMsm { index: i, spec: specs[i], output: out });
+                    }
+                    Err(e) => {
+                        self.metrics.lane(dev_idx).record_failure();
+                        match (0..self.devices.len()).find(|d| !tried[i].contains(d)) {
+                            Some(d) => {
+                                self.counters.shard_retries.fetch_add(1, Ordering::Relaxed);
+                                assignment[i] = d;
+                            }
+                            None => {
+                                self.counters
+                                    .shard_group_failures
+                                    .fetch_add(1, Ordering::Relaxed);
+                                anyhow::bail!(
+                                    "shard group failed atomically: shard {i} ({}) failed on \
+                                     every device (last: {e:#})",
+                                    specs[i].describe()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let max_s = shard_secs.iter().copied().fold(0.0f64, f64::max);
+        let min_s = shard_secs.iter().copied().fold(f64::INFINITY, f64::min);
+        self.counters.record_shard_skew(if max_s > 0.0 { (max_s - min_s) / max_s } else { 0.0 });
+        let mut parts: Vec<PartialMsm<C>> = results.into_iter().flatten().collect();
+        Ok(partial::merge(&mut parts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bn254G1};
+    use crate::fpga::CurveId;
+
+    fn workload(m: usize, seed: u64) -> points::MsmWorkload<Bn254G1> {
+        points::workload::<Bn254G1>(m, seed)
+    }
+
+    #[test]
+    fn pool_matches_single_device_both_policies() {
+        let w = workload(257, 7001);
+        let cfg = MsmConfig::default();
+        let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+        for policy in [ShardPolicy::ChunkPoints, ShardPolicy::WindowRange] {
+            let pool = ShardPool::<Bn254G1>::native(3, 1).with_policy(policy);
+            let got = pool.execute(&w.points, &w.scalars, &cfg).unwrap();
+            assert!(got.eq_point(&want), "{policy:?}");
+            assert_eq!(pool.counters.snapshot().shard_groups, 1);
+            // every device lane saw at least one shard
+            assert!(pool.metrics.lanes().iter().all(|l| l.shards.load(Ordering::Relaxed) > 0));
+        }
+    }
+
+    #[test]
+    fn pool_single_device_runs_direct() {
+        let w = workload(64, 7002);
+        let cfg = MsmConfig::default();
+        let pool = ShardPool::<Bn254G1>::native(1, 2);
+        let got = pool.execute(&w.points, &w.scalars, &cfg).unwrap();
+        assert!(got.eq_point(&msm::naive::msm(&w.points, &w.scalars)));
+        assert_eq!(pool.counters.snapshot().shard_groups, 0);
+        assert_eq!(pool.metrics.lane(0).jobs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_retries_flaky_device_and_still_merges() {
+        let w = workload(120, 7003);
+        let cfg = MsmConfig::default();
+        let want = msm::naive::msm(&w.points, &w.scalars);
+        let pool = ShardPool::<Bn254G1>::new(
+            vec![
+                PoolDevice::Flaky { failures: Arc::new(AtomicUsize::new(1)), threads: 1 },
+                PoolDevice::Native { threads: 1 },
+            ],
+            ShardPolicy::ChunkPoints,
+        );
+        let got = pool.execute(&w.points, &w.scalars, &cfg).unwrap();
+        assert!(got.eq_point(&want));
+        let snap = pool.counters.snapshot();
+        assert_eq!(snap.shard_retries, 1, "{snap:?}");
+        assert_eq!(snap.shard_group_failures, 0);
+        assert_eq!(pool.metrics.lane(0).failures.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_fails_atomically_when_all_devices_fail() {
+        let w = workload(60, 7004);
+        let cfg = MsmConfig::default();
+        let pool = ShardPool::<Bn254G1>::new(
+            vec![
+                PoolDevice::Flaky { failures: Arc::new(AtomicUsize::new(99)), threads: 1 },
+                PoolDevice::Flaky { failures: Arc::new(AtomicUsize::new(99)), threads: 1 },
+            ],
+            ShardPolicy::ChunkPoints,
+        );
+        let err = pool.execute(&w.points, &w.scalars, &cfg).unwrap_err();
+        assert!(format!("{err}").contains("failed atomically"), "{err}");
+        assert_eq!(pool.counters.snapshot().shard_group_failures, 1);
+    }
+
+    #[test]
+    fn sim_fpga_pool_reports_modeled_shard_time() {
+        let w = workload(256, 7005);
+        let cfg = MsmConfig::default();
+        let pool = ShardPool::<Bn254G1>::sim_fpga(
+            2,
+            SabConfig::paper(CurveId::Bn254, 2),
+            ShardPolicy::ChunkPoints,
+        );
+        let got = pool.execute(&w.points, &w.scalars, &cfg).unwrap();
+        assert!(got.eq_point(&msm::naive::msm(&w.points, &w.scalars)));
+        // modeled device time per shard ≈ call overhead ≥ 5 ms each
+        assert!(pool.metrics.lane(0).busy_secs() > 0.004);
+        assert!(pool.metrics.lane(1).busy_secs() > 0.004);
+    }
+}

@@ -20,6 +20,7 @@ use super::resources::{DesignVariant, NumberForm, ResourceModel};
 use super::sps::SpsModel;
 use super::uda::UdaPipe;
 use super::CurveId;
+use crate::msm::partial::{ShardPolicy, ShardSpec};
 use crate::msm::plan::{MsmConfig, MsmPlan, Reduction, Slicing};
 
 /// One accelerator build.
@@ -197,6 +198,78 @@ impl SabModel {
     pub fn sweep(&self, sizes: &[u64]) -> Vec<(u64, MsmTiming)> {
         sizes.iter().map(|&m| (m, self.time_msm(m))).collect()
     }
+
+    /// Host-side merge tail of a `d`-kernel sharded MSM: d − 1 serially
+    /// dependent point additions, each paying a full pipeline latency.
+    fn merge_seconds(&self, d: u32) -> f64 {
+        self.pipe.serial_cycles(u64::from(d.saturating_sub(1))) as f64 / self.fmax_hz
+    }
+
+    /// Modeled device seconds for **one shard** of an m-point sharded MSM.
+    /// `plan_windows` is the window count of the *job's* plan — the plan
+    /// the spec's window indices live in, which need not match this
+    /// model's own hardware plan — so the window fraction stays in [0, 1].
+    /// Window shards scale only the window-dependent phases (fill/stream,
+    /// reduce, combine); the scalar broadcast and call overhead are paid
+    /// whole — the same decomposition [`Self::time_msm_sharded`] uses, so
+    /// the served metrics and the what-if table agree. The single source
+    /// of truth for per-shard device time: both the coordinator's
+    /// sim-FPGA devices and the in-process pool call this.
+    pub fn time_shard(&self, m: u64, spec: &ShardSpec, plan_windows: u32) -> f64 {
+        match *spec {
+            ShardSpec::PointChunk { lo, hi } => self.time_msm((hi - lo) as u64).total_s(),
+            ShardSpec::WindowRange { lo, hi } => {
+                let full = self.time_msm(m);
+                let frac = f64::from(hi - lo) / f64::from(plan_windows.max(1));
+                full.transfer_s
+                    + (full.fill_s.max(full.stream_s) + full.reduce_s + full.combine_s) * frac
+                    + full.overhead_s
+            }
+        }
+    }
+
+    /// End-to-end seconds for one m-point MSM sharded across `devices`
+    /// replicated kernels — the coordinator's multi-device path, modeled
+    /// (§V's scaling argument taken past one board).
+    ///
+    /// * [`ShardPolicy::ChunkPoints`]: each kernel runs an ⌈m/d⌉-point MSM
+    ///   over all windows — scalar transfer, fills *and* DDR streaming all
+    ///   shrink by d; the partials merge with d − 1 serial adds.
+    /// * [`ShardPolicy::WindowRange`]: each kernel sees all m scalars
+    ///   (broadcast transfer, unscaled) but fills/streams/reduces only its
+    ///   ⌈windows/d⌉ window slice.
+    ///
+    /// Chunk sharding therefore scales the stream-bound large-m regime;
+    /// window sharding stops helping once the shared scalar broadcast
+    /// dominates — exactly the trade-off the what-if table shows.
+    pub fn time_msm_sharded(&self, m: u64, devices: u32, policy: ShardPolicy) -> MsmTiming {
+        let d = devices.max(1);
+        if d == 1 {
+            return self.time_msm(m);
+        }
+        match policy {
+            ShardPolicy::ChunkPoints => {
+                let mut t = self.time_msm(m.div_ceil(u64::from(d)));
+                t.combine_s += self.merge_seconds(d);
+                t
+            }
+            ShardPolicy::WindowRange => {
+                let full = self.time_msm(m);
+                let windows = self.cfg.plan().windows.max(1);
+                let shard_windows = windows.div_ceil(d).min(windows);
+                let frac = f64::from(shard_windows) / f64::from(windows);
+                MsmTiming {
+                    transfer_s: full.transfer_s, // scalars broadcast whole
+                    fill_s: full.fill_s * frac,
+                    stream_s: full.stream_s * frac,
+                    reduce_s: full.reduce_s * frac,
+                    combine_s: full.combine_s * frac + self.merge_seconds(d),
+                    overhead_s: full.overhead_s,
+                    stream_bound: full.stream_bound,
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -287,6 +360,60 @@ mod tests {
         // compute has headroom — the UDA is not the bottleneck (§V text:
         // scaling limited by resources, not the point processor)
         assert!(t.fill_s < t.stream_s);
+    }
+
+    #[test]
+    fn sharded_speedup_scales_with_device_count() {
+        // the multi-kernel what-if: more devices, more speedup, for both
+        // policies, at a stream-bound large size
+        let model = bls_s2();
+        let m = 16_000_000;
+        let base = model.time_msm(m).total_s();
+        for policy in [ShardPolicy::ChunkPoints, ShardPolicy::WindowRange] {
+            let mut prev = base;
+            for d in [2u32, 4, 8] {
+                let t = model.time_msm_sharded(m, d, policy).total_s();
+                assert!(t < prev, "{policy:?} d={d}: {t} !< {prev}");
+                prev = t;
+            }
+        }
+        // chunk sharding also scales the scalar transfer; at large m it
+        // must beat window sharding
+        let tc = model.time_msm_sharded(m, 4, ShardPolicy::ChunkPoints).total_s();
+        let tw = model.time_msm_sharded(m, 4, ShardPolicy::WindowRange).total_s();
+        assert!(tc <= tw, "chunk {tc} vs window {tw}");
+        // and 4 devices buy a >2x end-to-end speedup at this size
+        assert!(base / tc > 2.0, "4-device chunk speedup {}", base / tc);
+    }
+
+    #[test]
+    fn time_shard_uses_job_plan_windows() {
+        let model = bls_s2();
+        let m = 100_000;
+        let t = model.time_msm(m);
+        let full = t.total_s();
+        let fixed = t.transfer_s + t.overhead_s;
+        let phases = t.fill_s.max(t.stream_s) + t.reduce_s + t.combine_s;
+        // the job's plan has 32 windows: a 16-window shard pays the whole
+        // broadcast + overhead but half the window-dependent phases — the
+        // same decomposition time_msm_sharded uses
+        let half = model.time_shard(m, &ShardSpec::WindowRange { lo: 0, hi: 16 }, 32);
+        assert!((half - (fixed + 0.5 * phases)).abs() < full * 1e-9, "{half} vs {full}");
+        // the whole range equals the full MSM whatever plan produced it —
+        // the fraction can never exceed 1 (the old bug divided by the
+        // model's own window count instead)
+        let whole = model.time_shard(m, &ShardSpec::WindowRange { lo: 0, hi: 22 }, 22);
+        assert!((whole - full).abs() < full * 1e-9);
+        let chunk = model.time_shard(m, &ShardSpec::PointChunk { lo: 0, hi: 50_000 }, 22);
+        assert!(chunk > 0.0 && chunk < full);
+    }
+
+    #[test]
+    fn sharded_single_device_is_identity() {
+        let model = bls_s2();
+        let a = model.time_msm(100_000).total_s();
+        let b = model.time_msm_sharded(100_000, 1, ShardPolicy::ChunkPoints).total_s();
+        assert!((a - b).abs() < 1e-12);
     }
 
     #[test]

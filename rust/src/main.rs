@@ -4,9 +4,9 @@
 //! ```text
 //! ifzkp msm     --curve bn254|bls12_381 --size N [--backend native|sim|engine] [--threads T]
 //! ifzkp prove   --constraints N
-//! ifzkp serve   [--config serve.toml] [--jobs N] [--size N]
+//! ifzkp serve   [--config serve.toml] [--jobs N] [--size N] [--devices N] [--sharded chunk|window]
 //! ifzkp sim     --curve ... [--size N] [--scaling S]
-//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|all]
+//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|whatif|all]
 //! ifzkp figures [--id 4|5|6|7|8|all]
 //! ifzkp info
 //! ```
@@ -147,26 +147,43 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!(e))?;
         queue_capacity = cfg.get_int("serve", "queue_capacity", 256) as usize;
     }
+    // --sharded chunk|window splits every job across the device set;
+    // --devices N controls the simulated fleet size (default 2).
+    let policy = match args.get("sharded", "").as_str() {
+        "" => None,
+        "chunk" => Some(ifzkp::msm::ShardPolicy::ChunkPoints),
+        "window" => Some(ifzkp::msm::ShardPolicy::WindowRange),
+        other => anyhow::bail!("unknown shard policy {other} (use chunk | window)"),
+    };
+    let n_devices = args.get_usize("devices", 2);
     use ifzkp::coordinator::{Coordinator, CoordinatorConfig, DeviceDesc, PointSetRegistry};
     use std::sync::Arc;
     let mut registry = PointSetRegistry::<Bn254G1>::new();
     let ps = registry.register(points::generate_points_walk::<Bn254G1>(size, 11));
+    let mut devices =
+        vec![DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 30)];
+    while devices.len() < n_devices.max(1) {
+        devices.push(DeviceDesc::<Bn254G1>::native(2));
+    }
     let coord = Coordinator::start(
         CoordinatorConfig { queue_capacity, ..Default::default() },
-        vec![
-            DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 30),
-            DeviceDesc::<Bn254G1>::native(2),
-        ],
+        devices,
         registry,
     );
     let sw = Stopwatch::start();
     let mut rxs = Vec::new();
     for i in 0..jobs {
         let scalars = Arc::new(points::generate_scalars(size, 254, 1000 + i as u64));
-        rxs.push(coord.submit(ps, scalars)?.1);
+        rxs.push(match policy {
+            Some(p) => coord.submit_sharded(ps, scalars, p)?.1,
+            None => coord.submit(ps, scalars)?.1,
+        });
     }
+    let mut failed = 0usize;
     for rx in rxs {
-        rx.recv()?;
+        if rx.recv()?.error.is_some() {
+            failed += 1;
+        }
     }
     let wall = sw.secs();
     let snap = coord.counters.snapshot();
@@ -178,6 +195,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         100.0 * snap.hit_rate(),
         human_secs(coord.latency.quantile_secs(0.99))
     );
+    if failed > 0 {
+        println!("WARNING: {failed} jobs returned device failures");
+    }
+    if policy.is_some() {
+        println!(
+            "shard groups {} (retries {}, atomic failures {}), mean shard skew {:.1}%",
+            snap.shard_groups,
+            snap.shard_retries,
+            snap.shard_group_failures,
+            100.0 * snap.mean_shard_skew()
+        );
+        let util = coord.device_metrics.utilization();
+        for (i, lane) in coord.device_metrics.lanes().iter().enumerate() {
+            println!(
+                "device {i}: {} shards, {} jobs, busy {} (util {:.2})",
+                lane.shards.load(std::sync::atomic::Ordering::Relaxed),
+                lane.jobs.load(std::sync::atomic::Ordering::Relaxed),
+                human_secs(lane.busy_secs()),
+                util[i]
+            );
+        }
+    }
     coord.shutdown();
     Ok(())
 }
@@ -233,6 +272,9 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
     if all || id == "ablation" {
         println!("{}", tables::ablation_reduction());
         println!("{}", tables::ablation_signed(2048, 20240710));
+    }
+    if all || id == "whatif" {
+        println!("{}", tables::whatif_multi_kernel(args.get_usize("size", 16_000_000) as u64));
     }
     Ok(())
 }

@@ -16,6 +16,10 @@
 //!   of replicated BAM units), [`batch_affine`] (bucket fills with shared
 //!   batch inversion, ≈6M per add — the §Perf/L3 optimization), and
 //!   `runtime::msm_engine` (the PJRT UDA engine, conflict-free batches).
+//! * [`partial`] — shard specs (point chunks, window ranges), window-range
+//!   execution and the deterministic merge: the kernel half of the
+//!   multi-device sharding layer (`coordinator::shard` owns the device
+//!   half).
 //! * [`Backend`]/[`execute`] — the dispatch surface callers
 //!   (`snark::prover`, `baseline::cpu`, `coordinator::devices`) use
 //!   instead of hand-picking implementations; [`msm`] auto-selects both
@@ -30,9 +34,11 @@ pub mod naive;
 pub mod pippenger;
 pub mod parallel;
 pub mod batch_affine;
+pub mod partial;
 
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
+pub use partial::{PartialMsm, ShardPolicy, ShardSpec};
 pub use pippenger::msm as msm_pippenger;
 pub use plan::{MsmConfig, MsmPlan, Reduction, Slicing};
 

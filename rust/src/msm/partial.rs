@@ -1,0 +1,341 @@
+//! Partial MSMs: shard specs, window-range execution, and the
+//! deterministic merge — the kernel-level half of the multi-device
+//! sharding layer (`coordinator::shard` owns the device-level half).
+//!
+//! The paper replicates BAM units *inside* one accelerator (scaling factor
+//! S); SZKP shards the same work across many PEs. This module generalizes
+//! both: one m-point MSM splits into independent shards that any
+//! [`super::Backend`] (or any device) can execute, and the partials merge
+//! back with plain point additions in a fixed order, so the final point is
+//! identical no matter which shard finishes first.
+//!
+//! Two shard shapes exist, mirroring the two ways the sum
+//! `R = Σⱼ 2^(k·j) · Σᵢ dᵢⱼ·Pᵢ` factorizes:
+//!
+//! * [`ShardSpec::PointChunk`] — a contiguous slice of the point/scalar
+//!   stream, all windows. The MSM is linear in its inputs, so
+//!   `msm(P, s) = msm(P[..c], s[..c]) + msm(P[c..], s[c..])`.
+//! * [`ShardSpec::WindowRange`] — all points, a contiguous range of k-bit
+//!   windows, pre-shifted to its global Horner position by
+//!   [`msm_window_range`], so partials still merge by addition alone.
+
+use super::plan::{MsmConfig, MsmPlan};
+use super::Backend;
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+
+/// How a multi-device MSM is split (one spec per shard is derived via
+/// [`ShardPolicy::plan`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ShardPolicy {
+    /// Contiguous chunks of the point/scalar stream, one per device: each
+    /// device streams only its chunk (scalars split across devices), runs
+    /// every window, and the partials add up. Scales both fills and DDR
+    /// streaming — the default.
+    #[default]
+    ChunkPoints,
+    /// Contiguous k-bit window ranges, one per device: every device sees
+    /// all m scalars (broadcast) but fills/reduces only its windows.
+    /// Requires every shard to run the *same* [`MsmConfig`] or the window
+    /// boundaries disagree.
+    WindowRange,
+}
+
+impl ShardPolicy {
+    /// Shard an m-point MSM under `cfg` into at most `shards` specs
+    /// (fewer when there is not enough work to split).
+    pub fn plan<C: CurveParams>(&self, m: usize, cfg: &MsmConfig, shards: usize) -> Vec<ShardSpec> {
+        match self {
+            ShardPolicy::ChunkPoints => chunk_specs(m, shards),
+            ShardPolicy::WindowRange => {
+                window_specs(MsmPlan::for_curve::<C>(cfg).windows, shards)
+            }
+        }
+    }
+}
+
+/// The slice of one MSM a single shard computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardSpec {
+    /// Full windows over `points[lo..hi]` (scalars sliced identically).
+    PointChunk { lo: usize, hi: usize },
+    /// Windows `[lo, hi)` over all points, pre-shifted to global position.
+    WindowRange { lo: u32, hi: u32 },
+}
+
+impl ShardSpec {
+    /// Number of points the shard streams (its device-load proxy).
+    pub fn points(&self, m: usize) -> usize {
+        match *self {
+            ShardSpec::PointChunk { lo, hi } => hi - lo,
+            ShardSpec::WindowRange { .. } => m,
+        }
+    }
+
+    /// Human-readable form for logs and error messages.
+    pub fn describe(&self) -> String {
+        match *self {
+            ShardSpec::PointChunk { lo, hi } => format!("points[{lo}..{hi}]"),
+            ShardSpec::WindowRange { lo, hi } => format!("windows[{lo}..{hi})"),
+        }
+    }
+}
+
+/// Split an m-point MSM into at most `shards` contiguous point chunks.
+/// Chunk sizes differ by at most one point; empty chunks are never
+/// emitted (so `shards > m` yields `m` one-point chunks).
+pub fn chunk_specs(m: usize, shards: usize) -> Vec<ShardSpec> {
+    let shards = shards.clamp(1, m.max(1));
+    let base = m / shards;
+    let extra = m % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    for i in 0..shards {
+        let len = base + usize::from(i < extra);
+        out.push(ShardSpec::PointChunk { lo, hi: lo + len });
+        lo += len;
+    }
+    out
+}
+
+/// Split a plan's `windows` k-bit windows into at most `shards` contiguous
+/// ranges (sizes differ by at most one window; never empty).
+pub fn window_specs(windows: u32, shards: usize) -> Vec<ShardSpec> {
+    let shards = (shards.max(1) as u32).min(windows.max(1));
+    let base = windows / shards;
+    let extra = windows % shards;
+    let mut out = Vec::with_capacity(shards as usize);
+    let mut lo = 0u32;
+    for i in 0..shards {
+        let len = base + u32::from(i < extra);
+        out.push(ShardSpec::WindowRange { lo, hi: lo + len });
+        lo += len;
+    }
+    out
+}
+
+/// Execute windows `[lo, hi)` of the plan over all points, returning the
+/// partial already shifted to its global Horner position
+/// (`Σ_{j∈[lo,hi)} 2^(k·j)·Wⱼ`), so window-range partials merge by plain
+/// point addition.
+pub fn msm_window_range<C: CurveParams>(
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+    lo: u32,
+    hi: u32,
+) -> Jacobian<C> {
+    assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    assert!(lo <= hi && hi <= plan.windows, "window range [{lo}, {hi}) outside plan");
+    let mut acc = Jacobian::<C>::infinity();
+    for j in (lo..hi).rev() {
+        for _ in 0..plan.window_bits {
+            acc = acc.double();
+        }
+        let w = plan.reduce(&plan.fill_window(points, scalars, j));
+        acc = acc.add(&w);
+    }
+    // shift the range result to its global position: k·lo doublings
+    for _ in 0..(plan.window_bits * lo) {
+        acc = acc.double();
+    }
+    acc
+}
+
+/// [`msm_window_range`] with the range's windows fanned out across OS
+/// threads (the same window-level parallelism `super::parallel` uses for
+/// whole MSMs). Identical output to the serial form — the Horner combine
+/// runs in window order either way.
+pub fn msm_window_range_threaded<C: CurveParams>(
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+    lo: u32,
+    hi: u32,
+    threads: usize,
+) -> Jacobian<C> {
+    let threads = threads.max(1);
+    let count = hi.saturating_sub(lo) as usize;
+    if threads == 1 || count <= 1 {
+        return msm_window_range(points, scalars, cfg, lo, hi);
+    }
+    assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    assert!(hi <= plan.windows, "window range [{lo}, {hi}) outside plan");
+    let mut window_results = vec![Jacobian::<C>::infinity(); count];
+    std::thread::scope(|scope| {
+        let per = count.div_ceil(threads);
+        for (t, chunk) in window_results.chunks_mut(per).enumerate() {
+            let first = lo + (t * per) as u32;
+            let plan = &plan;
+            scope.spawn(move || {
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    let j = first + i as u32;
+                    *slot = plan.reduce(&plan.fill_window(points, scalars, j));
+                }
+            });
+        }
+    });
+    let mut acc = Jacobian::<C>::infinity();
+    for wj in window_results.iter().rev() {
+        for _ in 0..plan.window_bits {
+            acc = acc.double();
+        }
+        acc = acc.add(wj);
+    }
+    for _ in 0..(plan.window_bits * lo) {
+        acc = acc.double();
+    }
+    acc
+}
+
+/// Execute one shard. Point chunks run through the full backend dispatch;
+/// window ranges run the shared plan directly — serially, or window-
+/// parallel when the backend is a threaded one (every backend agrees with
+/// the plan bit-exactly, so the merge stays backend-independent).
+pub fn execute_shard<C: CurveParams>(
+    backend: Backend,
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+    spec: &ShardSpec,
+) -> Jacobian<C> {
+    match *spec {
+        ShardSpec::PointChunk { lo, hi } => {
+            super::execute(backend, &points[lo..hi], &scalars[lo..hi], cfg)
+        }
+        ShardSpec::WindowRange { lo, hi } => {
+            let threads = match backend {
+                Backend::Parallel { threads } | Backend::BatchAffineParallel { threads } => {
+                    threads
+                }
+                _ => 1,
+            };
+            msm_window_range_threaded(points, scalars, cfg, lo, hi, threads)
+        }
+    }
+}
+
+/// One shard's output, tagged for the deterministic merge.
+#[derive(Clone, Copy, Debug)]
+pub struct PartialMsm<C: CurveParams> {
+    /// Position in the shard plan (the merge orders by this).
+    pub index: usize,
+    pub spec: ShardSpec,
+    pub output: Jacobian<C>,
+}
+
+/// Deterministic reduce: partials are summed in shard-index order, so the
+/// merged point — coordinates included, not just the projective class —
+/// never depends on which device finished first.
+pub fn merge<C: CurveParams>(partials: &mut [PartialMsm<C>]) -> Jacobian<C> {
+    partials.sort_by_key(|p| p.index);
+    let mut acc = Jacobian::<C>::infinity();
+    for p in partials.iter() {
+        acc = acc.add(&p.output);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bn254G1};
+    use crate::msm::{self, Reduction};
+
+    #[test]
+    fn chunk_specs_cover_exactly() {
+        for (m, n) in [(10usize, 3usize), (7, 7), (5, 9), (64, 4), (1, 1)] {
+            let specs = chunk_specs(m, n);
+            assert!(specs.len() <= n && !specs.is_empty());
+            let mut next = 0usize;
+            for s in &specs {
+                match *s {
+                    ShardSpec::PointChunk { lo, hi } => {
+                        assert_eq!(lo, next);
+                        assert!(hi > lo, "empty chunk in {specs:?}");
+                        next = hi;
+                    }
+                    _ => panic!("chunk plan emitted a window spec"),
+                }
+            }
+            assert_eq!(next, m);
+        }
+    }
+
+    #[test]
+    fn window_specs_cover_exactly() {
+        for (w, n) in [(22u32, 4usize), (22, 30), (1, 3), (8, 8)] {
+            let specs = window_specs(w, n);
+            let mut next = 0u32;
+            for s in &specs {
+                match *s {
+                    ShardSpec::WindowRange { lo, hi } => {
+                        assert_eq!(lo, next);
+                        assert!(hi > lo);
+                        next = hi;
+                    }
+                    _ => panic!("window plan emitted a chunk spec"),
+                }
+            }
+            assert_eq!(next, w);
+        }
+    }
+
+    #[test]
+    fn full_window_range_equals_pippenger() {
+        let w = points::workload::<Bn254G1>(90, 901);
+        let cfg = MsmConfig::new(8, Reduction::Recursive { k2: 3 });
+        let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        let want = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+        let got = msm_window_range(&w.points, &w.scalars, &cfg, 0, plan.windows);
+        assert!(got.eq_point(&want));
+    }
+
+    #[test]
+    fn threaded_window_range_matches_serial() {
+        let w = points::workload::<Bn254G1>(80, 903);
+        let cfg = MsmConfig::new(7, Reduction::RunningSum);
+        let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        let (lo, hi) = (1, plan.windows - 1);
+        let serial = msm_window_range(&w.points, &w.scalars, &cfg, lo, hi);
+        for threads in [2usize, 4, 9] {
+            let par = msm_window_range_threaded(&w.points, &w.scalars, &cfg, lo, hi, threads);
+            assert!(par.eq_point(&serial), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn merged_shards_equal_whole_msm_both_shapes() {
+        let w = points::workload::<Bn254G1>(70, 902);
+        let cfg = MsmConfig::default();
+        let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+        let windows = MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+        for specs in [chunk_specs(70, 3), window_specs(windows, 3)] {
+            let mut parts: Vec<PartialMsm<Bn254G1>> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| PartialMsm {
+                    index: i,
+                    spec: *s,
+                    output: execute_shard(Backend::Pippenger, &w.points, &w.scalars, &cfg, s),
+                })
+                .collect();
+            parts.reverse(); // arrival order must not matter
+            assert!(merge(&mut parts).eq_point(&want), "{specs:?}");
+        }
+    }
+
+    #[test]
+    fn policy_plans_respect_device_count() {
+        let cfg = MsmConfig::default();
+        let chunk = ShardPolicy::ChunkPoints.plan::<Bn254G1>(1000, &cfg, 4);
+        assert_eq!(chunk.len(), 4);
+        let win = ShardPolicy::WindowRange.plan::<Bn254G1>(1000, &cfg, 4);
+        assert_eq!(win.len(), 4);
+        // more devices than windows: clamp, never emit empty shards
+        let win = ShardPolicy::WindowRange.plan::<Bn254G1>(1000, &cfg, 64);
+        let windows = MsmPlan::for_curve::<Bn254G1>(&cfg).windows as usize;
+        assert_eq!(win.len(), windows.min(64));
+    }
+}

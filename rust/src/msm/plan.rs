@@ -27,13 +27,15 @@ use super::signed;
 use crate::ec::{scalar, Affine, CurveParams, Jacobian, ScalarLimbs};
 
 /// Digit encoding for scalar slices.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Slicing {
     /// Classic Pippenger: digits in [0, 2^k), 2^k − 1 live buckets.
     Unsigned,
     /// Signed digits in [−2^(k−1), 2^(k−1)): negative digits add −P, so
     /// only 2^(k−1) live buckets — half the memory, half the running-sum
-    /// chain. Needs k ≥ 2.
+    /// chain. Needs k ≥ 2. The crate default: the default window (k = 12)
+    /// is well past the k ≥ 4 threshold of [`Slicing::auto`].
+    #[default]
     Signed,
 }
 
@@ -47,13 +49,6 @@ impl Slicing {
         } else {
             Slicing::Unsigned
         }
-    }
-}
-
-impl Default for Slicing {
-    fn default() -> Self {
-        // the crate default window (k = 12) is well past the k ≥ 4 threshold
-        Slicing::Signed
     }
 }
 

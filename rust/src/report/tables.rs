@@ -9,7 +9,7 @@ use crate::fpga::{
     power, resources::TABLE_V_VARIANTS, CurveId, DesignVariant, NumberForm, ResourceModel,
     SabConfig, SabModel,
 };
-use crate::msm::{self, pippenger, MsmConfig, MsmPlan, Reduction, Slicing};
+use crate::msm::{self, pippenger, MsmConfig, MsmPlan, Reduction, ShardPolicy, Slicing};
 use crate::snark::{circuits, prover::Prover, setup::Crs};
 
 /// Table I — prover profiling (measured on this host vs paper).
@@ -403,6 +403,39 @@ pub fn ablation_signed(m: usize, seed: u64) -> String {
     )
 }
 
+/// What-if (beyond the paper, the coordinator's multi-device path
+/// modeled): one m-point MSM sharded across replicated kernels. Chunk
+/// sharding splits the point/scalar stream per kernel; window sharding
+/// broadcasts the scalars and splits the k-bit window ranges. Speedups
+/// are against the single-kernel build of the same curve.
+pub fn whatif_multi_kernel(m: u64) -> String {
+    let mut rows = Vec::new();
+    for curve in [CurveId::Bn254, CurveId::Bls12381] {
+        let model = SabModel::new(SabConfig::paper(curve, 2));
+        let base = model.time_msm(m).total_s();
+        for d in [1u32, 2, 4, 8] {
+            let tc = model.time_msm_sharded(m, d, ShardPolicy::ChunkPoints).total_s();
+            let tw = model.time_msm_sharded(m, d, ShardPolicy::WindowRange).total_s();
+            rows.push(vec![
+                curve.name().into(),
+                format!("{d}"),
+                format!("{tc:.3}"),
+                format!("{:.2}x", base / tc),
+                format!("{tw:.3}"),
+                format!("{:.2}x", base / tw),
+            ]);
+        }
+    }
+    ascii_table(
+        &format!(
+            "What-if: multi-kernel sharded MSM, m = {} (modeled seconds; speedup vs 1 kernel)",
+            crate::util::human_count(m)
+        ),
+        &["curve", "kernels", "chunk t", "chunk speedup", "window t", "window speedup"],
+        &rows,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,6 +502,33 @@ mod tests {
         assert_eq!(serial.len(), 2, "{t}");
         let ratio = serial[0] / serial[1];
         assert!((1.9..=2.0).contains(&ratio), "serial chain ratio {ratio}\n{t}");
+    }
+
+    #[test]
+    fn whatif_multi_kernel_speedup_scales_with_devices() {
+        let t = whatif_multi_kernel(16_000_000);
+        assert!(t.contains("kernels"));
+        // pull the chunk-speedup column per curve: must increase with the
+        // kernel count and exceed 2x by 4 kernels
+        let mut per_curve: Vec<Vec<f64>> = Vec::new();
+        for line in t.lines() {
+            let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+            if cells.len() > 6 && (cells[1] == "BN128" || cells[1] == "BLS12-381") {
+                if cells[2] == "1" {
+                    per_curve.push(Vec::new());
+                }
+                let x: f64 = cells[4].trim_end_matches('x').parse().unwrap();
+                per_curve.last_mut().unwrap().push(x);
+            }
+        }
+        assert_eq!(per_curve.len(), 2, "{t}");
+        for speedups in &per_curve {
+            assert_eq!(speedups.len(), 4, "{t}");
+            for w in speedups.windows(2) {
+                assert!(w[1] > w[0], "speedup not scaling: {speedups:?}");
+            }
+            assert!(speedups[2] > 2.0, "4-kernel speedup too low: {speedups:?}");
+        }
     }
 
     #[test]

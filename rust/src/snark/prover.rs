@@ -12,10 +12,12 @@
 use super::qap;
 use super::r1cs::ConstraintSystem;
 use super::setup::Crs;
-use crate::ec::{CurveParams, Jacobian, ScalarLimbs};
+use crate::coordinator::shard::ShardPool;
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 use crate::ff::{Field, FieldParams, Fp};
 use crate::msm::{self, Backend, MsmConfig};
 use crate::util::stopwatch::Profiler;
+use std::sync::Arc;
 
 /// A (structurally) Groth16-like proof.
 #[derive(Debug)]
@@ -38,11 +40,19 @@ pub struct ProfileBreakdown {
 /// The prover, bound to a curve family. All five MSMs route through the
 /// shared kernel dispatch ([`msm::execute`]) — pick the executor with
 /// [`Self::with_backend`] (serial Pippenger by default so the Table I
-/// profile measures single-thread phase shares, as the paper's does).
+/// profile measures single-thread phase shares, as the paper's does) — or
+/// attach multi-device pools with [`Self::with_pools`]: whenever a pool
+/// holds more than one device, its MSMs submit through the sharded path
+/// (split per device, merged deterministically) instead of the local
+/// backend.
 pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     pub crs: Crs<G1, G2>,
     pub msm_cfg: MsmConfig,
     pub backend: Backend,
+    /// Sharded executor for the 𝔾₁ MSMs (A, B1, L, H queries).
+    pub pool_g1: Option<Arc<ShardPool<G1>>>,
+    /// Sharded executor for the 𝔾₂ MSM (B2 query).
+    pub pool_g2: Option<Arc<ShardPool<G2>>>,
     _p: std::marker::PhantomData<P>,
 }
 
@@ -57,6 +67,8 @@ where
             crs,
             msm_cfg: MsmConfig::default(),
             backend: Backend::Pippenger,
+            pool_g1: None,
+            pool_g2: None,
             _p: std::marker::PhantomData,
         }
     }
@@ -65,6 +77,43 @@ where
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
         self
+    }
+
+    /// Attach multi-device pools. MSMs submit through the sharded path
+    /// whenever the relevant pool registers more than one device; a
+    /// single-device pool behaves like the plain backend, and an atomic
+    /// shard-group failure falls back to the local backend (with a
+    /// warning) rather than failing the proof.
+    pub fn with_pools(mut self, g1: Arc<ShardPool<G1>>, g2: Arc<ShardPool<G2>>) -> Self {
+        self.pool_g1 = Some(g1);
+        self.pool_g2 = Some(g2);
+        self
+    }
+
+    fn msm_g1(&self, points: &[Affine<G1>], scalars: &[ScalarLimbs]) -> Jacobian<G1> {
+        if let Some(pool) = &self.pool_g1 {
+            if pool.device_count() > 1 {
+                match pool.execute(points, scalars, &self.msm_cfg) {
+                    Ok(out) => return out,
+                    // an atomic shard-group failure must not kill the
+                    // prover: fall back to the local backend
+                    Err(e) => eprintln!("[WARN] sharded G1 MSM failed, running locally: {e:#}"),
+                }
+            }
+        }
+        msm::execute(self.backend, points, scalars, &self.msm_cfg)
+    }
+
+    fn msm_g2(&self, points: &[Affine<G2>], scalars: &[ScalarLimbs]) -> Jacobian<G2> {
+        if let Some(pool) = &self.pool_g2 {
+            if pool.device_count() > 1 {
+                match pool.execute(points, scalars, &self.msm_cfg) {
+                    Ok(out) => return out,
+                    Err(e) => eprintln!("[WARN] sharded G2 MSM failed, running locally: {e:#}"),
+                }
+            }
+        }
+        msm::execute(self.backend, points, scalars, &self.msm_cfg)
     }
 
     /// Run the prover pipeline over a satisfied constraint system,
@@ -95,36 +144,20 @@ where
         let nv = cs.num_variables();
         assert!(self.crs.a_query.len() >= nv, "CRS smaller than witness");
 
-        // -- msm_g1: A, B1, L, H -------------------------------------------
-        let a_msm = prof.time("msm_g1", || {
-            msm::execute(self.backend, &self.crs.a_query[..nv], &witness_scalars, &self.msm_cfg)
-        });
-        let _b1_msm = prof.time("msm_g1", || {
-            msm::execute(self.backend, &self.crs.b1_query[..nv], &witness_scalars, &self.msm_cfg)
-        });
+        // -- msm_g1: A, B1, L, H (sharded across the pool when present) ----
+        let a_msm = prof.time("msm_g1", || self.msm_g1(&self.crs.a_query[..nv], &witness_scalars));
+        let _b1_msm =
+            prof.time("msm_g1", || self.msm_g1(&self.crs.b1_query[..nv], &witness_scalars));
         let l_start = 1 + cs.num_public;
         let l_msm = prof.time("msm_g1", || {
-            msm::execute(
-                self.backend,
-                &self.crs.l_query[l_start..nv],
-                &witness_scalars[l_start..],
-                &self.msm_cfg,
-            )
+            self.msm_g1(&self.crs.l_query[l_start..nv], &witness_scalars[l_start..])
         });
         let h_len = h_scalars.len().min(self.crs.h_query.len());
-        let h_msm = prof.time("msm_g1", || {
-            msm::execute(
-                self.backend,
-                &self.crs.h_query[..h_len],
-                &h_scalars[..h_len],
-                &self.msm_cfg,
-            )
-        });
+        let h_msm =
+            prof.time("msm_g1", || self.msm_g1(&self.crs.h_query[..h_len], &h_scalars[..h_len]));
 
         // -- msm_g2: B2 -----------------------------------------------------
-        let b2_msm = prof.time("msm_g2", || {
-            msm::execute(self.backend, &self.crs.b2_query[..nv], &witness_scalars, &self.msm_cfg)
-        });
+        let b2_msm = prof.time("msm_g2", || self.msm_g2(&self.crs.b2_query[..nv], &witness_scalars));
 
         // -- other: final assembly -----------------------------------------
         let proof = prof.time("other", || Proof {
@@ -215,6 +248,45 @@ mod tests {
         let (prover, cs) = small_prover();
         let (p1, _) = prover.prove(&cs);
         let prover2 = prover.with_backend(Backend::BatchAffineParallel { threads: 2 });
+        let (p2, _) = prover2.prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
+    }
+
+    #[test]
+    fn proof_identical_with_sharded_pools() {
+        // the multi-device sharded path must be invisible in the output
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        let pool_g1 = Arc::new(ShardPool::<Bn254G1>::native(3, 1));
+        let pool_g2 = Arc::new(ShardPool::<Bn254G2>::native(2, 1));
+        let prover2 = prover.with_pools(pool_g1.clone(), pool_g2.clone());
+        let (p2, _) = prover2.prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
+        // the pools really absorbed the MSMs: 4 G1 (A, B1, L, H), 1 G2 (B2)
+        assert_eq!(pool_g1.counters.snapshot().shard_groups, 4);
+        assert_eq!(pool_g2.counters.snapshot().shard_groups, 1);
+    }
+
+    #[test]
+    fn prover_falls_back_when_pool_fails_atomically() {
+        use crate::coordinator::shard::{PoolDevice, ShardPolicy};
+        use std::sync::atomic::AtomicUsize;
+        let flaky = || PoolDevice::Flaky {
+            failures: Arc::new(AtomicUsize::new(usize::MAX / 2)), // never heals
+            threads: 1,
+        };
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        let prover2 = prover.with_pools(
+            Arc::new(ShardPool::<Bn254G1>::new(vec![flaky(), flaky()], ShardPolicy::ChunkPoints)),
+            Arc::new(ShardPool::<Bn254G2>::new(vec![flaky(), flaky()], ShardPolicy::ChunkPoints)),
+        );
+        // every sharded MSM fails atomically → local-backend fallback, not
+        // a panic — and the proof is unchanged
         let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));

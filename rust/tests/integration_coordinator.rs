@@ -1,12 +1,14 @@
 //! Integration: the coordinator end-to-end — correctness of served results,
-//! affinity behaviour, backpressure, batching, shutdown.
+//! affinity behaviour, backpressure, batching, sharded multi-device
+//! execution (merge determinism, retry, atomic group failure), shutdown.
 
 use ifzkp::coordinator::devices::{DeviceBackend, EngineHolder};
 use ifzkp::coordinator::{Coordinator, CoordinatorConfig, DeviceDesc, PointSetRegistry};
-use ifzkp::coordinator::batcher::BatchPolicy;
+use ifzkp::coordinator::batcher::{BatchPolicy, Batcher};
+use ifzkp::coordinator::request::ShardAssignment;
 use ifzkp::ec::{points, Affine, Bn254G1, Jacobian, ScalarLimbs};
 use ifzkp::fpga::{CurveId, SabConfig};
-use ifzkp::msm::{self, MsmConfig};
+use ifzkp::msm::{self, Backend, MsmConfig, ShardPolicy};
 use std::sync::Arc;
 
 fn registry_with_sets(
@@ -102,6 +104,7 @@ fn backpressure_rejects_when_queue_full() {
         CoordinatorConfig {
             queue_capacity: 2,
             batch: BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_millis(50) },
+            ..Default::default()
         },
         vec![DeviceDesc::<Bn254G1>::native(1)],
         reg,
@@ -239,6 +242,197 @@ fn successful_results_report_ok() {
     assert!(res.error.is_none());
     assert_eq!(coord.counters.snapshot().failed, 0);
     coord.shutdown();
+}
+
+/// Acceptance size: 2^16 with `IFZKP_HEAVY_TESTS=1` (CI runs this in
+/// release mode), a debug-friendly 2^11 otherwise — assertions identical.
+fn sharded_msm_size() -> usize {
+    if std::env::var("IFZKP_HEAVY_TESTS").is_ok() {
+        1 << 16
+    } else {
+        1 << 11
+    }
+}
+
+#[test]
+fn sharded_msm_matches_single_device_execute_both_policies() {
+    let m = sharded_msm_size();
+    let (reg, ids, raw) = registry_with_sets(&[m]);
+    // 4 simulated FPGA devices — the acceptance configuration
+    let devices: Vec<DeviceDesc<Bn254G1>> = (0..4)
+        .map(|_| DeviceDesc::<Bn254G1>::sim_fpga(SabConfig::paper(CurveId::Bn254, 2), 1 << 34))
+        .collect();
+    let cfg = CoordinatorConfig::default();
+    let shard_cfg = cfg.shard_cfg;
+    let coord = Coordinator::start(cfg, devices, reg);
+    let scalars = Arc::new(points::generate_scalars(m, 254, 9001));
+    // the single-device reference: plain msm::execute under the same plan
+    let want = msm::execute(Backend::Parallel { threads: 2 }, &raw[0], &scalars, &shard_cfg);
+
+    for policy in [ShardPolicy::ChunkPoints, ShardPolicy::WindowRange] {
+        let (_, rx) = coord.submit_sharded(ids[0], scalars.clone(), policy).unwrap();
+        let res = rx.recv().expect("sharded job completes");
+        assert!(res.is_ok(), "{policy:?}: {:?}", res.error);
+        assert!(
+            res.output.eq_point(&want),
+            "{policy:?}: sharded result must be bit-identical to msm::execute"
+        );
+        assert!(res.device_s > 0.0, "{policy:?}: group makespan missing");
+    }
+    let snap = coord.counters.snapshot();
+    assert_eq!(snap.shard_groups, 2, "{snap:?}");
+    assert_eq!(snap.completed, 2, "{snap:?}");
+    assert_eq!(snap.shard_group_failures, 0, "{snap:?}");
+    // the fan-out really spread: every device lane executed shards
+    let shards_per_dev: Vec<u64> = coord
+        .device_metrics
+        .lanes()
+        .iter()
+        .map(|l| l.shards.load(std::sync::atomic::Ordering::Relaxed))
+        .collect();
+    assert_eq!(shards_per_dev.iter().sum::<u64>(), 8, "{shards_per_dev:?}");
+    assert!(
+        shards_per_dev.iter().all(|&s| s > 0),
+        "shards must spread across all 4 devices: {shards_per_dev:?}"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn sharded_submit_single_device_falls_back() {
+    let (reg, ids, raw) = registry_with_sets(&[256]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let scalars = Arc::new(points::generate_scalars(256, 254, 9100));
+    let (_, rx) = coord.submit_sharded(ids[0], scalars.clone(), ShardPolicy::ChunkPoints).unwrap();
+    let res = rx.recv().unwrap();
+    assert!(res.is_ok());
+    assert!(res.output.eq_point(&msm::msm(&raw[0], &scalars)));
+    // degraded to the plain path: no shard group was formed
+    assert_eq!(coord.counters.snapshot().shard_groups, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn sharded_group_retries_failed_shard_on_healthy_device() {
+    let (reg, ids, raw) = registry_with_sets(&[512]);
+    // device 0 always fails; device 1 is healthy — the shard landing on 0
+    // must be retried on 1 and the merged result still be exact
+    let failing = DeviceDesc {
+        name: "failing-engine".into(),
+        backend: DeviceBackend::Engine {
+            factory: Box::new(|| Ok(Box::new(FailingEngine) as Box<dyn EngineHolder<Bn254G1>>)),
+        },
+        ddr_capacity: u64::MAX,
+        msm_cfg: MsmConfig::default(),
+    };
+    let cfg = CoordinatorConfig::default();
+    let shard_cfg = cfg.shard_cfg;
+    let coord =
+        Coordinator::start(cfg, vec![failing, DeviceDesc::<Bn254G1>::native(2)], reg);
+    let scalars = Arc::new(points::generate_scalars(512, 254, 9200));
+    let want = msm::execute(Backend::Pippenger, &raw[0], &scalars, &shard_cfg);
+    let (_, rx) = coord.submit_sharded(ids[0], scalars, ShardPolicy::ChunkPoints).unwrap();
+    let res = rx.recv().expect("retried group completes");
+    assert!(res.is_ok(), "group must survive one failing device: {:?}", res.error);
+    assert!(res.output.eq_point(&want));
+    let snap = coord.counters.snapshot();
+    assert!(snap.shard_retries >= 1, "{snap:?}");
+    assert_eq!(snap.shard_group_failures, 0, "{snap:?}");
+    assert_eq!(snap.completed, 1, "{snap:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn sharded_group_fails_atomically_when_every_device_fails() {
+    let (reg, ids, _) = registry_with_sets(&[128]);
+    let mk_failing = || DeviceDesc {
+        name: "failing-engine".into(),
+        backend: DeviceBackend::Engine {
+            factory: Box::new(|| Ok(Box::new(FailingEngine) as Box<dyn EngineHolder<Bn254G1>>)),
+        },
+        ddr_capacity: u64::MAX,
+        msm_cfg: MsmConfig::default(),
+    };
+    let coord =
+        Coordinator::start(CoordinatorConfig::default(), vec![mk_failing(), mk_failing()], reg);
+    let scalars = Arc::new(points::generate_scalars(128, 254, 9300));
+    let (_, rx) = coord.submit_sharded(ids[0], scalars, ShardPolicy::ChunkPoints).unwrap();
+    // atomic failure is *delivered* through JobResult::error, not a
+    // dropped channel
+    let res = rx.recv().expect("atomic failure must be delivered");
+    assert!(!res.is_ok());
+    assert!(res.error.as_deref().unwrap().contains("atomically"), "{:?}", res.error);
+    assert!(res.output.is_infinity());
+    let snap = coord.counters.snapshot();
+    assert_eq!(snap.shard_group_failures, 1, "{snap:?}");
+    assert_eq!(snap.completed, 0, "{snap:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn sharded_metrics_report_utilization_and_skew() {
+    let (reg, ids, _) = registry_with_sets(&[1024]);
+    let devices: Vec<DeviceDesc<Bn254G1>> =
+        (0..3).map(|_| DeviceDesc::<Bn254G1>::native(1)).collect();
+    let coord = Coordinator::start(CoordinatorConfig::default(), devices, reg);
+    for i in 0..3 {
+        let scalars = Arc::new(points::generate_scalars(1024, 254, 9400 + i));
+        let (_, rx) = coord.submit_sharded(ids[0], scalars, ShardPolicy::ChunkPoints).unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let snap = coord.counters.snapshot();
+    assert_eq!(snap.shard_groups, 3);
+    // skew was sampled once per group and stays a valid ratio
+    assert!(snap.mean_shard_skew() >= 0.0 && snap.mean_shard_skew() <= 1.0);
+    let util = coord.device_metrics.utilization();
+    assert_eq!(util.len(), 3);
+    assert!(util.iter().any(|&u| u > 0.0), "some device must show busy time: {util:?}");
+    coord.shutdown();
+}
+
+/// Regression (batcher flush ordering): a shard group must come out of the
+/// batcher in exactly one flush — `max_batch` must not cut it mid-group,
+/// and `expired`/`drain` must never emit a partial group.
+#[test]
+fn batcher_never_splits_a_shard_group_across_flushes() {
+    let policy = BatchPolicy { max_batch: 2, max_wait: std::time::Duration::from_millis(1) };
+    let mut b = Batcher::new(policy);
+    let job = |id: u64, shard: Option<ShardAssignment>| ifzkp::coordinator::MsmJob {
+        id: ifzkp::coordinator::JobId(id),
+        point_set: ifzkp::coordinator::PointSetId(1),
+        scalars: Arc::new(vec![[id, 0, 0, 0]]),
+        submitted_at: std::time::Instant::now(),
+        shard,
+    };
+    // interleave plain jobs with a 5-shard group under max_batch = 2
+    assert!(b.push(job(1, None)).is_none());
+    let mut flushes: Vec<Vec<ifzkp::coordinator::MsmJob>> = Vec::new();
+    for index in 0..4u32 {
+        let pushed = b.push(job(10 + index as u64, Some(ShardAssignment {
+            group: 7,
+            index,
+            total: 5,
+        })));
+        assert!(pushed.is_none(), "group must not flush before member 5 (at {index})");
+        // expiry in between must hold the incomplete group back
+        let late = std::time::Instant::now() + std::time::Duration::from_secs(1);
+        for (_, jobs) in b.expired(late) {
+            assert!(jobs.iter().all(|j| j.shard.is_none()), "expired() split the group");
+            flushes.push(jobs);
+        }
+    }
+    let (_, group_flush) = b
+        .push(job(14, Some(ShardAssignment { group: 7, index: 4, total: 5 })))
+        .expect("complete group flushes");
+    assert_eq!(group_flush.len(), 5, "the whole group in one flush");
+    assert!(group_flush.iter().all(|j| j.shard.map(|s| s.group) == Some(7)));
+    for jobs in b.drain() {
+        assert!(jobs.1.iter().all(|j| j.shard.is_none()), "no group remnants after its flush");
+    }
 }
 
 #[test]

@@ -6,6 +6,7 @@ use ifzkp::coordinator::pointcache::{Admission, DeviceDdr};
 use ifzkp::coordinator::request::PointSetId;
 use ifzkp::coordinator::router;
 use ifzkp::ec::{points, Bn254G1};
+use ifzkp::msm::partial::{self, PartialMsm};
 use ifzkp::msm::{self, signed, Backend, MsmConfig, MsmPlan, Reduction, Slicing};
 use ifzkp::prop_assert;
 use ifzkp::util::prop::{check_with, Config};
@@ -115,6 +116,52 @@ fn plan_digits_agree_with_bucket_ops() {
                     prop_assert!(b as u64 == d.unsigned_abs(), "bucket index");
                     prop_assert!(negate == (d < 0), "negate flag");
                     prop_assert!(b < plan.bucket_slots(), "bucket in range");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_merges_equal_unsharded_execute() {
+    // the sharding acceptance matrix: chunk- and window-sharded merges are
+    // bit-exact against the unsharded msm::execute result across a
+    // backend × shard-count grid, with shuffled arrival order
+    check_with(Config { cases: 5, seed: 0x5A4D }, "shard merge == execute", |rng| {
+        let m = 16 + rng.below(180) as usize;
+        let k = 4 + rng.below(9) as u32;
+        let slicing = if rng.bool() { Slicing::Signed } else { Slicing::Unsigned };
+        let cfg = MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 3 }, slicing };
+        let w = points::workload::<Bn254G1>(m, rng.next_u64());
+        let windows = MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+        for backend in [
+            Backend::Pippenger,
+            Backend::Parallel { threads: 1 + rng.below(4) as usize },
+            Backend::BatchAffine,
+        ] {
+            let want = msm::execute(backend, &w.points, &w.scalars, &cfg);
+            for shards in [1usize, 2, 3, 5] {
+                for specs in
+                    [partial::chunk_specs(m, shards), partial::window_specs(windows, shards)]
+                {
+                    let mut parts: Vec<PartialMsm<Bn254G1>> = specs
+                        .iter()
+                        .enumerate()
+                        .map(|(i, s)| PartialMsm {
+                            index: i,
+                            spec: *s,
+                            output: partial::execute_shard(
+                                backend, &w.points, &w.scalars, &cfg, s,
+                            ),
+                        })
+                        .collect();
+                    parts.reverse(); // completion order must not matter
+                    let got = partial::merge(&mut parts);
+                    prop_assert!(
+                        got.eq_point(&want),
+                        "m={m} k={k} {slicing:?} {backend:?} shards={shards} {specs:?}"
+                    );
                 }
             }
         }
