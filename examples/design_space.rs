@@ -114,6 +114,14 @@ fn main() {
                 ..SabConfig::paper_signed(CurveId::Bls12381, 2)
             },
         ),
+        ("signed + GLV", SabConfig::paper_glv(CurveId::Bls12381, 2)),
+        (
+            "signed + GLV run-sum",
+            SabConfig {
+                reduction: ReductionKind::RunningSum,
+                ..SabConfig::paper_glv(CurveId::Bls12381, 2)
+            },
+        ),
     ] {
         let plan = cfg.plan();
         rows.push(vec![
@@ -127,8 +135,8 @@ fn main() {
     println!(
         "{}",
         ascii_table(
-            "Signed-digit buckets (BLS12-381 S=2): half the buckets, half the serial chain",
-            &["slicing", "buckets/window", "windows", "t(100K)", "t(16M)"],
+            "Signed digits + GLV (BLS12-381 S=2): buckets halve, then window passes halve",
+            &["decomposition", "buckets/window", "windows", "t(100K)", "t(16M)"],
             &rows,
         )
     );

@@ -133,7 +133,12 @@ fn main() {
     let mut signed_cmp: Vec<(Slicing, Jacobian<Bn254G1>, u64, u64, f64)> = Vec::new();
     for slicing in [Slicing::Unsigned, Slicing::Signed] {
         let w = points::workload::<Bn254G1>(msm_m, 3);
-        let cfg = MsmConfig { window_bits: 12, reduction: Reduction::RunningSum, slicing };
+        let cfg = MsmConfig {
+            window_bits: 12,
+            reduction: Reduction::RunningSum,
+            slicing,
+            ..Default::default()
+        };
         let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
         let sw = Stopwatch::start();
         let (out, cost) = pippenger::msm_with_cost(&w.points, &w.scalars, &cfg);
@@ -155,6 +160,35 @@ fn main() {
         signed_cmp[0].2 as f64 / signed_cmp[1].2 as f64,
         signed_cmp[0].3 as f64 / signed_cmp[1].3 as f64,
     );
+
+    // GLV endomorphism split vs full-width scalars (both k=12, IS-RBAM):
+    // half the window passes against the doubled (P, phi(P)) set — total
+    // fills unchanged, the serial reduce chain and combine halve again
+    {
+        let w = points::workload::<Bn254G1>(msm_m, 3);
+        let cfg = MsmConfig::new(12, Reduction::Recursive { k2: 6 });
+        let sw = Stopwatch::start();
+        let full = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+        let t_full = sw.secs();
+        let glv_cfg = cfg.glv();
+        let sw = Stopwatch::start();
+        let glv = msm::msm_pippenger(&w.points, &w.scalars, &glv_cfg);
+        let t_glv = sw.secs();
+        assert!(glv.eq_point(&full), "GLV result != full-width result");
+        let pf = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        let pg = MsmPlan::for_curve::<Bn254G1>(&glv_cfg);
+        println!(
+            "BN254 MSM {msm_label} GLV (k=12, IS-RBAM)           {:>12.1} ns/point  (vs full {:.1}; {:.2}x; windows {} -> {}, serial chain {} -> {})",
+            t_glv * 1e9 / msm_m as f64,
+            t_full * 1e9 / msm_m as f64,
+            t_full / t_glv,
+            pf.windows,
+            pg.windows,
+            pf.serial_reduce_ops(),
+            pg.serial_reduce_ops(),
+        );
+        results.record(&format!("BN254 MSM {msm_label} glv ns/point"), t_glv * 1e9 / msm_m as f64);
+    }
 
     // batch-affine fills (the §Perf/L3 optimization) vs Jacobian fills
     for (label, k) in [("k=8 fill-heavy", 8u32), ("k=12 hw window", 12)] {

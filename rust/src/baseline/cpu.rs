@@ -32,6 +32,7 @@ pub struct CpuBaseline {
 }
 
 impl CpuBaseline {
+    /// The published operating points of a curve's libsnark baseline.
     pub fn for_curve(curve: CurveId) -> CpuBaseline {
         match curve {
             CurveId::Bn254 => CpuBaseline {
@@ -70,20 +71,34 @@ impl CpuBaseline {
 /// A timed local measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct CpuMeasurement {
+    /// MSM size measured.
     pub m: u64,
+    /// Wall-clock seconds.
     pub seconds: f64,
+    /// Millions of points per second.
     pub mpps: f64,
+}
+
+/// Measure one MSM backend under an explicit plan config (the GLV
+/// ablations pass `MsmConfig::default().glv()` here; everything else goes
+/// through [`measure_backend`]).
+pub fn measure_backend_with<C: CurveParams>(
+    m: usize,
+    seed: u64,
+    backend: Backend,
+    cfg: &MsmConfig,
+) -> CpuMeasurement {
+    let w = points::workload::<C>(m, seed);
+    let sw = Stopwatch::start();
+    let out = msm::execute(backend, &w.points, &w.scalars, cfg);
+    let seconds = sw.secs();
+    std::hint::black_box(out);
+    CpuMeasurement { m: m as u64, seconds, mpps: m as f64 / seconds / 1e6 }
 }
 
 /// Measure one MSM backend on the local host with the default config.
 pub fn measure_backend<C: CurveParams>(m: usize, seed: u64, backend: Backend) -> CpuMeasurement {
-    let w = points::workload::<C>(m, seed);
-    let cfg = MsmConfig::default();
-    let sw = Stopwatch::start();
-    let out = msm::execute(backend, &w.points, &w.scalars, &cfg);
-    let seconds = sw.secs();
-    std::hint::black_box(out);
-    CpuMeasurement { m: m as u64, seconds, mpps: m as f64 / seconds / 1e6 }
+    measure_backend_with::<C>(m, seed, backend, &MsmConfig::default())
 }
 
 /// Measure this crate's serial Pippenger on the local host.
@@ -159,6 +174,14 @@ mod tests {
     fn measured_msm_runs_and_reports() {
         let m = measure_serial::<crate::ec::Bn254G1>(2_000, 99);
         assert_eq!(m.m, 2_000);
+        assert!(m.seconds > 0.0 && m.mpps > 0.0);
+    }
+
+    #[test]
+    fn glv_measurement_runs() {
+        let cfg = MsmConfig::default().glv();
+        let m = measure_backend_with::<crate::ec::Bn254G1>(1_000, 99, Backend::Pippenger, &cfg);
+        assert_eq!(m.m, 1_000);
         assert!(m.seconds > 0.0 && m.mpps > 0.0);
     }
 

@@ -71,10 +71,12 @@ impl GpuModel {
         (t0.ln() + f * (t1.ln() - t0.ln())).exp()
     }
 
+    /// Millions of MSM points per second at size m.
     pub fn throughput_mpps(&self, m: u64) -> f64 {
         m as f64 / self.seconds(m) / 1e6
     }
 
+    /// Power-normalized throughput (M-PPS per watt, the Fig. 8 axis).
     pub fn throughput_per_watt(&self, m: u64) -> f64 {
         self.throughput_mpps(m) / self.power_w
     }

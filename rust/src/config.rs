@@ -25,14 +25,20 @@ use std::collections::BTreeMap;
 /// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer (underscore separators allowed).
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string contents, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -40,6 +46,7 @@ impl Value {
         }
     }
 
+    /// The integer, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -47,6 +54,7 @@ impl Value {
         }
     }
 
+    /// The float (integers coerce), if numeric.
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -55,6 +63,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -62,6 +71,7 @@ impl Value {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -73,26 +83,32 @@ impl Value {
 /// section → key → value.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
+    /// All parsed sections (keys before the first `[section]` live in "").
     pub sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 
 impl Config {
+    /// Raw value lookup.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section)?.get(key)
     }
 
+    /// String lookup with a default.
     pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
         self.get(section, key).and_then(Value::as_str).unwrap_or(default)
     }
 
+    /// Integer lookup with a default.
     pub fn get_int(&self, section: &str, key: &str, default: i64) -> i64 {
         self.get(section, key).and_then(Value::as_int).unwrap_or(default)
     }
 
+    /// Float lookup with a default (integers coerce).
     pub fn get_float(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(Value::as_float).unwrap_or(default)
     }
 
+    /// Boolean lookup with a default.
     pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
     }

@@ -19,7 +19,9 @@ use std::time::{Duration, Instant};
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Flush a plain batch at this many jobs.
     pub max_batch: usize,
+    /// Flush once the oldest member has waited this long.
     pub max_wait: Duration,
 }
 
@@ -45,6 +47,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Empty batcher under a policy.
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher { policy, pending: HashMap::new(), oldest: HashMap::new() }
     }
@@ -92,6 +95,7 @@ impl Batcher {
         keys.into_iter().filter_map(|key| self.take(key)).collect()
     }
 
+    /// Jobs currently held across all pending batches.
     pub fn pending_jobs(&self) -> usize {
         self.pending.values().map(Vec::len).sum()
     }

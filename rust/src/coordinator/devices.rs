@@ -25,6 +25,7 @@ use std::sync::Arc;
 /// Thread-local MSM executor built from an [`DeviceBackend::Engine`]
 /// factory (deliberately not `Send`: PJRT state stays on its thread).
 pub trait EngineHolder<C: CurveParams> {
+    /// Run one MSM on the engine.
     fn msm(
         &self,
         points: &[Affine<C>],
@@ -51,23 +52,36 @@ pub type EngineFactory<C> =
 /// Execution backend of one device slot (the movable description).
 pub enum DeviceBackend<C: CurveParams> {
     /// Host CPU, `threads`-way parallel Pippenger.
-    Native { threads: usize },
+    Native {
+        /// OS threads per MSM.
+        threads: usize,
+    },
     /// Modeled FPGA: native compute, virtual (modeled) device time.
-    SimFpga { model: SabModel },
+    SimFpga {
+        /// The accelerator build whose timing is reported.
+        model: SabModel,
+    },
     /// PJRT UDA engine, constructed on the worker thread.
-    Engine { factory: EngineFactory<C> },
+    Engine {
+        /// Deferred constructor (PJRT state is thread-pinned).
+        factory: EngineFactory<C>,
+    },
 }
 
 /// Descriptor of one device (moved into its worker thread).
 pub struct DeviceDesc<C: CurveParams> {
+    /// Display name for logs and metrics.
     pub name: String,
+    /// Where this device's MSMs execute.
     pub backend: DeviceBackend<C>,
     /// DDR byte budget for resident point sets.
     pub ddr_capacity: u64,
+    /// The plan config single (unsharded) jobs run with on this device.
     pub msm_cfg: MsmConfig,
 }
 
 impl<C: CurveParams> DeviceDesc<C> {
+    /// A host-CPU device with `threads`-way window parallelism.
     pub fn native(threads: usize) -> Self {
         DeviceDesc {
             name: format!("cpu{threads}"),
@@ -77,6 +91,7 @@ impl<C: CurveParams> DeviceDesc<C> {
         }
     }
 
+    /// A modeled-FPGA device (bit-exact native compute, modeled timing).
     pub fn sim_fpga(cfg: SabConfig, ddr_capacity: u64) -> Self {
         DeviceDesc {
             name: format!("fpga-{}-s{}", cfg.curve.name(), cfg.scaling),
@@ -120,8 +135,10 @@ impl<C: CurveParams> DeviceDesc<C> {
 
 /// The thread-local runnable form.
 pub struct RunningDevice<C: CurveParams> {
+    /// Display name (copied from the descriptor).
     pub name: String,
     backend: RunningBackend<C>,
+    /// The plan config single jobs run with.
     pub msm_cfg: MsmConfig,
 }
 
@@ -238,10 +255,12 @@ impl<C: CurveParams> Default for PointSetRegistry<C> {
 }
 
 impl<C: CurveParams> PointSetRegistry<C> {
+    /// Empty registry.
     pub fn new() -> Self {
         PointSetRegistry { sets: HashMap::new(), next: 1 }
     }
 
+    /// Register a point set; returns its id.
     pub fn register(&mut self, points: Vec<Affine<C>>) -> PointSetId {
         let id = PointSetId(self.next);
         self.next += 1;
@@ -249,6 +268,7 @@ impl<C: CurveParams> PointSetRegistry<C> {
         id
     }
 
+    /// Shared handle to a registered set.
     pub fn get(&self, id: PointSetId) -> Option<Arc<Vec<Affine<C>>>> {
         self.sets.get(&id).cloned()
     }
@@ -256,6 +276,20 @@ impl<C: CurveParams> PointSetRegistry<C> {
     /// DDR footprint of a set (paper layout: affine coordinates).
     pub fn bytes_of(&self, id: PointSetId) -> u64 {
         self.sets.get(&id).map(|s| s.len() as u64 * C::AFFINE_BYTES).unwrap_or(0)
+    }
+
+    /// DDR footprint of a set under an MSM config: a GLV config on a curve
+    /// with endomorphism parameters keeps the endo-expanded `(P, φ(P))`
+    /// set resident — double the bytes (the residency budget the router
+    /// and point cache must admit against).
+    pub fn bytes_for(&self, id: PointSetId, cfg: &MsmConfig) -> u64 {
+        let active = match cfg.decomposition {
+            crate::msm::Decomposition::Glv if C::glv().is_some() => {
+                crate::msm::Decomposition::Glv
+            }
+            _ => crate::msm::Decomposition::Full,
+        };
+        super::pointcache::resident_bytes(self.bytes_of(id), active)
     }
 }
 
@@ -332,5 +366,15 @@ mod tests {
         assert_eq!(r.get(id).unwrap().len(), 10);
         assert_eq!(r.bytes_of(id), 640);
         assert!(r.get(PointSetId(999)).is_none());
+    }
+
+    #[test]
+    fn registry_glv_footprint_doubles() {
+        let mut r = PointSetRegistry::<Bn254G1>::new();
+        let id = r.register(points::generate_points_walk::<Bn254G1>(10, 206));
+        let cfg = MsmConfig::default();
+        assert_eq!(r.bytes_for(id, &cfg), 640);
+        assert_eq!(r.bytes_for(id, &cfg.glv()), 1280);
+        assert_eq!(r.bytes_for(PointSetId(999), &cfg.glv()), 0);
     }
 }

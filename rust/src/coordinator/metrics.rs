@@ -21,6 +21,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         LatencyHistogram {
             buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
@@ -29,6 +30,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Record one latency sample.
     pub fn record_secs(&self, s: f64) {
         let us = (s * 1e6).max(1.0) as u64;
         let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
@@ -37,10 +39,12 @@ impl LatencyHistogram {
         self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency over all samples (0 when empty).
     pub fn mean_secs(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -84,6 +88,7 @@ pub struct DeviceLane {
 }
 
 impl DeviceLane {
+    /// Record one successful execution and its device time.
     pub fn record(&self, device_secs: f64, is_shard: bool) {
         if is_shard {
             self.shards.fetch_add(1, Ordering::Relaxed);
@@ -93,10 +98,12 @@ impl DeviceLane {
         self.busy_us.fetch_add((device_secs.max(0.0) * 1e6) as u64, Ordering::Relaxed);
     }
 
+    /// Record one failed execution.
     pub fn record_failure(&self) {
         self.failures.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Total device-busy seconds absorbed by the lane.
     pub fn busy_secs(&self) -> f64 {
         self.busy_us.load(Ordering::Relaxed) as f64 / 1e6
     }
@@ -109,6 +116,7 @@ pub struct DeviceMetrics {
 }
 
 impl DeviceMetrics {
+    /// Fresh lanes for a fixed device count.
     pub fn new(devices: usize) -> DeviceMetrics {
         DeviceMetrics {
             lanes: (0..devices).map(|_| DeviceLane::default()).collect(),
@@ -116,14 +124,17 @@ impl DeviceMetrics {
         }
     }
 
+    /// Number of lanes.
     pub fn device_count(&self) -> usize {
         self.lanes.len()
     }
 
+    /// One device's lane.
     pub fn lane(&self, device: usize) -> &DeviceLane {
         &self.lanes[device]
     }
 
+    /// All lanes, device-index order.
     pub fn lanes(&self) -> &[DeviceLane] {
         &self.lanes
     }
@@ -157,14 +168,20 @@ impl DeviceMetrics {
 /// Coordinator-wide counters.
 #[derive(Default)]
 pub struct Counters {
+    /// Jobs accepted at the ingress.
     pub submitted: AtomicU64,
+    /// Jobs (and merged shard groups) completed successfully.
     pub completed: AtomicU64,
     /// Jobs whose device `execute` returned an error (the error result is
     /// still delivered to the caller — see `request::JobResult::error`).
     pub failed: AtomicU64,
+    /// Jobs refused at the ingress (backpressure) or unroutable batches.
     pub rejected: AtomicU64,
+    /// Batches routed to a device already holding the point set.
     pub affinity_hits: AtomicU64,
+    /// Batches that forced a point-set upload first.
     pub affinity_misses: AtomicU64,
+    /// Total bytes uploaded to device DDR.
     pub uploads_bytes: AtomicU64,
     /// Shard groups dispatched (one per sharded job reaching the devices).
     pub shard_groups: AtomicU64,
@@ -187,6 +204,7 @@ impl Counters {
         self.skew_samples.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Consistent-enough plain-data copy of all counters.
     pub fn snapshot(&self) -> CounterSnapshot {
         let samples = self.skew_samples.load(Ordering::Relaxed);
         CounterSnapshot {
@@ -212,21 +230,32 @@ impl Counters {
 /// Plain-data snapshot.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
+    /// Jobs accepted at the ingress.
     pub submitted: u64,
+    /// Jobs (and merged shard groups) completed successfully.
     pub completed: u64,
+    /// Jobs delivered with a device-failure error.
     pub failed: u64,
+    /// Jobs refused at the ingress or unroutable.
     pub rejected: u64,
+    /// Affinity-routing hits.
     pub affinity_hits: u64,
+    /// Affinity-routing misses (uploads).
     pub affinity_misses: u64,
+    /// Total bytes uploaded to device DDR.
     pub uploads_bytes: u64,
+    /// Shard groups dispatched.
     pub shard_groups: u64,
+    /// Shard re-dispatches after device failures.
     pub shard_retries: u64,
+    /// Atomically failed shard groups.
     pub shard_group_failures: u64,
     /// Mean shard skew across completed groups, in permille.
     pub mean_shard_skew_permille: u64,
 }
 
 impl CounterSnapshot {
+    /// Affinity hit rate over all routed batches (0 when none routed).
     pub fn hit_rate(&self) -> f64 {
         let total = self.affinity_hits + self.affinity_misses;
         if total == 0 {

@@ -8,7 +8,18 @@
 //! KV-cache manager in an LLM server.
 
 use super::request::PointSetId;
+use crate::msm::Decomposition;
 use std::collections::HashMap;
+
+/// DDR bytes a point set occupies under a scalar decomposition mode: the
+/// GLV fast path keeps both `P` and the endomorphism image `φ(P)` resident
+/// (the device streams the expanded set every window pass), doubling the
+/// footprint. Routing and admission must budget with this, not the raw
+/// set size — see `devices::PointSetRegistry::bytes_for`. The factor is
+/// [`Decomposition::expansion_factor`], shared with the FPGA model.
+pub fn resident_bytes(base_bytes: u64, decomposition: Decomposition) -> u64 {
+    base_bytes.saturating_mul(decomposition.expansion_factor())
+}
 
 /// Residency state for one device's DDR.
 #[derive(Debug)]
@@ -27,41 +38,83 @@ pub enum Admission {
     Hit,
     /// Admitted after uploading `upload_bytes` (and evicting `evicted`
     /// sets).
-    Miss { upload_bytes: u64, evicted: usize },
+    Miss {
+        /// Bytes uploaded to admit the set.
+        upload_bytes: u64,
+        /// Resident sets evicted to make room.
+        evicted: usize,
+    },
     /// Cannot fit even after evicting everything.
     TooLarge,
 }
 
 impl DeviceDdr {
+    /// Empty DDR with a byte budget.
     pub fn new(capacity_bytes: u64) -> Self {
         DeviceDdr { capacity_bytes, used_bytes: 0, resident: HashMap::new(), tick: 0 }
     }
 
+    /// Is the set currently resident?
     pub fn is_resident(&self, id: PointSetId) -> bool {
         self.resident.contains_key(&id)
     }
 
+    /// Bytes currently occupied.
     pub fn used_bytes(&self) -> u64 {
         self.used_bytes
     }
 
+    /// Number of resident sets.
     pub fn resident_count(&self) -> usize {
         self.resident.len()
     }
 
     /// Touch-or-admit a point set of `bytes`; LRU-evicts as needed.
+    ///
+    /// A set can be re-admitted at a **different size** than it was booked
+    /// at — mixed-config fleets do this when one path budgets the plain
+    /// set and another the GLV endo-expanded (doubled) one. A booking that
+    /// already covers `bytes` is a plain [`Admission::Hit`] (the larger
+    /// footprint stays resident); a larger request *grows* the booking in
+    /// place, evicting other sets as needed and reporting only the delta
+    /// as upload (the missing φ(P) half); a growth that can never fit
+    /// returns [`Admission::TooLarge`] and leaves the existing booking
+    /// untouched — routers fall through to another device.
     pub fn admit(&mut self, id: PointSetId, bytes: u64) -> Admission {
         self.tick += 1;
-        if let Some(entry) = self.resident.get_mut(&id) {
-            entry.1 = self.tick;
-            return Admission::Hit;
+        if let Some(&(booked, _)) = self.resident.get(&id) {
+            if booked >= bytes {
+                self.resident.get_mut(&id).expect("just read").1 = self.tick;
+                return Admission::Hit;
+            }
+            // grow the booking to the larger footprint
+            if bytes > self.capacity_bytes {
+                return Admission::TooLarge;
+            }
+            let delta = bytes - booked;
+            // refresh the tick first so the eviction loop never picks `id`
+            self.resident.get_mut(&id).expect("just read").1 = self.tick;
+            let evicted = self.evict_until_fits(delta);
+            let entry = self.resident.get_mut(&id).expect("still resident");
+            entry.0 = bytes;
+            self.used_bytes += delta;
+            return Admission::Miss { upload_bytes: delta, evicted };
         }
         if bytes > self.capacity_bytes {
             return Admission::TooLarge;
         }
+        let evicted = self.evict_until_fits(bytes);
+        self.resident.insert(id, (bytes, self.tick));
+        self.used_bytes += bytes;
+        Admission::Miss { upload_bytes: bytes, evicted }
+    }
+
+    /// Evict least-recently-used sets until `incoming` more bytes fit.
+    /// The caller guarantees feasibility (incoming ≤ capacity, minus any
+    /// booking it is about to keep).
+    fn evict_until_fits(&mut self, incoming: u64) -> usize {
         let mut evicted = 0;
-        while self.used_bytes + bytes > self.capacity_bytes {
-            // evict the least-recently-used set
+        while self.used_bytes + incoming > self.capacity_bytes {
             let lru = self
                 .resident
                 .iter()
@@ -72,9 +125,7 @@ impl DeviceDdr {
             self.used_bytes -= b;
             evicted += 1;
         }
-        self.resident.insert(id, (bytes, self.tick));
-        self.used_bytes += bytes;
-        Admission::Miss { upload_bytes: bytes, evicted }
+        evicted
     }
 }
 
@@ -108,6 +159,47 @@ mod tests {
         let mut d = DeviceDdr::new(100);
         assert_eq!(d.admit(PointSetId(1), 101), Admission::TooLarge);
         assert_eq!(d.resident_count(), 0);
+    }
+
+    #[test]
+    fn rebooking_grows_shrinks_and_refuses_correctly() {
+        let mut d = DeviceDdr::new(1000);
+        assert_eq!(d.admit(PointSetId(1), 400), Admission::Miss { upload_bytes: 400, evicted: 0 });
+        // a smaller request is a plain hit — the larger footprint stays
+        assert_eq!(d.admit(PointSetId(1), 200), Admission::Hit);
+        assert_eq!(d.used_bytes(), 400);
+        // a larger request (e.g. the GLV-expanded set) grows the booking
+        // in place, uploading only the delta
+        assert_eq!(d.admit(PointSetId(1), 800), Admission::Miss { upload_bytes: 400, evicted: 0 });
+        assert_eq!(d.used_bytes(), 800);
+        assert_eq!(d.admit(PointSetId(1), 800), Admission::Hit);
+        // growth evicts OTHER sets, never the growing one
+        let mut d = DeviceDdr::new(1000);
+        d.admit(PointSetId(1), 400);
+        d.admit(PointSetId(2), 500);
+        assert_eq!(d.admit(PointSetId(1), 800), Admission::Miss { upload_bytes: 400, evicted: 1 });
+        assert!(d.is_resident(PointSetId(1)));
+        assert!(!d.is_resident(PointSetId(2)));
+        assert_eq!(d.used_bytes(), 800);
+        // an impossible growth refuses and leaves the booking untouched
+        assert_eq!(d.admit(PointSetId(1), 1001), Admission::TooLarge);
+        assert!(d.is_resident(PointSetId(1)));
+        assert_eq!(d.used_bytes(), 800);
+    }
+
+    #[test]
+    fn resident_bytes_doubles_under_glv() {
+        assert_eq!(resident_bytes(640, Decomposition::Full), 640);
+        assert_eq!(resident_bytes(640, Decomposition::Glv), 1280);
+        assert_eq!(resident_bytes(u64::MAX, Decomposition::Glv), u64::MAX); // saturates
+        // an endo-expanded set that no longer fits must be rejected
+        let mut d = DeviceDdr::new(1000);
+        let glv_bytes = resident_bytes(640, Decomposition::Glv);
+        assert_eq!(d.admit(PointSetId(1), glv_bytes), Admission::TooLarge);
+        assert_eq!(
+            d.admit(PointSetId(1), resident_bytes(400, Decomposition::Glv)),
+            Admission::Miss { upload_bytes: 800, evicted: 0 }
+        );
     }
 
     #[test]

@@ -29,7 +29,9 @@ pub struct ShardAssignment {
 /// One MSM request: scalars against a resident point set.
 #[derive(Clone, Debug)]
 pub struct MsmJob {
+    /// The job's id (allocated at submit).
     pub id: JobId,
+    /// The registered point set the scalars pair with.
     pub point_set: PointSetId,
     /// Scalars (shared — jobs are fanned out to worker threads).
     pub scalars: Arc<Vec<ScalarLimbs>>,
@@ -46,6 +48,7 @@ pub struct MsmJob {
 /// down" (reply channel disconnect → `RecvError`).
 #[derive(Clone, Debug)]
 pub struct JobResult<P> {
+    /// The id the result answers.
     pub id: JobId,
     /// The MSM output point (the group identity when `error` is set).
     pub output: P,

@@ -19,7 +19,9 @@ use super::request::PointSetId;
 /// Routing decision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Route {
+    /// Chosen device index.
     pub device: usize,
+    /// The DDR admission outcome the choice incurred.
     pub admission: Admission,
 }
 
@@ -31,24 +33,47 @@ pub fn route(
     point_set: PointSetId,
     bytes: u64,
 ) -> Option<Route> {
+    let uniform = vec![bytes; ddrs.len()];
+    route_weighted(ddrs, loads, point_set, &uniform)
+}
+
+/// [`route`] with a *per-device* byte budget: device `i` is charged
+/// `bytes_by_device[i]` on admission. This is how plain (unsharded)
+/// batches route correctly when devices run different MSM configs — a
+/// device whose config uses the GLV split keeps the endo-expanded
+/// (doubled) point set resident, while a full-width device holds the
+/// plain set; one uniform byte figure would over- or under-book one of
+/// them.
+pub fn route_weighted(
+    ddrs: &mut [DeviceDdr],
+    loads: &[usize],
+    point_set: PointSetId,
+    bytes_by_device: &[u64],
+) -> Option<Route> {
     assert_eq!(ddrs.len(), loads.len());
+    assert_eq!(ddrs.len(), bytes_by_device.len());
     if ddrs.is_empty() {
         return None;
     }
-    // 1. affinity hit on the least-loaded holder
+    // 1. affinity preference: the least-loaded holder. With per-device
+    // budgets the holder may need to *grow* its booking (it held the
+    // plain set, this config needs the endo-expanded one) — that is a
+    // Miss charging only the delta; a growth that cannot fit falls
+    // through to the general placement below.
     let holder = (0..ddrs.len())
         .filter(|&i| ddrs[i].is_resident(point_set))
         .min_by_key(|&i| loads[i]);
     if let Some(i) = holder {
-        let adm = ddrs[i].admit(point_set, bytes); // touch (refresh LRU)
-        debug_assert_eq!(adm, Admission::Hit);
-        return Some(Route { device: i, admission: adm });
+        match ddrs[i].admit(point_set, bytes_by_device[i]) {
+            Admission::TooLarge => {}
+            adm => return Some(Route { device: i, admission: adm }),
+        }
     }
     // 2. least-loaded device that can take the set
     let mut order: Vec<usize> = (0..ddrs.len()).collect();
     order.sort_by_key(|&i| loads[i]);
     for i in order {
-        match ddrs[i].admit(point_set, bytes) {
+        match ddrs[i].admit(point_set, bytes_by_device[i]) {
             Admission::TooLarge => continue,
             adm => return Some(Route { device: i, admission: adm }),
         }
@@ -163,6 +188,22 @@ mod tests {
         assert_eq!(routes[0].device, 2);
         assert_eq!(routes[0].admission, Admission::Hit);
         assert_eq!(routes[1].device, 1);
+    }
+
+    #[test]
+    fn weighted_route_skips_devices_whose_budget_overflows() {
+        // device 0 would hold the endo-expanded (2x) set — too large for
+        // its DDR; device 1 runs full-width and fits. The weighted router
+        // must charge each device its own figure.
+        let mut d = vec![DeviceDdr::new(1000), DeviceDdr::new(1000)];
+        let loads = vec![0usize, 5]; // device 0 preferred by load
+        let r = route_weighted(&mut d, &loads, PointSetId(1), &[1200, 600]).expect("routes");
+        assert_eq!(r.device, 1);
+        assert_eq!(r.admission, Admission::Miss { upload_bytes: 600, evicted: 0 });
+        assert!(!d[0].is_resident(PointSetId(1)));
+        assert!(d[1].is_resident(PointSetId(1)));
+        // nobody fits → None
+        assert!(route_weighted(&mut d, &loads, PointSetId(2), &[1200, 1200]).is_none());
     }
 
     #[test]

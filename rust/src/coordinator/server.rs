@@ -42,9 +42,14 @@ use std::time::Instant;
 pub struct CoordinatorConfig {
     /// Ingress queue bound (jobs) — the backpressure knob.
     pub queue_capacity: usize,
+    /// Same-point-set batching policy.
     pub batch: BatchPolicy,
     /// The uniform MSM plan config sharded jobs run with (window-range
-    /// shards need identical window boundaries on every device).
+    /// shards need identical window boundaries on every device). Shard
+    /// groups also budget DDR residency against it: a GLV config books
+    /// the endo-expanded (doubled) point footprint when routing. Plain
+    /// (unsharded) batches instead budget per device, against each
+    /// device's own `msm_cfg`.
     pub shard_cfg: MsmConfig,
 }
 
@@ -80,7 +85,9 @@ pub struct Coordinator<C: CurveParams> {
     ingress: Option<mpsc::SyncSender<Dispatch<C>>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Coordinator-wide counters (submits, completions, shard stats).
     pub counters: Arc<Counters>,
+    /// End-to-end job latency histogram.
     pub latency: Arc<LatencyHistogram>,
     /// Per-device lanes: jobs/shards executed, busy device-time,
     /// utilization.
@@ -101,11 +108,29 @@ struct DispatchCtx<C: CurveParams> {
     worker_txs: Vec<mpsc::Sender<WorkerMsg<C>>>,
     groups: HashMap<u64, Arc<ShardGroup<C>>>,
     replies: JobReplies<C>,
+    /// The uniform config sharded jobs run (`shard_cfg`); shard-group
+    /// routing budgets DDR against it (GLV doubles the footprint).
+    group_cfg: MsmConfig,
+    /// Each device's own single-job config — plain batches execute with
+    /// these, so plain-batch routing budgets DDR per device (a GLV device
+    /// keeps the endo-expanded set resident; a full-width one does not).
+    device_cfgs: Vec<MsmConfig>,
 }
 
 impl<C: CurveParams> DispatchCtx<C> {
     fn loads_now(&self) -> Vec<usize> {
         self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// DDR bytes of a point set for shard-group routing (every shard runs
+    /// the uniform `shard_cfg`, so one figure fits all devices).
+    fn group_bytes(&self, ps: PointSetId) -> u64 {
+        self.registry.bytes_for(ps, &self.group_cfg)
+    }
+
+    /// Per-device DDR bytes of a point set for plain-batch routing.
+    fn batch_bytes(&self, ps: PointSetId) -> Vec<u64> {
+        self.device_cfgs.iter().map(|cfg| self.registry.bytes_for(ps, cfg)).collect()
     }
 
     fn flush(&mut self, ps: PointSetId, jobs: Vec<MsmJob>) {
@@ -118,16 +143,16 @@ impl<C: CurveParams> DispatchCtx<C> {
 
     /// Route one same-point-set batch to a single device (affinity path).
     fn flush_batch(&mut self, ps: PointSetId, jobs: Vec<MsmJob>) {
-        let bytes = self.registry.bytes_of(ps);
+        let bytes = self.batch_bytes(ps);
         let load_now = self.loads_now();
         let mut ddrs = self.ddrs.lock().unwrap();
-        let route = router::route(&mut ddrs, &load_now, ps, bytes);
+        let route = router::route_weighted(&mut ddrs, &load_now, ps, &bytes);
         drop(ddrs);
         if let Some(r) = route {
             let miss = matches!(r.admission, Admission::Miss { .. });
-            if miss {
+            if let Admission::Miss { upload_bytes, .. } = r.admission {
                 self.counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
-                self.counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.counters.uploads_bytes.fetch_add(upload_bytes, Ordering::Relaxed);
             } else {
                 self.counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
             }
@@ -167,7 +192,7 @@ impl<C: CurveParams> DispatchCtx<C> {
             group.fail_group("shard group arrived incomplete at flush", &self.counters);
             return;
         }
-        let bytes = self.registry.bytes_of(ps);
+        let bytes = self.group_bytes(ps);
         let load_now = self.loads_now();
         let mut ddrs = self.ddrs.lock().unwrap();
         let routes = router::route_spread(&mut ddrs, &load_now, ps, bytes, jobs.len());
@@ -180,15 +205,16 @@ impl<C: CurveParams> DispatchCtx<C> {
             }
         };
         // upload accounting: once per distinct device the group touches
+        // (a re-admission at a grown footprint reports only its delta)
         let mut seen: Vec<usize> = Vec::new();
         for r in &routes {
             if seen.contains(&r.device) {
                 continue;
             }
             seen.push(r.device);
-            if matches!(r.admission, Admission::Miss { .. }) {
+            if let Admission::Miss { upload_bytes, .. } = r.admission {
                 self.counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
-                self.counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.counters.uploads_bytes.fetch_add(upload_bytes, Ordering::Relaxed);
             } else {
                 self.counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
             }
@@ -209,7 +235,7 @@ impl<C: CurveParams> DispatchCtx<C> {
             return; // another shard already failed the group — drop the retry
         }
         let tried = r.group.tried_devices(r.shard_index);
-        let bytes = self.registry.bytes_of(r.group.point_set);
+        let bytes = self.group_bytes(r.group.point_set);
         let load_now = self.loads_now();
         let mut order: Vec<usize> =
             (0..self.worker_txs.len()).filter(|d| !tried.contains(d)).collect();
@@ -229,9 +255,9 @@ impl<C: CurveParams> DispatchCtx<C> {
         match dest {
             Some((d, adm)) => {
                 // the retry's admission is a real upload/hit like any other
-                if matches!(adm, Admission::Miss { .. }) {
+                if let Admission::Miss { upload_bytes, .. } = adm {
                     self.counters.affinity_misses.fetch_add(1, Ordering::Relaxed);
-                    self.counters.uploads_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    self.counters.uploads_bytes.fetch_add(upload_bytes, Ordering::Relaxed);
                 } else {
                     self.counters.affinity_hits.fetch_add(1, Ordering::Relaxed);
                 }
@@ -259,6 +285,9 @@ impl<C: CurveParams> Coordinator<C> {
     ) -> Coordinator<C> {
         assert!(!devices.is_empty(), "need at least one device");
         let n_devices = devices.len();
+        // captured before the descriptors move into their workers: plain
+        // batches route with each device's own config's DDR footprint
+        let device_cfgs: Vec<MsmConfig> = devices.iter().map(|d| d.msm_cfg).collect();
         let registry = Arc::new(registry);
         let counters = Arc::new(Counters::default());
         let latency = Arc::new(LatencyHistogram::new());
@@ -395,6 +424,8 @@ impl<C: CurveParams> Coordinator<C> {
                 worker_txs,
                 groups: HashMap::new(),
                 replies: JobReplies::default(),
+                group_cfg: cfg.shard_cfg,
+                device_cfgs,
             };
             std::thread::spawn(move || {
                 let mut batcher = Batcher::new(cfg.batch);

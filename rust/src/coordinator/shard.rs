@@ -43,7 +43,9 @@ pub use crate::msm::partial::ShardPolicy;
 /// A failed shard bounced back to the dispatcher for re-routing onto a
 /// device it has not tried yet.
 pub struct ShardRetry<C: CurveParams> {
+    /// The group the failed shard belongs to.
     pub group: Arc<ShardGroup<C>>,
+    /// Index of the shard to re-dispatch.
     pub shard_index: usize,
 }
 
@@ -65,13 +67,18 @@ struct GroupState<C: CurveParams> {
 /// Server-side state of one sharded job: specs, partials, retry
 /// bookkeeping, and the caller's reply channel. Settles exactly once.
 pub struct ShardGroup<C: CurveParams> {
+    /// The client-visible job id.
     pub id: JobId,
+    /// The point set every shard reads.
     pub point_set: PointSetId,
+    /// The job's scalars (shared across shard executions).
     pub scalars: Arc<Vec<ScalarLimbs>>,
+    /// One spec per shard, index-aligned with the merge order.
     pub specs: Vec<ShardSpec>,
     /// The uniform plan config every shard runs (window-range shards
     /// require identical window boundaries across devices).
     pub cfg: MsmConfig,
+    /// Submission timestamp (latency accounting).
     pub submitted_at: Instant,
     /// Dispatch budget per shard (one try per registered device).
     pub max_attempts: u32,
@@ -81,6 +88,7 @@ pub struct ShardGroup<C: CurveParams> {
 }
 
 impl<C: CurveParams> ShardGroup<C> {
+    /// Assemble the group state for one sharded job.
     #[allow(clippy::too_many_arguments)] // constructor mirrors the wire format
     pub fn new(
         id: JobId,
@@ -113,6 +121,7 @@ impl<C: CurveParams> ShardGroup<C> {
         }
     }
 
+    /// Number of shards in the plan.
     pub fn shard_count(&self) -> usize {
         self.specs.len()
     }
@@ -261,14 +270,25 @@ impl<C: CurveParams> ShardGroup<C> {
 #[derive(Clone, Debug)]
 pub enum PoolDevice {
     /// Host CPU, `threads`-way window-parallel fills.
-    Native { threads: usize },
+    Native {
+        /// OS threads per shard.
+        threads: usize,
+    },
     /// Bit-exact native compute; per-shard device time comes from the SAB
     /// model (chunk shards: an (hi−lo)-point MSM; window shards: the
     /// window fraction of the full MSM).
-    SimFpga { cfg: SabConfig },
+    SimFpga {
+        /// The modeled accelerator build.
+        cfg: SabConfig,
+    },
     /// Chaos slot for exercising the retry path: fails the next
     /// `failures` shards handed to it, then behaves like `Native`.
-    Flaky { failures: Arc<AtomicUsize>, threads: usize },
+    Flaky {
+        /// Remaining injected failures (shared, decremented per shard).
+        failures: Arc<AtomicUsize>,
+        /// OS threads per shard once healthy.
+        threads: usize,
+    },
 }
 
 impl PoolDevice {
@@ -320,15 +340,37 @@ impl PoolDevice {
 /// failed shards on untried devices, merge deterministically. This is the
 /// sharded path `snark::prover` and `baseline::cpu` submit through when
 /// more than one device is registered.
+///
+/// # Examples
+///
+/// ```
+/// use ifzkp::coordinator::shard::{ShardPolicy, ShardPool};
+/// use ifzkp::ec::{points, Bn254G1};
+/// use ifzkp::msm::{self, Backend, MsmConfig};
+///
+/// let w = points::workload::<Bn254G1>(96, 5);
+/// let cfg = MsmConfig::default();
+/// // three simulated devices, point-chunk sharding
+/// let pool = ShardPool::<Bn254G1>::native(3, 1).with_policy(ShardPolicy::ChunkPoints);
+/// let merged = pool.execute(&w.points, &w.scalars, &cfg).unwrap();
+/// // the merge is invisible: identical to the unsharded dispatch
+/// let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+/// assert!(merged.eq_point(&want));
+/// assert_eq!(pool.counters.snapshot().shard_groups, 1);
+/// ```
 pub struct ShardPool<C: CurveParams> {
     devices: Vec<PoolDevice>,
+    /// How jobs split across the device set.
     pub policy: ShardPolicy,
+    /// Per-device lanes (shards executed, busy seconds, failures).
     pub metrics: DeviceMetrics,
+    /// Pool-wide shard counters (groups, retries, atomic failures, skew).
     pub counters: Counters,
     _curve: PhantomData<C>,
 }
 
 impl<C: CurveParams> ShardPool<C> {
+    /// A pool over an explicit device list.
     pub fn new(devices: Vec<PoolDevice>, policy: ShardPolicy) -> ShardPool<C> {
         assert!(!devices.is_empty(), "need at least one device");
         let n = devices.len();
@@ -355,11 +397,13 @@ impl<C: CurveParams> ShardPool<C> {
         ShardPool::new((0..n.max(1)).map(|_| PoolDevice::SimFpga { cfg }).collect(), policy)
     }
 
+    /// Same pool, different shard policy.
     pub fn with_policy(mut self, policy: ShardPolicy) -> ShardPool<C> {
         self.policy = policy;
         self
     }
 
+    /// Registered device count.
     pub fn device_count(&self) -> usize {
         self.devices.len()
     }

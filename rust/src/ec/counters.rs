@@ -13,22 +13,27 @@ thread_local! {
     static MIXED: Cell<u64> = const { Cell::new(0) };
 }
 
+/// Count one full Jacobian addition.
 #[inline(always)]
 pub fn count_add() {
     ADD.with(|c| c.set(c.get() + 1));
 }
+/// Retract an add (the unified-add PD branch re-counts as a double).
 #[inline(always)]
 pub fn uncount_add() {
     ADD.with(|c| c.set(c.get() - 1));
 }
+/// Count one doubling.
 #[inline(always)]
 pub fn count_double() {
     DOUBLE.with(|c| c.set(c.get() + 1));
 }
+/// Count one mixed (Jacobian + affine) addition.
 #[inline(always)]
 pub fn count_mixed() {
     MIXED.with(|c| c.set(c.get() + 1));
 }
+/// Retract a mixed add (same PD-branch correction as [`uncount_add`]).
 #[inline(always)]
 pub fn uncount_mixed() {
     MIXED.with(|c| c.set(c.get() - 1));
@@ -70,6 +75,7 @@ impl std::ops::Sub for PointOps {
     }
 }
 
+/// Current counter values for this thread.
 pub fn snapshot() -> PointOps {
     PointOps {
         add: ADD.with(Cell::get),

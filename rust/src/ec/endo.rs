@@ -1,0 +1,678 @@
+//! GLV endomorphism layer: cube-root-of-unity scalar decomposition for the
+//! a = 0 curves (Gallant–Lambert–Vanstone, the SZKP/ZK-Flex-style
+//! structural reduction layered *on top of* signed-digit buckets).
+//!
+//! Both paper curves (and their G2 twists) have j-invariant 0, so the map
+//!
+//! ```text
+//!   φ(x, y) = (ζ·x, y),   ζ³ = 1, ζ ≠ 1 in the coordinate field
+//! ```
+//!
+//! is an efficiently computable endomorphism (one field multiplication)
+//! acting on the prime-order subgroup as multiplication by a scalar λ with
+//! λ² + λ + 1 ≡ 0 (mod r). Writing `k ≡ k1 + k2·λ (mod r)` with half-width
+//! `k1`, `k2` turns one full-width MSM term `k·P` into two half-width terms
+//! `k1·P + k2·φ(P)` — the MSM plan then covers the scalars with **half the
+//! k-bit windows** over a doubled point set: total bucket fills are
+//! unchanged, but the serially-dependent reduction chain and the DNA
+//! combine (the latency-bound phases the hardware cannot pipeline away)
+//! halve again on top of the signed-digit halving.
+//!
+//! Following the crate's no-magic-numbers rule (see `ff::bigint`), nothing
+//! here is hand-transcribed: ζ and λ are derived at first use from the
+//! field parameters (`g^((q−1)/3)`), matched to each other against the
+//! curve group (`φ(G) = λ·G`), and the half-width lattice basis comes from
+//! the classic extended-Euclidean construction on (r, λ). The derivation
+//! self-checks every property — `ζ³ = 1`, the decomposition congruence,
+//! the magnitude bound, the endomorphism action — and yields `None` (GLV
+//! stays off for that curve, results stay correct) rather than ever
+//! exposing unverified parameters.
+
+use super::point::{Affine, CurveParams, Jacobian};
+use super::{scalar, ScalarLimbs};
+use crate::ff::{bigint, Field, FieldParams, Fp};
+use std::sync::LazyLock as Lazy;
+
+// ---------------------------------------------------------------------------
+// Sign-magnitude helpers (512-bit headroom, covers every intermediate)
+// ---------------------------------------------------------------------------
+
+/// Sign-magnitude integer over 8 little-endian limbs. The decomposition's
+/// worst intermediates are products of two < 2^255 magnitudes plus small
+/// sums — comfortably inside 512 bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct SWide {
+    neg: bool,
+    mag: [u64; 8],
+}
+
+impl SWide {
+    const ZERO: SWide = SWide { neg: false, mag: [0; 8] };
+
+    fn from_limbs4(v: ScalarLimbs) -> SWide {
+        let mut mag = [0u64; 8];
+        mag[..4].copy_from_slice(&v);
+        SWide { neg: false, mag }
+    }
+
+    fn is_zero(&self) -> bool {
+        bigint::is_zero(&self.mag)
+    }
+
+    fn negate(mut self) -> SWide {
+        if !self.is_zero() {
+            self.neg = !self.neg;
+        }
+        self
+    }
+
+    fn add(&self, other: &SWide) -> SWide {
+        if self.neg == other.neg {
+            let (mag, carry) = bigint::add(&self.mag, &other.mag);
+            debug_assert_eq!(carry, 0, "SWide overflow");
+            SWide { neg: self.neg && !bigint::is_zero(&mag), mag }
+        } else if bigint::gte(&self.mag, &other.mag) {
+            let (mag, _) = bigint::sub(&self.mag, &other.mag);
+            SWide { neg: self.neg && !bigint::is_zero(&mag), mag }
+        } else {
+            let (mag, _) = bigint::sub(&other.mag, &self.mag);
+            SWide { neg: other.neg, mag }
+        }
+    }
+
+    fn sub(&self, other: &SWide) -> SWide {
+        self.add(&other.negate())
+    }
+
+    /// Signed product of two 4-limb magnitudes.
+    fn mul4(a: &ScalarLimbs, a_neg: bool, b: &ScalarLimbs, b_neg: bool) -> SWide {
+        let (lo, hi) = bigint::mul_wide(a, b);
+        let mut mag = [0u64; 8];
+        mag[..4].copy_from_slice(&lo);
+        mag[4..].copy_from_slice(&hi);
+        SWide { neg: (a_neg != b_neg) && !bigint::is_zero(&mag), mag }
+    }
+
+    /// The low 4 limbs, or `None` if the value does not fit.
+    fn to_limbs4(&self) -> Option<ScalarLimbs> {
+        if self.mag[4..].iter().any(|&w| w != 0) {
+            return None;
+        }
+        let mut out = [0u64; 4];
+        out.copy_from_slice(&self.mag[..4]);
+        Some(out)
+    }
+}
+
+/// Bit length of a 4-limb magnitude (0 for zero).
+fn bit_len4(v: &ScalarLimbs) -> u32 {
+    match bigint::msb(v) {
+        Some(b) => b as u32 + 1,
+        None => 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resolved parameters
+// ---------------------------------------------------------------------------
+
+/// One half of a GLV split: sign plus half-width magnitude. Folding the
+/// sign into the point (negation is free on Weierstrass curves) leaves the
+/// MSM plan an ordinary non-negative scalar below `2^half_bits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GlvSplit {
+    /// `k1` contributes `−|k1|·P` when set.
+    pub k1_neg: bool,
+    /// |k1| — the λ⁰ half.
+    pub k1: ScalarLimbs,
+    /// `k2` contributes `−|k2|·φ(P)` when set.
+    pub k2_neg: bool,
+    /// |k2| — the λ¹ half.
+    pub k2: ScalarLimbs,
+}
+
+/// Fully derived and self-checked GLV data for one curve (see the module
+/// docs for how each constant is obtained). Access through
+/// [`CurveParams::glv`]; construction is lazy and happens once per curve.
+pub struct GlvParams<C: CurveParams> {
+    /// ζ — the cube root of unity in the coordinate field, matched to
+    /// [`Self::lambda`] so that `φ(P) = (ζ·x, y) = λ·P` on the subgroup.
+    pub zeta: C::Base,
+    /// λ — the matching cube root of unity mod r (canonical limbs, < r).
+    pub lambda: ScalarLimbs,
+    /// The scalar-field modulus r.
+    pub modulus: ScalarLimbs,
+    /// Upper bound on the bit width of either decomposition half
+    /// (`⌈log₂ max(|a1|+|a2|, |b1|+|b2|)⌉` — just over half the scalar
+    /// width for a balanced lattice basis). Sizes the GLV MSM plan.
+    pub half_bits: u32,
+    /// Lattice basis v1 = (a1, b1), v2 = (a2, b2) with a + b·λ ≡ 0 (mod r)
+    /// and det(v1, v2) = +r, stored sign-magnitude.
+    a1: (bool, ScalarLimbs),
+    b1: (bool, ScalarLimbs),
+    a2: (bool, ScalarLimbs),
+    b2: (bool, ScalarLimbs),
+    /// round(2^256·|b2| / r) — Babai coefficient c1 by multiply-high.
+    g1: ScalarLimbs,
+    /// round(2^256·|b1| / r) — Babai coefficient c2 by multiply-high.
+    g2: ScalarLimbs,
+}
+
+impl<C: CurveParams> GlvParams<C> {
+    /// Split `k` (canonical limbs, reduced mod r internally) into two
+    /// signed half-width parts with `k1 + k2·λ ≡ k (mod r)` and both
+    /// magnitudes below `2^half_bits`.
+    pub fn decompose(&self, k: &ScalarLimbs) -> GlvSplit {
+        self.try_decompose(k).expect("validated lattice bounds every split")
+    }
+
+    /// [`Self::decompose`] returning `None` instead of panicking when a
+    /// half overflows its bound — only reachable with unvalidated
+    /// parameters, which the derivation never exposes.
+    fn try_decompose(&self, k: &ScalarLimbs) -> Option<GlvSplit> {
+        // reduce k mod r (MSM callers hand canonical-but-unreduced limbs)
+        let mut kr = *k;
+        while bigint::gte(&kr, &self.modulus) {
+            let (d, _) = bigint::sub(&kr, &self.modulus);
+            kr = d;
+        }
+        // Babai rounding: c1 = round(k·b2/r), c2 = round(−k·b1/r); the
+        // congruence holds for ANY integers c1, c2 (each basis vector is in
+        // the lattice), rounding only controls the magnitude of the halves.
+        let c1 = (self.b2.0, babai_c(&kr, &self.g1));
+        let c2 = (!self.b1.0, babai_c(&kr, &self.g2));
+        // (k1, k2) = (k, 0) − c1·v1 − c2·v2
+        let k1 = SWide::from_limbs4(kr)
+            .sub(&SWide::mul4(&c1.1, c1.0, &self.a1.1, self.a1.0))
+            .sub(&SWide::mul4(&c2.1, c2.0, &self.a2.1, self.a2.0));
+        let k2 = SWide::mul4(&c1.1, c1.0, &self.b1.1, self.b1.0)
+            .add(&SWide::mul4(&c2.1, c2.0, &self.b2.1, self.b2.0))
+            .negate();
+        Some(GlvSplit {
+            k1_neg: k1.neg,
+            k1: k1.to_limbs4()?,
+            k2_neg: k2.neg,
+            k2: k2.to_limbs4()?,
+        })
+    }
+}
+
+/// `floor((k·g + 2^255) / 2^256)` — the multiply-high rounding step shared
+/// by both Babai coefficients (total error vs the exact rational < 1, which
+/// the `half_bits` bound already absorbs).
+fn babai_c(k: &ScalarLimbs, g: &ScalarLimbs) -> ScalarLimbs {
+    let (lo, hi) = bigint::mul_wide(k, g);
+    let mut prod = [0u64; 8];
+    prod[..4].copy_from_slice(&lo);
+    prod[4..].copy_from_slice(&hi);
+    let mut half = [0u64; 8];
+    half[3] = 1 << 63;
+    let (sum, carry) = bigint::add(&prod, &half);
+    debug_assert_eq!(carry, 0, "k·g bounded well below 2^512");
+    let mut c = [0u64; 4];
+    c.copy_from_slice(&sum[4..]);
+    c
+}
+
+/// round(2^256·|b| / r) for a basis coordinate (one-time setup).
+fn mulhigh_const(b_mag: &ScalarLimbs, r: &ScalarLimbs) -> Option<ScalarLimbs> {
+    let mut num = [0u64; 8];
+    num[4..].copy_from_slice(b_mag);
+    let (mut q, rem) = bigint::div_rem_wide::<8, 4>(&num, r);
+    let (rem2, carry) = bigint::add(&rem, &rem);
+    if carry == 1 || bigint::gte(&rem2, r) {
+        let mut one = [0u64; 8];
+        one[0] = 1;
+        let (s, c) = bigint::add(&q, &one);
+        debug_assert_eq!(c, 0);
+        q = s;
+    }
+    if q[4..].iter().any(|&w| w != 0) {
+        return None; // basis coordinate implausibly large
+    }
+    let mut out = [0u64; 4];
+    out.copy_from_slice(&q[..4]);
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// The endomorphism map and MSM-input expansion
+// ---------------------------------------------------------------------------
+
+/// φ on an affine point: `(x, y) ↦ (ζ·x, y)` — one field multiplication.
+pub fn endo_affine<C: CurveParams>(params: &GlvParams<C>, p: &Affine<C>) -> Affine<C> {
+    Affine { x: p.x.mul(&params.zeta), y: p.y, infinity: p.infinity }
+}
+
+/// φ on a Jacobian point: `(X, Y, Z) ↦ (ζ·X, Y, Z)` (affine x = X/Z²
+/// scales by ζ exactly as required; infinity (Z = 0) maps to itself).
+pub fn endo_jacobian<C: CurveParams>(params: &GlvParams<C>, p: &Jacobian<C>) -> Jacobian<C> {
+    Jacobian { x: p.x.mul(&params.zeta), y: p.y, z: p.z }
+}
+
+/// Expand an m-term MSM into the 2m-term GLV form: entry `2i` is
+/// `(±Pᵢ, |k1|)`, entry `2i+1` is `(±φ(Pᵢ), |k2|)` (signs folded into the
+/// points). Per-point and deterministic, so point-chunk shards that expand
+/// their own slice compose linearly with the whole, and every device
+/// expanding the full set for a window-range shard produces identical
+/// inputs — merges stay bit-identical.
+pub fn expand<C: CurveParams>(
+    params: &GlvParams<C>,
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+) -> (Vec<Affine<C>>, Vec<ScalarLimbs>) {
+    assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+    let mut out_points = Vec::with_capacity(2 * points.len());
+    let mut out_scalars = Vec::with_capacity(2 * points.len());
+    for (p, s) in points.iter().zip(scalars) {
+        let split = params.decompose(s);
+        out_points.push(if split.k1_neg { p.neg() } else { *p });
+        out_scalars.push(split.k1);
+        let phi = endo_affine(params, p);
+        out_points.push(if split.k2_neg { phi.neg() } else { phi });
+        out_scalars.push(split.k2);
+    }
+    (out_points, out_scalars)
+}
+
+// ---------------------------------------------------------------------------
+// Derivation (lazy, once per curve)
+// ---------------------------------------------------------------------------
+
+/// A primitive cube root of unity in `F` (`t^((q−1)/3)` for the first
+/// small `t` that is not a cube), or `None` if 3 ∤ q − 1.
+fn cube_root_of_unity<F: Field>() -> Option<F> {
+    let q_minus_1 = F::order_minus_one();
+    let (exp, rem) = bigint::div_rem_small(&q_minus_1, 3);
+    if rem != 0 {
+        return None;
+    }
+    for t in 2u64..40 {
+        let z = F::from_u64(t).pow_limbs(&exp);
+        if z != F::one() {
+            if z.square().mul(&z) != F::one() {
+                return None; // q not what we assumed — refuse
+            }
+            return Some(z);
+        }
+    }
+    None
+}
+
+/// Derive and self-check the full GLV parameter set for curve `C` with
+/// scalar field `P`. Every failure path returns `None` (the curve simply
+/// runs without the fast path) — no partially-checked constants escape.
+fn derive<C: CurveParams, P: FieldParams<4>>() -> Option<GlvParams<C>> {
+    let r = P::MODULUS;
+
+    // λ = g^((r−1)/3) in Fr, a primitive cube root of unity mod r.
+    let mut r_minus_1 = r.to_vec();
+    r_minus_1[0] -= 1; // r odd
+    let (exp, rem) = bigint::div_rem_small(&r_minus_1, 3);
+    if rem != 0 {
+        return None;
+    }
+    let lambda_f = Fp::<P, 4>::from_u64(P::GENERATOR).pow_limbs(&exp);
+    if lambda_f == Fp::<P, 4>::one()
+        || lambda_f.square().mul(&lambda_f) != Fp::<P, 4>::one()
+    {
+        return None;
+    }
+    let lambda = lambda_f.to_canonical();
+
+    // ζ in the coordinate field, matched to λ: φ(G) must equal λ·G —
+    // otherwise the other root (ζ²) is the partner.
+    let zeta_any = cube_root_of_unity::<C::Base>()?;
+    let g = Jacobian::<C>::generator();
+    let lambda_g = scalar::mul::<C>(&g, &lambda);
+    let phi_g = |z: &C::Base| {
+        let (x, y) = C::generator_xy();
+        Jacobian::<C> { x: x.mul(z), y, z: C::Base::one() }
+    };
+    let zeta = if phi_g(&zeta_any).eq_point(&lambda_g) {
+        zeta_any
+    } else {
+        let z2 = zeta_any.square();
+        if !phi_g(&z2).eq_point(&lambda_g) {
+            return None;
+        }
+        z2
+    };
+
+    // Half-width lattice basis by the extended Euclidean algorithm on
+    // (r, λ): every EEA row satisfies r_i − t_i·λ ≡ 0 (mod r), so
+    // (r_i, −t_i) lies in the lattice {(a, b) : a + b·λ ≡ 0 (mod r)}.
+    // Stop at the first remainder below √r; that row and the shorter of
+    // its neighbours form the (near-)shortest basis.
+    let sq_ge_r = |v: &ScalarLimbs| -> bool {
+        let (lo, hi) = bigint::mul_wide(v, v);
+        if !bigint::is_zero(&hi) {
+            return true;
+        }
+        bigint::gte(&lo, &r)
+    };
+    let mut r_prev = r;
+    let mut r_cur = lambda;
+    let mut t_prev = SWide::ZERO;
+    let mut t_cur = SWide::from_limbs4([1, 0, 0, 0]);
+    while sq_ge_r(&r_cur) {
+        if bigint::is_zero(&r_cur) {
+            return None; // gcd reached without a short vector — degenerate
+        }
+        let (q, rem) = bigint::div_rem(&r_prev, &r_cur);
+        let t4 = t_cur.to_limbs4()?;
+        let t_next = t_prev.sub(&SWide::mul4(&q, false, &t4, t_cur.neg));
+        r_prev = r_cur;
+        r_cur = rem;
+        t_prev = t_cur;
+        t_cur = t_next;
+    }
+    // v1 = (r_cur, −t_cur); v2 = the shorter (∞-norm) of the neighbours
+    // (r_prev, −t_prev) and one EEA step further.
+    let a1 = r_cur;
+    let b1 = t_cur.negate();
+    let b1_mag = b1.to_limbs4()?;
+    if bigint::is_zero(&a1) && bigint::is_zero(&b1_mag) {
+        return None;
+    }
+    let (cand_b_r, cand_b_t) = {
+        if bigint::is_zero(&r_cur) {
+            return None;
+        }
+        let (q, rem) = bigint::div_rem(&r_prev, &r_cur);
+        let t4 = t_cur.to_limbs4()?;
+        (rem, t_prev.sub(&SWide::mul4(&q, false, &t4, t_cur.neg)))
+    };
+    let norm_inf = |a: &ScalarLimbs, b: &ScalarLimbs| -> ScalarLimbs {
+        if bigint::gte(a, b) {
+            *a
+        } else {
+            *b
+        }
+    };
+    let cand_a_t4 = t_prev.to_limbs4()?;
+    let cand_b_t4 = cand_b_t.to_limbs4()?;
+    let norm_a = norm_inf(&r_prev, &cand_a_t4);
+    let norm_b = norm_inf(&cand_b_r, &cand_b_t4);
+    let (mut a2, mut b2) = if bigint::lt(&norm_a, &norm_b) {
+        ((false, r_prev), (!t_prev.neg && !bigint::is_zero(&cand_a_t4), cand_a_t4))
+    } else {
+        ((false, cand_b_r), (!cand_b_t.neg && !bigint::is_zero(&cand_b_t4), cand_b_t4))
+    };
+    let a1 = (false, a1);
+    let b1 = (b1.neg, b1_mag);
+
+    // det(v1, v2) = a1·b2 − a2·b1 must be ±r; flip v2 so it is +r, which
+    // is what the Babai sign conventions below assume.
+    let det = SWide::mul4(&a1.1, a1.0, &b2.1, b2.0)
+        .sub(&SWide::mul4(&a2.1, a2.0, &b1.1, b1.0));
+    let det_mag = det.to_limbs4()?;
+    if det_mag != r {
+        return None;
+    }
+    if det.neg {
+        a2.0 = !a2.0 && !bigint::is_zero(&a2.1);
+        b2.0 = !b2.0 && !bigint::is_zero(&b2.1);
+    }
+
+    // Babai multiply-high constants and the magnitude bound:
+    // |k1| ≤ |a1| + |a2|, |k2| ≤ |b1| + |b2| (rounding error < 1 per
+    // coefficient), so half_bits = ⌈log₂ max(...)⌉ covers every split.
+    let g1 = mulhigh_const(&b2.1, &r)?;
+    let g2 = mulhigh_const(&b1.1, &r)?;
+    let (sum_a, ca) = bigint::add(&a1.1, &a2.1);
+    let (sum_b, cb) = bigint::add(&b1.1, &b2.1);
+    if ca != 0 || cb != 0 {
+        return None;
+    }
+    let half_bits = bit_len4(&norm_inf(&sum_a, &sum_b));
+    if half_bits == 0 || half_bits > 160 {
+        return None; // not a half-width basis — refuse the fast path
+    }
+
+    let params = GlvParams::<C> {
+        zeta,
+        lambda,
+        modulus: r,
+        half_bits,
+        a1,
+        b1,
+        a2,
+        b2,
+        g1,
+        g2,
+    };
+
+    // Final self-check: sampled decompositions must satisfy the exact
+    // congruence and the magnitude bound, and φ must act as λ on a
+    // non-generator point.
+    let mut rng = crate::util::rng::Rng::new(0x614C_5653); // "aLVS"
+    for i in 0..24u32 {
+        let k: ScalarLimbs = match i {
+            0 => [0; 4],
+            1 => [1, 0, 0, 0],
+            2 => {
+                let mut v = r;
+                v[0] -= 1;
+                v
+            }
+            _ => [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64() >> 1],
+        };
+        let split = params.try_decompose(&k)?;
+        if bit_len4(&split.k1) > params.half_bits || bit_len4(&split.k2) > params.half_bits {
+            return None;
+        }
+        let signed_f = |neg: bool, mag: &ScalarLimbs| {
+            let v = Fp::<P, 4>::from_limbs_reduce(*mag);
+            if neg {
+                v.neg()
+            } else {
+                v
+            }
+        };
+        let lhs = signed_f(split.k1_neg, &split.k1)
+            .add(&signed_f(split.k2_neg, &split.k2).mul(&lambda_f));
+        if lhs != Fp::<P, 4>::from_limbs_reduce(k) {
+            return None;
+        }
+    }
+    let q5 = scalar::mul::<C>(&Jacobian::<C>::generator(), &[5, 0, 0, 0]);
+    if !endo_jacobian(&params, &q5).eq_point(&scalar::mul::<C>(&q5, &params.lambda)) {
+        return None;
+    }
+    Some(params)
+}
+
+// ---------------------------------------------------------------------------
+// Per-curve lazily derived statics (the targets of `CurveParams::glv`)
+// ---------------------------------------------------------------------------
+
+use super::g1::{Bls12381G1, Bn254G1};
+use super::g2::{Bls12381G2, Bn254G2};
+use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+
+static BN254_G1_GLV: Lazy<Option<GlvParams<Bn254G1>>> =
+    Lazy::new(derive::<Bn254G1, Bn254FrParams>);
+static BN254_G2_GLV: Lazy<Option<GlvParams<Bn254G2>>> =
+    Lazy::new(derive::<Bn254G2, Bn254FrParams>);
+static BLS12_381_G1_GLV: Lazy<Option<GlvParams<Bls12381G1>>> =
+    Lazy::new(derive::<Bls12381G1, Bls12381FrParams>);
+static BLS12_381_G2_GLV: Lazy<Option<GlvParams<Bls12381G2>>> =
+    Lazy::new(derive::<Bls12381G2, Bls12381FrParams>);
+
+/// BN254 G1 parameters (the `CurveParams::glv` impl target).
+pub(crate) fn bn254_g1() -> Option<&'static GlvParams<Bn254G1>> {
+    BN254_G1_GLV.as_ref()
+}
+
+/// BN254 G2 parameters.
+pub(crate) fn bn254_g2() -> Option<&'static GlvParams<Bn254G2>> {
+    BN254_G2_GLV.as_ref()
+}
+
+/// BLS12-381 G1 parameters.
+pub(crate) fn bls12_381_g1() -> Option<&'static GlvParams<Bls12381G1>> {
+    BLS12_381_G1_GLV.as_ref()
+}
+
+/// BLS12-381 G2 parameters.
+pub(crate) fn bls12_381_g2() -> Option<&'static GlvParams<Bls12381G2>> {
+    BLS12_381_G2_GLV.as_ref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::points;
+    use crate::ff::{FrBls12381, FrBn254};
+    use crate::msm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_four_groups_have_params() {
+        // every a = 0 group in the crate admits the endomorphism; a
+        // regression to None would silently disable the fast path
+        assert!(Bn254G1::glv().is_some(), "bn254 g1");
+        assert!(Bls12381G1::glv().is_some(), "bls12-381 g1");
+        assert!(Bn254G2::glv().is_some(), "bn254 g2");
+        assert!(Bls12381G2::glv().is_some(), "bls12-381 g2");
+    }
+
+    #[test]
+    fn zeta_cubes_to_one_and_is_nontrivial() {
+        fn check<C: CurveParams>() {
+            let p = C::glv().expect("params");
+            assert_ne!(p.zeta, C::Base::one(), "{}: zeta must be primitive", C::NAME);
+            let cube = p.zeta.square().mul(&p.zeta);
+            assert_eq!(cube, C::Base::one(), "{}: zeta^3 != 1", C::NAME);
+            // primitive also means zeta² ≠ 1
+            assert_ne!(p.zeta.square(), C::Base::one(), "{}", C::NAME);
+        }
+        check::<Bn254G1>();
+        check::<Bls12381G1>();
+        check::<Bn254G2>();
+        check::<Bls12381G2>();
+    }
+
+    #[test]
+    fn lambda_cubes_to_one_mod_r() {
+        let p = Bn254G1::glv().unwrap();
+        let l = FrBn254::from_canonical(p.lambda).unwrap();
+        assert_eq!(l.square().mul(&l), FrBn254::one());
+        assert_ne!(l, FrBn254::one());
+        // λ² + λ + 1 ≡ 0 — the minimal polynomial of a primitive cube root
+        assert!(l.square().add(&l).add(&FrBn254::one()).is_zero());
+        let p = Bls12381G1::glv().unwrap();
+        let l = FrBls12381::from_canonical(p.lambda).unwrap();
+        assert!(l.square().add(&l).add(&FrBls12381::one()).is_zero());
+    }
+
+    #[test]
+    fn endo_map_is_multiplication_by_lambda() {
+        fn check<C: CurveParams>() {
+            let p = C::glv().expect("params");
+            let q = scalar::mul::<C>(&Jacobian::<C>::generator(), &[0xABCDE, 0, 0, 0]);
+            let want = scalar::mul::<C>(&q, &p.lambda);
+            assert!(endo_jacobian(p, &q).eq_point(&want), "{} jacobian", C::NAME);
+            let qa = q.to_affine();
+            assert!(endo_affine(p, &qa).to_jacobian().eq_point(&want), "{} affine", C::NAME);
+        }
+        check::<Bn254G1>();
+        check::<Bls12381G1>();
+        check::<Bn254G2>();
+        check::<Bls12381G2>();
+    }
+
+    #[test]
+    fn endo_preserves_infinity_and_curve_membership() {
+        let p = Bn254G1::glv().unwrap();
+        assert!(endo_affine(p, &Affine::<Bn254G1>::infinity()).infinity);
+        assert!(endo_jacobian(p, &Jacobian::<Bn254G1>::infinity()).is_infinity());
+        let pts = points::generate_points_walk::<Bn254G1>(8, 991);
+        for q in &pts {
+            assert!(endo_affine(p, q).is_on_curve());
+        }
+    }
+
+    #[test]
+    fn decompose_edge_scalars() {
+        let p = Bn254G1::glv().unwrap();
+        // zero splits to zero halves
+        let z = p.decompose(&[0; 4]);
+        assert_eq!(z.k1, [0; 4]);
+        assert_eq!(z.k2, [0; 4]);
+        assert!(!z.k1_neg && !z.k2_neg);
+        // one splits to (1, 0) — the rounding terms all vanish
+        let o = p.decompose(&[1, 0, 0, 0]);
+        assert_eq!(o.k1, [1, 0, 0, 0]);
+        assert!(!o.k1_neg);
+        assert_eq!(o.k2, [0; 4]);
+        // scalars ≥ r reduce first: r itself behaves as zero
+        let r = p.decompose(&p.modulus);
+        assert_eq!(r.k1, [0; 4]);
+        assert_eq!(r.k2, [0; 4]);
+    }
+
+    #[test]
+    fn decompose_halves_are_half_width() {
+        let p = Bn254G1::glv().unwrap();
+        // the lattice bound must really be (just over) half the scalar
+        // width — the whole point of the fast path
+        assert!(p.half_bits <= 130, "half_bits {}", p.half_bits);
+        let p381 = Bls12381G1::glv().unwrap();
+        assert!(p381.half_bits <= 130, "half_bits {}", p381.half_bits);
+        let mut rng = Rng::new(8181);
+        for _ in 0..50 {
+            let k = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64() >> 2];
+            let s = p.decompose(&k);
+            assert!(bit_len4(&s.k1) <= p.half_bits, "{:?}", s);
+            assert!(bit_len4(&s.k2) <= p.half_bits, "{:?}", s);
+        }
+    }
+
+    #[test]
+    fn expand_preserves_the_msm_sum() {
+        // the linearity identity the whole fast path rests on:
+        // Σ kᵢ·Pᵢ == Σ (k1ᵢ·(±Pᵢ) + k2ᵢ·(±φ(Pᵢ)))
+        let p = Bn254G1::glv().unwrap();
+        let w = points::workload::<Bn254G1>(24, 771);
+        let (xp, xs) = expand(p, &w.points, &w.scalars);
+        assert_eq!(xp.len(), 48);
+        assert_eq!(xs.len(), 48);
+        for q in &xp {
+            assert!(q.is_on_curve());
+        }
+        let want = msm::naive::msm(&w.points, &w.scalars);
+        let got = msm::naive::msm(&xp, &xs);
+        assert!(got.eq_point(&want));
+    }
+
+    #[test]
+    fn expand_preserves_the_msm_sum_bls_and_g2() {
+        let w = points::workload::<Bls12381G1>(12, 772);
+        let p = Bls12381G1::glv().unwrap();
+        let (xp, xs) = expand(p, &w.points, &w.scalars);
+        assert!(msm::naive::msm(&xp, &xs).eq_point(&msm::naive::msm(&w.points, &w.scalars)));
+        let w2 = points::workload::<Bn254G2>(8, 773);
+        let p2 = Bn254G2::glv().unwrap();
+        let (xp2, xs2) = expand(p2, &w2.points, &w2.scalars);
+        assert!(
+            msm::naive::msm(&xp2, &xs2).eq_point(&msm::naive::msm(&w2.points, &w2.scalars))
+        );
+    }
+
+    #[test]
+    fn swide_arithmetic_basics() {
+        let a = SWide::from_limbs4([5, 0, 0, 0]);
+        let b = SWide::from_limbs4([7, 0, 0, 0]);
+        assert_eq!(a.sub(&b), SWide::from_limbs4([2, 0, 0, 0]).negate());
+        assert_eq!(b.sub(&a), SWide::from_limbs4([2, 0, 0, 0]));
+        assert!(a.sub(&a).is_zero());
+        assert!(!a.sub(&a).neg, "no negative zero");
+        let p = SWide::mul4(&[3, 0, 0, 0], true, &[4, 0, 0, 0], false);
+        assert_eq!(p, SWide::from_limbs4([12, 0, 0, 0]).negate());
+        // products of full-width magnitudes land in the high limbs
+        let big = SWide::mul4(&[0, 0, 0, 1 << 62], false, &[0, 0, 0, 1 << 62], false);
+        assert!(big.to_limbs4().is_none());
+    }
+}

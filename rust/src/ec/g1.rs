@@ -29,6 +29,10 @@ impl CurveParams for Bn254G1 {
     const NAME: &'static str = "bn254_g1";
     // 2 × 32-byte coordinates in the DDR layout.
     const AFFINE_BYTES: u64 = 64;
+
+    fn glv() -> Option<&'static super::endo::GlvParams<Self>> {
+        super::endo::bn254_g1()
+    }
 }
 
 /// BLS12-381 G1.
@@ -57,6 +61,10 @@ impl CurveParams for Bls12381G1 {
     const NAME: &'static str = "bls12_381_g1";
     // 2 × 48-byte coordinates.
     const AFFINE_BYTES: u64 = 96;
+
+    fn glv() -> Option<&'static super::endo::GlvParams<Self>> {
+        super::endo::bls12_381_g1()
+    }
 }
 
 #[cfg(test)]

@@ -46,6 +46,10 @@ impl CurveParams for Bn254G2 {
     const NAME: &'static str = "bn254_g2";
     // 4 × 32-byte field elements.
     const AFFINE_BYTES: u64 = 128;
+
+    fn glv() -> Option<&'static super::endo::GlvParams<Self>> {
+        super::endo::bn254_g2()
+    }
 }
 
 /// BLS12-381 G2.
@@ -77,6 +81,10 @@ impl CurveParams for Bls12381G2 {
     const NAME: &'static str = "bls12_381_g2";
     // 4 × 48-byte field elements.
     const AFFINE_BYTES: u64 = 192;
+
+    fn glv() -> Option<&'static super::endo::GlvParams<Self>> {
+        super::endo::bls12_381_g2()
+    }
 }
 
 #[cfg(test)]

@@ -10,6 +10,8 @@
 //!   `dbl-2009-l` (a=0) formulas and **unified add semantics** (the UDA
 //!   join-mux behaviour: add that transparently handles P=Q, ±infinity);
 //! * [`g1`], [`g2`] — the four concrete groups;
+//! * [`endo`] — the GLV cube-root endomorphism (ζ, λ, half-width lattice
+//!   decomposition) behind the MSM plan's `Decomposition::Glv` fast path;
 //! * [`scalar`] — Algorithm 1 (double-and-add) and windowed variants;
 //! * [`points`] — deterministic workload generators (additive-walk fast
 //!   path, hash-to-curve via Tonelli–Shanks for independence-critical
@@ -20,10 +22,12 @@
 pub mod point;
 pub mod g1;
 pub mod g2;
+pub mod endo;
 pub mod scalar;
 pub mod points;
 pub mod counters;
 
+pub use endo::{GlvParams, GlvSplit};
 pub use g1::{Bls12381G1, Bn254G1};
 pub use g2::{Bls12381G2, Bn254G2};
 pub use point::{Affine, CurveParams, Jacobian};

@@ -35,13 +35,26 @@ pub trait CurveParams:
     const NAME: &'static str;
     /// Bytes of an affine point in the paper's DDR layout (2 coords).
     const AFFINE_BYTES: u64;
+
+    /// GLV endomorphism parameters (ζ, λ, half-width lattice basis) when
+    /// the curve admits the cube-root endomorphism — derived lazily and
+    /// self-checked once per curve (see [`crate::ec::endo`]). `None`
+    /// disables the `Decomposition::Glv` fast path for the curve; the MSM
+    /// plan then falls back to full-width scalars, so results stay correct
+    /// either way.
+    fn glv() -> Option<&'static crate::ec::endo::GlvParams<Self>> {
+        None
+    }
 }
 
 /// Affine point (with explicit infinity flag).
 #[derive(Clone, Copy, PartialEq, Eq)]
 pub struct Affine<C: CurveParams> {
+    /// x-coordinate (unspecified when `infinity`).
     pub x: C::Base,
+    /// y-coordinate (unspecified when `infinity`).
     pub y: C::Base,
+    /// Point-at-infinity marker.
     pub infinity: bool,
 }
 
@@ -56,10 +69,13 @@ impl<C: CurveParams> fmt::Debug for Affine<C> {
 }
 
 impl<C: CurveParams> Affine<C> {
+    /// A finite point from coordinates (membership is not checked — use
+    /// [`Self::is_on_curve`]).
     pub fn new(x: C::Base, y: C::Base) -> Self {
         Affine { x, y, infinity: false }
     }
 
+    /// The point at infinity.
     pub fn infinity() -> Self {
         Affine { x: C::Base::zero(), y: C::Base::zero(), infinity: true }
     }
@@ -80,10 +96,12 @@ impl<C: CurveParams> Affine<C> {
         lhs == rhs
     }
 
+    /// −P (free on Weierstrass curves: y ↦ −y).
     pub fn neg(&self) -> Self {
         Affine { x: self.x, y: self.y.neg(), infinity: self.infinity }
     }
 
+    /// Lift to Jacobian coordinates (Z = 1).
     pub fn to_jacobian(&self) -> Jacobian<C> {
         if self.infinity {
             Jacobian::infinity()
@@ -96,8 +114,11 @@ impl<C: CurveParams> Affine<C> {
 /// Jacobian point: (X, Y, Z) ↦ affine (X/Z², Y/Z³); infinity encoded Z = 0.
 #[derive(Clone, Copy, PartialEq, Eq)]
 pub struct Jacobian<C: CurveParams> {
+    /// X coordinate.
     pub x: C::Base,
+    /// Y coordinate.
     pub y: C::Base,
+    /// Z coordinate (zero encodes the point at infinity).
     pub z: C::Base,
 }
 
@@ -112,15 +133,18 @@ impl<C: CurveParams> fmt::Debug for Jacobian<C> {
 }
 
 impl<C: CurveParams> Jacobian<C> {
+    /// The point at infinity (Z = 0).
     pub fn infinity() -> Self {
         Jacobian { x: C::Base::one(), y: C::Base::one(), z: C::Base::zero() }
     }
 
+    /// The subgroup generator.
     pub fn generator() -> Self {
         let (x, y) = C::generator_xy();
         Jacobian { x, y, z: C::Base::one() }
     }
 
+    /// Is this the point at infinity?
     #[inline]
     pub fn is_infinity(&self) -> bool {
         self.z.is_zero()
@@ -245,10 +269,12 @@ impl<C: CurveParams> Jacobian<C> {
         Jacobian { x: x3, y: y3, z: z3 }
     }
 
+    /// −P (y ↦ −y).
     pub fn neg(&self) -> Self {
         Jacobian { x: self.x, y: self.y.neg(), z: self.z }
     }
 
+    /// P − Q.
     pub fn sub(&self, other: &Self) -> Self {
         self.add(&other.neg())
     }

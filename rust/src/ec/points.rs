@@ -94,7 +94,9 @@ pub fn generate_scalars(n: usize, bits: u32, seed: u64) -> Vec<ScalarLimbs> {
 
 /// A complete deterministic MSM workload.
 pub struct MsmWorkload<C: CurveParams> {
+    /// The base points (walk-generated, distinct, on-curve).
     pub points: Vec<Affine<C>>,
+    /// Uniform scalars at the curve's MSM width.
     pub scalars: Vec<ScalarLimbs>,
 }
 

@@ -148,11 +148,12 @@ fn sub_mod_pow(a: &[u64], b: &[u64], k: usize) -> Vec<u64> {
     out
 }
 
-/// Shared contexts for the two base fields (built once).
+/// Shared BN254 base-field context (built once).
 pub static BN254_FP_BARRETT: Lazy<BarrettCtx> = Lazy::new(|| {
     use crate::ff::fp::FieldParams;
     BarrettCtx::new(&crate::ff::params::Bn254FpParams::MODULUS)
 });
+/// Shared BLS12-381 base-field context (built once).
 pub static BLS12_381_FP_BARRETT: Lazy<BarrettCtx> = Lazy::new(|| {
     use crate::ff::fp::FieldParams;
     BarrettCtx::new(&crate::ff::params::Bls12381FpParams::MODULUS)

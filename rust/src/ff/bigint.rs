@@ -171,6 +171,63 @@ pub const fn compute_r2<const N: usize>(p: &[u64; N]) -> [u64; N] {
     x
 }
 
+/// Restoring long division of an M-limb numerator by an N-limb denominator:
+/// returns (quotient, remainder). The denominator must be nonzero and below
+/// `2^(64·N − 1)` (one spare bit so the shifted remainder never overflows its
+/// N limbs) — true for every modulus in the crate. Used by the GLV lattice
+/// setup (`ec::endo`), which needs exact quotients the Montgomery/Barrett
+/// fast paths cannot provide.
+pub fn div_rem_wide<const M: usize, const N: usize>(
+    num: &[u64; M],
+    den: &[u64; N],
+) -> ([u64; M], [u64; N]) {
+    assert!(!is_zero(den), "division by zero");
+    // hard assert: a violated precondition would silently corrupt the
+    // quotient in release builds (the shifted remainder drops its carry)
+    assert!(den[N - 1] >> 63 == 0, "denominator needs a spare top bit");
+    let mut q = [0u64; M];
+    let mut r = [0u64; N];
+    let mut i = 64 * M;
+    while i > 0 {
+        i -= 1;
+        // r = (r << 1) | numerator bit i
+        let mut carry = (num[i / 64] >> (i % 64)) & 1;
+        for limb in r.iter_mut() {
+            let hi = *limb >> 63;
+            *limb = (*limb << 1) | carry;
+            carry = hi;
+        }
+        debug_assert_eq!(carry, 0);
+        if gte(&r, den) {
+            let (d, _) = sub(&r, den);
+            r = d;
+            q[i / 64] |= 1 << (i % 64);
+        }
+    }
+    (q, r)
+}
+
+/// [`div_rem_wide`] for equal widths (the EEA quotient step).
+pub fn div_rem<const N: usize>(a: &[u64; N], b: &[u64; N]) -> ([u64; N], [u64; N]) {
+    div_rem_wide::<N, N>(a, b)
+}
+
+/// Divide a little-endian slice by a small (64-bit) divisor: returns
+/// (quotient, remainder). Exact-exponent manipulation for the cube-root
+/// derivations in `ec::endo` ((q − 1)/3 with a 3-divisibility check).
+pub fn div_rem_small(a: &[u64], d: u64) -> (Vec<u64>, u64) {
+    assert!(d != 0, "division by zero");
+    let mut q = vec![0u64; a.len()];
+    let mut rem: u128 = 0;
+    for i in (0..a.len()).rev() {
+        let cur = (rem << 64) | a[i] as u128;
+        q[i] = (cur / d as u128) as u64;
+        rem = cur % d as u128;
+    }
+    normalize(&mut q);
+    (q, rem as u64)
+}
+
 /// Schoolbook widening multiply into hi/lo halves (runtime use: Barrett path
 /// and tests; the Montgomery hot path uses fused CIOS instead).
 pub fn mul_wide<const N: usize>(a: &[u64; N], b: &[u64; N]) -> ([u64; N], [u64; N]) {
@@ -381,6 +438,56 @@ mod tests {
         assert_eq!(div_pow2(10, &[8]), vec![128]);
         // 2^64 / 3 = 6148914691236517205
         assert_eq!(div_pow2(64, &[3]), vec![6148914691236517205]);
+    }
+
+    #[test]
+    fn div_rem_matches_known_quotients() {
+        // 4-limb / 4-limb with a known split: a = q·b + r
+        let a = [0u64, 0, 0, 1 << 60]; // 2^252
+        let b = [3u64, 0, 0, 0];
+        let (q, r) = div_rem(&a, &b);
+        // 2^252 = 3·q + r with r < 3: q = (2^252 - 1)/3, r = 1 (2^252 ≡ 1 mod 3)
+        assert_eq!(r, [1, 0, 0, 0]);
+        let (lo, hi) = mul_wide(&q, &b);
+        let (sum, carry) = add(&lo, &r);
+        assert_eq!(carry, 0);
+        assert_eq!(sum, a);
+        assert_eq!(hi, [0; 4]);
+        // identity and zero numerators
+        assert_eq!(div_rem(&[7, 0, 0, 0], &[7, 0, 0, 0]), ([1, 0, 0, 0], [0, 0, 0, 0]));
+        assert_eq!(div_rem(&[0; 4], &[5, 0, 0, 0]), ([0; 4], [0; 4]));
+    }
+
+    #[test]
+    fn div_rem_wide_eight_by_four() {
+        // (2^256·x) / d for small x, d: exercises the wide numerator path
+        let mut num = [0u64; 8];
+        num[4] = 1_000_003; // 2^256 · 1000003
+        let den = [97u64, 0, 0, 0];
+        let (q, r) = div_rem_wide::<8, 4>(&num, &den);
+        // spot-check via reconstruction: q·97 + r == num
+        let mut q4 = [0u64; 4];
+        q4.copy_from_slice(&q[..4]);
+        let (lo, hi) = mul_wide(&q4, &den);
+        let (sum, carry) = add(&lo, &r);
+        assert_eq!(carry, 0);
+        assert_eq!(&sum[..], &num[..4]);
+        assert_eq!(hi[0], num[4]); // high half carries the 2^256 part
+        assert!(r[0] < 97 && r[1] | r[2] | r[3] == 0);
+        assert_eq!(&q[4..], &[0u64; 4]);
+    }
+
+    #[test]
+    fn div_rem_small_matches_long_division() {
+        let (q, r) = div_rem_small(&[10, 0, 7], 3);
+        // value = 7·2^128 + 10; q·3 + r must reconstruct it
+        assert!(r < 3);
+        let back_lo = q[0].wrapping_mul(3).wrapping_add(r);
+        assert_eq!(back_lo, 10);
+        let (q2, r2) = div_rem_small(&[9], 3);
+        assert_eq!((q2, r2), (vec![3], 0));
+        let (q3, r3) = div_rem_small(&[u64::MAX, u64::MAX], 1);
+        assert_eq!((q3, r3), (vec![u64::MAX, u64::MAX], 0));
     }
 
     #[test]

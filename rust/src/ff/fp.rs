@@ -41,19 +41,29 @@ pub trait FieldParams<const N: usize>:
 pub trait Field:
     Copy + Clone + fmt::Debug + PartialEq + Eq + Send + Sync + 'static + Hash
 {
+    /// The additive identity.
     fn zero() -> Self;
+    /// The multiplicative identity.
     fn one() -> Self;
+    /// Is this the additive identity?
     fn is_zero(&self) -> bool;
+    /// Field addition.
     fn add(&self, other: &Self) -> Self;
+    /// Field subtraction.
     fn sub(&self, other: &Self) -> Self;
+    /// Additive inverse.
     fn neg(&self) -> Self;
+    /// Field multiplication.
     fn mul(&self, other: &Self) -> Self;
+    /// Squaring (specialized where cheaper than `mul(self)`).
     fn square(&self) -> Self;
+    /// 2·self.
     fn double(&self) -> Self {
         self.add(self)
     }
     /// Multiplicative inverse (None for zero).
     fn inv(&self) -> Option<Self>;
+    /// Embed a small integer.
     fn from_u64(v: u64) -> Self;
     /// Uniform random element.
     fn random(rng: &mut Rng) -> Self;
@@ -72,6 +82,7 @@ pub trait Field:
         }
         out
     }
+    /// Exponentiation by a 64-bit exponent.
     fn pow_u64(&self, e: u64) -> Self {
         self.pow_limbs(&[e])
     }

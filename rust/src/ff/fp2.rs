@@ -13,11 +13,14 @@ use std::hash::Hash;
 /// Element c0 + c1·u of Fp².
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Fp2<P: FieldParams<N>, const N: usize> {
+    /// The base-field component.
     pub c0: Fp<P, N>,
+    /// The u-component.
     pub c1: Fp<P, N>,
 }
 
 impl<P: FieldParams<N>, const N: usize> Fp2<P, N> {
+    /// Build c0 + c1·u from components.
     pub const fn new(c0: Fp<P, N>, c1: Fp<P, N>) -> Self {
         Fp2 { c0, c1 }
     }

@@ -17,18 +17,22 @@ thread_local! {
     static INV: Cell<u64> = const { Cell::new(0) };
 }
 
+/// Count one modular multiplication (called by the field cores).
 #[inline(always)]
 pub fn count_mul() {
     MUL.with(|c| c.set(c.get() + 1));
 }
+/// Count one modular squaring.
 #[inline(always)]
 pub fn count_square() {
     SQUARE.with(|c| c.set(c.get() + 1));
 }
+/// Count one modular addition/subtraction/doubling.
 #[inline(always)]
 pub fn count_add() {
     ADD.with(|c| c.set(c.get() + 1));
 }
+/// Count one modular inversion.
 #[inline(always)]
 pub fn count_inv() {
     INV.with(|c| c.set(c.get() + 1));

@@ -22,17 +22,20 @@ pub const UDA_LATENCY_STD: u64 = 270;
 /// UDA pipeline latency, Montgomery build.
 pub const UDA_LATENCY_MONT: u64 = 425;
 
-/// Point-processor fmax (§IV-B4): >700 MHz for 254-bit, >600 MHz for
-/// 381-bit — the *unit* closes timing well above the system clock.
+/// Point-processor fmax (§IV-B4): >700 MHz for 254-bit — the *unit*
+/// closes timing well above the system clock.
 pub const UNIT_FMAX_254_HZ: f64 = 700e6;
+/// Point-processor fmax for the 381-bit build (>600 MHz, §IV-B4).
 pub const UNIT_FMAX_381_HZ: f64 = 600e6;
 
-/// System fmax bounds (§V-C1: "achieved fmax was 351MHz … for other build
+/// System fmax ceiling (§V-C1: "achieved fmax was 351MHz … for other build
 /// variations fmax was in the range of 334-367MHz").
 pub const SYS_FMAX_CEIL_HZ: f64 = 367e6;
+/// System fmax floor of the same §V-C1 range.
 pub const SYS_FMAX_FLOOR_HZ: f64 = 334e6;
 /// Linear congestion model: fmax = min(ceil, A − B·utilization).
 pub const SYS_FMAX_A_HZ: f64 = 425e6;
+/// Slope of the congestion model (Hz lost per unit ALM utilization).
 pub const SYS_FMAX_B_HZ: f64 = 80e6;
 
 /// Effective DDR bandwidth per memory-channel group feeding one BAM
@@ -67,8 +70,11 @@ pub const HW_RBAM_K2: u32 = 6;
 
 /// BSP-only board power (Table VIII row 1).
 pub const POWER_BSP_W: f64 = 17.25;
+/// Standby watts per million ALMs (surrogate fit over Table VIII).
 pub const POWER_STANDBY_PER_MALM: f64 = 65.857;
+/// Standby watts per thousand DSPs (same fit; sign is the fit's, not physics).
 pub const POWER_STANDBY_PER_KDSP: f64 = -2.954;
+/// Standby watts per thousand M20Ks (same fit).
 pub const POWER_STANDBY_PER_KM20K: f64 = -0.714;
 /// Dynamic base, standard-form datapath.
 pub const POWER_DYN_BASE_STD_W: f64 = 11.0;
@@ -106,13 +112,18 @@ pub const UDA_MODMULS: u32 = 18;
 /// ... and in the naive PA+PD pair (25 instances [23]).
 pub const PAPD_MODMULS: u32 = 25;
 
-/// Table IV blocks (254-bit Montgomery, the only PAPD build): the separate
-/// fully-pipelined PA and the folded PD unit, quoted verbatim.
+/// Table IV PA block ALMs (254-bit Montgomery, the only PAPD build):
+/// the separate fully-pipelined point adder, quoted verbatim.
 pub const PA_BLOCK_ALM: f64 = 272_000.0;
+/// Table IV PA block DSPs.
 pub const PA_BLOCK_DSP: f64 = 4_800.0;
+/// Table IV PA block M20Ks.
 pub const PA_BLOCK_M20K: f64 = 332.0;
+/// Table IV folded point-doubler ALMs.
 pub const PD_BLOCK_ALM: f64 = 100_100.0;
+/// Table IV folded point-doubler DSPs.
 pub const PD_BLOCK_DSP: f64 = 255.0;
+/// Table IV folded point-doubler M20Ks.
 pub const PD_BLOCK_M20K: f64 = 410.0;
 
 /// Practical ALM utilization ceiling for place-and-route (§V-C1: 91% is
@@ -150,6 +161,7 @@ pub fn m20k_per_modmul(bits: u32, montgomery: bool) -> f64 {
 /// Non-adder system overhead (BSP shell + SPS + IS-RBAM + DNA + host
 /// interface), ALMs. Fitted from Table VII: S=1 rows minus Table V adder.
 pub const SHELL_ALM: f64 = 293_000.0;
+/// Shell M20K overhead of the same fit.
 pub const SHELL_M20K: f64 = 1_470.0;
 
 /// Per-BAM-instance overhead (bucket memory control, scheduling), by curve
@@ -162,6 +174,7 @@ pub fn bam_alm(bits: u32) -> f64 {
     }
 }
 
+/// Per-BAM-instance M20K (bucket memory), by curve field width.
 pub fn bam_m20k(bits: u32) -> f64 {
     // Bucket storage: 2^k Jacobian points per window live in M20K.
     match bits {

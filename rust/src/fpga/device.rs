@@ -5,9 +5,13 @@
 /// Static FPGA device description.
 #[derive(Clone, Copy, Debug)]
 pub struct Device {
+    /// Marketing name of the card + FPGA.
     pub name: &'static str,
+    /// Adaptive logic modules available.
     pub alms: u64,
+    /// DSP blocks available.
     pub dsps: u64,
+    /// M20K memory blocks available.
     pub m20ks: u64,
     /// DDR4 channel groups usable by BAM instances (IA-840f: 4 banks).
     pub ddr_groups: u32,

@@ -7,6 +7,7 @@ use super::uda::UdaPipe;
 /// Combine-phase model.
 #[derive(Clone, Copy, Debug)]
 pub struct DnaModel {
+    /// The UDA pipe the combine chain runs on.
     pub pipe: UdaPipe,
 }
 

@@ -36,11 +36,14 @@ pub use sab::{MsmTiming, SabConfig, SabModel};
 /// The two curves as the model keys them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CurveId {
+    /// BN254 (the paper's "BN128"), 254-bit base field.
     Bn254,
+    /// BLS12-381, 381-bit base field.
     Bls12381,
 }
 
 impl CurveId {
+    /// Display name in the paper's spelling ("BN128" / "BLS12-381").
     pub fn name(&self) -> &'static str {
         match self {
             CurveId::Bn254 => "BN128",

@@ -17,7 +17,9 @@ use super::resources::{DesignVariant, NumberForm, ResourceModel};
 /// Power model output (watts).
 #[derive(Clone, Copy, Debug)]
 pub struct PowerEstimate {
+    /// Board power with the build loaded but idle.
     pub standby_w: f64,
+    /// Board power during an MSM run.
     pub active_w: f64,
 }
 

@@ -20,13 +20,19 @@ use super::uda::UdaPipe;
 /// Reduction strategies the model can time (mirrors `msm::Reduction`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReductionKind {
+    /// Algorithm 2's fully serial running sum.
     RunningSum,
-    Recursive { k2: u32 },
+    /// The paper's IS-RBAM recursive reduction.
+    Recursive {
+        /// Sub-window width k₂ of the second-level bucket MSM.
+        k2: u32,
+    },
 }
 
 /// Reduction-phase model for one window of buckets.
 #[derive(Clone, Copy, Debug)]
 pub struct RbamModel {
+    /// The UDA pipe reductions run on.
     pub pipe: UdaPipe,
     /// Parallel IS-RBAM instances (reduces the serial sections of distinct
     /// windows concurrently).

@@ -23,12 +23,14 @@ pub enum NumberForm {
 pub struct DesignVariant {
     /// Field width (254 = BN128, 381 = BLS12-381).
     pub bits: u32,
+    /// Datapath number representation.
     pub form: NumberForm,
     /// Unified double-add pipeline (true) vs separate PA + folded PD.
     pub unified: bool,
 }
 
 impl DesignVariant {
+    /// Display label in the paper's table style (e.g. `UDA-254-Standard`).
     pub fn label(&self) -> String {
         let arch = if self.unified { "UDA" } else { "PA+PD" };
         let form = match self.form {
@@ -42,8 +44,11 @@ impl DesignVariant {
 /// A resource vector.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Resources {
+    /// Adaptive logic modules.
     pub alms: f64,
+    /// DSP blocks.
     pub dsps: f64,
+    /// M20K memory blocks.
     pub m20ks: f64,
 }
 

@@ -21,12 +21,14 @@ use super::sps::SpsModel;
 use super::uda::UdaPipe;
 use super::CurveId;
 use crate::msm::partial::{ShardPolicy, ShardSpec};
-use crate::msm::plan::{MsmConfig, MsmPlan, Reduction, Slicing};
+use crate::msm::plan::{Decomposition, MsmConfig, MsmPlan, Reduction, Slicing};
 
 /// One accelerator build.
 #[derive(Clone, Copy, Debug)]
 pub struct SabConfig {
+    /// Target curve (fixes field width, point bytes, window count).
     pub curve: CurveId,
+    /// Point-processor design point (bits / number form / unified).
     pub variant: DesignVariant,
     /// Scaling factor S (replicated BAM + channel group).
     pub scaling: u32,
@@ -40,6 +42,12 @@ pub struct SabConfig {
     /// reduce chain; a carry window is added only when the top slice can
     /// carry — never at the paper's k = 12 scalar widths).
     pub slicing: Slicing,
+    /// Scalar decomposition: [`Decomposition::Glv`] models the
+    /// endomorphism split — half the window passes over a doubled
+    /// (P, φ(P)) point set, so total fill/stream work is unchanged while
+    /// the serial reduce chain and DNA combine halve again; DDR point
+    /// residency doubles (see `coordinator::pointcache::resident_bytes`).
+    pub decomposition: Decomposition,
 }
 
 impl SabConfig {
@@ -57,6 +65,7 @@ impl SabConfig {
             reduction: ReductionKind::Recursive { k2: calib::HW_RBAM_K2 },
             rbam_units: 1,
             slicing: Slicing::Unsigned,
+            decomposition: Decomposition::Full,
         }
     }
 
@@ -64,6 +73,24 @@ impl SabConfig {
     /// half the serial reduce chain — the SZKP-style what-if).
     pub fn paper_signed(curve: CurveId, scaling: u32) -> SabConfig {
         SabConfig { slicing: Slicing::Signed, ..SabConfig::paper(curve, scaling) }
+    }
+
+    /// The signed-digit design with the GLV endomorphism split layered on
+    /// top (the what-if motivated by SZKP/ZK-Flex scalar decomposition):
+    /// half-width scalars against the doubled (P, φ(P)) point set. Window
+    /// passes halve, so the serial reduce chain and the DNA combine drop
+    /// another ~2x beyond signed digits; DDR residency doubles
+    /// ([`Self::ddr_points`]).
+    pub fn paper_glv(curve: CurveId, scaling: u32) -> SabConfig {
+        SabConfig { decomposition: Decomposition::Glv, ..SabConfig::paper_signed(curve, scaling) }
+    }
+
+    /// Points resident in device DDR for an m-point MSM under this build
+    /// (GLV keeps the endo-expanded set resident: 2m). The factor itself
+    /// is [`Decomposition::expansion_factor`] — one rule, shared with the
+    /// coordinator's residency accounting.
+    pub fn ddr_points(&self, m: u64) -> u64 {
+        m.saturating_mul(self.decomposition.expansion_factor())
     }
 
     /// The pre-UDA Montgomery build (Table VII row 1, BN128 only).
@@ -75,6 +102,7 @@ impl SabConfig {
             reduction: ReductionKind::RunningSum,
             rbam_units: 1,
             slicing: Slicing::Unsigned,
+            decomposition: Decomposition::Full,
         }
     }
 
@@ -87,7 +115,12 @@ impl SabConfig {
         };
         MsmPlan::new(
             self.curve.field_bits(),
-            &MsmConfig { window_bits: calib::HW_WINDOW_BITS, reduction, slicing: self.slicing },
+            &MsmConfig {
+                window_bits: calib::HW_WINDOW_BITS,
+                reduction,
+                slicing: self.slicing,
+                decomposition: self.decomposition,
+            },
         )
     }
 }
@@ -95,11 +128,17 @@ impl SabConfig {
 /// Timing breakdown of one MSM call (seconds).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MsmTiming {
+    /// Host→device scalar transfer (PCIe).
     pub transfer_s: f64,
+    /// BAM bucket-fill compute across all windows.
     pub fill_s: f64,
+    /// DDR point streaming across all window passes.
     pub stream_s: f64,
+    /// Non-overlapped reduction tail (IS-RBAM or running sum).
     pub reduce_s: f64,
+    /// DNA Horner combine.
     pub combine_s: f64,
+    /// Fixed per-call overhead (driver/launch/readback).
     pub overhead_s: f64,
     /// Which of fill/stream bounds the steady-state phase.
     pub stream_bound: bool,
@@ -124,12 +163,15 @@ impl MsmTiming {
 /// The composed model.
 #[derive(Clone, Copy, Debug)]
 pub struct SabModel {
+    /// The accelerator build being timed.
     pub cfg: SabConfig,
+    /// Modeled system clock (Hz) of that build.
     pub fmax_hz: f64,
     pipe: UdaPipe,
 }
 
 impl SabModel {
+    /// Compose the per-stage models for one build.
     pub fn new(cfg: SabConfig) -> SabModel {
         let rm = ResourceModel;
         let fmax_hz = rm.system_fmax(cfg.variant, cfg.scaling);
@@ -153,21 +195,26 @@ impl SabModel {
         let windows = plan.windows;
         let live_buckets = plan.live_buckets();
         let s = self.cfg.scaling.max(1);
+        // GLV builds stream/fill the endo-expanded set: 2m ops per window
+        // over half the windows — total fill and stream work is unchanged;
+        // the win is the halved serial chain and combine below.
+        let m_eff = self.cfg.ddr_points(m);
 
-        // 1. scalar transfer (PCIe)
+        // 1. scalar transfer (PCIe) — m full-width scalars either way (the
+        // half-width split is a device-side integer computation).
         let transfer_s = m as f64 * curve.scalar_bytes() as f64 / calib::PCIE_BW;
 
         // 2. fills: windows are processed sequentially; within a window the
-        // m ops are split across S BAM instances. PA+PD builds also pay the
-        // folded-PD penalty on the ~m/2^k doubling-class ops mixed in.
+        // m_eff ops are split across S BAM instances. PA+PD builds also pay
+        // the folded-PD penalty on the doubling-class ops mixed in.
         let bam = BamModel { buckets: live_buckets, pipe: self.pipe };
-        let per_window_ops = m.div_ceil(s as u64);
+        let per_window_ops = m_eff.div_ceil(s as u64);
         let fill_cycles = bam.fill_cycles(per_window_ops) * windows as u64;
         let fill_s = fill_cycles as f64 / self.fmax_hz;
 
-        // concurrent stream passes
+        // concurrent stream passes over the (possibly expanded) point set
         let sps = SpsModel::new(s);
-        let stream_s = sps.msm_stream_seconds(curve, m, windows);
+        let stream_s = sps.msm_stream_seconds(curve, m_eff, windows);
 
         // 3. reduction: in steady state a window's reduction overlaps the
         // next window's fill; only the non-overlapped remainder is exposed.
@@ -341,6 +388,52 @@ mod tests {
         let t_u = SabModel::new(ur).time_msm(100_000).total_s();
         let t_s = SabModel::new(sr).time_msm(100_000).total_s();
         assert!(t_s < t_u, "signed {t_s} vs unsigned {t_u}");
+    }
+
+    #[test]
+    fn glv_build_halves_windows_chain_and_doubles_residency() {
+        let signed = SabConfig::paper_signed(CurveId::Bn254, 2);
+        let glv = SabConfig::paper_glv(CurveId::Bn254, 2);
+        let ps = signed.plan();
+        let pg = glv.plan();
+        // 254-bit scalars → 128-bit halves → 11 windows instead of 22
+        assert_eq!(ps.windows, 22);
+        assert_eq!(pg.windows, 11);
+        // bucket memory is per-window: unchanged; the serial chain halves
+        // with the window count
+        assert_eq!(pg.live_buckets(), ps.live_buckets());
+        assert_eq!(2 * pg.serial_reduce_ops(), ps.serial_reduce_ops());
+        // DDR residency doubles (the pointcache budget must account for it)
+        assert_eq!(glv.ddr_points(1_000), 2_000);
+        assert_eq!(signed.ddr_points(1_000), 1_000);
+        // in the reduce-exposed (running-sum) regime the halved chain wins
+        // end to end
+        let sr = SabConfig { reduction: ReductionKind::RunningSum, ..signed };
+        let gr = SabConfig { reduction: ReductionKind::RunningSum, ..glv };
+        let t_s = SabModel::new(sr).time_msm(100_000).total_s();
+        let t_g = SabModel::new(gr).time_msm(100_000).total_s();
+        assert!(t_g < t_s, "glv {t_g} vs signed {t_s}");
+    }
+
+    #[test]
+    fn glv_leaves_stream_and_fill_work_unchanged() {
+        // BN254: 2m ops over exactly half the windows — steady-state
+        // stream/fill totals are unchanged (to within per-window fixed
+        // costs), while the combine halves with the window count.
+        let signed = SabModel::new(SabConfig::paper_signed(CurveId::Bn254, 2));
+        let glv = SabModel::new(SabConfig::paper_glv(CurveId::Bn254, 2));
+        let m = 4_000_000;
+        let ts = signed.time_msm(m);
+        let tg = glv.time_msm(m);
+        let stream_ratio = tg.stream_s / ts.stream_s;
+        assert!((stream_ratio - 1.0).abs() < 0.05, "stream ratio {stream_ratio}");
+        assert!(tg.fill_s <= ts.fill_s * 1.02, "{} vs {}", tg.fill_s, ts.fill_s);
+        assert!(tg.combine_s < ts.combine_s * 0.7, "{} vs {}", tg.combine_s, ts.combine_s);
+        assert_eq!(ts.transfer_s, tg.transfer_s); // scalars transfer whole
+        assert!(tg.total_s() <= ts.total_s());
+        // BLS12-381: 381-bit accounting → 32 windows drop to 17 (the
+        // half-width top slice picks up a carry window at k = 12)
+        assert_eq!(SabConfig::paper_glv(CurveId::Bls12381, 2).plan().windows, 17);
     }
 
     #[test]

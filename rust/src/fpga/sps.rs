@@ -19,6 +19,7 @@ pub struct SpsModel {
 }
 
 impl SpsModel {
+    /// Streamer model for scaling factor S (capped at the card's banks).
     pub fn new(s: u32) -> SpsModel {
         SpsModel {
             bw_per_group: calib::DDR_BW_PER_GROUP,

@@ -23,6 +23,14 @@
 //! The [`report`] module regenerates every table and figure of the paper's
 //! evaluation section; `rust/benches/` contains one harness per table and
 //! figure.
+//!
+//! Start with the repository-level `README.md` for the architecture map
+//! and a CLI tour; `rust/DESIGN.md` holds the full design notes.
+
+// Every public item must carry rustdoc: CI runs `cargo doc --no-deps`
+// with `RUSTDOCFLAGS="-D warnings"`, so a missing doc fails the build
+// there rather than rotting silently.
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod config;

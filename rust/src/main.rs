@@ -2,11 +2,11 @@
 //! offline dependency set).
 //!
 //! ```text
-//! ifzkp msm     --curve bn254|bls12_381 --size N [--backend native|sim|engine] [--threads T]
+//! ifzkp msm     --curve bn254|bls12_381 --size N [--backend native|sim|engine] [--threads T] [--glv]
 //! ifzkp prove   --constraints N
 //! ifzkp serve   [--config serve.toml] [--jobs N] [--size N] [--devices N] [--sharded chunk|window]
 //! ifzkp sim     --curve ... [--size N] [--scaling S]
-//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|whatif|all]
+//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|glv|whatif|all]
 //! ifzkp figures [--id 4|5|6|7|8|all]
 //! ifzkp info
 //! ```
@@ -67,12 +67,21 @@ fn cmd_msm(args: &Args) -> anyhow::Result<()> {
     let size = args.get_usize("size", 1 << 14);
     let backend = args.get("backend", "native");
     let threads = args.get_usize("threads", msm::parallel::default_threads());
-    println!("MSM: curve={} size={} backend={backend}", curve.name(), human_count(size as u64));
+    // --glv switches the plan to the endomorphism split (half the window
+    // passes over the doubled (P, phi(P)) set); results are identical.
+    let glv = args.get("glv", "") == "true";
+    let base_cfg = if glv { MsmConfig::default().glv() } else { MsmConfig::default() };
+    println!(
+        "MSM: curve={} size={} backend={backend}{}",
+        curve.name(),
+        human_count(size as u64),
+        if glv { " [glv]" } else { "" }
+    );
 
-    fn run_native<C: CurveParams>(size: usize, threads: usize) -> f64 {
+    fn run_native<C: CurveParams>(size: usize, threads: usize, cfg: &MsmConfig) -> f64 {
         let w = points::workload::<C>(size, 1);
         let sw = Stopwatch::start();
-        let out = msm::parallel::msm(&w.points, &w.scalars, &MsmConfig::default(), threads);
+        let out = msm::parallel::msm(&w.points, &w.scalars, cfg, threads);
         let t = sw.secs();
         std::hint::black_box(out);
         t
@@ -81,8 +90,8 @@ fn cmd_msm(args: &Args) -> anyhow::Result<()> {
     match backend.as_str() {
         "native" => {
             let t = match curve {
-                CurveId::Bn254 => run_native::<Bn254G1>(size, threads),
-                CurveId::Bls12381 => run_native::<Bls12381G1>(size, threads),
+                CurveId::Bn254 => run_native::<Bn254G1>(size, threads, &base_cfg),
+                CurveId::Bls12381 => run_native::<Bls12381G1>(size, threads, &base_cfg),
             };
             println!(
                 "native ({threads} threads): {} ({:.3} M points/s)",
@@ -92,7 +101,9 @@ fn cmd_msm(args: &Args) -> anyhow::Result<()> {
         }
         "sim" => {
             let s = args.get_usize("scaling", 2) as u32;
-            let model = SabModel::new(SabConfig::paper(curve, s));
+            let cfg =
+                if glv { SabConfig::paper_glv(curve, s) } else { SabConfig::paper(curve, s) };
+            let model = SabModel::new(cfg);
             let timing = model.time_msm(size as u64);
             println!(
                 "modeled FPGA (S={s}): {} ({:.3} M points/s){}",
@@ -117,7 +128,10 @@ fn cmd_msm(args: &Args) -> anyhow::Result<()> {
             let engine = ifzkp::runtime::UdaEngine::<Bn254G1>::load(&ctx, &manifest)?;
             println!("engine compiled in {}", human_secs(sw.secs()));
             let w = points::workload::<Bn254G1>(size, 1);
-            let cfg = MsmConfig::new(8, Default::default());
+            let mut cfg = MsmConfig::new(8, Default::default());
+            if glv {
+                cfg = cfg.glv();
+            }
             let sw = Stopwatch::start();
             let (out, stats) =
                 ifzkp::runtime::msm_engine::msm_engine(&engine, &w.points, &w.scalars, &cfg)?;
@@ -272,6 +286,10 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
     if all || id == "ablation" {
         println!("{}", tables::ablation_reduction());
         println!("{}", tables::ablation_signed(2048, 20240710));
+        println!("{}", tables::ablation_glv(2048, 20240710));
+    }
+    if id == "glv" {
+        println!("{}", tables::ablation_glv(args.get_usize("size", 2048), 20240710));
     }
     if all || id == "whatif" {
         println!("{}", tables::whatif_multi_kernel(args.get_usize("size", 16_000_000) as u64));

@@ -201,6 +201,8 @@ pub fn msm<C: CurveParams>(
         return Jacobian::infinity();
     }
     let plan = MsmPlan::for_curve::<C>(cfg);
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
     let per_window: Vec<Jacobian<C>> = (0..plan.windows)
         .map(|j| {
             let buckets =
@@ -229,6 +231,10 @@ pub fn msm_parallel<C: CurveParams>(
     if threads == 1 || windows == 1 {
         return msm(points, scalars, cfg);
     }
+    // One shared prepared view (GLV expansion when configured) for every
+    // window thread.
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
     let mut window_results = vec![Jacobian::<C>::infinity(); windows as usize];
     std::thread::scope(|scope| {
         let per = windows.div_ceil(threads as u32) as usize;
@@ -287,6 +293,7 @@ mod tests {
                     window_bits: k,
                     reduction: Reduction::Recursive { k2: 4 },
                     slicing,
+                    ..Default::default()
                 };
                 let got = msm(&w.points, &w.scalars, &cfg);
                 assert!(got.eq_point(&want), "k={k} {slicing:?}");

@@ -5,9 +5,11 @@
 //!
 //! * [`plan`] — the shared `MsmPlan`: window slicing, digit encoding
 //!   (unsigned or **signed**, which halves bucket memory and the serial
-//!   reduce chain), bucket indexing, reduction strategy, and the serial
-//!   op accounting the FPGA model consumes. Signed decomposition itself
-//!   lives in [`signed`]; the raw slice primitives at
+//!   reduce chain), scalar decomposition (full-width or the **GLV**
+//!   endomorphism split, which halves the window passes on top — see
+//!   [`crate::ec::endo`]), bucket indexing, reduction strategy, and the
+//!   serial op accounting the FPGA model consumes. Signed digit re-coding
+//!   itself lives in [`signed`]; the raw slice primitives at
 //!   [`crate::ec::scalar`].
 //! * Backends, all consuming the same plan and bit-exact against
 //!   [`naive`]:
@@ -40,7 +42,7 @@ use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
 pub use partial::{PartialMsm, ShardPolicy, ShardSpec};
 pub use pippenger::msm as msm_pippenger;
-pub use plan::{MsmConfig, MsmPlan, Reduction, Slicing};
+pub use plan::{Decomposition, MsmConfig, MsmInput, MsmPlan, Reduction, Slicing};
 
 /// Heuristic window width: balances m/window bucket fills against 2^k
 /// reduction work. The usual c ≈ log2(m) − 3 rule, clamped to the paper's
@@ -60,11 +62,17 @@ pub enum Backend {
     /// Serial Pippenger through the shared plan.
     Pippenger,
     /// Window-parallel Pippenger over OS threads.
-    Parallel { threads: usize },
+    Parallel {
+        /// OS threads the windows fan out across.
+        threads: usize,
+    },
     /// Batch-affine bucket fills (shared batch inversion), serial.
     BatchAffine,
     /// Batch-affine fills, window-parallel.
-    BatchAffineParallel { threads: usize },
+    BatchAffineParallel {
+        /// OS threads the windows fan out across.
+        threads: usize,
+    },
 }
 
 impl Backend {
@@ -83,7 +91,24 @@ impl Backend {
 }
 
 /// Run an MSM on the chosen backend. Every backend routes through the same
-/// [`MsmPlan`], so results are bit-exact across backends for any config.
+/// [`MsmPlan`], so results are bit-exact across backends for any config —
+/// including the GLV fast path ([`MsmConfig::glv`]).
+///
+/// # Examples
+///
+/// ```
+/// use ifzkp::ec::{points, Bn254G1};
+/// use ifzkp::msm::{self, Backend, MsmConfig};
+///
+/// let w = points::workload::<Bn254G1>(64, 7);
+/// let cfg = MsmConfig::default();
+/// let a = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+/// let b = msm::execute(Backend::BatchAffine, &w.points, &w.scalars, &cfg);
+/// // the GLV endomorphism split changes the execution plan, not the sum
+/// let c = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg.glv());
+/// assert!(a.eq_point(&b));
+/// assert!(a.eq_point(&c));
+/// ```
 pub fn execute<C: CurveParams>(
     backend: Backend,
     points: &[Affine<C>],

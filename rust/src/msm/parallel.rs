@@ -28,6 +28,10 @@ pub fn msm<C: CurveParams>(
     if threads == 1 || windows == 1 {
         return super::pippenger::msm(points, scalars, cfg);
     }
+    // Decomposition (GLV expansion when configured) happens once, up
+    // front, so every window thread reads the same prepared view.
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
 
     // Window results, computed in parallel.
     let mut window_results = vec![Jacobian::<C>::infinity(); windows as usize];
@@ -77,7 +81,12 @@ mod tests {
         let w = points::workload::<Bn254G1>(96, 84);
         let want = naive::msm(&w.points, &w.scalars);
         for slicing in [Slicing::Unsigned, Slicing::Signed] {
-            let cfg = MsmConfig { window_bits: 9, reduction: Reduction::RunningSum, slicing };
+            let cfg = MsmConfig {
+                window_bits: 9,
+                reduction: Reduction::RunningSum,
+                slicing,
+                ..Default::default()
+            };
             let got = msm(&w.points, &w.scalars, &cfg, 3);
             assert!(got.eq_point(&want), "{slicing:?}");
         }

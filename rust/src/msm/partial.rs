@@ -57,9 +57,19 @@ impl ShardPolicy {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShardSpec {
     /// Full windows over `points[lo..hi]` (scalars sliced identically).
-    PointChunk { lo: usize, hi: usize },
+    PointChunk {
+        /// First point index (inclusive).
+        lo: usize,
+        /// Last point index (exclusive).
+        hi: usize,
+    },
     /// Windows `[lo, hi)` over all points, pre-shifted to global position.
-    WindowRange { lo: u32, hi: u32 },
+    WindowRange {
+        /// First window index (inclusive).
+        lo: u32,
+        /// Last window index (exclusive).
+        hi: u32,
+    },
 }
 
 impl ShardSpec {
@@ -127,6 +137,15 @@ pub fn msm_window_range<C: CurveParams>(
     assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
     let plan = MsmPlan::for_curve::<C>(cfg);
     assert!(lo <= hi && hi <= plan.windows, "window range [{lo}, {hi}) outside plan");
+    // Per-point GLV expansion is deterministic, so every device expanding
+    // the full set for its window range produces identical inputs — the
+    // merge invariant below survives the decomposition. Each shard
+    // expands independently (O(m) integer work, duplicated per device):
+    // mandatory across real distributed devices, and accepted in the
+    // in-process pool too, where it is noise next to the O(m·windows)
+    // point operations a shard performs and buys one shared code path.
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
     let mut acc = Jacobian::<C>::infinity();
     for j in (lo..hi).rev() {
         for _ in 0..plan.window_bits {
@@ -162,6 +181,8 @@ pub fn msm_window_range_threaded<C: CurveParams>(
     assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
     let plan = MsmPlan::for_curve::<C>(cfg);
     assert!(hi <= plan.windows, "window range [{lo}, {hi}) outside plan");
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
     let mut window_results = vec![Jacobian::<C>::infinity(); count];
     std::thread::scope(|scope| {
         let per = count.div_ceil(threads);
@@ -221,7 +242,9 @@ pub fn execute_shard<C: CurveParams>(
 pub struct PartialMsm<C: CurveParams> {
     /// Position in the shard plan (the merge orders by this).
     pub index: usize,
+    /// The shard this partial answers.
     pub spec: ShardSpec,
+    /// The shard's (pre-shifted, addition-ready) partial sum.
     pub output: Jacobian<C>,
 }
 

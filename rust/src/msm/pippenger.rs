@@ -35,6 +35,8 @@ pub fn msm<C: CurveParams>(
         return Jacobian::infinity();
     }
     let plan = MsmPlan::for_curve::<C>(cfg);
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
     let per_window: Vec<Jacobian<C>> = (0..plan.windows)
         .map(|j| plan.reduce(&plan.fill_window(points, scalars, j)))
         .collect();
@@ -56,6 +58,7 @@ pub struct MsmCost {
 }
 
 impl MsmCost {
+    /// All point operations across the three phases.
     pub fn total_point_ops(&self) -> u64 {
         self.fill_ops + self.reduce_ops + self.combine_ops
     }
@@ -69,6 +72,8 @@ pub fn msm_with_cost<C: CurveParams>(
 ) -> (Jacobian<C>, MsmCost) {
     assert_eq!(points.len(), scalars.len());
     let plan = MsmPlan::for_curve::<C>(cfg);
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
     let mm0 = crate::ff::opcount::snapshot();
 
     let mut cost = MsmCost::default();
@@ -111,11 +116,9 @@ mod tests {
         for k in [4u32, 8, 12] {
             for red in [Reduction::RunningSum, Reduction::Recursive { k2: 3 }] {
                 for slicing in [Slicing::Unsigned, Slicing::Signed] {
-                    let got = msm(
-                        &w.points,
-                        &w.scalars,
-                        &MsmConfig { window_bits: k, reduction: red, slicing },
-                    );
+                    let cfg =
+                        MsmConfig { window_bits: k, reduction: red, slicing, ..Default::default() };
+                    let got = msm(&w.points, &w.scalars, &cfg);
                     assert!(got.eq_point(&want), "k={k} red={red:?} {slicing:?}");
                 }
             }
@@ -226,7 +229,12 @@ mod tests {
         let (rs, cs) = msm_with_cost(
             &w.points,
             &w.scalars,
-            &MsmConfig { window_bits: k, reduction: Reduction::RunningSum, slicing: Slicing::Signed },
+            &MsmConfig {
+                window_bits: k,
+                reduction: Reduction::RunningSum,
+                slicing: Slicing::Signed,
+                ..Default::default()
+            },
         );
         assert!(ru.eq_point(&rs));
         // compare per-window reduce ops (window counts can differ when the
@@ -236,6 +244,7 @@ mod tests {
             window_bits: k,
             reduction: Reduction::RunningSum,
             slicing: Slicing::Signed,
+            ..Default::default()
         });
         let per_u = cu.reduce_ops as f64 / pu.windows as f64;
         let per_s = cs.reduce_ops as f64 / ps.windows as f64;

@@ -22,9 +22,17 @@
 //!
 //! Buckets use natural indexing: slot `b` holds the points whose digit has
 //! magnitude `b`; slot 0 is a dummy (digit 0 contributes nothing).
+//!
+//! On top of the digit encoding sits the scalar **decomposition**
+//! ([`Decomposition`]): the GLV fast path rewrites each full-width term
+//! `k·P` as two half-width terms `k1·P + k2·φ(P)` using the curve's
+//! cube-root endomorphism (`ec::endo`), halving the window passes against
+//! a doubled point set. Backends stay decomposition-agnostic: they call
+//! [`MsmPlan::prepare`] once and run their usual fill/reduce/combine over
+//! whatever point/scalar view it returns.
 
 use super::signed;
-use crate::ec::{scalar, Affine, CurveParams, Jacobian, ScalarLimbs};
+use crate::ec::{endo, scalar, Affine, CurveParams, Jacobian, ScalarLimbs};
 
 /// Digit encoding for scalar slices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -52,13 +60,45 @@ impl Slicing {
     }
 }
 
+/// Scalar decomposition applied before window slicing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Decomposition {
+    /// Scalars enter the window slicer at their full width (the paper's
+    /// hardware pipeline).
+    #[default]
+    Full,
+    /// GLV endomorphism split (`ec::endo`): `k ≡ k1 + k2·λ (mod r)` with
+    /// half-width `k1`, `k2`, run against the doubled point set
+    /// `(P, φ(P))`. Halves the window passes — and with them the serial
+    /// reduce chain and the DNA combine — at unchanged total fill work.
+    /// Curves without endomorphism parameters ([`CurveParams::glv`] is
+    /// `None`) silently fall back to [`Decomposition::Full`].
+    Glv,
+}
+
+impl Decomposition {
+    /// How many entries the prepared point set holds per input point —
+    /// the single source of the "GLV doubles the working set" rule that
+    /// both DDR residency accounting (`coordinator::pointcache`) and the
+    /// FPGA model's streamed/resident point counts (`fpga::sab`) consume.
+    pub fn expansion_factor(&self) -> u64 {
+        match self {
+            Decomposition::Full => 1,
+            Decomposition::Glv => 2,
+        }
+    }
+}
+
 /// Bucket-reduction strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Reduction {
     /// Classic serial running sum (Algorithm 2).
     RunningSum,
     /// The paper's IS-RBAM recursive bucket reduction with sub-window k₂.
-    Recursive { k2: u32 },
+    Recursive {
+        /// Sub-window width of the second-level bucket MSM.
+        k2: u32,
+    },
 }
 
 impl Default for Reduction {
@@ -75,8 +115,12 @@ pub struct MsmConfig {
     /// Window (slice) width k in bits. The paper's hardware uses k = 12
     /// (Table III: ⌈254/12⌉ = 22 and ⌈381/12⌉ = 32 windows).
     pub window_bits: u32,
+    /// Bucket-reduction strategy (running sum vs the paper's IS-RBAM).
     pub reduction: Reduction,
+    /// Digit encoding (unsigned vs signed buckets).
     pub slicing: Slicing,
+    /// Scalar decomposition (full-width vs the GLV endomorphism split).
+    pub decomposition: Decomposition,
 }
 
 impl Default for MsmConfig {
@@ -85,6 +129,7 @@ impl Default for MsmConfig {
             window_bits: 12,
             reduction: Reduction::default(),
             slicing: Slicing::auto(12),
+            decomposition: Decomposition::Full,
         }
     }
 }
@@ -92,12 +137,22 @@ impl Default for MsmConfig {
 impl MsmConfig {
     /// Config with the default slicing policy for the window width.
     pub fn new(window_bits: u32, reduction: Reduction) -> MsmConfig {
-        MsmConfig { window_bits, reduction, slicing: Slicing::auto(window_bits) }
+        MsmConfig {
+            window_bits,
+            reduction,
+            slicing: Slicing::auto(window_bits),
+            decomposition: Decomposition::Full,
+        }
     }
 
     /// Config pinned to unsigned (paper-faithful) buckets.
     pub fn unsigned(window_bits: u32, reduction: Reduction) -> MsmConfig {
-        MsmConfig { window_bits, reduction, slicing: Slicing::Unsigned }
+        MsmConfig {
+            window_bits,
+            reduction,
+            slicing: Slicing::Unsigned,
+            decomposition: Decomposition::Full,
+        }
     }
 
     /// Auto-tuned config for an m-point MSM (window via the c ≈ log2 m − 3
@@ -105,24 +160,71 @@ impl MsmConfig {
     pub fn auto(m: usize) -> MsmConfig {
         MsmConfig::new(super::auto_window(m), Reduction::default())
     }
+
+    /// The same config with the GLV endomorphism fast path switched on.
+    pub fn glv(mut self) -> MsmConfig {
+        self.decomposition = Decomposition::Glv;
+        self
+    }
 }
 
 /// A fully resolved execution plan for one MSM shape.
+///
+/// # Examples
+///
+/// ```
+/// use ifzkp::msm::{MsmConfig, MsmPlan, Reduction};
+///
+/// // the paper's hardware point: unsigned 12-bit windows, 254-bit scalars
+/// let plan = MsmPlan::new(254, &MsmConfig::unsigned(12, Reduction::RunningSum));
+/// assert_eq!(plan.windows, 22); // Table III: ceil(254 / 12)
+/// assert_eq!(plan.live_buckets(), 4095); // 2^12 - 1
+///
+/// // signed digits halve the live buckets at the same window width
+/// let signed = MsmPlan::new(254, &MsmConfig::new(12, Reduction::RunningSum));
+/// assert_eq!(signed.live_buckets(), 2048); // 2^11
+///
+/// // the GLV split halves the window passes (half-width scalars)
+/// let glv = MsmPlan::new(254, &MsmConfig::new(12, Reduction::RunningSum).glv());
+/// assert!(glv.windows <= plan.windows / 2);
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct MsmPlan {
+    /// Window (slice) width k in bits.
     pub window_bits: u32,
+    /// Digit encoding the windows use.
     pub slicing: Slicing,
+    /// Bucket-reduction strategy.
     pub reduction: Reduction,
-    /// Scalar bit width the windows must cover.
+    /// Scalar bit width the windows must cover. Under [`Decomposition::Glv`]
+    /// this is the *half*-width of the split scalars, not the curve width.
     pub scalar_bits: u32,
     /// Window count (signed mode adds a carry window only when the top
     /// slice is wide enough to carry — see `signed::signed_window_count`).
     pub windows: u32,
+    /// The decomposition this plan is sized for. When `Glv`, backends must
+    /// run over the expanded `(P, φ(P))` inputs from [`MsmPlan::prepare`].
+    pub decomposition: Decomposition,
 }
 
 impl MsmPlan {
-    /// Build a plan for `scalar_bits`-wide scalars under `cfg`.
+    /// Build a plan for `scalar_bits`-wide scalars under `cfg`. Without a
+    /// curve in hand, a GLV config is sized at the generic half width
+    /// (`⌈bits/2⌉ + 1` — the FPGA model's what-if view);
+    /// [`MsmPlan::for_curve`] uses the exact per-curve lattice bound
+    /// instead.
     pub fn new(scalar_bits: u32, cfg: &MsmConfig) -> MsmPlan {
+        match cfg.decomposition {
+            Decomposition::Full => MsmPlan::with_bits(scalar_bits, cfg, Decomposition::Full),
+            Decomposition::Glv => {
+                MsmPlan::with_bits(scalar_bits.div_ceil(2) + 1, cfg, Decomposition::Glv)
+            }
+        }
+    }
+
+    /// The shared constructor: windows cover `scalar_bits` under the
+    /// config's slicing; the decomposition is recorded as given.
+    fn with_bits(scalar_bits: u32, cfg: &MsmConfig, decomposition: Decomposition) -> MsmPlan {
         let k = cfg.window_bits;
         assert!((1..=16).contains(&k), "window bits out of range");
         if cfg.slicing == Slicing::Signed {
@@ -138,12 +240,52 @@ impl MsmPlan {
             reduction: cfg.reduction,
             scalar_bits,
             windows,
+            decomposition,
         }
     }
 
-    /// Plan for a curve's scalars (the width every backend uses).
+    /// Plan for a curve's scalars (the width every backend uses). A GLV
+    /// config resolves against the curve's exact lattice bound
+    /// (`GlvParams::half_bits`); curves without endomorphism parameters
+    /// fall back to the full-width plan, so the config is always safe to
+    /// pass for any curve.
     pub fn for_curve<C: CurveParams>(cfg: &MsmConfig) -> MsmPlan {
-        MsmPlan::new(C::SCALAR_BITS.min(256), cfg)
+        let full_bits = C::SCALAR_BITS.min(256);
+        match cfg.decomposition {
+            Decomposition::Full => MsmPlan::with_bits(full_bits, cfg, Decomposition::Full),
+            Decomposition::Glv => match C::glv() {
+                Some(p) => MsmPlan::with_bits(p.half_bits, cfg, Decomposition::Glv),
+                None => MsmPlan::with_bits(full_bits, cfg, Decomposition::Full),
+            },
+        }
+    }
+
+    /// Resolve the backend-facing input view for this plan: full-width
+    /// plans borrow the caller's slices untouched; GLV plans expand every
+    /// `(P, k)` into `(±P, |k1|), (±φ(P), |k2|)` (see `ec::endo::expand`).
+    /// Every backend calls this exactly once, so all executors agree on
+    /// the decomposition — which is what keeps shard merges bit-identical.
+    ///
+    /// Panics if the plan was sized for GLV but the curve carries no
+    /// endomorphism parameters; [`MsmPlan::for_curve`] never produces that
+    /// combination.
+    pub fn prepare<'a, C: CurveParams>(
+        &self,
+        points: &'a [Affine<C>],
+        scalars: &'a [ScalarLimbs],
+    ) -> MsmInput<'a, C> {
+        assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+        match self.decomposition {
+            Decomposition::Full => MsmInput::Borrowed { points, scalars },
+            Decomposition::Glv => {
+                let p = C::glv().expect(
+                    "GLV plan prepared for a curve without endomorphism parameters \
+                     (build plans with MsmPlan::for_curve)",
+                );
+                let (points, scalars) = endo::expand(p, points, scalars);
+                MsmInput::Expanded { points, scalars }
+            }
+        }
     }
 
     /// Bucket-array length per window, **including** the dummy slot 0.
@@ -265,6 +407,45 @@ impl MsmPlan {
     /// Serial reduce chain across all windows.
     pub fn serial_reduce_ops(&self) -> u64 {
         self.serial_reduce_ops_per_window() * self.windows as u64
+    }
+}
+
+/// The input view a plan hands its backends (see [`MsmPlan::prepare`]):
+/// either the caller's slices as-is, or the owned GLV-expanded point and
+/// scalar vectors (2m entries, half-width magnitudes, signs folded into
+/// the points).
+pub enum MsmInput<'a, C: CurveParams> {
+    /// Full-width plan: the caller's slices pass through untouched.
+    Borrowed {
+        /// The caller's points.
+        points: &'a [Affine<C>],
+        /// The caller's scalars.
+        scalars: &'a [ScalarLimbs],
+    },
+    /// GLV plan: the expanded `(±P, |k1|), (±φ(P), |k2|)` pairs.
+    Expanded {
+        /// Expanded points, signs folded in.
+        points: Vec<Affine<C>>,
+        /// Half-width scalar magnitudes.
+        scalars: Vec<ScalarLimbs>,
+    },
+}
+
+impl<C: CurveParams> MsmInput<'_, C> {
+    /// The points the backend should fill buckets from.
+    pub fn points(&self) -> &[Affine<C>] {
+        match self {
+            MsmInput::Borrowed { points, .. } => points,
+            MsmInput::Expanded { points, .. } => points,
+        }
+    }
+
+    /// The scalars the backend should slice.
+    pub fn scalars(&self) -> &[ScalarLimbs] {
+        match self {
+            MsmInput::Borrowed { scalars, .. } => scalars,
+            MsmInput::Expanded { scalars, .. } => scalars,
+        }
     }
 }
 
@@ -401,7 +582,8 @@ mod tests {
         let want = crate::msm::naive::msm(&w.points, &w.scalars);
         for slicing in [Slicing::Unsigned, Slicing::Signed] {
             for red in [Reduction::RunningSum, Reduction::Recursive { k2: 3 }] {
-                let cfg = MsmConfig { window_bits: 7, reduction: red, slicing };
+                let cfg =
+                    MsmConfig { window_bits: 7, reduction: red, slicing, ..Default::default() };
                 let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
                 let per_window: Vec<_> = (0..plan.windows)
                     .map(|j| plan.reduce(&plan.fill_window(&w.points, &w.scalars, j)))
@@ -438,5 +620,94 @@ mod tests {
     #[should_panic(expected = "window bits out of range")]
     fn rejects_zero_window() {
         MsmPlan::new(254, &MsmConfig::unsigned(0, Reduction::RunningSum));
+    }
+
+    #[test]
+    fn glv_plan_halves_window_passes() {
+        let cfg = MsmConfig::new(12, Reduction::RunningSum);
+        let full = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        let glv = MsmPlan::for_curve::<Bn254G1>(&cfg.glv());
+        assert_eq!(glv.decomposition, Decomposition::Glv);
+        assert_eq!(full.windows, 22);
+        // the exact lattice bound sits just above 128 bits → 11 windows
+        assert!(glv.windows <= full.windows / 2, "{} vs {}", glv.windows, full.windows);
+        assert!(glv.windows >= 9);
+        // bucket memory is a per-window quantity — unchanged
+        assert_eq!(glv.bucket_slots(), full.bucket_slots());
+        // so the total serial reduce chain halves with the window count
+        assert!(glv.serial_reduce_ops() <= full.serial_reduce_ops() / 2);
+        // the curve-less (model) view agrees on the window count at k=12
+        assert_eq!(MsmPlan::new(254, &cfg.glv()).windows, 11);
+    }
+
+    #[test]
+    fn glv_prepare_expands_and_matches_naive() {
+        let w = points::workload::<Bn254G1>(40, 415);
+        let cfg = MsmConfig::new(10, Reduction::RunningSum).glv();
+        let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        let input = plan.prepare::<Bn254G1>(&w.points, &w.scalars);
+        assert_eq!(input.points().len(), 80);
+        assert_eq!(input.scalars().len(), 80);
+        // every expanded magnitude fits the plan's half width
+        for s in input.scalars() {
+            let bits = crate::ff::bigint::msb(s).map_or(0, |b| b as u32 + 1);
+            assert!(bits <= plan.scalar_bits, "magnitude {bits} > {}", plan.scalar_bits);
+        }
+        // fill/reduce/combine over the expanded set equals the plain MSM
+        let per_window: Vec<_> = (0..plan.windows)
+            .map(|j| plan.reduce(&plan.fill_window(input.points(), input.scalars(), j)))
+            .collect();
+        let got = plan.combine(&per_window);
+        assert!(got.eq_point(&crate::msm::naive::msm(&w.points, &w.scalars)));
+    }
+
+    #[test]
+    fn full_prepare_borrows_untouched() {
+        let w = points::workload::<Bn254G1>(5, 416);
+        let plan = MsmPlan::for_curve::<Bn254G1>(&MsmConfig::default());
+        let input = plan.prepare::<Bn254G1>(&w.points, &w.scalars);
+        assert_eq!(input.points().len(), 5);
+        assert!(std::ptr::eq(input.points().as_ptr(), w.points.as_ptr()));
+        assert!(std::ptr::eq(input.scalars().as_ptr(), w.scalars.as_ptr()));
+    }
+
+    /// A Bn254-shaped curve that deliberately carries no GLV parameters —
+    /// pins the fallback: a GLV config must degrade to the full-width plan
+    /// instead of silently dropping scalar bits.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    struct NoEndoCurve;
+
+    impl CurveParams for NoEndoCurve {
+        type Base = crate::ff::FpBn254;
+
+        fn b() -> Self::Base {
+            use crate::ff::Field;
+            Self::Base::from_u64(3)
+        }
+
+        fn generator_xy() -> (Self::Base, Self::Base) {
+            use crate::ff::Field;
+            (Self::Base::from_u64(1), Self::Base::from_u64(2))
+        }
+
+        const SCALAR_BITS: u32 = 254;
+        const MSM_SCALAR_BITS: u32 = 254;
+        const NAME: &'static str = "test_no_endo";
+        const AFFINE_BYTES: u64 = 64;
+    }
+
+    #[test]
+    fn glv_config_falls_back_without_endo_params() {
+        let cfg = MsmConfig::new(12, Reduction::RunningSum).glv();
+        let plan = MsmPlan::for_curve::<NoEndoCurve>(&cfg);
+        assert_eq!(plan.decomposition, Decomposition::Full);
+        assert_eq!(plan.windows, 22); // full width, no silent truncation
+        // and the whole pipeline still matches naive under the GLV config
+        let w = points::workload::<NoEndoCurve>(20, 417);
+        let per_window: Vec<_> = (0..plan.windows)
+            .map(|j| plan.reduce(&plan.fill_window(&w.points, &w.scalars, j)))
+            .collect();
+        let got = plan.combine(&per_window);
+        assert!(got.eq_point(&crate::msm::naive::msm(&w.points, &w.scalars)));
     }
 }

@@ -53,13 +53,15 @@ pub fn csv_block(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String 
     out
 }
 
-/// Format helpers shared by tables/figures.
+/// Format with 2 decimal places (shared by tables/figures).
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
+/// Format with 3 decimal places.
 pub fn f3(x: f64) -> String {
     format!("{x:.3}")
 }
+/// Format with 4 decimal places.
 pub fn f4(x: f64) -> String {
     format!("{x:.4}")
 }

@@ -376,7 +376,12 @@ pub fn ablation_signed(m: usize, seed: u64) -> String {
     let w = crate::ec::points::workload::<Bn254G1>(m, seed);
     let want = msm::naive::msm(&w.points, &w.scalars);
     for slicing in [Slicing::Unsigned, Slicing::Signed] {
-        let cfg = MsmConfig { window_bits: k, reduction: Reduction::RunningSum, slicing };
+        let cfg = MsmConfig {
+            window_bits: k,
+            reduction: Reduction::RunningSum,
+            slicing,
+            ..Default::default()
+        };
         let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
         let (got, cost) = pippenger::msm_with_cost(&w.points, &w.scalars, &cfg);
         assert!(got.eq_point(&want), "signed ablation diverged from naive");
@@ -398,6 +403,64 @@ pub fn ablation_signed(m: usize, seed: u64) -> String {
             "serial ops/window (plan)",
             "reduce ops/window (measured)",
             "fill ops",
+        ],
+        &rows,
+    )
+}
+
+/// Ablation (beyond the paper, motivated by the GLV endomorphism on the
+/// a = 0 curves): splitting every scalar `k ≡ k1 + k2·λ (mod r)` against
+/// the doubled (P, φ(P)) point set halves the k-bit window passes, so the
+/// serially-dependent reduce chain and the DNA combine drop ~2x *on top
+/// of* signed digits, while bucket memory stays put and DDR point
+/// residency doubles. Total fill/stream work is unchanged when the window
+/// count halves exactly (BN128: 22 → 11); BLS12-381's half-width slices
+/// keep a carry window (32 → 17), costing ~6% extra streaming in the
+/// stream-bound regime — the table reports that honestly. Bit-exactness
+/// of the software fast path is asserted against the plain path before
+/// the model rows print.
+pub fn ablation_glv(m: usize, seed: u64) -> String {
+    // software cross-check: GLV on vs off through the shared dispatch
+    let w = crate::ec::points::workload::<Bn254G1>(m, seed);
+    let cfg = MsmConfig::new(12, Reduction::default());
+    let want = msm::execute(msm::Backend::Pippenger, &w.points, &w.scalars, &cfg);
+    let got = msm::execute(msm::Backend::Pippenger, &w.points, &w.scalars, &cfg.glv());
+    assert!(got.eq_point(&want), "GLV path diverged from the plain path");
+
+    let mut rows = Vec::new();
+    for curve in [CurveId::Bn254, CurveId::Bls12381] {
+        for m in [10_000u64, 1_000_000, 64_000_000] {
+            let signed = SabConfig::paper_signed(curve, 2);
+            let glv = SabConfig::paper_glv(curve, 2);
+            let t_signed = SabModel::new(signed).time_msm(m).total_s();
+            let t_glv = SabModel::new(glv).time_msm(m).total_s();
+            rows.push(vec![
+                curve.name().into(),
+                crate::util::human_count(m),
+                format!("{}", signed.plan().windows),
+                format!("{}", glv.plan().windows),
+                format!("{}", signed.plan().serial_reduce_ops()),
+                format!("{}", glv.plan().serial_reduce_ops()),
+                format!("{t_signed:.4}"),
+                format!("{t_glv:.4}"),
+                format!("{:.2}x", t_signed / t_glv),
+            ]);
+        }
+    }
+    ascii_table(
+        &format!(
+            "Ablation: GLV endomorphism split, S=2 (modeled s; software bit-exact at m = {m})"
+        ),
+        &[
+            "curve",
+            "size",
+            "win signed",
+            "win glv",
+            "serial ops signed",
+            "serial ops glv",
+            "t signed",
+            "t glv",
+            "speedup",
         ],
         &rows,
     )
@@ -502,6 +565,38 @@ mod tests {
         assert_eq!(serial.len(), 2, "{t}");
         let ratio = serial[0] / serial[1];
         assert!((1.9..=2.0).contains(&ratio), "serial chain ratio {ratio}\n{t}");
+    }
+
+    #[test]
+    fn ablation_glv_halves_windows_and_serial_chain() {
+        let t = ablation_glv(256, 41);
+        assert!(t.contains("speedup"), "{t}");
+        // per row: window count ~halves (exact for BN254's 22 → 11; BLS's
+        // 32 → 17 keeps a carry window), the serial chain follows the
+        // window count, and the modeled build is never slower
+        let mut checked = 0;
+        for line in t.lines() {
+            let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+            if cells.len() > 9 && (cells[1] == "BN128" || cells[1] == "BLS12-381") {
+                let ws: f64 = cells[3].parse().unwrap();
+                let wg: f64 = cells[4].parse().unwrap();
+                let ratio = ws / wg;
+                assert!((1.8..=2.05).contains(&ratio), "window ratio {ratio}\n{t}");
+                let ss: f64 = cells[5].parse().unwrap();
+                let sg: f64 = cells[6].parse().unwrap();
+                let sratio = ss / sg;
+                assert!((1.8..=2.05).contains(&sratio), "serial ratio {sratio}\n{t}");
+                let speedup: f64 = cells[9].trim_end_matches('x').parse().unwrap();
+                // BN128 windows halve exactly → never slower. BLS keeps a
+                // carry window (32 → 17), so stream-bound sizes can pay up
+                // to 17·2/32 ≈ 6% extra streaming — the table is allowed
+                // to show that honestly.
+                let floor = if cells[1] == "BN128" { 0.999 } else { 0.9 };
+                assert!(speedup >= floor, "glv speedup {speedup} < {floor}\n{t}");
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 6, "{t}");
     }
 
     #[test]

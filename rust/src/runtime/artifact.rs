@@ -8,20 +8,30 @@ use std::path::{Path, PathBuf};
 /// Metadata for one compiled artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactMeta {
+    /// HLO text file name (relative to the manifest directory).
     pub file: String,
+    /// Artifact kind (e.g. "uda").
     pub kind: String,
+    /// Curve key ("bn254" / "bls12_381").
     pub curve: String,
+    /// Batch width the kernel was compiled for.
     pub batch: usize,
+    /// 16-bit limbs per field coordinate.
     pub nlimb16: usize,
+    /// Input tensor arity.
     pub inputs: usize,
+    /// Output tensor arity.
     pub outputs: usize,
 }
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct ArtifactManifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Batch width shared by all entries.
     pub batch: usize,
+    /// One entry per compiled curve kernel.
     pub entries: Vec<ArtifactMeta>,
 }
 

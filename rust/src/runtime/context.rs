@@ -27,6 +27,7 @@ impl PjrtContext {
         self.client.platform_name()
     }
 
+    /// Devices visible to the client.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }

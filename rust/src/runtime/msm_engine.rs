@@ -47,6 +47,11 @@ pub fn msm_engine<C: EngineCurve>(
         return Ok((Jacobian::infinity(), stats));
     }
     let plan = MsmPlan::for_curve::<C>(cfg);
+    // The engine is one more executor of the shared kernel: GLV expansion
+    // (when configured) happens in the same plan.prepare step as the
+    // native backends, so engine results stay bit-exact against them.
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
     let nbuckets = plan.bucket_slots();
     let bsz = engine.batch();
 

@@ -22,18 +22,26 @@ use std::sync::Arc;
 /// A (structurally) Groth16-like proof.
 #[derive(Debug)]
 pub struct Proof<G1: CurveParams, G2: CurveParams> {
+    /// The 𝔾₁ A element.
     pub a: Jacobian<G1>,
+    /// The 𝔾₂ B element.
     pub b: Jacobian<G2>,
+    /// The 𝔾₁ C element.
     pub c: Jacobian<G1>,
 }
 
 /// Prover-time percentage split (the Table I row format).
 #[derive(Clone, Debug, Default)]
 pub struct ProfileBreakdown {
+    /// Share of time in 𝔾₁ MSMs (A, B1, L, H queries).
     pub msm_g1_pct: f64,
+    /// Share of time in the 𝔾₂ MSM (B2 query).
     pub msm_g2_pct: f64,
+    /// Share of time in the QAP domain transforms.
     pub ntt_pct: f64,
+    /// Witness evaluation and bookkeeping share.
     pub other_pct: f64,
+    /// Total wall seconds of the prove call.
     pub total_s: f64,
 }
 
@@ -46,8 +54,11 @@ pub struct ProfileBreakdown {
 /// (split per device, merged deterministically) instead of the local
 /// backend.
 pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
+    /// The CRS query vectors the MSMs consume.
     pub crs: Crs<G1, G2>,
+    /// The plan config every MSM runs with (see [`Self::with_glv`]).
     pub msm_cfg: MsmConfig,
+    /// The local executor (ignored when a multi-device pool handles an MSM).
     pub backend: Backend,
     /// Sharded executor for the 𝔾₁ MSMs (A, B1, L, H queries).
     pub pool_g1: Option<Arc<ShardPool<G1>>>,
@@ -62,6 +73,7 @@ where
     G2: CurveParams,
     P: FieldParams<4>,
 {
+    /// A serial-Pippenger prover over a CRS (the Table I measurement rig).
     pub fn new(crs: Crs<G1, G2>) -> Self {
         Prover {
             crs,
@@ -76,6 +88,16 @@ where
     /// Same prover, different MSM executor.
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Switch every MSM (G1 and G2, local and sharded) to the GLV
+    /// endomorphism fast path: scalars split into two half-width parts
+    /// against the doubled (P, φ(P)) point set, halving the window passes
+    /// per MSM. The proof is unchanged — curves without endomorphism
+    /// parameters fall back to full-width plans transparently.
+    pub fn with_glv(mut self) -> Self {
+        self.msm_cfg = self.msm_cfg.glv();
         self
     }
 
@@ -249,6 +271,19 @@ mod tests {
         let (p1, _) = prover.prove(&cs);
         let prover2 = prover.with_backend(Backend::BatchAffineParallel { threads: 2 });
         let (p2, _) = prover2.prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
+    }
+
+    #[test]
+    fn proof_identical_with_glv() {
+        // the GLV fast path must be invisible in the proof, for both the
+        // G1 MSMs and the Fp²-based G2 MSM
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        let (prover2, _) = small_prover();
+        let (p2, _) = prover2.with_glv().prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));

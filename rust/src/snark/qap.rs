@@ -18,6 +18,7 @@ use crate::ntt::domain::Domain;
 
 /// The quotient polynomial h and the domain it was computed over.
 pub struct QapWitness<P: FieldParams<N>, const N: usize> {
+    /// The n-point evaluation domain used.
     pub domain: Domain<P, N>,
     /// Coefficients of h(x), degree < n − 1.
     pub h_coeffs: Vec<Fp<P, N>>,

@@ -12,14 +12,20 @@ pub type Lc<F> = Vec<(usize, F)>;
 /// private assignments.
 #[derive(Clone, Debug)]
 pub struct ConstraintSystem<P: FieldParams<N>, const N: usize> {
+    /// Per-constraint A-side linear combinations.
     pub a: Vec<Lc<Fp<P, N>>>,
+    /// Per-constraint B-side linear combinations.
     pub b: Vec<Lc<Fp<P, N>>>,
+    /// Per-constraint C-side linear combinations.
     pub c: Vec<Lc<Fp<P, N>>>,
+    /// The satisfying assignment (index 0 is the constant 1).
     pub witness: Vec<Fp<P, N>>,
+    /// Leading witness entries (after the constant) that are public.
     pub num_public: usize,
 }
 
 impl<P: FieldParams<N>, const N: usize> ConstraintSystem<P, N> {
+    /// Empty system with the constant-1 witness slot.
     pub fn new() -> Self {
         ConstraintSystem {
             a: Vec::new(),
@@ -30,10 +36,12 @@ impl<P: FieldParams<N>, const N: usize> ConstraintSystem<P, N> {
         }
     }
 
+    /// Number of constraints.
     pub fn num_constraints(&self) -> usize {
         self.a.len()
     }
 
+    /// Number of witness variables (constant included).
     pub fn num_variables(&self) -> usize {
         self.witness.len()
     }

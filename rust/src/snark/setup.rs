@@ -12,9 +12,11 @@ use crate::ec::{points, Affine, Bls12381G1, Bls12381G2, Bn254G1, Bn254G2, CurveP
 
 /// CRS query vectors for one curve family.
 pub struct Crs<G1: CurveParams, G2: CurveParams> {
-    /// Per-variable 𝔾₁ queries.
+    /// Per-variable 𝔾₁ A-query.
     pub a_query: Vec<Affine<G1>>,
+    /// Per-variable 𝔾₁ B-query.
     pub b1_query: Vec<Affine<G1>>,
+    /// Per-variable 𝔾₁ L-query (private-witness section).
     pub l_query: Vec<Affine<G1>>,
     /// Per-variable 𝔾₂ query.
     pub b2_query: Vec<Affine<G2>>,
@@ -35,8 +37,9 @@ impl<G1: CurveParams, G2: CurveParams> Crs<G1, G2> {
     }
 }
 
-/// The two concrete families the paper evaluates.
+/// The BN254 family CRS.
 pub type CrsBn254 = Crs<Bn254G1, Bn254G2>;
+/// The BLS12-381 family CRS.
 pub type CrsBls12381 = Crs<Bls12381G1, Bls12381G2>;
 
 #[cfg(test)]

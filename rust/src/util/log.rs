@@ -7,9 +7,13 @@ use std::sync::atomic::{AtomicU8, Ordering};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems only.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// Normal operational messages (the default).
     Info = 2,
+    /// Verbose diagnostics.
     Debug = 3,
 }
 
@@ -31,10 +35,13 @@ pub fn parse_level(s: &str) -> Option<Level> {
     }
 }
 
+/// Is `level` currently emitted?
 pub fn enabled(level: Level) -> bool {
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one line to stderr when `level` is enabled (prefer the `info!`,
+/// `warn_!`, `debug!` macros).
 pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(level) {
         let tag = match level {
@@ -47,6 +54,7 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at [`Level::Info`] under a target tag.
 #[macro_export]
 macro_rules! info {
     ($target:expr, $($arg:tt)*) => {
@@ -54,6 +62,7 @@ macro_rules! info {
     };
 }
 
+/// Log at [`Level::Warn`] (named `warn_!` to dodge the built-in lint name).
 #[macro_export]
 macro_rules! warn_ {
     ($target:expr, $($arg:tt)*) => {
@@ -61,6 +70,7 @@ macro_rules! warn_ {
     };
 }
 
+/// Log at [`Level::Debug`] under a target tag.
 #[macro_export]
 macro_rules! debug {
     ($target:expr, $($arg:tt)*) => {

@@ -10,7 +10,9 @@ use super::rng::Rng;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Number of cases to generate and check.
     pub cases: usize,
+    /// Base seed; each case derives its own deterministic seed from it.
     pub seed: u64,
 }
 

@@ -12,18 +12,22 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch { start: Instant::now() }
     }
 
+    /// Time since [`Stopwatch::start`] (or the last restart).
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed time as fractional seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Return the elapsed time and reset the start point to now.
     pub fn restart(&mut self) -> Duration {
         let e = self.start.elapsed();
         self.start = Instant::now();
@@ -39,6 +43,7 @@ pub struct Profiler {
 }
 
 impl Profiler {
+    /// Empty profiler.
     pub fn new() -> Self {
         Self::default()
     }
@@ -56,10 +61,12 @@ impl Profiler {
         *self.acc.entry(label.to_string()).or_default() += d;
     }
 
+    /// Total accumulated time across all labels.
     pub fn total(&self) -> Duration {
         self.acc.values().sum()
     }
 
+    /// Accumulated time under one label (zero when unseen).
     pub fn get(&self, label: &str) -> Duration {
         self.acc.get(label).copied().unwrap_or_default()
     }

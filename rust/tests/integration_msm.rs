@@ -12,7 +12,8 @@ fn all_algorithms_agree_bn254_2k() {
     for k in [8u32, 12, 16] {
         for red in [Reduction::RunningSum, Reduction::Recursive { k2: 6 }] {
             for slicing in [Slicing::Unsigned, Slicing::Signed] {
-                let cfg = MsmConfig { window_bits: k, reduction: red, slicing };
+                let cfg =
+                    MsmConfig { window_bits: k, reduction: red, slicing, ..Default::default() };
                 let serial = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
                 let par = msm::parallel::msm(&w.points, &w.scalars, &cfg, 4);
                 assert!(serial.eq_point(&naive), "serial k={k} {red:?} {slicing:?}");
@@ -78,11 +79,20 @@ fn msm_with_adversarial_scalars() {
     let naive = msm::naive::msm(&pts, &scalars);
     for k in [4u32, 12] {
         for slicing in [Slicing::Unsigned, Slicing::Signed] {
-            let cfg =
-                MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 4 }, slicing };
+            let cfg = MsmConfig {
+                window_bits: k,
+                reduction: Reduction::Recursive { k2: 4 },
+                slicing,
+                ..Default::default()
+            };
             assert!(
                 msm::msm_pippenger(&pts, &scalars, &cfg).eq_point(&naive),
                 "k={k} {slicing:?}"
+            );
+            // adversarial scalars through the GLV split as well
+            assert!(
+                msm::msm_pippenger(&pts, &scalars, &cfg.glv()).eq_point(&naive),
+                "glv k={k} {slicing:?}"
             );
         }
     }
@@ -119,6 +129,44 @@ fn msm_of_generator_multiples_matches_field_sum() {
     let got = msm::msm(&pts, &scalars);
     let want = scalar::mul::<Bn254G1>(&g, &expect.to_canonical());
     assert!(got.eq_point(&want));
+}
+
+#[test]
+fn glv_dispatch_agrees_at_2k_both_curves() {
+    // the end-to-end GLV acceptance at integration size: every backend,
+    // GLV on, equals naive — on both curves
+    let w = points::workload::<Bn254G1>(2048, 9020);
+    let naive = msm::naive::msm(&w.points, &w.scalars);
+    let cfg = MsmConfig::auto(2048).glv();
+    for backend in [
+        Backend::Pippenger,
+        Backend::Parallel { threads: 4 },
+        Backend::BatchAffine,
+        Backend::BatchAffineParallel { threads: 4 },
+    ] {
+        let got = msm::execute(backend, &w.points, &w.scalars, &cfg);
+        assert!(got.eq_point(&naive), "{backend:?}");
+    }
+    let w = points::workload::<Bls12381G1>(1024, 9021);
+    let naive = msm::naive::msm(&w.points, &w.scalars);
+    let backend = Backend::BatchAffineParallel { threads: 4 };
+    let got = msm::execute(backend, &w.points, &w.scalars, &cfg);
+    assert!(got.eq_point(&naive), "bls glv");
+}
+
+#[test]
+fn glv_sharded_pool_matches_unsharded() {
+    // ShardPool (the in-process multi-device executor) under a GLV
+    // config: both policies, merged output equal to the plain path
+    use ifzkp::coordinator::shard::{ShardPolicy, ShardPool};
+    let w = points::workload::<Bn254G1>(600, 9022);
+    let cfg = MsmConfig::default().glv();
+    let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &MsmConfig::default());
+    for policy in [ShardPolicy::ChunkPoints, ShardPolicy::WindowRange] {
+        let pool = ShardPool::<Bn254G1>::native(3, 1).with_policy(policy);
+        let got = pool.execute(&w.points, &w.scalars, &cfg).unwrap();
+        assert!(got.eq_point(&want), "{policy:?}");
+    }
 }
 
 #[test]

@@ -28,7 +28,7 @@ fn pippenger_equals_naive_random_sizes() {
         let fast = msm::msm_pippenger(
             &w.points,
             &w.scalars,
-            &MsmConfig { window_bits: k, reduction: red, slicing },
+            &MsmConfig { window_bits: k, reduction: red, slicing, ..Default::default() },
         );
         prop_assert!(fast.eq_point(&naive), "m={m} k={k} {red:?} {slicing:?}");
         Ok(())
@@ -46,7 +46,8 @@ fn all_backends_slicings_reductions_equal_naive() {
         let naive = msm::naive::msm(&w.points, &w.scalars);
         for slicing in [Slicing::Unsigned, Slicing::Signed] {
             for red in [Reduction::RunningSum, Reduction::Recursive { k2: 1 + (k / 2) }] {
-                let cfg = MsmConfig { window_bits: k, reduction: red, slicing };
+                let cfg =
+                    MsmConfig { window_bits: k, reduction: red, slicing, ..Default::default() };
                 for backend in [
                     Backend::Pippenger,
                     Backend::Parallel { threads: 1 + rng.below(5) as usize },
@@ -103,7 +104,12 @@ fn plan_digits_agree_with_bucket_ops() {
     check_with(Config { cases: 24, seed: 0xB0C4 }, "plan digit consistency", |rng| {
         let k = 2 + rng.below(15) as u32;
         let slicing = if k >= 2 && rng.bool() { Slicing::Signed } else { Slicing::Unsigned };
-        let cfg = MsmConfig { window_bits: k, reduction: Reduction::RunningSum, slicing };
+        let cfg = MsmConfig {
+            window_bits: k,
+            reduction: Reduction::RunningSum,
+            slicing,
+            ..Default::default()
+        };
         let plan = MsmPlan::new(254, &cfg);
         let s = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64() >> 2];
         let digits = plan.digits(&s);
@@ -132,7 +138,12 @@ fn sharded_merges_equal_unsharded_execute() {
         let m = 16 + rng.below(180) as usize;
         let k = 4 + rng.below(9) as u32;
         let slicing = if rng.bool() { Slicing::Signed } else { Slicing::Unsigned };
-        let cfg = MsmConfig { window_bits: k, reduction: Reduction::Recursive { k2: 3 }, slicing };
+        let cfg = MsmConfig {
+            window_bits: k,
+            reduction: Reduction::Recursive { k2: 3 },
+            slicing,
+            ..Default::default()
+        };
         let w = points::workload::<Bn254G1>(m, rng.next_u64());
         let windows = MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
         for backend in [
@@ -170,6 +181,125 @@ fn sharded_merges_equal_unsharded_execute() {
 }
 
 #[test]
+fn glv_decomposition_roundtrips_mod_r() {
+    use ifzkp::ec::CurveParams;
+    use ifzkp::ff::params::{Bls12381FrParams, Bn254FrParams};
+    use ifzkp::ff::{bigint, Field, FieldParams, Fp};
+    use ifzkp::util::rng::Rng;
+
+    fn check<C: CurveParams, P: FieldParams<4>>(rng: &mut Rng, bits: u32) -> Result<(), String> {
+        let p = C::glv().ok_or_else(|| format!("{}: GLV params missing", C::NAME))?;
+        // pinned: both halves are genuinely half-width (the lattice bound
+        // sits just above bits/2 for a balanced basis)
+        prop_assert!(p.half_bits <= 130, "{}: half_bits {}", C::NAME, p.half_bits);
+        let lambda = Fp::<P, 4>::from_canonical(p.lambda).ok_or("lambda not canonical")?;
+        // λ² + λ + 1 ≡ 0 (mod r): the cube-root minimal polynomial
+        prop_assert!(
+            lambda.square().add(&lambda).add(&Fp::<P, 4>::one()).is_zero(),
+            "{}: lambda not a primitive cube root",
+            C::NAME
+        );
+        for _ in 0..12 {
+            let mut k = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()];
+            for (i, limb) in k.iter_mut().enumerate() {
+                let lo = 64 * i as u32;
+                if lo >= bits {
+                    *limb = 0;
+                } else if bits - lo < 64 {
+                    *limb &= (1u64 << (bits - lo)) - 1;
+                }
+            }
+            let split = p.decompose(&k);
+            for (label, mag) in [("k1", &split.k1), ("k2", &split.k2)] {
+                let w = bigint::msb(mag).map_or(0, |b| b as u32 + 1);
+                prop_assert!(
+                    w <= p.half_bits,
+                    "{}: {label} is {w} bits > bound {}",
+                    C::NAME,
+                    p.half_bits
+                );
+            }
+            // exact congruence: k1 + k2·λ ≡ k (mod r)
+            let signed = |neg: bool, mag: &[u64; 4]| {
+                let v = Fp::<P, 4>::from_limbs_reduce(*mag);
+                if neg {
+                    v.neg()
+                } else {
+                    v
+                }
+            };
+            let lhs = signed(split.k1_neg, &split.k1)
+                .add(&signed(split.k2_neg, &split.k2).mul(&lambda));
+            let rhs = Fp::<P, 4>::from_limbs_reduce(k);
+            prop_assert!(lhs == rhs, "{}: congruence failed for {k:?}", C::NAME);
+        }
+        Ok(())
+    }
+
+    check_with(Config { cases: 6, seed: 0x61F }, "glv round-trip", |rng| {
+        check::<Bn254G1, Bn254FrParams>(rng, 254)?;
+        check::<ifzkp::ec::Bls12381G1, Bls12381FrParams>(rng, 255)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn glv_matches_full_across_backends_slicings_and_shards() {
+    // the GLV acceptance matrix: backend × slicing × shard shape, all
+    // bit-identical to the non-GLV result
+    check_with(Config { cases: 3, seed: 0x61F2 }, "glv == full", |rng| {
+        let m = 16 + rng.below(140) as usize;
+        let k = 6 + rng.below(7) as u32;
+        let w = points::workload::<Bn254G1>(m, rng.next_u64());
+        let full_cfg = MsmConfig::new(k, Reduction::Recursive { k2: 3 });
+        let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &full_cfg);
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            let glv_cfg = MsmConfig { slicing, ..full_cfg.glv() };
+            for backend in [
+                Backend::Pippenger,
+                Backend::Parallel { threads: 1 + rng.below(4) as usize },
+                Backend::BatchAffine,
+                Backend::BatchAffineParallel { threads: 2 },
+            ] {
+                let got = msm::execute(backend, &w.points, &w.scalars, &glv_cfg);
+                prop_assert!(got.eq_point(&want), "m={m} k={k} {slicing:?} {backend:?}");
+            }
+            // both shard shapes, shuffled arrival: merged GLV partials
+            // must equal the unsharded result (shards decompose
+            // consistently — per point, deterministically)
+            let windows = MsmPlan::for_curve::<Bn254G1>(&glv_cfg).windows;
+            for shards in [2usize, 3] {
+                for specs in
+                    [partial::chunk_specs(m, shards), partial::window_specs(windows, shards)]
+                {
+                    let mut parts: Vec<PartialMsm<Bn254G1>> = specs
+                        .iter()
+                        .enumerate()
+                        .map(|(i, s)| PartialMsm {
+                            index: i,
+                            spec: *s,
+                            output: partial::execute_shard(
+                                Backend::Pippenger,
+                                &w.points,
+                                &w.scalars,
+                                &glv_cfg,
+                                s,
+                            ),
+                        })
+                        .collect();
+                    parts.reverse();
+                    prop_assert!(
+                        partial::merge(&mut parts).eq_point(&want),
+                        "m={m} k={k} {slicing:?} shards={shards} {specs:?}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn parallel_equals_serial_random_threads() {
     check_with(Config { cases: 8, seed: 0xB0B }, "parallel == serial", |rng| {
         let m = 16 + rng.below(150) as usize;
@@ -197,7 +327,12 @@ fn ddr_cache_invariants() {
                     prop_assert!(resident_model.contains(&id), "hit on non-resident {id}");
                 }
                 Admission::Miss { upload_bytes, .. } => {
-                    prop_assert!(upload_bytes == bytes, "upload bytes mismatch");
+                    // a re-admission at a grown size uploads only the
+                    // delta; a fresh admission uploads the whole set
+                    prop_assert!(
+                        upload_bytes >= 1 && upload_bytes <= bytes,
+                        "upload bytes {upload_bytes} outside (0, {bytes}]"
+                    );
                     resident_model.insert(id);
                 }
                 Admission::TooLarge => {
