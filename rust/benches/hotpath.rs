@@ -1,5 +1,6 @@
 //! Hot-path microbenchmarks (the §Perf instrumentation): field mul, EC
-//! point ops, MSM per-point cost, sharded multi-device MSM, NTT
+//! point ops, MSM per-point cost, the chunk-parallel runtime's
+//! recode/fill/merge/reduce phase split, sharded multi-device MSM, NTT
 //! butterflies — ns/op so the perf pass can track improvements without
 //! criterion.
 //!
@@ -211,6 +212,69 @@ fn main() {
             &format!("BN254 MSM {msm_label} batch-affine {label} ns/point"),
             t_aff * 1e9 / msm_m as f64,
         );
+    }
+
+    // chunk-parallel runtime vs window-parallel at 2^16 (the acceptance
+    // point): under GLV the plan has only 11 windows, so window-parallel
+    // backends cap at 11 useful threads while the chunked backend keeps
+    // scaling with the point partition. Phases (recode/fill/merge/reduce)
+    // land in the JSON artifact so the perf trajectory is recorded.
+    //
+    // Deliberately NOT scaled down by IFZKP_BENCH_QUICK: the CI artifact
+    // is produced in quick mode, and the comparison is only meaningful at
+    // the 2^16 operating point — two MSMs, bounded at seconds.
+    {
+        let m_chunk: usize = 1 << 16;
+        let w = points::workload::<Bn254G1>(m_chunk, 3);
+        let glv_cfg = MsmConfig::new(12, Reduction::Recursive { k2: 6 }).glv();
+        let windows = MsmPlan::for_curve::<Bn254G1>(&glv_cfg).windows as usize;
+        let host = msm::parallel::default_threads();
+        // threads > windows even on small CI runners: take the max
+        let threads = host.max(windows + 5);
+        let sw = Stopwatch::start();
+        let par = msm::parallel::msm(&w.points, &w.scalars, &glv_cfg, threads);
+        let t_par = sw.secs();
+        println!(
+            "BN254 MSM 2^16 glv parallel x{threads} ({windows} windows) {:>10.1} ns/point",
+            t_par * 1e9 / m_chunk as f64
+        );
+        // stable JSON keys (no host-dependent thread count), so the
+        // artifact stays diffable run over run; the width is its own entry
+        results.record("BN254 MSM 2^16 glv wide threads", threads as f64);
+        results.record(
+            "BN254 MSM 2^16 glv parallel-wide ns/point",
+            t_par * 1e9 / m_chunk as f64,
+        );
+        let sw = Stopwatch::start();
+        let (chk, phases) =
+            msm::chunked::msm_with_phases(&w.points, &w.scalars, &glv_cfg, threads);
+        let t_chk = sw.secs();
+        assert!(chk.eq_point(&par), "chunked != parallel result");
+        println!(
+            "BN254 MSM 2^16 glv chunked  x{threads} ({windows} windows) {:>10.1} ns/point  ({:.2}x vs window-parallel)",
+            t_chk * 1e9 / m_chunk as f64,
+            t_par / t_chk
+        );
+        results.record(
+            "BN254 MSM 2^16 glv chunked-wide ns/point",
+            t_chk * 1e9 / m_chunk as f64,
+        );
+        for (phase, secs) in [
+            ("recode", phases.recode_s),
+            ("fill", phases.fill_s),
+            ("merge", phases.merge_s),
+            ("reduce", phases.reduce_s),
+        ] {
+            println!(
+                "  chunked phase {phase:<28} {:>10.1} ns/point  ({:.1}% of phases)",
+                secs * 1e9 / m_chunk as f64,
+                100.0 * secs / phases.total_s().max(1e-12),
+            );
+            results.record(
+                &format!("BN254 MSM 2^16 chunked {phase} ns/point"),
+                secs * 1e9 / m_chunk as f64,
+            );
+        }
     }
 
     // parallel scaling

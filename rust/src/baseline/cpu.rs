@@ -111,6 +111,22 @@ pub fn measure_parallel<C: CurveParams>(m: usize, seed: u64, threads: usize) -> 
     measure_backend::<C>(m, seed, Backend::Parallel { threads: threads.max(1) })
 }
 
+/// Measure the chunk-parallel backend (point-level parallelism — thread
+/// count is not capped by the plan's window count).
+pub fn measure_chunked<C: CurveParams>(m: usize, seed: u64, threads: usize) -> CpuMeasurement {
+    measure_backend::<C>(m, seed, Backend::Chunked { threads: threads.max(1) })
+}
+
+/// Measure under the automatic, curve-exact backend choice
+/// ([`Backend::auto_for`]): on hosts whose thread budget exceeds the
+/// plan's window count this resolves to the chunk-parallel backend —
+/// which is what makes this the credible CPU reference column for the
+/// FPGA model's speedup tables.
+pub fn measure_auto<C: CurveParams>(m: usize, seed: u64) -> CpuMeasurement {
+    let cfg = MsmConfig::auto(m);
+    measure_backend_with::<C>(m, seed, Backend::auto_for::<C>(m, &cfg), &cfg)
+}
+
 /// Measure an MSM submitted through the sharded multi-device path: the
 /// job splits across `devices` simulated native devices under `policy`
 /// and the partials merge deterministically (single device ⇒ the direct
@@ -183,6 +199,16 @@ mod tests {
         let m = measure_backend_with::<crate::ec::Bn254G1>(1_000, 99, Backend::Pippenger, &cfg);
         assert_eq!(m.m, 1_000);
         assert!(m.seconds > 0.0 && m.mpps > 0.0);
+    }
+
+    #[test]
+    fn chunked_and_auto_measurements_run() {
+        let m = measure_chunked::<crate::ec::Bn254G1>(1_500, 99, 4);
+        assert_eq!(m.m, 1_500);
+        assert!(m.seconds > 0.0 && m.mpps > 0.0);
+        let a = measure_auto::<crate::ec::Bn254G1>(1_500, 99);
+        assert_eq!(a.m, 1_500);
+        assert!(a.seconds > 0.0 && a.mpps > 0.0);
     }
 
     #[test]

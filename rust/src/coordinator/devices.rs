@@ -1,7 +1,7 @@
 //! Device backends: where an MSM job actually runs.
 //!
-//! * [`DeviceBackend::Native`] — this crate's multi-threaded Pippenger
-//!   (the CPU of Table IX);
+//! * [`DeviceBackend::Native`] — this crate's chunk-parallel MSM runtime
+//!   (point-partitioned threads, `msm::chunked` — the CPU of Table IX);
 //! * [`DeviceBackend::SimFpga`] — bit-exact native compute **plus** the
 //!   SAB model's virtual latency: results are real, reported timing is the
 //!   modeled accelerator's (how every Table IX FPGA row is produced);
@@ -160,7 +160,7 @@ impl<C: CurveParams> RunningDevice<C> {
         match &self.backend {
             RunningBackend::Native { threads } => {
                 let out = msm::execute(
-                    msm::Backend::Parallel { threads: *threads },
+                    msm::Backend::Chunked { threads: *threads },
                     points,
                     scalars,
                     &self.msm_cfg,
@@ -170,7 +170,7 @@ impl<C: CurveParams> RunningDevice<C> {
             }
             RunningBackend::SimFpga { model } => {
                 let out = msm::execute(
-                    msm::Backend::Parallel { threads: msm::parallel::default_threads() },
+                    msm::Backend::Chunked { threads: msm::parallel::default_threads() },
                     points,
                     scalars,
                     &self.msm_cfg,
@@ -202,7 +202,7 @@ impl<C: CurveParams> RunningDevice<C> {
         match &self.backend {
             RunningBackend::Native { threads } => {
                 let out = partial::execute_shard(
-                    msm::Backend::Parallel { threads: *threads },
+                    msm::Backend::Chunked { threads: *threads },
                     points,
                     scalars,
                     cfg,
@@ -213,7 +213,7 @@ impl<C: CurveParams> RunningDevice<C> {
             }
             RunningBackend::SimFpga { model } => {
                 let out = partial::execute_shard(
-                    msm::Backend::Parallel { threads: msm::parallel::default_threads() },
+                    msm::Backend::Chunked { threads: msm::parallel::default_threads() },
                     points,
                     scalars,
                     cfg,

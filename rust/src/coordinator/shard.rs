@@ -269,7 +269,8 @@ impl<C: CurveParams> ShardGroup<C> {
 /// workers materialize nothing; shards execute on scoped threads.
 #[derive(Clone, Debug)]
 pub enum PoolDevice {
-    /// Host CPU, `threads`-way window-parallel fills.
+    /// Host CPU, `threads`-way chunk-parallel fills (point-level
+    /// parallelism — not capped by the plan's window count).
     Native {
         /// OS threads per shard.
         threads: usize,
@@ -315,8 +316,11 @@ impl PoolDevice {
             }
         }
         let sw = Stopwatch::start();
+        // Chunk-parallel execution: a point-chunk shard's thread count is
+        // then independent of the plan's window count (window-range
+        // shards thread across their windows either way).
         let out = partial::execute_shard(
-            Backend::Parallel { threads },
+            Backend::Chunked { threads },
             points,
             scalars,
             cfg,

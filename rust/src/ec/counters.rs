@@ -28,6 +28,13 @@ pub fn uncount_add() {
 pub fn count_double() {
     DOUBLE.with(|c| c.set(c.get() + 1));
 }
+/// Count `n` doublings with a single thread-local access — the
+/// `Jacobian::double_n` shift chains record their whole run at once, so
+/// measured totals stay identical to n calls of [`count_double`].
+#[inline(always)]
+pub fn count_doubles(n: u64) {
+    DOUBLE.with(|c| c.set(c.get() + n));
+}
 /// Count one mixed (Jacobian + affine) addition.
 #[inline(always)]
 pub fn count_mixed() {

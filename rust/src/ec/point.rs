@@ -269,6 +269,39 @@ impl<C: CurveParams> Jacobian<C> {
         Jacobian { x: x3, y: y3, z: z3 }
     }
 
+    /// `n` successive doublings — the Horner shift chain of the window
+    /// combine (`k` doublings per window in the DNA pass, `k·lo` for a
+    /// window-range shard's global shift). Same `dbl-2009-l` bodies as
+    /// [`Self::double`] (2M + 5S each; a = 0 means there is no cross-step
+    /// state worth caching, which is exactly why the per-step formula is
+    /// already minimal), but the infinity check is hoisted out of the
+    /// loop and the doubling counter is bumped once for the whole run.
+    /// Safe without per-step checks: Z₃ = 2·Y·Z keeps Z at zero once it
+    /// reaches zero, so an infinity can never silently un-flag itself.
+    pub fn double_n(&self, n: u32) -> Self {
+        if n == 0 || self.is_infinity() {
+            return *self;
+        }
+        counters::count_doubles(n as u64);
+        let (mut x, mut y, mut z) = (self.x, self.y, self.z);
+        for _ in 0..n {
+            let a = x.square();
+            let b = y.square();
+            let c = b.square();
+            let d = x.add(&b).square().sub(&a).sub(&c).double();
+            let e = a.double().add(&a);
+            let f = e.square();
+            let x3 = f.sub(&d.double());
+            let eight_c = c.double().double().double();
+            let y3 = e.mul(&d.sub(&x3)).sub(&eight_c);
+            let z3 = y.mul(&z).double();
+            x = x3;
+            y = y3;
+            z = z3;
+        }
+        Jacobian { x, y, z }
+    }
+
     /// −P (y ↦ −y).
     pub fn neg(&self) -> Self {
         Jacobian { x: self.x, y: self.y.neg(), z: self.z }
@@ -409,6 +442,33 @@ mod tests {
         assert!(p.add_mixed(&pa.neg()).is_infinity());
         assert!(Jacobian::<Bn254G1>::infinity().add_mixed(&pa).eq_point(&p));
         assert!(p.add_mixed(&Affine::infinity()).eq_point(&p));
+    }
+
+    #[test]
+    fn double_n_matches_repeated_double() {
+        let mut rng = Rng::new(59);
+        for _ in 0..5 {
+            let p = rand_point::<Bn254G1>(&mut rng);
+            let mut want = p;
+            for n in 0..=13u32 {
+                // exact coordinate equality, not just eq_point: the shift
+                // chain must be bit-identical to the double() loop
+                let got = p.double_n(n);
+                assert_eq!(got.x, want.x, "n={n}");
+                assert_eq!(got.y, want.y, "n={n}");
+                assert_eq!(got.z, want.z, "n={n}");
+                want = want.double();
+            }
+        }
+        // infinity shifts to infinity, and the counter stays untouched
+        let o = Jacobian::<Bn254G1>::infinity();
+        let (r, ops) = crate::ec::counters::measure(|| o.double_n(12));
+        assert!(r.is_infinity());
+        assert_eq!(ops.double, 0);
+        // a finite run counts exactly n doublings
+        let g = Jacobian::<Bn254G1>::generator();
+        let (_, ops) = crate::ec::counters::measure(|| g.double_n(12));
+        assert_eq!(ops.double, 12);
     }
 
     #[test]

@@ -106,6 +106,17 @@ impl<P: FieldParams<N>, const N: usize> Fp<P, N> {
     pub const R: [u64; N] = bigint::compute_r::<N>(&P::MODULUS);
     /// R² mod p — converts canonical → Montgomery via one mont-mul.
     pub const R2: [u64; N] = bigint::compute_r2::<N>(&P::MODULUS);
+    /// Word (u64 × u64) multiplications one fused CIOS [`Field::mul`]
+    /// issues: per outer pass, N operand muls + 1 `m` derivation + N
+    /// reduction muls ⇒ N·(2N + 1) — 36 at N = 4, 78 at N = 6. The
+    /// baseline the dedicated squaring is pinned against.
+    pub const MUL_WORD_MULS: u64 = (N as u64) * (2 * N as u64 + 1);
+    /// Word multiplications one SOS [`Field::square`] issues:
+    /// N(N−1)/2 upper-triangle cross terms (the doubling is a shift, not
+    /// a multiply) + N diagonal squares + N(N+1) reduction muls (incl.
+    /// the per-pass `m`) ⇒ (3N² + 3N)/2 — 30 at N = 4, 63 at N = 6,
+    /// a ≈17–19% word-mul saving over [`Self::MUL_WORD_MULS`].
+    pub const SQUARE_WORD_MULS: u64 = (3 * (N as u64) * (N as u64) + 3 * N as u64) / 2;
 
     /// Construct from raw Montgomery limbs (internal, must be < p).
     #[inline]
@@ -214,6 +225,77 @@ impl<P: FieldParams<N>, const N: usize> Fp<P, N> {
         opcount::count_mul();
         Self::mont_mul_uncounted(a, b)
     }
+
+    /// Dedicated SOS (separated operand scanning) Montgomery squaring:
+    /// returns a²·R⁻¹ mod p. The product phase computes only the upper
+    /// triangle of cross terms and doubles the whole strip with a one-bit
+    /// shift — the symmetric saving the fused CIOS multiply cannot
+    /// exploit — then adds the diagonal squares and runs the standard
+    /// word-by-word Montgomery reduction. Word-mul budget:
+    /// [`Self::SQUARE_WORD_MULS`] vs [`Self::MUL_WORD_MULS`].
+    #[inline]
+    fn mont_sqr_uncounted(a: &[u64; N]) -> [u64; N] {
+        // Fixed 16-limb scratch stands in for [u64; 2N] (stable Rust has
+        // no const-generic arithmetic); both supported fields fit (N ≤ 6).
+        debug_assert!(2 * N <= 16, "SOS scratch supports N <= 8");
+        let mut r = [0u64; 16];
+
+        // Upper-triangle cross products a[i]·a[j], i < j.
+        for i in 0..N {
+            let mut carry = 0u64;
+            for j in (i + 1)..N {
+                let (lo, hi) = mac(r[i + j], a[i], a[j], carry);
+                r[i + j] = lo;
+                carry = hi;
+            }
+            r[i + N] = carry;
+        }
+
+        // Double the cross strip: one-bit left shift across 2N limbs
+        // (r[0] is untouched — no cross term lands below index 1).
+        r[2 * N - 1] = r[2 * N - 2] >> 63;
+        for i in (2..=(2 * N - 2)).rev() {
+            r[i] = (r[i] << 1) | (r[i - 1] >> 63);
+        }
+        r[1] <<= 1;
+
+        // Add the diagonal a[i]².
+        let mut carry = 0u64;
+        for i in 0..N {
+            let (lo, hi) = mac(r[2 * i], a[i], a[i], carry);
+            r[2 * i] = lo;
+            let (s, c) = adc(r[2 * i + 1], hi, 0);
+            r[2 * i + 1] = s;
+            carry = c;
+        }
+        debug_assert_eq!(carry, 0, "a^2 fits 2N limbs");
+
+        // Word-by-word Montgomery reduction of the 2N-limb square.
+        let mut carry2 = 0u64;
+        for i in 0..N {
+            let m = r[i].wrapping_mul(Self::INV);
+            let (_, mut carry) = mac(r[i], m, P::MODULUS[0], 0);
+            for j in 1..N {
+                let (lo, hi) = mac(r[i + j], m, P::MODULUS[j], carry);
+                r[i + j] = lo;
+                carry = hi;
+            }
+            let (s, c) = adc(r[i + N], carry2, carry);
+            r[i + N] = s;
+            carry2 = c;
+        }
+        // p < 2^(64N−1) ⇒ a² + Σ mᵢ·p·2^(64i) < 2^(128N): no carry out.
+        debug_assert_eq!(carry2, 0);
+
+        let mut out = [0u64; N];
+        out.copy_from_slice(&r[N..2 * N]);
+        // The reduced value is < 2p: one conditional subtraction suffices.
+        if bigint::gte(&out, &P::MODULUS) {
+            let (d, _) = bigint::sub(&out, &P::MODULUS);
+            out = d;
+        }
+        out
+    }
 }
 
 impl<P: FieldParams<N>, const N: usize> PartialEq for Fp<P, N> {
@@ -296,7 +378,7 @@ impl<P: FieldParams<N>, const N: usize> Field for Fp<P, N> {
     #[inline]
     fn square(&self) -> Self {
         opcount::count_square();
-        Fp::from_mont(Self::mont_mul_uncounted(&self.mont, &self.mont))
+        Fp::from_mont(Self::mont_sqr_uncounted(&self.mont))
     }
 
     #[inline]
@@ -431,11 +513,71 @@ mod tests {
 
     #[test]
     fn square_matches_mul() {
+        // the dedicated SOS squaring must agree with the fused CIOS
+        // multiply everywhere — random elements, both limb widths
         let mut rng = Rng::new(2);
-        for _ in 0..50 {
+        for _ in 0..200 {
             let a = FpBls::random(&mut rng);
             assert_eq!(a.square(), a.mul(&a));
+            let b = FpBn::random(&mut rng);
+            assert_eq!(b.square(), b.mul(&b));
+            let c = FrBn::random(&mut rng);
+            assert_eq!(c.square(), c.mul(&c));
         }
+    }
+
+    #[test]
+    fn square_matches_mul_on_edge_values() {
+        // boundary operands stress the shift-doubling and the final
+        // conditional subtraction: 0, 1, 2, p−1, p−2, all-ones-limb words
+        fn check<P: FieldParams<N>, const N: usize>() {
+            let mut edges = vec![
+                Fp::<P, N>::zero(),
+                Fp::<P, N>::one(),
+                Fp::<P, N>::from_u64(2),
+                Fp::<P, N>::from_u64(u64::MAX),
+                Fp::<P, N>::one().neg(),        // p − 1
+                Fp::<P, N>::from_u64(2).neg(),  // p − 2
+            ];
+            // a value with every limb's top bit set (max carry pressure)
+            edges.push(Fp::<P, N>::from_limbs_reduce([0x8000_0000_0000_0000u64; N]));
+            for a in edges {
+                assert_eq!(a.square(), a.mul(&a), "{}: {:?}", P::NAME, a);
+            }
+        }
+        check::<Bn254FpParams, 4>();
+        check::<Bn254FrParams, 4>();
+        check::<Bls12381FpParams, 6>();
+    }
+
+    #[test]
+    fn sos_word_mul_pins() {
+        // the symmetric-cross-term saving, pinned exactly: the squaring
+        // must stay cheaper than the multiply in word muls
+        assert_eq!(FpBn::MUL_WORD_MULS, 36);
+        assert_eq!(FpBn::SQUARE_WORD_MULS, 30);
+        assert_eq!(FpBls::MUL_WORD_MULS, 78);
+        assert_eq!(FpBls::SQUARE_WORD_MULS, 63);
+        assert!(FpBn::SQUARE_WORD_MULS < FpBn::MUL_WORD_MULS);
+        assert!(FpBls::SQUARE_WORD_MULS < FpBls::MUL_WORD_MULS);
+    }
+
+    #[test]
+    fn square_counts_as_square_not_mul() {
+        // the dedicated path must keep the opcount split intact (the
+        // Tables II/III modmul source is mul + square)
+        let mut rng = Rng::new(9);
+        let a = FpBn::random(&mut rng);
+        let (_, ops) = crate::ff::opcount::measure(|| {
+            let mut x = a;
+            for _ in 0..7 {
+                x = x.square();
+            }
+            x
+        });
+        assert_eq!(ops.square, 7);
+        assert_eq!(ops.mul, 0);
+        assert_eq!(ops.modmuls(), 7);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! first touch: empty bucket) are resolved in the same round without
 //! inversions.
 
-use super::plan::{MsmConfig, MsmPlan};
+use super::plan::{DigitMatrix, MsmConfig, MsmPlan};
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 use crate::ff::Field;
 
@@ -50,14 +50,17 @@ enum Lane<C: CurveParams> {
 /// 3 buckets ⇒ thousands of single-lane rounds without this fallback.)
 const MIN_BATCH: usize = 48;
 
-/// Fill one window's buckets with batch-affine adds, returning Jacobian
-/// buckets ready for reduction.
+/// Fill a bucket array with batch-affine adds, returning Jacobian
+/// buckets ready for reduction. Bucket indices are opaque: the window
+/// backends pass one window's slots, the chunk-parallel backend
+/// (`super::chunked`) a fused `windows × slots` space so one round's
+/// batch inversion serves every window at once.
 ///
 /// `ops` yields (bucket, point). Rounds: at most one op per bucket; all
 /// inversions in a round share one batch inversion. Once a round falls
 /// under [`MIN_BATCH`] lanes, the remaining (conflict-tail) ops finish as
 /// ordinary mixed-Jacobian adds.
-fn fill_batch_affine<C: CurveParams>(
+pub(super) fn fill_batch_affine<C: CurveParams>(
     nbuckets: usize,
     ops: impl Iterator<Item = (usize, Affine<C>)>,
 ) -> Vec<Jacobian<C>> {
@@ -173,19 +176,19 @@ fn batch_invert<F: Field>(xs: &[F]) -> Vec<F> {
     out
 }
 
-/// The (bucket, signed point) op stream for one window: negative digits
-/// contribute the negated point (free: y ↦ −y), per the shared plan.
+/// The (bucket, signed point) op stream for one window, read from the
+/// pre-recoded digit matrix: negative digits contribute the negated
+/// point (free: y ↦ −y), per the shared plan's bucket contract.
 fn window_ops<'a, C: CurveParams>(
-    plan: &'a MsmPlan,
+    matrix: &'a DigitMatrix,
     points: &'a [Affine<C>],
-    scalars: &'a [ScalarLimbs],
     j: u32,
 ) -> impl Iterator<Item = (usize, Affine<C>)> + 'a {
-    points.iter().zip(scalars).filter_map(move |(p, s)| {
+    points.iter().enumerate().filter_map(move |(i, p)| {
         if p.infinity {
             return None;
         }
-        plan.bucket_op(s, j)
+        matrix.bucket_op(i, j)
             .map(|(b, negate)| (b, if negate { p.neg() } else { *p }))
     })
 }
@@ -202,11 +205,12 @@ pub fn msm<C: CurveParams>(
     }
     let plan = MsmPlan::for_curve::<C>(cfg);
     let input = plan.prepare::<C>(points, scalars);
-    let (points, scalars) = (input.points(), input.scalars());
+    let points = input.points();
+    let matrix = DigitMatrix::build(&plan, input.scalars());
     let per_window: Vec<Jacobian<C>> = (0..plan.windows)
         .map(|j| {
             let buckets =
-                fill_batch_affine(plan.bucket_slots(), window_ops(&plan, points, scalars, j));
+                fill_batch_affine(plan.bucket_slots(), window_ops(&matrix, points, j));
             plan.reduce(&buckets)
         })
         .collect();
@@ -231,22 +235,23 @@ pub fn msm_parallel<C: CurveParams>(
     if threads == 1 || windows == 1 {
         return msm(points, scalars, cfg);
     }
-    // One shared prepared view (GLV expansion when configured) for every
-    // window thread.
+    // One shared prepared view (GLV expansion when configured) and one
+    // shared digit matrix for every window thread.
     let input = plan.prepare::<C>(points, scalars);
-    let (points, scalars) = (input.points(), input.scalars());
+    let points = input.points();
+    let matrix = DigitMatrix::build_parallel(&plan, input.scalars(), threads);
     let mut window_results = vec![Jacobian::<C>::infinity(); windows as usize];
     std::thread::scope(|scope| {
         let per = windows.div_ceil(threads as u32) as usize;
         for (t, chunk) in window_results.chunks_mut(per).enumerate() {
             let first = t * per;
-            let plan = &plan;
+            let (plan, matrix) = (&plan, &matrix);
             scope.spawn(move || {
                 for (i, slot) in chunk.iter_mut().enumerate() {
                     let j = (first + i) as u32;
                     let buckets = fill_batch_affine(
                         plan.bucket_slots(),
-                        window_ops(plan, points, scalars, j),
+                        window_ops(matrix, points, j),
                     );
                     *slot = plan.reduce(&buckets);
                 }

@@ -1,0 +1,305 @@
+//! Chunk-parallel MSM runtime: **points** partition across threads, not
+//! windows.
+//!
+//! The window-parallel backends ([`super::parallel`],
+//! [`super::batch_affine`]) cap their useful thread count at the plan's
+//! window count — 22 for BN254 at the hardware k = 12, and only 11 under
+//! the GLV split. SZKP and ZK-Flex scale their accelerators by
+//! partitioning the *point stream* instead; this backend is the CPU
+//! analogue, so `baseline::cpu` throughput keeps scaling with cores:
+//!
+//! 1. **Recode** — one pass over the (GLV-prepared) scalars builds the
+//!    row-major [`DigitMatrix`]; no scalar is ever re-sliced per window.
+//! 2. **Fill** — each thread owns a contiguous point chunk and fills a
+//!    *private* bucket array covering **all** windows at once (flat index
+//!    `window · slots + |digit|`), through the shared batch-affine
+//!    batched-inversion accumulator — one round's inversion serves every
+//!    window's lanes. Private arrays mean no locks and no conflict
+//!    stalls between threads; the cost is memory:
+//!    `threads × windows × bucket_slots` Jacobian points.
+//! 3. **Merge** — per-thread arrays combine bucketwise in a pairwise
+//!    tree over *thread index* (round 1 pairs (0,1), (2,3), …). Bucket
+//!    accumulation is a commutative group sum, and the pairing is fixed,
+//!    so the merged buckets — and therefore the reduce/combine output —
+//!    never depend on thread completion order and stay `eq_point`-equal
+//!    to every other backend.
+//! 4. **Reduce + combine** — the merged buckets reduce once per window
+//!    (window-parallel, the only phase where window count bounds
+//!    threads) and the usual Horner shift chain (`double_n`) combines.
+//!
+//! [`msm_with_phases`] reports wall-clock per phase; the hotpath bench
+//! emits that breakdown into the `BENCH_hotpath.json` artifact.
+
+use super::batch_affine;
+use super::plan::{DigitMatrix, MsmConfig, MsmPlan};
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+use crate::util::Stopwatch;
+
+/// One thread's private bucket array (flat `windows × slots` layout).
+type Buckets<C> = Vec<Jacobian<C>>;
+
+/// Minimum points per chunk worth a dedicated thread: below this the
+/// thread's private bucket array (`windows × slots` Jacobian points) and
+/// its share of the merge dwarf the fill work it contributes, so the
+/// thread count is clamped to `⌈m / MIN_CHUNK⌉`. Large MSMs are
+/// unaffected (at m = 2¹⁶ the clamp sits at 4096 threads).
+const MIN_CHUNK: usize = 16;
+
+/// Wall-clock seconds per phase of one chunk-parallel MSM (the
+/// recode/fill/merge/reduce split the hotpath bench records).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChunkedPhases {
+    /// Building the one-pass digit matrix.
+    pub recode_s: f64,
+    /// Per-thread private bucket fills (batch-affine accumulation).
+    pub fill_s: f64,
+    /// Pairwise bucket-array merge.
+    pub merge_s: f64,
+    /// Window reductions plus the final Horner combine.
+    pub reduce_s: f64,
+}
+
+impl ChunkedPhases {
+    /// Total across the four phases.
+    pub fn total_s(&self) -> f64 {
+        self.recode_s + self.fill_s + self.merge_s + self.reduce_s
+    }
+}
+
+/// Chunk-parallel MSM over `threads` OS threads (point-level
+/// parallelism; see the module docs for the phase pipeline).
+pub fn msm<C: CurveParams>(
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+    threads: usize,
+) -> Jacobian<C> {
+    msm_with_phases(points, scalars, cfg, threads).0
+}
+
+/// [`msm`] with the wall-clock phase breakdown.
+pub fn msm_with_phases<C: CurveParams>(
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+    threads: usize,
+) -> (Jacobian<C>, ChunkedPhases) {
+    assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+    let mut phases = ChunkedPhases::default();
+    if points.is_empty() {
+        return (Jacobian::infinity(), phases);
+    }
+    let plan = MsmPlan::for_curve::<C>(cfg);
+    let input = plan.prepare::<C>(points, scalars);
+    let (points, scalars) = (input.points(), input.scalars());
+    let m = points.len();
+    let threads = threads.clamp(1, m.div_ceil(MIN_CHUNK));
+    let windows = plan.windows as usize;
+    let slots = plan.bucket_slots();
+
+    // -- recode: one pass over the scalars ------------------------------
+    let sw = Stopwatch::start();
+    let matrix = DigitMatrix::build_parallel(&plan, scalars, threads);
+    phases.recode_s = sw.secs();
+
+    // -- fill: private all-window buckets per point chunk ----------------
+    // (threads == 1 runs inline so the thread-local op counters keep
+    // seeing the work — the perf-smoke pins measure through this path)
+    let sw = Stopwatch::start();
+    let chunk = m.div_ceil(threads);
+    // `points.chunks` is the source of truth for the partition (ceil
+    // division arithmetic can overshoot m on the last band); every band
+    // is non-empty, so every array is full-sized for the merge.
+    let mut arrays: Vec<Buckets<C>> = if threads == 1 {
+        vec![fill_chunk(&plan, &matrix, points, 0)]
+    } else {
+        let mut arrays: Vec<Buckets<C>> = vec![Vec::new(); m.div_ceil(chunk)];
+        std::thread::scope(|scope| {
+            for (t, (slot, band)) in arrays.iter_mut().zip(points.chunks(chunk)).enumerate() {
+                let lo = t * chunk;
+                let (plan, matrix) = (&plan, &matrix);
+                scope.spawn(move || {
+                    *slot = fill_chunk(plan, matrix, band, lo);
+                });
+            }
+        });
+        arrays
+    };
+    phases.fill_s = sw.secs();
+
+    // -- merge: pairwise tree over thread index --------------------------
+    let sw = Stopwatch::start();
+    while arrays.len() > 1 {
+        // an odd trailing array passes through and keeps its position
+        let tail = if arrays.len() % 2 == 1 { arrays.pop() } else { None };
+        let pairs: Vec<(Buckets<C>, Buckets<C>)> = {
+            let mut drained = std::mem::take(&mut arrays).into_iter();
+            let mut pairs = Vec::new();
+            while let (Some(a), Some(b)) = (drained.next(), drained.next()) {
+                pairs.push((a, b));
+            }
+            pairs
+        };
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = pairs
+                .into_iter()
+                .map(|(mut a, b)| {
+                    scope.spawn(move || {
+                        for (x, y) in a.iter_mut().zip(&b) {
+                            *x = x.add(y);
+                        }
+                        a
+                    })
+                })
+                .collect();
+            // join in spawn order: the next round's pairing stays fixed
+            for h in handles {
+                arrays.push(h.join().expect("merge thread panicked"));
+            }
+        });
+        if let Some(t) = tail {
+            arrays.push(t);
+        }
+    }
+    let buckets = arrays.pop().expect("at least one bucket array");
+    phases.merge_s = sw.secs();
+
+    // -- reduce (window-parallel) + Horner combine -----------------------
+    let sw = Stopwatch::start();
+    let mut window_results = vec![Jacobian::<C>::infinity(); windows];
+    if threads == 1 {
+        for (j, slot) in window_results.iter_mut().enumerate() {
+            *slot = plan.reduce(&buckets[j * slots..(j + 1) * slots]);
+        }
+    } else {
+        std::thread::scope(|scope| {
+            let per = windows.div_ceil(threads);
+            for (t, out) in window_results.chunks_mut(per).enumerate() {
+                let first = t * per;
+                let (plan, buckets) = (&plan, &buckets[..]);
+                scope.spawn(move || {
+                    for (i, slot) in out.iter_mut().enumerate() {
+                        let j = first + i;
+                        *slot = plan.reduce(&buckets[j * slots..(j + 1) * slots]);
+                    }
+                });
+            }
+        });
+    }
+    let result = plan.combine(&window_results);
+    phases.reduce_s = sw.secs();
+    (result, phases)
+}
+
+/// Fill one point band's private all-window buckets (`band` starts at
+/// global point index `lo`): every (point, window) op lands at flat
+/// index `window · slots + |digit|`, so a single batch-affine round
+/// batches inversion lanes across *all* windows at once.
+fn fill_chunk<C: CurveParams>(
+    plan: &MsmPlan,
+    matrix: &DigitMatrix,
+    band: &[Affine<C>],
+    lo: usize,
+) -> Buckets<C> {
+    let slots = plan.bucket_slots();
+    let windows = plan.windows;
+    let ops = band.iter().enumerate().flat_map(move |(off, p)| {
+        let row = lo + off;
+        (0..windows).filter_map(move |j| {
+            if p.infinity {
+                return None;
+            }
+            matrix
+                .bucket_op(row, j)
+                .map(|(b, negate)| (j as usize * slots + b, if negate { p.neg() } else { *p }))
+        })
+    });
+    batch_affine::fill_batch_affine(windows as usize * slots, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bls12381G1, Bn254G1};
+    use crate::msm::{naive, Reduction, Slicing};
+
+    #[test]
+    fn matches_naive_across_thread_counts() {
+        let w = points::workload::<Bn254G1>(130, 951);
+        let want = naive::msm(&w.points, &w.scalars);
+        for threads in [1usize, 2, 4, 32, 200] {
+            let got = msm(&w.points, &w.scalars, &MsmConfig::default(), threads);
+            assert!(got.eq_point(&want), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn ragged_partition_uses_fewer_bands_than_threads() {
+        // m = 305, threads = 19: chunk = ⌈305/19⌉ = 17, but only
+        // ⌈305/17⌉ = 18 bands exist — the partition must follow the
+        // slice, not the ceil arithmetic (which would index past m)
+        let w = points::workload::<Bn254G1>(305, 957);
+        let want = naive::msm(&w.points, &w.scalars);
+        let got = msm(&w.points, &w.scalars, &MsmConfig::default(), 19);
+        assert!(got.eq_point(&want));
+    }
+
+    #[test]
+    fn matches_naive_both_slicings_and_reductions() {
+        let w = points::workload::<Bn254G1>(90, 952);
+        let want = naive::msm(&w.points, &w.scalars);
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            for red in [Reduction::RunningSum, Reduction::Recursive { k2: 3 }] {
+                let cfg =
+                    MsmConfig { window_bits: 8, reduction: red, slicing, ..Default::default() };
+                let got = msm(&w.points, &w.scalars, &cfg, 3);
+                assert!(got.eq_point(&want), "{slicing:?} {red:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_glv_bls() {
+        let w = points::workload::<Bls12381G1>(64, 953);
+        let want = naive::msm(&w.points, &w.scalars);
+        let cfg = MsmConfig::default().glv();
+        let got = msm(&w.points, &w.scalars, &cfg, 5);
+        assert!(got.eq_point(&want));
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let (r, phases) = msm_with_phases::<Bn254G1>(&[], &[], &MsmConfig::default(), 4);
+        assert!(r.is_infinity());
+        assert_eq!(phases.total_s(), 0.0);
+        // one point, many threads: the MIN_CHUNK clamp collapses to one
+        let w = points::workload::<Bn254G1>(1, 954);
+        let got = msm(&w.points, &w.scalars, &MsmConfig::default(), 16);
+        assert!(got.eq_point(&naive::msm(&w.points, &w.scalars)));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // the pairwise merge must make the output coordinates (not just
+        // the projective class) independent of thread scheduling
+        let w = points::workload::<Bn254G1>(150, 955);
+        let cfg = MsmConfig::new(7, Reduction::RunningSum);
+        let a = msm(&w.points, &w.scalars, &cfg, 4);
+        for _ in 0..3 {
+            let b = msm(&w.points, &w.scalars, &cfg, 4);
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.z, b.z);
+        }
+    }
+
+    #[test]
+    fn phases_are_recorded() {
+        let w = points::workload::<Bn254G1>(600, 956);
+        let (out, phases) = msm_with_phases(&w.points, &w.scalars, &MsmConfig::default(), 2);
+        assert!(out.eq_point(&naive::msm(&w.points, &w.scalars)));
+        assert!(phases.recode_s >= 0.0 && phases.fill_s > 0.0);
+        assert!(phases.reduce_s > 0.0);
+        assert!(phases.total_s() >= phases.fill_s);
+    }
+}

@@ -11,12 +11,15 @@
 //!   serial op accounting the FPGA model consumes. Signed digit re-coding
 //!   itself lives in [`signed`]; the raw slice primitives at
 //!   [`crate::ec::scalar`].
-//! * Backends, all consuming the same plan and bit-exact against
-//!   [`naive`]:
+//! * Backends, all consuming the same plan (and its one-pass
+//!   [`DigitMatrix`] recode) and bit-exact against [`naive`]:
 //!   [`pippenger`] (serial fills, Algorithm 2 + IS-RBAM reduction),
 //!   [`parallel`] (windows fan out across threads — the software analogue
 //!   of replicated BAM units), [`batch_affine`] (bucket fills with shared
-//!   batch inversion, ≈6M per add — the §Perf/L3 optimization), and
+//!   batch inversion, ≈6M per add — the §Perf/L3 optimization),
+//!   [`chunked`] (the chunk-parallel runtime: **points** partition across
+//!   threads, so parallelism is not capped by the window count — the
+//!   SZKP/ZK-Flex point-level scheduling, on CPU), and
 //!   `runtime::msm_engine` (the PJRT UDA engine, conflict-free batches).
 //! * [`partial`] — shard specs (point chunks, window ranges), window-range
 //!   execution and the deterministic merge: the kernel half of the
@@ -36,13 +39,15 @@ pub mod naive;
 pub mod pippenger;
 pub mod parallel;
 pub mod batch_affine;
+pub mod chunked;
 pub mod partial;
 
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
+pub use chunked::ChunkedPhases;
 pub use partial::{PartialMsm, ShardPolicy, ShardSpec};
 pub use pippenger::msm as msm_pippenger;
-pub use plan::{Decomposition, MsmConfig, MsmInput, MsmPlan, Reduction, Slicing};
+pub use plan::{Decomposition, DigitMatrix, MsmConfig, MsmInput, MsmPlan, Reduction, Slicing};
 
 /// Heuristic window width: balances m/window bucket fills against 2^k
 /// reduction work. The usual c ≈ log2(m) − 3 rule, clamped to the paper's
@@ -73,20 +78,52 @@ pub enum Backend {
         /// OS threads the windows fan out across.
         threads: usize,
     },
+    /// Chunk-parallel runtime ([`chunked`]): **points** partition across
+    /// threads; each thread fills a private all-window bucket array from
+    /// the one-pass digit matrix with batch-affine adds, then arrays
+    /// merge pairwise and reduce once. The only backend whose thread
+    /// count is not capped by the plan's window count.
+    Chunked {
+        /// OS threads the point chunks fan out across.
+        threads: usize,
+    },
 }
 
 impl Backend {
-    /// Pick an executor for an m-point MSM: tiny inputs skip bucket setup
-    /// entirely; mid sizes run serial fills; large inputs go wide with
-    /// batch-affine fills (the fill-dominated regime where ≈6M/add wins).
-    pub fn auto(m: usize) -> Backend {
+    /// The shared selection rule, as a pure function of the exact inputs
+    /// (the unit the threshold tests pin): tiny inputs skip bucket setup
+    /// entirely; mid sizes run serial fills; large inputs go
+    /// point-chunked once the thread budget exceeds the plan's window
+    /// count (window-parallel backends idle past that ceiling — 22
+    /// windows for BN254 at k = 12, only 11 under GLV), else
+    /// window-parallel batch-affine fills.
+    pub fn pick(m: usize, plan_windows: u32, threads: usize) -> Backend {
         if m < 32 {
             Backend::Naive
         } else if m < 1024 {
             Backend::Pippenger
+        } else if threads > plan_windows as usize {
+            Backend::Chunked { threads }
         } else {
-            Backend::BatchAffineParallel { threads: parallel::default_threads() }
+            Backend::BatchAffineParallel { threads }
         }
+    }
+
+    /// Pick an executor for an m-point MSM with [`Self::pick`], sizing
+    /// the window count at the model width (254-bit scalars — the BN254
+    /// paper shape). Curve-exact callers should prefer
+    /// [`Self::auto_for`], which also sees GLV's halved window count.
+    pub fn auto(m: usize) -> Backend {
+        let windows = MsmPlan::new(254, &MsmConfig::auto(m)).windows;
+        Backend::pick(m, windows, parallel::default_threads())
+    }
+
+    /// Curve- and config-exact selection: resolves the plan's real
+    /// window count (a GLV config halves it, moving the chunked
+    /// threshold down to ~11 threads on BN254) against
+    /// [`parallel::default_threads`].
+    pub fn auto_for<C: CurveParams>(m: usize, cfg: &MsmConfig) -> Backend {
+        Backend::pick(m, MsmPlan::for_curve::<C>(cfg).windows, parallel::default_threads())
     }
 }
 
@@ -123,14 +160,18 @@ pub fn execute<C: CurveParams>(
         Backend::BatchAffineParallel { threads } => {
             batch_affine::msm_parallel(points, scalars, cfg, threads)
         }
+        Backend::Chunked { threads } => chunked::msm(points, scalars, cfg, threads),
     }
 }
 
 /// Top-level convenience: auto backend + auto config (signed digits and
-/// the paper's recursive reduction once the window is wide enough).
+/// the paper's recursive reduction once the window is wide enough; the
+/// chunk-parallel backend once the host has more threads than the plan
+/// has windows).
 pub fn msm<C: CurveParams>(points: &[Affine<C>], scalars: &[ScalarLimbs]) -> Jacobian<C> {
     let m = points.len();
-    execute(Backend::auto(m), points, scalars, &MsmConfig::auto(m))
+    let cfg = MsmConfig::auto(m);
+    execute(Backend::auto_for::<C>(m, &cfg), points, scalars, &cfg)
 }
 
 #[cfg(test)]
@@ -170,7 +211,43 @@ mod tests {
     fn auto_backend_tiers() {
         assert_eq!(Backend::auto(8), Backend::Naive);
         assert_eq!(Backend::auto(100), Backend::Pippenger);
-        assert!(matches!(Backend::auto(1 << 20), Backend::BatchAffineParallel { .. }));
+        // large inputs go wide; which wide backend depends on the host's
+        // thread count vs the plan's window count
+        assert!(matches!(
+            Backend::auto(1 << 20),
+            Backend::BatchAffineParallel { .. } | Backend::Chunked { .. }
+        ));
+    }
+
+    #[test]
+    fn pick_prefers_chunked_past_the_window_ceiling() {
+        // the exact decision rule, pinned (auto/auto_for are thin shims
+        // over this with host-dependent thread counts)
+        assert_eq!(Backend::pick(1 << 20, 22, 8), Backend::BatchAffineParallel { threads: 8 });
+        assert_eq!(Backend::pick(1 << 20, 22, 22), Backend::BatchAffineParallel { threads: 22 });
+        assert_eq!(Backend::pick(1 << 20, 22, 23), Backend::Chunked { threads: 23 });
+        assert_eq!(Backend::pick(1 << 20, 11, 12), Backend::Chunked { threads: 12 });
+        assert_eq!(Backend::pick(8, 22, 64), Backend::Naive);
+        assert_eq!(Backend::pick(100, 22, 64), Backend::Pippenger);
+    }
+
+    #[test]
+    fn auto_picks_chunked_at_threads_beyond_glv_windows() {
+        // satellite regression: threads ≫ windows on a GLV plan must
+        // resolve to the chunked backend — the GLV split leaves only 11
+        // windows on BN254, so window-parallel backends idle 21 of 32
+        // threads there
+        let cfg = MsmConfig::new(12, Reduction::default()).glv();
+        let windows = MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+        assert_eq!(windows, 11);
+        let picked = Backend::pick(1 << 14, windows, 32);
+        assert_eq!(picked, Backend::Chunked { threads: 32 });
+        // and the selected backend is bit-identical at that operating
+        // point (threads ≫ windows, GLV decomposition)
+        let w = points::workload::<Bn254G1>(1 << 11, 4242);
+        let got = execute(picked, &w.points, &w.scalars, &cfg);
+        let want = execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+        assert!(got.eq_point(&want));
     }
 
     #[test]
@@ -184,6 +261,7 @@ mod tests {
             Backend::Parallel { threads: 3 },
             Backend::BatchAffine,
             Backend::BatchAffineParallel { threads: 3 },
+            Backend::Chunked { threads: 3 },
         ] {
             let got = execute(backend, &w.points, &w.scalars, &cfg);
             assert!(got.eq_point(&want), "{backend:?}");

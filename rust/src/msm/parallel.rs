@@ -28,10 +28,12 @@ pub fn msm<C: CurveParams>(
     if threads == 1 || windows == 1 {
         return super::pippenger::msm(points, scalars, cfg);
     }
-    // Decomposition (GLV expansion when configured) happens once, up
-    // front, so every window thread reads the same prepared view.
+    // Decomposition (GLV expansion when configured) and the one-pass
+    // digit recode happen once, up front, so every window thread reads
+    // the same prepared view and the same matrix.
     let input = plan.prepare::<C>(points, scalars);
-    let (points, scalars) = (input.points(), input.scalars());
+    let points = input.points();
+    let matrix = super::plan::DigitMatrix::build_parallel(&plan, input.scalars(), threads);
 
     // Window results, computed in parallel.
     let mut window_results = vec![Jacobian::<C>::infinity(); windows as usize];
@@ -39,11 +41,11 @@ pub fn msm<C: CurveParams>(
         let per = windows.div_ceil(threads as u32) as usize;
         for (t, chunk) in window_results.chunks_mut(per).enumerate() {
             let first = t * per;
-            let plan = &plan;
+            let (plan, matrix) = (&plan, &matrix);
             scope.spawn(move || {
                 for (i, slot) in chunk.iter_mut().enumerate() {
                     let j = (first + i) as u32;
-                    *slot = plan.reduce(&plan.fill_window(points, scalars, j));
+                    *slot = plan.reduce(&plan.fill_window_from(matrix, points, j));
                 }
             });
         }

@@ -145,20 +145,15 @@ pub fn msm_window_range<C: CurveParams>(
     // in-process pool too, where it is noise next to the O(m·windows)
     // point operations a shard performs and buys one shared code path.
     let input = plan.prepare::<C>(points, scalars);
-    let (points, scalars) = (input.points(), input.scalars());
+    let points = input.points();
+    let matrix = super::plan::DigitMatrix::build(&plan, input.scalars());
     let mut acc = Jacobian::<C>::infinity();
     for j in (lo..hi).rev() {
-        for _ in 0..plan.window_bits {
-            acc = acc.double();
-        }
-        let w = plan.reduce(&plan.fill_window(points, scalars, j));
-        acc = acc.add(&w);
+        let w = plan.reduce(&plan.fill_window_from(&matrix, points, j));
+        acc = acc.double_n(plan.window_bits).add(&w);
     }
     // shift the range result to its global position: k·lo doublings
-    for _ in 0..(plan.window_bits * lo) {
-        acc = acc.double();
-    }
-    acc
+    acc.double_n(plan.window_bits * lo)
 }
 
 /// [`msm_window_range`] with the range's windows fanned out across OS
@@ -182,32 +177,27 @@ pub fn msm_window_range_threaded<C: CurveParams>(
     let plan = MsmPlan::for_curve::<C>(cfg);
     assert!(hi <= plan.windows, "window range [{lo}, {hi}) outside plan");
     let input = plan.prepare::<C>(points, scalars);
-    let (points, scalars) = (input.points(), input.scalars());
+    let points = input.points();
+    let matrix = super::plan::DigitMatrix::build_parallel(&plan, input.scalars(), threads);
     let mut window_results = vec![Jacobian::<C>::infinity(); count];
     std::thread::scope(|scope| {
         let per = count.div_ceil(threads);
         for (t, chunk) in window_results.chunks_mut(per).enumerate() {
             let first = lo + (t * per) as u32;
-            let plan = &plan;
+            let (plan, matrix) = (&plan, &matrix);
             scope.spawn(move || {
                 for (i, slot) in chunk.iter_mut().enumerate() {
                     let j = first + i as u32;
-                    *slot = plan.reduce(&plan.fill_window(points, scalars, j));
+                    *slot = plan.reduce(&plan.fill_window_from(matrix, points, j));
                 }
             });
         }
     });
     let mut acc = Jacobian::<C>::infinity();
     for wj in window_results.iter().rev() {
-        for _ in 0..plan.window_bits {
-            acc = acc.double();
-        }
-        acc = acc.add(wj);
+        acc = acc.double_n(plan.window_bits).add(wj);
     }
-    for _ in 0..(plan.window_bits * lo) {
-        acc = acc.double();
-    }
-    acc
+    acc.double_n(plan.window_bits * lo)
 }
 
 /// Execute one shard. Point chunks run through the full backend dispatch;
@@ -227,9 +217,9 @@ pub fn execute_shard<C: CurveParams>(
         }
         ShardSpec::WindowRange { lo, hi } => {
             let threads = match backend {
-                Backend::Parallel { threads } | Backend::BatchAffineParallel { threads } => {
-                    threads
-                }
+                Backend::Parallel { threads }
+                | Backend::BatchAffineParallel { threads }
+                | Backend::Chunked { threads } => threads,
                 _ => 1,
             };
             msm_window_range_threaded(points, scalars, cfg, lo, hi, threads)

@@ -36,9 +36,11 @@ pub fn msm<C: CurveParams>(
     }
     let plan = MsmPlan::for_curve::<C>(cfg);
     let input = plan.prepare::<C>(points, scalars);
-    let (points, scalars) = (input.points(), input.scalars());
+    let points = input.points();
+    // one-pass recode: the fill loops below never re-slice a scalar
+    let matrix = super::plan::DigitMatrix::build(&plan, input.scalars());
     let per_window: Vec<Jacobian<C>> = (0..plan.windows)
-        .map(|j| plan.reduce(&plan.fill_window(points, scalars, j)))
+        .map(|j| plan.reduce(&plan.fill_window_from(&matrix, points, j)))
         .collect();
     plan.combine(&per_window)
 }
@@ -73,25 +75,20 @@ pub fn msm_with_cost<C: CurveParams>(
     assert_eq!(points.len(), scalars.len());
     let plan = MsmPlan::for_curve::<C>(cfg);
     let input = plan.prepare::<C>(points, scalars);
-    let (points, scalars) = (input.points(), input.scalars());
+    let points = input.points();
+    let matrix = super::plan::DigitMatrix::build(&plan, input.scalars());
     let mm0 = crate::ff::opcount::snapshot();
 
     let mut cost = MsmCost::default();
     let mut result = Jacobian::<C>::infinity();
     for j in (0..plan.windows).rev() {
-        let (r2, combine) = counters::measure(|| {
-            let mut r = result;
-            for _ in 0..plan.window_bits {
-                r = r.double();
-            }
-            r
-        });
-        let buckets = plan.fill_window(points, scalars, j);
+        let (r2, combine) = counters::measure(|| result.double_n(plan.window_bits));
+        let buckets = plan.fill_window_from(&matrix, points, j);
         // Fill ops are counted as *issued* UDA operations (one per nonzero
         // digit), matching the hardware: a first touch of an empty bucket
         // still flows through the pipeline even though the software
         // shortcut skips the arithmetic.
-        let issued: u64 = scalars.iter().filter(|s| plan.digit(s, j) != 0).count() as u64;
+        let issued: u64 = matrix.nonzero_in_window(j);
         let (wj, reduce) = counters::measure(|| plan.reduce(&buckets));
         let (r3, combine2) = counters::measure(|| r2.add(&wj));
         result = r3;

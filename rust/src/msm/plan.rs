@@ -23,6 +23,11 @@
 //! Buckets use natural indexing: slot `b` holds the points whose digit has
 //! magnitude `b`; slot 0 is a dummy (digit 0 contributes nothing).
 //!
+//! Digit extraction is a **one-pass recode**: [`DigitMatrix`] turns every
+//! (point, window) digit into a flat row-major matrix up front, so the
+//! fill loops never re-slice a scalar (and never re-walk the signed carry
+//! chain) once per window. Every backend builds the matrix once per MSM.
+//!
 //! On top of the digit encoding sits the scalar **decomposition**
 //! ([`Decomposition`]): the GLV fast path rewrites each full-width term
 //! `k·P` as two half-width terms `k1·P + k2·φ(P)` using the curve's
@@ -317,15 +322,26 @@ impl MsmPlan {
 
     /// All digits of one scalar, LSB window first (length [`Self::windows`]).
     pub fn digits(&self, scalar: &ScalarLimbs) -> Vec<i64> {
+        let mut buf = vec![0i32; self.windows as usize];
+        self.digits_into(scalar, &mut buf);
+        buf.into_iter().map(i64::from).collect()
+    }
+
+    /// Write all digits of one scalar into `out` (length
+    /// [`Self::windows`]) in a single pass — one carry sweep for signed
+    /// slicing instead of the O(windows) re-walk [`Self::digit`] pays per
+    /// window. This is the row recode of [`DigitMatrix`]; digits fit
+    /// `i32` for every supported window width (|d| < 2^16).
+    pub fn digits_into(&self, scalar: &ScalarLimbs, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.windows as usize, "row length != window count");
         match self.slicing {
-            Slicing::Unsigned => (0..self.windows)
-                .map(|j| {
-                    scalar::slice_bits(scalar, j * self.window_bits, self.window_bits) as i64
-                })
-                .collect(),
-            Slicing::Signed => {
-                signed::signed_digits(scalar, self.window_bits, self.windows)
+            Slicing::Unsigned => {
+                let k = self.window_bits;
+                for (j, slot) in out.iter_mut().enumerate() {
+                    *slot = scalar::slice_bits(scalar, j as u32 * k, k) as i32;
+                }
             }
+            Slicing::Signed => signed::signed_digits_into(scalar, self.window_bits, out),
         }
     }
 
@@ -365,6 +381,28 @@ impl MsmPlan {
         buckets
     }
 
+    /// [`Self::fill_window`] reading pre-recoded digits from a
+    /// [`DigitMatrix`] row instead of re-slicing every scalar — what the
+    /// backends run after their single recode pass.
+    pub fn fill_window_from<C: CurveParams>(
+        &self,
+        matrix: &DigitMatrix,
+        points: &[Affine<C>],
+        j: u32,
+    ) -> Vec<Jacobian<C>> {
+        let mut buckets = vec![Jacobian::<C>::infinity(); self.bucket_slots()];
+        for (i, p) in points.iter().enumerate() {
+            if let Some((b, negate)) = matrix.bucket_op(i, j) {
+                if negate {
+                    buckets[b] = buckets[b].add_mixed(&p.neg());
+                } else {
+                    buckets[b] = buckets[b].add_mixed(p);
+                }
+            }
+        }
+        buckets
+    }
+
     /// Reduce one window's (natural-indexed) buckets to Σ b·B[b] with the
     /// planned strategy.
     pub fn reduce<C: CurveParams>(&self, buckets: &[Jacobian<C>]) -> Jacobian<C> {
@@ -377,14 +415,12 @@ impl MsmPlan {
     }
 
     /// DNA combine: Horner over window results (index j = window j, LSB
-    /// first), k doublings per window plus one add.
+    /// first), k doublings per window (one `double_n` shift-chain call)
+    /// plus one add.
     pub fn combine<C: CurveParams>(&self, window_results: &[Jacobian<C>]) -> Jacobian<C> {
         let mut result = Jacobian::<C>::infinity();
         for wj in window_results.iter().rev() {
-            for _ in 0..self.window_bits {
-                result = result.double();
-            }
-            result = result.add(wj);
+            result = result.double_n(self.window_bits).add(wj);
         }
         result
     }
@@ -449,6 +485,105 @@ impl<C: CurveParams> MsmInput<'_, C> {
     }
 }
 
+/// The one-pass digit matrix: every (point, window) digit recoded up
+/// front into a flat **row-major** array — row `i` holds all
+/// [`MsmPlan::windows`] digits of scalar `i`, LSB window first.
+///
+/// One build pass replaces the per-window re-extraction the fill loops
+/// used to pay: under signed slicing, [`MsmPlan::digit`] re-walks the
+/// carry chain from window 0 on every call, so filling all windows
+/// point-by-window cost O(windows²) slice reads per scalar; a row recode
+/// is one carry sweep, O(windows). The row-major layout also makes the
+/// matrix trivially chunkable by *points* — the chunk-parallel backend
+/// (`super::chunked`) hands each thread a contiguous band of rows.
+///
+/// Memory: 4 bytes per (point, window) — `m × windows × i32` (GLV plans
+/// double the rows but halve the windows, so the footprint is unchanged).
+pub struct DigitMatrix {
+    /// Row length (digits per scalar).
+    windows: usize,
+    /// Row-major digits: entry (i, j) at `i * windows + j`.
+    digits: Vec<i32>,
+}
+
+impl DigitMatrix {
+    /// Recode every scalar in one serial pass.
+    pub fn build(plan: &MsmPlan, scalars: &[ScalarLimbs]) -> DigitMatrix {
+        let windows = plan.windows as usize;
+        let mut digits = vec![0i32; scalars.len() * windows];
+        for (row, s) in digits.chunks_mut(windows).zip(scalars) {
+            plan.digits_into(s, row);
+        }
+        DigitMatrix { windows, digits }
+    }
+
+    /// Recode with the rows split across `threads` scoped threads (the
+    /// recode is integer-only, but at 2²⁰ points it is still worth
+    /// spreading). Identical output to [`Self::build`].
+    pub fn build_parallel(plan: &MsmPlan, scalars: &[ScalarLimbs], threads: usize) -> DigitMatrix {
+        let threads = threads.clamp(1, scalars.len().max(1));
+        if threads <= 1 {
+            return DigitMatrix::build(plan, scalars);
+        }
+        let windows = plan.windows as usize;
+        let mut digits = vec![0i32; scalars.len() * windows];
+        let chunk = scalars.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (rows, band) in digits.chunks_mut(chunk * windows).zip(scalars.chunks(chunk)) {
+                scope.spawn(move || {
+                    for (row, s) in rows.chunks_mut(windows).zip(band) {
+                        plan.digits_into(s, row);
+                    }
+                });
+            }
+        });
+        DigitMatrix { windows, digits }
+    }
+
+    /// Digits per row (= the plan's window count).
+    pub fn windows(&self) -> u32 {
+        self.windows as u32
+    }
+
+    /// Number of rows (scalars recoded).
+    pub fn rows(&self) -> usize {
+        if self.windows == 0 {
+            0
+        } else {
+            self.digits.len() / self.windows
+        }
+    }
+
+    /// All digits of scalar `i`, LSB window first.
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.digits[i * self.windows..(i + 1) * self.windows]
+    }
+
+    /// The digit of scalar `i` at window `j`.
+    #[inline]
+    pub fn digit(&self, i: usize, j: u32) -> i32 {
+        self.digits[i * self.windows + j as usize]
+    }
+
+    /// The bucket operation for (scalar `i`, window `j`) — same contract
+    /// as [`MsmPlan::bucket_op`], read from the matrix.
+    #[inline]
+    pub fn bucket_op(&self, i: usize, j: u32) -> Option<(usize, bool)> {
+        let d = self.digit(i, j);
+        match d.cmp(&0) {
+            std::cmp::Ordering::Equal => None,
+            std::cmp::Ordering::Greater => Some((d as usize, false)),
+            std::cmp::Ordering::Less => Some((d.unsigned_abs() as usize, true)),
+        }
+    }
+
+    /// How many rows carry a nonzero digit in window `j` (the issued-op
+    /// count of the instrumented cost path).
+    pub fn nonzero_in_window(&self, j: u32) -> u64 {
+        (0..self.rows()).filter(|&i| self.digit(i, j) != 0).count() as u64
+    }
+}
+
 /// Algorithm 2's reconstruction loop: Σ b·B[b] via the running sum.
 /// 2·(len − 1) point adds, all serially dependent.
 pub fn reduce_running_sum<C: CurveParams>(buckets: &[Jacobian<C>]) -> Jacobian<C> {
@@ -492,11 +627,8 @@ pub fn reduce_recursive<C: CurveParams>(
     // Each sub-window reduces with the (short) running sum, then Horner.
     let mut result = Jacobian::<C>::infinity();
     for t in (0..sub_windows).rev() {
-        for _ in 0..k2 {
-            result = result.double();
-        }
         let w = reduce_running_sum(&l2[t as usize]);
-        result = result.add(&w);
+        result = result.double_n(k2).add(&w);
     }
     result
 }
@@ -620,6 +752,53 @@ mod tests {
     #[should_panic(expected = "window bits out of range")]
     fn rejects_zero_window() {
         MsmPlan::new(254, &MsmConfig::unsigned(0, Reduction::RunningSum));
+    }
+
+    #[test]
+    fn digit_matrix_agrees_with_per_window_extraction() {
+        let w = points::workload::<Bn254G1>(40, 418);
+        for cfg in [
+            MsmConfig::unsigned(9, Reduction::RunningSum),
+            MsmConfig::new(9, Reduction::RunningSum),
+            MsmConfig::new(13, Reduction::RunningSum),
+            MsmConfig::new(12, Reduction::RunningSum).glv(),
+        ] {
+            let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+            let input = plan.prepare::<Bn254G1>(&w.points, &w.scalars);
+            let scalars = input.scalars();
+            let matrix = DigitMatrix::build(&plan, scalars);
+            assert_eq!(matrix.windows(), plan.windows);
+            assert_eq!(matrix.rows(), scalars.len());
+            for (i, s) in scalars.iter().enumerate() {
+                assert_eq!(matrix.row(i).len(), plan.windows as usize);
+                for j in 0..plan.windows {
+                    assert_eq!(i64::from(matrix.digit(i, j)), plan.digit(s, j), "i={i} j={j}");
+                    assert_eq!(matrix.bucket_op(i, j), plan.bucket_op(s, j), "i={i} j={j}");
+                }
+            }
+            // the threaded recode is bit-identical to the serial one
+            for threads in [2usize, 3, 64] {
+                let par = DigitMatrix::build_parallel(&plan, scalars, threads);
+                assert_eq!(par.digits, matrix.digits, "threads={threads}");
+            }
+            // and the matrix-fed fill produces the same buckets
+            for j in 0..plan.windows {
+                let a = plan.fill_window(input.points(), scalars, j);
+                let b = plan.fill_window_from(&matrix, input.points(), j);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert!(x.eq_point(y), "window {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn digit_matrix_empty_input() {
+        let plan = MsmPlan::for_curve::<Bn254G1>(&MsmConfig::default());
+        let matrix = DigitMatrix::build(&plan, &[]);
+        assert_eq!(matrix.rows(), 0);
+        assert_eq!(matrix.nonzero_in_window(0), 0);
     }
 
     #[test]

@@ -60,25 +60,33 @@ pub fn signed_digit(scalar: &ScalarLimbs, j: u32, k: u32) -> i64 {
     }
 }
 
-/// All signed digits of one scalar, LSB window first, in a single carry
-/// pass. `windows` should be [`signed_window_count`] of the scalar width.
-pub fn signed_digits(scalar: &ScalarLimbs, k: u32, windows: u32) -> Vec<i64> {
-    debug_assert!((2..=16).contains(&k));
+/// All signed digits of one scalar written into `out` (length = window
+/// count), LSB window first, in a single carry pass — the recode core the
+/// one-pass `DigitMatrix` builds rows with. Digits fit `i32` for every
+/// supported window (|d| ≤ 2^15 at k = 16).
+pub fn signed_digits_into(scalar: &ScalarLimbs, k: u32, out: &mut [i32]) {
+    debug_assert!((2..=16).contains(&k), "signed slicing needs 2 <= k <= 16");
     let half = 1u64 << (k - 1);
-    let mut out = Vec::with_capacity(windows as usize);
     let mut carry = 0u64;
-    for j in 0..windows {
-        let v = slice_bits(scalar, j * k, k) + carry;
+    for (j, slot) in out.iter_mut().enumerate() {
+        let v = slice_bits(scalar, j as u32 * k, k) + carry;
         if v >= half {
-            out.push(v as i64 - (1i64 << k));
+            *slot = v as i32 - (1i32 << k);
             carry = 1;
         } else {
-            out.push(v as i64);
+            *slot = v as i32;
             carry = 0;
         }
     }
     debug_assert_eq!(carry, 0, "carry must be absorbed by the top window");
-    out
+}
+
+/// All signed digits of one scalar, LSB window first, in a single carry
+/// pass. `windows` should be [`signed_window_count`] of the scalar width.
+pub fn signed_digits(scalar: &ScalarLimbs, k: u32, windows: u32) -> Vec<i64> {
+    let mut buf = vec![0i32; windows as usize];
+    signed_digits_into(scalar, k, &mut buf);
+    buf.into_iter().map(i64::from).collect()
 }
 
 /// Exact inverse of the decomposition: Σ dⱼ·2^(k·j) computed in 320-bit

@@ -551,6 +551,27 @@ mod tests {
     }
 
     #[test]
+    fn table2_3_source_counts_squares_without_drift() {
+        // The table's modmul source is opcount's mul + square. The
+        // dedicated SOS squaring must keep feeding the square lane (one
+        // count per call, never silently re-routed through mul), so the
+        // regenerated Tables II/III pick the new squarings up with zero
+        // accounting drift.
+        let w = crate::ec::points::workload::<Bn254G1>(256, 6);
+        let cfg = MsmConfig::unsigned(12, Reduction::Recursive { k2: 6 });
+        let ((out, cost), ops) =
+            crate::ff::opcount::measure(|| pippenger::msm_with_cost(&w.points, &w.scalars, &cfg));
+        assert!(out.eq_point(&msm::naive::msm(&w.points, &w.scalars)));
+        // squarings are a large, separately-tracked share of the fill
+        // path (madd-2007-bl is 7M + 4S per mixed add)
+        assert!(ops.square > 0 && ops.mul > 0);
+        assert!(ops.square * 3 > ops.mul, "squares underrepresented: {ops:?}");
+        // the cost path's modmul figure is exactly the counter sum
+        assert_eq!(cost.modmuls, ops.modmuls());
+        assert_eq!(ops.modmuls(), ops.mul + ops.square);
+    }
+
+    #[test]
     fn ablation_signed_halves_serial_chain() {
         let t = ablation_signed(1024, 31);
         assert!(t.contains("Unsigned") && t.contains("Signed"));

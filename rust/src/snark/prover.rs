@@ -60,6 +60,11 @@ pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     pub msm_cfg: MsmConfig,
     /// The local executor (ignored when a multi-device pool handles an MSM).
     pub backend: Backend,
+    /// When set, every MSM re-resolves its executor per query via
+    /// [`Backend::auto_for`] (size-, curve- and plan-aware: the
+    /// chunk-parallel backend once the host's thread budget exceeds the
+    /// plan's window count) instead of using the fixed [`Self::backend`].
+    pub auto_backend: bool,
     /// Sharded executor for the 𝔾₁ MSMs (A, B1, L, H queries).
     pub pool_g1: Option<Arc<ShardPool<G1>>>,
     /// Sharded executor for the 𝔾₂ MSM (B2 query).
@@ -79,6 +84,7 @@ where
             crs,
             msm_cfg: MsmConfig::default(),
             backend: Backend::Pippenger,
+            auto_backend: false,
             pool_g1: None,
             pool_g2: None,
             _p: std::marker::PhantomData,
@@ -88,6 +94,17 @@ where
     /// Same prover, different MSM executor.
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
+        self.auto_backend = false;
+        self
+    }
+
+    /// Resolve the executor per MSM instead of fixing one: each query
+    /// runs [`Backend::auto_for`] over its own length and the prover's
+    /// plan config, so on wide hosts the G1/G2 MSMs land on the
+    /// chunk-parallel backend whenever threads exceed the plan's window
+    /// count (e.g. any GLV plan past 11 threads on BN254).
+    pub fn with_auto_backend(mut self) -> Self {
+        self.auto_backend = true;
         self
     }
 
@@ -123,7 +140,12 @@ where
                 }
             }
         }
-        msm::execute(self.backend, points, scalars, &self.msm_cfg)
+        let backend = if self.auto_backend {
+            Backend::auto_for::<G1>(points.len(), &self.msm_cfg)
+        } else {
+            self.backend
+        };
+        msm::execute(backend, points, scalars, &self.msm_cfg)
     }
 
     fn msm_g2(&self, points: &[Affine<G2>], scalars: &[ScalarLimbs]) -> Jacobian<G2> {
@@ -135,7 +157,12 @@ where
                 }
             }
         }
-        msm::execute(self.backend, points, scalars, &self.msm_cfg)
+        let backend = if self.auto_backend {
+            Backend::auto_for::<G2>(points.len(), &self.msm_cfg)
+        } else {
+            self.backend
+        };
+        msm::execute(backend, points, scalars, &self.msm_cfg)
     }
 
     /// Run the prover pipeline over a satisfied constraint system,
@@ -274,6 +301,24 @@ mod tests {
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
+    }
+
+    #[test]
+    fn proof_identical_with_auto_backend() {
+        // per-query auto resolution (chunked on wide hosts, window-
+        // parallel otherwise) must be invisible in the proof
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        let (prover2, _) = small_prover();
+        let (p2, _) = prover2.with_auto_backend().prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
+        // the explicit chunked backend agrees too, at threads ≫ windows
+        let (prover3, _) = small_prover();
+        let (p3, _) = prover3.with_backend(Backend::Chunked { threads: 32 }).prove(&cs);
+        assert!(p1.a.eq_point(&p3.a));
+        assert!(p1.c.eq_point(&p3.c));
     }
 
     #[test]

@@ -33,6 +33,8 @@ fn backend_dispatch_agrees_at_2k() {
         Backend::Parallel { threads: 4 },
         Backend::BatchAffine,
         Backend::BatchAffineParallel { threads: 4 },
+        Backend::Chunked { threads: 4 },
+        Backend::Chunked { threads: 48 },
     ] {
         let got = msm::execute(backend, &w.points, &w.scalars, &cfg);
         assert!(got.eq_point(&naive), "{backend:?}");
@@ -143,6 +145,8 @@ fn glv_dispatch_agrees_at_2k_both_curves() {
         Backend::Parallel { threads: 4 },
         Backend::BatchAffine,
         Backend::BatchAffineParallel { threads: 4 },
+        Backend::Chunked { threads: 4 },
+        Backend::Chunked { threads: 48 },
     ] {
         let got = msm::execute(backend, &w.points, &w.scalars, &cfg);
         assert!(got.eq_point(&naive), "{backend:?}");

@@ -1,0 +1,133 @@
+//! CI perf smoke: pinned operation-count bounds for the paper configs.
+//!
+//! Wall-clock is too noisy to gate on shared CI runners, so this gate
+//! pins **op counts** instead: the serially dependent point-op chain
+//! (`MsmPlan::serial_reduce_ops`) and the measured fill/reduce/combine
+//! point ops of real MSM executions are exact and deterministic, so a
+//! kernel-layer regression — an extra window pass, a longer running-sum
+//! chain, a de-specialized squaring, runaway merge cost in the chunked
+//! backend — fails here as count drift long before it would show up as
+//! seconds anywhere else. CI runs this with `--release` right after the
+//! quick bench.
+
+use ifzkp::ec::{points, Bn254G1};
+use ifzkp::ff::{opcount, Field, FpBls12381, FpBn254};
+use ifzkp::msm::{self, pippenger, Backend, MsmConfig, MsmPlan, Reduction};
+
+/// Large enough that every paper window has dense buckets at k ≤ 8 and
+/// the fill phase dominates, small enough for the debug-mode tier-1 run.
+const M: usize = 1 << 11;
+const SEED: u64 = 0x5EED;
+
+#[test]
+fn paper_plan_serial_chains_stay_pinned() {
+    // model widths (the Table III shapes)
+    let unsigned_rs = MsmConfig::unsigned(12, Reduction::RunningSum);
+    let p = MsmPlan::new(254, &unsigned_rs);
+    assert_eq!(p.windows, 22);
+    assert_eq!(p.serial_reduce_ops_per_window(), 2 * 4095);
+    assert_eq!(p.serial_reduce_ops(), 2 * 4095 * 22);
+    assert_eq!(MsmPlan::new(381, &unsigned_rs).windows, 32);
+    // IS-RBAM at the paper's k2 = 6: (12/6) short sums + 12 doublings
+    let rbam = MsmConfig::unsigned(12, Reduction::Recursive { k2: 6 });
+    assert_eq!(MsmPlan::new(254, &rbam).serial_reduce_ops_per_window(), 2 * 2 * 63 + 12);
+    // signed digits halve the running-sum chain at the hardware window
+    let signed_rs = MsmConfig::new(12, Reduction::RunningSum);
+    assert_eq!(MsmPlan::new(254, &signed_rs).serial_reduce_ops_per_window(), 2 * 2048);
+    // the GLV split halves the window passes on the real curve
+    let glv = MsmConfig::new(12, Reduction::Recursive { k2: 6 }).glv();
+    let gp = MsmPlan::for_curve::<Bn254G1>(&glv);
+    assert_eq!(gp.windows, 11);
+    assert_eq!(gp.serial_reduce_ops(), (2 * 2 * 63 + 12) * 11);
+}
+
+#[test]
+fn measured_serial_point_ops_within_pinned_bounds() {
+    let w = points::workload::<Bn254G1>(M, SEED);
+    let mut reference = None;
+    for (label, cfg) in [
+        ("unsigned run-sum", MsmConfig::unsigned(12, Reduction::RunningSum)),
+        ("unsigned IS-RBAM", MsmConfig::unsigned(12, Reduction::Recursive { k2: 6 })),
+        ("signed IS-RBAM", MsmConfig::new(12, Reduction::Recursive { k2: 6 })),
+        ("glv signed IS-RBAM", MsmConfig::new(12, Reduction::Recursive { k2: 6 }).glv()),
+    ] {
+        let plan = MsmPlan::for_curve::<Bn254G1>(&cfg);
+        let (out, cost) = pippenger::msm_with_cost(&w.points, &w.scalars, &cfg);
+        // all four paper configs answer the same point
+        let want = *reference.get_or_insert(out);
+        assert!(out.eq_point(&want), "{label}: result drifted");
+        // the measured reduce chain can never exceed the plan's bound
+        assert!(
+            cost.reduce_ops <= plan.serial_reduce_ops(),
+            "{label}: reduce ops {} > pinned bound {}",
+            cost.reduce_ops,
+            plan.serial_reduce_ops()
+        );
+        // combine: k doublings + 1 add per window, exactly
+        let combine_bound = plan.windows as u64 * (plan.window_bits as u64 + 1);
+        assert!(
+            cost.combine_ops <= combine_bound,
+            "{label}: combine ops {} > pinned bound {combine_bound}",
+            cost.combine_ops
+        );
+        // fill issues one op per nonzero digit: ≤ (expanded) m × windows
+        let fill_bound = plan.decomposition.expansion_factor() * M as u64 * plan.windows as u64;
+        assert!(
+            cost.fill_ops <= fill_bound,
+            "{label}: fill ops {} > pinned bound {fill_bound}",
+            cost.fill_ops
+        );
+        // and the fill is never degenerate (digits all zero would mean a
+        // broken recode, not a fast one)
+        assert!(cost.fill_ops > fill_bound / 2, "{label}: fill ops suspiciously low");
+    }
+}
+
+#[test]
+fn sos_squaring_stays_cheaper_than_mul_and_counted() {
+    // word-mul budgets, pinned exactly (the symmetric-cross-term saving)
+    assert_eq!(FpBn254::MUL_WORD_MULS, 36);
+    assert_eq!(FpBn254::SQUARE_WORD_MULS, 30);
+    assert_eq!(FpBls12381::MUL_WORD_MULS, 78);
+    assert_eq!(FpBls12381::SQUARE_WORD_MULS, 63);
+    assert!(FpBn254::SQUARE_WORD_MULS < FpBn254::MUL_WORD_MULS);
+    assert!(FpBls12381::SQUARE_WORD_MULS < FpBls12381::MUL_WORD_MULS);
+    // and the dedicated path still feeds the square opcount lane
+    let (_, ops) = opcount::measure(|| {
+        let mut x = FpBn254::from_u64(3);
+        for _ in 0..16 {
+            x = x.square();
+        }
+        x
+    });
+    assert_eq!(ops.square, 16);
+    assert_eq!(ops.mul, 0);
+}
+
+#[test]
+fn chunked_backend_modmul_overhead_stays_bounded() {
+    // Single-thread chunked runs inline, so the thread-local counters see
+    // every op. The fused all-window batch-affine fill must not cost more
+    // modmuls than the window-by-window batch-affine backend (bigger
+    // inversion batches can only help), modulo round-boundary noise.
+    let w = points::workload::<Bn254G1>(M, SEED);
+    let cfg = MsmConfig::new(8, Reduction::Recursive { k2: 4 });
+    let (want, base) =
+        opcount::measure(|| msm::execute(Backend::BatchAffine, &w.points, &w.scalars, &cfg));
+    let chunked = Backend::Chunked { threads: 1 };
+    let (got, chunk) =
+        opcount::measure(|| msm::execute(chunked, &w.points, &w.scalars, &cfg));
+    assert!(got.eq_point(&want));
+    assert!(
+        (chunk.modmuls() as f64) < 1.05 * base.modmuls() as f64,
+        "chunked(1) modmuls {} vs batch-affine {}",
+        chunk.modmuls(),
+        base.modmuls()
+    );
+    // multi-thread runs stay bit-identical (op totals live on the worker
+    // threads, so only the result is asserted here)
+    for threads in [4usize, 16] {
+        let got = msm::execute(Backend::Chunked { threads }, &w.points, &w.scalars, &cfg);
+        assert!(got.eq_point(&want), "threads={threads}");
+    }
+}

@@ -300,6 +300,74 @@ fn glv_matches_full_across_backends_slicings_and_shards() {
 }
 
 #[test]
+fn chunked_matches_pippenger_full_matrix() {
+    // the chunk-parallel acceptance matrix: {1, 2, 4, 32} threads ×
+    // {Full, Glv} × {Unsigned, Signed} × both curves, every cell
+    // eq_point-identical to msm::execute(Backend::Pippenger, …)
+    fn case<C: ifzkp::ec::CurveParams>(rng: &mut ifzkp::util::rng::Rng) -> Result<(), String> {
+        let m = 8 + rng.below(140) as usize;
+        let k = 4 + rng.below(9) as u32;
+        let w = points::workload::<C>(m, rng.next_u64());
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            for glv in [false, true] {
+                let mut cfg = MsmConfig {
+                    window_bits: k,
+                    reduction: Reduction::Recursive { k2: 3 },
+                    slicing,
+                    ..Default::default()
+                };
+                if glv {
+                    cfg = cfg.glv();
+                }
+                let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+                for threads in [1usize, 2, 4, 32] {
+                    let got = msm::execute(
+                        Backend::Chunked { threads },
+                        &w.points,
+                        &w.scalars,
+                        &cfg,
+                    );
+                    prop_assert!(
+                        got.eq_point(&want),
+                        "{} m={m} k={k} {slicing:?} glv={glv} threads={threads}",
+                        C::NAME
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+    check_with(Config { cases: 3, seed: 0xC44C }, "chunked == pippenger", |rng| {
+        case::<Bn254G1>(rng)?;
+        case::<ifzkp::ec::Bls12381G1>(rng)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn shard_pool_through_chunked_backend_matches_direct() {
+    // ShardPool's native devices execute shards on the chunked backend;
+    // the pool's deterministic merge must stay invisible next to the
+    // direct (unsharded) dispatch, for both shard shapes and with more
+    // threads per device than the plan has windows
+    use ifzkp::coordinator::shard::ShardPool;
+    check_with(Config { cases: 4, seed: 0x5CCD }, "pool(chunked) == execute", |rng| {
+        let m = 32 + rng.below(200) as usize;
+        let w = points::workload::<Bn254G1>(m, rng.next_u64());
+        let cfg = if rng.bool() { MsmConfig::default() } else { MsmConfig::default().glv() };
+        let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+        for policy in [partial::ShardPolicy::ChunkPoints, partial::ShardPolicy::WindowRange] {
+            let pool = ShardPool::<Bn254G1>::native(3, 32).with_policy(policy);
+            let got = pool
+                .execute(&w.points, &w.scalars, &cfg)
+                .map_err(|e| format!("pool failed: {e:#}"))?;
+            prop_assert!(got.eq_point(&want), "m={m} {policy:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn parallel_equals_serial_random_threads() {
     check_with(Config { cases: 8, seed: 0xB0B }, "parallel == serial", |rng| {
         let m = 16 + rng.below(150) as usize;
