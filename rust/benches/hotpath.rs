@@ -1,8 +1,10 @@
 //! Hot-path microbenchmarks (the §Perf instrumentation): field mul, EC
 //! point ops, MSM per-point cost, the chunk-parallel runtime's
-//! recode/fill/merge/reduce phase split, sharded multi-device MSM, NTT
-//! butterflies — ns/op so the perf pass can track improvements without
-//! criterion.
+//! recode/fill/merge/reduce phase split, sharded multi-device MSM, and
+//! the NTT runtime (serial reference vs cached-plan serial/parallel/
+//! four-step at 2^16, plus the prover-shaped per-phase split) — ns/op so
+//! the perf pass can track improvements without criterion. The JSON
+//! artifact schema is documented in the repo-root `BENCHMARKS.md`.
 //!
 //! CI knobs:
 //! * `IFZKP_BENCH_QUICK=1` — small-n smoke (seconds, not minutes);
@@ -320,7 +322,7 @@ fn main() {
         }
     }
 
-    // NTT
+    // NTT (small n continuity entry: the serial reference, historic key)
     let mut rng = Rng::new(4);
     let ntt_n: usize = if quick { 1 << 10 } else { 1 << 14 };
     let dom = ntt::domain::Domain::<ifzkp::ff::params::Bn254FrParams, 4>::new(ntt_n).unwrap();
@@ -338,6 +340,117 @@ fn main() {
         t * 1e3
     );
     results.record("NTT ns/element", t * 1e9 / ntt_n as f64);
+
+    // NTT runtime section: serial reference vs the cached-plan executors
+    // at 2^16 (the acceptance operating point), plus the prover-shaped
+    // transform set through one cached plan. Like the chunked-MSM 2^16
+    // section, deliberately NOT scaled by IFZKP_BENCH_QUICK — the
+    // comparison only means something at this size, and it is bounded at
+    // seconds. JSON keys stay host-independent; the thread width is its
+    // own entry.
+    {
+        use ifzkp::ntt::{parallel as nttpar, NttPlan};
+        let n: usize = 1 << 16;
+        let mut rng = Rng::new(5);
+        let base: Vec<FrBn254> = (0..n).map(|_| FrBn254::random(&mut rng)).collect();
+
+        let sw = Stopwatch::start();
+        let plan = NttPlan::<ifzkp::ff::params::Bn254FrParams, 4>::new(n).unwrap();
+        let t_build = sw.secs();
+        println!(
+            "NTT 2^16 plan build (twiddles+ladders)       {:>10.1} ns/element  ({:.2}ms once per size)",
+            t_build * 1e9 / n as f64,
+            t_build * 1e3
+        );
+        results.record("NTT 2^16 plan build ns/element", t_build * 1e9 / n as f64);
+
+        let mut serial = base.clone();
+        let sw = Stopwatch::start();
+        ntt::ntt_in_place(&mut serial, &plan.omega);
+        let t_serial = sw.secs();
+        println!("NTT 2^16 serial reference                    {:>10.1} ns/element", t_serial * 1e9 / n as f64);
+        results.record("NTT 2^16 serial ns/element", t_serial * 1e9 / n as f64);
+
+        let mut planned = base.clone();
+        let sw = Stopwatch::start();
+        plan.ntt(&mut planned, 1);
+        let t_planned = sw.secs();
+        assert_eq!(planned, serial, "planned x1 != serial reference");
+        println!(
+            "NTT 2^16 planned x1 (cached twiddles)        {:>10.1} ns/element  ({:.2}x vs reference)",
+            t_planned * 1e9 / n as f64,
+            t_serial / t_planned
+        );
+        results.record("NTT 2^16 planned x1 ns/element", t_planned * 1e9 / n as f64);
+
+        // threads > 4 even on small CI runners: the acceptance point is
+        // "parallel beats serial at >= 4 threads"
+        let threads = msm::parallel::default_threads().max(4);
+        results.record("NTT 2^16 wide threads", threads as f64);
+
+        let mut par = base.clone();
+        let sw = Stopwatch::start();
+        plan.ntt(&mut par, threads); // auto: four-step at 2^16
+        let t_par = sw.secs();
+        assert_eq!(par, serial, "parallel != serial reference");
+        println!(
+            "NTT 2^16 parallel x{threads} (four-step)           {:>10.1} ns/element  ({:.2}x vs serial)",
+            t_par * 1e9 / n as f64,
+            t_serial / t_par
+        );
+        results.record("NTT 2^16 parallel-wide ns/element", t_par * 1e9 / n as f64);
+
+        let mut stg = base.clone();
+        let sw = Stopwatch::start();
+        nttpar::ntt_stage_parallel(&plan, &mut stg, threads);
+        let t_stg = sw.secs();
+        assert_eq!(stg, serial, "stage-parallel != serial reference");
+        println!(
+            "NTT 2^16 stage-parallel x{threads}                 {:>10.1} ns/element  ({:.2}x vs serial)",
+            t_stg * 1e9 / n as f64,
+            t_serial / t_stg
+        );
+        results.record("NTT 2^16 stage-parallel-wide ns/element", t_stg * 1e9 / n as f64);
+
+        // prover-shaped sequence: the QAP reduction's seven transforms
+        // (3 iNTT, 3 coset NTT, 1 coset iNTT) through the one cached
+        // plan — the per-phase split lands in the JSON artifact
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let mut c = base.clone();
+        let sw = Stopwatch::start();
+        plan.intt(&mut a, threads);
+        plan.intt(&mut b, threads);
+        plan.intt(&mut c, threads);
+        let t_intt = sw.secs();
+        let sw = Stopwatch::start();
+        plan.coset_ntt(&mut a, threads);
+        plan.coset_ntt(&mut b, threads);
+        plan.coset_ntt(&mut c, threads);
+        let t_coset = sw.secs();
+        let sw = Stopwatch::start();
+        plan.coset_intt(&mut a, threads);
+        let t_icoset = sw.secs();
+        // the phase entries are guarded too: intt → coset_ntt →
+        // coset_intt is net one inverse transform of the base vector
+        let mut check = base.clone();
+        plan.intt(&mut check, 1);
+        assert_eq!(a, check, "prover-phase chain diverged");
+        for (phase, secs, count) in [
+            ("intt", t_intt, 3usize),
+            ("coset-ntt", t_coset, 3),
+            ("coset-intt", t_icoset, 1),
+        ] {
+            println!(
+                "  NTT 2^16 prover phase {phase:<20} {:>10.1} ns/element  ({count} transforms)",
+                secs * 1e9 / (count * n) as f64
+            );
+            results.record(
+                &format!("NTT 2^16 prover {phase} ns/element"),
+                secs * 1e9 / (count * n) as f64,
+            );
+        }
+    }
 
     // engine (if artifacts present): batched UDA throughput
     let dir = ifzkp::runtime::artifact::default_dir();

@@ -15,8 +15,11 @@
 
 use crate::coordinator::shard::{ShardPolicy, ShardPool};
 use crate::ec::{points, CurveParams};
+use crate::ff::{Field, FieldParams, Fp};
 use crate::fpga::CurveId;
 use crate::msm::{self, Backend, MsmConfig};
+use crate::ntt::NttPlan;
+use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 /// Published libsnark operating points (M-MSM-PPS plateaus).
@@ -127,6 +130,24 @@ pub fn measure_auto<C: CurveParams>(m: usize, seed: u64) -> CpuMeasurement {
     measure_backend_with::<C>(m, seed, Backend::auto_for::<C>(m, &cfg), &cfg)
 }
 
+/// Measure one n-point forward NTT over the scalar field `P` on the
+/// local host, through a cached [`NttPlan`] (built outside the timed
+/// region — the tables amortize across the prover's transforms, so the
+/// steady-state cost is what matters). `threads == 1` is the serial
+/// baseline; larger budgets run the stage/chunk-parallel (or four-step)
+/// executor. In the returned [`CpuMeasurement`], `m` is the element
+/// count and `mpps` is millions of field **elements** per second.
+pub fn measure_ntt<P: FieldParams<4>>(n: usize, seed: u64, threads: usize) -> CpuMeasurement {
+    let plan = NttPlan::<P, 4>::new(n).expect("size within the field's 2-adicity");
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<Fp<P, 4>> = (0..n).map(|_| Fp::random(&mut rng)).collect();
+    let sw = Stopwatch::start();
+    plan.ntt(&mut v, threads.max(1));
+    let seconds = sw.secs();
+    std::hint::black_box(&v);
+    CpuMeasurement { m: n as u64, seconds, mpps: n as f64 / seconds / 1e6 }
+}
+
 /// Measure an MSM submitted through the sharded multi-device path: the
 /// job splits across `devices` simulated native devices under `policy`
 /// and the partials merge deterministically (single device ⇒ the direct
@@ -209,6 +230,19 @@ mod tests {
         let a = measure_auto::<crate::ec::Bn254G1>(1_500, 99);
         assert_eq!(a.m, 1_500);
         assert!(a.seconds > 0.0 && a.mpps > 0.0);
+    }
+
+    #[test]
+    fn ntt_measurement_runs_serial_and_parallel() {
+        use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+        let s = measure_ntt::<Bn254FrParams>(1 << 10, 99, 1);
+        assert_eq!(s.m, 1 << 10);
+        assert!(s.seconds > 0.0 && s.mpps > 0.0);
+        let p = measure_ntt::<Bn254FrParams>(1 << 10, 99, 4);
+        assert!(p.seconds > 0.0 && p.mpps > 0.0);
+        let bls = measure_ntt::<Bls12381FrParams>(1 << 9, 99, 2);
+        assert_eq!(bls.m, 1 << 9);
+        assert!(bls.mpps > 0.0);
     }
 
     #[test]

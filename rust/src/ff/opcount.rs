@@ -71,6 +71,24 @@ impl std::ops::Sub for OpCounts {
     }
 }
 
+impl std::ops::Add for OpCounts {
+    type Output = OpCounts;
+    fn add(self, rhs: OpCounts) -> OpCounts {
+        OpCounts {
+            mul: self.mul + rhs.mul,
+            square: self.square + rhs.square,
+            add: self.add + rhs.add,
+            inv: self.inv + rhs.inv,
+        }
+    }
+}
+
+impl std::ops::AddAssign for OpCounts {
+    fn add_assign(&mut self, rhs: OpCounts) {
+        *self = *self + rhs;
+    }
+}
+
 /// Current counter values for this thread.
 pub fn snapshot() -> OpCounts {
     OpCounts {
@@ -108,6 +126,20 @@ mod tests {
         assert_eq!(ops.mul, 10);
         assert_eq!(ops.square, 1);
         assert_eq!(ops.modmuls(), 11);
+    }
+
+    #[test]
+    fn counts_aggregate_across_phases() {
+        // multi-phase budget pins (e.g. the NTT transform sequence in
+        // tests/perf_smoke.rs) sum per-phase snapshots
+        let a = OpCounts { mul: 3, square: 1, add: 5, inv: 0 };
+        let b = OpCounts { mul: 7, square: 0, add: 1, inv: 2 };
+        let mut acc = OpCounts::default();
+        acc += a;
+        acc += b;
+        assert_eq!(acc, a + b);
+        assert_eq!(acc.modmuls(), 11);
+        assert_eq!((acc - a), b);
     }
 
     #[test]

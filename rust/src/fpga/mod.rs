@@ -15,6 +15,9 @@
 //! * [`rbam`] — IS-RBAM recursive reduction vs serial running sum;
 //! * [`dna`] — the final Double-aNd-Add combine;
 //! * [`sab`] — composition into an end-to-end [`sab::MsmTiming`];
+//! * [`nttmodel`] — a clearly-labeled what-if model of the NTT kernel
+//!   the paper defers to future work, in the same calibration
+//!   vocabulary;
 //! * [`resources`] — ALM/DSP/M20K model (Tables IV, V, VII);
 //! * [`power`] — standby/active power model (Table VIII, Figs 5/7);
 //! * [`calib`] — every calibration constant, with provenance notes.
@@ -27,9 +30,11 @@ pub mod sps;
 pub mod rbam;
 pub mod dna;
 pub mod sab;
+pub mod nttmodel;
 pub mod resources;
 pub mod power;
 
+pub use nttmodel::{NttKernelConfig, NttModel, NttTiming};
 pub use resources::{DesignVariant, NumberForm, ResourceModel, Resources};
 pub use sab::{MsmTiming, SabConfig, SabModel};
 

@@ -10,9 +10,11 @@
 //! * **substrates** — finite fields ([`ff`]), elliptic curves ([`ec`]),
 //!   MSM algorithms ([`msm`]: one shared `MsmKernel` plan — window slicing,
 //!   signed-digit buckets, reduction strategy — consumed by every backend
-//!   behind the [`msm::Backend`] dispatch), NTT ([`ntt`]) and a
-//!   Groth16-shaped prover ([`snark`]) — everything the paper's evaluation
-//!   depends on, built from scratch;
+//!   behind the [`msm::Backend`] dispatch), the NTT runtime ([`ntt`]: a
+//!   cached twiddle plan with stage-parallel and four-step executors,
+//!   mirroring the MSM plan/executor split) and a Groth16-shaped prover
+//!   ([`snark`]) — everything the paper's evaluation depends on, built
+//!   from scratch;
 //! * **device models** — a cycle-level model of the paper's SAB/UDA Agilex
 //!   design ([`fpga`]) plus the CPU/GPU baselines ([`baseline`]);
 //! * **runtime + coordinator** — a PJRT-backed batched point-operation

@@ -6,7 +6,7 @@
 //! ifzkp prove   --constraints N
 //! ifzkp serve   [--config serve.toml] [--jobs N] [--size N] [--devices N] [--sharded chunk|window]
 //! ifzkp sim     --curve ... [--size N] [--scaling S]
-//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|glv|whatif|all]
+//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|glv|whatif|ntt|all] [--cpu-measure N]
 //! ifzkp figures [--id 4|5|6|7|8|all]
 //! ifzkp info
 //! ```
@@ -293,6 +293,11 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
     }
     if all || id == "whatif" {
         println!("{}", tables::whatif_multi_kernel(args.get_usize("size", 16_000_000) as u64));
+    }
+    // the FPGA-NTT what-if (paper future work): CPU NTT measured locally
+    // up to --cpu-measure elements, modeled device + Amdahl prover columns
+    if all || id == "ntt" {
+        println!("{}", tables::whatif_ntt(args.get_usize("cpu-measure", 1 << 16)));
     }
     Ok(())
 }

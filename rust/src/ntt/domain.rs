@@ -1,11 +1,36 @@
 //! Evaluation domains: the 2-adic multiplicative subgroups of Fr plus coset
 //! shifts — the QAP prover evaluates over a coset to divide by the domain's
 //! vanishing polynomial safely.
+//!
+//! A domain lazily builds (and caches) one [`NttPlan`] — the twiddle
+//! tables are computed on the first transform and shared by every
+//! subsequent one, including by clones taken *after* the first build
+//! (the cache is an `Arc` inside a `OnceLock`; a clone taken before any
+//! transform starts with an empty cache and would build its own). The
+//! QAP prover's seven transforms per proof all hit the same tables.
 
+use std::sync::{Arc, OnceLock};
+
+use super::plan::NttPlan;
 use crate::ff::bigint;
 use crate::ff::{Field, FieldParams, Fp};
 
 /// A power-of-two evaluation domain in Fr.
+///
+/// # Examples
+///
+/// ```
+/// use ifzkp::ff::params::Bn254FrParams;
+/// use ifzkp::ntt::domain::Domain;
+///
+/// let d = Domain::<Bn254FrParams, 4>::new(1024).unwrap();
+/// assert_eq!(d.n, 1024);
+/// // the transform plan (twiddle tables, coset ladders) is built once
+/// // and cached — repeated calls return the same Arc
+/// let p1 = d.plan();
+/// let p2 = d.plan();
+/// assert!(std::sync::Arc::ptr_eq(&p1, &p2));
+/// ```
 #[derive(Clone, Debug)]
 pub struct Domain<P: FieldParams<N>, const N: usize> {
     /// Domain size n (power of two).
@@ -14,6 +39,8 @@ pub struct Domain<P: FieldParams<N>, const N: usize> {
     pub omega: Fp<P, N>,
     /// Coset generator g (the field's multiplicative generator).
     pub coset_gen: Fp<P, N>,
+    /// Lazily-built transform plan, shared across clones once built.
+    plan: OnceLock<Arc<NttPlan<P, N>>>,
 }
 
 impl<P: FieldParams<N>, const N: usize> Domain<P, N> {
@@ -34,7 +61,15 @@ impl<P: FieldParams<N>, const N: usize> Domain<P, N> {
         let exp = bigint::shr_slices(&exp, log_n as usize);
         let omega = g.pow_limbs(&exp);
         debug_assert!(super::is_primitive_root(&omega, n));
-        Some(Domain { n, omega, coset_gen: g })
+        Some(Domain { n, omega, coset_gen: g, plan: OnceLock::new() })
+    }
+
+    /// The domain's cached [`NttPlan`] — built on first use, then shared
+    /// (the twiddle tables amortize across every transform over this
+    /// domain, which is what makes the prover's repeated transforms
+    /// cheap).
+    pub fn plan(&self) -> Arc<NttPlan<P, N>> {
+        self.plan.get_or_init(|| Arc::new(NttPlan::for_domain(self))).clone()
     }
 
     /// Evaluate the vanishing polynomial Z(x) = xⁿ − 1 at a point.
@@ -42,25 +77,17 @@ impl<P: FieldParams<N>, const N: usize> Domain<P, N> {
         x.pow_u64(self.n as u64).sub(&Fp::<P, N>::one())
     }
 
-    /// Forward NTT over the coset g·⟨ω⟩: scales coefficients by gⁱ first.
+    /// Forward NTT over the coset g·⟨ω⟩. Runs through the cached plan:
+    /// the coset shift reads the precomputed gⁱ ladder instead of
+    /// walking a serial `scale·g` chain per call.
     pub fn coset_ntt(&self, values: &mut [Fp<P, N>]) {
-        let mut scale = Fp::<P, N>::one();
-        for v in values.iter_mut() {
-            *v = v.mul(&scale);
-            scale = scale.mul(&self.coset_gen);
-        }
-        super::ntt_in_place(values, &self.omega);
+        self.plan().coset_ntt(values, 1);
     }
 
-    /// Inverse of [`Self::coset_ntt`].
+    /// Inverse of [`Self::coset_ntt`] (cached plan; the n⁻¹ scale is
+    /// folded into the inverse coset ladder).
     pub fn coset_intt(&self, values: &mut [Fp<P, N>]) {
-        super::intt_in_place(values, &self.omega);
-        let ginv = self.coset_gen.inv().expect("generator nonzero");
-        let mut scale = Fp::<P, N>::one();
-        for v in values.iter_mut() {
-            *v = v.mul(&scale);
-            scale = scale.mul(&ginv);
-        }
+        self.plan().coset_intt(values, 1);
     }
 
     /// All n domain elements ωⁱ.
@@ -128,6 +155,18 @@ mod tests {
             let x = d.coset_gen.mul(&d.omega.pow_u64(i as u64));
             assert_eq!(v[i as usize], a.add(&b.mul(&x)));
         }
+    }
+
+    #[test]
+    fn cached_plan_is_built_once_and_travels_with_clones() {
+        let d = D::new(64).unwrap();
+        let p1 = d.plan();
+        assert!(std::sync::Arc::ptr_eq(&p1, &d.plan()));
+        // a clone taken after the first build shares the same tables
+        let d2 = d.clone();
+        assert!(std::sync::Arc::ptr_eq(&p1, &d2.plan()));
+        assert_eq!(p1.n, 64);
+        assert_eq!(p1.omega, d.omega);
     }
 
     #[test]

@@ -2,18 +2,40 @@
 //!
 //! The third compute pillar of the prover (Table I's NTT column, 7–11% of
 //! runtime; the paper defers its FPGA acceleration to future work but the
-//! profiling reproduction needs a real implementation). In-place iterative
-//! radix-2 Cooley–Tukey over the multiplicative 2-adic subgroup of Fr,
-//! plus coset evaluation — everything the QAP prover requires.
+//! profiling reproduction needs a real implementation), organised like
+//! the MSM pillar:
+//!
+//! * **plan** ([`plan::NttPlan`]) — cached, stage-major twiddle tables
+//!   and coset ladders built once per size, plus the exact field-mul
+//!   budget each transform must hit (`n/2·log₂ n` butterflies — pinned
+//!   in `tests/perf_smoke.rs` like the MSM SOS word-mul constants);
+//! * **executors** ([`parallel`]) — a stage/chunk-parallel radix-2
+//!   schedule and a transpose-based four-step path for large n, both
+//!   bit-identical to the serial reference at every thread count;
+//! * **domains** ([`domain::Domain`]) — the 2-adic subgroups plus coset
+//!   shifts, caching one shared plan per domain so the QAP prover's
+//!   seven transforms amortize a single table build.
+//!
+//! [`ntt_in_place`]/[`intt_in_place`] remain as the **serial
+//! reference**: the simplest correct implementation (per-stage
+//! `ω^(n/len)` derivation, serial twiddle walk), which the property
+//! matrix in `tests/prop_ntt.rs` holds every executor against.
 
 pub mod domain;
+pub mod parallel;
+pub mod plan;
+
+pub use plan::NttPlan;
 
 use crate::ff::{Field, FieldParams, Fp};
 
 /// Bit-reversal permutation (in place).
-fn bit_reverse<T>(v: &mut [T]) {
+pub(crate) fn bit_reverse<T>(v: &mut [T]) {
     let n = v.len();
     debug_assert!(n.is_power_of_two());
+    if n <= 1 {
+        return;
+    }
     let bits = n.trailing_zeros();
     for i in 0..n {
         let j = (i as u32).reverse_bits() >> (32 - bits);
@@ -25,6 +47,11 @@ fn bit_reverse<T>(v: &mut [T]) {
 
 /// In-place forward NTT: values ← evaluations of the polynomial (given in
 /// coefficient order) at the powers of `omega` (a primitive n-th root).
+///
+/// This is the **serial reference**: it re-derives `ω^(n/len)` per stage
+/// and walks the twiddle chain inside every butterfly loop (two muls per
+/// butterfly). Production callers should go through a cached
+/// [`NttPlan`], which halves the mul count and parallelizes.
 pub fn ntt_in_place<P: FieldParams<N>, const N: usize>(
     values: &mut [Fp<P, N>],
     omega: &Fp<P, N>,
@@ -51,7 +78,8 @@ pub fn ntt_in_place<P: FieldParams<N>, const N: usize>(
     }
 }
 
-/// Inverse NTT (scales by n⁻¹).
+/// Inverse NTT (scales by n⁻¹) — the serial reference for
+/// [`NttPlan::intt`].
 pub fn intt_in_place<P: FieldParams<N>, const N: usize>(
     values: &mut [Fp<P, N>],
     omega: &Fp<P, N>,
@@ -69,6 +97,9 @@ pub fn intt_in_place<P: FieldParams<N>, const N: usize>(
 pub fn is_primitive_root<F: Field>(omega: &F, n: usize) -> bool {
     if n == 0 || !n.is_power_of_two() {
         return false;
+    }
+    if n == 1 {
+        return *omega == F::one(); // the trivial group's only root
     }
     omega.pow_u64(n as u64) == F::one() && omega.pow_u64((n / 2) as u64) != F::one()
 }
@@ -168,6 +199,20 @@ mod tests {
     fn rejects_non_power_of_two() {
         assert!(Domain::<Bn254FrParams, 4>::new(12).is_none());
         assert!(!is_primitive_root(&FrBn254::one(), 4));
+    }
+
+    #[test]
+    fn size_one_domain_is_identity() {
+        // n = 1: ω = g^(p−1) = 1 is the trivial group's primitive root and
+        // the transform is the identity (bit_reverse guards the 0-bit shift)
+        let dom = Domain::<Bn254FrParams, 4>::new(1).unwrap();
+        assert_eq!(dom.omega, FrBn254::one());
+        assert!(is_primitive_root(&dom.omega, 1));
+        let mut v = vec![FrBn254::from_u64(9)];
+        ntt_in_place(&mut v, &dom.omega);
+        assert_eq!(v[0], FrBn254::from_u64(9));
+        intt_in_place(&mut v, &dom.omega);
+        assert_eq!(v[0], FrBn254::from_u64(9));
     }
 
     #[test]

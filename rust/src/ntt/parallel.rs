@@ -1,0 +1,568 @@
+//! Chunk-parallel NTT executors over a cached [`NttPlan`].
+//!
+//! Two schedules, both bit-identical to the serial reference (field
+//! arithmetic is exact, so every correct evaluation order produces the
+//! same canonical `Fp` limbs — there is no floating-point reassociation
+//! to worry about):
+//!
+//! * **Stage-parallel radix-2** — the array splits into `T` contiguous
+//!   bands; one thread per band runs every stage whose butterfly span
+//!   fits inside its band (no synchronization at all), then each
+//!   remaining cross-band stage splits its blocks' half-ranges into
+//!   contiguous per-thread butterfly chunks. Twiddles come from the
+//!   plan's flat stage table — no per-call `w = w·w_len` serial walk.
+//! * **Four-step transpose** ([`ntt_four_step`], taken automatically at
+//!   `n ≥` [`FOUR_STEP_MIN`]) — the classic √n × √n decomposition:
+//!   transpose, √n-point row NTTs, twiddle by ω^(j·k), transpose,
+//!   row NTTs, transpose. Rows are cache-resident and embarrassingly
+//!   parallel, which is what the late radix-2 stages (stride ≈ n) are
+//!   not.
+//!
+//! Thread budget conventions follow `msm::chunked`: `threads == 1` runs
+//! inline on the caller (the `ff::opcount` counters see every mul — the
+//! perf-smoke budget pins measure through this path), and the band count
+//! is clamped so no band shrinks below `MIN_BAND` (256) elements.
+
+use super::plan::{build_stage_tables, stage_slice, NttPlan};
+use crate::ff::{Field, FieldParams, Fp};
+
+/// Sizes at or above this take the four-step path when `threads > 1`:
+/// below it the whole transform is cache-resident and the transposes
+/// cost more than they save.
+pub const FOUR_STEP_MIN: usize = 1 << 16;
+
+/// Minimum elements per stage-parallel band: below this the per-stage
+/// spawn overhead dwarfs the butterfly work a band contributes (the NTT
+/// analogue of `msm::chunked::MIN_CHUNK`).
+const MIN_BAND: usize = 1 << 8;
+
+/// In-place forward NTT through the plan's cached tables. Dispatches to
+/// the stage-parallel schedule, or the four-step path at
+/// `n ≥ FOUR_STEP_MIN` when `threads > 1`. Bit-identical to
+/// [`super::ntt_in_place`] for every thread count.
+pub fn ntt<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    assert_eq!(values.len(), plan.n, "value length != domain size");
+    if threads > 1 && plan.n >= FOUR_STEP_MIN {
+        four_step_core(plan, values, false, threads);
+    } else {
+        radix2(values, plan.fwd_table(), threads);
+    }
+}
+
+/// In-place inverse NTT (scales by n⁻¹). Bit-identical to
+/// [`super::intt_in_place`].
+pub fn intt<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    backward(plan, values, threads);
+    scale_by(values, &plan.n_inv, threads);
+}
+
+/// Forward NTT over the coset g·⟨ω⟩: one pointwise pass over the cached
+/// gⁱ ladder (parallel, no serial generator walk), then [`ntt`].
+pub fn coset_ntt<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    assert_eq!(values.len(), plan.n, "value length != domain size");
+    pointwise(values, plan.coset_table(), threads);
+    ntt(plan, values, threads);
+}
+
+/// Inverse of [`coset_ntt`]: the unscaled inverse transform followed by
+/// one pointwise pass over the fused n⁻¹·g⁻ⁱ ladder — the iNTT scale and
+/// the coset un-shift cost a single pass together.
+pub fn coset_intt<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    backward(plan, values, threads);
+    pointwise(values, plan.coset_inv_table(), threads);
+}
+
+/// Forced stage-parallel forward NTT (no four-step dispatch) — the
+/// hotpath bench compares this against [`ntt_four_step`] at the 2¹⁶
+/// operating point. Same output as [`ntt`].
+pub fn ntt_stage_parallel<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    assert_eq!(values.len(), plan.n, "value length != domain size");
+    radix2(values, plan.fwd_table(), threads);
+}
+
+/// Forced four-step forward NTT (usable below [`FOUR_STEP_MIN`], where
+/// the auto path would pick the stage-parallel schedule). Same output as
+/// [`ntt`]; sizes below 4 fall back to radix-2.
+pub fn ntt_four_step<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    assert_eq!(values.len(), plan.n, "value length != domain size");
+    four_step_core(plan, values, false, threads);
+}
+
+/// Forced four-step inverse NTT (scales by n⁻¹). Same output as
+/// [`intt`].
+pub fn intt_four_step<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    assert_eq!(values.len(), plan.n, "value length != domain size");
+    four_step_core(plan, values, true, threads);
+    scale_by(values, &plan.n_inv, threads);
+}
+
+/// The unscaled inverse transform (shared by [`intt`] and
+/// [`coset_intt`], which apply different output scales).
+fn backward<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    threads: usize,
+) {
+    assert_eq!(values.len(), plan.n, "value length != domain size");
+    if threads > 1 && plan.n >= FOUR_STEP_MIN {
+        four_step_core(plan, values, true, threads);
+    } else {
+        radix2(values, plan.inv_table(), threads);
+    }
+}
+
+/// Largest power-of-two band count ≤ `threads` whose bands hold at
+/// least [`MIN_BAND`] elements each; 1 means "run serial inline".
+fn band_count(n: usize, threads: usize) -> usize {
+    if threads <= 1 || n < 2 * MIN_BAND {
+        return 1;
+    }
+    let mut bands = 1usize;
+    while bands * 2 <= threads && n / (bands * 2) >= MIN_BAND {
+        bands *= 2;
+    }
+    bands
+}
+
+/// One contiguous run of butterflies: `lo[i], hi[i] ← lo[i] ± tw[i]·hi[i]`.
+#[inline]
+fn butterflies<P: FieldParams<N>, const N: usize>(
+    lo: &mut [Fp<P, N>],
+    hi: &mut [Fp<P, N>],
+    tw: &[Fp<P, N>],
+) {
+    for ((u, v), w) in lo.iter_mut().zip(hi.iter_mut()).zip(tw) {
+        let t = v.mul(w);
+        *v = u.sub(&t);
+        *u = u.add(&t);
+    }
+}
+
+/// All of stage `s`'s butterflies inside one contiguous part of the
+/// array (the part's length must be a multiple of the stage's block
+/// length `2^(s+1)`).
+fn stage_serial<P: FieldParams<N>, const N: usize>(
+    part: &mut [Fp<P, N>],
+    table: &[Fp<P, N>],
+    s: u32,
+) {
+    let half = 1usize << s;
+    let tw = stage_slice(table, s);
+    for block in part.chunks_mut(2 * half) {
+        let (lo, hi) = block.split_at_mut(half);
+        butterflies(lo, hi, tw);
+    }
+}
+
+/// In-place radix-2 NTT over a flat stage table: bit-reverse, then a
+/// band-local phase (one spawn per thread, zero synchronization) and a
+/// cross-band phase (per stage, blocks' half-ranges split into
+/// contiguous per-thread chunks).
+fn radix2<P: FieldParams<N>, const N: usize>(
+    values: &mut [Fp<P, N>],
+    table: &[Fp<P, N>],
+    threads: usize,
+) {
+    let n = values.len();
+    super::bit_reverse(values);
+    if n <= 1 {
+        return;
+    }
+    let log_n = n.trailing_zeros();
+    let bands = band_count(n, threads);
+    if bands == 1 {
+        for s in 0..log_n {
+            stage_serial(values, table, s);
+        }
+        return;
+    }
+    let band_len = n / bands;
+    let local_stages = band_len.trailing_zeros();
+    std::thread::scope(|scope| {
+        for band in values.chunks_mut(band_len) {
+            scope.spawn(move || {
+                for s in 0..local_stages {
+                    stage_serial(band, table, s);
+                }
+            });
+        }
+    });
+    for s in local_stages..log_n {
+        cross_stage(values, table, s, bands);
+    }
+}
+
+/// One cross-band stage: every block spans multiple bands, so each
+/// block's lower/upper halves split into contiguous chunk pairs — all
+/// `lanes` threads stay busy even on the final single-block stage.
+fn cross_stage<P: FieldParams<N>, const N: usize>(
+    values: &mut [Fp<P, N>],
+    table: &[Fp<P, N>],
+    s: u32,
+    lanes: usize,
+) {
+    let half = 1usize << s;
+    let blocks = values.len() >> (s + 1);
+    let tw = stage_slice(table, s);
+    let per = (lanes / blocks.max(1)).max(1);
+    let chunk = half.div_ceil(per).max(1);
+    std::thread::scope(|scope| {
+        for block in values.chunks_mut(2 * half) {
+            let (lo, hi) = block.split_at_mut(half);
+            for ((lo_c, hi_c), tw_c) in
+                lo.chunks_mut(chunk).zip(hi.chunks_mut(chunk)).zip(tw.chunks(chunk))
+            {
+                scope.spawn(move || butterflies(lo_c, hi_c, tw_c));
+            }
+        }
+    });
+}
+
+/// Pointwise `values[i] ← values[i] · table[i]` (the coset ladders).
+fn pointwise<P: FieldParams<N>, const N: usize>(
+    values: &mut [Fp<P, N>],
+    table: &[Fp<P, N>],
+    threads: usize,
+) {
+    debug_assert_eq!(values.len(), table.len());
+    let bands = band_count(values.len(), threads);
+    if bands == 1 {
+        for (v, c) in values.iter_mut().zip(table) {
+            *v = v.mul(c);
+        }
+        return;
+    }
+    let chunk = values.len().div_ceil(bands);
+    std::thread::scope(|scope| {
+        for (vc, tc) in values.chunks_mut(chunk).zip(table.chunks(chunk)) {
+            scope.spawn(move || {
+                for (v, c) in vc.iter_mut().zip(tc) {
+                    *v = v.mul(c);
+                }
+            });
+        }
+    });
+}
+
+/// Pointwise scale by one constant (the plain iNTT's n⁻¹).
+fn scale_by<P: FieldParams<N>, const N: usize>(
+    values: &mut [Fp<P, N>],
+    k: &Fp<P, N>,
+    threads: usize,
+) {
+    let bands = band_count(values.len(), threads);
+    if bands == 1 {
+        for v in values.iter_mut() {
+            *v = v.mul(k);
+        }
+        return;
+    }
+    let chunk = values.len().div_ceil(bands);
+    std::thread::scope(|scope| {
+        for vc in values.chunks_mut(chunk) {
+            scope.spawn(move || {
+                for v in vc.iter_mut() {
+                    *v = v.mul(k);
+                }
+            });
+        }
+    });
+}
+
+/// Transpose a `rows × cols` row-major matrix in `src` into `dst`
+/// (which becomes `cols × rows` row-major). Destination rows partition
+/// across threads; the source is read-shared.
+fn transpose_into<P: FieldParams<N>, const N: usize>(
+    dst: &mut [Fp<P, N>],
+    src: &[Fp<P, N>],
+    rows: usize,
+    cols: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(dst.len(), rows * cols);
+    debug_assert_eq!(src.len(), rows * cols);
+    let bands = threads.clamp(1, cols);
+    if bands == 1 {
+        for (c, drow) in dst.chunks_mut(rows).enumerate() {
+            for (j, slot) in drow.iter_mut().enumerate() {
+                *slot = src[j * cols + c];
+            }
+        }
+        return;
+    }
+    let band_rows = cols.div_ceil(bands);
+    std::thread::scope(|scope| {
+        for (b, dchunk) in dst.chunks_mut(band_rows * rows).enumerate() {
+            let first = b * band_rows;
+            scope.spawn(move || {
+                for (r, drow) in dchunk.chunks_mut(rows).enumerate() {
+                    let c = first + r;
+                    for (j, slot) in drow.iter_mut().enumerate() {
+                        *slot = src[j * cols + c];
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Serial radix-2 NTT of one (small) row through a flat stage table.
+fn radix2_row<P: FieldParams<N>, const N: usize>(row: &mut [Fp<P, N>], table: &[Fp<P, N>]) {
+    super::bit_reverse(row);
+    if row.len() <= 1 {
+        return;
+    }
+    for s in 0..row.len().trailing_zeros() {
+        stage_serial(row, table, s);
+    }
+}
+
+/// NTT every `row_len`-sized row of `data` (rows partition across
+/// threads; each row runs the serial kernel over `table`).
+fn row_ntts<P: FieldParams<N>, const N: usize>(
+    data: &mut [Fp<P, N>],
+    row_len: usize,
+    table: &[Fp<P, N>],
+    threads: usize,
+) {
+    let rows = data.len() / row_len;
+    let bands = threads.clamp(1, rows);
+    if bands == 1 {
+        for row in data.chunks_mut(row_len) {
+            radix2_row(row, table);
+        }
+        return;
+    }
+    let rows_per = rows.div_ceil(bands);
+    std::thread::scope(|scope| {
+        for band in data.chunks_mut(rows_per * row_len) {
+            scope.spawn(move || {
+                for row in band.chunks_mut(row_len) {
+                    radix2_row(row, table);
+                }
+            });
+        }
+    });
+}
+
+/// The four-step twiddle pass: row `j` of the `rows × row_len` matrix
+/// multiplies elementwise by `root^(j·k)` for `k in 0..row_len` (row 0
+/// and column 0 are untouched — their twiddle is 1).
+fn twiddle_rows<P: FieldParams<N>, const N: usize>(
+    data: &mut [Fp<P, N>],
+    row_len: usize,
+    root: &Fp<P, N>,
+    threads: usize,
+) {
+    let rows = data.len() / row_len;
+    let bands = threads.clamp(1, rows);
+    let rows_per = rows.div_ceil(bands);
+    let twiddle_band = |band: &mut [Fp<P, N>], first: usize| {
+        for (r, row) in band.chunks_mut(row_len).enumerate() {
+            let j = first + r;
+            if j == 0 {
+                continue;
+            }
+            let wj = root.pow_u64(j as u64);
+            let mut w = wj;
+            for v in row.iter_mut().skip(1) {
+                *v = v.mul(&w);
+                w = w.mul(&wj);
+            }
+        }
+    };
+    if bands == 1 {
+        twiddle_band(data, 0);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (b, band) in data.chunks_mut(rows_per * row_len).enumerate() {
+            let twiddle_band = &twiddle_band;
+            scope.spawn(move || twiddle_band(band, b * rows_per));
+        }
+    });
+}
+
+/// The four-step (transpose) NTT: n = n₁·n₂ with n₁ = 2^⌊log n / 2⌋.
+///
+/// Writing input index `j = j₁ + n₁·j₂` and output index
+/// `k = n₂·k₁ + k₂`, the transform factors as n₂-point NTTs over j₂
+/// (root ω^n₁), a twiddle by ω^(j₁·k₂), and n₁-point NTTs over j₁
+/// (root ω^n₂) — three transposes keep every row contiguous. The two
+/// sub-size stage tables cost O(√n) to build per call (negligible next
+/// to the n/2·log n butterflies); the full-size tables stay in the
+/// plan.
+fn four_step_core<P: FieldParams<N>, const N: usize>(
+    plan: &NttPlan<P, N>,
+    values: &mut [Fp<P, N>],
+    inverse: bool,
+    threads: usize,
+) {
+    let n = plan.n;
+    if n < 4 {
+        let table = if inverse { plan.inv_table() } else { plan.fwd_table() };
+        radix2(values, table, threads);
+        return;
+    }
+    let n1 = 1usize << (plan.log_n / 2);
+    let n2 = n / n1;
+    let root = if inverse { plan.omega_inv } else { plan.omega };
+    let table_n2 = build_stage_tables(&root.pow_u64(n1 as u64), n2);
+    let table_n1 = build_stage_tables(&root.pow_u64(n2 as u64), n1);
+    let mut scratch = vec![Fp::<P, N>::zero(); n];
+    // 1. gather T[j₁][j₂] = x[j₁ + n₁·j₂] (transpose of the n₂×n₁ view)
+    transpose_into(&mut scratch, values, n2, n1, threads);
+    // 2. inner transforms: n₂-point NTT along each row (root ω^n₁)
+    row_ntts(&mut scratch, n2, &table_n2, threads);
+    // 3. twiddle T[j₁][k₂] by ω^(j₁·k₂)
+    twiddle_rows(&mut scratch, n2, &root, threads);
+    // 4. transpose to U[k₂][j₁]
+    transpose_into(values, &scratch, n1, n2, threads);
+    // 5. outer transforms: n₁-point NTT along each row (root ω^n₂)
+    row_ntts(values, n1, &table_n1, threads);
+    // 6. U[k₂][k₁] = X[n₂·k₁ + k₂] — the last transpose IS the output
+    transpose_into(&mut scratch, values, n2, n1, threads);
+    values.copy_from_slice(&scratch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::Bn254FrParams;
+    use crate::ff::FrBn254;
+    use crate::ntt::{intt_in_place, ntt_in_place};
+    use crate::util::rng::Rng;
+
+    type Plan = NttPlan<Bn254FrParams, 4>;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<FrBn254> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| FrBn254::random(&mut rng)).collect()
+    }
+
+    #[test]
+    fn stage_parallel_matches_reference_across_threads() {
+        for n in [2usize, 8, 64, 1024] {
+            let plan = Plan::new(n).unwrap();
+            let orig = rand_vec(n, 601 + n as u64);
+            let mut want = orig.clone();
+            ntt_in_place(&mut want, &plan.omega);
+            for threads in [1usize, 2, 4, 32] {
+                let mut got = orig.clone();
+                ntt_stage_parallel(&plan, &mut got, threads);
+                assert_eq!(got, want, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn four_step_matches_reference() {
+        for n in [4usize, 16, 256, 4096] {
+            let plan = Plan::new(n).unwrap();
+            let orig = rand_vec(n, 611 + n as u64);
+            let mut want = orig.clone();
+            ntt_in_place(&mut want, &plan.omega);
+            for threads in [1usize, 3, 16] {
+                let mut got = orig.clone();
+                ntt_four_step(&plan, &mut got, threads);
+                assert_eq!(got, want, "n={n} threads={threads}");
+                // inverse four-step takes it back, scale included
+                intt_four_step(&plan, &mut got, threads);
+                assert_eq!(got, orig, "n={n} threads={threads} inverse");
+            }
+        }
+    }
+
+    #[test]
+    fn intt_matches_reference_and_roundtrips() {
+        let n = 512;
+        let plan = Plan::new(n).unwrap();
+        let orig = rand_vec(n, 621);
+        let mut want = orig.clone();
+        intt_in_place(&mut want, &plan.omega);
+        for threads in [1usize, 4] {
+            let mut got = orig.clone();
+            intt(&plan, &mut got, threads);
+            assert_eq!(got, want, "threads={threads}");
+            ntt(&plan, &mut got, threads);
+            assert_eq!(got, orig, "threads={threads} roundtrip");
+        }
+    }
+
+    #[test]
+    fn coset_paths_match_the_pre_plan_semantics() {
+        let n = 256;
+        let plan = Plan::new(n).unwrap();
+        let orig = rand_vec(n, 631);
+        // the pre-plan reference: serial gⁱ walk, then the plain NTT
+        let mut want = orig.clone();
+        let mut scale = FrBn254::one();
+        for v in want.iter_mut() {
+            *v = v.mul(&scale);
+            scale = scale.mul(&plan.coset_gen);
+        }
+        ntt_in_place(&mut want, &plan.omega);
+        for threads in [1usize, 2, 32] {
+            let mut got = orig.clone();
+            coset_ntt(&plan, &mut got, threads);
+            assert_eq!(got, want, "threads={threads}");
+            coset_intt(&plan, &mut got, threads);
+            assert_eq!(got, orig, "threads={threads} roundtrip");
+        }
+    }
+
+    #[test]
+    fn band_count_respects_floors() {
+        assert_eq!(band_count(1 << 20, 1), 1);
+        assert_eq!(band_count(64, 32), 1); // below 2·MIN_BAND: serial
+        assert_eq!(band_count(1 << 12, 4), 4);
+        assert_eq!(band_count(1 << 12, 5), 4); // power-of-two clamp
+        // bands never shrink a band below MIN_BAND elements
+        assert_eq!(band_count(1 << 10, 64), 4);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let rows = 8;
+        let cols = 4;
+        let src: Vec<FrBn254> = (0..rows * cols).map(|i| FrBn254::from_u64(i as u64)).collect();
+        let mut t = vec![FrBn254::zero(); rows * cols];
+        transpose_into(&mut t, &src, rows, cols, 3);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(t[c * rows + r], src[r * cols + c]);
+            }
+        }
+        let mut back = vec![FrBn254::zero(); rows * cols];
+        transpose_into(&mut back, &t, cols, rows, 1);
+        assert_eq!(back, src);
+    }
+}

@@ -1,0 +1,304 @@
+//! The NTT execution plan: cached twiddle tables, coset ladders, and
+//! field-mul budgets — the transform-side analogue of `msm::plan`.
+//!
+//! The serial reference ([`super::ntt_in_place`]) re-derives
+//! `ω^(n/len)` with a modular exponentiation per stage and walks a
+//! serially dependent `w = w·w_len` chain inside every butterfly loop —
+//! two field muls per butterfly, every call. A [`NttPlan`] pays that cost
+//! **once per size**: all `n − 1` stage twiddles land in one flat,
+//! stage-major table, the coset ladder `gⁱ` (and its inverse, with
+//! `n⁻¹` folded in) is cached next to them, and every subsequent
+//! transform runs exactly `n/2·log₂ n` butterfly muls — half the
+//! reference's count, pinned in `tests/perf_smoke.rs` the same way the
+//! SOS word-mul constants pin `Fp::square`.
+//!
+//! Execution (serial, stage/chunk-parallel, and the transpose-based
+//! four-step path for large `n`) lives in [`super::parallel`]; the plan
+//! methods ([`NttPlan::ntt`], [`NttPlan::intt`], [`NttPlan::coset_ntt`],
+//! [`NttPlan::coset_intt`]) are thin dispatchers over it. The QAP prover
+//! builds one plan per domain (cached inside
+//! [`Domain`](super::domain::Domain)) and reuses it across all seven
+//! transforms of the h-polynomial computation.
+
+use super::domain::Domain;
+use crate::ff::{Field, FieldParams, Fp};
+
+/// Flat, stage-major twiddle table for an `n`-point radix-2 NTT with
+/// root `omega`: stage `s` (butterfly half-length `2^s`) occupies
+/// `table[2^s − 1 .. 2^(s+1) − 1]`, holding `(ω^(n/2^(s+1)))^i` for
+/// `i in 0..2^s`. Total `n − 1` entries.
+pub(crate) fn build_stage_tables<P: FieldParams<N>, const N: usize>(
+    omega: &Fp<P, N>,
+    n: usize,
+) -> Vec<Fp<P, N>> {
+    debug_assert!(n.is_power_of_two());
+    let log_n = n.trailing_zeros();
+    let mut out = Vec::with_capacity(n.saturating_sub(1));
+    for s in 0..log_n {
+        let half = 1usize << s;
+        let w_len = omega.pow_u64((n / (2 * half)) as u64);
+        let mut w = Fp::<P, N>::one();
+        for _ in 0..half {
+            out.push(w);
+            w = w.mul(&w_len);
+        }
+    }
+    out
+}
+
+/// Stage `s`'s slice of a flat stage-major table (see
+/// [`build_stage_tables`] for the layout).
+#[inline]
+pub(crate) fn stage_slice<T>(table: &[T], s: u32) -> &[T] {
+    let half = 1usize << s;
+    &table[half - 1..2 * half - 1]
+}
+
+/// A cached execution plan for every transform over one power-of-two
+/// domain: precomputed forward/inverse twiddle tables, the coset ladder,
+/// and the analytic field-mul budget each transform must hit.
+///
+/// # Examples
+///
+/// ```
+/// use ifzkp::ff::{params::Bn254FrParams, Field, FrBn254};
+/// use ifzkp::ntt::NttPlan;
+///
+/// let plan = NttPlan::<Bn254FrParams, 4>::new(8).unwrap();
+/// let coeffs: Vec<FrBn254> = (0u64..8).map(FrBn254::from_u64).collect();
+/// let mut v = coeffs.clone();
+/// plan.ntt(&mut v, 4); // parallel forward transform (4 threads)
+/// plan.intt(&mut v, 4); // inverse undoes it exactly
+/// assert_eq!(v, coeffs);
+///
+/// // the cached tables make the butterfly mul count exact: n/2 · log2 n
+/// assert_eq!(plan.mul_budget(false, false), 4 * 3);
+/// ```
+#[derive(Clone, Debug)]
+pub struct NttPlan<P: FieldParams<N>, const N: usize> {
+    /// Domain size n (power of two).
+    pub n: usize,
+    /// log₂ n (the stage count).
+    pub log_n: u32,
+    /// Primitive n-th root of unity the forward tables are built on.
+    pub omega: Fp<P, N>,
+    /// ω⁻¹ (the inverse tables' root).
+    pub omega_inv: Fp<P, N>,
+    /// n⁻¹ — the inverse transform's output scale (folded into
+    /// the cached inverse-coset ladder, see [`NttPlan::coset_intt`]).
+    pub n_inv: Fp<P, N>,
+    /// Coset generator g (the field's multiplicative generator).
+    pub coset_gen: Fp<P, N>,
+    /// Forward stage twiddles, flat stage-major (n − 1 entries).
+    fwd: Vec<Fp<P, N>>,
+    /// Inverse stage twiddles (same layout, root ω⁻¹).
+    inv: Vec<Fp<P, N>>,
+    /// Coset ladder gⁱ for i in 0..n.
+    coset: Vec<Fp<P, N>>,
+    /// Inverse coset ladder with the iNTT scale folded in: n⁻¹·g⁻ⁱ.
+    coset_inv: Vec<Fp<P, N>>,
+}
+
+impl<P: FieldParams<N>, const N: usize> NttPlan<P, N> {
+    /// Build the plan for an `n`-point domain; `None` under the same
+    /// conditions as [`Domain::new`] (not a power of two, or past the
+    /// field's 2-adicity).
+    pub fn new(n: usize) -> Option<Self> {
+        Domain::<P, N>::new(n).map(|d| Self::for_domain(&d))
+    }
+
+    /// Build the plan for an existing domain. Prefer
+    /// [`Domain::plan`](super::domain::Domain::plan), which builds once
+    /// and caches the result inside the domain.
+    pub fn for_domain(domain: &Domain<P, N>) -> Self {
+        let n = domain.n;
+        let log_n = n.trailing_zeros();
+        let omega = domain.omega;
+        let omega_inv = omega.inv().expect("omega nonzero");
+        let n_inv = Fp::<P, N>::from_u64(n as u64).inv().expect("n invertible (p odd, n = 2^s)");
+        let coset_gen = domain.coset_gen;
+        let g_inv = coset_gen.inv().expect("generator nonzero");
+        let mut coset = Vec::with_capacity(n);
+        let mut x = Fp::<P, N>::one();
+        for _ in 0..n {
+            coset.push(x);
+            x = x.mul(&coset_gen);
+        }
+        // the iNTT's n⁻¹ scale rides the inverse ladder for free: one
+        // cached pointwise pass instead of two
+        let mut coset_inv = Vec::with_capacity(n);
+        let mut x = n_inv;
+        for _ in 0..n {
+            coset_inv.push(x);
+            x = x.mul(&g_inv);
+        }
+        NttPlan {
+            n,
+            log_n,
+            omega,
+            omega_inv,
+            n_inv,
+            coset_gen,
+            fwd: build_stage_tables(&omega, n),
+            inv: build_stage_tables(&omega_inv, n),
+            coset,
+            coset_inv,
+        }
+    }
+
+    /// The flat forward stage-twiddle table.
+    pub(crate) fn fwd_table(&self) -> &[Fp<P, N>] {
+        &self.fwd
+    }
+
+    /// The flat inverse stage-twiddle table.
+    pub(crate) fn inv_table(&self) -> &[Fp<P, N>] {
+        &self.inv
+    }
+
+    /// The coset ladder gⁱ.
+    pub(crate) fn coset_table(&self) -> &[Fp<P, N>] {
+        &self.coset
+    }
+
+    /// The inverse coset ladder n⁻¹·g⁻ⁱ.
+    pub(crate) fn coset_inv_table(&self) -> &[Fp<P, N>] {
+        &self.coset_inv
+    }
+
+    /// Exact field-multiplication budget of one transform through this
+    /// plan: `n/2·log₂ n` butterfly muls, plus one pointwise pass
+    /// (`n` muls) when the transform is inverse (the n⁻¹ scale) or
+    /// coset-shifted (the cached ladder) — the two never stack, because
+    /// [`Self::coset_intt`] reads the fused `n⁻¹·g⁻ⁱ` table. Pinned in
+    /// `tests/perf_smoke.rs` like the MSM plan's serial-chain counts.
+    pub fn mul_budget(&self, inverse: bool, coset: bool) -> u64 {
+        let butterflies = (self.n as u64 / 2) * u64::from(self.log_n);
+        butterflies + if inverse || coset { self.n as u64 } else { 0 }
+    }
+
+    /// In-place forward NTT (coefficients → evaluations at ωⁱ) over
+    /// `threads` OS threads. `threads == 1` runs inline on the calling
+    /// thread (so the `ff::opcount` counters see the work — the same
+    /// convention as `msm::chunked`); larger n automatically takes the
+    /// transpose-based four-step path (see
+    /// [`super::parallel::FOUR_STEP_MIN`]). Output is bit-identical to
+    /// [`super::ntt_in_place`] for every thread count.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ifzkp::ff::{params::Bn254FrParams, Field, FrBn254};
+    /// use ifzkp::ntt::{self, NttPlan};
+    /// use ifzkp::util::rng::Rng;
+    ///
+    /// let plan = NttPlan::<Bn254FrParams, 4>::new(16).unwrap();
+    /// let mut rng = Rng::new(1);
+    /// let coeffs: Vec<FrBn254> = (0..16).map(|_| FrBn254::random(&mut rng)).collect();
+    ///
+    /// let mut serial = coeffs.clone();
+    /// ntt::ntt_in_place(&mut serial, &plan.omega); // the serial reference
+    ///
+    /// let mut parallel = coeffs.clone();
+    /// plan.ntt(&mut parallel, 4); // bit-identical at any thread count
+    /// assert_eq!(parallel, serial);
+    /// ```
+    pub fn ntt(&self, values: &mut [Fp<P, N>], threads: usize) {
+        super::parallel::ntt(self, values, threads);
+    }
+
+    /// In-place inverse NTT (evaluations → coefficients, scaled by n⁻¹)
+    /// over `threads` OS threads. Bit-identical to
+    /// [`super::intt_in_place`].
+    pub fn intt(&self, values: &mut [Fp<P, N>], threads: usize) {
+        super::parallel::intt(self, values, threads);
+    }
+
+    /// Forward NTT over the coset g·⟨ω⟩. The coset shift is a pointwise
+    /// pass over the cached gⁱ ladder — no serial generator walk.
+    pub fn coset_ntt(&self, values: &mut [Fp<P, N>], threads: usize) {
+        super::parallel::coset_ntt(self, values, threads);
+    }
+
+    /// Inverse of [`Self::coset_ntt`]. The n⁻¹ scale is folded into the
+    /// cached n⁻¹·g⁻ⁱ ladder, so the whole un-shift is one pointwise
+    /// pass.
+    pub fn coset_intt(&self, values: &mut [Fp<P, N>], threads: usize) {
+        super::parallel::coset_intt(self, values, threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+    use crate::ff::FrBn254;
+    use crate::util::rng::Rng;
+
+    type Plan = NttPlan<Bn254FrParams, 4>;
+
+    #[test]
+    fn table_layout_covers_every_stage() {
+        let plan = Plan::new(32).unwrap();
+        assert_eq!(plan.log_n, 5);
+        let mut total = 0usize;
+        for s in 0..plan.log_n {
+            let tw = stage_slice(plan.fwd_table(), s);
+            assert_eq!(tw.len(), 1 << s);
+            // entry i is (ω^(n/2^(s+1)))^i
+            let w_len = plan.omega.pow_u64((32 >> (s + 1)) as u64);
+            for (i, w) in tw.iter().enumerate() {
+                assert_eq!(*w, w_len.pow_u64(i as u64), "stage {s} entry {i}");
+            }
+            total += tw.len();
+        }
+        assert_eq!(total, 31); // n − 1
+        assert_eq!(plan.fwd_table().len(), 31);
+        assert_eq!(plan.inv_table().len(), 31);
+    }
+
+    #[test]
+    fn coset_ladders_fold_the_scale() {
+        let plan = Plan::new(16).unwrap();
+        let g = plan.coset_gen;
+        let g_inv = g.inv().unwrap();
+        for i in 0..16u64 {
+            assert_eq!(plan.coset_table()[i as usize], g.pow_u64(i));
+            // inverse ladder carries n⁻¹: applying both is a pure n⁻¹
+            let prod = plan.coset_table()[i as usize].mul(&plan.coset_inv_table()[i as usize]);
+            assert_eq!(prod, plan.n_inv);
+            assert_eq!(plan.coset_inv_table()[i as usize], plan.n_inv.mul(&g_inv.pow_u64(i)));
+        }
+    }
+
+    #[test]
+    fn budgets_are_the_analytic_counts() {
+        let plan = Plan::new(1 << 10).unwrap();
+        let nb = (1u64 << 9) * 10;
+        assert_eq!(plan.mul_budget(false, false), nb);
+        assert_eq!(plan.mul_budget(true, false), nb + (1 << 10));
+        assert_eq!(plan.mul_budget(false, true), nb + (1 << 10));
+        // the fused inverse-coset ladder keeps this at one pass, not two
+        assert_eq!(plan.mul_budget(true, true), nb + (1 << 10));
+    }
+
+    #[test]
+    fn rejects_bad_sizes_like_domain() {
+        assert!(Plan::new(12).is_none());
+        assert!(NttPlan::<Bls12381FrParams, 4>::new(1 << 33).is_none());
+    }
+
+    #[test]
+    fn plan_path_matches_serial_reference_roundtrip() {
+        let plan = Plan::new(64).unwrap();
+        let mut rng = Rng::new(551);
+        let orig: Vec<FrBn254> = (0..64).map(|_| FrBn254::random(&mut rng)).collect();
+        let mut v = orig.clone();
+        plan.ntt(&mut v, 1);
+        let mut want = orig.clone();
+        super::super::ntt_in_place(&mut want, &plan.omega);
+        assert_eq!(v, want);
+        plan.intt(&mut v, 1);
+        assert_eq!(v, orig);
+    }
+}

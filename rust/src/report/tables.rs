@@ -6,8 +6,8 @@ use crate::ec::{Bls12381G1, Bls12381G2, Bn254G1, Bn254G2};
 use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
 use crate::fpga::rbam::ReductionKind;
 use crate::fpga::{
-    power, resources::TABLE_V_VARIANTS, CurveId, DesignVariant, NumberForm, ResourceModel,
-    SabConfig, SabModel,
+    power, resources::TABLE_V_VARIANTS, CurveId, DesignVariant, NttKernelConfig, NttModel,
+    NumberForm, ResourceModel, SabConfig, SabModel,
 };
 use crate::msm::{self, pippenger, MsmConfig, MsmPlan, Reduction, ShardPolicy, Slicing};
 use crate::snark::{circuits, prover::Prover, setup::Crs};
@@ -499,6 +499,74 @@ pub fn whatif_multi_kernel(m: u64) -> String {
     )
 }
 
+/// What-if (the paper's explicit future work): an FPGA NTT kernel next to
+/// the SAB MSM accelerator. The CPU NTT column is *measured* on this host
+/// through the crate's cached-plan serial path up to `measure_cpu_up_to`
+/// elements and extrapolated by n·log n beyond it (marked `~`); the FPGA
+/// column is the [`NttModel`] what-if. The last two columns apply
+/// Amdahl's law with the paper's own Table I prover shares: accelerating
+/// MSM alone caps the prover at roughly `1/(ntt% + other%)`, which is
+/// exactly why the NTT is the next ceiling once the MSM hot path is
+/// accelerated — and what pairing both kernels buys back. At small n the
+/// table honestly shows offload *losing*: per-call PCIe transfer and
+/// launch overhead dwarf a 2¹² transform, the same reason zkSpeed keeps
+/// intermediate data device-resident.
+pub fn whatif_ntt(measure_cpu_up_to: usize) -> String {
+    let sizes: [u64; 4] = [1 << 12, 1 << 16, 1 << 20, 1 << 24];
+    let cap = measure_cpu_up_to.clamp(1 << 8, 1 << 22).next_power_of_two();
+    let mut rows = Vec::new();
+    for curve in [CurveId::Bn254, CurveId::Bls12381] {
+        // Table I prover shares (paper rows): msm / ntt / other
+        let (msm_share, ntt_share, other_share) = match curve {
+            CurveId::Bn254 => (0.88, 0.11, 0.01),
+            CurveId::Bls12381 => (0.92, 0.07, 0.01),
+        };
+        let ntt_model = NttModel::new(NttKernelConfig::whatif(curve, 16));
+        let msm_model = SabModel::new(SabConfig::paper(curve, 2));
+        let cpu_msm = CpuBaseline::for_curve(curve);
+        let measure = |n: usize| match curve {
+            CurveId::Bn254 => crate::baseline::cpu::measure_ntt::<Bn254FrParams>(n, 0xA11CE, 1),
+            CurveId::Bls12381 => {
+                crate::baseline::cpu::measure_ntt::<Bls12381FrParams>(n, 0xA11CE, 1)
+            }
+        };
+        let anchor = measure(cap);
+        let nlogn = |n: u64| n as f64 * (n as f64).log2();
+        for &n in &sizes {
+            let (cpu_ntt_s, extrapolated) = if n as usize == cap {
+                (anchor.seconds, false) // the anchor measurement, reused
+            } else if (n as usize) < cap {
+                (measure(n as usize).seconds, false)
+            } else {
+                (anchor.seconds * nlogn(n) / nlogn(cap as u64), true)
+            };
+            let t_fpga = ntt_model.time_ntt(n).total_s();
+            let s_ntt = cpu_ntt_s / t_fpga;
+            let s_msm = cpu_msm.model_seconds(n) / msm_model.time_msm(n).total_s();
+            let amdahl =
+                |s_m: f64, s_n: f64| 1.0 / (other_share + msm_share / s_m + ntt_share / s_n);
+            rows.push(vec![
+                curve.name().into(),
+                crate::util::human_count(n),
+                format!("{cpu_ntt_s:.4}{}", if extrapolated { "~" } else { "" }),
+                format!("{t_fpga:.4}"),
+                format!("{s_ntt:.1}x"),
+                format!("{:.1}x", amdahl(s_msm, 1.0)),
+                format!("{:.1}x", amdahl(s_msm, s_ntt)),
+            ]);
+        }
+    }
+    ascii_table(
+        &format!(
+            "What-if: FPGA NTT kernel (paper future work) — CPU measured to {}, ~ = n·log n \
+             extrapolated; prover columns apply Table I shares",
+            crate::util::human_count(cap as u64)
+        ),
+        &["curve", "size", "CPU NTT s", "FPGA NTT s", "xNTT", "prover xMSM", "prover xMSM+NTT"],
+        &rows,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -645,6 +713,34 @@ mod tests {
             }
             assert!(speedups[2] > 2.0, "4-kernel speedup too low: {speedups:?}");
         }
+    }
+
+    #[test]
+    fn whatif_ntt_shows_the_amdahl_ceiling() {
+        // small measurement cap keeps the unit test fast; the shape is
+        // what matters: MSM-only acceleration hits the Table I Amdahl
+        // ceiling (≈1/(ntt+other)), adding the NTT kernel lifts it
+        let t = whatif_ntt(1 << 10);
+        assert!(t.contains("xMSM+NTT"), "{t}");
+        let mut checked = 0;
+        for line in t.lines() {
+            let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+            if cells.len() > 7 && (cells[1] == "BN128" || cells[1] == "BLS12-381") {
+                let msm_only: f64 = cells[6].trim_end_matches('x').parse().unwrap();
+                let both: f64 = cells[7].trim_end_matches('x').parse().unwrap();
+                // the MSM-only column can never beat the share ceiling
+                assert!(msm_only < 1.0 / 0.08, "msm-only {msm_only} above ceiling\n{t}");
+                // at the largest size the combined kernel must clear the
+                // MSM-only ceiling decisively; at small n the per-call
+                // PCIe + launch overhead can honestly make NTT offload a
+                // net loss, so no direction is asserted there
+                if cells[2] == crate::util::human_count(1 << 24) {
+                    assert!(both > msm_only * 1.5, "{msm_only} vs {both}\n{t}");
+                }
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 8, "{t}");
     }
 
     #[test]

@@ -23,4 +23,5 @@ pub mod setup;
 pub mod prover;
 
 pub use prover::{ProfileBreakdown, Proof, Prover};
+pub use qap::NttPhases;
 pub use r1cs::ConstraintSystem;

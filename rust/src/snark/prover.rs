@@ -39,6 +39,9 @@ pub struct ProfileBreakdown {
     pub msm_g2_pct: f64,
     /// Share of time in the QAP domain transforms.
     pub ntt_pct: f64,
+    /// How the NTT share splits across the QAP pipeline's stages
+    /// (3 iNTTs / 3 coset NTTs / pointwise / 1 coset iNTT).
+    pub ntt_phases: qap::NttPhases,
     /// Witness evaluation and bookkeeping share.
     pub other_pct: f64,
     /// Total wall seconds of the prove call.
@@ -69,6 +72,10 @@ pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     pub pool_g1: Option<Arc<ShardPool<G1>>>,
     /// Sharded executor for the 𝔾₂ MSM (B2 query).
     pub pool_g2: Option<Arc<ShardPool<G2>>>,
+    /// Thread budget for the QAP reduction's seven NTT transforms
+    /// (1 = inline, the Table I serial-measurement default; see
+    /// [`Self::with_ntt_threads`]).
+    pub ntt_threads: usize,
     _p: std::marker::PhantomData<P>,
 }
 
@@ -87,8 +94,19 @@ where
             auto_backend: false,
             pool_g1: None,
             pool_g2: None,
+            ntt_threads: 1,
             _p: std::marker::PhantomData,
         }
+    }
+
+    /// Run the QAP reduction's NTT transforms over `threads` OS threads
+    /// (through the domain's cached twiddle plan — see
+    /// [`crate::ntt::NttPlan`]). The h coefficients, and therefore the
+    /// proof, are bit-identical for every thread count; only the NTT
+    /// phase's wall time changes.
+    pub fn with_ntt_threads(mut self, threads: usize) -> Self {
+        self.ntt_threads = threads.max(1);
+        self
     }
 
     /// Same prover, different MSM executor.
@@ -177,9 +195,11 @@ where
         // -- other: witness/LC evaluation ---------------------------------
         let (a_evals, b_evals, c_evals) = prof.time("other", || cs.constraint_evals());
 
-        // -- ntt: QAP h(x) -------------------------------------------------
-        let qapw = prof
-            .time("ntt", || qap::compute_h(&a_evals, &b_evals, &c_evals))
+        // -- ntt: QAP h(x) (all 7 transforms through one cached plan) ------
+        let (qapw, ntt_phases) = prof
+            .time("ntt", || {
+                qap::compute_h_with(&a_evals, &b_evals, &c_evals, self.ntt_threads)
+            })
             .expect("domain within field 2-adicity");
 
         // -- msm scalars ----------------------------------------------------
@@ -215,11 +235,11 @@ where
             c: l_msm.add(&h_msm),
         });
 
-        (proof, breakdown(&prof))
+        (proof, breakdown(&prof, ntt_phases))
     }
 }
 
-fn breakdown(prof: &Profiler) -> ProfileBreakdown {
+fn breakdown(prof: &Profiler, ntt_phases: qap::NttPhases) -> ProfileBreakdown {
     let total = prof.total().as_secs_f64();
     let pct = |label: &str| {
         if total > 0.0 {
@@ -232,6 +252,7 @@ fn breakdown(prof: &Profiler) -> ProfileBreakdown {
         msm_g1_pct: pct("msm_g1"),
         msm_g2_pct: pct("msm_g2"),
         ntt_pct: pct("ntt"),
+        ntt_phases,
         other_pct: pct("other"),
         total_s: total,
     }
@@ -329,6 +350,24 @@ mod tests {
         let (p1, _) = prover.prove(&cs);
         let (prover2, _) = small_prover();
         let (p2, _) = prover2.with_glv().prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
+    }
+
+    #[test]
+    fn proof_identical_with_parallel_ntt_and_phases_recorded() {
+        // the NTT thread budget must be invisible in the proof, and the
+        // breakdown's NTT phase split must account for the ntt bucket
+        let (prover, cs) = small_prover();
+        let (p1, prof1) = prover.prove(&cs);
+        assert!(prof1.ntt_phases.total_s() > 0.0, "{prof1:?}");
+        // the phase split sums to (about) the whole ntt bucket — the
+        // padding/copy overhead outside the four phases is small
+        let ntt_s = prof1.total_s * prof1.ntt_pct / 100.0;
+        assert!(prof1.ntt_phases.total_s() <= ntt_s * 1.001 + 1e-9, "{prof1:?}");
+        let (prover2, _) = small_prover();
+        let (p2, _) = prover2.with_ntt_threads(8).prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));

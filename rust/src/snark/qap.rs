@@ -11,10 +11,15 @@
 //! 4. coset-iNTT → h coefficients (1 transform).
 //!
 //! Seven transforms of size n — matching the NTT share the paper's Table I
-//! attributes to a Groth16 prover.
+//! attributes to a Groth16 prover. All seven run through **one cached
+//! [`NttPlan`](crate::ntt::NttPlan)** (built lazily inside the domain and
+//! reused transform over transform), optionally across a caller-chosen
+//! thread budget ([`compute_h_with`]); [`NttPhases`] reports how the NTT
+//! wall time splits across the pipeline's stages.
 
 use crate::ff::{Field, FieldParams, Fp};
 use crate::ntt::domain::Domain;
+use crate::util::Stopwatch;
 
 /// The quotient polynomial h and the domain it was computed over.
 pub struct QapWitness<P: FieldParams<N>, const N: usize> {
@@ -24,17 +29,57 @@ pub struct QapWitness<P: FieldParams<N>, const N: usize> {
     pub h_coeffs: Vec<Fp<P, N>>,
 }
 
+/// Wall-clock split of the QAP reduction's NTT phase (the
+/// `ProfileBreakdown::ntt_phases` field) — one entry per stage of the
+/// h-polynomial pipeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NttPhases {
+    /// The 3 inverse transforms (constraint evaluations → coefficients).
+    pub intt_s: f64,
+    /// The 3 forward coset transforms (coefficients → coset evaluations).
+    pub coset_ntt_s: f64,
+    /// The pointwise (a·b − c)·Z⁻¹ pass over the coset evaluations.
+    pub pointwise_s: f64,
+    /// The final coset inverse transform (→ h coefficients).
+    pub coset_intt_s: f64,
+}
+
+impl NttPhases {
+    /// Total across the four phases.
+    pub fn total_s(&self) -> f64 {
+        self.intt_s + self.coset_ntt_s + self.pointwise_s + self.coset_intt_s
+    }
+}
+
 /// Compute h(x) from constraint evaluations (padded with zeros to the next
-/// power of two ≥ len + 1).
+/// power of two ≥ len + 1) — single-threaded convenience wrapper over
+/// [`compute_h_with`].
 pub fn compute_h<P: FieldParams<N>, const N: usize>(
     a_evals: &[Fp<P, N>],
     b_evals: &[Fp<P, N>],
     c_evals: &[Fp<P, N>],
 ) -> Option<QapWitness<P, N>> {
+    compute_h_with(a_evals, b_evals, c_evals, 1).map(|(qap, _)| qap)
+}
+
+/// Compute h(x) with all seven domain transforms running through the
+/// domain's cached [`NttPlan`](crate::ntt::NttPlan) over `threads` OS
+/// threads. `threads == 1` runs inline (the Table I measurement default);
+/// the h coefficients are bit-identical for every thread count.
+pub fn compute_h_with<P: FieldParams<N>, const N: usize>(
+    a_evals: &[Fp<P, N>],
+    b_evals: &[Fp<P, N>],
+    c_evals: &[Fp<P, N>],
+    threads: usize,
+) -> Option<(QapWitness<P, N>, NttPhases)> {
     assert_eq!(a_evals.len(), b_evals.len());
     assert_eq!(a_evals.len(), c_evals.len());
+    let threads = threads.max(1);
     let n = (a_evals.len().max(2)).next_power_of_two();
     let domain = Domain::<P, N>::new(n)?;
+    // one plan serves every transform below (twiddle tables built once)
+    let plan = domain.plan();
+    let mut phases = NttPhases::default();
 
     let mut a = a_evals.to_vec();
     let mut b = b_evals.to_vec();
@@ -44,16 +89,21 @@ pub fn compute_h<P: FieldParams<N>, const N: usize>(
     }
 
     // evaluations → coefficients (3 iNTTs)
-    crate::ntt::intt_in_place(&mut a, &domain.omega);
-    crate::ntt::intt_in_place(&mut b, &domain.omega);
-    crate::ntt::intt_in_place(&mut c, &domain.omega);
+    let sw = Stopwatch::start();
+    plan.intt(&mut a, threads);
+    plan.intt(&mut b, threads);
+    plan.intt(&mut c, threads);
+    phases.intt_s = sw.secs();
 
     // coefficients → coset evaluations (3 coset NTTs)
-    domain.coset_ntt(&mut a);
-    domain.coset_ntt(&mut b);
-    domain.coset_ntt(&mut c);
+    let sw = Stopwatch::start();
+    plan.coset_ntt(&mut a, threads);
+    plan.coset_ntt(&mut b, threads);
+    plan.coset_ntt(&mut c, threads);
+    phases.coset_ntt_s = sw.secs();
 
     // Z(g·ωⁱ) = gⁿ − 1, constant over the coset
+    let sw = Stopwatch::start();
     let z_coset = domain
         .coset_gen
         .pow_u64(n as u64)
@@ -64,10 +114,13 @@ pub fn compute_h<P: FieldParams<N>, const N: usize>(
     for i in 0..n {
         h.push(a[i].mul(&b[i]).sub(&c[i]).mul(&z_inv));
     }
+    phases.pointwise_s = sw.secs();
 
     // coset evaluations → h coefficients (1 coset iNTT)
-    domain.coset_intt(&mut h);
-    Some(QapWitness { domain, h_coeffs: h })
+    let sw = Stopwatch::start();
+    plan.coset_intt(&mut h, threads);
+    phases.coset_intt_s = sw.secs();
+    Some((QapWitness { domain, h_coeffs: h }, phases))
 }
 
 /// Verify the QAP identity A(x)·B(x) − C(x) = h(x)·Z(x) at a random point
@@ -92,9 +145,11 @@ pub fn check_identity<P: FieldParams<N>, const N: usize>(
     for v in [&mut a, &mut b, &mut c] {
         v.resize(n, Fp::<P, N>::zero());
     }
-    crate::ntt::intt_in_place(&mut a, &qap.domain.omega);
-    crate::ntt::intt_in_place(&mut b, &qap.domain.omega);
-    crate::ntt::intt_in_place(&mut c, &qap.domain.omega);
+    // the witness's domain already holds the cached plan — reuse it
+    let plan = qap.domain.plan();
+    plan.intt(&mut a, 1);
+    plan.intt(&mut b, 1);
+    plan.intt(&mut c, 1);
 
     let eval = |coeffs: &[Fp<P, N>]| {
         let mut acc = Fp::<P, N>::zero();
@@ -145,6 +200,21 @@ mod tests {
         let qap = compute_h(&a, &b, &c).unwrap();
         // h degree ≤ n−2 ⇒ top coefficient zero
         assert!(qap.h_coeffs.last().unwrap().is_zero());
+    }
+
+    #[test]
+    fn h_bit_identical_across_thread_counts_with_phases() {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(120, 15);
+        let (a, b, c) = cs.constraint_evals();
+        let (q1, p1) = compute_h_with(&a, &b, &c, 1).expect("domain fits");
+        assert!(p1.total_s() > 0.0, "{p1:?}");
+        assert!(p1.intt_s > 0.0 && p1.coset_ntt_s > 0.0 && p1.coset_intt_s > 0.0, "{p1:?}");
+        for threads in [2usize, 8, 32] {
+            let (qt, _) = compute_h_with(&a, &b, &c, threads).unwrap();
+            assert_eq!(qt.h_coeffs, q1.h_coeffs, "threads={threads}");
+        }
+        let mut rng = Rng::new(16);
+        assert!(check_identity(&a, &b, &c, &q1, &mut rng));
     }
 
     #[test]

@@ -55,6 +55,30 @@ fn qap_identity_is_the_correctness_seal() {
 }
 
 #[test]
+fn qap_divisibility_regression_at_2_12_constraints() {
+    // the parallel-NTT acceptance size: a 2^12-point domain runs all
+    // seven transforms through one cached plan, multi-threaded — the
+    // quotient must still divide exactly (Schwartz–Zippel check), with
+    // h bit-identical to the single-threaded reduction
+    use ifzkp::ff::Field;
+    let cs = circuits::mul_chain::<Bn254FrParams, 4>(4090, 20260729);
+    assert!(cs.is_satisfied());
+    let (a, b, c) = cs.constraint_evals();
+    let (qapw, phases) = qap::compute_h_with(&a, &b, &c, 4).expect("within 2-adicity");
+    assert_eq!(qapw.domain.n, 1 << 12);
+    assert!(phases.total_s() > 0.0, "{phases:?}");
+    let mut rng = Rng::new(20260730);
+    for _ in 0..3 {
+        assert!(qap::check_identity(&a, &b, &c, &qapw, &mut rng));
+    }
+    // h degree ≤ n − 2 ⇒ the top coefficient vanishes
+    assert!(qapw.h_coeffs.last().unwrap().is_zero());
+    // thread budget is invisible in the coefficients
+    let (qapw1, _) = qap::compute_h_with(&a, &b, &c, 1).unwrap();
+    assert_eq!(qapw.h_coeffs, qapw1.h_coeffs);
+}
+
+#[test]
 fn profile_split_stable_across_runs() {
     let cs = circuits::mul_chain::<Bn254FrParams, 4>(600, 31340);
     let n = cs.num_constraints().next_power_of_two();

@@ -11,8 +11,11 @@
 //! quick bench.
 
 use ifzkp::ec::{points, Bn254G1};
-use ifzkp::ff::{opcount, Field, FpBls12381, FpBn254};
+use ifzkp::ff::params::Bn254FrParams;
+use ifzkp::ff::{opcount, Field, FpBls12381, FpBn254, FrBn254};
 use ifzkp::msm::{self, pippenger, Backend, MsmConfig, MsmPlan, Reduction};
+use ifzkp::ntt::{self, parallel, NttPlan};
+use ifzkp::util::rng::Rng;
 
 /// Large enough that every paper window has dense buckets at k ≤ 8 and
 /// the fill phase dominates, small enough for the debug-mode tier-1 run.
@@ -102,6 +105,112 @@ fn sos_squaring_stays_cheaper_than_mul_and_counted() {
     });
     assert_eq!(ops.square, 16);
     assert_eq!(ops.mul, 0);
+}
+
+#[test]
+fn ntt_fieldmul_budgets_stay_pinned() {
+    // The plan's cached twiddle tables make a transform's mul count
+    // *exact*: n/2·log₂ n butterfly muls, plus one n-mul pointwise pass
+    // for the inverse scale or the coset shift (never both — the
+    // inverse-coset ladder folds n⁻¹ in). threads == 1 runs inline, so
+    // the thread-local opcount lane sees every mul — the same convention
+    // the chunked-MSM pins rely on.
+    let n = 1usize << 10;
+    let plan = NttPlan::<Bn254FrParams, 4>::new(n).unwrap();
+    let nb = (n as u64 / 2) * 10;
+    assert_eq!(plan.mul_budget(false, false), nb);
+    assert_eq!(plan.mul_budget(true, false), nb + n as u64);
+    assert_eq!(plan.mul_budget(false, true), nb + n as u64);
+    assert_eq!(plan.mul_budget(true, true), nb + n as u64);
+
+    let mut rng = Rng::new(0x5EED_17);
+    let orig: Vec<FrBn254> = (0..n).map(|_| FrBn254::random(&mut rng)).collect();
+    let mut total = opcount::OpCounts::default();
+
+    let mut v = orig.clone();
+    let (_, ops) = opcount::measure(|| plan.ntt(&mut v, 1));
+    assert_eq!(ops.mul, plan.mul_budget(false, false), "forward muls drifted");
+    assert_eq!(ops.square, 0, "butterflies never square");
+    total += ops;
+
+    let (_, ops) = opcount::measure(|| plan.intt(&mut v, 1));
+    assert_eq!(ops.mul, plan.mul_budget(true, false), "inverse muls drifted");
+    assert_eq!(v, orig, "roundtrip broke");
+    total += ops;
+
+    let (_, ops) = opcount::measure(|| plan.coset_ntt(&mut v, 1));
+    assert_eq!(ops.mul, plan.mul_budget(false, true), "coset forward muls drifted");
+    total += ops;
+    let (_, ops) = opcount::measure(|| plan.coset_intt(&mut v, 1));
+    assert_eq!(ops.mul, plan.mul_budget(true, true), "coset inverse muls drifted");
+    assert_eq!(v, orig, "coset roundtrip broke");
+    total += ops;
+
+    // the whole 4-transform sequence aggregates exactly: 4 butterflies
+    // passes + 3 pointwise passes, zero squares anywhere
+    assert_eq!(total.mul, 4 * nb + 3 * n as u64, "sequence total drifted");
+    assert_eq!(total.square, 0);
+
+    // the serial reference pays the per-butterfly twiddle walk on top:
+    // ≥ 2 muls per butterfly (the cached tables halve the transform)
+    let mut w = orig.clone();
+    let (_, ref_ops) = opcount::measure(|| ntt::ntt_in_place(&mut w, &plan.omega));
+    assert!(
+        ref_ops.mul >= 2 * nb,
+        "reference lost its twiddle walk? {} vs {}",
+        ref_ops.mul,
+        2 * nb
+    );
+}
+
+#[test]
+fn four_step_mul_overhead_stays_bounded() {
+    // the transpose decomposition covers the same n/2·log n butterflies
+    // through its row/column sub-transforms; on top, the on-the-fly
+    // twiddle pass (step 3) costs ~2 muls per element — the apply plus
+    // the ladder step w ← w·wj — for the (n1−1)(n2−1) touched entries,
+    // plus O(√n·log n) sub-table and small-pow muls. Bound: budget +
+    // 9n/4, well under the 2x budget a per-transform stage-twiddle
+    // re-derivation would cost. (At n = 2^10: 5120 butterflies + 1922
+    // twiddle + ~154 table/pow muls = ~7196, bound 7424.)
+    let n = 1usize << 10;
+    let plan = NttPlan::<Bn254FrParams, 4>::new(n).unwrap();
+    let mut rng = Rng::new(0x5EED_18);
+    let orig: Vec<FrBn254> = (0..n).map(|_| FrBn254::random(&mut rng)).collect();
+    let mut want = orig.clone();
+    plan.ntt(&mut want, 1);
+    let mut v = orig.clone();
+    let (_, ops) = opcount::measure(|| parallel::ntt_four_step(&plan, &mut v, 1));
+    assert_eq!(v, want);
+    let bound = plan.mul_budget(false, false) + 2 * n as u64 + n as u64 / 4;
+    assert!(ops.mul <= bound, "four-step muls {} > bound {bound}", ops.mul);
+    // and it covers at least the butterfly work — no degenerate shortcut
+    assert!(ops.mul >= plan.mul_budget(false, false), "too few muls: {}", ops.mul);
+}
+
+#[test]
+fn qap_reduction_reuses_one_cached_plan() {
+    // compute_h runs 7 transforms of size n; through one cached plan the
+    // total stays near 7·(n/2·log n) + 7n. Re-deriving twiddles per
+    // transform (the pre-plan behaviour) costs ~2x the butterfly muls
+    // and blows this bound. Budget: 7 transforms + plan build (~3n) +
+    // pointwise h (2n) + Z⁻¹/ω⁻¹/n⁻¹ inversions and pows (~3k modmuls).
+    let cs = ifzkp::snark::circuits::mul_chain::<Bn254FrParams, 4>(600, 0x5EED);
+    let (a, b, c) = cs.constraint_evals();
+    let n = 1024u64;
+    let nb = n / 2 * 10;
+    let ((qapw, _phases), ops) = opcount::measure(|| {
+        ifzkp::snark::qap::compute_h_with(&a, &b, &c, 1).expect("domain fits")
+    });
+    assert_eq!(qapw.domain.n as u64, n);
+    let bound = 8 * nb + 12 * n + 6_000;
+    assert!(
+        ops.modmuls() <= bound,
+        "QAP reduction modmuls {} > pinned bound {bound} — cached plan not reused?",
+        ops.modmuls()
+    );
+    // and it did real transform work, not a degenerate shortcut
+    assert!(ops.modmuls() > 7 * nb, "suspiciously few muls: {}", ops.modmuls());
 }
 
 #[test]

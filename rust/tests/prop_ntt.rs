@@ -1,0 +1,157 @@
+//! Property matrix for the parallel NTT runtime: every executor
+//! (stage-parallel radix-2, four-step transpose, coset variants) ×
+//! thread counts {1, 2, 4, 32} × sizes × both scalar fields, held
+//! bit-identical against the serial reference (`ntt_in_place` /
+//! `intt_in_place` and the pre-plan serial coset walk). Field arithmetic
+//! is exact, so "bit-identical" is literal: `Vec<Fp>` equality on the
+//! canonical Montgomery limbs.
+
+use ifzkp::ff::params::{Bls12381FrParams, Bn254FrParams};
+use ifzkp::ff::{Field, FieldParams, Fp};
+use ifzkp::ntt::{self, parallel, NttPlan};
+use ifzkp::util::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 32];
+const SIZES: [usize; 6] = [2, 8, 64, 512, 1024, 4096];
+
+fn rand_vec<P: FieldParams<4>>(n: usize, seed: u64) -> Vec<Fp<P, 4>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| Fp::random(&mut rng)).collect()
+}
+
+/// The pre-plan coset reference: serial gⁱ walk, then the serial NTT.
+fn coset_ntt_reference<P: FieldParams<4>>(plan: &NttPlan<P, 4>, values: &mut [Fp<P, 4>]) {
+    let mut scale = Fp::<P, 4>::one();
+    for v in values.iter_mut() {
+        *v = v.mul(&scale);
+        scale = scale.mul(&plan.coset_gen);
+    }
+    ntt::ntt_in_place(values, &plan.omega);
+}
+
+fn forward_matrix<P: FieldParams<4>>(seed: u64) {
+    for n in SIZES {
+        let plan = NttPlan::<P, 4>::new(n).unwrap();
+        let orig = rand_vec::<P>(n, seed + n as u64);
+        let mut want = orig.clone();
+        ntt::ntt_in_place(&mut want, &plan.omega);
+        for threads in THREADS {
+            let mut got = orig.clone();
+            plan.ntt(&mut got, threads);
+            assert_eq!(got, want, "ntt n={n} threads={threads}");
+            plan.intt(&mut got, threads);
+            assert_eq!(got, orig, "roundtrip n={n} threads={threads}");
+        }
+    }
+}
+
+fn inverse_matrix<P: FieldParams<4>>(seed: u64) {
+    for n in SIZES {
+        let plan = NttPlan::<P, 4>::new(n).unwrap();
+        let orig = rand_vec::<P>(n, seed + n as u64);
+        let mut want = orig.clone();
+        ntt::intt_in_place(&mut want, &plan.omega);
+        for threads in THREADS {
+            let mut got = orig.clone();
+            plan.intt(&mut got, threads);
+            assert_eq!(got, want, "intt n={n} threads={threads}");
+        }
+    }
+}
+
+fn coset_matrix<P: FieldParams<4>>(seed: u64) {
+    for n in SIZES {
+        let plan = NttPlan::<P, 4>::new(n).unwrap();
+        let orig = rand_vec::<P>(n, seed + n as u64);
+        let mut want = orig.clone();
+        coset_ntt_reference(&plan, &mut want);
+        for threads in THREADS {
+            let mut got = orig.clone();
+            plan.coset_ntt(&mut got, threads);
+            assert_eq!(got, want, "coset ntt n={n} threads={threads}");
+            plan.coset_intt(&mut got, threads);
+            assert_eq!(got, orig, "coset roundtrip n={n} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn bn254_forward_matrix_matches_serial_reference() {
+    forward_matrix::<Bn254FrParams>(0x1001);
+}
+
+#[test]
+fn bn254_inverse_matrix_matches_serial_reference() {
+    inverse_matrix::<Bn254FrParams>(0x1002);
+}
+
+#[test]
+fn bn254_coset_matrix_matches_pre_plan_reference() {
+    coset_matrix::<Bn254FrParams>(0x1003);
+}
+
+#[test]
+fn bls12381_fr_matrix_matches_serial_reference() {
+    forward_matrix::<Bls12381FrParams>(0x2001);
+    inverse_matrix::<Bls12381FrParams>(0x2002);
+    coset_matrix::<Bls12381FrParams>(0x2003);
+}
+
+#[test]
+fn four_step_matches_reference_at_every_shape() {
+    // the forced four-step path (the auto executor only takes it at
+    // n ≥ FOUR_STEP_MIN): square and rectangular n1×n2 splits, odd and
+    // even log n, both directions
+    for n in [4usize, 16, 32, 256, 2048, 4096] {
+        let plan = NttPlan::<Bn254FrParams, 4>::new(n).unwrap();
+        let orig = rand_vec::<Bn254FrParams>(n, 0x3000 + n as u64);
+        let mut want = orig.clone();
+        ntt::ntt_in_place(&mut want, &plan.omega);
+        for threads in THREADS {
+            let mut got = orig.clone();
+            parallel::ntt_four_step(&plan, &mut got, threads);
+            assert_eq!(got, want, "four-step n={n} threads={threads}");
+            parallel::intt_four_step(&plan, &mut got, threads);
+            assert_eq!(got, orig, "four-step inverse n={n} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn stage_parallel_and_four_step_agree_with_each_other() {
+    // the two parallel schedules are interchangeable executors of the
+    // same plan — outputs identical, not just "both correct"
+    let n = 1 << 12;
+    let plan = NttPlan::<Bn254FrParams, 4>::new(n).unwrap();
+    let orig = rand_vec::<Bn254FrParams>(n, 0x4001);
+    let mut a = orig.clone();
+    parallel::ntt_stage_parallel(&plan, &mut a, 8);
+    let mut b = orig.clone();
+    parallel::ntt_four_step(&plan, &mut b, 8);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn convolution_through_the_parallel_runtime() {
+    // the NTT's defining property survives the parallel path: pointwise
+    // products on the transform side are polynomial products
+    let mut rng = Rng::new(0x5001);
+    let (da, db) = (25usize, 40usize);
+    let a: Vec<Fp<Bn254FrParams, 4>> = (0..da).map(|_| Fp::random(&mut rng)).collect();
+    let b: Vec<Fp<Bn254FrParams, 4>> = (0..db).map(|_| Fp::random(&mut rng)).collect();
+    let want = ntt::poly_mul_schoolbook(&a, &b);
+    let n = (da + db - 1).next_power_of_two();
+    let plan = NttPlan::<Bn254FrParams, 4>::new(n).unwrap();
+    let mut fa = a.clone();
+    fa.resize(n, Fp::zero());
+    let mut fb = b.clone();
+    fb.resize(n, Fp::zero());
+    plan.ntt(&mut fa, 4);
+    plan.ntt(&mut fb, 4);
+    for (x, y) in fa.iter_mut().zip(&fb) {
+        *x = x.mul(y);
+    }
+    plan.intt(&mut fa, 4);
+    assert_eq!(&fa[..want.len()], &want[..]);
+    assert!(fa[want.len()..].iter().all(|x| x.is_zero()));
+}
