@@ -279,6 +279,89 @@ fn main() {
         }
     }
 
+    // fixed-base precompute tables at 2^16 GLV (the point-cache PR's
+    // acceptance point): the per-window doubling/shift chain moves into a
+    // one-time build, the per-call fill reads table slot -> bucket through
+    // the batch-affine accumulator (zero doublings in fill AND combine),
+    // and the ablation sweeps window width to plot speedup vs table size.
+    //
+    // Like the chunked section: NOT scaled by IFZKP_BENCH_QUICK — the
+    // comparison only means something at 2^16, and it is bounded at
+    // seconds. Keys are host-independent and stable.
+    {
+        let m_tab: usize = 1 << 16;
+        let w = points::workload::<Bn254G1>(m_tab, 3);
+        let glv_cfg = MsmConfig::new(12, Reduction::Recursive { k2: 6 }).glv();
+        let sw = Stopwatch::start();
+        let (live, live_cost) = pippenger::msm_with_cost(&w.points, &w.scalars, &glv_cfg);
+        let t_live = sw.secs();
+        results.record("BN254 MSM 2^16 glv pippenger ns/point", t_live * 1e9 / m_tab as f64);
+        let sw = Stopwatch::start();
+        let table = msm::PrecompTable::<Bn254G1>::build(&w.points, &glv_cfg);
+        let t_build = sw.secs();
+        println!(
+            "BN254 MSM 2^16 table build (k=12 glv)        {:>10.1} ns/point  ({:.2}s once per SRS, {} MiB)",
+            t_build * 1e9 / m_tab as f64,
+            t_build,
+            table.bytes() >> 20
+        );
+        results.record("BN254 MSM 2^16 table build ns/point", t_build * 1e9 / m_tab as f64);
+        let sw = Stopwatch::start();
+        let (fed, cost) = table.msm_with_cost(&w.scalars);
+        let t_fed = sw.secs();
+        assert!(fed.eq_point(&live), "table-fed != live pippenger");
+        // the structural wins, measured: no doublings anywhere in fill or
+        // combine, and the fill's point-op count collapses (batched affine
+        // lanes run in the field layer; live fills pay a Jacobian mixed
+        // add per nonzero digit)
+        assert_eq!(cost.fill.double, 0, "table fill issued doublings");
+        assert_eq!(cost.combine.double, 0, "table combine issued doublings");
+        assert!(
+            cost.fill.total() < live_cost.fill_ops,
+            "fill-phase point ops did not drop: {} vs {}",
+            cost.fill.total(),
+            live_cost.fill_ops
+        );
+        println!(
+            "BN254 MSM 2^16 glv table-fed (k=12)          {:>10.1} ns/point  ({:.2}x vs pippenger; fill point-ops {} vs {}, fill+combine doubles 0)",
+            t_fed * 1e9 / m_tab as f64,
+            t_live / t_fed,
+            cost.fill.total(),
+            live_cost.fill_ops,
+        );
+        results.record("BN254 MSM 2^16 glv table-fed ns/point", t_fed * 1e9 / m_tab as f64);
+
+        // ablation: speedup vs table size as the window width sweeps (the
+        // `tables --id pointcache` plot, pinned into the JSON artifact)
+        for k in [8u32, 10, 12] {
+            let cfg = MsmConfig::new(k, Reduction::Recursive { k2: 4 }).glv();
+            let sw = Stopwatch::start();
+            let base = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+            let t_base = sw.secs();
+            let tab = msm::PrecompTable::<Bn254G1>::build(&w.points, &cfg);
+            let sw = Stopwatch::start();
+            let out = tab.msm(&w.scalars);
+            let t_tab = sw.secs();
+            assert!(out.eq_point(&base), "k={k} table-fed diverged");
+            println!(
+                "BN254 MSM 2^16 table k={k:<2} ({} cols, {:>4} MiB) {:>10.1} ns/point  ({:.2}x vs pippenger k={k})",
+                tab.windows(),
+                tab.bytes() >> 20,
+                t_tab * 1e9 / m_tab as f64,
+                t_base / t_tab,
+            );
+            results.record(
+                &format!("BN254 MSM 2^16 table k={k} ns/point"),
+                t_tab * 1e9 / m_tab as f64,
+            );
+            results.record(
+                &format!("BN254 MSM 2^16 table k={k} pippenger ns/point"),
+                t_base * 1e9 / m_tab as f64,
+            );
+            results.record(&format!("BN254 table k={k} bytes"), tab.bytes() as f64);
+        }
+    }
+
     // parallel scaling
     for threads in [1usize, 2, 4] {
         let w = points::workload::<Bn254G1>(msm_m, 3);

@@ -15,7 +15,7 @@ use super::request::PointSetId;
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 use crate::fpga::{SabConfig, SabModel};
 use crate::msm::partial::{self, ShardSpec};
-use crate::msm::{self, MsmConfig};
+use crate::msm::{self, MsmConfig, PrecompTable};
 use anyhow::anyhow;
 use crate::runtime::{msm_engine, EngineCurve, UdaEngine};
 use crate::util::Stopwatch;
@@ -242,9 +242,15 @@ impl<C: CurveParams> RunningDevice<C> {
 }
 
 /// Registry of base-point sets shared across devices (host-side master
-/// copy; device DDR residency is tracked in the point cache).
+/// copy; device DDR residency is tracked in the point cache). Also the
+/// home of **fixed-base precompute tables** ([`PrecompTable`]): built once
+/// per (set, config) with [`Self::build_tables`], served to executors via
+/// [`Self::tables_for`], and evictable mid-run ([`Self::evict_tables`]) —
+/// after which selection falls back to a live-point backend with
+/// bit-identical results.
 pub struct PointSetRegistry<C: CurveParams> {
     sets: HashMap<PointSetId, Arc<Vec<Affine<C>>>>,
+    tables: HashMap<PointSetId, Arc<PrecompTable<C>>>,
     next: u64,
 }
 
@@ -257,7 +263,7 @@ impl<C: CurveParams> Default for PointSetRegistry<C> {
 impl<C: CurveParams> PointSetRegistry<C> {
     /// Empty registry.
     pub fn new() -> Self {
-        PointSetRegistry { sets: HashMap::new(), next: 1 }
+        PointSetRegistry { sets: HashMap::new(), tables: HashMap::new(), next: 1 }
     }
 
     /// Register a point set; returns its id.
@@ -290,6 +296,53 @@ impl<C: CurveParams> PointSetRegistry<C> {
             _ => crate::msm::Decomposition::Full,
         };
         super::pointcache::resident_bytes(self.bytes_of(id), active)
+    }
+
+    /// Build (or rebuild) the fixed-base tables for a registered set
+    /// under `cfg` — the one-time doubling-chain cost a proving service
+    /// amortizes over every later MSM. Returns the table footprint in
+    /// bytes (0 for an unknown id). Tables are keyed per set; rebuilding
+    /// under a different config replaces the old table.
+    pub fn build_tables(&mut self, id: PointSetId, cfg: &MsmConfig) -> u64 {
+        let Some(points) = self.sets.get(&id).cloned() else {
+            return 0;
+        };
+        let table = Arc::new(PrecompTable::build(points.as_slice(), cfg));
+        let bytes = table.bytes();
+        self.tables.insert(id, table);
+        bytes
+    }
+
+    /// The resident tables for a set **iff** they can serve `cfg` (window
+    /// width, slicing, reduction, and decomposition all match the build
+    /// config) — `None` otherwise, and the caller falls back to a
+    /// live-point backend (`msm::Backend::pick_with_tables` keys its
+    /// selection on exactly this `is_some()`).
+    pub fn tables_for(&self, id: PointSetId, cfg: &MsmConfig) -> Option<Arc<PrecompTable<C>>> {
+        self.tables.get(&id).filter(|t| t.compatible_with(cfg)).cloned()
+    }
+
+    /// Drop a set's tables (mid-run eviction under memory pressure);
+    /// returns the bytes released. Later MSMs over the set fall back to
+    /// live-point backends bit-identically.
+    pub fn evict_tables(&mut self, id: PointSetId) -> u64 {
+        self.tables.remove(&id).map(|t| t.bytes()).unwrap_or(0)
+    }
+
+    /// Footprint of a set's resident tables (0 when none are built).
+    pub fn table_bytes_of(&self, id: PointSetId) -> u64 {
+        self.tables.get(&id).map(|t| t.bytes()).unwrap_or(0)
+    }
+
+    /// The DDR residency a device must admit to serve `cfg` from this
+    /// registry: the table footprint when compatible tables are resident
+    /// (the expanded set × window count), else the live-point footprint
+    /// of [`Self::bytes_for`].
+    pub fn residency_for(&self, id: PointSetId, cfg: &MsmConfig) -> u64 {
+        match self.tables_for(id, cfg) {
+            Some(t) => t.bytes(),
+            None => self.bytes_for(id, cfg),
+        }
     }
 }
 
@@ -376,5 +429,61 @@ mod tests {
         assert_eq!(r.bytes_for(id, &cfg), 640);
         assert_eq!(r.bytes_for(id, &cfg.glv()), 1280);
         assert_eq!(r.bytes_for(PointSetId(999), &cfg.glv()), 0);
+    }
+
+    #[test]
+    fn registry_tables_roundtrip_and_evict() {
+        let mut r = PointSetRegistry::<Bn254G1>::new();
+        let id = r.register(points::generate_points_walk::<Bn254G1>(16, 207));
+        let cfg = MsmConfig::new(8, Default::default());
+        assert!(r.tables_for(id, &cfg).is_none());
+        assert_eq!(r.table_bytes_of(id), 0);
+        assert_eq!(r.residency_for(id, &cfg), r.bytes_for(id, &cfg));
+        let bytes = r.build_tables(id, &cfg);
+        let t = r.tables_for(id, &cfg).expect("tables resident");
+        assert_eq!(t.bytes(), bytes);
+        assert_eq!(r.table_bytes_of(id), bytes);
+        assert_eq!(r.residency_for(id, &cfg), bytes);
+        // footprint = expanded set × windows — the pointcache accounting
+        assert_eq!(
+            bytes,
+            super::super::pointcache::table_resident_bytes(
+                r.bytes_of(id),
+                crate::msm::Decomposition::Full,
+                t.windows(),
+            )
+        );
+        // an incompatible config (or unknown set) is never served
+        assert!(r.tables_for(id, &cfg.glv()).is_none());
+        assert!(r.tables_for(PointSetId(999), &cfg).is_none());
+        assert_eq!(r.build_tables(PointSetId(999), &cfg), 0);
+        assert_eq!(r.evict_tables(id), bytes);
+        assert!(r.tables_for(id, &cfg).is_none());
+        assert_eq!(r.evict_tables(id), 0);
+    }
+
+    #[test]
+    fn mid_run_table_eviction_falls_back_bit_identical() {
+        // satellite regression: the precomputed backend wins while tables
+        // are resident; when the registry evicts them mid-run, selection
+        // falls back and the same inputs still produce the same point
+        let mut r = PointSetRegistry::<Bn254G1>::new();
+        let w = points::workload::<Bn254G1>(200, 208);
+        let id = r.register(w.points.clone());
+        let cfg = MsmConfig::new(8, Default::default()).glv();
+        r.build_tables(id, &cfg);
+        let windows = crate::msm::MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+        let resident = r.tables_for(id, &cfg);
+        let backend = msm::Backend::pick_with_tables(200, windows, 8, resident.is_some());
+        assert_eq!(backend, msm::Backend::Precomputed);
+        let first = resident.expect("resident").msm(&w.scalars);
+        // eviction lands between this MSM and the next over the same set
+        r.evict_tables(id);
+        assert!(r.tables_for(id, &cfg).is_none());
+        let fallback = msm::Backend::pick_with_tables(200, windows, 8, false);
+        assert_ne!(fallback, msm::Backend::Precomputed);
+        let live = r.get(id).expect("set still registered");
+        let second = msm::execute(fallback, live.as_slice(), &w.scalars, &cfg);
+        assert!(first.eq_point(&second));
     }
 }

@@ -21,6 +21,16 @@ pub fn resident_bytes(base_bytes: u64, decomposition: Decomposition) -> u64 {
     base_bytes.saturating_mul(decomposition.expansion_factor())
 }
 
+/// DDR bytes a point set occupies with **fixed-base tables** resident:
+/// the table keeps `windows` shifted copies (`2^(j·k)·B` per window `j`)
+/// of the decomposition-expanded set, so the footprint is
+/// [`resident_bytes`] × window count. `msm::precomp::PrecompTable::bytes`
+/// reports the same number from the built table, and the FPGA what-if
+/// (`fpga::sab`) charges DDR with it when its table knob is on.
+pub fn table_resident_bytes(base_bytes: u64, decomposition: Decomposition, windows: u32) -> u64 {
+    resident_bytes(base_bytes, decomposition).saturating_mul(u64::from(windows))
+}
+
 /// Residency state for one device's DDR.
 #[derive(Debug)]
 pub struct DeviceDdr {
@@ -73,7 +83,10 @@ impl DeviceDdr {
     ///
     /// A set can be re-admitted at a **different size** than it was booked
     /// at — mixed-config fleets do this when one path budgets the plain
-    /// set and another the GLV endo-expanded (doubled) one. A booking that
+    /// set, another the GLV endo-expanded (doubled) one, and a third the
+    /// table-expanded footprint ([`table_resident_bytes`] — the same set
+    /// grown by the window count when fixed-base tables move on device).
+    /// A booking that
     /// already covers `bytes` is a plain [`Admission::Hit`] (the larger
     /// footprint stays resident); a larger request *grows* the booking in
     /// place, evicting other sets as needed and reporting only the delta
@@ -200,6 +213,47 @@ mod tests {
             d.admit(PointSetId(1), resident_bytes(400, Decomposition::Glv)),
             Admission::Miss { upload_bytes: 800, evicted: 0 }
         );
+    }
+
+    #[test]
+    fn table_footprint_grow_reconciles_like_glv() {
+        // the satellite fix under test: base → GLV 2× → tables ×windows
+        // is one grow chain through `admit` — each step uploads only the
+        // delta, growth evicts other sets LRU-first (never the growing
+        // one), and an impossible step falls through with the booking
+        // untouched
+        let base = 100u64;
+        let glv = resident_bytes(base, Decomposition::Glv);
+        let tables = table_resident_bytes(base, Decomposition::Glv, 11);
+        assert_eq!(tables, 2200);
+        // GLV halves the windows but doubles the set: same product as a
+        // full-width table at double the window count
+        assert_eq!(table_resident_bytes(base, Decomposition::Full, 22), tables);
+        assert_eq!(table_resident_bytes(u64::MAX, Decomposition::Glv, 11), u64::MAX);
+        let mut d = DeviceDdr::new(2500);
+        d.admit(PointSetId(9), 600); // bystander — the eventual LRU victim
+        assert_eq!(d.admit(PointSetId(1), base), Admission::Miss { upload_bytes: 100, evicted: 0 });
+        assert_eq!(d.admit(PointSetId(1), glv), Admission::Miss { upload_bytes: 100, evicted: 0 });
+        // the table-expanded re-admission grows in place: delta upload
+        // (the 10 missing columns), bystander evicted, grower kept
+        assert_eq!(
+            d.admit(PointSetId(1), tables),
+            Admission::Miss { upload_bytes: 2000, evicted: 1 }
+        );
+        assert!(d.is_resident(PointSetId(1)));
+        assert!(!d.is_resident(PointSetId(9)));
+        assert_eq!(d.used_bytes(), 2200);
+        // the larger booking serves every smaller view of the same set
+        assert_eq!(d.admit(PointSetId(1), tables), Admission::Hit);
+        assert_eq!(d.admit(PointSetId(1), glv), Admission::Hit);
+        assert_eq!(d.admit(PointSetId(1), base), Admission::Hit);
+        // a wider table that can never fit refuses, booking untouched —
+        // the router falls through to another device
+        let huge = table_resident_bytes(base, Decomposition::Glv, 22);
+        assert!(huge > 2500);
+        assert_eq!(d.admit(PointSetId(1), huge), Admission::TooLarge);
+        assert!(d.is_resident(PointSetId(1)));
+        assert_eq!(d.used_bytes(), 2200);
     }
 
     #[test]

@@ -48,6 +48,14 @@ pub struct SabConfig {
     /// the serial reduce chain and DNA combine halve again; DDR point
     /// residency doubles (see `coordinator::pointcache::resident_bytes`).
     pub decomposition: Decomposition,
+    /// Fixed-base precompute tables resident in DDR (the SRS point-cache
+    /// what-if, `msm::precomp`): per-window shifted multiples replace the
+    /// live point set, multiplying DDR residency ([`Self::ddr_points`])
+    /// by the window count while each window pass still streams one
+    /// expanded-set column — fill/stream/reduce are unchanged and the DNA
+    /// combine collapses to windows − 1 serial adds (the Horner doubling
+    /// chain is pre-paid in the tables).
+    pub precomp_tables: bool,
 }
 
 impl SabConfig {
@@ -66,6 +74,7 @@ impl SabConfig {
             rbam_units: 1,
             slicing: Slicing::Unsigned,
             decomposition: Decomposition::Full,
+            precomp_tables: false,
         }
     }
 
@@ -85,11 +94,36 @@ impl SabConfig {
         SabConfig { decomposition: Decomposition::Glv, ..SabConfig::paper_signed(curve, scaling) }
     }
 
+    /// The GLV build with fixed-base precompute tables resident in DDR
+    /// (the `msm::precomp` point-cache what-if): window passes read
+    /// pre-shifted multiples, so the DNA combine collapses to a plain
+    /// windows − 1 add chain while DDR residency multiplies by the window
+    /// count. Only worth it for SRS-style fixed bases reused across calls
+    /// — the table build itself is amortized off the modeled path.
+    pub fn paper_tables(curve: CurveId, scaling: u32) -> SabConfig {
+        SabConfig { precomp_tables: true, ..SabConfig::paper_glv(curve, scaling) }
+    }
+
     /// Points resident in device DDR for an m-point MSM under this build
-    /// (GLV keeps the endo-expanded set resident: 2m). The factor itself
-    /// is [`Decomposition::expansion_factor`] — one rule, shared with the
-    /// coordinator's residency accounting.
+    /// (GLV keeps the endo-expanded set resident: 2m; fixed-base tables
+    /// keep one shifted copy per window on top of that). The expansion
+    /// factor is [`Decomposition::expansion_factor`] and the table factor
+    /// is the plan's window count — the same rule the coordinator budgets
+    /// with (`coordinator::pointcache::table_resident_bytes`).
     pub fn ddr_points(&self, m: u64) -> u64 {
+        let expanded = m.saturating_mul(self.decomposition.expansion_factor());
+        if self.precomp_tables {
+            expanded.saturating_mul(u64::from(self.plan().windows))
+        } else {
+            expanded
+        }
+    }
+
+    /// Points one window pass streams from DDR: the decomposition-expanded
+    /// set. Tables change *residency* ([`Self::ddr_points`]), not the
+    /// per-pass working set — each window reads exactly its own
+    /// pre-shifted column, the same volume as a live-point pass.
+    pub fn streamed_points(&self, m: u64) -> u64 {
         m.saturating_mul(self.decomposition.expansion_factor())
     }
 
@@ -103,6 +137,7 @@ impl SabConfig {
             rbam_units: 1,
             slicing: Slicing::Unsigned,
             decomposition: Decomposition::Full,
+            precomp_tables: false,
         }
     }
 
@@ -197,8 +232,10 @@ impl SabModel {
         let s = self.cfg.scaling.max(1);
         // GLV builds stream/fill the endo-expanded set: 2m ops per window
         // over half the windows — total fill and stream work is unchanged;
-        // the win is the halved serial chain and combine below.
-        let m_eff = self.cfg.ddr_points(m);
+        // the win is the halved serial chain and combine below. Fixed-base
+        // tables multiply DDR *residency*, not the per-pass volume: each
+        // window streams exactly its own pre-shifted column.
+        let m_eff = self.cfg.streamed_points(m);
 
         // 1. scalar transfer (PCIe) — m full-width scalars either way (the
         // half-width split is a device-side integer computation).
@@ -226,9 +263,17 @@ impl SabModel {
         let hidden = per_window_fill_s * (windows as f64 - 1.0);
         let reduce_s = (reduce_total - hidden).max(reduce_total / windows as f64);
 
-        // 4. combine
+        // 4. combine: the Horner chain (k doublings + 1 add per window),
+        // unless precompute tables pre-paid the doublings — then window
+        // results sit at their final weight and the combine is a plain
+        // windows − 1 serially dependent add chain (the same shape as a
+        // host-side shard merge).
         let dna = DnaModel { pipe: self.pipe };
-        let combine_s = dna.combine_cycles(k, windows) as f64 / self.fmax_hz;
+        let combine_s = if self.cfg.precomp_tables {
+            self.merge_seconds(windows)
+        } else {
+            dna.combine_cycles(k, windows) as f64 / self.fmax_hz
+        };
 
         MsmTiming {
             transfer_s,
@@ -434,6 +479,35 @@ mod tests {
         // BLS12-381: 381-bit accounting → 32 windows drop to 17 (the
         // half-width top slice picks up a carry window at k = 12)
         assert_eq!(SabConfig::paper_glv(CurveId::Bls12381, 2).plan().windows, 17);
+    }
+
+    #[test]
+    fn tables_collapse_combine_and_multiply_ddr() {
+        let glv = SabConfig::paper_glv(CurveId::Bn254, 2);
+        let tab = SabConfig::paper_tables(CurveId::Bn254, 2);
+        // same plan: tables change where points come from, not the digit
+        // encoding — 11 GLV windows on BN254
+        assert_eq!(tab.plan().windows, glv.plan().windows);
+        assert_eq!(tab.plan().windows, 11);
+        // DDR residency: 2× (endo pair) × 11 (one shifted copy per window);
+        // the per-pass streamed volume stays at the endo-expanded 2m
+        assert_eq!(glv.ddr_points(1_000), 2_000);
+        assert_eq!(tab.ddr_points(1_000), 22_000);
+        assert_eq!(tab.streamed_points(1_000), 2_000);
+        assert_eq!(tab.streamed_points(1_000), glv.streamed_points(1_000));
+        let mg = SabModel::new(glv);
+        let mt = SabModel::new(tab);
+        let m = 4_000_000;
+        let tg = mg.time_msm(m);
+        let tt = mt.time_msm(m);
+        // transfer/fill/stream/reduce untouched; only the combine collapses
+        // from the Horner chain to windows − 1 serial adds
+        assert_eq!(tg.transfer_s, tt.transfer_s);
+        assert_eq!(tg.fill_s, tt.fill_s);
+        assert_eq!(tg.stream_s, tt.stream_s);
+        assert_eq!(tg.reduce_s, tt.reduce_s);
+        assert!(tt.combine_s < tg.combine_s, "{} vs {}", tt.combine_s, tg.combine_s);
+        assert!(tt.total_s() <= tg.total_s());
     }
 
     #[test]

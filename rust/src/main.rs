@@ -6,7 +6,7 @@
 //! ifzkp prove   --constraints N
 //! ifzkp serve   [--config serve.toml] [--jobs N] [--size N] [--devices N] [--sharded chunk|window]
 //! ifzkp sim     --curve ... [--size N] [--scaling S]
-//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|glv|whatif|ntt|all] [--cpu-measure N]
+//! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|glv|pointcache|whatif|ntt|all] [--cpu-measure N]
 //! ifzkp figures [--id 4|5|6|7|8|all]
 //! ifzkp info
 //! ```
@@ -290,6 +290,11 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
     }
     if id == "glv" {
         println!("{}", tables::ablation_glv(args.get_usize("size", 2048), 20240710));
+    }
+    // the fixed-base precompute-table ablation: measured + modeled speedup
+    // vs table size as the window width sweeps (--size caps the MSM)
+    if all || id == "pointcache" {
+        println!("{}", tables::ablation_pointcache(args.get_usize("size", 4096), 20240710));
     }
     if all || id == "whatif" {
         println!("{}", tables::whatif_multi_kernel(args.get_usize("size", 16_000_000) as u64));

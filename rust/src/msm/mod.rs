@@ -41,6 +41,7 @@ pub mod parallel;
 pub mod batch_affine;
 pub mod chunked;
 pub mod partial;
+pub mod precomp;
 
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
@@ -48,6 +49,7 @@ pub use chunked::ChunkedPhases;
 pub use partial::{PartialMsm, ShardPolicy, ShardSpec};
 pub use pippenger::msm as msm_pippenger;
 pub use plan::{Decomposition, DigitMatrix, MsmConfig, MsmInput, MsmPlan, Reduction, Slicing};
+pub use precomp::{PrecompCost, PrecompTable};
 
 /// Heuristic window width: balances m/window bucket fills against 2^k
 /// reduction work. The usual c ≈ log2(m) − 3 rule, clamped to the paper's
@@ -87,6 +89,15 @@ pub enum Backend {
         /// OS threads the point chunks fan out across.
         threads: usize,
     },
+    /// Fixed-base table-fed fills ([`precomp`]): per-window shifted
+    /// multiples are precomputed, so the fill loop reads table columns
+    /// straight into the batch-affine buckets and the combine collapses
+    /// to a plain add chain — no doubling/shift chain anywhere outside
+    /// the planned reduction. Through [`execute`] the table is built
+    /// inline (one-shot, pays the build); amortized callers hold a
+    /// [`PrecompTable`] (or a `coordinator` registry entry) and call it
+    /// directly.
+    Precomputed,
 }
 
 impl Backend {
@@ -125,6 +136,43 @@ impl Backend {
     pub fn auto_for<C: CurveParams>(m: usize, cfg: &MsmConfig) -> Backend {
         Backend::pick(m, MsmPlan::for_curve::<C>(cfg).windows, parallel::default_threads())
     }
+
+    /// [`Self::pick`] extended with table residency: when the caller's
+    /// registry holds compatible fixed-base tables for the input set
+    /// (`coordinator::devices::PointSetRegistry::tables_for`), the
+    /// table-fed backend wins at every size past the naive tier — its
+    /// fill does strictly less work than any live-point fill and its
+    /// combine drops the Horner chain entirely. Without resident tables
+    /// (or below the bucket-setup threshold) the standard rule applies
+    /// unchanged, so eviction between selection and execution only ever
+    /// falls back to a bit-identical backend.
+    pub fn pick_with_tables(
+        m: usize,
+        plan_windows: u32,
+        threads: usize,
+        tables_resident: bool,
+    ) -> Backend {
+        if tables_resident && m >= 32 {
+            Backend::Precomputed
+        } else {
+            Backend::pick(m, plan_windows, threads)
+        }
+    }
+
+    /// Curve- and config-exact [`Self::pick_with_tables`] (the residency
+    ///-aware sibling of [`Self::auto_for`]).
+    pub fn auto_for_cached<C: CurveParams>(
+        m: usize,
+        cfg: &MsmConfig,
+        tables_resident: bool,
+    ) -> Backend {
+        Backend::pick_with_tables(
+            m,
+            MsmPlan::for_curve::<C>(cfg).windows,
+            parallel::default_threads(),
+            tables_resident,
+        )
+    }
 }
 
 /// Run an MSM on the chosen backend. Every backend routes through the same
@@ -161,6 +209,7 @@ pub fn execute<C: CurveParams>(
             batch_affine::msm_parallel(points, scalars, cfg, threads)
         }
         Backend::Chunked { threads } => chunked::msm(points, scalars, cfg, threads),
+        Backend::Precomputed => precomp::msm(points, scalars, cfg),
     }
 }
 
@@ -262,9 +311,49 @@ mod tests {
             Backend::BatchAffine,
             Backend::BatchAffineParallel { threads: 3 },
             Backend::Chunked { threads: 3 },
+            Backend::Precomputed,
         ] {
             let got = execute(backend, &w.points, &w.scalars, &cfg);
             assert!(got.eq_point(&want), "{backend:?}");
         }
+    }
+
+    #[test]
+    fn pick_with_tables_beats_chunked_when_resident() {
+        // satellite regression: with resident tables the precomputed
+        // backend wins exactly where any bucket backend would run —
+        // including the operating point where chunked would otherwise win
+        // (threads past the GLV window ceiling)
+        assert_eq!(Backend::pick_with_tables(1 << 20, 11, 23, true), Backend::Precomputed);
+        assert_eq!(Backend::pick_with_tables(1 << 20, 22, 8, true), Backend::Precomputed);
+        assert_eq!(Backend::pick_with_tables(100, 22, 64, true), Backend::Precomputed);
+        // without residency the pinned standard rule applies verbatim
+        assert_eq!(
+            Backend::pick_with_tables(1 << 20, 11, 23, false),
+            Backend::Chunked { threads: 23 }
+        );
+        assert_eq!(
+            Backend::pick_with_tables(1 << 20, 22, 8, false),
+            Backend::BatchAffineParallel { threads: 8 }
+        );
+        // tiny inputs skip bucket setup either way
+        assert_eq!(Backend::pick_with_tables(8, 22, 64, true), Backend::Naive);
+        assert_eq!(Backend::pick_with_tables(8, 22, 64, false), Backend::Naive);
+    }
+
+    #[test]
+    fn precomputed_and_fallback_are_bit_identical() {
+        // the two backends an eviction mid-run switches between must
+        // agree bit-for-bit at the switch point
+        let w = points::workload::<Bn254G1>(1 << 9, 19);
+        let cfg = MsmConfig::new(8, Reduction::default()).glv();
+        let windows = MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+        let with_tables = Backend::pick_with_tables(w.points.len(), windows, 32, true);
+        let evicted = Backend::pick_with_tables(w.points.len(), windows, 32, false);
+        assert_eq!(with_tables, Backend::Precomputed);
+        assert_ne!(evicted, Backend::Precomputed);
+        let a = execute(with_tables, &w.points, &w.scalars, &cfg);
+        let b = execute(evicted, &w.points, &w.scalars, &cfg);
+        assert!(a.eq_point(&b));
     }
 }

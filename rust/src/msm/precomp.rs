@@ -1,0 +1,420 @@
+//! Fixed-base precomputed-table MSM: trade DDR/host memory for the
+//! per-window doubling chain (ROADMAP open item 3 — the SRS point-cache
+//! fast path).
+//!
+//! The prover's MSM bases are the *same SRS points* on every proof, so a
+//! deployment serving many proofs can precompute, once per base set, the
+//! shifted multiples `2^(j·k)·B` for every window `j` — and then run
+//! every subsequent MSM without a single point doubling outside the
+//! planned bucket reduction:
+//!
+//! * **fill** reads the window-`j` table column instead of shifting the
+//!   live point, and feeds the shared batch-affine accumulator
+//!   ([`super::batch_affine`]) exactly like the other backends — same
+//!   bucket indexing, same conflict rule, same batched inversions;
+//! * **combine** collapses from the DNA Horner chain (`k` doublings per
+//!   window) to a plain (windows − 1)-add sum, because the `2^(j·k)`
+//!   window weight is already baked into each table entry.
+//!
+//! Tables compose with the whole plan stack. Under
+//! [`Decomposition::Glv`] the basis is the *endo-expanded* pair set
+//! `(Pᵢ, φ(Pᵢ))` — built with [`endo::endo_affine`], which is
+//! scalar-independent, unlike `endo::expand`, which folds per-scalar
+//! split signs into the points — and each scalar's split signs are folded
+//! into the table reads at fill time instead
+//! (`negate = digit_sign XOR split_sign`; negation is free on
+//! Weierstrass points). Signed-digit slicing needs nothing extra: buckets
+//! are indexed by digit magnitude exactly as everywhere else.
+//!
+//! Layout is **window-major**: `entries[j·expanded_m + e] = 2^(j·k)·B_e`,
+//! so one window's fill streams one contiguous column. The footprint is
+//! exactly `base_bytes × windows` (`expansion_factor × m × windows`
+//! affine points) — the same number `coordinator::pointcache::
+//! table_resident_bytes` books against device DDR and the FPGA what-if
+//! (`fpga::sab`) charges for resident tables.
+//!
+//! Determinism: the table path runs the same [`DigitMatrix`] recode, the
+//! same bucket fills, the same planned reduction, and a combine that adds
+//! the same window results in the same order — so results are
+//! bit-identical (`eq_point`) to every live-point backend for any config.
+//! Evicting tables mid-run therefore falls back to any other backend
+//! without changing a single proof byte.
+
+use super::plan::{Decomposition, DigitMatrix, MsmConfig, MsmPlan};
+use crate::ec::counters::{self, PointOps};
+use crate::ec::{endo, Affine, CurveParams, Jacobian, ScalarLimbs};
+
+/// Per-phase measured cost of one table-fed MSM — the instrumentation the
+/// perf pins assert the structural claims on, phase by phase (the
+/// whole-MSM counter view cannot: IS-RBAM's sub-window Horner pass issues
+/// doublings inside *reduce*, which must not be confused with the
+/// fill/combine chains the tables eliminate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrecompCost {
+    /// Bucket ops issued by the fill phase — one table read per nonzero
+    /// digit (the same accounting as `pippenger::MsmCost::fill_ops`).
+    pub issued: u64,
+    /// Point ops the fill phase executed. Batch-affine lanes run in the
+    /// field layer, so only the Jacobian conflict-tail is visible here —
+    /// and **zero doublings** outside duplicate-point tails.
+    pub fill: PointOps,
+    /// Point ops of the planned bucket reduction (running sum or
+    /// IS-RBAM — the latter's sub-window doublings land here).
+    pub reduce: PointOps,
+    /// Point ops of the plain-add combine: windows − 1 additions, **zero
+    /// doublings** (the Horner shift chain is pre-paid in the table).
+    pub combine: PointOps,
+}
+
+impl PrecompCost {
+    /// Total measured point ops across all three phases.
+    pub fn total_point_ops(&self) -> u64 {
+        self.fill.total() + self.reduce.total() + self.combine.total()
+    }
+}
+
+fn accum(into: &mut PointOps, ops: PointOps) {
+    into.add += ops.add;
+    into.double += ops.double;
+    into.mixed += ops.mixed;
+}
+
+/// A fixed-base table: per-window shifted multiples of one point set
+/// under one [`MsmConfig`], ready to feed [`Self::msm`] /
+/// [`Self::msm_range`] any number of times.
+pub struct PrecompTable<C: CurveParams> {
+    /// The resolved plan the table was sized for (GLV configs degrade to
+    /// full-width here exactly as in [`MsmPlan::for_curve`]).
+    plan: MsmPlan,
+    /// The config the table was built under (the compatibility key).
+    cfg: MsmConfig,
+    /// Caller-visible base points (pre-expansion).
+    base_m: usize,
+    /// Basis length after decomposition expansion (2·m under GLV).
+    expanded_m: usize,
+    /// Window-major multiples: `entries[j·expanded_m + e] = 2^(j·k)·B_e`.
+    entries: Vec<Affine<C>>,
+}
+
+impl<C: CurveParams> PrecompTable<C> {
+    /// Precompute the table for `points` under `cfg`. One-time cost:
+    /// `expanded_m · (windows − 1) · window_bits` point doublings (each
+    /// column is the previous one shifted by `double_n(k)`) plus one
+    /// batch-affine normalization per column — amortized away after a
+    /// handful of MSMs over the same set.
+    pub fn build(points: &[Affine<C>], cfg: &MsmConfig) -> PrecompTable<C> {
+        let plan = MsmPlan::for_curve::<C>(cfg);
+        let basis: Vec<Affine<C>> = match plan.decomposition {
+            Decomposition::Full => points.to_vec(),
+            Decomposition::Glv => {
+                let p = C::glv().expect("for_curve keeps Glv only when endo params exist");
+                let mut b = Vec::with_capacity(2 * points.len());
+                for pt in points {
+                    b.push(*pt);
+                    b.push(endo::endo_affine(p, pt));
+                }
+                b
+            }
+        };
+        let expanded_m = basis.len();
+        let windows = plan.windows as usize;
+        let mut entries = Vec::with_capacity(windows.saturating_mul(expanded_m));
+        let mut column: Vec<Jacobian<C>> = basis.iter().map(Affine::to_jacobian).collect();
+        entries.extend_from_slice(&basis);
+        for _ in 1..windows {
+            for p in column.iter_mut() {
+                *p = p.double_n(plan.window_bits);
+            }
+            entries.extend(Jacobian::batch_to_affine(&column));
+        }
+        PrecompTable { plan, cfg: *cfg, base_m: points.len(), expanded_m, entries }
+    }
+
+    /// The resolved plan the table executes under.
+    pub fn plan(&self) -> &MsmPlan {
+        &self.plan
+    }
+
+    /// Window count = table columns.
+    pub fn windows(&self) -> u32 {
+        self.plan.windows
+    }
+
+    /// Number of caller-visible base points the table covers.
+    pub fn base_len(&self) -> usize {
+        self.base_m
+    }
+
+    /// Basis length after decomposition expansion (2·base under GLV).
+    pub fn expanded_len(&self) -> usize {
+        self.expanded_m
+    }
+
+    /// True when the table covers no points.
+    pub fn is_empty(&self) -> bool {
+        self.base_m == 0
+    }
+
+    /// Exact table footprint: `expanded_m × windows` affine points — the
+    /// number DDR residency accounting books (`base_bytes × expansion ×
+    /// windows`, see `coordinator::pointcache::table_resident_bytes`).
+    pub fn bytes(&self) -> u64 {
+        (self.entries.len() as u64).saturating_mul(C::AFFINE_BYTES)
+    }
+
+    /// Whether this table can serve MSMs under `cfg`: the window width,
+    /// slicing, reduction, and decomposition must all match the build
+    /// config (a mismatched plan would read the wrong columns or reduce
+    /// differently — callers get `None` from the registry and fall back
+    /// to a live-point backend instead).
+    pub fn compatible_with(&self, cfg: &MsmConfig) -> bool {
+        self.cfg.window_bits == cfg.window_bits
+            && self.cfg.slicing == cfg.slicing
+            && self.cfg.reduction == cfg.reduction
+            && self.cfg.decomposition == cfg.decomposition
+    }
+
+    /// Table-fed MSM over a sub-range of the base set: `scalars[i]`
+    /// multiplies base point `offset + i`. Prefix slices of an SRS vector
+    /// (the prover's `a_query[..nv]` pattern) use `offset = 0`; the
+    /// L-query slice starts mid-vector. Panics if the range leaves the
+    /// table.
+    pub fn msm_range(&self, offset: usize, scalars: &[ScalarLimbs]) -> Jacobian<C> {
+        self.msm_range_with_cost(offset, scalars).0
+    }
+
+    /// Table-fed MSM over the whole base set prefix of length
+    /// `scalars.len()`.
+    pub fn msm(&self, scalars: &[ScalarLimbs]) -> Jacobian<C> {
+        self.msm_range(0, scalars)
+    }
+
+    /// [`Self::msm`] with the per-phase instrumented cost.
+    pub fn msm_with_cost(&self, scalars: &[ScalarLimbs]) -> (Jacobian<C>, PrecompCost) {
+        self.msm_range_with_cost(0, scalars)
+    }
+
+    /// [`Self::msm_range`] with the per-phase instrumented cost (see
+    /// [`PrecompCost`] for what lands where).
+    pub fn msm_range_with_cost(
+        &self,
+        offset: usize,
+        scalars: &[ScalarLimbs],
+    ) -> (Jacobian<C>, PrecompCost) {
+        assert!(
+            offset.checked_add(scalars.len()).is_some_and(|end| end <= self.base_m),
+            "table range out of bounds: {offset}+{} > {}",
+            scalars.len(),
+            self.base_m
+        );
+        let mut cost = PrecompCost::default();
+        if scalars.is_empty() {
+            return (Jacobian::infinity(), cost);
+        }
+        let (magnitudes, signs) = self.split_scalars(scalars);
+        let matrix = DigitMatrix::build(&self.plan, &magnitudes);
+        let row0 = offset * self.plan.decomposition.expansion_factor() as usize;
+        let mut window_results = Vec::with_capacity(self.plan.windows as usize);
+        for j in 0..self.plan.windows {
+            cost.issued += matrix.nonzero_in_window(j);
+            let column = &self.entries[j as usize * self.expanded_m..][..self.expanded_m];
+            let (buckets, fill) = counters::measure(|| {
+                super::batch_affine::fill_batch_affine(
+                    self.plan.bucket_slots(),
+                    (0..matrix.rows()).filter_map(|i| {
+                        matrix.bucket_op(i, j).and_then(|(b, digit_neg)| {
+                            let e = &column[row0 + i];
+                            if e.infinity {
+                                return None;
+                            }
+                            Some((b, if digit_neg != signs[i] { e.neg() } else { *e }))
+                        })
+                    }),
+                )
+            });
+            let (wj, reduce) = counters::measure(|| self.plan.reduce(&buckets));
+            accum(&mut cost.fill, fill);
+            accum(&mut cost.reduce, reduce);
+            window_results.push(wj);
+        }
+        // Combine: window weights are baked into the tables, so the Horner
+        // shift chain disappears — windows − 1 plain additions.
+        let (result, combine) = counters::measure(|| {
+            let mut acc = Jacobian::<C>::infinity();
+            for wj in &window_results {
+                acc = acc.add(wj);
+            }
+            acc
+        });
+        cost.combine = combine;
+        (result, cost)
+    }
+
+    /// Resolve scalars to the digit-matrix input: their GLV split
+    /// magnitudes plus the per-row split signs (folded into the table
+    /// reads at fill time), or the scalars as-is under a full-width plan.
+    fn split_scalars(&self, scalars: &[ScalarLimbs]) -> (Vec<ScalarLimbs>, Vec<bool>) {
+        match self.plan.decomposition {
+            Decomposition::Full => (scalars.to_vec(), vec![false; scalars.len()]),
+            Decomposition::Glv => {
+                let p = C::glv().expect("GLV table requires endo params");
+                let mut mags = Vec::with_capacity(2 * scalars.len());
+                let mut signs = Vec::with_capacity(2 * scalars.len());
+                for s in scalars {
+                    let split = p.decompose(s);
+                    mags.push(split.k1);
+                    signs.push(split.k1_neg);
+                    mags.push(split.k2);
+                    signs.push(split.k2_neg);
+                }
+                (mags, signs)
+            }
+        }
+    }
+}
+
+/// One-shot table-fed MSM: build the table inline, then run — the
+/// [`super::Backend::Precomputed`] dispatch arm. Correct for any input,
+/// but the build pays the full doubling chain; callers that reuse a base
+/// set should build once ([`PrecompTable::build`]) or register the set
+/// with `coordinator::devices::PointSetRegistry` and amortize.
+pub fn msm<C: CurveParams>(
+    points: &[Affine<C>],
+    scalars: &[ScalarLimbs],
+    cfg: &MsmConfig,
+) -> Jacobian<C> {
+    assert_eq!(points.len(), scalars.len(), "MSM input length mismatch");
+    PrecompTable::build(points, cfg).msm(scalars)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bls12381G1, Bn254G1};
+    use crate::msm::{self, Backend, Reduction, Slicing};
+
+    #[test]
+    fn table_msm_matches_pippenger_full_and_glv() {
+        let w = points::workload::<Bn254G1>(120, 611);
+        for cfg in [
+            MsmConfig::new(8, Reduction::RunningSum),
+            MsmConfig::new(8, Reduction::Recursive { k2: 3 }),
+            MsmConfig::new(10, Reduction::Recursive { k2: 4 }).glv(),
+            MsmConfig::unsigned(7, Reduction::RunningSum),
+        ] {
+            let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+            let table = PrecompTable::build(&w.points, &cfg);
+            let got = table.msm(&w.scalars);
+            assert!(got.eq_point(&want), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn table_msm_matches_on_bls() {
+        let w = points::workload::<Bls12381G1>(48, 612);
+        for cfg in [MsmConfig::default(), MsmConfig::default().glv()] {
+            let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+            let got = PrecompTable::build(&w.points, &cfg).msm(&w.scalars);
+            assert!(got.eq_point(&want), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn range_offsets_match_the_sub_msm() {
+        let w = points::workload::<Bn254G1>(40, 613);
+        for cfg in [MsmConfig::new(6, Reduction::RunningSum), MsmConfig::default().glv()] {
+            let table = PrecompTable::build(&w.points, &cfg);
+            for (lo, hi) in [(0usize, 40usize), (7, 29), (39, 40), (12, 12)] {
+                let want = msm::naive::msm(&w.points[lo..hi], &w.scalars[lo..hi]);
+                let got = table.msm_range(lo, &w.scalars[lo..hi]);
+                assert!(got.eq_point(&want), "{cfg:?} range {lo}..{hi}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "table range out of bounds")]
+    fn range_past_the_table_panics() {
+        let w = points::workload::<Bn254G1>(8, 614);
+        let table = PrecompTable::build(&w.points, &MsmConfig::new(4, Reduction::RunningSum));
+        table.msm_range(4, &w.scalars[0..5]);
+    }
+
+    #[test]
+    fn footprint_is_base_times_windows() {
+        let w = points::workload::<Bn254G1>(20, 615);
+        let cfg = MsmConfig::new(9, Reduction::RunningSum);
+        let table = PrecompTable::build(&w.points, &cfg);
+        assert_eq!(table.base_len(), 20);
+        assert_eq!(table.expanded_len(), 20);
+        let expect = 20 * table.windows() as u64 * Bn254G1::AFFINE_BYTES;
+        assert_eq!(table.bytes(), expect);
+        // GLV doubles the basis and halves the windows — the product is
+        // what the DDR accounting books
+        let glv = PrecompTable::build(&w.points, &cfg.glv());
+        assert_eq!(glv.expanded_len(), 40);
+        assert_eq!(glv.bytes(), 40 * glv.windows() as u64 * Bn254G1::AFFINE_BYTES);
+    }
+
+    #[test]
+    fn compatibility_requires_the_exact_plan_knobs() {
+        let w = points::workload::<Bn254G1>(10, 616);
+        let cfg = MsmConfig::new(8, Reduction::Recursive { k2: 3 });
+        let table = PrecompTable::build(&w.points, &cfg);
+        assert!(table.compatible_with(&cfg));
+        assert!(!table.compatible_with(&MsmConfig::new(9, Reduction::Recursive { k2: 3 })));
+        assert!(!table.compatible_with(&MsmConfig::new(8, Reduction::RunningSum)));
+        assert!(!table.compatible_with(&cfg.glv()));
+        assert!(!table.compatible_with(&MsmConfig {
+            slicing: Slicing::Unsigned,
+            ..cfg
+        }));
+    }
+
+    #[test]
+    fn fill_and_combine_issue_zero_doublings() {
+        let w = points::workload::<Bn254G1>(300, 617);
+        for cfg in
+            [MsmConfig::new(8, Reduction::Recursive { k2: 4 }), MsmConfig::default().glv()]
+        {
+            let table = PrecompTable::build(&w.points, &cfg);
+            let (got, cost) = table.msm_with_cost(&w.scalars);
+            let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+            assert!(got.eq_point(&want));
+            // the structural claim: the tables pre-pay every shift chain
+            assert_eq!(cost.fill.double, 0, "{cfg:?} fill doubles");
+            assert_eq!(cost.combine.double, 0, "{cfg:?} combine doubles");
+            assert_eq!(
+                cost.combine.total(),
+                table.windows() as u64 - 1,
+                "{cfg:?} combine is a plain add chain"
+            );
+            assert!(cost.issued > 0);
+        }
+    }
+
+    #[test]
+    fn empty_scalars_yield_infinity() {
+        let w = points::workload::<Bn254G1>(6, 618);
+        let table = PrecompTable::build(&w.points, &MsmConfig::new(4, Reduction::RunningSum));
+        assert!(table.msm(&[]).is_infinity());
+        assert!(!table.is_empty());
+        let none = PrecompTable::<Bn254G1>::build(&[], &MsmConfig::new(4, Reduction::RunningSum));
+        assert!(none.is_empty());
+        assert!(none.msm(&[]).is_infinity());
+    }
+
+    #[test]
+    fn build_cost_is_the_column_shift_chain() {
+        let w = points::workload::<Bn254G1>(16, 619);
+        let cfg = MsmConfig::new(8, Reduction::RunningSum);
+        let (table, ops) = counters::measure(|| PrecompTable::build(&w.points, &cfg));
+        // one double_n(k) per basis point per column past the first; the
+        // batch normalization is field-only
+        let expect = table.expanded_len() as u64
+            * u64::from(table.windows() - 1)
+            * u64::from(table.plan().window_bits);
+        assert_eq!(ops.double, expect);
+        assert_eq!(ops.add + ops.mixed, 0);
+    }
+}

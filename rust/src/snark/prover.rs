@@ -48,6 +48,16 @@ pub struct ProfileBreakdown {
     pub total_s: f64,
 }
 
+/// Fixed-base precompute tables over the five CRS query vectors (the
+/// prover's SRS point cache — see [`Prover::with_point_cache`]).
+struct QueryTables<G1: CurveParams, G2: CurveParams> {
+    a: msm::PrecompTable<G1>,
+    b1: msm::PrecompTable<G1>,
+    l: msm::PrecompTable<G1>,
+    h: msm::PrecompTable<G1>,
+    b2: msm::PrecompTable<G2>,
+}
+
 /// The prover, bound to a curve family. All five MSMs route through the
 /// shared kernel dispatch ([`msm::execute`]) — pick the executor with
 /// [`Self::with_backend`] (serial Pippenger by default so the Table I
@@ -76,6 +86,9 @@ pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     /// (1 = inline, the Table I serial-measurement default; see
     /// [`Self::with_ntt_threads`]).
     pub ntt_threads: usize,
+    /// Fixed-base tables over the CRS queries; `None` = live-point MSMs.
+    /// Served only while compatible with the current [`Self::msm_cfg`].
+    point_cache: Option<QueryTables<G1, G2>>,
     _p: std::marker::PhantomData<P>,
 }
 
@@ -95,6 +108,7 @@ where
             pool_g1: None,
             pool_g2: None,
             ntt_threads: 1,
+            point_cache: None,
             _p: std::marker::PhantomData,
         }
     }
@@ -134,6 +148,39 @@ where
     pub fn with_glv(mut self) -> Self {
         self.msm_cfg = self.msm_cfg.glv();
         self
+    }
+
+    /// Build fixed-base precompute tables over all five CRS query vectors
+    /// ([`msm::PrecompTable`]) and serve every query MSM from them: the
+    /// fill loop reads pre-shifted window multiples straight into buckets,
+    /// so the per-proof hot path issues zero point doublings in the fill
+    /// and combine phases. The build cost is paid here, once — the SRS is
+    /// fixed across proofs, so tables amortize exactly like the CRS
+    /// synthesis itself. Proofs are bit-identical to the live-point path.
+    ///
+    /// Tables snapshot the current [`Self::msm_cfg`]: call after
+    /// [`Self::with_glv`] to bake the endomorphism split into the tables.
+    /// A later plan change disables them (compatibility gate) rather than
+    /// serving entries from the wrong plan.
+    pub fn with_point_cache(mut self) -> Self {
+        let cfg = &self.msm_cfg;
+        self.point_cache = Some(QueryTables {
+            a: msm::PrecompTable::build(&self.crs.a_query, cfg),
+            b1: msm::PrecompTable::build(&self.crs.b1_query, cfg),
+            l: msm::PrecompTable::build(&self.crs.l_query, cfg),
+            h: msm::PrecompTable::build(&self.crs.h_query, cfg),
+            b2: msm::PrecompTable::build(&self.crs.b2_query, cfg),
+        });
+        self
+    }
+
+    /// The cached table for one query, if present and still built for the
+    /// prover's current plan config.
+    fn cached<'a, C: CurveParams>(
+        &'a self,
+        pick: impl FnOnce(&'a QueryTables<G1, G2>) -> &'a msm::PrecompTable<C>,
+    ) -> Option<&'a msm::PrecompTable<C>> {
+        self.point_cache.as_ref().map(pick).filter(|t| t.compatible_with(&self.msm_cfg))
     }
 
     /// Attach multi-device pools. MSMs submit through the sharded path
@@ -213,20 +260,32 @@ where
         let nv = cs.num_variables();
         assert!(self.crs.a_query.len() >= nv, "CRS smaller than witness");
 
-        // -- msm_g1: A, B1, L, H (sharded across the pool when present) ----
-        let a_msm = prof.time("msm_g1", || self.msm_g1(&self.crs.a_query[..nv], &witness_scalars));
-        let _b1_msm =
-            prof.time("msm_g1", || self.msm_g1(&self.crs.b1_query[..nv], &witness_scalars));
+        // -- msm_g1: A, B1, L, H (table-fed when a point cache is built,
+        // else sharded across the pool when present) -----------------------
+        let a_msm = prof.time("msm_g1", || match self.cached(|t| &t.a) {
+            Some(t) => t.msm_range(0, &witness_scalars),
+            None => self.msm_g1(&self.crs.a_query[..nv], &witness_scalars),
+        });
+        let _b1_msm = prof.time("msm_g1", || match self.cached(|t| &t.b1) {
+            Some(t) => t.msm_range(0, &witness_scalars),
+            None => self.msm_g1(&self.crs.b1_query[..nv], &witness_scalars),
+        });
         let l_start = 1 + cs.num_public;
-        let l_msm = prof.time("msm_g1", || {
-            self.msm_g1(&self.crs.l_query[l_start..nv], &witness_scalars[l_start..])
+        let l_msm = prof.time("msm_g1", || match self.cached(|t| &t.l) {
+            Some(t) => t.msm_range(l_start, &witness_scalars[l_start..nv]),
+            None => self.msm_g1(&self.crs.l_query[l_start..nv], &witness_scalars[l_start..]),
         });
         let h_len = h_scalars.len().min(self.crs.h_query.len());
-        let h_msm =
-            prof.time("msm_g1", || self.msm_g1(&self.crs.h_query[..h_len], &h_scalars[..h_len]));
+        let h_msm = prof.time("msm_g1", || match self.cached(|t| &t.h) {
+            Some(t) => t.msm_range(0, &h_scalars[..h_len]),
+            None => self.msm_g1(&self.crs.h_query[..h_len], &h_scalars[..h_len]),
+        });
 
         // -- msm_g2: B2 -----------------------------------------------------
-        let b2_msm = prof.time("msm_g2", || self.msm_g2(&self.crs.b2_query[..nv], &witness_scalars));
+        let b2_msm = prof.time("msm_g2", || match self.cached(|t| &t.b2) {
+            Some(t) => t.msm_range(0, &witness_scalars),
+            None => self.msm_g2(&self.crs.b2_query[..nv], &witness_scalars),
+        });
 
         // -- other: final assembly -----------------------------------------
         let proof = prof.time("other", || Proof {
@@ -353,6 +412,31 @@ mod tests {
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
+    }
+
+    #[test]
+    fn proof_identical_with_point_cache() {
+        // the table-fed fixed-base path must be invisible in the proof —
+        // on the plain plan and with the GLV split baked into the tables
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        let (prover2, _) = small_prover();
+        let (p2, _) = prover2.with_point_cache().prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
+        let (prover3, _) = small_prover();
+        let (p3, _) = prover3.with_glv().with_point_cache().prove(&cs);
+        assert!(p1.a.eq_point(&p3.a));
+        assert!(p1.b.eq_point(&p3.b));
+        assert!(p1.c.eq_point(&p3.c));
+        // a plan change AFTER the build must disable the tables (the
+        // compatibility gate), not serve entries from the wrong plan
+        let (prover4, _) = small_prover();
+        let (p4, _) = prover4.with_point_cache().with_glv().prove(&cs);
+        assert!(p1.a.eq_point(&p4.a));
+        assert!(p1.b.eq_point(&p4.b));
+        assert!(p1.c.eq_point(&p4.c));
     }
 
     #[test]

@@ -87,6 +87,61 @@ fn measured_serial_point_ops_within_pinned_bounds() {
 }
 
 #[test]
+fn table_fed_fill_has_no_doubling_chain_and_pinned_build_cost() {
+    // the fixed-base table contract, pinned exactly (satellite of the
+    // point-cache PR): the per-window doubling/shift chain moves out of
+    // the per-call hot path and into the one-time build.
+    // * build: the column shift chain is the ONLY point work —
+    //   expanded_m · (windows − 1) · k doublings, zero additions (batch
+    //   normalization is field-only);
+    // * per-call fill: one batched mixed add per nonzero digit, ZERO
+    //   doublings;
+    // * per-call combine: a plain (windows − 1)-add chain, ZERO doublings
+    //   — the Horner ladder is pre-paid in the tables. (Reduce keeps its
+    //   recursive doublings; that phase is unchanged by tables.)
+    use ifzkp::ec::counters;
+    let w = points::workload::<Bn254G1>(M, SEED);
+    for (label, cfg) in [
+        ("signed IS-RBAM", MsmConfig::new(12, Reduction::Recursive { k2: 6 })),
+        ("glv signed IS-RBAM", MsmConfig::new(12, Reduction::Recursive { k2: 6 }).glv()),
+    ] {
+        let (table, build) =
+            counters::measure(|| msm::PrecompTable::<Bn254G1>::build(&w.points, &cfg));
+        let plan = table.plan();
+        let windows = table.windows() as u64;
+        let em = table.expanded_len() as u64;
+        // one-time build cost, exact: the shift chain and nothing else
+        assert_eq!(
+            build.double,
+            em * (windows - 1) * plan.window_bits as u64,
+            "{label}: build doubling count drifted"
+        );
+        assert_eq!(build.add + build.mixed, 0, "{label}: build issued point additions");
+        // per-call budget: table slot → bucket, no doubles anywhere in
+        // fill or combine
+        let (out, cost) = table.msm_with_cost(&w.scalars);
+        let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+        assert!(out.eq_point(&want), "{label}: table-fed result drifted");
+        assert_eq!(cost.fill.double, 0, "{label}: fill issued doublings");
+        assert_eq!(cost.combine.double, 0, "{label}: combine issued doublings");
+        assert_eq!(
+            cost.combine.total(),
+            windows - 1,
+            "{label}: combine is not the plain add chain"
+        );
+        // fill issues at most one op per nonzero digit of the (endo-
+        // expanded, half-width) plan — and is never degenerate
+        let budget = plan.decomposition.expansion_factor() * M as u64 * windows;
+        assert!(
+            cost.issued <= budget,
+            "{label}: fill issued {} > budget {budget}",
+            cost.issued
+        );
+        assert!(cost.issued > budget / 2, "{label}: fill suspiciously sparse");
+    }
+}
+
+#[test]
 fn sos_squaring_stays_cheaper_than_mul_and_counted() {
     // word-mul budgets, pinned exactly (the symmetric-cross-term saving)
     assert_eq!(FpBn254::MUL_WORD_MULS, 36);

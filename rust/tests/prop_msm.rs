@@ -345,6 +345,99 @@ fn chunked_matches_pippenger_full_matrix() {
 }
 
 #[test]
+fn precomputed_matches_pippenger_full_matrix() {
+    // the fixed-base acceptance matrix: table-fed MSM × {Full, Glv} ×
+    // {Unsigned, Signed} × both curves × both shard policies, every cell
+    // eq_point-identical to the live Pippenger reference — plus random
+    // sub-ranges through the table and the multi-threaded backends at
+    // {1, 2, 32} threads against the same table output
+    fn case<C: ifzkp::ec::CurveParams>(rng: &mut ifzkp::util::rng::Rng) -> Result<(), String> {
+        let m = 8 + rng.below(140) as usize;
+        let k = 4 + rng.below(9) as u32;
+        let w = points::workload::<C>(m, rng.next_u64());
+        for slicing in [Slicing::Unsigned, Slicing::Signed] {
+            for glv in [false, true] {
+                let mut cfg = MsmConfig {
+                    window_bits: k,
+                    reduction: Reduction::Recursive { k2: 3 },
+                    slicing,
+                    ..Default::default()
+                };
+                if glv {
+                    cfg = cfg.glv();
+                }
+                let tag = format!("{} m={m} k={k} {slicing:?} glv={glv}", C::NAME);
+                let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+                // the dispatch arm (one-shot table build inside execute)
+                let got = msm::execute(Backend::Precomputed, &w.points, &w.scalars, &cfg);
+                prop_assert!(got.eq_point(&want), "dispatch {tag}");
+                // an explicit table serves the whole set and random ranges
+                let table = msm::PrecompTable::<C>::build(&w.points, &cfg);
+                prop_assert!(table.msm(&w.scalars).eq_point(&want), "table {tag}");
+                let lo = rng.below(m as u64 + 1) as usize;
+                let hi = lo + rng.below((m - lo) as u64 + 1) as usize;
+                let sub = msm::execute(
+                    Backend::Pippenger,
+                    &w.points[lo..hi],
+                    &w.scalars[lo..hi],
+                    &cfg,
+                );
+                prop_assert!(
+                    table.msm_range(lo, &w.scalars[lo..hi]).eq_point(&sub),
+                    "range {lo}..{hi} {tag}"
+                );
+                // the multi-threaded live backends agree with the table at
+                // every thread count — the mid-run fallback contract
+                for threads in [1usize, 2, 32] {
+                    let live = msm::execute(
+                        Backend::Chunked { threads },
+                        &w.points,
+                        &w.scalars,
+                        &cfg,
+                    );
+                    prop_assert!(live.eq_point(&got), "threads={threads} {tag}");
+                }
+                // both shard shapes, shuffled arrival, with the table-fed
+                // backend executing the point-chunk shards
+                let windows = MsmPlan::for_curve::<C>(&cfg).windows;
+                for shards in [2usize, 3] {
+                    for specs in
+                        [partial::chunk_specs(m, shards), partial::window_specs(windows, shards)]
+                    {
+                        let mut parts: Vec<PartialMsm<C>> = specs
+                            .iter()
+                            .enumerate()
+                            .map(|(i, s)| PartialMsm {
+                                index: i,
+                                spec: *s,
+                                output: partial::execute_shard(
+                                    Backend::Precomputed,
+                                    &w.points,
+                                    &w.scalars,
+                                    &cfg,
+                                    s,
+                                ),
+                            })
+                            .collect();
+                        parts.reverse(); // completion order must not matter
+                        prop_assert!(
+                            partial::merge(&mut parts).eq_point(&want),
+                            "shards={shards} {specs:?} {tag}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+    check_with(Config { cases: 3, seed: 0x9CAC }, "precomputed == pippenger", |rng| {
+        case::<Bn254G1>(rng)?;
+        case::<ifzkp::ec::Bls12381G1>(rng)?;
+        Ok(())
+    });
+}
+
+#[test]
 fn shard_pool_through_chunked_backend_matches_direct() {
     // ShardPool's native devices execute shards on the chunked backend;
     // the pool's deterministic merge must stay invisible next to the
