@@ -1,0 +1,710 @@
+//! Admission control for the serving tier: bounded priority lanes,
+//! per-tenant token-bucket quotas, and deadline-aware shedding, drained
+//! weighted-fair into the dispatcher.
+//!
+//! ```text
+//!  offer() ──quota?──deadline?──► [Interactive] ─┐
+//!  offer() ─────────────────────► [Batch]        ├─ weighted-fair ─► pump
+//!  offer() ─────────────────────► [Best-effort] ─┘   (DRR drain)
+//!     │
+//!     └── Err(RejectReason) — typed, at admit time, never a queued job
+//!         that was doomed to miss its deadline
+//! ```
+//!
+//! The controller is deliberately **generic over the queued payload**: the
+//! coordinator queues its internal dispatch envelopes, unit tests queue
+//! plain integers. All policy lives here — the dispatcher downstream never
+//! sees a lane, which is what keeps the batcher/router/shard semantics
+//! (atomic groups, deterministic merge) untouched by admission decisions.
+//!
+//! Shed points, in check order (first hit wins, no side effects before the
+//! token is taken):
+//!
+//! 1. [`RejectReason::Closed`] — the controller is shutting down;
+//! 2. [`RejectReason::LaneFull`] — the lane's bounded queue is at capacity;
+//! 3. [`RejectReason::DeadlineInfeasible`] — the backlog ahead of the job
+//!    (same and higher lanes, divided across devices) multiplied by the
+//!    observed service-time EMA already exceeds the caller's deadline;
+//! 4. [`RejectReason::QuotaExhausted`] — the tenant's token bucket is
+//!    empty (checked last so a rejected job never burns a token).
+
+use crate::util::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Priority lane of a served job, highest first. The drain order is
+/// weighted-fair ([`AdmissionConfig::lane_weight`]): under saturation the
+/// Interactive lane takes most drain slots per round, but lower lanes
+/// still progress (no starvation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Lane {
+    /// Latency-sensitive traffic (wallet-style single proofs).
+    Interactive,
+    /// Throughput traffic (rollup-style proof batches).
+    Batch,
+    /// Background traffic: first to shed under overload.
+    BestEffort,
+}
+
+/// Number of lanes (array dimension for per-lane state).
+pub const LANES: usize = 3;
+
+impl Lane {
+    /// All lanes, priority order (index order of the per-lane arrays).
+    pub const ALL: [Lane; LANES] = [Lane::Interactive, Lane::Batch, Lane::BestEffort];
+
+    /// The lane's index into per-lane arrays (priority order, 0 highest).
+    pub fn index(self) -> usize {
+        match self {
+            Lane::Interactive => 0,
+            Lane::Batch => 1,
+            Lane::BestEffort => 2,
+        }
+    }
+
+    /// Stable lowercase name (metrics keys, JSON artifacts).
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Batch => "batch",
+            Lane::BestEffort => "best-effort",
+        }
+    }
+}
+
+impl fmt::Display for Lane {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A tenant of the proving service (quota-accounting identity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u64);
+
+/// Why admission refused a job. Delivered typed (through
+/// [`super::request::JobError::Rejected`]) at admit time — a shed job
+/// never occupies queue space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The lane's bounded submission queue is at capacity.
+    LaneFull,
+    /// The tenant's token bucket is empty.
+    QuotaExhausted,
+    /// The estimated queueing delay already exceeds the job's deadline.
+    DeadlineInfeasible,
+    /// The controller is closed (coordinator shutting down).
+    Closed,
+    /// The request itself is malformed (unknown point set, length
+    /// mismatch). Emitted by the server wrapper, never by the controller.
+    Invalid,
+}
+
+/// Number of reject reasons (array dimension for shed accounting).
+pub const REASONS: usize = 5;
+
+impl RejectReason {
+    /// The reason's index into per-reason shed counters.
+    pub fn index(self) -> usize {
+        match self {
+            RejectReason::LaneFull => 0,
+            RejectReason::QuotaExhausted => 1,
+            RejectReason::DeadlineInfeasible => 2,
+            RejectReason::Closed => 3,
+            RejectReason::Invalid => 4,
+        }
+    }
+
+    /// Stable lowercase name (metrics keys, JSON artifacts).
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::LaneFull => "lane-full",
+            RejectReason::QuotaExhausted => "quota-exhausted",
+            RejectReason::DeadlineInfeasible => "deadline-infeasible",
+            RejectReason::Closed => "closed",
+            RejectReason::Invalid => "invalid",
+        }
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msg = match self {
+            RejectReason::LaneFull => "lane queue full",
+            RejectReason::QuotaExhausted => "tenant quota exhausted",
+            RejectReason::DeadlineInfeasible => "deadline infeasible at current backlog",
+            RejectReason::Closed => "admission closed (shutdown)",
+            RejectReason::Invalid => "invalid request",
+        };
+        f.write_str(msg)
+    }
+}
+
+/// A tenant's token-bucket quota: sustained `rate_per_s` jobs per second
+/// with bursts up to `burst` jobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quota {
+    /// Sustained refill rate, jobs per second.
+    pub rate_per_s: f64,
+    /// Bucket capacity: how many jobs may arrive back-to-back.
+    pub burst: f64,
+}
+
+impl Quota {
+    /// A quota of `rate_per_s` with a burst of the same size (the common
+    /// "N jobs per second" shape).
+    pub fn per_second(rate_per_s: f64) -> Quota {
+        Quota { rate_per_s, burst: rate_per_s.max(1.0) }
+    }
+}
+
+/// One tenant's token bucket. Time is passed in explicitly so refill is
+/// deterministic under test (construct instants, no sleeping).
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    quota: Quota,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A full bucket as of `now`.
+    pub fn new(quota: Quota, now: Instant) -> TokenBucket {
+        TokenBucket { quota, tokens: quota.burst.max(1.0), last: now }
+    }
+
+    /// Refill for the elapsed time, then try to take one token.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.quota.rate_per_s).min(self.quota.burst.max(1.0));
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Admission policy knobs. `Copy`, so it rides inside
+/// [`super::CoordinatorConfig`] like the other server knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Per-lane queue bounds, [`Lane`] index order. `0` = auto: derived
+    /// from the device count at startup (`devices × 8` — roughly one
+    /// device-queue depth of headroom per lane).
+    pub lane_capacity: [usize; LANES],
+    /// Deficit-round-robin drain weights, [`Lane`] index order: how many
+    /// jobs each lane may drain per round when all lanes are backlogged.
+    pub lane_weight: [u32; LANES],
+    /// Quota applied to tenants without an explicit
+    /// [`AdmissionController::set_quota`] override; `None` = unmetered.
+    pub default_quota: Option<Quota>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            lane_capacity: [0; LANES],
+            lane_weight: [8, 3, 1],
+            default_quota: None,
+        }
+    }
+}
+
+/// Per-lane admission counters. The accounting identities the serving
+/// tier maintains (and tests assert):
+///
+/// * `offered == admitted + shed` — enforced here, per lane;
+/// * `admitted == completed + failed` — holds once every admitted job's
+///   [`super::server::ServedJob::recv`] has returned.
+#[derive(Default)]
+pub struct AdmissionCounters {
+    offered: [AtomicU64; LANES],
+    admitted: [AtomicU64; LANES],
+    shed: [AtomicU64; LANES],
+    shed_by_reason: [AtomicU64; REASONS],
+    completed: [AtomicU64; LANES],
+    failed: [AtomicU64; LANES],
+    /// EMA of observed service time, microseconds (0 = no samples yet —
+    /// deadline checks admit everything until the first completion).
+    est_service_us: AtomicU64,
+}
+
+impl AdmissionCounters {
+    fn note_offered(&self, lane: Lane) {
+        self.offered[lane.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_admitted(&self, lane: Lane) {
+        self.admitted[lane.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one shed decision (also usable by the server wrapper for
+    /// rejections it raises itself, e.g. [`RejectReason::Invalid`]).
+    pub fn note_shed(&self, lane: Lane, reason: RejectReason) {
+        self.shed[lane.index()].fetch_add(1, Ordering::Relaxed);
+        self.shed_by_reason[reason.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an offer the server wrapper refused before it reached the
+    /// controller (e.g. [`RejectReason::Invalid`]): counts both the offer
+    /// and the shed, so `offered == admitted + shed` still holds.
+    pub fn note_shed_offer(&self, lane: Lane, reason: RejectReason) {
+        self.note_offered(lane);
+        self.note_shed(lane, reason);
+    }
+
+    /// Record one admitted job finishing successfully.
+    pub fn note_completed(&self, lane: Lane) {
+        self.completed[lane.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one admitted job finishing with a delivered error.
+    pub fn note_failed(&self, lane: Lane) {
+        self.failed[lane.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one completed job's service time into the EMA the deadline
+    /// check estimates queueing delay with.
+    pub fn note_service_secs(&self, s: f64) {
+        let us = (s.max(0.0) * 1e6) as u64;
+        let old = self.est_service_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us.max(1) } else { (old * 4 + us) / 5 };
+        self.est_service_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// Current service-time estimate in seconds (0 before any sample).
+    pub fn est_service_secs(&self) -> f64 {
+        self.est_service_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Plain-data copy of every counter.
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        let load = |a: &[AtomicU64]| -> [u64; LANES] {
+            std::array::from_fn(|i| a[i].load(Ordering::Relaxed))
+        };
+        AdmissionSnapshot {
+            offered: load(&self.offered),
+            admitted: load(&self.admitted),
+            shed: load(&self.shed),
+            shed_by_reason: std::array::from_fn(|i| self.shed_by_reason[i].load(Ordering::Relaxed)),
+            completed: load(&self.completed),
+            failed: load(&self.failed),
+        }
+    }
+}
+
+/// Plain-data snapshot of [`AdmissionCounters`], [`Lane`] index order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionSnapshot {
+    /// Jobs offered per lane (every `offer` call).
+    pub offered: [u64; LANES],
+    /// Jobs admitted per lane.
+    pub admitted: [u64; LANES],
+    /// Jobs shed per lane.
+    pub shed: [u64; LANES],
+    /// Jobs shed per [`RejectReason`] (reason index order).
+    pub shed_by_reason: [u64; REASONS],
+    /// Admitted jobs that completed successfully, per lane.
+    pub completed: [u64; LANES],
+    /// Admitted jobs that finished with a delivered error, per lane.
+    pub failed: [u64; LANES],
+}
+
+impl AdmissionSnapshot {
+    /// Total offered across lanes.
+    pub fn offered_total(&self) -> u64 {
+        self.offered.iter().sum()
+    }
+
+    /// Total admitted across lanes.
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.iter().sum()
+    }
+
+    /// Total shed across lanes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    /// Total successful completions across lanes.
+    pub fn completed_total(&self) -> u64 {
+        self.completed.iter().sum()
+    }
+
+    /// Total delivered failures across lanes.
+    pub fn failed_total(&self) -> u64 {
+        self.failed.iter().sum()
+    }
+
+    /// Shed fraction of offered load for one lane (0 when none offered).
+    pub fn shed_rate(&self, lane: Lane) -> f64 {
+        let i = lane.index();
+        if self.offered[i] == 0 {
+            0.0
+        } else {
+            self.shed[i] as f64 / self.offered[i] as f64
+        }
+    }
+
+    /// JSON rendering (per-lane objects plus per-reason shed counts).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let mut lanes = Vec::with_capacity(LANES);
+        for lane in Lane::ALL {
+            let i = lane.index();
+            let mut l = Json::obj();
+            l.set("lane", lane.name())
+                .set("offered", self.offered[i])
+                .set("admitted", self.admitted[i])
+                .set("shed", self.shed[i])
+                .set("completed", self.completed[i])
+                .set("failed", self.failed[i])
+                .set("shed_rate", self.shed_rate(lane));
+            lanes.push(l);
+        }
+        let mut reasons = Json::obj();
+        for (r, count) in [
+            RejectReason::LaneFull,
+            RejectReason::QuotaExhausted,
+            RejectReason::DeadlineInfeasible,
+            RejectReason::Closed,
+            RejectReason::Invalid,
+        ]
+        .into_iter()
+        .zip(self.shed_by_reason)
+        {
+            reasons.set(r.name(), count);
+        }
+        j.set("lanes", Json::Arr(lanes)).set("shed_by_reason", reasons);
+        j
+    }
+}
+
+struct AdmissionState<T> {
+    queues: [VecDeque<T>; LANES],
+    /// Deficit-round-robin credits; a lane drains while it has credit,
+    /// a new round replenishes every lane to its weight.
+    credits: [u32; LANES],
+    /// Explicit per-tenant quota overrides (else the config default).
+    quotas: HashMap<u64, Quota>,
+    buckets: HashMap<u64, TokenBucket>,
+    closed: bool,
+}
+
+/// The admission controller: bounded per-lane queues in front of the
+/// dispatcher, drained weighted-fair. Generic over the queued payload so
+/// policy is unit-testable without a device in sight.
+///
+/// # Examples
+///
+/// ```
+/// use ifzkp::coordinator::admission::{
+///     AdmissionConfig, AdmissionController, Lane, TenantId,
+/// };
+///
+/// let ctl: AdmissionController<u64> =
+///     AdmissionController::new(AdmissionConfig::default(), 2);
+/// ctl.offer(TenantId(1), Lane::Interactive, None, 7).unwrap();
+/// assert_eq!(ctl.try_drain(), Some(7));
+/// assert_eq!(ctl.try_drain(), None);
+/// ```
+pub struct AdmissionController<T> {
+    state: Mutex<AdmissionState<T>>,
+    available: Condvar,
+    caps: [usize; LANES],
+    weights: [u32; LANES],
+    default_quota: Option<Quota>,
+    n_devices: usize,
+    /// Shared per-lane counters (offered/admitted/shed/completed/failed).
+    pub counters: Arc<AdmissionCounters>,
+}
+
+impl<T> AdmissionController<T> {
+    /// Build a controller for a fleet of `n_devices`, resolving `0`
+    /// (auto) lane capacities to `n_devices × 8`.
+    pub fn new(cfg: AdmissionConfig, n_devices: usize) -> AdmissionController<T> {
+        let n = n_devices.max(1);
+        let resolve = |cap: usize| if cap == 0 { n * 8 } else { cap };
+        AdmissionController {
+            state: Mutex::new(AdmissionState {
+                queues: std::array::from_fn(|_| VecDeque::new()),
+                credits: [0; LANES],
+                quotas: HashMap::new(),
+                buckets: HashMap::new(),
+                closed: false,
+            }),
+            available: Condvar::new(),
+            caps: std::array::from_fn(|i| resolve(cfg.lane_capacity[i])),
+            weights: std::array::from_fn(|i| cfg.lane_weight[i].max(1)),
+            default_quota: cfg.default_quota,
+            n_devices: n,
+            counters: Arc::new(AdmissionCounters::default()),
+        }
+    }
+
+    /// The resolved queue bound of one lane.
+    pub fn capacity(&self, lane: Lane) -> usize {
+        self.caps[lane.index()]
+    }
+
+    /// Jobs currently queued in one lane.
+    pub fn queued(&self, lane: Lane) -> usize {
+        self.state.lock().unwrap().queues[lane.index()].len()
+    }
+
+    /// Install (or replace) a tenant's quota. Resets the tenant's bucket
+    /// to a full burst of the new quota.
+    pub fn set_quota(&self, tenant: TenantId, quota: Quota) {
+        let mut st = self.state.lock().unwrap();
+        st.quotas.insert(tenant.0, quota);
+        st.buckets.insert(tenant.0, TokenBucket::new(quota, Instant::now()));
+    }
+
+    /// Offer one job for admission. `Ok` queues it; `Err` is the typed
+    /// shed decision (the payload is dropped — with a reply-channel
+    /// payload the caller's receiver sees the rejection it already got
+    /// synchronously). See the module docs for the check order.
+    pub fn offer(
+        &self,
+        tenant: TenantId,
+        lane: Lane,
+        deadline: Option<Duration>,
+        item: T,
+    ) -> Result<(), RejectReason> {
+        let li = lane.index();
+        self.counters.note_offered(lane);
+        let mut st = self.state.lock().unwrap();
+        let verdict = self.check(&mut st, tenant, li, deadline);
+        if let Err(reason) = verdict {
+            self.counters.note_shed(lane, reason);
+            return Err(reason);
+        }
+        st.queues[li].push_back(item);
+        self.counters.note_admitted(lane);
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// The side-effect-ordered admission checks (token taken last).
+    fn check(
+        &self,
+        st: &mut AdmissionState<T>,
+        tenant: TenantId,
+        li: usize,
+        deadline: Option<Duration>,
+    ) -> Result<(), RejectReason> {
+        if st.closed {
+            return Err(RejectReason::Closed);
+        }
+        if st.queues[li].len() >= self.caps[li] {
+            return Err(RejectReason::LaneFull);
+        }
+        if let Some(d) = deadline {
+            let est = self.counters.est_service_secs();
+            if est > 0.0 {
+                // backlog the job waits behind: same and higher lanes,
+                // spread across the fleet, plus its own service time
+                let ahead: usize = st.queues[..=li].iter().map(VecDeque::len).sum();
+                let est_wait = ((ahead / self.n_devices) + 1) as f64 * est;
+                if est_wait > d.as_secs_f64() {
+                    return Err(RejectReason::DeadlineInfeasible);
+                }
+            }
+        }
+        let quota = st.quotas.get(&tenant.0).copied().or(self.default_quota);
+        if let Some(q) = quota {
+            let now = Instant::now();
+            let bucket = st.buckets.entry(tenant.0).or_insert_with(|| TokenBucket::new(q, now));
+            if !bucket.try_take(now) {
+                return Err(RejectReason::QuotaExhausted);
+            }
+        }
+        Ok(())
+    }
+
+    /// Weighted-fair pick: scan lanes in priority order, drain where
+    /// credit remains; when every backlogged lane is out of credit,
+    /// replenish all credits to the lane weights (a new DRR round).
+    fn pick(st: &mut AdmissionState<T>, weights: [u32; LANES]) -> Option<T> {
+        if st.queues.iter().all(VecDeque::is_empty) {
+            return None;
+        }
+        loop {
+            for i in 0..LANES {
+                if st.credits[i] > 0 && !st.queues[i].is_empty() {
+                    st.credits[i] -= 1;
+                    return st.queues[i].pop_front();
+                }
+            }
+            st.credits = weights;
+        }
+    }
+
+    /// Blocking drain: the next job in weighted-fair order, or `None`
+    /// once the controller is closed **and** every lane is empty (close
+    /// drains, it does not discard).
+    pub fn drain_next(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = Self::pick(&mut st, self.weights) {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.available.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking drain (tests, opportunistic pulls).
+    pub fn try_drain(&self) -> Option<T> {
+        Self::pick(&mut self.state.lock().unwrap(), self.weights)
+    }
+
+    /// Stop admitting; queued jobs still drain. Wakes all drainers so
+    /// they can observe the close.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(cfg: AdmissionConfig, devices: usize) -> AdmissionController<u64> {
+        AdmissionController::new(cfg, devices)
+    }
+
+    #[test]
+    fn lane_full_sheds_typed() {
+        let c = ctl(AdmissionConfig { lane_capacity: [2, 2, 2], ..Default::default() }, 1);
+        assert!(c.offer(TenantId(1), Lane::Batch, None, 1).is_ok());
+        assert!(c.offer(TenantId(1), Lane::Batch, None, 2).is_ok());
+        assert_eq!(c.offer(TenantId(1), Lane::Batch, None, 3), Err(RejectReason::LaneFull));
+        // other lanes are unaffected by one lane's backlog
+        assert!(c.offer(TenantId(1), Lane::Interactive, None, 4).is_ok());
+        let snap = c.counters.snapshot();
+        assert_eq!(snap.offered_total(), 4);
+        assert_eq!(snap.admitted_total(), 3);
+        assert_eq!(snap.shed, [0, 1, 0]);
+        assert_eq!(snap.shed_by_reason[RejectReason::LaneFull.index()], 1);
+        assert_eq!(snap.offered_total(), snap.admitted_total() + snap.shed_total());
+    }
+
+    #[test]
+    fn auto_capacity_scales_with_devices() {
+        let c1 = ctl(AdmissionConfig::default(), 1);
+        let c4 = ctl(AdmissionConfig::default(), 4);
+        assert_eq!(c1.capacity(Lane::Interactive), 8);
+        assert_eq!(c4.capacity(Lane::Interactive), 32);
+        // explicit capacities are taken verbatim
+        let c = ctl(AdmissionConfig { lane_capacity: [5, 6, 7], ..Default::default() }, 4);
+        assert_eq!(c.capacity(Lane::BestEffort), 7);
+    }
+
+    #[test]
+    fn token_bucket_refills_deterministically() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(Quota { rate_per_s: 1.0, burst: 2.0 }, t0);
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0), "burst of 2 is spent");
+        // one simulated second refills one token — no sleeping needed
+        assert!(b.try_take(t0 + Duration::from_secs(1)));
+        assert!(!b.try_take(t0 + Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn quota_exhaustion_sheds_per_tenant() {
+        let c = ctl(
+            AdmissionConfig {
+                default_quota: Some(Quota { rate_per_s: 0.0, burst: 2.0 }),
+                ..Default::default()
+            },
+            2,
+        );
+        assert!(c.offer(TenantId(7), Lane::Batch, None, 1).is_ok());
+        assert!(c.offer(TenantId(7), Lane::Batch, None, 2).is_ok());
+        assert_eq!(c.offer(TenantId(7), Lane::Batch, None, 3), Err(RejectReason::QuotaExhausted));
+        // buckets are per tenant: tenant 8 still has its own burst
+        assert!(c.offer(TenantId(8), Lane::Batch, None, 4).is_ok());
+        // an explicit override replaces the default (and refills)
+        c.set_quota(TenantId(7), Quota { rate_per_s: 0.0, burst: 1.0 });
+        assert!(c.offer(TenantId(7), Lane::Batch, None, 5).is_ok());
+        assert_eq!(c.offer(TenantId(7), Lane::Batch, None, 6), Err(RejectReason::QuotaExhausted));
+        let shed = c.counters.snapshot().shed_by_reason;
+        assert_eq!(shed[RejectReason::QuotaExhausted.index()], 2);
+    }
+
+    #[test]
+    fn weighted_fair_drain_prefers_higher_lanes() {
+        let c = ctl(AdmissionConfig { lane_weight: [2, 1, 1], ..Default::default() }, 4);
+        for i in 0..4u64 {
+            c.offer(TenantId(1), Lane::Interactive, None, 100 + i).unwrap();
+            c.offer(TenantId(1), Lane::Batch, None, 200 + i).unwrap();
+            c.offer(TenantId(1), Lane::BestEffort, None, 300 + i).unwrap();
+        }
+        let drained: Vec<u64> = std::iter::from_fn(|| c.try_drain()).collect();
+        assert_eq!(drained.len(), 12, "no job starves");
+        // each DRR round under saturation: 2 interactive, 1 batch, 1 b.e.
+        assert_eq!(&drained[..4], &[100, 101, 200, 300]);
+        assert_eq!(&drained[4..8], &[102, 103, 201, 301]);
+        // within a lane, FIFO order is preserved
+        let batch: Vec<u64> = drained.iter().copied().filter(|v| (200..300).contains(v)).collect();
+        assert_eq!(batch, vec![200, 201, 202, 203]);
+    }
+
+    #[test]
+    fn deadline_infeasible_sheds_against_backlog_estimate() {
+        let c = ctl(AdmissionConfig::default(), 1);
+        let ms = |n: u64| Some(Duration::from_millis(n));
+        // with no service samples yet, deadlines admit everything
+        assert!(c.offer(TenantId(1), Lane::Interactive, ms(1), 0).is_ok());
+        assert_eq!(c.try_drain(), Some(0));
+        c.counters.note_service_secs(0.1);
+        // empty queue: est wait = 1 × 100ms — a 50ms deadline is doomed
+        let rejected = c.offer(TenantId(1), Lane::Interactive, ms(50), 1);
+        assert_eq!(rejected, Err(RejectReason::DeadlineInfeasible));
+        assert!(c.offer(TenantId(1), Lane::Interactive, ms(1000), 2).is_ok());
+        // backlog in the same-and-higher lanes inflates the estimate
+        for i in 3..11u64 {
+            assert!(c.offer(TenantId(1), Lane::Batch, None, i).is_ok());
+        }
+        let rejected = c.offer(TenantId(1), Lane::Batch, ms(300), 99);
+        assert_eq!(rejected, Err(RejectReason::DeadlineInfeasible));
+        // a higher lane ignores lower-lane backlog in its estimate
+        assert!(c.offer(TenantId(1), Lane::Interactive, ms(250), 98).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_rejects() {
+        let c = ctl(AdmissionConfig::default(), 1);
+        c.offer(TenantId(1), Lane::Batch, None, 1).unwrap();
+        c.offer(TenantId(1), Lane::Interactive, None, 2).unwrap();
+        c.close();
+        assert_eq!(c.offer(TenantId(1), Lane::Batch, None, 3), Err(RejectReason::Closed));
+        // queued work still drains (higher lane first), then None
+        assert_eq!(c.drain_next(), Some(2));
+        assert_eq!(c.drain_next(), Some(1));
+        assert_eq!(c.drain_next(), None);
+    }
+
+    #[test]
+    fn blocking_drain_wakes_on_offer() {
+        let c = Arc::new(ctl(AdmissionConfig::default(), 1));
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.drain_next());
+        std::thread::sleep(Duration::from_millis(20));
+        c.offer(TenantId(1), Lane::Interactive, None, 42).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+}

@@ -1,0 +1,571 @@
+//! Deterministic open-loop traffic generator for the admission tier.
+//!
+//! Drives configurable tenant mixes against a fresh [`Coordinator`] fleet
+//! and reports the three serving curves the admission tier exists to
+//! shape: latency percentiles per lane, achieved-vs-offered throughput,
+//! and shed rate as offered load sweeps past fleet capacity.
+//!
+//! Open-loop means arrivals do **not** wait for completions: each tenant
+//! submits on a pre-drawn Poisson schedule regardless of how backed up
+//! the fleet is, which is what exposes overload behavior (a closed loop
+//! self-throttles and can never overrun capacity). Determinism comes
+//! from drawing every arrival schedule and scalar payload from a seeded
+//! [`Rng`] before the clock starts — two runs at the same seed offer an
+//! identical job sequence; only the measured timings differ.
+//!
+//! Rates are expressed relative to *calibrated* fleet capacity (one
+//! timed MSM per run, see [`calibrate`]), so a mix means the same thing
+//! on a laptop and in CI: `share = 0.8` at `multiplier = 3.0` is 2.4×
+//! whatever this host can actually drain.
+//!
+//! ```no_run
+//! use ifzkp::coordinator::loadgen::{self, LoadgenConfig};
+//!
+//! let report = loadgen::run(&LoadgenConfig::default(), &loadgen::default_mixes());
+//! println!("{}", report.to_json()); // the BENCH_serving.json payload
+//! ```
+//!
+//! The JSON schema is documented in the repo-root `BENCHMARKS.md`.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::admission::{AdmissionConfig, AdmissionSnapshot, Lane, Quota, TenantId, LANES};
+use super::devices::{DeviceDesc, PointSetRegistry};
+use super::server::{Coordinator, CoordinatorConfig, ServedJob};
+use crate::ec::{points, Bn254G1, CurveParams};
+use crate::msm::{self, MsmConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Distinct scalar payloads cycled across submissions (pre-generated so
+/// the submit loop never pays scalar-sampling cost on the clock).
+const SCALAR_POOL: usize = 8;
+
+/// One tenant's contribution to a traffic mix.
+#[derive(Clone, Debug)]
+pub struct TenantLoad {
+    /// Display name carried into the report.
+    pub name: String,
+    /// Tenant identity — the token-bucket quota key.
+    pub tenant: TenantId,
+    /// Lane this tenant submits into.
+    pub lane: Lane,
+    /// Offered arrival rate at multiplier 1.0, as a fraction of the
+    /// calibrated fleet capacity (shares across a mix may sum past 1.0 —
+    /// that *is* the overload scenario).
+    pub share: f64,
+    /// Per-job deadline as a multiple of the calibrated per-job service
+    /// time (`None` = no deadline, never shed as infeasible).
+    pub deadline_service_mult: Option<f64>,
+    /// Token-bucket quota rate as a fraction of fleet capacity
+    /// (`None` = unmetered).
+    pub quota_capacity_share: Option<f64>,
+}
+
+/// A named set of tenants driven together against one coordinator.
+#[derive(Clone, Debug)]
+pub struct TenantMix {
+    /// Mix name carried into the report.
+    pub name: String,
+    /// The tenants generating load.
+    pub tenants: Vec<TenantLoad>,
+}
+
+impl TenantMix {
+    /// A balanced production-shaped mix: deadline-bound interactive
+    /// traffic over a batch backbone with a best-effort trickle. Shares
+    /// sum to 1.0, so `multiplier` is the fleet-relative offered load.
+    pub fn steady_mixed() -> TenantMix {
+        TenantMix {
+            name: "steady-mixed".into(),
+            tenants: vec![
+                TenantLoad {
+                    name: "wallet".into(),
+                    tenant: TenantId(1),
+                    lane: Lane::Interactive,
+                    share: 0.3,
+                    deadline_service_mult: Some(40.0),
+                    quota_capacity_share: None,
+                },
+                TenantLoad {
+                    name: "rollup".into(),
+                    tenant: TenantId(2),
+                    lane: Lane::Batch,
+                    share: 0.5,
+                    deadline_service_mult: None,
+                    quota_capacity_share: None,
+                },
+                TenantLoad {
+                    name: "indexer".into(),
+                    tenant: TenantId(3),
+                    lane: Lane::BestEffort,
+                    share: 0.2,
+                    deadline_service_mult: None,
+                    quota_capacity_share: None,
+                },
+            ],
+        }
+    }
+
+    /// An adversarial mix: a quota-capped best-effort tenant flooding at
+    /// 4× its entitlement while a deadline-bound interactive tenant
+    /// rides alongside. The acceptance shape: best-effort sheds (quota
+    /// plus lane bounds), interactive p99 stays near its deadline.
+    pub fn besteffort_flood() -> TenantMix {
+        TenantMix {
+            name: "besteffort-flood".into(),
+            tenants: vec![
+                TenantLoad {
+                    name: "wallet".into(),
+                    tenant: TenantId(11),
+                    lane: Lane::Interactive,
+                    share: 0.2,
+                    deadline_service_mult: Some(30.0),
+                    quota_capacity_share: None,
+                },
+                TenantLoad {
+                    name: "crawler".into(),
+                    tenant: TenantId(12),
+                    lane: Lane::BestEffort,
+                    share: 0.8,
+                    deadline_service_mult: None,
+                    quota_capacity_share: Some(0.4),
+                },
+            ],
+        }
+    }
+}
+
+/// The two built-in mixes every `serve --load` run sweeps.
+pub fn default_mixes() -> Vec<TenantMix> {
+    vec![TenantMix::steady_mixed(), TenantMix::besteffort_flood()]
+}
+
+/// Generator configuration (one sweep = every mix × every multiplier).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Points per MSM job.
+    pub msm_size: usize,
+    /// Fleet width: this many single-threaded native CPU devices.
+    pub devices: usize,
+    /// Open-loop generation window per run, in seconds (completions are
+    /// still drained to the end after the window closes).
+    pub duration_s: f64,
+    /// Offered-load multipliers swept per mix; 1.0 ≡ calibrated fleet
+    /// capacity.
+    pub multipliers: Vec<f64>,
+    /// Root seed for arrival schedules and scalar payloads.
+    pub seed: u64,
+    /// Admission tier configuration applied to each run's coordinator.
+    pub admission: AdmissionConfig,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            msm_size: 512,
+            devices: 2,
+            duration_s: 1.0,
+            multipliers: vec![0.5, 1.0, 2.0, 4.0],
+            seed: 0x1f2e_3d4c,
+            admission: AdmissionConfig::default(),
+        }
+    }
+}
+
+/// Per-lane outcome of one run: admission counters plus exact latency
+/// percentiles over the successful completions.
+#[derive(Clone, Debug)]
+pub struct LaneStats {
+    /// Which lane.
+    pub lane: Lane,
+    /// Jobs offered into this lane.
+    pub offered: u64,
+    /// Jobs admitted.
+    pub admitted: u64,
+    /// Jobs shed at admit time.
+    pub shed: u64,
+    /// Admitted jobs that completed successfully.
+    pub completed: u64,
+    /// Admitted jobs that finished with a delivered error.
+    pub failed: u64,
+    /// `shed / offered` (0 when nothing was offered).
+    pub shed_rate: f64,
+    /// Mean submit→reply latency over completions, seconds.
+    pub mean_s: f64,
+    /// Median latency, seconds.
+    pub p50_s: f64,
+    /// 95th-percentile latency, seconds.
+    pub p95_s: f64,
+    /// 99th-percentile latency, seconds.
+    pub p99_s: f64,
+}
+
+/// One (mix, multiplier) run against a fresh coordinator.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    /// Offered-load multiplier this run was driven at.
+    pub multiplier: f64,
+    /// Offered arrival rate actually realized, jobs/s.
+    pub offered_jobs_per_s: f64,
+    /// Completions per second of generation window (the drain tail after
+    /// the window counts toward the numerator, so this saturates at
+    /// slightly above fleet capacity rather than below it).
+    pub achieved_jobs_per_s: f64,
+    /// Overall `shed / offered` across lanes.
+    pub shed_rate: f64,
+    /// Per-lane counters and latency percentiles, [`Lane::ALL`] order.
+    pub lanes: Vec<LaneStats>,
+    /// Raw admission counters (includes per-reason shed counts).
+    pub snapshot: AdmissionSnapshot,
+    /// Busy fraction per device over the run.
+    pub device_utilization: Vec<f64>,
+}
+
+/// All runs of one mix across the multiplier sweep.
+#[derive(Clone, Debug)]
+pub struct MixStats {
+    /// Mix name.
+    pub mix: String,
+    /// One entry per multiplier, in sweep order.
+    pub runs: Vec<RunStats>,
+}
+
+/// A full sweep: the `BENCH_serving.json` payload in struct form.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    /// Points per MSM job.
+    pub msm_size: usize,
+    /// Fleet width the sweep ran with.
+    pub devices: usize,
+    /// Generation window per run, seconds.
+    pub duration_s: f64,
+    /// Root seed the sweep ran with.
+    pub seed: u64,
+    /// Calibrated single-device per-job service time, seconds.
+    pub calibrated_job_s: f64,
+    /// Calibrated aggregate fleet capacity, jobs/s (`devices / job_s`).
+    pub capacity_jobs_per_s: f64,
+    /// One entry per mix.
+    pub mixes: Vec<MixStats>,
+}
+
+impl ServingReport {
+    /// Render the report in the `BENCH_serving.json` schema
+    /// (see BENCHMARKS.md).
+    pub fn to_json(&self) -> Json {
+        let mut config = Json::obj();
+        config
+            .set("msm_size", self.msm_size)
+            .set("devices", self.devices)
+            .set("duration_s", self.duration_s)
+            .set("seed", self.seed)
+            .set("calibrated_job_s", self.calibrated_job_s)
+            .set("capacity_jobs_per_s", self.capacity_jobs_per_s);
+        let mut mixes = Vec::with_capacity(self.mixes.len());
+        for mix in &self.mixes {
+            let mut runs = Vec::with_capacity(mix.runs.len());
+            for run in &mix.runs {
+                let mut lanes = Vec::with_capacity(run.lanes.len());
+                for l in &run.lanes {
+                    let mut lj = Json::obj();
+                    lj.set("lane", l.lane.name())
+                        .set("offered", l.offered)
+                        .set("admitted", l.admitted)
+                        .set("shed", l.shed)
+                        .set("completed", l.completed)
+                        .set("failed", l.failed)
+                        .set("shed_rate", l.shed_rate)
+                        .set("mean_s", l.mean_s)
+                        .set("p50_s", l.p50_s)
+                        .set("p95_s", l.p95_s)
+                        .set("p99_s", l.p99_s);
+                    lanes.push(lj);
+                }
+                let mut rj = Json::obj();
+                rj.set("offered_multiplier", run.multiplier)
+                    .set("offered_jobs_per_s", run.offered_jobs_per_s)
+                    .set("achieved_jobs_per_s", run.achieved_jobs_per_s)
+                    .set("shed_rate", run.shed_rate)
+                    .set("lanes", lanes)
+                    .set("admission", run.snapshot.to_json())
+                    .set("device_utilization", run.device_utilization.clone());
+                runs.push(rj);
+            }
+            let mut mj = Json::obj();
+            mj.set("mix", mix.name.as_str()).set("runs", runs);
+            mixes.push(mj);
+        }
+        let mut j = Json::obj();
+        j.set("bench", "serving").set("config", config).set("mixes", mixes);
+        j
+    }
+}
+
+/// Estimate the per-job service time (best-of-3 timed MSMs on one
+/// thread — the same plan a `DeviceDesc::native(1)` worker runs) and
+/// from it the fleet's aggregate capacity in jobs/s.
+pub fn calibrate(msm_size: usize, devices: usize) -> (f64, f64) {
+    let w = points::workload::<Bn254G1>(msm_size, 7);
+    let cfg = MsmConfig::default();
+    std::hint::black_box(msm::parallel::msm(&w.points, &w.scalars, &cfg, 1)); // warm-up
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        std::hint::black_box(msm::parallel::msm(&w.points, &w.scalars, &cfg, 1));
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    let per_job = best.max(1e-6);
+    (per_job, devices as f64 / per_job)
+}
+
+/// Draw a Poisson arrival schedule: exponential inter-arrival gaps at
+/// `rate` jobs/s until `duration_s` is exhausted. `rng.f64()` is in
+/// `[0, 1)`, so `1 - u` never hits the log singularity.
+fn arrival_times(rng: &mut Rng, rate: f64, duration_s: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    if rate <= 0.0 {
+        return out;
+    }
+    let mut t = 0.0;
+    loop {
+        let u = rng.f64();
+        t += -(1.0 - u).ln() / rate;
+        if t >= duration_s {
+            break;
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Exact percentile of a sorted sample (nearest-rank; 0 when empty).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Drive one (mix, multiplier) run against a fresh fleet. A new
+/// coordinator per run means no queue state or service-time EMA leaks
+/// across sweep points.
+fn run_one(
+    cfg: &LoadgenConfig,
+    mix: &TenantMix,
+    multiplier: f64,
+    per_job_s: f64,
+    capacity: f64,
+) -> RunStats {
+    let mut registry = PointSetRegistry::<Bn254G1>::new();
+    let ps = registry.register(points::generate_points_walk::<Bn254G1>(cfg.msm_size, 11));
+    let fleet: Vec<DeviceDesc<Bn254G1>> =
+        (0..cfg.devices.max(1)).map(|_| DeviceDesc::<Bn254G1>::native(1)).collect();
+    let coord = Coordinator::start(
+        CoordinatorConfig { admission: cfg.admission, ..Default::default() },
+        fleet,
+        registry,
+    );
+    for t in &mix.tenants {
+        if let Some(share) = t.quota_capacity_share {
+            coord.set_tenant_quota(t.tenant, Quota::per_second(share * capacity));
+        }
+    }
+
+    // Pre-draw the whole arrival schedule: one forked stream per tenant
+    // (keyed by tenant id, so adding a tenant never perturbs another's
+    // schedule), merged into one time-ordered event list.
+    let mut root = Rng::new(cfg.seed);
+    let mut events: Vec<(f64, usize)> = Vec::new();
+    for (ti, t) in mix.tenants.iter().enumerate() {
+        let rate = t.share * capacity * multiplier;
+        let mut stream = root.fork(t.tenant.0.wrapping_add(1));
+        for at in arrival_times(&mut stream, rate, cfg.duration_s) {
+            events.push((at, ti));
+        }
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    let mut payloads = Vec::with_capacity(SCALAR_POOL);
+    for i in 0..SCALAR_POOL {
+        let bits = Bn254G1::SCALAR_BITS.min(256);
+        payloads.push(Arc::new(points::generate_scalars(
+            cfg.msm_size,
+            bits,
+            cfg.seed.wrapping_add(0x5ca1a5 + i as u64),
+        )));
+    }
+
+    // Completions are collected off-thread so the submit loop stays
+    // open-loop AND the admission tier's service-time estimator (fed by
+    // `ServedJob::recv`) updates live — that estimator is what paces
+    // the pump and lets backlogs form in the lanes under overload.
+    let (job_tx, job_rx) = mpsc::channel::<ServedJob<Bn254G1>>();
+    let collector = thread::spawn(move || {
+        let mut lat: [Vec<f64>; LANES] = std::array::from_fn(|_| Vec::new());
+        while let Ok(job) = job_rx.recv() {
+            let lane = job.lane();
+            if let Ok(res) = job.recv() {
+                if res.error.is_none() {
+                    lat[lane.index()].push(res.service_s);
+                }
+            }
+        }
+        lat
+    });
+
+    let start = Instant::now();
+    for (i, &(at, ti)) in events.iter().enumerate() {
+        let target = Duration::from_secs_f64(at);
+        let elapsed = start.elapsed();
+        if target > elapsed {
+            thread::sleep(target - elapsed);
+        }
+        let t = &mix.tenants[ti];
+        let deadline = t.deadline_service_mult.map(|m| Duration::from_secs_f64(m * per_job_s));
+        let scalars = payloads[i % payloads.len()].clone();
+        // Sheds are booked by the admission tier itself; only admitted
+        // jobs travel to the collector.
+        if let Ok(job) = coord.submit_admitted(t.tenant, t.lane, deadline, ps, scalars) {
+            let _ = job_tx.send(job);
+        }
+    }
+    drop(job_tx);
+    let mut lat = collector.join().expect("loadgen collector panicked");
+
+    let snapshot = coord.admission_snapshot();
+    let device_utilization = coord.device_metrics.utilization();
+    coord.shutdown();
+
+    let mut lanes = Vec::with_capacity(LANES);
+    for lane in Lane::ALL {
+        let i = lane.index();
+        let mut v = std::mem::take(&mut lat[i]);
+        v.sort_by(f64::total_cmp);
+        let mean = if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+        lanes.push(LaneStats {
+            lane,
+            offered: snapshot.offered[i],
+            admitted: snapshot.admitted[i],
+            shed: snapshot.shed[i],
+            completed: snapshot.completed[i],
+            failed: snapshot.failed[i],
+            shed_rate: snapshot.shed_rate(lane),
+            mean_s: mean,
+            p50_s: percentile(&v, 0.50),
+            p95_s: percentile(&v, 0.95),
+            p99_s: percentile(&v, 0.99),
+        });
+    }
+    let offered_total = snapshot.offered_total();
+    RunStats {
+        multiplier,
+        offered_jobs_per_s: offered_total as f64 / cfg.duration_s,
+        achieved_jobs_per_s: snapshot.completed_total() as f64 / cfg.duration_s,
+        shed_rate: if offered_total == 0 {
+            0.0
+        } else {
+            snapshot.shed_total() as f64 / offered_total as f64
+        },
+        lanes,
+        snapshot,
+        device_utilization,
+    }
+}
+
+/// Run the full sweep: calibrate once, then every mix × multiplier on a
+/// fresh coordinator each, collecting the [`ServingReport`].
+pub fn run(cfg: &LoadgenConfig, mixes: &[TenantMix]) -> ServingReport {
+    let (per_job_s, capacity) = calibrate(cfg.msm_size, cfg.devices.max(1));
+    let mut out = Vec::with_capacity(mixes.len());
+    for mix in mixes {
+        let mut runs = Vec::with_capacity(cfg.multipliers.len());
+        for &m in &cfg.multipliers {
+            runs.push(run_one(cfg, mix, m, per_job_s, capacity));
+        }
+        out.push(MixStats { mix: mix.name.clone(), runs });
+    }
+    ServingReport {
+        msm_size: cfg.msm_size,
+        devices: cfg.devices.max(1),
+        duration_s: cfg.duration_s,
+        seed: cfg.seed,
+        calibrated_job_s: per_job_s,
+        capacity_jobs_per_s: capacity,
+        mixes: out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A short two-point sweep over both built-in mixes: counters must
+    /// reconcile exactly, and under 3× overload the flood mix must shed
+    /// best-effort work while interactive jobs still complete.
+    #[test]
+    fn sweep_reconciles_and_sheds_besteffort_under_overload() {
+        let cfg = LoadgenConfig {
+            msm_size: 256,
+            devices: 1,
+            duration_s: 0.25,
+            multipliers: vec![0.5, 3.0],
+            seed: 42,
+            admission: AdmissionConfig::default(),
+        };
+        let report = run(&cfg, &default_mixes());
+        assert_eq!(report.mixes.len(), 2);
+        for mix in &report.mixes {
+            assert_eq!(mix.runs.len(), 2);
+            for r in &mix.runs {
+                let s = &r.snapshot;
+                assert_eq!(s.offered_total(), s.admitted_total() + s.shed_total());
+                assert_eq!(s.admitted_total(), s.completed_total() + s.failed_total());
+            }
+        }
+        let flood = &report.mixes[1];
+        assert_eq!(flood.mix, "besteffort-flood");
+        let over = &flood.runs[1];
+        let be = &over.lanes[Lane::BestEffort.index()];
+        let ia = &over.lanes[Lane::Interactive.index()];
+        assert!(be.shed > 0, "best-effort must shed under 3x overload: {over:?}");
+        assert!(ia.completed > 0, "interactive must still complete: {over:?}");
+
+        let j = report.to_json();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("serving"));
+        assert_eq!(j.get("mixes").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+    }
+
+    /// The percentile helper is nearest-rank exact.
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    /// Arrival schedules are deterministic in the seed and scale with
+    /// the rate.
+    #[test]
+    fn arrivals_deterministic_and_rate_scaled() {
+        let mut a = Rng::new(9).fork(1);
+        let mut b = Rng::new(9).fork(1);
+        let xs = arrival_times(&mut a, 1000.0, 1.0);
+        let ys = arrival_times(&mut b, 1000.0, 1.0);
+        assert_eq!(xs, ys);
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "arrivals must be monotone");
+        // ~1000 expected; Poisson stddev ~32 — 5 sigma bounds.
+        assert!((840..1160).contains(&xs.len()), "got {} arrivals", xs.len());
+        let mut c = Rng::new(9).fork(2);
+        let slow = arrival_times(&mut c, 10.0, 1.0);
+        assert!(slow.len() < xs.len() / 10);
+    }
+}

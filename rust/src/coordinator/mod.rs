@@ -24,7 +24,15 @@
 //!   with per-shard retry on device failure;
 //! * [`server`] — bounded-queue thread server with backpressure and
 //!   latency metrics ([`metrics`] — including per-device utilization
-//!   lanes and shard-skew counters).
+//!   lanes and shard-skew counters);
+//! * [`admission`] — the serving tier's front door: bounded priority
+//!   lanes (interactive / batch / best-effort), per-tenant token-bucket
+//!   quotas and deadline-aware shedding, drained weighted-fair into the
+//!   dispatcher ([`Coordinator::submit_admitted`]);
+//! * [`loadgen`] — a deterministic open-loop traffic generator that
+//!   drives tenant mixes against a coordinator and reports
+//!   latency-percentile / throughput / shed-rate curves
+//!   (`BENCH_serving.json` — schema in the repo-root BENCHMARKS.md).
 //!
 //! The coordinator is generic over the curve (one instance per curve —
 //! matching the hardware reality of one bitstream per curve).
@@ -37,9 +45,12 @@ pub mod devices;
 pub mod shard;
 pub mod server;
 pub mod metrics;
+pub mod admission;
+pub mod loadgen;
 
+pub use admission::{AdmissionConfig, AdmissionSnapshot, Lane, Quota, RejectReason, TenantId};
 pub use devices::{DeviceBackend, DeviceDesc, PointSetRegistry, RunningDevice};
 pub use metrics::{CounterSnapshot, Counters, DeviceMetrics};
-pub use request::{JobId, JobResult, MsmJob, PointSetId, ShardAssignment};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use request::{JobError, JobId, JobResult, MsmJob, PointSetId, ShardAssignment};
+pub use server::{Coordinator, CoordinatorConfig, ServedJob};
 pub use shard::{PoolDevice, ShardGroup, ShardPolicy, ShardPool};

@@ -1,6 +1,8 @@
 //! Job types flowing through the coordinator.
 
+use super::admission::{Lane, RejectReason};
 use crate::ec::ScalarLimbs;
+use std::fmt;
 use std::sync::Arc;
 
 /// Identifies a registered base-point set (the MSM's constant input — one
@@ -41,6 +43,49 @@ pub struct MsmJob {
     pub shard: Option<ShardAssignment>,
 }
 
+/// Typed failure of a served job — every way the coordinator can fail a
+/// job without dropping its reply channel. The `Display` impl preserves
+/// the legacy string messages (pre-typed-error logs and tests matched on
+/// substrings like `"failed atomically"`), so it is the only place error
+/// text is rendered.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// The executing device returned an error (message as formatted by
+    /// the device backend, e.g. an injected fault or an engine error).
+    DeviceFailed(String),
+    /// A shard group failed atomically: some shard exhausted its retry
+    /// budget (or the group could not be routed/assembled). The payload
+    /// is the detail; `Display` adds the historical
+    /// `"shard group failed atomically: "` prefix.
+    ShardExhausted(String),
+    /// Admission control refused the job at submit time.
+    Rejected {
+        /// The lane the job was offered to.
+        lane: Lane,
+        /// Why admission shed it.
+        reason: RejectReason,
+    },
+    /// No registered device's DDR can hold the job's point set.
+    TooLarge,
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::DeviceFailed(msg) => f.write_str(msg),
+            JobError::ShardExhausted(detail) => {
+                write!(f, "shard group failed atomically: {detail}")
+            }
+            JobError::Rejected { lane, reason } => {
+                write!(f, "admission rejected ({lane} lane): {reason}")
+            }
+            JobError::TooLarge => f.write_str("no device can hold the point set"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
 /// Result of a completed job. Device failures are **delivered**, not
 /// dropped: a worker whose `execute` errors sends a result with
 /// [`JobResult::error`] set (and `output` at the identity), so callers can
@@ -61,8 +106,8 @@ pub struct JobResult<P> {
     pub device: usize,
     /// Whether the point set had to be uploaded first (affinity miss).
     pub upload_miss: bool,
-    /// Device-failure message, `None` on success.
-    pub error: Option<String>,
+    /// The typed failure, `None` on success.
+    pub error: Option<JobError>,
 }
 
 impl<P> JobResult<P> {
@@ -70,11 +115,29 @@ impl<P> JobResult<P> {
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }
+
+    /// The rendered error message, if the job failed (legacy string view;
+    /// matches what `error.to_string()` produces).
+    pub fn error_message(&self) -> Option<String> {
+        self.error.as_ref().map(JobError::to_string)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn job_error_display_preserves_legacy_messages() {
+        let e = JobError::ShardExhausted("shard 1 has no untried device left".into());
+        assert!(e.to_string().contains("failed atomically"), "{e}");
+        assert_eq!(JobError::TooLarge.to_string(), "no device can hold the point set");
+        let e = JobError::DeviceFailed("injected device fault".into());
+        assert_eq!(e.to_string(), "injected device fault");
+        let e = JobError::Rejected { lane: Lane::BestEffort, reason: RejectReason::QuotaExhausted };
+        assert!(e.to_string().contains("best-effort"), "{e}");
+        assert!(e.to_string().contains("quota"), "{e}");
+    }
 
     #[test]
     fn ids_are_ordered_and_hashable() {

@@ -2,6 +2,8 @@
 //! worker threads — the process topology of a proving-farm MSM tier.
 //!
 //! ```text
+//!  submit_admitted() ──► [lanes: quota/deadline/bounds] ──► pump ─┐
+//!                          (admission — see super::admission)     │
 //!  submit() ─────bounded──► dispatcher ──route───► device queue ──► worker 0
 //!   (backpressure)           (batcher)                          └──► worker 1 …
 //!  submit_sharded() ──────►  split ► spread ──► shard per device ──► merge
@@ -21,11 +23,15 @@
 //! tried; when a shard runs out of devices the whole group fails
 //! atomically through [`JobResult::error`].
 
+use super::admission::{
+    AdmissionConfig, AdmissionController, AdmissionCounters, AdmissionSnapshot, Lane, Quota,
+    RejectReason, TenantId,
+};
 use super::batcher::{BatchPolicy, Batcher};
 use super::devices::{DeviceDesc, PointSetRegistry};
 use super::metrics::{Counters, DeviceMetrics, LatencyHistogram};
 use super::pointcache::{Admission, DeviceDdr};
-use super::request::{JobId, JobResult, MsmJob, PointSetId, ShardAssignment};
+use super::request::{JobError, JobId, JobResult, MsmJob, PointSetId, ShardAssignment};
 use super::router;
 use super::shard::{ShardGroup, ShardPolicy, ShardRetry};
 use crate::ec::{CurveParams, Jacobian, ScalarLimbs};
@@ -35,12 +41,17 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
-    /// Ingress queue bound (jobs) — the backpressure knob.
+    /// Ingress queue bound (jobs) — the backpressure knob. `0` (the
+    /// default) means *auto*: [`Coordinator::start`] derives the bound
+    /// from the registered fleet as `devices × 32` — one device keeps a
+    /// 32-deep runway, not the former fleet-blind 256. Set a nonzero
+    /// value to override (it is taken verbatim); the resolved bound is
+    /// readable via [`Coordinator::queue_capacity`].
     pub queue_capacity: usize,
     /// Same-point-set batching policy.
     pub batch: BatchPolicy,
@@ -51,14 +62,19 @@ pub struct CoordinatorConfig {
     /// (unsharded) batches instead budget per device, against each
     /// device's own `msm_cfg`.
     pub shard_cfg: MsmConfig,
+    /// Admission policy for the [`Coordinator::submit_admitted`] path:
+    /// per-lane queue bounds, drain weights, default tenant quota. Lane
+    /// capacities left at `0` auto-derive from the device count too.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            queue_capacity: 256,
+            queue_capacity: 0,
             batch: BatchPolicy::default(),
             shard_cfg: MsmConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -85,6 +101,12 @@ pub struct Coordinator<C: CurveParams> {
     ingress: Option<mpsc::SyncSender<Dispatch<C>>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// The admission tier in front of the ingress (lanes, quotas,
+    /// deadline shedding); drained into `ingress` by the pump thread.
+    admission: Arc<AdmissionController<Dispatch<C>>>,
+    pump: Option<std::thread::JoinHandle<()>>,
+    /// The resolved ingress bound (auto-derived when the config said 0).
+    queue_capacity: usize,
     /// Coordinator-wide counters (submits, completions, shard stats).
     pub counters: Arc<Counters>,
     /// End-to-end job latency histogram.
@@ -169,7 +191,24 @@ impl<C: CurveParams> DispatchCtx<C> {
                 upload_miss: miss,
             });
         } else {
+            // unroutable: no device DDR can hold the point set. Deliver a
+            // typed failure to every caller — before the typed-error
+            // redesign these replies were silently dropped and callers
+            // hung until shutdown.
             self.counters.rejected.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            for j in jobs {
+                if let Some(reply) = self.replies.take(j.id) {
+                    let _ = reply.send(JobResult {
+                        id: j.id,
+                        output: Jacobian::<C>::infinity(),
+                        service_s: j.submitted_at.elapsed().as_secs_f64(),
+                        device_s: 0.0,
+                        device: 0,
+                        upload_miss: false,
+                        error: Some(JobError::TooLarge),
+                    });
+                }
+            }
         }
     }
 
@@ -360,7 +399,7 @@ impl<C: CurveParams> Coordinator<C> {
                                             device_s: 0.0,
                                             device: idx,
                                             upload_miss: upload_miss && pos == 0,
-                                            error: Some(format!("{e:#}")),
+                                            error: Some(JobError::DeviceFailed(format!("{e:#}"))),
                                         });
                                     }
                                 }
@@ -413,8 +452,12 @@ impl<C: CurveParams> Coordinator<C> {
             }));
         }
 
-        // dispatcher thread
-        let (ingress, ingress_rx) = mpsc::sync_channel::<Dispatch<C>>(cfg.queue_capacity);
+        // dispatcher thread. 0 = auto: derive the ingress bound from the
+        // fleet size (a 1-device pool keeps a 32-deep runway, not the
+        // former fleet-blind 256).
+        let queue_capacity =
+            if cfg.queue_capacity == 0 { n_devices * 32 } else { cfg.queue_capacity };
+        let (ingress, ingress_rx) = mpsc::sync_channel::<Dispatch<C>>(queue_capacity);
         let dispatcher = {
             let mut ctx = DispatchCtx {
                 registry: registry.clone(),
@@ -487,10 +530,43 @@ impl<C: CurveParams> Coordinator<C> {
             })
         };
 
+        // admission tier: lanes drain weighted-fair into the bounded
+        // ingress via the pump thread (the blocking send is the natural
+        // backpressure between the two queues)
+        let admission: Arc<AdmissionController<Dispatch<C>>> =
+            Arc::new(AdmissionController::new(cfg.admission, n_devices));
+        let pump = {
+            let admission = admission.clone();
+            let ingress_tx = ingress.clone();
+            std::thread::spawn(move || {
+                while let Some(d) = admission.drain_next() {
+                    if ingress_tx.send(d).is_err() {
+                        break; // dispatcher gone — nothing left to feed
+                    }
+                    // Self-clocked release: pace drains at the fleet's
+                    // estimated service rate so sustained overload backs
+                    // up in the lanes — where shedding and weighted-fair
+                    // policy live — instead of the FIFO batcher behind
+                    // the ingress (which is unbounded and lane-blind).
+                    // The estimate is 0 until the first completion is
+                    // booked via `ServedJob::recv`; until then drains are
+                    // unpaced, which only affects the warm-up burst.
+                    let est = admission.counters.est_service_secs();
+                    if est > 0.0 {
+                        let pace = (est / n_devices as f64).min(0.05);
+                        std::thread::sleep(Duration::from_secs_f64(pace));
+                    }
+                }
+            })
+        };
+
         Coordinator {
             ingress: Some(ingress),
             dispatcher: Some(dispatcher),
             workers,
+            admission,
+            pump: Some(pump),
+            queue_capacity,
             counters,
             latency,
             device_metrics,
@@ -505,6 +581,31 @@ impl<C: CurveParams> Coordinator<C> {
     /// Registered device count.
     pub fn device_count(&self) -> usize {
         self.n_devices
+    }
+
+    /// The resolved ingress queue bound (after the `0 = auto` derivation
+    /// in [`Coordinator::start`]).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// The resolved bound of one admission lane (after its own `0 = auto`
+    /// derivation).
+    pub fn lane_capacity(&self, lane: Lane) -> usize {
+        self.admission.capacity(lane)
+    }
+
+    /// Install (or replace) a tenant's token-bucket quota on the
+    /// admission tier. Tenants without one use
+    /// [`AdmissionConfig::default_quota`] (unmetered when that is `None`).
+    pub fn set_tenant_quota(&self, tenant: TenantId, quota: Quota) {
+        self.admission.set_quota(tenant, quota);
+    }
+
+    /// Plain-data copy of the admission counters (offered/admitted/shed
+    /// per lane and per reason, completions, failures).
+    pub fn admission_snapshot(&self) -> AdmissionSnapshot {
+        self.admission.counters.snapshot()
     }
 
     fn validate(&self, point_set: PointSetId, scalars: &[ScalarLimbs]) -> Result<usize> {
@@ -582,8 +683,93 @@ impl<C: CurveParams> Coordinator<C> {
         Ok((id, reply_rx))
     }
 
+    /// Submit an MSM through the admission tier: the job is checked
+    /// against `lane`'s queue bound, `tenant`'s token bucket and (when
+    /// `deadline` is given) the backlog-based wait estimate **now**, and
+    /// either queued — [`ServedJob`] resolves to exactly one
+    /// [`JobResult`] — or refused with a typed
+    /// [`JobError::Rejected`]. A refused job never occupies queue space:
+    /// doomed work is shed at the door, not after it rotted in line.
+    pub fn submit_admitted(
+        &self,
+        tenant: TenantId,
+        lane: Lane,
+        deadline: Option<Duration>,
+        point_set: PointSetId,
+        scalars: Arc<Vec<ScalarLimbs>>,
+    ) -> std::result::Result<ServedJob<C>, JobError> {
+        if self.validate(point_set, &scalars).is_err() {
+            self.admission.counters.note_shed_offer(lane, RejectReason::Invalid);
+            return Err(JobError::Rejected { lane, reason: RejectReason::Invalid });
+        }
+        let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let dispatch = Dispatch::Single(SingleDispatch {
+            job: MsmJob { id, point_set, scalars, submitted_at: Instant::now(), shard: None },
+            reply: reply_tx,
+        });
+        self.admission
+            .offer(tenant, lane, deadline, dispatch)
+            .map_err(|reason| JobError::Rejected { lane, reason })?;
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(ServedJob { id, lane, rx: reply_rx, counters: self.admission.counters.clone() })
+    }
+
+    /// [`Self::submit_admitted`] for the sharded path. The whole shard
+    /// group is **one** admission unit (one lane-queue entry, one token):
+    /// it is admitted or shed atomically, so admission control can never
+    /// split a group — the batcher/spread/merge machinery downstream
+    /// keeps its complete-or-fail guarantee untouched. With one device
+    /// this degrades to the plain admitted path, like
+    /// [`Self::submit_sharded`] does.
+    pub fn submit_sharded_admitted(
+        &self,
+        tenant: TenantId,
+        lane: Lane,
+        deadline: Option<Duration>,
+        point_set: PointSetId,
+        scalars: Arc<Vec<ScalarLimbs>>,
+        policy: ShardPolicy,
+    ) -> std::result::Result<ServedJob<C>, JobError> {
+        if self.n_devices == 1 {
+            return self.submit_admitted(tenant, lane, deadline, point_set, scalars);
+        }
+        let set_len = match self.validate(point_set, &scalars) {
+            Ok(n) => n,
+            Err(_) => {
+                self.admission.counters.note_shed_offer(lane, RejectReason::Invalid);
+                return Err(JobError::Rejected { lane, reason: RejectReason::Invalid });
+            }
+        };
+        let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let specs = policy.plan::<C>(set_len, &self.shard_cfg, self.n_devices);
+        let group = Arc::new(ShardGroup::new(
+            id,
+            point_set,
+            scalars,
+            specs,
+            self.shard_cfg,
+            self.n_devices as u32,
+            reply_tx,
+            self.retry_tx.clone(),
+        ));
+        self.admission
+            .offer(tenant, lane, deadline, Dispatch::Group(group))
+            .map_err(|reason| JobError::Rejected { lane, reason })?;
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(ServedJob { id, lane, rx: reply_rx, counters: self.admission.counters.clone() })
+    }
+
     /// Stop accepting work, drain in-flight batches, join all threads.
+    /// Order matters: close admission (queued lane work still drains),
+    /// join the pump (it exits once the lanes are dry and drops its
+    /// ingress handle), then drop ours so the dispatcher disconnects.
     pub fn shutdown(mut self) {
+        self.admission.close();
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
         drop(self.ingress.take()); // dispatcher's recv disconnects → drain
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -591,6 +777,51 @@ impl<C: CurveParams> Coordinator<C> {
         for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
+    }
+}
+
+/// A job accepted by the admission tier: resolves to exactly one
+/// [`JobResult`] via [`ServedJob::recv`], which also books the completion
+/// into the per-lane admission counters (so `admitted == completed +
+/// failed` reconciles once every admitted job has been received).
+pub struct ServedJob<C: CurveParams> {
+    id: JobId,
+    lane: Lane,
+    rx: mpsc::Receiver<JobResult<Jacobian<C>>>,
+    counters: Arc<AdmissionCounters>,
+}
+
+impl<C: CurveParams> ServedJob<C> {
+    /// The job's coordinator-wide id.
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// The lane the job was admitted on.
+    pub fn lane(&self) -> Lane {
+        self.lane
+    }
+
+    /// Wait for the job's one result, booking it into the lane counters
+    /// and folding its service time into the deadline estimator.
+    /// Consumes the handle — one job, one result, one booking. `Err`
+    /// means the coordinator shut down before serving the job.
+    ///
+    /// The estimator is fed `device_s` (pure execution time), not
+    /// `service_s` (submit→reply): end-to-end latency includes lane and
+    /// queue wait, and feeding that back into the pump's pacing and the
+    /// deadline feasibility check would make backlog inflate the very
+    /// estimate that throttles drainage — a positive feedback loop.
+    pub fn recv(self) -> std::result::Result<JobResult<Jacobian<C>>, mpsc::RecvError> {
+        let res = self.rx.recv()?;
+        if res.is_ok() {
+            self.counters.note_completed(self.lane);
+            let est = if res.device_s > 0.0 { res.device_s } else { res.service_s };
+            self.counters.note_service_secs(est);
+        } else {
+            self.counters.note_failed(self.lane);
+        }
+        Ok(res)
     }
 }
 

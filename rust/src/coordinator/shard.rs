@@ -27,7 +27,7 @@
 //! which callers already treat as "coordinator shut down".
 
 use super::metrics::{Counters, DeviceMetrics, LatencyHistogram};
-use super::request::{JobId, JobResult, PointSetId};
+use super::request::{JobError, JobId, JobResult, PointSetId};
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 use crate::fpga::{SabConfig, SabModel};
 use crate::msm::partial::{self, PartialMsm, ShardSpec};
@@ -241,8 +241,9 @@ impl<C: CurveParams> ShardGroup<C> {
         );
     }
 
-    /// Fail the group atomically: one error [`JobResult`] is delivered,
-    /// every not-yet-merged partial is discarded.
+    /// Fail the group atomically: one error [`JobResult`] carrying
+    /// [`JobError::ShardExhausted`] is delivered, every not-yet-merged
+    /// partial is discarded.
     pub fn fail_group(&self, err: &str, counters: &Counters) {
         {
             let mut st = self.state.lock().unwrap();
@@ -260,7 +261,7 @@ impl<C: CurveParams> ShardGroup<C> {
             device_s: 0.0,
             device: 0,
             upload_miss: false,
-            error: Some(format!("shard group failed atomically: {err}")),
+            error: Some(JobError::ShardExhausted(err.to_string())),
         });
     }
 }

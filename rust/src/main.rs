@@ -5,6 +5,7 @@
 //! ifzkp msm     --curve bn254|bls12_381 --size N [--backend native|sim|engine] [--threads T] [--glv]
 //! ifzkp prove   --constraints N
 //! ifzkp serve   [--config serve.toml] [--jobs N] [--size N] [--devices N] [--sharded chunk|window]
+//! ifzkp serve   --load [--size N] [--devices N] [--duration S] [--json PATH]  # open-loop serving bench
 //! ifzkp sim     --curve ... [--size N] [--scaling S]
 //! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|glv|pointcache|whatif|ntt|all] [--cpu-measure N]
 //! ifzkp figures [--id 4|5|6|7|8|all]
@@ -152,14 +153,19 @@ fn cmd_msm(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.get("load", "") == "true" {
+        return cmd_serve_load(args);
+    }
     let jobs = args.get_usize("jobs", 32);
     let size = args.get_usize("size", 2048);
     let cfg_path = args.get("config", "");
-    let mut queue_capacity = 256usize;
+    // 0 = auto: the coordinator derives the ingress bound from the
+    // device count (devices × 32) instead of a fleet-blind constant.
+    let mut queue_capacity = 0usize;
     if !cfg_path.is_empty() {
         let cfg = ifzkp::config::load(std::path::Path::new(&cfg_path))
             .map_err(|e| anyhow::anyhow!(e))?;
-        queue_capacity = cfg.get_int("serve", "queue_capacity", 256) as usize;
+        queue_capacity = cfg.get_int("serve", "queue_capacity", 0) as usize;
     }
     // --sharded chunk|window splits every job across the device set;
     // --devices N controls the simulated fleet size (default 2).
@@ -232,6 +238,69 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     coord.shutdown();
+    Ok(())
+}
+
+/// `serve --load`: the open-loop serving benchmark. Sweeps the built-in
+/// tenant mixes across offered-load multipliers and writes the
+/// `BENCH_serving.json` artifact (schema in BENCHMARKS.md).
+/// `IFZKP_BENCH_QUICK=1` shrinks the sweep to CI-smoke scale.
+fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
+    use ifzkp::coordinator::loadgen::{self, LoadgenConfig};
+    let quick = std::env::var("IFZKP_BENCH_QUICK").is_ok();
+    let defaults = LoadgenConfig::default();
+    let cfg = LoadgenConfig {
+        msm_size: args.get_usize("size", if quick { 256 } else { defaults.msm_size }),
+        devices: args.get_usize("devices", defaults.devices),
+        duration_s: args
+            .get("duration", "")
+            .parse()
+            .unwrap_or(if quick { 0.3 } else { defaults.duration_s }),
+        multipliers: if quick { vec![0.5, 3.0] } else { defaults.multipliers.clone() },
+        ..defaults
+    };
+    let json_path = args.get("json", "BENCH_serving.json");
+    println!(
+        "serving bench: {} points/job, {} devices, {:.2}s window, multipliers {:?}",
+        human_count(cfg.msm_size as u64),
+        cfg.devices,
+        cfg.duration_s,
+        cfg.multipliers
+    );
+    let report = loadgen::run(&cfg, &loadgen::default_mixes());
+    println!(
+        "calibrated {}/job — fleet capacity {:.0} jobs/s",
+        human_secs(report.calibrated_job_s),
+        report.capacity_jobs_per_s
+    );
+    for mix in &report.mixes {
+        println!("mix {}:", mix.mix);
+        for run in &mix.runs {
+            println!(
+                "  x{:<4} offered {:>6.0}/s  achieved {:>6.0}/s  shed {:>3.0}%",
+                run.multiplier,
+                run.offered_jobs_per_s,
+                run.achieved_jobs_per_s,
+                100.0 * run.shed_rate
+            );
+            for lane in &run.lanes {
+                if lane.offered == 0 {
+                    continue;
+                }
+                println!(
+                    "    {:<12} p50 {:>9}  p95 {:>9}  p99 {:>9}  shed {:>3.0}%",
+                    lane.lane.name(),
+                    human_secs(lane.p50_s),
+                    human_secs(lane.p95_s),
+                    human_secs(lane.p99_s),
+                    100.0 * lane.shed_rate
+                );
+            }
+        }
+    }
+    std::fs::write(&json_path, report.to_json().to_string())
+        .map_err(|e| anyhow::anyhow!("writing {json_path}: {e}"))?;
+    println!("wrote {json_path}");
     Ok(())
 }
 

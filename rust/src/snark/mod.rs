@@ -22,6 +22,6 @@ pub mod qap;
 pub mod setup;
 pub mod prover;
 
-pub use prover::{ProfileBreakdown, Proof, Prover};
+pub use prover::{ProfileBreakdown, Proof, Prover, ProverConfig};
 pub use qap::NttPhases;
 pub use r1cs::ConstraintSystem;

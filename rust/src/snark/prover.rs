@@ -49,7 +49,7 @@ pub struct ProfileBreakdown {
 }
 
 /// Fixed-base precompute tables over the five CRS query vectors (the
-/// prover's SRS point cache — see [`Prover::with_point_cache`]).
+/// prover's SRS point cache — see [`ProverConfig::point_cache`]).
 struct QueryTables<G1: CurveParams, G2: CurveParams> {
     a: msm::PrecompTable<G1>,
     b1: msm::PrecompTable<G1>,
@@ -58,18 +58,136 @@ struct QueryTables<G1: CurveParams, G2: CurveParams> {
     b2: msm::PrecompTable<G2>,
 }
 
+/// Everything configurable about a [`Prover`], in one declarative value
+/// consumed by [`Prover::with_config`].
+///
+/// [`Default`] is the Table I measurement rig: serial Pippenger, inline
+/// NTTs, no GLV, no tables, no pools — identical to [`Prover::new`].
+/// Builder methods refine it:
+///
+/// ```
+/// use ifzkp::ec::{Bn254G1, Bn254G2};
+/// use ifzkp::snark::prover::ProverConfig;
+///
+/// let cfg = ProverConfig::<Bn254G1, Bn254G2>::default()
+///     .glv()          // endomorphism split on every MSM plan
+///     .point_cache()  // fixed-base tables over the CRS queries
+///     .ntt_threads(8);
+/// ```
+///
+/// Unlike the deprecated `Prover::with_*` chain, construction order
+/// cannot change the outcome: [`Prover::with_config`] always settles the
+/// MSM plan (GLV included) *before* building any point cache, so tables
+/// bake the final plan instead of snapshotting whatever the chain had
+/// applied so far.
+pub struct ProverConfig<G1: CurveParams, G2: CurveParams> {
+    /// The plan config every MSM (G1 and G2, local and sharded) runs
+    /// with. [`Self::glv`] switches it to the endomorphism split.
+    pub msm: MsmConfig,
+    /// The fixed local executor (ignored per-query while
+    /// [`Self::auto_backend`] is set, and whenever a multi-device pool
+    /// absorbs the MSM).
+    pub backend: Backend,
+    /// Re-resolve the executor per query via [`Backend::auto_for`]
+    /// instead of using the fixed [`Self::backend`].
+    pub auto_backend: bool,
+    /// Thread budget for the QAP reduction's seven NTT transforms
+    /// (1 = inline, the serial-measurement default).
+    pub ntt_threads: usize,
+    /// Build fixed-base precompute tables over all five CRS query
+    /// vectors at construction and serve every query MSM from them.
+    pub point_cache: bool,
+    /// Sharded multi-device executors for the 𝔾₁ and 𝔾₂ MSMs; a pool
+    /// with more than one device absorbs its MSMs (split per device,
+    /// merged deterministically), a single-device pool behaves like the
+    /// local backend.
+    pub pools: Option<(Arc<ShardPool<G1>>, Arc<ShardPool<G2>>)>,
+}
+
+// Manual impls: derives would demand `G1: Default/Clone` etc. even
+// though the type parameters only appear behind `Arc`.
+impl<G1: CurveParams, G2: CurveParams> Default for ProverConfig<G1, G2> {
+    fn default() -> Self {
+        ProverConfig {
+            msm: MsmConfig::default(),
+            backend: Backend::Pippenger,
+            auto_backend: false,
+            ntt_threads: 1,
+            point_cache: false,
+            pools: None,
+        }
+    }
+}
+
+impl<G1: CurveParams, G2: CurveParams> Clone for ProverConfig<G1, G2> {
+    fn clone(&self) -> Self {
+        ProverConfig {
+            msm: self.msm,
+            backend: self.backend,
+            auto_backend: self.auto_backend,
+            ntt_threads: self.ntt_threads,
+            point_cache: self.point_cache,
+            pools: self.pools.clone(),
+        }
+    }
+}
+
+impl<G1: CurveParams, G2: CurveParams> ProverConfig<G1, G2> {
+    /// Switch every MSM plan to the GLV endomorphism fast path (scalars
+    /// split into two half-width parts against the doubled (P, φ(P))
+    /// set). Proofs are unchanged; curves without endomorphism
+    /// parameters fall back to full-width plans transparently.
+    pub fn glv(mut self) -> Self {
+        self.msm = self.msm.glv();
+        self
+    }
+
+    /// Fix the local MSM executor (clears [`Self::auto_backend`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self.auto_backend = false;
+        self
+    }
+
+    /// Resolve the executor per MSM via [`Backend::auto_for`] (size-,
+    /// curve- and plan-aware) instead of fixing one.
+    pub fn auto_backend(mut self) -> Self {
+        self.auto_backend = true;
+        self
+    }
+
+    /// Run the QAP reduction's NTTs over `threads` OS threads (clamped
+    /// to at least 1). Bit-identical output at any width.
+    pub fn ntt_threads(mut self, threads: usize) -> Self {
+        self.ntt_threads = threads.max(1);
+        self
+    }
+
+    /// Build fixed-base tables over the CRS queries at construction and
+    /// serve the query MSMs from them (bit-identical to live points).
+    pub fn point_cache(mut self) -> Self {
+        self.point_cache = true;
+        self
+    }
+
+    /// Attach sharded multi-device pools for the 𝔾₁ and 𝔾₂ MSMs.
+    pub fn pools(mut self, g1: Arc<ShardPool<G1>>, g2: Arc<ShardPool<G2>>) -> Self {
+        self.pools = Some((g1, g2));
+        self
+    }
+}
+
 /// The prover, bound to a curve family. All five MSMs route through the
-/// shared kernel dispatch ([`msm::execute`]) — pick the executor with
-/// [`Self::with_backend`] (serial Pippenger by default so the Table I
-/// profile measures single-thread phase shares, as the paper's does) — or
-/// attach multi-device pools with [`Self::with_pools`]: whenever a pool
-/// holds more than one device, its MSMs submit through the sharded path
-/// (split per device, merged deterministically) instead of the local
-/// backend.
+/// shared kernel dispatch ([`msm::execute`]). Configure it declaratively
+/// with [`ProverConfig`] + [`Self::with_config`] (serial Pippenger by
+/// default so the Table I profile measures single-thread phase shares,
+/// as the paper's does); when a configured pool holds more than one
+/// device, its MSMs submit through the sharded path (split per device,
+/// merged deterministically) instead of the local backend.
 pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     /// The CRS query vectors the MSMs consume.
     pub crs: Crs<G1, G2>,
-    /// The plan config every MSM runs with (see [`Self::with_glv`]).
+    /// The plan config every MSM runs with (see [`ProverConfig::glv`]).
     pub msm_cfg: MsmConfig,
     /// The local executor (ignored when a multi-device pool handles an MSM).
     pub backend: Backend,
@@ -84,7 +202,7 @@ pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     pub pool_g2: Option<Arc<ShardPool<G2>>>,
     /// Thread budget for the QAP reduction's seven NTT transforms
     /// (1 = inline, the Table I serial-measurement default; see
-    /// [`Self::with_ntt_threads`]).
+    /// [`ProverConfig::ntt_threads`]).
     pub ntt_threads: usize,
     /// Fixed-base tables over the CRS queries; `None` = live-point MSMs.
     /// Served only while compatible with the current [`Self::msm_cfg`].
@@ -99,17 +217,37 @@ where
     P: FieldParams<4>,
 {
     /// A serial-Pippenger prover over a CRS (the Table I measurement rig).
+    /// Equivalent to [`Self::with_config`] with [`ProverConfig::default`].
     pub fn new(crs: Crs<G1, G2>) -> Self {
-        Prover {
+        Self::with_config(crs, ProverConfig::default())
+    }
+
+    /// Build a prover from a declarative [`ProverConfig`].
+    ///
+    /// The plan is settled first (GLV included), then the point cache —
+    /// if requested — is built against that final plan, so the old
+    /// builder chain's ordering pitfall (`with_point_cache().with_glv()`
+    /// silently disabling the just-built tables) cannot be expressed.
+    pub fn with_config(crs: Crs<G1, G2>, cfg: ProverConfig<G1, G2>) -> Self {
+        let (pool_g1, pool_g2) = match cfg.pools {
+            Some((g1, g2)) => (Some(g1), Some(g2)),
+            None => (None, None),
+        };
+        let prover = Prover {
             crs,
-            msm_cfg: MsmConfig::default(),
-            backend: Backend::Pippenger,
-            auto_backend: false,
-            pool_g1: None,
-            pool_g2: None,
-            ntt_threads: 1,
+            msm_cfg: cfg.msm,
+            backend: cfg.backend,
+            auto_backend: cfg.auto_backend,
+            pool_g1,
+            pool_g2,
+            ntt_threads: cfg.ntt_threads.max(1),
             point_cache: None,
             _p: std::marker::PhantomData,
+        };
+        if cfg.point_cache {
+            prover.build_point_cache()
+        } else {
+            prover
         }
     }
 
@@ -118,12 +256,14 @@ where
     /// [`crate::ntt::NttPlan`]). The h coefficients, and therefore the
     /// proof, are bit-identical for every thread count; only the NTT
     /// phase's wall time changes.
+    #[deprecated(note = "use ProverConfig::ntt_threads with Prover::with_config")]
     pub fn with_ntt_threads(mut self, threads: usize) -> Self {
         self.ntt_threads = threads.max(1);
         self
     }
 
     /// Same prover, different MSM executor.
+    #[deprecated(note = "use ProverConfig::backend with Prover::with_config")]
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
         self.auto_backend = false;
@@ -135,6 +275,7 @@ where
     /// plan config, so on wide hosts the G1/G2 MSMs land on the
     /// chunk-parallel backend whenever threads exceed the plan's window
     /// count (e.g. any GLV plan past 11 threads on BN254).
+    #[deprecated(note = "use ProverConfig::auto_backend with Prover::with_config")]
     pub fn with_auto_backend(mut self) -> Self {
         self.auto_backend = true;
         self
@@ -145,24 +286,34 @@ where
     /// against the doubled (P, φ(P)) point set, halving the window passes
     /// per MSM. The proof is unchanged — curves without endomorphism
     /// parameters fall back to full-width plans transparently.
+    #[deprecated(note = "use ProverConfig::glv with Prover::with_config")]
     pub fn with_glv(mut self) -> Self {
         self.msm_cfg = self.msm_cfg.glv();
         self
     }
 
     /// Build fixed-base precompute tables over all five CRS query vectors
-    /// ([`msm::PrecompTable`]) and serve every query MSM from them: the
-    /// fill loop reads pre-shifted window multiples straight into buckets,
-    /// so the per-proof hot path issues zero point doublings in the fill
-    /// and combine phases. The build cost is paid here, once — the SRS is
-    /// fixed across proofs, so tables amortize exactly like the CRS
-    /// synthesis itself. Proofs are bit-identical to the live-point path.
+    /// ([`msm::PrecompTable`]) and serve every query MSM from them.
     ///
     /// Tables snapshot the current [`Self::msm_cfg`]: call after
     /// [`Self::with_glv`] to bake the endomorphism split into the tables.
     /// A later plan change disables them (compatibility gate) rather than
-    /// serving entries from the wrong plan.
-    pub fn with_point_cache(mut self) -> Self {
+    /// serving entries from the wrong plan — the ordering pitfall
+    /// [`Self::with_config`] exists to remove.
+    #[deprecated(note = "use ProverConfig::point_cache with Prover::with_config")]
+    pub fn with_point_cache(self) -> Self {
+        self.build_point_cache()
+    }
+
+    /// Build fixed-base precompute tables over all five CRS query vectors
+    /// against the *current* plan config and serve every query MSM from
+    /// them: the fill loop reads pre-shifted window multiples straight
+    /// into buckets, so the per-proof hot path issues zero point
+    /// doublings in the fill and combine phases. The build cost is paid
+    /// here, once — the SRS is fixed across proofs, so tables amortize
+    /// exactly like the CRS synthesis itself. Proofs are bit-identical
+    /// to the live-point path.
+    fn build_point_cache(mut self) -> Self {
         let cfg = &self.msm_cfg;
         self.point_cache = Some(QueryTables {
             a: msm::PrecompTable::build(&self.crs.a_query, cfg),
@@ -188,6 +339,7 @@ where
     /// single-device pool behaves like the plain backend, and an atomic
     /// shard-group failure falls back to the local backend (with a
     /// warning) rather than failing the proof.
+    #[deprecated(note = "use ProverConfig::pools with Prover::with_config")]
     pub fn with_pools(mut self, g1: Arc<ShardPool<G1>>, g2: Arc<ShardPool<G2>>) -> Self {
         self.pool_g1 = Some(g1);
         self.pool_g2 = Some(g2);
@@ -324,12 +476,30 @@ mod tests {
     use crate::ff::params::Bn254FrParams;
     use crate::snark::{circuits, setup::CrsBn254};
 
+    fn small_cs() -> ConstraintSystem<Bn254FrParams, 4> {
+        circuits::mul_chain::<Bn254FrParams, 4>(200, 77)
+    }
+
+    // deterministic synthesis: every call over the same cs yields the
+    // same CRS, so provers built separately are comparable bit-for-bit
+    fn crs_for(cs: &ConstraintSystem<Bn254FrParams, 4>) -> Crs<Bn254G1, Bn254G2> {
+        let domain_n = (cs.num_constraints().max(2)).next_power_of_two();
+        CrsBn254::synthesize(cs.num_variables(), domain_n, 78)
+    }
+
     fn small_prover() -> (Prover<Bn254G1, Bn254G2, Bn254FrParams>, ConstraintSystem<Bn254FrParams, 4>)
     {
-        let cs = circuits::mul_chain::<Bn254FrParams, 4>(200, 77);
-        let domain_n = (cs.num_constraints().max(2)).next_power_of_two();
-        let crs = CrsBn254::synthesize(cs.num_variables(), domain_n, 78);
+        let cs = small_cs();
+        let crs = crs_for(&cs);
         (Prover::new(crs), cs)
+    }
+
+    fn config_prover(
+        cfg: ProverConfig<Bn254G1, Bn254G2>,
+    ) -> (Prover<Bn254G1, Bn254G2, Bn254FrParams>, ConstraintSystem<Bn254FrParams, 4>) {
+        let cs = small_cs();
+        let crs = crs_for(&cs);
+        (Prover::with_config(crs, cfg), cs)
     }
 
     #[test]
@@ -376,7 +546,10 @@ mod tests {
         // the dispatch layer must be invisible in the output
         let (prover, cs) = small_prover();
         let (p1, _) = prover.prove(&cs);
-        let prover2 = prover.with_backend(Backend::BatchAffineParallel { threads: 2 });
+        let (prover2, _) =
+            config_prover(ProverConfig::default().backend(Backend::BatchAffineParallel {
+                threads: 2,
+            }));
         let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
@@ -389,14 +562,15 @@ mod tests {
         // parallel otherwise) must be invisible in the proof
         let (prover, cs) = small_prover();
         let (p1, _) = prover.prove(&cs);
-        let (prover2, _) = small_prover();
-        let (p2, _) = prover2.with_auto_backend().prove(&cs);
+        let (prover2, _) = config_prover(ProverConfig::default().auto_backend());
+        let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
         // the explicit chunked backend agrees too, at threads ≫ windows
-        let (prover3, _) = small_prover();
-        let (p3, _) = prover3.with_backend(Backend::Chunked { threads: 32 }).prove(&cs);
+        let (prover3, _) =
+            config_prover(ProverConfig::default().backend(Backend::Chunked { threads: 32 }));
+        let (p3, _) = prover3.prove(&cs);
         assert!(p1.a.eq_point(&p3.a));
         assert!(p1.c.eq_point(&p3.c));
     }
@@ -407,8 +581,8 @@ mod tests {
         // G1 MSMs and the Fp²-based G2 MSM
         let (prover, cs) = small_prover();
         let (p1, _) = prover.prove(&cs);
-        let (prover2, _) = small_prover();
-        let (p2, _) = prover2.with_glv().prove(&cs);
+        let (prover2, _) = config_prover(ProverConfig::default().glv());
+        let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
@@ -420,20 +594,22 @@ mod tests {
         // on the plain plan and with the GLV split baked into the tables
         let (prover, cs) = small_prover();
         let (p1, _) = prover.prove(&cs);
-        let (prover2, _) = small_prover();
-        let (p2, _) = prover2.with_point_cache().prove(&cs);
+        let (prover2, _) = config_prover(ProverConfig::default().point_cache());
+        let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
-        let (prover3, _) = small_prover();
-        let (p3, _) = prover3.with_glv().with_point_cache().prove(&cs);
+        let (prover3, _) = config_prover(ProverConfig::default().glv().point_cache());
+        let (p3, _) = prover3.prove(&cs);
         assert!(p1.a.eq_point(&p3.a));
         assert!(p1.b.eq_point(&p3.b));
         assert!(p1.c.eq_point(&p3.c));
         // a plan change AFTER the build must disable the tables (the
-        // compatibility gate), not serve entries from the wrong plan
-        let (prover4, _) = small_prover();
-        let (p4, _) = prover4.with_point_cache().with_glv().prove(&cs);
+        // compatibility gate), not serve entries from the wrong plan —
+        // the config path can't express that order, so mutate directly
+        let (mut prover4, _) = config_prover(ProverConfig::default().point_cache());
+        prover4.msm_cfg = prover4.msm_cfg.glv();
+        let (p4, _) = prover4.prove(&cs);
         assert!(p1.a.eq_point(&p4.a));
         assert!(p1.b.eq_point(&p4.b));
         assert!(p1.c.eq_point(&p4.c));
@@ -450,8 +626,8 @@ mod tests {
         // padding/copy overhead outside the four phases is small
         let ntt_s = prof1.total_s * prof1.ntt_pct / 100.0;
         assert!(prof1.ntt_phases.total_s() <= ntt_s * 1.001 + 1e-9, "{prof1:?}");
-        let (prover2, _) = small_prover();
-        let (p2, _) = prover2.with_ntt_threads(8).prove(&cs);
+        let (prover2, _) = config_prover(ProverConfig::default().ntt_threads(8));
+        let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
@@ -464,7 +640,8 @@ mod tests {
         let (p1, _) = prover.prove(&cs);
         let pool_g1 = Arc::new(ShardPool::<Bn254G1>::native(3, 1));
         let pool_g2 = Arc::new(ShardPool::<Bn254G2>::native(2, 1));
-        let prover2 = prover.with_pools(pool_g1.clone(), pool_g2.clone());
+        let (prover2, _) =
+            config_prover(ProverConfig::default().pools(pool_g1.clone(), pool_g2.clone()));
         let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
@@ -484,16 +661,44 @@ mod tests {
         };
         let (prover, cs) = small_prover();
         let (p1, _) = prover.prove(&cs);
-        let prover2 = prover.with_pools(
+        let (prover2, _) = config_prover(ProverConfig::default().pools(
             Arc::new(ShardPool::<Bn254G1>::new(vec![flaky(), flaky()], ShardPolicy::ChunkPoints)),
             Arc::new(ShardPool::<Bn254G2>::new(vec![flaky(), flaky()], ShardPolicy::ChunkPoints)),
-        );
+        ));
         // every sharded MSM fails atomically → local-backend fallback, not
         // a panic — and the proof is unchanged
         let (p2, _) = prover2.prove(&cs);
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn config_path_bit_identical_to_deprecated_builder_chain() {
+        // the deprecated with_* chain and the one-shot config must build
+        // equivalent provers: same proof, bit for bit, under a config
+        // exercising every knob the chain could set
+        let cs = small_cs();
+        assert!(cs.is_satisfied());
+        let old = Prover::<Bn254G1, Bn254G2, Bn254FrParams>::new(crs_for(&cs))
+            .with_backend(Backend::BatchAffineParallel { threads: 2 })
+            .with_ntt_threads(4)
+            .with_glv()
+            .with_point_cache();
+        let new = Prover::with_config(
+            crs_for(&cs),
+            ProverConfig::default()
+                .backend(Backend::BatchAffineParallel { threads: 2 })
+                .ntt_threads(4)
+                .glv()
+                .point_cache(),
+        );
+        let (po, _) = old.prove(&cs);
+        let (pn, _) = new.prove(&cs);
+        assert!(po.a.eq_point(&pn.a));
+        assert!(po.b.eq_point(&pn.b));
+        assert!(po.c.eq_point(&pn.c));
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! Integration: the coordinator end-to-end — correctness of served results,
 //! affinity behaviour, backpressure, batching, sharded multi-device
-//! execution (merge determinism, retry, atomic group failure), shutdown.
+//! execution (merge determinism, retry, atomic group failure), shutdown,
+//! and the admission tier (typed quota rejections, atomic shed of shard
+//! groups, counter reconciliation under concurrency, derived bounds).
 
 use ifzkp::coordinator::devices::{DeviceBackend, EngineHolder};
-use ifzkp::coordinator::{Coordinator, CoordinatorConfig, DeviceDesc, PointSetRegistry};
+use ifzkp::coordinator::{
+    Coordinator, CoordinatorConfig, DeviceDesc, JobError, Lane, PointSetRegistry, Quota,
+    RejectReason, TenantId,
+};
 use ifzkp::coordinator::batcher::{BatchPolicy, Batcher};
 use ifzkp::coordinator::request::ShardAssignment;
 use ifzkp::ec::{points, Affine, Bn254G1, Jacobian, ScalarLimbs};
@@ -217,7 +222,7 @@ fn device_failure_is_delivered_and_counted() {
         // would be indistinguishable from shutdown
         let res = rx.recv().expect("failure result must be delivered, not dropped");
         assert!(!res.is_ok(), "expected a failed result");
-        assert!(res.error.as_deref().unwrap().contains("injected device fault"));
+        assert!(res.error_message().unwrap().contains("injected device fault"));
         assert!(res.output.is_infinity());
     }
     let snap = coord.counters.snapshot();
@@ -365,7 +370,7 @@ fn sharded_group_fails_atomically_when_every_device_fails() {
     // dropped channel
     let res = rx.recv().expect("atomic failure must be delivered");
     assert!(!res.is_ok());
-    assert!(res.error.as_deref().unwrap().contains("atomically"), "{:?}", res.error);
+    assert!(res.error_message().unwrap().contains("atomically"), "{:?}", res.error);
     assert!(res.output.is_infinity());
     let snap = coord.counters.snapshot();
     assert_eq!(snap.shard_group_failures, 1, "{snap:?}");
@@ -433,6 +438,174 @@ fn batcher_never_splits_a_shard_group_across_flushes() {
     for jobs in b.drain() {
         assert!(jobs.1.iter().all(|j| j.shard.is_none()), "no group remnants after its flush");
     }
+}
+
+// ---------------------------------------------------------------- admission
+
+#[test]
+fn quota_exhaustion_rejects_typed_instead_of_deadlocking() {
+    let (reg, ids, _) = registry_with_sets(&[64]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let tenant = TenantId(42);
+    // rate 0: the bucket never refills, so exactly `burst` jobs admit
+    coord.set_tenant_quota(tenant, Quota { rate_per_s: 0.0, burst: 2.0 });
+    let mut admitted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..6 {
+        let scalars = Arc::new(points::generate_scalars(64, 254, 8000 + i));
+        match coord.submit_admitted(tenant, Lane::Interactive, None, ids[0], scalars) {
+            Ok(job) => admitted.push(job),
+            Err(e) => {
+                rejected += 1;
+                assert_eq!(
+                    e,
+                    JobError::Rejected {
+                        lane: Lane::Interactive,
+                        reason: RejectReason::QuotaExhausted,
+                    }
+                );
+            }
+        }
+    }
+    assert_eq!(admitted.len(), 2, "burst of 2 admits exactly 2");
+    assert_eq!(rejected, 4);
+    // the admitted jobs still complete — rejection is a clean refusal at
+    // the front door, never a wedge of the serving path behind it
+    for job in admitted {
+        let res = job.recv().expect("admitted jobs complete");
+        assert!(res.is_ok(), "{:?}", res.error);
+    }
+    let snap = coord.admission_snapshot();
+    assert_eq!(snap.admitted_total(), 2, "{snap:?}");
+    assert_eq!(snap.shed_by_reason[RejectReason::QuotaExhausted.index()], 4, "{snap:?}");
+    assert_eq!(snap.completed_total(), 2, "{snap:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn admission_shed_never_splits_a_shard_group() {
+    let (reg, ids, raw) = registry_with_sets(&[512]);
+    let cfg = CoordinatorConfig::default();
+    let shard_cfg = cfg.shard_cfg;
+    let coord = Coordinator::start(
+        cfg,
+        vec![DeviceDesc::<Bn254G1>::native(1), DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    let tenant = TenantId(7);
+    coord.set_tenant_quota(tenant, Quota { rate_per_s: 0.0, burst: 1.0 });
+    let scalars = Arc::new(points::generate_scalars(512, 254, 8100));
+    let want = msm::execute(Backend::Pippenger, &raw[0], &scalars, &shard_cfg);
+    // the first group takes the one token and is admitted whole
+    let job = coord
+        .submit_sharded_admitted(
+            tenant,
+            Lane::Batch,
+            None,
+            ids[0],
+            scalars.clone(),
+            ShardPolicy::ChunkPoints,
+        )
+        .expect("first group admits");
+    // the second group is ONE admission unit: shed whole, zero shards
+    let err = coord
+        .submit_sharded_admitted(
+            tenant,
+            Lane::Batch,
+            None,
+            ids[0],
+            scalars.clone(),
+            ShardPolicy::ChunkPoints,
+        )
+        .expect_err("second group must be shed");
+    assert!(
+        matches!(err, JobError::Rejected { reason: RejectReason::QuotaExhausted, .. }),
+        "{err:?}"
+    );
+    let res = job.recv().expect("admitted group completes");
+    assert!(res.is_ok(), "{:?}", res.error);
+    assert!(res.output.eq_point(&want), "merged group result must stay bit-exact");
+    let snap = coord.counters.snapshot();
+    // exactly one group ever reached the dispatcher; the shed one left
+    // no partial shards and no atomic-failure record behind
+    assert_eq!(snap.shard_groups, 1, "{snap:?}");
+    assert_eq!(snap.shard_group_failures, 0, "{snap:?}");
+    let a = coord.admission_snapshot();
+    assert_eq!(a.shed[Lane::Batch.index()], 1, "{a:?}");
+    assert_eq!(a.completed_total(), 1, "{a:?}");
+    coord.shutdown();
+}
+
+/// Every offer lands in exactly one of {admitted, shed}, and every
+/// admitted job in exactly one of {completed, failed} — under concurrent
+/// submitters on mixed lanes with a quota-capped tenant in the mix.
+/// `IFZKP_HEAVY_TESTS=1` widens the thread/job counts.
+#[test]
+fn admission_counters_reconcile_under_concurrent_load() {
+    let heavy = std::env::var("IFZKP_HEAVY_TESTS").is_ok();
+    let (n_threads, per_thread) = if heavy { (8u64, 64u64) } else { (4u64, 16u64) };
+    let (reg, ids, _) = registry_with_sets(&[128]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(1), DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    // tenant 0 is tightly capped so the shed path is exercised too
+    coord.set_tenant_quota(TenantId(0), Quota { rate_per_s: 0.0, burst: 4.0 });
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let coord = &coord;
+            let ps = ids[0];
+            s.spawn(move || {
+                let lane = Lane::ALL[(t % 3) as usize];
+                for i in 0..per_thread {
+                    let scalars =
+                        Arc::new(points::generate_scalars(128, 254, 8200 + t * 1000 + i));
+                    if let Ok(job) = coord.submit_admitted(TenantId(t), lane, None, ps, scalars)
+                    {
+                        let res = job.recv().expect("admitted job completes");
+                        assert!(res.is_ok(), "{:?}", res.error);
+                    }
+                }
+            });
+        }
+    });
+    let snap = coord.admission_snapshot();
+    assert_eq!(snap.offered_total(), n_threads * per_thread, "{snap:?}");
+    assert_eq!(snap.offered_total(), snap.admitted_total() + snap.shed_total(), "{snap:?}");
+    assert_eq!(snap.admitted_total(), snap.completed_total() + snap.failed_total(), "{snap:?}");
+    assert_eq!(snap.failed_total(), 0, "{snap:?}");
+    assert!(snap.shed_total() > 0, "the capped tenant must have shed: {snap:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn queue_capacity_derives_from_device_count() {
+    // regression: the default used to be a fleet-blind 256 — a 1-device
+    // pool admitted 256 queued jobs unbounded by any lane
+    let (reg, _, _) = registry_with_sets(&[16]);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        vec![DeviceDesc::<Bn254G1>::native(1)],
+        reg,
+    );
+    assert_eq!(coord.queue_capacity(), 32, "1 device → 32, not 256");
+    assert_eq!(coord.lane_capacity(Lane::Interactive), 8, "lanes derive as devices × 8");
+    coord.shutdown();
+    // an explicit override still wins, and wider fleets scale up
+    let (reg2, _, _) = registry_with_sets(&[16]);
+    let coord2 = Coordinator::start(
+        CoordinatorConfig { queue_capacity: 7, ..Default::default() },
+        (0..3).map(|_| DeviceDesc::<Bn254G1>::native(1)).collect(),
+        reg2,
+    );
+    assert_eq!(coord2.queue_capacity(), 7, "explicit override respected");
+    assert_eq!(coord2.lane_capacity(Lane::BestEffort), 24);
+    coord2.shutdown();
 }
 
 #[test]
