@@ -1,0 +1,147 @@
+//! Memory bench: peak resident bytes and wall time, resident vs streaming
+//! prover (the `BENCH_memory.json` artifact — schema in the repo-root
+//! `BENCHMARKS.md`).
+//!
+//! For each circuit size the resident prover runs once (its Θ(m) working
+//! set is the accounted point+scalar bytes of the full SRS), then the
+//! streaming prover runs at several budgets that are small fractions of
+//! that working set. Every streamed proof is asserted bit-identical to the
+//! resident one before its row is recorded, so the artifact only ever
+//! plots correct runs.
+//!
+//! CI knobs (same as `hotpath`):
+//! * `IFZKP_BENCH_QUICK=1` — small-n smoke (seconds, not minutes);
+//! * `IFZKP_BENCH_JSON=path` — write the rows as JSON.
+
+use ifzkp::ec::{Bn254G1, Bn254G2, CurveParams};
+use ifzkp::ff::params::Bn254FrParams;
+use ifzkp::snark::setup::CrsBn254;
+use ifzkp::snark::{circuits, prove_streaming, Prover, ProverConfig, StreamingSrs};
+use ifzkp::util::json::Json;
+use ifzkp::util::mem::{MemoryBudget, SCALAR_BYTES};
+use ifzkp::util::{human_count, human_secs, Stopwatch};
+
+/// One artifact row.
+struct Row {
+    name: String,
+    constraints: usize,
+    mode: &'static str,
+    budget_bytes: u64,
+    peak_bytes: u64,
+    fixed_bytes: u64,
+    wall_s: f64,
+}
+
+fn emit_json(rows: &[Row]) {
+    let Ok(path) = std::env::var("IFZKP_BENCH_JSON") else {
+        return;
+    };
+    let mut arr = Vec::with_capacity(rows.len());
+    for r in rows {
+        let mut j = Json::obj();
+        j.set("name", r.name.as_str())
+            .set("constraints", r.constraints)
+            .set("mode", r.mode)
+            .set("budget_bytes", r.budget_bytes)
+            .set("peak_bytes", r.peak_bytes)
+            .set("fixed_bytes", r.fixed_bytes)
+            .set("wall_s", r.wall_s);
+        arr.push(j);
+    }
+    let mut root = Json::obj();
+    root.set("bench", "memory").set("results", Json::Arr(arr));
+    match std::fs::write(&path, format!("{root}\n")) {
+        Ok(()) => println!("\nwrote bench JSON: {path}"),
+        Err(e) => eprintln!("\nfailed to write bench JSON {path}: {e}"),
+    }
+}
+
+/// Accounted Θ(m) working set of the resident prover: the five SRS point
+/// queries plus the scalar vectors the MSMs consume.
+fn resident_working_set(nv: usize, domain_n: usize) -> u64 {
+    let h_len = domain_n.saturating_sub(1) as u64;
+    let nv = nv as u64;
+    let points = 3 * nv * Bn254G1::AFFINE_BYTES       // a, b1, l
+        + h_len * Bn254G1::AFFINE_BYTES               // h
+        + nv * Bn254G2::AFFINE_BYTES; // b2
+    let scalars = (nv + h_len) * SCALAR_BYTES;
+    points + scalars
+}
+
+fn main() {
+    let quick = std::env::var("IFZKP_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[1 << 12, 1 << 14] } else { &[1 << 14, 1 << 16, 1 << 20] };
+    // budgets as fractions of the resident working set — the plot's x-axis
+    let divisors: &[u64] = if quick { &[4, 16] } else { &[4, 16, 64] };
+    let seed = 20240710u64;
+    let mut rows = Vec::new();
+    let mode = if quick { " (quick)" } else { "" };
+    println!("== memory bench: resident vs streaming prover{mode} ==");
+    for &n in sizes {
+        let tag = format!("2^{}", n.trailing_zeros());
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(n, seed);
+        let domain_n = cs.num_constraints().max(2).next_power_of_two();
+        let nv = cs.num_variables();
+        let ws = resident_working_set(nv, domain_n);
+
+        let crs = CrsBn254::synthesize(nv, domain_n, seed);
+        let prover = Prover::<_, _, Bn254FrParams>::new(crs);
+        let sw = Stopwatch::start();
+        let (want, _) = prover.prove(&cs);
+        let t_resident = sw.secs();
+        println!(
+            "prove {tag} resident                 {:>10}  working set {:>12} B",
+            human_secs(t_resident),
+            ws
+        );
+        rows.push(Row {
+            name: format!("prove {tag} resident"),
+            constraints: n,
+            mode: "resident",
+            budget_bytes: 0,
+            peak_bytes: ws,
+            fixed_bytes: 0,
+            wall_s: t_resident,
+        });
+        // the resident SRS is no longer needed; the streaming runs below
+        // source their chunks from the generator walk
+        drop(prover);
+
+        let srs = StreamingSrs::<Bn254G1, Bn254G2>::generated(nv, domain_n, seed);
+        let floor = 2 * (Bn254G2::AFFINE_BYTES + SCALAR_BYTES);
+        for &div in divisors {
+            let budget = MemoryBudget::bytes((ws / div).max(floor));
+            let (got, report) = prove_streaming(&cs, &srs, budget, &ProverConfig::default())
+                .expect("streaming prove");
+            assert!(
+                got.a.eq_point(&want.a) && got.b.eq_point(&want.b) && got.c.eq_point(&want.c),
+                "streamed proof at budget ws/{div} diverged from resident ({tag})"
+            );
+            println!(
+                "prove {tag} streaming ws/{div:<4}        {:>10}  chunk peak {:>12} B of {} B  (chunks {} G1 / {} G2, fixed {} B)",
+                human_secs(report.total_s),
+                report.peak_chunk_bytes,
+                report.budget_bytes,
+                human_count(report.chunk_points_g1 as u64),
+                human_count(report.chunk_points_g2 as u64),
+                report.fixed_bytes
+            );
+            assert!(
+                report.peak_chunk_bytes <= report.budget_bytes,
+                "accounted peak {} exceeded budget {} ({tag} ws/{div})",
+                report.peak_chunk_bytes,
+                report.budget_bytes
+            );
+            rows.push(Row {
+                name: format!("prove {tag} streaming ws/{div}"),
+                constraints: n,
+                mode: "streaming",
+                budget_bytes: report.budget_bytes,
+                peak_bytes: report.peak_chunk_bytes,
+                fixed_bytes: report.fixed_bytes,
+                wall_s: report.total_s,
+            });
+        }
+    }
+    emit_json(&rows);
+}

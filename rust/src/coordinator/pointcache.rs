@@ -31,6 +31,22 @@ pub fn table_resident_bytes(base_bytes: u64, decomposition: Decomposition, windo
     resident_bytes(base_bytes, decomposition).saturating_mul(u64::from(windows))
 }
 
+/// DDR bytes a **streamed** point set occupies: only the chunk working set
+/// is ever resident, so the footprint is the chunk's share of the full set
+/// under the same decomposition expansion as [`resident_bytes`] — capped at
+/// the fully-resident footprint (a chunk larger than the set degenerates to
+/// the resident case). This is what admission should budget when the host
+/// feeds a device through `msm::stream` instead of uploading the whole set:
+/// a set that is [`Admission::TooLarge`] resident can still be served
+/// streamed at `chunk_bytes` of the full `base_bytes`.
+pub fn streamed_resident_bytes(
+    base_bytes: u64,
+    chunk_bytes: u64,
+    decomposition: Decomposition,
+) -> u64 {
+    resident_bytes(chunk_bytes.min(base_bytes), decomposition)
+}
+
 /// Residency state for one device's DDR.
 #[derive(Debug)]
 pub struct DeviceDdr {
@@ -254,6 +270,30 @@ mod tests {
         assert_eq!(d.admit(PointSetId(1), huge), Admission::TooLarge);
         assert!(d.is_resident(PointSetId(1)));
         assert_eq!(d.used_bytes(), 2200);
+    }
+
+    #[test]
+    fn streamed_footprint_is_the_chunk_working_set() {
+        // streaming budgets only the chunk's share of the set, under the
+        // same decomposition expansion as the resident path
+        assert_eq!(streamed_resident_bytes(10_000, 640, Decomposition::Full), 640);
+        assert_eq!(streamed_resident_bytes(10_000, 640, Decomposition::Glv), 1280);
+        // a chunk larger than the set degenerates to the resident footprint
+        assert_eq!(
+            streamed_resident_bytes(10_000, 20_000, Decomposition::Glv),
+            resident_bytes(10_000, Decomposition::Glv)
+        );
+        assert_eq!(streamed_resident_bytes(u64::MAX, u64::MAX, Decomposition::Glv), u64::MAX);
+        // a set too large to sit resident still admits streamed
+        let mut d = DeviceDdr::new(1000);
+        let full = resident_bytes(2000, Decomposition::Full);
+        assert_eq!(d.admit(PointSetId(1), full), Admission::TooLarge);
+        let streamed = streamed_resident_bytes(2000, 400, Decomposition::Full);
+        assert_eq!(
+            d.admit(PointSetId(1), streamed),
+            Admission::Miss { upload_bytes: 400, evicted: 0 }
+        );
+        assert!(d.is_resident(PointSetId(1)));
     }
 
     #[test]

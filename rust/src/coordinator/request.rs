@@ -67,6 +67,11 @@ pub enum JobError {
     },
     /// No registered device's DDR can hold the job's point set.
     TooLarge,
+    /// A streaming chunk source failed mid-prove (read failure, short
+    /// chunk, malformed chunk file, or a budget that cannot hold one
+    /// element). The prover surfaces this instead of a wrong proof or
+    /// partial state; retrying with a fresh stream is bit-identical.
+    StreamFailed(String),
 }
 
 impl fmt::Display for JobError {
@@ -80,11 +85,20 @@ impl fmt::Display for JobError {
                 write!(f, "admission rejected ({lane} lane): {reason}")
             }
             JobError::TooLarge => f.write_str("no device can hold the point set"),
+            JobError::StreamFailed(detail) => {
+                write!(f, "streaming chunk source failed: {detail}")
+            }
         }
     }
 }
 
 impl std::error::Error for JobError {}
+
+impl From<crate::msm::stream::StreamError> for JobError {
+    fn from(e: crate::msm::stream::StreamError) -> Self {
+        JobError::StreamFailed(e.to_string())
+    }
+}
 
 /// Result of a completed job. Device failures are **delivered**, not
 /// dropped: a worker whose `execute` errors sends a result with
@@ -137,6 +151,16 @@ mod tests {
         let e = JobError::Rejected { lane: Lane::BestEffort, reason: RejectReason::QuotaExhausted };
         assert!(e.to_string().contains("best-effort"), "{e}");
         assert!(e.to_string().contains("quota"), "{e}");
+    }
+
+    #[test]
+    fn stream_errors_convert_to_typed_job_errors() {
+        use crate::msm::stream::StreamError;
+        let e: JobError =
+            StreamError::ShortChunk { chunk: 3, expected: 64, got: 63 }.into();
+        assert!(matches!(e, JobError::StreamFailed(_)));
+        assert!(e.to_string().contains("streaming chunk source failed"), "{e}");
+        assert!(e.to_string().contains("short chunk 3"), "{e}");
     }
 
     #[test]

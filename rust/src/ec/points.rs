@@ -17,32 +17,80 @@ use super::ScalarLimbs;
 use crate::ff::{sqrt, Field};
 use crate::util::rng::Rng;
 
+/// Resumable state of the additive point walk behind
+/// [`generate_points_walk`]: `P_i = Q_i + T[i mod 16]`, `Q_{i+1} = Q_i + D`.
+///
+/// The streaming SRS (`snark/stream.rs`) emits the walk chunk by chunk, so
+/// the walk state is a first-class value: [`PointWalk::next_chunk`] produces
+/// the next `n` points and [`PointWalk::skip`] advances past points a query
+/// slice does not need (1 point-add per skipped point, no affine
+/// normalization). Chunked emission is bit-identical to one-shot emission:
+/// the walk itself visits the same `(Q_i, T)` sequence regardless of chunk
+/// boundaries, and `batch_to_affine`'s Montgomery batch inversion computes
+/// the exact per-element `z⁻¹`, so grouping does not change any output
+/// coordinate.
+pub struct PointWalk<C: CurveParams> {
+    table: Vec<Jacobian<C>>,
+    step: Jacobian<C>,
+    q: Jacobian<C>,
+    index: usize,
+}
+
+impl<C: CurveParams> PointWalk<C> {
+    /// Start the walk for `seed` at index 0 (same derivation as
+    /// [`generate_points_walk`]).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let g = Jacobian::<C>::generator();
+        // Small table of random multiples breaks the pure arithmetic
+        // progression.
+        let t = 16usize;
+        let table: Vec<Jacobian<C>> = (0..t)
+            .map(|_| {
+                let k = [rng.next_u64() | 1, rng.next_u64(), 0, 0];
+                scalar::mul::<C>(&g, &k)
+            })
+            .collect();
+        let step = {
+            let k = [rng.next_u64() | 1, rng.next_u64(), rng.next_u64(), 0];
+            scalar::mul::<C>(&g, &k)
+        };
+        let q = {
+            let k = [rng.next_u64() | 1, 0, 0, 0];
+            scalar::mul::<C>(&g, &k)
+        };
+        PointWalk { table, step, q, index: 0 }
+    }
+
+    /// Index of the next point the walk will emit.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Emit the next `n` points of the walk.
+    pub fn next_chunk(&mut self, n: usize) -> Vec<Affine<C>> {
+        let t = self.table.len();
+        let mut jac = Vec::with_capacity(n);
+        for _ in 0..n {
+            jac.push(self.q.add(&self.table[self.index % t]));
+            self.q = self.q.add(&self.step);
+            self.index += 1;
+        }
+        Jacobian::batch_to_affine(&jac)
+    }
+
+    /// Advance past `n` points without materializing them.
+    pub fn skip(&mut self, n: usize) {
+        for _ in 0..n {
+            self.q = self.q.add(&self.step);
+            self.index += 1;
+        }
+    }
+}
+
 /// Fast deterministic point set: distinct points in the generator subgroup.
 pub fn generate_points_walk<C: CurveParams>(n: usize, seed: u64) -> Vec<Affine<C>> {
-    let mut rng = Rng::new(seed);
-    let g = Jacobian::<C>::generator();
-    // Small table of random multiples breaks the pure arithmetic progression.
-    let t = 16usize;
-    let table: Vec<Jacobian<C>> = (0..t)
-        .map(|_| {
-            let k = [rng.next_u64() | 1, rng.next_u64(), 0, 0];
-            scalar::mul::<C>(&g, &k)
-        })
-        .collect();
-    let step = {
-        let k = [rng.next_u64() | 1, rng.next_u64(), rng.next_u64(), 0];
-        scalar::mul::<C>(&g, &k)
-    };
-    let mut q = {
-        let k = [rng.next_u64() | 1, 0, 0, 0];
-        scalar::mul::<C>(&g, &k)
-    };
-    let mut jac = Vec::with_capacity(n);
-    for i in 0..n {
-        jac.push(q.add(&table[i % t]));
-        q = q.add(&step);
-    }
-    Jacobian::batch_to_affine(&jac)
+    PointWalk::new(seed).next_chunk(n)
 }
 
 /// Independent points by try-and-increment: x ← random, bump until
@@ -137,6 +185,34 @@ mod tests {
         }
         let c = generate_points_walk::<Bls12381G1>(8, 43);
         assert_ne!(a[0].x, c[0].x);
+    }
+
+    #[test]
+    fn walk_chunked_emission_is_bit_identical() {
+        let whole = generate_points_walk::<Bn254G1>(21, 42);
+        let mut walk = PointWalk::<Bn254G1>::new(42);
+        let mut chunked = Vec::new();
+        for n in [3usize, 5, 1, 12] {
+            chunked.extend(walk.next_chunk(n));
+        }
+        assert_eq!(walk.index(), 21);
+        assert_eq!(chunked.len(), whole.len());
+        for (p, q) in chunked.iter().zip(&whole) {
+            assert_eq!(p.x, q.x);
+            assert_eq!(p.y, q.y);
+        }
+    }
+
+    #[test]
+    fn walk_skip_matches_dense_emission() {
+        let whole = generate_points_walk::<Bls12381G1>(20, 7);
+        let mut walk = PointWalk::<Bls12381G1>::new(7);
+        walk.skip(13);
+        let tail = walk.next_chunk(7);
+        for (p, q) in tail.iter().zip(&whole[13..]) {
+            assert_eq!(p.x, q.x);
+            assert_eq!(p.y, q.y);
+        }
     }
 
     #[test]

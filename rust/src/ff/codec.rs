@@ -1,0 +1,124 @@
+//! Canonical word-level (de)serialization for field elements.
+//!
+//! The streaming SRS (`snark/stream.rs`) stores points on disk as their
+//! canonical (non-Montgomery) little-endian `u64` words, so chunk files
+//! are byte-stable across runs and hosts of the same endianness-agnostic
+//! format. [`WordCodec`] is the one trait both coordinate types implement:
+//!
+//! * `Fp<P, N>` — `N` words via `to_canonical`/`from_canonical`;
+//! * `Fp2<P, N>` — `2N` words, `c0`'s words first, then `c1`'s.
+//!
+//! Decoding is validating: a word vector encoding a value ≥ p is rejected
+//! (`None`), so a corrupted chunk file surfaces as a typed stream error
+//! instead of a garbage point.
+
+use super::fp::{FieldParams, Fp};
+use super::fp2::Fp2;
+
+/// Fixed-width canonical `u64`-word encoding for a coordinate type.
+pub trait WordCodec: Sized {
+    /// Number of `u64` words one element occupies.
+    const WORDS: usize;
+
+    /// Append exactly [`Self::WORDS`] canonical words to `out`.
+    fn write_words(&self, out: &mut Vec<u64>);
+
+    /// Decode from exactly [`Self::WORDS`] leading words of `words`;
+    /// `None` if too short or non-canonical (≥ p).
+    fn read_words(words: &[u64]) -> Option<Self>;
+}
+
+impl<P: FieldParams<N>, const N: usize> WordCodec for Fp<P, N> {
+    const WORDS: usize = N;
+
+    fn write_words(&self, out: &mut Vec<u64>) {
+        out.extend_from_slice(&self.to_canonical());
+    }
+
+    fn read_words(words: &[u64]) -> Option<Self> {
+        if words.len() < N {
+            return None;
+        }
+        let mut limbs = [0u64; N];
+        limbs.copy_from_slice(&words[..N]);
+        Fp::from_canonical(limbs)
+    }
+}
+
+impl<P: FieldParams<N>, const N: usize> WordCodec for Fp2<P, N> {
+    const WORDS: usize = 2 * N;
+
+    fn write_words(&self, out: &mut Vec<u64>) {
+        self.c0.write_words(out);
+        self.c1.write_words(out);
+    }
+
+    fn read_words(words: &[u64]) -> Option<Self> {
+        if words.len() < 2 * N {
+            return None;
+        }
+        let c0 = Fp::read_words(&words[..N])?;
+        let c1 = Fp::read_words(&words[N..2 * N])?;
+        Some(Fp2 { c0, c1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::fp::Field;
+    use crate::ff::{Fp2Bls12381, Fp2Bn254, FpBls12381, FpBn254};
+
+    fn roundtrip<T: WordCodec + PartialEq + std::fmt::Debug>(v: &T) {
+        let mut words = Vec::new();
+        v.write_words(&mut words);
+        assert_eq!(words.len(), T::WORDS);
+        let back = T::read_words(&words).expect("canonical words decode");
+        assert_eq!(&back, v);
+    }
+
+    #[test]
+    fn fp_roundtrips_both_curves() {
+        roundtrip(&FpBn254::from_u64(0));
+        roundtrip(&FpBn254::from_u64(12345));
+        roundtrip(&FpBn254::from_u64(1).neg()); // p - 1: the largest canonical value
+        roundtrip(&FpBls12381::from_u64(0));
+        roundtrip(&FpBls12381::from_u64(987654321));
+        roundtrip(&FpBls12381::from_u64(1).neg());
+    }
+
+    #[test]
+    fn fp2_roundtrips_both_curves_c0_first() {
+        let v = Fp2Bn254 {
+            c0: FpBn254::from_u64(7),
+            c1: FpBn254::from_u64(11),
+        };
+        roundtrip(&v);
+        let mut words = Vec::new();
+        v.write_words(&mut words);
+        // layout contract: c0's words precede c1's
+        assert_eq!(FpBn254::read_words(&words[..4]).unwrap(), v.c0);
+        assert_eq!(FpBn254::read_words(&words[4..]).unwrap(), v.c1);
+        roundtrip(&Fp2Bls12381 {
+            c0: FpBls12381::from_u64(3),
+            c1: FpBls12381::from_u64(1).neg(),
+        });
+    }
+
+    #[test]
+    fn non_canonical_words_are_rejected() {
+        // all-ones words are ≥ p for every supported field
+        assert!(FpBn254::read_words(&[u64::MAX; 4]).is_none());
+        assert!(FpBls12381::read_words(&[u64::MAX; 6]).is_none());
+        let mut words = vec![u64::MAX; 8];
+        // valid c0, corrupt c1 — still rejected
+        words[..4].copy_from_slice(&FpBn254::from_u64(5).to_canonical());
+        assert!(Fp2Bn254::read_words(&words).is_none());
+    }
+
+    #[test]
+    fn short_input_is_rejected() {
+        assert!(FpBn254::read_words(&[0u64; 3]).is_none());
+        assert!(Fp2Bn254::read_words(&[0u64; 7]).is_none());
+    }
+}

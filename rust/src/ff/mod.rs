@@ -12,7 +12,9 @@
 //! * [`fp2`] — the quadratic extension for G2;
 //! * [`sqrt`] — generic Tonelli–Shanks (deterministic point generation);
 //! * [`limbs16`] — repacking to the PJRT engine's 16-bit limb domain;
-//! * [`opcount`] — the modmul counters behind Tables II/III.
+//! * [`opcount`] — the modmul counters behind Tables II/III;
+//! * [`codec`] — canonical `u64`-word (de)serialization for the
+//!   streaming SRS's on-disk chunk files.
 
 pub mod bigint;
 pub mod fp;
@@ -22,7 +24,9 @@ pub mod fp2;
 pub mod sqrt;
 pub mod limbs16;
 pub mod params;
+pub mod codec;
 
+pub use codec::WordCodec;
 pub use fp::{Field, FieldParams, Fp};
 pub use fp2::Fp2;
 pub use opcount::OpCounts;

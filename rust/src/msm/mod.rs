@@ -29,9 +29,14 @@
 //!   (`snark::prover`, `baseline::cpu`, `coordinator::devices`) use
 //!   instead of hand-picking implementations; [`msm`] auto-selects both
 //!   backend and config.
+//! * [`stream`] — the bounded-memory driver: point/scalar chunk sources
+//!   (slice-, generator- and disk-backed) folded through any resident
+//!   backend under an enforced [`crate::util::mem::MemoryBudget`] — the
+//!   host-side analogue of the paper's DDR→SAB chunk streaming.
 //!
 //! Property tests in `rust/tests/prop_msm.rs` enforce bit-exactness of
-//! every backend × slicing × reduction combination against [`naive`].
+//! every backend × slicing × reduction combination against [`naive`],
+//! including the streamed chunk matrix.
 
 pub mod plan;
 pub mod signed;
@@ -42,6 +47,7 @@ pub mod batch_affine;
 pub mod chunked;
 pub mod partial;
 pub mod precomp;
+pub mod stream;
 
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
@@ -50,6 +56,7 @@ pub use partial::{PartialMsm, ShardPolicy, ShardSpec};
 pub use pippenger::msm as msm_pippenger;
 pub use plan::{Decomposition, DigitMatrix, MsmConfig, MsmInput, MsmPlan, Reduction, Slicing};
 pub use precomp::{PrecompCost, PrecompTable};
+pub use stream::{msm_stream, PointStream, ScalarStream, StreamError};
 
 /// Heuristic window width: balances m/window bucket fills against 2^k
 /// reduction work. The usual c ≈ log2(m) − 3 rule, clamped to the paper's

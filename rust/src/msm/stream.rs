@@ -1,0 +1,668 @@
+//! Chunked MSM over streamed point/scalar sources under a memory budget.
+//!
+//! The paper's accelerator never holds the full point set: the host DMAs
+//! fixed-size chunks from DDR through the SAB and the kernel accumulates
+//! partial sums (§IV). This module is the host-side analogue — the last
+//! in-RAM scalability wall for giant circuits (ROADMAP item 1):
+//!
+//! * [`PointStream`]/[`ScalarStream`] — pull-based chunk sources. Provided
+//!   impls: borrowed slices ([`SlicePoints`]/[`SliceScalars`]), the
+//!   deterministic generator walk ([`WalkPoints`] — what
+//!   `snark::stream::StreamingSrs` synthesizes queries from), a disk-backed
+//!   reader over the chunk-file format ([`FilePoints`]), and the
+//!   fault injectors ([`FailingPoints`], [`ShortPoints`]) the
+//!   fault-injection tests use.
+//! * [`msm_stream`] — the bounded-memory driver: for each chunk it charges
+//!   the payload bytes to a [`MemLedger`] *before* reading (so the budget is
+//!   enforced, not observed), executes the chunk through any resident
+//!   [`Backend`], folds `acc = acc + partial`, and credits the bytes when
+//!   the chunk drops.
+//!
+//! **Determinism.** The fold visits chunks in ascending point order and
+//! each partial is produced by the same plan/backend machinery as the
+//! resident path, so the result is bit-identical (projective `eq_point`)
+//! to the one-shot MSM for every chunk size — the same argument as
+//! `partial::merge`'s sorted plain-add chain, of which this is the
+//! contiguous special case. `tests/prop_msm.rs` pins the full
+//! chunk × curve × decomposition × backend matrix.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::marker::PhantomData;
+use std::path::Path;
+
+use super::{Backend, MsmConfig};
+use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+use crate::ff::WordCodec;
+use crate::util::mem::{BudgetExceeded, MemLedger, SCALAR_BYTES};
+
+/// Magic number heading every point chunk file (`"ifZKPpts"` as LE bytes).
+pub const POINT_FILE_MAGIC: u64 = u64::from_le_bytes(*b"ifZKPpts");
+/// Version of the point chunk-file format.
+pub const POINT_FILE_VERSION: u64 = 1;
+
+/// Typed failure of a chunk source or the streaming driver.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamError {
+    /// The underlying source failed to produce a chunk.
+    Read {
+        /// What went wrong (I/O detail, injected-fault marker, …).
+        detail: String,
+    },
+    /// A source delivered fewer items than the driver requested.
+    ShortChunk {
+        /// Zero-based index of the offending chunk.
+        chunk: usize,
+        /// Items the driver asked for.
+        expected: usize,
+        /// Items actually delivered.
+        got: usize,
+    },
+    /// Point and scalar sources disagree on the MSM length.
+    LengthMismatch {
+        /// Remaining points.
+        points: usize,
+        /// Remaining scalars.
+        scalars: usize,
+    },
+    /// A chunk file's header is malformed or of the wrong curve/format.
+    Header {
+        /// What was malformed.
+        detail: String,
+    },
+    /// The ledger refused the chunk's bytes (budget would be exceeded).
+    Budget(BudgetExceeded),
+    /// The budget cannot hold even a single point + scalar.
+    BudgetTooSmall {
+        /// Bytes one streamed element needs.
+        needed: u64,
+        /// The configured budget in bytes.
+        budget: u64,
+    },
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Read { detail } => write!(f, "chunk source read failed: {detail}"),
+            StreamError::ShortChunk { chunk, expected, got } => {
+                write!(f, "short chunk {chunk}: expected {expected} items, got {got}")
+            }
+            StreamError::LengthMismatch { points, scalars } => {
+                write!(f, "stream length mismatch: {points} points vs {scalars} scalars")
+            }
+            StreamError::Header { detail } => write!(f, "bad point-file header: {detail}"),
+            StreamError::Budget(e) => write!(f, "{e}"),
+            StreamError::BudgetTooSmall { needed, budget } => {
+                write!(
+                    f,
+                    "memory budget too small to stream: one element needs {needed} bytes, \
+                     budget is {budget}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+impl From<BudgetExceeded> for StreamError {
+    fn from(e: BudgetExceeded) -> Self {
+        StreamError::Budget(e)
+    }
+}
+
+/// Pull-based source of affine points for [`msm_stream`]. `len` is the
+/// number of points *remaining*; `next_chunk` returns up to `max` of them
+/// in order.
+pub trait PointStream<C: CurveParams> {
+    /// Points remaining in the stream.
+    fn len(&self) -> usize;
+
+    /// True when the stream is exhausted.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Produce the next `min(max, len)` points.
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<Affine<C>>, StreamError>;
+
+    /// Advance past `n` points without handing them to the caller.
+    fn skip(&mut self, n: usize) -> Result<(), StreamError> {
+        let mut left = n;
+        while left > 0 && !self.is_empty() {
+            let got = self.next_chunk(left.min(1 << 12))?;
+            if got.is_empty() {
+                break;
+            }
+            left -= got.len();
+        }
+        Ok(())
+    }
+}
+
+/// Pull-based source of canonical scalar limbs for [`msm_stream`].
+pub trait ScalarStream {
+    /// Scalars remaining in the stream.
+    fn len(&self) -> usize;
+
+    /// True when the stream is exhausted.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Produce the next `min(max, len)` scalars.
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<ScalarLimbs>, StreamError>;
+}
+
+/// [`PointStream`] over a borrowed resident slice (the bridge the resident
+/// prover uses to run its in-RAM CRS through the streaming driver).
+pub struct SlicePoints<'a, C: CurveParams> {
+    points: &'a [Affine<C>],
+    cursor: usize,
+}
+
+impl<'a, C: CurveParams> SlicePoints<'a, C> {
+    /// Stream over `points`, front to back.
+    pub fn new(points: &'a [Affine<C>]) -> Self {
+        SlicePoints { points, cursor: 0 }
+    }
+}
+
+impl<C: CurveParams> PointStream<C> for SlicePoints<'_, C> {
+    fn len(&self) -> usize {
+        self.points.len() - self.cursor
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<Affine<C>>, StreamError> {
+        let take = max.min(self.len());
+        let out = self.points[self.cursor..self.cursor + take].to_vec();
+        self.cursor += take;
+        Ok(out)
+    }
+
+    fn skip(&mut self, n: usize) -> Result<(), StreamError> {
+        self.cursor += n.min(self.len());
+        Ok(())
+    }
+}
+
+/// [`ScalarStream`] over a borrowed resident slice.
+pub struct SliceScalars<'a> {
+    scalars: &'a [ScalarLimbs],
+    cursor: usize,
+}
+
+impl<'a> SliceScalars<'a> {
+    /// Stream over `scalars`, front to back.
+    pub fn new(scalars: &'a [ScalarLimbs]) -> Self {
+        SliceScalars { scalars, cursor: 0 }
+    }
+}
+
+impl ScalarStream for SliceScalars<'_> {
+    fn len(&self) -> usize {
+        self.scalars.len() - self.cursor
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<ScalarLimbs>, StreamError> {
+        let take = max.min(self.len());
+        let out = self.scalars[self.cursor..self.cursor + take].to_vec();
+        self.cursor += take;
+        Ok(out)
+    }
+}
+
+/// Generator-backed [`PointStream`]: emits `len` points of the
+/// deterministic additive walk (`ec::points::PointWalk`) for `seed`,
+/// chunk by chunk, bit-identical to `generate_points_walk(len, seed)`.
+/// Skipping costs one point-add per point (no affine normalization).
+pub struct WalkPoints<C: CurveParams> {
+    walk: crate::ec::points::PointWalk<C>,
+    remaining: usize,
+}
+
+impl<C: CurveParams> WalkPoints<C> {
+    /// A walk stream of `len` points for `seed`, starting at index 0.
+    pub fn new(seed: u64, len: usize) -> Self {
+        WalkPoints { walk: crate::ec::points::PointWalk::new(seed), remaining: len }
+    }
+}
+
+impl<C: CurveParams> PointStream<C> for WalkPoints<C> {
+    fn len(&self) -> usize {
+        self.remaining
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<Affine<C>>, StreamError> {
+        let take = max.min(self.remaining);
+        self.remaining -= take;
+        Ok(self.walk.next_chunk(take))
+    }
+
+    fn skip(&mut self, n: usize) -> Result<(), StreamError> {
+        let take = n.min(self.remaining);
+        self.walk.skip(take);
+        self.remaining -= take;
+        Ok(())
+    }
+}
+
+fn io_read(e: io::Error) -> StreamError {
+    StreamError::Read { detail: e.to_string() }
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Disk-backed [`PointStream`] over the chunk-file format written by
+/// [`write_points_file`]: a 4-word header (magic, version, count,
+/// words-per-point) followed by each point's canonical `x`/`y` words
+/// (little-endian `u64`s; the point at infinity is all-zero words, which
+/// is unambiguous because `(0, 0)` is off-curve for every supported group
+/// — b ≠ 0). Decoding validates canonicity *and* curve membership, so a
+/// corrupted file surfaces as a typed [`StreamError`], never as a wrong
+/// point.
+pub struct FilePoints<C: CurveParams> {
+    reader: BufReader<File>,
+    remaining: usize,
+    next_index: usize,
+    _c: PhantomData<C>,
+}
+
+impl<C: CurveParams> FilePoints<C>
+where
+    C::Base: WordCodec,
+{
+    /// Open `path`, validating the header against this curve's coordinate
+    /// width.
+    pub fn open(path: &Path) -> Result<Self, StreamError> {
+        let bad = |detail: String| StreamError::Header { detail };
+        let file = File::open(path)
+            .map_err(|e| bad(format!("{}: {e}", path.display())))?;
+        let mut reader = BufReader::new(file);
+        let magic = read_u64(&mut reader).map_err(|e| bad(e.to_string()))?;
+        if magic != POINT_FILE_MAGIC {
+            return Err(bad(format!("{}: wrong magic {magic:#x}", path.display())));
+        }
+        let version = read_u64(&mut reader).map_err(|e| bad(e.to_string()))?;
+        if version != POINT_FILE_VERSION {
+            return Err(bad(format!("{}: unsupported version {version}", path.display())));
+        }
+        let count = read_u64(&mut reader).map_err(|e| bad(e.to_string()))?;
+        let words = read_u64(&mut reader).map_err(|e| bad(e.to_string()))?;
+        let expect_words = 2 * C::Base::WORDS as u64;
+        if words != expect_words {
+            return Err(bad(format!(
+                "{}: {words} words per point, curve {} needs {expect_words}",
+                path.display(),
+                C::NAME
+            )));
+        }
+        Ok(FilePoints { reader, remaining: count as usize, next_index: 0, _c: PhantomData })
+    }
+
+    /// Cap the stream at the next `n` points (for query vectors shorter
+    /// than the stored file).
+    pub fn take(mut self, n: usize) -> Self {
+        self.remaining = self.remaining.min(n);
+        self
+    }
+}
+
+impl<C: CurveParams> PointStream<C> for FilePoints<C>
+where
+    C::Base: WordCodec,
+{
+    fn len(&self) -> usize {
+        self.remaining
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<Affine<C>>, StreamError> {
+        let take = max.min(self.remaining);
+        let words_per = 2 * C::Base::WORDS;
+        let mut words = vec![0u64; words_per];
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            for w in words.iter_mut() {
+                *w = read_u64(&mut self.reader).map_err(io_read)?;
+            }
+            if words.iter().all(|&w| w == 0) {
+                out.push(Affine::infinity());
+            } else {
+                let decode_err = || StreamError::Read {
+                    detail: format!("non-canonical coordinate at point {}", self.next_index),
+                };
+                let x = C::Base::read_words(&words[..C::Base::WORDS]).ok_or_else(decode_err)?;
+                let y = C::Base::read_words(&words[C::Base::WORDS..]).ok_or_else(decode_err)?;
+                let p = Affine::new(x, y);
+                if !p.is_on_curve() {
+                    return Err(StreamError::Read {
+                        detail: format!("off-curve point at index {}", self.next_index),
+                    });
+                }
+                out.push(p);
+            }
+            self.next_index += 1;
+            self.remaining -= 1;
+        }
+        Ok(out)
+    }
+
+    fn skip(&mut self, n: usize) -> Result<(), StreamError> {
+        let take = n.min(self.remaining);
+        let bytes = (take * 2 * C::Base::WORDS * 8) as i64;
+        self.reader.seek_relative(bytes).map_err(io_read)?;
+        self.next_index += take;
+        self.remaining -= take;
+        Ok(())
+    }
+}
+
+/// Drain `source` into the chunk-file format at `path`, `chunk` points at
+/// a time (the writer never holds more than one chunk). Returns the
+/// number of points written.
+pub fn write_points_file<C: CurveParams>(
+    path: &Path,
+    source: &mut dyn PointStream<C>,
+    chunk: usize,
+) -> Result<u64, StreamError>
+where
+    C::Base: WordCodec,
+{
+    assert!(chunk > 0, "write_points_file needs a positive chunk size");
+    let file = File::create(path)
+        .map_err(|e| StreamError::Read { detail: format!("{}: {e}", path.display()) })?;
+    let mut writer = BufWriter::new(file);
+    let count = source.len() as u64;
+    let header = [POINT_FILE_MAGIC, POINT_FILE_VERSION, count, 2 * C::Base::WORDS as u64];
+    for w in header {
+        writer.write_all(&w.to_le_bytes()).map_err(io_read)?;
+    }
+    let mut words: Vec<u64> = Vec::with_capacity(2 * C::Base::WORDS);
+    while !source.is_empty() {
+        for p in source.next_chunk(chunk)? {
+            words.clear();
+            if p.infinity {
+                words.resize(2 * C::Base::WORDS, 0);
+            } else {
+                p.x.write_words(&mut words);
+                p.y.write_words(&mut words);
+            }
+            for w in &words {
+                writer.write_all(&w.to_le_bytes()).map_err(io_read)?;
+            }
+        }
+    }
+    writer.flush().map_err(io_read)?;
+    Ok(count)
+}
+
+/// Fault injector: delegates to `inner` but fails (typed
+/// [`StreamError::Read`]) on the `fail_at`-th `next_chunk` call.
+pub struct FailingPoints<S> {
+    inner: S,
+    fail_at: usize,
+    calls: usize,
+}
+
+impl<S> FailingPoints<S> {
+    /// Fail on the zero-based `fail_at`-th chunk read.
+    pub fn new(inner: S, fail_at: usize) -> Self {
+        FailingPoints { inner, fail_at, calls: 0 }
+    }
+}
+
+impl<C: CurveParams, S: PointStream<C>> PointStream<C> for FailingPoints<S> {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<Affine<C>>, StreamError> {
+        if self.calls == self.fail_at {
+            return Err(StreamError::Read {
+                detail: format!("injected read failure at chunk {}", self.fail_at),
+            });
+        }
+        self.calls += 1;
+        self.inner.next_chunk(max)
+    }
+}
+
+/// Fault injector: delegates to `inner` but drops one item from the
+/// `short_at`-th chunk (a source that silently under-delivers).
+pub struct ShortPoints<S> {
+    inner: S,
+    short_at: usize,
+    calls: usize,
+}
+
+impl<S> ShortPoints<S> {
+    /// Under-deliver on the zero-based `short_at`-th chunk read.
+    pub fn new(inner: S, short_at: usize) -> Self {
+        ShortPoints { inner, short_at, calls: 0 }
+    }
+}
+
+impl<C: CurveParams, S: PointStream<C>> PointStream<C> for ShortPoints<S> {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<Affine<C>>, StreamError> {
+        let call = self.calls;
+        self.calls += 1;
+        let mut out = self.inner.next_chunk(max)?;
+        if call == self.short_at {
+            out.pop();
+        }
+        Ok(out)
+    }
+}
+
+/// Bytes one streamed chunk of `n` points + scalars occupies on the
+/// ledger (affine coordinates + canonical scalar limbs).
+pub fn chunk_bytes<C: CurveParams>(n: usize) -> u64 {
+    n as u64 * (C::AFFINE_BYTES + SCALAR_BYTES)
+}
+
+/// Largest chunk (in points) a budget of `budget_bytes` admits for this
+/// curve; 0 when the budget cannot hold even one element.
+pub fn chunk_for_budget<C: CurveParams>(budget_bytes: u64) -> usize {
+    let per = C::AFFINE_BYTES + SCALAR_BYTES;
+    (budget_bytes / per).min(usize::MAX as u64) as usize
+}
+
+/// Bounded-memory MSM: fold `chunk`-sized partial MSMs over the streamed
+/// sources, charging each chunk's payload bytes to `ledger` before it is
+/// read. Bit-identical (`eq_point`) to the resident
+/// [`execute`](super::execute) on the same data for every chunk size and
+/// backend; see the module docs for the determinism argument.
+pub fn msm_stream<C: CurveParams>(
+    points: &mut dyn PointStream<C>,
+    scalars: &mut dyn ScalarStream,
+    backend: Backend,
+    cfg: &MsmConfig,
+    chunk: usize,
+    ledger: &MemLedger,
+) -> Result<Jacobian<C>, StreamError> {
+    assert!(chunk > 0, "msm_stream needs a positive chunk size");
+    if points.len() != scalars.len() {
+        return Err(StreamError::LengthMismatch {
+            points: points.len(),
+            scalars: scalars.len(),
+        });
+    }
+    let mut acc = Jacobian::infinity();
+    let mut index = 0usize;
+    while !points.is_empty() {
+        let want = chunk.min(points.len());
+        let charge = ledger.charge(chunk_bytes::<C>(want))?;
+        let pts = points.next_chunk(want)?;
+        if pts.len() != want {
+            return Err(StreamError::ShortChunk { chunk: index, expected: want, got: pts.len() });
+        }
+        let scs = scalars.next_chunk(want)?;
+        if scs.len() != want {
+            return Err(StreamError::ShortChunk { chunk: index, expected: want, got: scs.len() });
+        }
+        let partial = super::execute(backend, &pts, &scs, cfg);
+        acc = acc.add(&partial);
+        drop(charge);
+        index += 1;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::points::{generate_points_walk, workload};
+    use crate::ec::{Bls12381G1, Bn254G1, Bn254G2};
+    use crate::util::mem::MemoryBudget;
+
+    #[test]
+    fn slice_streams_match_resident_execute() {
+        let w = workload::<Bn254G1>(200, 11);
+        let cfg = MsmConfig::auto(200);
+        let want = super::super::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+        for chunk in [1usize, 7, 64, 200, 500] {
+            let ledger = MemLedger::unlimited();
+            let mut ps = SlicePoints::new(&w.points);
+            let mut ss = SliceScalars::new(&w.scalars);
+            let got =
+                msm_stream(&mut ps, &mut ss, Backend::Pippenger, &cfg, chunk, &ledger).unwrap();
+            assert!(got.eq_point(&want), "chunk={chunk}");
+            assert_eq!(ledger.live_bytes(), 0, "all charges credited back");
+        }
+    }
+
+    #[test]
+    fn walk_stream_matches_one_shot_generation() {
+        let mut ws = WalkPoints::<Bn254G1>::new(99, 50);
+        let mut got = Vec::new();
+        got.extend(ws.next_chunk(17).unwrap());
+        got.extend(ws.next_chunk(40).unwrap());
+        assert!(ws.is_empty());
+        let want = generate_points_walk::<Bn254G1>(50, 99);
+        for (p, q) in got.iter().zip(&want) {
+            assert_eq!(p.x, q.x);
+            assert_eq!(p.y, q.y);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_preserves_points_and_infinity() {
+        let dir = std::env::temp_dir().join("ifzkp_stream_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts.bin");
+        let mut pts = generate_points_walk::<Bn254G1>(33, 5);
+        pts[7] = Affine::infinity();
+        let n = write_points_file::<Bn254G1>(&path, &mut SlicePoints::new(&pts), 10).unwrap();
+        assert_eq!(n, 33);
+        let mut fp = FilePoints::<Bn254G1>::open(&path).unwrap();
+        assert_eq!(PointStream::<Bn254G1>::len(&fp), 33);
+        let back = fp.next_chunk(33).unwrap();
+        assert!(fp.is_empty());
+        for (p, q) in back.iter().zip(&pts) {
+            assert_eq!(p.infinity, q.infinity);
+            assert_eq!(p.x, q.x);
+            assert_eq!(p.y, q.y);
+        }
+        // skip + take work against the same file
+        let mut fp = FilePoints::<Bn254G1>::open(&path).unwrap().take(20);
+        PointStream::<Bn254G1>::skip(&mut fp, 3).unwrap();
+        let tail = fp.next_chunk(100).unwrap();
+        assert_eq!(tail.len(), 17);
+        assert_eq!(tail[0].x, pts[3].x);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_roundtrip_g2() {
+        let dir = std::env::temp_dir().join("ifzkp_stream_g2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts_g2.bin");
+        let pts = generate_points_walk::<Bn254G2>(9, 6);
+        write_points_file::<Bn254G2>(&path, &mut SlicePoints::new(&pts), 4).unwrap();
+        let mut fp = FilePoints::<Bn254G2>::open(&path).unwrap();
+        let back = fp.next_chunk(9).unwrap();
+        for (p, q) in back.iter().zip(&pts) {
+            assert_eq!(p.x, q.x);
+            assert_eq!(p.y, q.y);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_curve_file_is_rejected_at_open() {
+        let dir = std::env::temp_dir().join("ifzkp_stream_wrongcurve");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts_bn.bin");
+        let pts = generate_points_walk::<Bn254G1>(4, 8);
+        write_points_file::<Bn254G1>(&path, &mut SlicePoints::new(&pts), 4).unwrap();
+        // a BLS reader expects 12-word points, the file has 8-word points
+        let err = FilePoints::<Bls12381G1>::open(&path).unwrap_err();
+        assert!(matches!(err, StreamError::Header { .. }), "{err:?}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_surfaces_read_error_not_garbage() {
+        let dir = std::env::temp_dir().join("ifzkp_stream_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts_trunc.bin");
+        let pts = generate_points_walk::<Bn254G1>(8, 9);
+        write_points_file::<Bn254G1>(&path, &mut SlicePoints::new(&pts), 8).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 16]).unwrap();
+        let mut fp = FilePoints::<Bn254G1>::open(&path).unwrap();
+        let err = fp.next_chunk(8).unwrap_err();
+        assert!(matches!(err, StreamError::Read { .. }), "{err:?}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn budget_enforced_by_driver() {
+        let w = workload::<Bn254G1>(64, 12);
+        let cfg = MsmConfig::auto(64);
+        // 16-point chunks need 16 × 96 bytes; one byte less must refuse
+        let per = chunk_bytes::<Bn254G1>(16);
+        let ledger = MemLedger::new(MemoryBudget::bytes(per - 1));
+        let mut ps = SlicePoints::new(&w.points);
+        let mut ss = SliceScalars::new(&w.scalars);
+        let err = msm_stream(&mut ps, &mut ss, Backend::Pippenger, &cfg, 16, &ledger).unwrap_err();
+        assert!(matches!(err, StreamError::Budget(_)), "{err:?}");
+        // with exactly the needed budget it runs, and the peak is pinned
+        let ledger = MemLedger::new(MemoryBudget::bytes(per));
+        let mut ps = SlicePoints::new(&w.points);
+        let mut ss = SliceScalars::new(&w.scalars);
+        let got = msm_stream(&mut ps, &mut ss, Backend::Pippenger, &cfg, 16, &ledger).unwrap();
+        let want = super::super::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+        assert!(got.eq_point(&want));
+        assert_eq!(ledger.peak_bytes(), per);
+    }
+
+    #[test]
+    fn length_mismatch_is_typed() {
+        let w = workload::<Bn254G1>(10, 13);
+        let cfg = MsmConfig::auto(10);
+        let ledger = MemLedger::unlimited();
+        let mut ps = SlicePoints::new(&w.points);
+        let mut ss = SliceScalars::new(&w.scalars[..9]);
+        let err = msm_stream(&mut ps, &mut ss, Backend::Naive, &cfg, 4, &ledger).unwrap_err();
+        assert_eq!(err, StreamError::LengthMismatch { points: 10, scalars: 9 });
+    }
+
+    #[test]
+    fn chunk_sizing_helpers() {
+        // BN254 G1: 64-byte points + 32-byte scalars
+        assert_eq!(chunk_bytes::<Bn254G1>(10), 960);
+        assert_eq!(chunk_for_budget::<Bn254G1>(960), 10);
+        assert_eq!(chunk_for_budget::<Bn254G1>(959), 9);
+        assert_eq!(chunk_for_budget::<Bn254G1>(95), 0);
+    }
+}

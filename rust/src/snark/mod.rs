@@ -14,14 +14,20 @@
 //!   multiples rather than toxic-waste powers — the proof is not
 //!   cryptographically sound, but every MSM/NTT the real prover executes
 //!   is executed here with the right sizes, fields and groups);
-//! * [`prover`] — the instrumented prover producing the Table I split.
+//! * [`prover`] — the instrumented prover producing the Table I split;
+//! * [`stream`] — the bounded-memory streaming prover: generator- or
+//!   disk-backed SRS chunk sources + [`stream::prove_streaming`] under an
+//!   enforced [`crate::util::mem::MemoryBudget`], bit-identical to the
+//!   resident path.
 
 pub mod r1cs;
 pub mod circuits;
 pub mod qap;
 pub mod setup;
 pub mod prover;
+pub mod stream;
 
 pub use prover::{ProfileBreakdown, Proof, Prover, ProverConfig};
 pub use qap::NttPhases;
 pub use r1cs::ConstraintSystem;
+pub use stream::{prove_streaming, StreamReport, StreamingSrs, WitnessStream};

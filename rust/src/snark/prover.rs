@@ -15,7 +15,9 @@ use super::setup::Crs;
 use crate::coordinator::shard::ShardPool;
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 use crate::ff::{Field, FieldParams, Fp};
+use crate::msm::stream::{chunk_for_budget, msm_stream, SlicePoints, SliceScalars};
 use crate::msm::{self, Backend, MsmConfig};
+use crate::util::mem::{MemLedger, MemoryBudget};
 use crate::util::stopwatch::Profiler;
 use std::sync::Arc;
 
@@ -102,6 +104,13 @@ pub struct ProverConfig<G1: CurveParams, G2: CurveParams> {
     /// merged deterministically), a single-device pool behaves like the
     /// local backend.
     pub pools: Option<(Arc<ShardPool<G1>>, Arc<ShardPool<G2>>)>,
+    /// When set, every query MSM runs through the bounded-memory chunk
+    /// driver (`msm::stream`) under this budget instead of executing over
+    /// the full resident slice at once. Proofs are bit-identical; the
+    /// point cache is bypassed while set (resident Θ(m·2^k) tables are
+    /// antithetical to a byte budget). For a CRS that is never
+    /// materialized at all, use `snark::stream::prove_streaming`.
+    pub streaming: Option<MemoryBudget>,
 }
 
 // Manual impls: derives would demand `G1: Default/Clone` etc. even
@@ -115,6 +124,7 @@ impl<G1: CurveParams, G2: CurveParams> Default for ProverConfig<G1, G2> {
             ntt_threads: 1,
             point_cache: false,
             pools: None,
+            streaming: None,
         }
     }
 }
@@ -128,6 +138,7 @@ impl<G1: CurveParams, G2: CurveParams> Clone for ProverConfig<G1, G2> {
             ntt_threads: self.ntt_threads,
             point_cache: self.point_cache,
             pools: self.pools.clone(),
+            streaming: self.streaming,
         }
     }
 }
@@ -175,6 +186,13 @@ impl<G1: CurveParams, G2: CurveParams> ProverConfig<G1, G2> {
         self.pools = Some((g1, g2));
         self
     }
+
+    /// Run every query MSM through the bounded-memory chunk driver under
+    /// `budget` (see [`Self::streaming`]). Bit-identical proofs.
+    pub fn streaming(mut self, budget: MemoryBudget) -> Self {
+        self.streaming = Some(budget);
+        self
+    }
 }
 
 /// The prover, bound to a curve family. All five MSMs route through the
@@ -204,6 +222,12 @@ pub struct Prover<G1: CurveParams, G2: CurveParams, P: FieldParams<4>> {
     /// (1 = inline, the Table I serial-measurement default; see
     /// [`ProverConfig::ntt_threads`]).
     pub ntt_threads: usize,
+    /// Bounded-memory mode: when set, every query MSM streams its
+    /// (resident) CRS slice in budget-sized chunks through
+    /// `msm::stream::msm_stream` instead of executing over the whole
+    /// slice at once, and the point cache is bypassed (see
+    /// [`ProverConfig::streaming`]). Proofs are bit-identical.
+    pub streaming: Option<MemoryBudget>,
     /// Fixed-base tables over the CRS queries; `None` = live-point MSMs.
     /// Served only while compatible with the current [`Self::msm_cfg`].
     point_cache: Option<QueryTables<G1, G2>>,
@@ -241,6 +265,7 @@ where
             pool_g1,
             pool_g2,
             ntt_threads: cfg.ntt_threads.max(1),
+            streaming: cfg.streaming,
             point_cache: None,
             _p: std::marker::PhantomData,
         };
@@ -325,12 +350,31 @@ where
         self
     }
 
+    /// Run every query MSM through the bounded-memory chunk driver under
+    /// `budget`: each chunk's payload bytes are charged to an enforced
+    /// ledger before it is copied out of the CRS, so the MSM working set
+    /// (beyond the resident CRS itself) stays within the budget. The
+    /// proof is bit-identical to the plain path at every budget that
+    /// admits one element.
+    ///
+    /// This streams a *resident* CRS; to prove without ever materializing
+    /// the CRS, use `snark::stream::prove_streaming` with a
+    /// `StreamingSrs`.
+    pub fn with_streaming(mut self, budget: MemoryBudget) -> Self {
+        self.streaming = Some(budget);
+        self
+    }
+
     /// The cached table for one query, if present and still built for the
-    /// prover's current plan config.
+    /// prover's current plan config. Streaming mode bypasses tables: they
+    /// are Θ(m·2^k) resident, which defeats the byte budget.
     fn cached<'a, C: CurveParams>(
         &'a self,
         pick: impl FnOnce(&'a QueryTables<G1, G2>) -> &'a msm::PrecompTable<C>,
     ) -> Option<&'a msm::PrecompTable<C>> {
+        if self.streaming.is_some() {
+            return None;
+        }
         self.point_cache.as_ref().map(pick).filter(|t| t.compatible_with(&self.msm_cfg))
     }
 
@@ -346,6 +390,43 @@ where
         self
     }
 
+    /// One query MSM through the bounded-memory chunk driver: chunk size
+    /// is what `budget` admits, the executor resolves over the *chunk*
+    /// length (each chunk is what actually executes), and every chunk's
+    /// bytes are charged to an enforced ledger. Bit-identical to the
+    /// resident execute for any chunking (the ascending-order fold is the
+    /// contiguous case of `partial::merge`).
+    fn msm_streamed<C: CurveParams>(
+        &self,
+        points: &[Affine<C>],
+        scalars: &[ScalarLimbs],
+        budget: MemoryBudget,
+    ) -> Jacobian<C> {
+        let chunk = chunk_for_budget::<C>(budget.get());
+        assert!(
+            chunk > 0,
+            "streaming budget of {} bytes cannot hold one {} element; \
+             use snark::stream::prove_streaming for a typed error",
+            budget.get(),
+            C::NAME
+        );
+        let backend = if self.auto_backend {
+            Backend::auto_for::<C>(chunk.min(points.len()), &self.msm_cfg)
+        } else {
+            self.backend
+        };
+        let ledger = MemLedger::new(budget);
+        msm_stream(
+            &mut SlicePoints::new(points),
+            &mut SliceScalars::new(scalars),
+            backend,
+            &self.msm_cfg,
+            chunk,
+            &ledger,
+        )
+        .expect("slice streams cannot fail and the budget admits the chunk size")
+    }
+
     fn msm_g1(&self, points: &[Affine<G1>], scalars: &[ScalarLimbs]) -> Jacobian<G1> {
         if let Some(pool) = &self.pool_g1 {
             if pool.device_count() > 1 {
@@ -356,6 +437,9 @@ where
                     Err(e) => eprintln!("[WARN] sharded G1 MSM failed, running locally: {e:#}"),
                 }
             }
+        }
+        if let Some(budget) = self.streaming {
+            return self.msm_streamed(points, scalars, budget);
         }
         let backend = if self.auto_backend {
             Backend::auto_for::<G1>(points.len(), &self.msm_cfg)
@@ -373,6 +457,9 @@ where
                     Err(e) => eprintln!("[WARN] sharded G2 MSM failed, running locally: {e:#}"),
                 }
             }
+        }
+        if let Some(budget) = self.streaming {
+            return self.msm_streamed(points, scalars, budget);
         }
         let backend = if self.auto_backend {
             Backend::auto_for::<G2>(points.len(), &self.msm_cfg)
@@ -699,6 +786,53 @@ mod tests {
         assert!(po.a.eq_point(&pn.a));
         assert!(po.b.eq_point(&pn.b));
         assert!(po.c.eq_point(&pn.c));
+    }
+
+    #[test]
+    fn proof_identical_with_streaming() {
+        use crate::util::mem::MemoryBudget;
+        // the bounded-memory chunk driver must be invisible in the proof:
+        // tiny budget (few points per chunk), generous budget, the
+        // deprecated-style with_streaming method, and streaming stacked
+        // on GLV + auto-backend
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        for budget in [MemoryBudget::bytes(8 * 160), MemoryBudget::mib(64)] {
+            let (prover2, _) = config_prover(ProverConfig::default().streaming(budget));
+            let (p2, _) = prover2.prove(&cs);
+            assert!(p1.a.eq_point(&p2.a), "budget {}", budget.get());
+            assert!(p1.b.eq_point(&p2.b), "budget {}", budget.get());
+            assert!(p1.c.eq_point(&p2.c), "budget {}", budget.get());
+        }
+        let (prover3, _) = config_prover(ProverConfig::default());
+        let (p3, _) = prover3.with_streaming(MemoryBudget::bytes(16 * 160)).prove(&cs);
+        assert!(p1.a.eq_point(&p3.a));
+        assert!(p1.b.eq_point(&p3.b));
+        assert!(p1.c.eq_point(&p3.c));
+        let (prover4, _) = config_prover(
+            ProverConfig::default().glv().auto_backend().streaming(MemoryBudget::bytes(32 * 160)),
+        );
+        let (p4, _) = prover4.prove(&cs);
+        assert!(p1.a.eq_point(&p4.a));
+        assert!(p1.b.eq_point(&p4.b));
+        assert!(p1.c.eq_point(&p4.c));
+    }
+
+    #[test]
+    fn streaming_bypasses_point_cache() {
+        use crate::util::mem::MemoryBudget;
+        // tables are Θ(m·2^k) resident — streaming mode must ignore them
+        // and still produce the identical proof
+        let (prover, cs) = small_prover();
+        let (p1, _) = prover.prove(&cs);
+        let (prover2, _) = config_prover(
+            ProverConfig::default().point_cache().streaming(MemoryBudget::bytes(16 * 160)),
+        );
+        assert!(prover2.cached(|t| &t.a).is_none(), "cache must be bypassed while streaming");
+        let (p2, _) = prover2.prove(&cs);
+        assert!(p1.a.eq_point(&p2.a));
+        assert!(p1.b.eq_point(&p2.b));
+        assert!(p1.c.eq_point(&p2.c));
     }
 
     #[test]

@@ -1,0 +1,496 @@
+//! Bounded-memory streaming prover: chunked SRS sources + `prove_streaming`.
+//!
+//! The resident prover materializes five full query vectors (3·nv + h in
+//! 𝔾₁, nv in 𝔾₂) before the first MSM — Θ(m) resident bytes, the last
+//! in-RAM scalability wall for giant circuits (ROADMAP item 1). This module
+//! removes it:
+//!
+//! * [`StreamingSrs`] — the chunk-source view of `setup::Crs`: either
+//!   **generator-backed** (re-derives the exact `Crs::synthesize` point
+//!   walks chunk by chunk — nothing is ever materialized) or
+//!   **disk-backed** (chunk files written by
+//!   [`StreamingSrs::write_to_dir`], which itself streams: setup never
+//!   holds more than one chunk).
+//! * [`WitnessStream`] — the scalar side: converts resident `Fp` values
+//!   (witness assignment, QAP h coefficients) to canonical limbs one
+//!   chunk at a time instead of building the full `Vec<ScalarLimbs>`.
+//! * [`prove_streaming`] — the same five-MSM pipeline as `Prover::prove`
+//!   (identical query slicing: `l_start = 1 + num_public`, h clamped to
+//!   the query length), but every MSM runs through
+//!   [`msm_stream`](crate::msm::stream::msm_stream) under one enforced
+//!   [`MemoryBudget`]. Failures are typed
+//!   ([`JobError::StreamFailed`]) — never a wrong proof or partial state —
+//!   and retrying with a fresh [`StreamingSrs`] is bit-identical.
+//!
+//! **Determinism / bit-identity.** Each streamed MSM folds chunk partials
+//! in ascending point order (the contiguous special case of
+//! `partial::merge`), each chunk runs the same plan machinery as the
+//! resident path, and the generator walk emits identical points for any
+//! chunking (`ec::points::PointWalk`), so the proof equals the resident
+//! `Prover::prove` output projectively (`eq_point`) for every budget that
+//! admits at least one element per group. `tests/integration_snark.rs`
+//! pins this across curves, budgets and sources.
+
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::prover::{Proof, ProverConfig};
+use super::qap;
+use super::r1cs::ConstraintSystem;
+use crate::coordinator::request::JobError;
+use crate::ec::{CurveParams, ScalarLimbs};
+use crate::ff::{FieldParams, Fp, WordCodec};
+use crate::msm::stream::{
+    chunk_for_budget, msm_stream, write_points_file, FilePoints, PointStream, ScalarStream,
+    StreamError, WalkPoints,
+};
+use crate::msm::Backend;
+use crate::util::mem::{MemLedger, MemoryBudget, SCALAR_BYTES};
+
+const A_FILE: &str = "a_query.pts";
+const B1_FILE: &str = "b1_query.pts";
+const L_FILE: &str = "l_query.pts";
+const B2_FILE: &str = "b2_query.pts";
+const H_FILE: &str = "h_query.pts";
+
+/// Where a [`StreamingSrs`] pulls its chunks from.
+enum SrsSource {
+    /// Re-derive the `Crs::synthesize` walks on the fly.
+    Generated { seed: u64 },
+    /// Read the chunk files under `dir` (see [`StreamingSrs::write_to_dir`]).
+    Disk { dir: PathBuf },
+}
+
+/// A chunk-source view of the CRS: same query vectors as
+/// `setup::Crs::synthesize`, never fully resident.
+pub struct StreamingSrs<G1: CurveParams, G2: CurveParams> {
+    source: SrsSource,
+    num_vars: usize,
+    domain_n: usize,
+    _g: PhantomData<(G1, G2)>,
+}
+
+/// One query's point source: generator walk or chunk file.
+enum SrsStream<C: CurveParams> {
+    Walk(WalkPoints<C>),
+    File(FilePoints<C>),
+}
+
+impl<C: CurveParams> PointStream<C> for SrsStream<C>
+where
+    C::Base: WordCodec,
+{
+    fn len(&self) -> usize {
+        match self {
+            SrsStream::Walk(w) => w.len(),
+            SrsStream::File(f) => f.len(),
+        }
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<crate::ec::Affine<C>>, StreamError> {
+        match self {
+            SrsStream::Walk(w) => w.next_chunk(max),
+            SrsStream::File(f) => f.next_chunk(max),
+        }
+    }
+
+    fn skip(&mut self, n: usize) -> Result<(), StreamError> {
+        match self {
+            SrsStream::Walk(w) => PointStream::skip(w, n),
+            SrsStream::File(f) => PointStream::skip(f, n),
+        }
+    }
+}
+
+/// Open one query stream over `query[skip..len]`.
+fn open_stream<C: CurveParams>(
+    source: &SrsSource,
+    file: &str,
+    seed_xor: u64,
+    len: usize,
+    skip: usize,
+) -> Result<SrsStream<C>, StreamError>
+where
+    C::Base: WordCodec,
+{
+    match source {
+        SrsSource::Generated { seed } => {
+            let mut walk = WalkPoints::<C>::new(seed ^ seed_xor, len);
+            PointStream::skip(&mut walk, skip)?;
+            Ok(SrsStream::Walk(walk))
+        }
+        SrsSource::Disk { dir } => {
+            let path = dir.join(file);
+            let stored = FilePoints::<C>::open(&path)?;
+            if PointStream::len(&stored) < len {
+                return Err(StreamError::Header {
+                    detail: format!("{file}: holds {} points, query needs {len}", stored.len()),
+                });
+            }
+            let mut capped = stored.take(len);
+            PointStream::skip(&mut capped, skip)?;
+            Ok(SrsStream::File(capped))
+        }
+    }
+}
+
+impl<G1: CurveParams, G2: CurveParams> StreamingSrs<G1, G2> {
+    /// Generator-backed source: chunk-identical to
+    /// `Crs::synthesize(num_vars, domain_n, seed)` without materializing
+    /// any query.
+    pub fn generated(num_vars: usize, domain_n: usize, seed: u64) -> Self {
+        StreamingSrs {
+            source: SrsSource::Generated { seed },
+            num_vars,
+            domain_n,
+            _g: PhantomData,
+        }
+    }
+
+    /// Disk-backed source over chunk files previously written by
+    /// [`Self::write_to_dir`]. Headers are validated lazily at first read.
+    pub fn on_disk(dir: &Path, num_vars: usize, domain_n: usize) -> Self {
+        StreamingSrs {
+            source: SrsSource::Disk { dir: dir.to_path_buf() },
+            num_vars,
+            domain_n,
+            _g: PhantomData,
+        }
+    }
+
+    /// Variables the per-variable queries (A, B1, L, B2) cover.
+    pub fn num_vars(&self) -> usize {
+        self.num_vars
+    }
+
+    /// QAP domain size the H query derives from.
+    pub fn domain_n(&self) -> usize {
+        self.domain_n
+    }
+
+    /// Length of the H query (`domain_n − 1`, as in `Crs::synthesize`).
+    pub fn h_len(&self) -> usize {
+        self.domain_n.saturating_sub(1)
+    }
+}
+
+impl<G1: CurveParams, G2: CurveParams> StreamingSrs<G1, G2>
+where
+    G1::Base: WordCodec,
+    G2::Base: WordCodec,
+{
+    /// Chunked SRS serialization: stream all five `Crs::synthesize` query
+    /// walks for `seed` into chunk files under `dir`, `chunk` points at a
+    /// time — setup never holds more than one chunk resident. Returns the
+    /// disk-backed source over the written files.
+    pub fn write_to_dir(
+        dir: &Path,
+        num_vars: usize,
+        domain_n: usize,
+        seed: u64,
+        chunk: usize,
+    ) -> Result<Self, StreamError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| StreamError::Read { detail: format!("{}: {e}", dir.display()) })?;
+        let h_len = domain_n.saturating_sub(1);
+        let jobs_g1 = [
+            (A_FILE, 0xA1u64, num_vars),
+            (B1_FILE, 0xB1, num_vars),
+            (L_FILE, 0x11, num_vars),
+            (H_FILE, 0x41, h_len),
+        ];
+        for (file, xor, len) in jobs_g1 {
+            let mut walk = WalkPoints::<G1>::new(seed ^ xor, len);
+            write_points_file::<G1>(&dir.join(file), &mut walk, chunk)?;
+        }
+        let mut walk = WalkPoints::<G2>::new(seed ^ 0xB2, num_vars);
+        write_points_file::<G2>(&dir.join(B2_FILE), &mut walk, chunk)?;
+        Ok(Self::on_disk(dir, num_vars, domain_n))
+    }
+
+    // The per-variable streams open at the *caller's* `len` (the witness
+    // size), mirroring the resident prover's `query[..nv]` slicing — the
+    // stored/generated query may be larger than the circuit needs.
+    fn a_stream(&self, len: usize) -> Result<SrsStream<G1>, StreamError> {
+        open_stream::<G1>(&self.source, A_FILE, 0xA1, len, 0)
+    }
+
+    fn b1_stream(&self, len: usize) -> Result<SrsStream<G1>, StreamError> {
+        open_stream::<G1>(&self.source, B1_FILE, 0xB1, len, 0)
+    }
+
+    fn l_stream(&self, len: usize, skip: usize) -> Result<SrsStream<G1>, StreamError> {
+        open_stream::<G1>(&self.source, L_FILE, 0x11, len, skip)
+    }
+
+    fn h_stream(&self, len: usize) -> Result<SrsStream<G1>, StreamError> {
+        open_stream::<G1>(&self.source, H_FILE, 0x41, len, 0)
+    }
+
+    fn b2_stream(&self, len: usize) -> Result<SrsStream<G2>, StreamError> {
+        open_stream::<G2>(&self.source, B2_FILE, 0xB2, len, 0)
+    }
+}
+
+/// Chunked canonical-limb view of resident `Fp` values (the witness
+/// assignment, the QAP h coefficients): the conversion the resident
+/// prover does in one Θ(m) pass happens here one chunk at a time.
+pub struct WitnessStream<'a, P: FieldParams<4>> {
+    values: &'a [Fp<P, 4>],
+    cursor: usize,
+}
+
+impl<'a, P: FieldParams<4>> WitnessStream<'a, P> {
+    /// Stream `values`, front to back.
+    pub fn new(values: &'a [Fp<P, 4>]) -> Self {
+        WitnessStream { values, cursor: 0 }
+    }
+}
+
+impl<P: FieldParams<4>> ScalarStream for WitnessStream<'_, P> {
+    fn len(&self) -> usize {
+        self.values.len() - self.cursor
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<ScalarLimbs>, StreamError> {
+        let take = max.min(self.len());
+        let out = self.values[self.cursor..self.cursor + take]
+            .iter()
+            .map(Fp::to_canonical)
+            .collect();
+        self.cursor += take;
+        Ok(out)
+    }
+}
+
+/// What the streaming prover observed: the accounted memory envelope and
+/// the chunk geometry (the numbers `BENCH_memory.json` records and
+/// `tests/perf_smoke.rs` pins).
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    /// High-water mark of the chunk lane — never exceeds the budget.
+    pub peak_chunk_bytes: u64,
+    /// Θ(m) resident scalar inputs (witness + h coefficients), tracked
+    /// on the uncapped fixed lane.
+    pub fixed_bytes: u64,
+    /// The enforced budget, in bytes.
+    pub budget_bytes: u64,
+    /// Points per 𝔾₁ chunk the budget admits.
+    pub chunk_points_g1: usize,
+    /// Points per 𝔾₂ chunk the budget admits.
+    pub chunk_points_g2: usize,
+    /// Wall seconds of the whole streaming prove.
+    pub total_s: f64,
+}
+
+/// Run the five-MSM prover pipeline against a [`StreamingSrs`] in bounded
+/// memory: every query MSM streams through chunk sources under `budget`
+/// (enforced per chunk by a shared [`MemLedger`]). The proof is
+/// bit-identical (`eq_point`) to `Prover::prove` over the equivalent
+/// resident CRS. Uses `cfg`'s MSM plan, backend selection and NTT thread
+/// budget; `cfg.point_cache` and `cfg.pools` do not apply to the streaming
+/// path (both presume a resident point set) and are ignored.
+///
+/// Errors are typed: a failing or short chunk source, a malformed chunk
+/// file, or a budget that cannot hold one element all surface as
+/// [`JobError::StreamFailed`] — never a wrong proof, hang, or partially
+/// accounted ledger.
+pub fn prove_streaming<G1, G2, P>(
+    cs: &ConstraintSystem<P, 4>,
+    srs: &StreamingSrs<G1, G2>,
+    budget: MemoryBudget,
+    cfg: &ProverConfig<G1, G2>,
+) -> Result<(Proof<G1, G2>, StreamReport), JobError>
+where
+    G1: CurveParams,
+    G2: CurveParams,
+    P: FieldParams<4>,
+    G1::Base: WordCodec,
+    G2::Base: WordCodec,
+{
+    let start = Instant::now();
+    let chunk_g1 = chunk_for_budget::<G1>(budget.get());
+    let chunk_g2 = chunk_for_budget::<G2>(budget.get());
+    if chunk_g1 == 0 || chunk_g2 == 0 {
+        let needed = G1::AFFINE_BYTES.max(G2::AFFINE_BYTES) + SCALAR_BYTES;
+        return Err(StreamError::BudgetTooSmall { needed, budget: budget.get() }.into());
+    }
+    let nv = cs.num_variables();
+    if srs.num_vars() < nv {
+        return Err(JobError::StreamFailed(format!(
+            "SRS smaller than witness: {} vars vs {nv}",
+            srs.num_vars()
+        )));
+    }
+
+    // Same front half as the resident prover: witness evaluation + QAP.
+    let (a_evals, b_evals, c_evals) = cs.constraint_evals();
+    let (qapw, _ntt_phases) = qap::compute_h_with(&a_evals, &b_evals, &c_evals, cfg.ntt_threads)
+        .expect("domain within field 2-adicity");
+
+    let l_start = 1 + cs.num_public;
+    let h_len = qapw.h_coeffs.len().min(srs.h_len());
+
+    let ledger = MemLedger::new(budget);
+    // The Θ(m) inputs the streaming path still holds resident: the witness
+    // assignment and the QAP h coefficients (32 canonical bytes each).
+    ledger.note_fixed((cs.witness.len() + qapw.h_coeffs.len()) as u64 * SCALAR_BYTES);
+
+    let g1_backend = if cfg.auto_backend {
+        Backend::auto_for::<G1>(chunk_g1.min(nv), &cfg.msm)
+    } else {
+        cfg.backend
+    };
+    let g2_backend = if cfg.auto_backend {
+        Backend::auto_for::<G2>(chunk_g2.min(nv), &cfg.msm)
+    } else {
+        cfg.backend
+    };
+
+    let a_msm = msm_stream(
+        &mut srs.a_stream(nv)?,
+        &mut WitnessStream::new(&cs.witness),
+        g1_backend,
+        &cfg.msm,
+        chunk_g1,
+        &ledger,
+    )?;
+    let _b1_msm = msm_stream(
+        &mut srs.b1_stream(nv)?,
+        &mut WitnessStream::new(&cs.witness),
+        g1_backend,
+        &cfg.msm,
+        chunk_g1,
+        &ledger,
+    )?;
+    let l_msm = msm_stream(
+        &mut srs.l_stream(nv, l_start)?,
+        &mut WitnessStream::new(&cs.witness[l_start..]),
+        g1_backend,
+        &cfg.msm,
+        chunk_g1,
+        &ledger,
+    )?;
+    let h_msm = msm_stream(
+        &mut srs.h_stream(h_len)?,
+        &mut WitnessStream::new(&qapw.h_coeffs[..h_len]),
+        g1_backend,
+        &cfg.msm,
+        chunk_g1,
+        &ledger,
+    )?;
+    let b2_msm = msm_stream(
+        &mut srs.b2_stream(nv)?,
+        &mut WitnessStream::new(&cs.witness),
+        g2_backend,
+        &cfg.msm,
+        chunk_g2,
+        &ledger,
+    )?;
+
+    let proof = Proof { a: a_msm, b: b2_msm, c: l_msm.add(&h_msm) };
+    let report = StreamReport {
+        peak_chunk_bytes: ledger.peak_bytes(),
+        fixed_bytes: ledger.fixed_bytes(),
+        budget_bytes: budget.get(),
+        chunk_points_g1: chunk_g1,
+        chunk_points_g2: chunk_g2,
+        total_s: start.elapsed().as_secs_f64(),
+    };
+    Ok((proof, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{Bn254G1, Bn254G2};
+    use crate::ff::params::Bn254FrParams;
+    use crate::snark::setup::CrsBn254;
+    use crate::snark::{circuits, Prover};
+
+    fn cs_and_resident_proof() -> (
+        ConstraintSystem<Bn254FrParams, 4>,
+        Proof<Bn254G1, Bn254G2>,
+        usize,
+        usize,
+    ) {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(150, 77);
+        let domain_n = (cs.num_constraints().max(2)).next_power_of_two();
+        let nv = cs.num_variables();
+        let crs = CrsBn254::synthesize(nv, domain_n, 9);
+        let prover = Prover::<_, _, Bn254FrParams>::new(crs);
+        let (proof, _) = prover.prove(&cs);
+        (cs, proof, nv, domain_n)
+    }
+
+    #[test]
+    fn generated_streaming_matches_resident_prover() {
+        let (cs, want, nv, domain_n) = cs_and_resident_proof();
+        let srs = StreamingSrs::<Bn254G1, Bn254G2>::generated(nv, domain_n, 9);
+        // a budget admitting ~16 G2 points per chunk — far below Θ(m)
+        let budget = MemoryBudget::bytes(16 * (Bn254G2::AFFINE_BYTES + SCALAR_BYTES));
+        let (got, report) =
+            prove_streaming(&cs, &srs, budget, &ProverConfig::default()).unwrap();
+        assert!(got.a.eq_point(&want.a));
+        assert!(got.b.eq_point(&want.b));
+        assert!(got.c.eq_point(&want.c));
+        assert!(report.peak_chunk_bytes <= report.budget_bytes);
+        assert_eq!(report.chunk_points_g2, 16);
+    }
+
+    #[test]
+    fn disk_streaming_matches_resident_prover() {
+        let (cs, want, nv, domain_n) = cs_and_resident_proof();
+        let dir = std::env::temp_dir().join("ifzkp_srs_unit");
+        let srs =
+            StreamingSrs::<Bn254G1, Bn254G2>::write_to_dir(&dir, nv, domain_n, 9, 37).unwrap();
+        let budget = MemoryBudget::mib(1);
+        let (got, _) = prove_streaming(&cs, &srs, budget, &ProverConfig::default()).unwrap();
+        assert!(got.a.eq_point(&want.a));
+        assert!(got.b.eq_point(&want.b));
+        assert!(got.c.eq_point(&want.c));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_too_small_is_typed() {
+        let (cs, _, nv, domain_n) = cs_and_resident_proof();
+        let srs = StreamingSrs::<Bn254G1, Bn254G2>::generated(nv, domain_n, 9);
+        // cannot hold one G2 element (needs 160 bytes on BN254)
+        let err = prove_streaming(
+            &cs,
+            &srs,
+            MemoryBudget::bytes(100),
+            &ProverConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::StreamFailed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn undersized_srs_is_typed() {
+        let (cs, _, nv, domain_n) = cs_and_resident_proof();
+        let srs = StreamingSrs::<Bn254G1, Bn254G2>::generated(nv - 1, domain_n, 9);
+        let err = prove_streaming(
+            &cs,
+            &srs,
+            MemoryBudget::mib(1),
+            &ProverConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::StreamFailed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn witness_stream_chunks_match_one_shot_conversion() {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(40, 3);
+        let want: Vec<ScalarLimbs> = cs.witness.iter().map(Fp::to_canonical).collect();
+        let mut ws = WitnessStream::new(&cs.witness);
+        let mut got = Vec::new();
+        while !ws.is_empty() {
+            got.extend(ws.next_chunk(7).unwrap());
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,261 @@
+//! Memory-budget accounting for the streaming prover.
+//!
+//! The paper's accelerator streams point/scalar chunks from DDR precisely
+//! because the full MSM working set does not fit on-chip; the host-side
+//! streaming pipeline (`msm::stream`, `snark::stream`) makes the same move
+//! against host RAM and needs the budget to be *enforced*, not advisory.
+//! [`MemLedger`] is that enforcement point: every streamed chunk charges
+//! its payload bytes before the chunk is read and credits them (RAII) when
+//! the chunk is dropped, so the accounted high-water mark
+//! ([`MemLedger::peak_bytes`]) provably never exceeds the configured
+//! [`MemoryBudget`] — a charge that would exceed it fails with a typed
+//! [`BudgetExceeded`] instead.
+//!
+//! Two lanes, deliberately separate:
+//!
+//! * **chunk lane** (`charge`/[`MemCharge`]) — transient streamed bytes,
+//!   capped by the budget; this is the lane `tests/perf_smoke.rs` pins.
+//! * **fixed lane** ([`MemLedger::note_fixed`]) — Θ(m) inputs the
+//!   streaming path still holds resident (the witness values, the QAP's
+//!   h coefficients). Tracked and reported, never capped: the streaming
+//!   guarantee is "peak ≤ budget + fixed", and the fixed term is pinned
+//!   exactly so it cannot silently absorb chunk traffic.
+//!
+//! Executor scratch (bucket arrays, the digit matrix) is a deterministic
+//! function of chunk size and plan — bounded by the same budget choice —
+//! and is accounted by the plan layer, not here (see DESIGN.md
+//! "Streaming prover" for the accounting rule).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of bytes one canonical scalar occupies in a streamed chunk
+/// (`ScalarLimbs = [u64; 4]`).
+pub const SCALAR_BYTES: u64 = 32;
+
+/// A peak-resident-bytes cap for the streaming pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MemoryBudget {
+    bytes: u64,
+}
+
+impl MemoryBudget {
+    /// A budget of exactly `bytes` bytes.
+    pub const fn bytes(bytes: u64) -> Self {
+        MemoryBudget { bytes }
+    }
+
+    /// A budget of `mib` mebibytes.
+    pub const fn mib(mib: u64) -> Self {
+        MemoryBudget { bytes: mib << 20 }
+    }
+
+    /// No cap (`u64::MAX` bytes) — accounting only.
+    pub const fn unlimited() -> Self {
+        MemoryBudget { bytes: u64::MAX }
+    }
+
+    /// The cap in bytes.
+    pub const fn get(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Is this the uncapped sentinel?
+    pub const fn is_unlimited(&self) -> bool {
+        self.bytes == u64::MAX
+    }
+}
+
+/// Typed refusal from [`MemLedger::charge`]: admitting `requested` more
+/// bytes on top of `live` would exceed `budget`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BudgetExceeded {
+    /// Bytes the refused charge asked for.
+    pub requested: u64,
+    /// Live (already charged) bytes at refusal time.
+    pub live: u64,
+    /// The configured cap.
+    pub budget: u64,
+}
+
+impl fmt::Display for BudgetExceeded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "memory budget exceeded: charging {} bytes over {} live would pass the {}-byte budget",
+            self.requested, self.live, self.budget
+        )
+    }
+}
+
+impl std::error::Error for BudgetExceeded {}
+
+/// Live/peak/fixed byte accounting with an enforced budget on the chunk
+/// lane. Thread-safe: charges are atomic, so parallel streams sharing one
+/// ledger stay within the one budget collectively.
+#[derive(Debug)]
+pub struct MemLedger {
+    budget: MemoryBudget,
+    live: AtomicU64,
+    peak: AtomicU64,
+    fixed: AtomicU64,
+}
+
+impl MemLedger {
+    /// A ledger enforcing `budget` on the chunk lane.
+    pub fn new(budget: MemoryBudget) -> Self {
+        MemLedger {
+            budget,
+            live: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+            fixed: AtomicU64::new(0),
+        }
+    }
+
+    /// An accounting-only ledger (unlimited budget).
+    pub fn unlimited() -> Self {
+        MemLedger::new(MemoryBudget::unlimited())
+    }
+
+    /// The configured budget.
+    pub fn budget(&self) -> MemoryBudget {
+        self.budget
+    }
+
+    /// Charge `bytes` to the chunk lane, failing (without side effects) if
+    /// the budget would be exceeded. The returned guard credits the bytes
+    /// back when dropped, so a chunk's accounting lifetime is exactly its
+    /// ownership lifetime — early returns and errors can never leak a
+    /// charge.
+    pub fn charge(&self, bytes: u64) -> Result<MemCharge<'_>, BudgetExceeded> {
+        let mut cur = self.live.load(Ordering::SeqCst);
+        loop {
+            let next = cur.saturating_add(bytes);
+            if next > self.budget.get() {
+                return Err(BudgetExceeded {
+                    requested: bytes,
+                    live: cur,
+                    budget: self.budget.get(),
+                });
+            }
+            match self.live.compare_exchange(cur, next, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => {
+                    self.peak.fetch_max(next, Ordering::SeqCst);
+                    return Ok(MemCharge { ledger: self, bytes });
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Record `bytes` of Θ(m) resident input on the (uncapped) fixed lane.
+    pub fn note_fixed(&self, bytes: u64) {
+        self.fixed.fetch_add(bytes, Ordering::SeqCst);
+    }
+
+    /// Currently charged chunk bytes.
+    pub fn live_bytes(&self) -> u64 {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of the chunk lane — never exceeds the budget.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    /// Total bytes recorded on the fixed lane.
+    pub fn fixed_bytes(&self) -> u64 {
+        self.fixed.load(Ordering::SeqCst)
+    }
+}
+
+/// RAII guard for one chunk-lane charge (see [`MemLedger::charge`]).
+#[derive(Debug)]
+pub struct MemCharge<'a> {
+    ledger: &'a MemLedger,
+    bytes: u64,
+}
+
+impl MemCharge<'_> {
+    /// Bytes this charge holds.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for MemCharge<'_> {
+    fn drop(&mut self) {
+        self.ledger.live.fetch_sub(self.bytes, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_credit_and_peak() {
+        let l = MemLedger::new(MemoryBudget::bytes(1000));
+        let a = l.charge(400).unwrap();
+        assert_eq!(l.live_bytes(), 400);
+        let b = l.charge(600).unwrap();
+        assert_eq!(l.live_bytes(), 1000);
+        assert_eq!(l.peak_bytes(), 1000);
+        drop(a);
+        assert_eq!(l.live_bytes(), 600);
+        drop(b);
+        assert_eq!(l.live_bytes(), 0);
+        // peak is a high-water mark: credits never lower it
+        assert_eq!(l.peak_bytes(), 1000);
+    }
+
+    #[test]
+    fn budget_is_enforced_exactly() {
+        let l = MemLedger::new(MemoryBudget::bytes(100));
+        let _a = l.charge(60).unwrap();
+        let err = l.charge(41).unwrap_err();
+        assert_eq!(err, BudgetExceeded { requested: 41, live: 60, budget: 100 });
+        // the refused charge left no trace
+        assert_eq!(l.live_bytes(), 60);
+        assert_eq!(l.peak_bytes(), 60);
+        // the exact boundary is admitted
+        let _b = l.charge(40).unwrap();
+        assert_eq!(l.peak_bytes(), 100);
+    }
+
+    #[test]
+    fn fixed_lane_is_tracked_but_uncapped() {
+        let l = MemLedger::new(MemoryBudget::bytes(10));
+        l.note_fixed(1 << 30);
+        l.note_fixed(12);
+        assert_eq!(l.fixed_bytes(), (1 << 30) + 12);
+        // the chunk lane is unaffected by fixed notes
+        assert_eq!(l.live_bytes(), 0);
+        assert!(l.charge(11).is_err());
+        assert!(l.charge(10).is_ok());
+    }
+
+    #[test]
+    fn unlimited_never_refuses() {
+        let l = MemLedger::unlimited();
+        assert!(l.budget().is_unlimited());
+        let _a = l.charge(u64::MAX / 2).unwrap();
+        let _b = l.charge(u64::MAX / 2).unwrap();
+        assert!(l.charge(u64::MAX).is_ok());
+    }
+
+    #[test]
+    fn budget_constructors() {
+        assert_eq!(MemoryBudget::mib(2).get(), 2 << 20);
+        assert_eq!(MemoryBudget::bytes(7).get(), 7);
+        assert!(!MemoryBudget::bytes(7).is_unlimited());
+        assert!(MemoryBudget::mib(1) < MemoryBudget::mib(2));
+    }
+
+    #[test]
+    fn error_displays_the_numbers() {
+        let e = BudgetExceeded { requested: 5, live: 9, budget: 12 };
+        let s = e.to_string();
+        assert!(s.contains('5') && s.contains('9') && s.contains("12"), "{s}");
+    }
+}

@@ -4,8 +4,9 @@
 //! `criterion`, so the pieces of those crates the project needs are
 //! implemented here from scratch: a seedable RNG ([`rng`]), a JSON emitter
 //! ([`json`]), hex codecs ([`hex`]), wall-clock instrumentation
-//! ([`stopwatch`]), a tiny leveled logger ([`log`]) and a miniature
-//! property-testing harness ([`prop`]).
+//! ([`stopwatch`]), a tiny leveled logger ([`log`]), a miniature
+//! property-testing harness ([`prop`]) and the enforced memory-budget
+//! ledger the streaming prover charges its chunks against ([`mem`]).
 
 pub mod rng;
 pub mod hex;
@@ -13,7 +14,9 @@ pub mod json;
 pub mod stopwatch;
 pub mod log;
 pub mod prop;
+pub mod mem;
 
+pub use mem::{MemLedger, MemoryBudget};
 pub use rng::Rng;
 pub use stopwatch::Stopwatch;
 

@@ -269,6 +269,58 @@ fn qap_reduction_reuses_one_cached_plan() {
 }
 
 #[test]
+fn streaming_budget_high_water_pinned_exactly() {
+    // The streaming prover's memory contract, pinned exactly:
+    // * per-element bytes are 96 (G1 affine + scalar) and 160 (G2) — the
+    //   constants every budget→chunk computation divides by;
+    // * a budget that is a common multiple of both admits whole chunks in
+    //   both lanes, so the accounted high-water EQUALS the budget;
+    // * the fixed lane is exactly (witness + h_coeffs) · 32 bytes — the
+    //   scalar vectors the prover keeps resident while points stream;
+    // * the budget is an order of magnitude below the resident Θ(m)
+    //   working set, and a budget below one element is a typed error.
+    use ifzkp::coordinator::request::JobError;
+    use ifzkp::ec::{Bn254G2, CurveParams};
+    use ifzkp::snark::{circuits, prove_streaming, qap, ProverConfig, StreamingSrs};
+    use ifzkp::util::mem::{MemoryBudget, SCALAR_BYTES};
+    let per_g1 = Bn254G1::AFFINE_BYTES + SCALAR_BYTES;
+    let per_g2 = Bn254G2::AFFINE_BYTES + SCALAR_BYTES;
+    assert_eq!(per_g1, 96, "G1 streamed element size drifted");
+    assert_eq!(per_g2, 160, "G2 streamed element size drifted");
+    let cs = circuits::mul_chain::<Bn254FrParams, 4>(900, SEED);
+    let dn = cs.num_constraints().max(2).next_power_of_two();
+    let nv = cs.num_variables();
+    let srs = StreamingSrs::<Bn254G1, Bn254G2>::generated(nv, dn, 3);
+    // lcm(96, 160) = 480: both lanes fill whole chunks with zero slack
+    let budget_bytes = 480 * 8;
+    assert!(nv >= budget_bytes as usize / 96, "circuit too small for a full-chunk pin");
+    let budget = MemoryBudget::bytes(budget_bytes);
+    let (_, report) =
+        prove_streaming(&cs, &srs, budget, &ProverConfig::default()).unwrap();
+    assert_eq!(report.chunk_points_g1, 40, "budget→G1 chunk sizing drifted");
+    assert_eq!(report.chunk_points_g2, 24, "budget→G2 chunk sizing drifted");
+    // the accounted high-water is the budget, exactly — never above
+    assert_eq!(report.peak_chunk_bytes, budget_bytes, "high-water != budget");
+    // fixed lane: the resident scalar vectors, exactly
+    let (a, b, c) = cs.constraint_evals();
+    let (qapw, _) = qap::compute_h_with(&a, &b, &c, 1).expect("domain fits");
+    let want_fixed = (cs.witness.len() + qapw.h_coeffs.len()) as u64 * SCALAR_BYTES;
+    assert_eq!(report.fixed_bytes, want_fixed, "fixed-lane accounting drifted");
+    // streaming runs where the resident prover is Θ(m): the G1 queries
+    // alone are an order of magnitude above the whole chunk budget
+    assert!(
+        nv as u64 * per_g1 >= 8 * budget_bytes,
+        "test lost its point: resident set {} vs budget {budget_bytes}",
+        nv as u64 * per_g1
+    );
+    // a budget below one element is refused with a typed error, up front
+    let err = prove_streaming(&cs, &srs, MemoryBudget::bytes(per_g2 - 1), &Default::default())
+        .expect_err("sub-element budget must be refused");
+    assert!(matches!(err, JobError::StreamFailed(_)), "{err:?}");
+    assert!(err.to_string().contains("budget"), "{err}");
+}
+
+#[test]
 fn chunked_backend_modmul_overhead_stays_bounded() {
     // Single-thread chunked runs inline, so the thread-local counters see
     // every op. The fused all-window batch-affine fill must not cost more

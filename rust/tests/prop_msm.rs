@@ -558,6 +558,207 @@ fn router_affinity_is_sticky() {
 }
 
 #[test]
+fn streamed_msm_matches_resident_matrix() {
+    // the streaming acceptance matrix: chunk sizes {1, 7, 2^10, m} ×
+    // both curves × {Full, Glv} × chunked {1, 4} threads, every cell
+    // bit-identical to the resident execute; chunk=1 runs on a small m
+    // (per-point chunks at 2^10+ points would dominate the suite), the
+    // ragged-tail chunks on m > 2^10. Both shard shapes cross-check the
+    // same reference, so streamed folds and sharded merges agree too.
+    use ifzkp::msm::stream::{msm_stream, SlicePoints, SliceScalars};
+    use ifzkp::util::mem::MemLedger;
+    fn case<C: ifzkp::ec::CurveParams>(
+        rng: &mut ifzkp::util::rng::Rng,
+        m: usize,
+        chunks: &[usize],
+    ) -> Result<(), String> {
+        let w = points::workload::<C>(m, rng.next_u64());
+        for glv in [false, true] {
+            let mut cfg = MsmConfig::new(8, Reduction::Recursive { k2: 3 });
+            if glv {
+                cfg = cfg.glv();
+            }
+            let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+            for threads in [1usize, 4] {
+                for &chunk in chunks {
+                    let chunk = chunk.min(m).max(1);
+                    let ledger = MemLedger::unlimited();
+                    let mut ps = SlicePoints::new(&w.points);
+                    let mut ss = SliceScalars::new(&w.scalars);
+                    let got = msm_stream(
+                        &mut ps,
+                        &mut ss,
+                        Backend::Chunked { threads },
+                        &cfg,
+                        chunk,
+                        &ledger,
+                    )
+                    .map_err(|e| format!("stream failed: {e}"))?;
+                    prop_assert!(
+                        got.eq_point(&want),
+                        "{} m={m} glv={glv} threads={threads} chunk={chunk}",
+                        C::NAME
+                    );
+                    prop_assert!(
+                        ledger.live_bytes() == 0,
+                        "{} chunk={chunk}: charges leaked",
+                        C::NAME
+                    );
+                }
+            }
+            // both shard shapes merge to the same reference the streamed
+            // folds just matched
+            let windows = MsmPlan::for_curve::<C>(&cfg).windows;
+            for specs in [partial::chunk_specs(m, 3), partial::window_specs(windows, 3)] {
+                let mut parts: Vec<PartialMsm<C>> = specs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| PartialMsm {
+                        index: i,
+                        spec: *s,
+                        output: partial::execute_shard(
+                            Backend::Pippenger,
+                            &w.points,
+                            &w.scalars,
+                            &cfg,
+                            s,
+                        ),
+                    })
+                    .collect();
+                parts.reverse();
+                prop_assert!(
+                    partial::merge(&mut parts).eq_point(&want),
+                    "{} m={m} glv={glv} {specs:?}",
+                    C::NAME
+                );
+            }
+        }
+        Ok(())
+    }
+    check_with(Config { cases: 2, seed: 0x57E4 }, "streamed == resident", |rng| {
+        // small m: per-point (chunk=1) and tiny chunks
+        let small = 24 + rng.below(40) as usize;
+        case::<Bn254G1>(rng, small, &[1, 7, usize::MAX])?;
+        case::<ifzkp::ec::Bls12381G1>(rng, small, &[1, 7, usize::MAX])?;
+        // m > 2^10: the 2^10 chunk leaves a ragged tail, plus one-shot m
+        let big = 1025 + rng.below(120) as usize;
+        case::<Bn254G1>(rng, big, &[7, 1 << 10, usize::MAX])?;
+        case::<ifzkp::ec::Bls12381G1>(rng, big, &[7, 1 << 10, usize::MAX])?;
+        Ok(())
+    });
+}
+
+#[test]
+fn stream_faults_surface_typed_errors_and_retry_identically() {
+    // fault injection: a reader failing at chunk k (and one silently
+    // under-delivering) must surface a typed StreamError — never a wrong
+    // result, hang, or leaked ledger charge — and a fresh stream retries
+    // to the bit-identical answer
+    use ifzkp::msm::stream::{
+        msm_stream, FailingPoints, ShortPoints, SlicePoints, SliceScalars, StreamError,
+    };
+    use ifzkp::util::mem::MemLedger;
+    let m = 100usize;
+    let chunk = 16usize;
+    let w = points::workload::<Bn254G1>(m, 42);
+    let cfg = MsmConfig::auto(m);
+    let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+    for fail_at in [0usize, 2, 6] {
+        let ledger = MemLedger::unlimited();
+        let mut ps = FailingPoints::new(SlicePoints::new(&w.points), fail_at);
+        let mut ss = SliceScalars::new(&w.scalars);
+        let err = msm_stream(&mut ps, &mut ss, Backend::Pippenger, &cfg, chunk, &ledger)
+            .expect_err("injected failure must surface");
+        assert!(matches!(err, StreamError::Read { .. }), "fail_at={fail_at}: {err:?}");
+        assert!(err.to_string().contains(&format!("chunk {fail_at}")), "{err}");
+        assert_eq!(ledger.live_bytes(), 0, "failed stream leaked its charge");
+        let mut ps = SlicePoints::new(&w.points);
+        let mut ss = SliceScalars::new(&w.scalars);
+        let got = msm_stream(&mut ps, &mut ss, Backend::Pippenger, &cfg, chunk, &ledger)
+            .expect("fresh stream retries cleanly");
+        assert!(got.eq_point(&want), "retry diverged after fail_at={fail_at}");
+    }
+    for short_at in [0usize, 3] {
+        let ledger = MemLedger::unlimited();
+        let mut ps = ShortPoints::new(SlicePoints::new(&w.points), short_at);
+        let mut ss = SliceScalars::new(&w.scalars);
+        let err = msm_stream(&mut ps, &mut ss, Backend::Pippenger, &cfg, chunk, &ledger)
+            .expect_err("short chunk must surface");
+        match err {
+            StreamError::ShortChunk { chunk: c, expected, got } => {
+                assert_eq!(c, short_at);
+                assert_eq!(expected, 16);
+                assert_eq!(got, 15);
+            }
+            other => panic!("expected ShortChunk, got {other:?}"),
+        }
+        assert_eq!(ledger.live_bytes(), 0, "short stream leaked its charge");
+    }
+}
+
+#[test]
+fn ragged_tail_ranges_regression_m_prime() {
+    // audit regression for the chunk-offset math (`msm_range` /
+    // window-range shards): m prime (2053) with a 2^10 chunk leaves a
+    // 5-point tail, so every boundary is a non-multiple-of-chunk offset.
+    // Each range must equal its direct sub-MSM, the folded ranges and the
+    // streamed fold must equal the resident reference, and window-range
+    // shard merges must agree at shard counts that do not divide the plan.
+    use ifzkp::ec::Jacobian;
+    use ifzkp::msm::stream::{msm_stream, SlicePoints, SliceScalars};
+    use ifzkp::util::mem::MemLedger;
+    let m = 2053usize; // prime — not a multiple of any chunk size
+    let chunk = 1usize << 10;
+    let w = points::workload::<Bn254G1>(m, 7);
+    let cfg = MsmConfig::new(12, Reduction::Recursive { k2: 6 }).glv();
+    let want = msm::execute(Backend::Pippenger, &w.points, &w.scalars, &cfg);
+    let table = msm::PrecompTable::<Bn254G1>::build(&w.points, &cfg);
+    let mut acc = Jacobian::<Bn254G1>::infinity();
+    let mut lo = 0usize;
+    while lo < m {
+        let hi = (lo + chunk).min(m);
+        let part = table.msm_range(lo, &w.scalars[lo..hi]);
+        let direct =
+            msm::execute(Backend::Pippenger, &w.points[lo..hi], &w.scalars[lo..hi], &cfg);
+        assert!(part.eq_point(&direct), "msm_range {lo}..{hi} != direct sub-MSM");
+        acc = acc.add(&part);
+        lo = hi;
+    }
+    assert!(acc.eq_point(&want), "folded table ranges != resident reference");
+    let ledger = MemLedger::unlimited();
+    let mut ps = SlicePoints::new(&w.points);
+    let mut ss = SliceScalars::new(&w.scalars);
+    let streamed = msm_stream(&mut ps, &mut ss, Backend::Pippenger, &cfg, chunk, &ledger)
+        .expect("streamed fold");
+    assert!(streamed.eq_point(&want), "streamed fold != resident reference");
+    let windows = MsmPlan::for_curve::<Bn254G1>(&cfg).windows;
+    for shards in [2usize, 3, 5] {
+        for specs in [partial::chunk_specs(m, shards), partial::window_specs(windows, shards)] {
+            let mut parts: Vec<PartialMsm<Bn254G1>> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| PartialMsm {
+                    index: i,
+                    spec: *s,
+                    output: partial::execute_shard(
+                        Backend::Pippenger,
+                        &w.points,
+                        &w.scalars,
+                        &cfg,
+                        s,
+                    ),
+                })
+                .collect();
+            parts.reverse();
+            assert!(
+                partial::merge(&mut parts).eq_point(&want),
+                "shards={shards} {specs:?} != resident reference"
+            );
+        }
+    }
+}
+
+#[test]
 fn reduction_strategies_equivalent_on_random_buckets() {
     use ifzkp::ec::Jacobian;
     check_with(Config { cases: 10, seed: 0xBCE7 }, "reduce equivalence", |rng| {
