@@ -14,7 +14,7 @@
 
 use ifzkp::coordinator::shard::ShardPool;
 use ifzkp::ec::{points, Bls12381G1, Bn254G1, CurveParams, Jacobian};
-use ifzkp::ff::{Field, FpBls12381, FpBn254, FrBn254};
+use ifzkp::ff::{Field, FieldParams, Fp, FpBls12381, FpBn254, FpLanes, FrBn254, LANES};
 use ifzkp::msm::{self, pippenger, MsmConfig, MsmPlan, Reduction, ShardPolicy, Slicing};
 use ifzkp::ntt;
 use ifzkp::util::json::Json;
@@ -85,6 +85,40 @@ fn bench_field<F: Field>(results: &mut Results, label: &str, iters: u64) {
     std::hint::black_box(acc);
 }
 
+/// The `ff` section's core entries: four chained scalar ops against one
+/// chained lane op, same op count, with bit-identity asserted across the
+/// whole timed chain (warmup + timed iterations run the same schedule on
+/// both sides).
+fn bench_lanes<P: FieldParams<N>, const N: usize>(results: &mut Results, label: &str, iters: u64) {
+    let mut rng = Rng::new(6);
+    let a: [Fp<P, N>; LANES] = std::array::from_fn(|_| Fp::random(&mut rng));
+    let b: [Fp<P, N>; LANES] = std::array::from_fn(|_| Fp::random(&mut rng));
+    let mut sa = a;
+    bench(results, &format!("ff {label} scalar mul x4"), iters, || {
+        for l in 0..LANES {
+            sa[l] = sa[l].mul(&b[l]);
+        }
+    });
+    let mut la = FpLanes::from_elems(&a);
+    let lb = FpLanes::from_elems(&b);
+    bench(results, &format!("ff {label} lane mul4"), iters, || {
+        la = la.mul4(&lb);
+    });
+    assert_eq!(la.to_elems(), sa, "{label}: lane/scalar mul chains diverged");
+    let mut sq = a;
+    bench(results, &format!("ff {label} scalar square x4"), iters, || {
+        for l in 0..LANES {
+            sq[l] = sq[l].square();
+        }
+    });
+    let mut lq = FpLanes::from_elems(&a);
+    bench(results, &format!("ff {label} lane square4"), iters, || {
+        lq = lq.square4();
+    });
+    assert_eq!(lq.to_elems(), sq, "{label}: lane/scalar square chains diverged");
+    std::hint::black_box((&sa, &sq));
+}
+
 fn bench_curve<C: CurveParams>(results: &mut Results, label: &str, iters: u64) {
     let pts = points::generate_points_walk::<C>(4, 2);
     let mut p = pts[0].to_jacobian();
@@ -112,6 +146,14 @@ fn main() {
     bench_field::<FpBn254>(&mut results, "Fp(BN254, 4x64)", 200_000 / scale);
     bench_field::<FpBls12381>(&mut results, "Fp(BLS12-381, 6x64)", 100_000 / scale);
     bench_field::<ifzkp::ff::Fp2Bn254>(&mut results, "Fp2(BN254)", 50_000 / scale);
+
+    // the vectorized field core: one 4-lane op vs four scalar ops
+    bench_lanes::<ifzkp::ff::params::Bn254FpParams, 4>(&mut results, "Fp(BN254)", 50_000 / scale);
+    bench_lanes::<ifzkp::ff::params::Bls12381FpParams, 6>(
+        &mut results,
+        "Fp(BLS12-381)",
+        25_000 / scale,
+    );
 
     bench_curve::<Bn254G1>(&mut results, "BN254 G1", 20_000 / scale);
     bench_curve::<Bls12381G1>(&mut results, "BLS12-381 G1", 10_000 / scale);
@@ -214,6 +256,56 @@ fn main() {
             &format!("BN254 MSM {msm_label} batch-affine {label} ns/point"),
             t_aff * 1e9 / msm_m as f64,
         );
+    }
+
+    // lane-fed 2^16 end-to-end deltas (the ff section's acceptance
+    // points): the batch-affine fill and the planned serial NTT both run
+    // their field inner loops through the 4-lane core now, so these two
+    // entries track what the lane core buys end to end. Like the other
+    // 2^16 sections, deliberately NOT scaled by IFZKP_BENCH_QUICK — the
+    // deltas only mean something at the acceptance size, and both are
+    // bounded at seconds.
+    {
+        let m: usize = 1 << 16;
+        let w = points::workload::<Bn254G1>(m, 3);
+        let cfg = MsmConfig::new(12, Reduction::Recursive { k2: 6 }).glv();
+        let sw = Stopwatch::start();
+        let jac = msm::msm_pippenger(&w.points, &w.scalars, &cfg);
+        let t_jac = sw.secs();
+        let sw = Stopwatch::start();
+        let aff = msm::batch_affine::msm(&w.points, &w.scalars, &cfg);
+        let t_aff = sw.secs();
+        assert!(aff.eq_point(&jac), "lane-fed batch-affine diverged at 2^16");
+        println!(
+            "ff 2^16 MSM lane batch-affine fill           {:>10.1} ns/point  (vs jacobian {:.1}; {:.2}x)",
+            t_aff * 1e9 / m as f64,
+            t_jac * 1e9 / m as f64,
+            t_jac / t_aff
+        );
+        results.record("ff 2^16 msm lane batch-affine ns/point", t_aff * 1e9 / m as f64);
+        results.record("ff 2^16 msm jacobian ns/point", t_jac * 1e9 / m as f64);
+
+        let n: usize = 1 << 16;
+        let mut rng = Rng::new(7);
+        let base: Vec<FrBn254> = (0..n).map(|_| FrBn254::random(&mut rng)).collect();
+        let plan = ntt::NttPlan::<ifzkp::ff::params::Bn254FrParams, 4>::new(n).unwrap();
+        let mut serial = base.clone();
+        let sw = Stopwatch::start();
+        ntt::ntt_in_place(&mut serial, &plan.omega);
+        let t_serial = sw.secs();
+        let mut planned = base.clone();
+        let sw = Stopwatch::start();
+        plan.ntt(&mut planned, 1);
+        let t_planned = sw.secs();
+        assert_eq!(planned, serial, "lane-fed planned NTT diverged at 2^16");
+        println!(
+            "ff 2^16 NTT lane planned x1                  {:>10.1} ns/element  (vs reference {:.1}; {:.2}x)",
+            t_planned * 1e9 / n as f64,
+            t_serial * 1e9 / n as f64,
+            t_serial / t_planned
+        );
+        results.record("ff 2^16 ntt lane planned x1 ns/element", t_planned * 1e9 / n as f64);
+        results.record("ff 2^16 ntt serial reference ns/element", t_serial * 1e9 / n as f64);
     }
 
     // chunk-parallel runtime vs window-parallel at 2^16 (the acceptance

@@ -12,6 +12,7 @@
 //! regenerated from *measured* operation counts rather than formulas.
 
 use super::bigint::{self, adc, mac, sbb};
+use super::lanes::FpLanes;
 use super::opcount;
 use crate::util::rng::Rng;
 use std::fmt;
@@ -89,6 +90,37 @@ pub trait Field:
     /// Order of the field minus one, as little-endian limbs (q−1; for Fp
     /// this is p−1, for Fp² it is p²−1). Drives generic Tonelli–Shanks.
     fn order_minus_one() -> Vec<u64>;
+
+    /// Four independent multiplications: `out[l] = a[l]·b[l]`, with no
+    /// cross-lane data flow. The default is the scalar loop (what
+    /// extension fields keep); [`Fp`] overrides it with the
+    /// limb-interleaved 4-lane Montgomery core in [`super::lanes`].
+    /// Counts 4 muls either way, so pinned op budgets stay honest, and
+    /// each lane is bit-identical to the scalar op by construction.
+    #[inline]
+    fn mul4(a: &[Self; 4], b: &[Self; 4]) -> [Self; 4] {
+        [a[0].mul(&b[0]), a[1].mul(&b[1]), a[2].mul(&b[2]), a[3].mul(&b[3])]
+    }
+    /// Four independent squarings (see [`Field::mul4`]).
+    #[inline]
+    fn square4(a: &[Self; 4]) -> [Self; 4] {
+        [a[0].square(), a[1].square(), a[2].square(), a[3].square()]
+    }
+    /// Four independent additions (see [`Field::mul4`]).
+    #[inline]
+    fn add4(a: &[Self; 4], b: &[Self; 4]) -> [Self; 4] {
+        [a[0].add(&b[0]), a[1].add(&b[1]), a[2].add(&b[2]), a[3].add(&b[3])]
+    }
+    /// Four independent subtractions (see [`Field::mul4`]).
+    #[inline]
+    fn sub4(a: &[Self; 4], b: &[Self; 4]) -> [Self; 4] {
+        [a[0].sub(&b[0]), a[1].sub(&b[1]), a[2].sub(&b[2]), a[3].sub(&b[3])]
+    }
+    /// Four independent doublings (see [`Field::mul4`]).
+    #[inline]
+    fn double4(a: &[Self; 4]) -> [Self; 4] {
+        [a[0].double(), a[1].double(), a[2].double(), a[3].double()]
+    }
 }
 
 /// A prime-field element in Montgomery form.
@@ -445,6 +477,31 @@ impl<P: FieldParams<N>, const N: usize> Field for Fp<P, N> {
         let mut v = P::MODULUS.to_vec();
         v[0] -= 1; // p odd ⇒ no borrow
         v
+    }
+
+    // Lane overrides: route through the limb-interleaved 4-lane core so
+    // generic consumers (batch-affine fill, batch_invert) vectorize
+    // automatically over prime fields while extension fields keep the
+    // scalar defaults.
+    #[inline]
+    fn mul4(a: &[Self; 4], b: &[Self; 4]) -> [Self; 4] {
+        FpLanes::from_elems(a).mul4(&FpLanes::from_elems(b)).to_elems()
+    }
+    #[inline]
+    fn square4(a: &[Self; 4]) -> [Self; 4] {
+        FpLanes::from_elems(a).square4().to_elems()
+    }
+    #[inline]
+    fn add4(a: &[Self; 4], b: &[Self; 4]) -> [Self; 4] {
+        FpLanes::from_elems(a).add4(&FpLanes::from_elems(b)).to_elems()
+    }
+    #[inline]
+    fn sub4(a: &[Self; 4], b: &[Self; 4]) -> [Self; 4] {
+        FpLanes::from_elems(a).sub4(&FpLanes::from_elems(b)).to_elems()
+    }
+    #[inline]
+    fn double4(a: &[Self; 4]) -> [Self; 4] {
+        FpLanes::from_elems(a).double4().to_elems()
     }
 }
 

@@ -1,0 +1,451 @@
+//! 4-lane limb-interleaved Montgomery field core.
+//!
+//! The paper saturates its carry-save modular multipliers by keeping many
+//! independent products in flight (§IV-B); the software analogue is ILP:
+//! one CIOS pass per lane has a serial limb-carry chain, but **four
+//! independent lanes have four independent carry chains**, so a scalar
+//! CPU can overlap them and an autovectorizer can map the lane loop onto
+//! SIMD multiply/add units. [`FpLanes`] stores 4 field elements in
+//! structure-of-arrays layout — `mont[limb][lane]` — so the innermost
+//! loop of every kernel walks lanes, not limbs, and carries never cross
+//! lanes.
+//!
+//! **Determinism is structural**: each lane runs *exactly* the scalar
+//! [`Fp`](super::Fp) algorithm (same CIOS multiply, same SOS squaring,
+//! same final conditional subtraction, taken per lane on that lane's own
+//! values), so lane results are bit-identical to the scalar reference by
+//! construction — not by rounding luck. There is no cross-lane data flow
+//! anywhere, hence no reassociation at all.
+//!
+//! Op accounting: lane ops charge the same [`super::opcount`] lanes as
+//! four scalar ops (`mul4` counts 4 muls, `square4` 4 squares, …), so
+//! every pinned budget in `tests/perf_smoke.rs` stays honest whether a
+//! path runs scalar or vectorized.
+
+use super::bigint::{self, adc, mac, sbb};
+use super::fp::{FieldParams, Fp};
+use super::opcount;
+use std::marker::PhantomData;
+
+/// Number of independent lanes the vectorized field core processes per
+/// step. Fixed at 4: wide enough to cover the carry-chain latency of a
+/// 64×64 multiply, narrow enough that ragged tails stay cheap.
+pub const LANES: usize = 4;
+
+/// Extract lane `l` of an interleaved limb matrix as a contiguous value.
+#[inline]
+fn column<const N: usize>(t: &[[u64; LANES]; N], l: usize) -> [u64; N] {
+    let mut col = [0u64; N];
+    for (j, c) in col.iter_mut().enumerate() {
+        *c = t[j][l];
+    }
+    col
+}
+
+/// Write a contiguous value back into lane `l` of an interleaved matrix.
+#[inline]
+fn set_column<const N: usize>(t: &mut [[u64; LANES]; N], l: usize, col: &[u64; N]) {
+    for (j, c) in col.iter().enumerate() {
+        t[j][l] = *c;
+    }
+}
+
+/// Four independent prime-field elements in limb-interleaved
+/// (structure-of-arrays) Montgomery form: `mont[j][l]` is limb `j` of
+/// lane `l`. See the module docs for the layout/ILP argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FpLanes<P: FieldParams<N>, const N: usize> {
+    /// Interleaved Montgomery limbs, limb-major / lane-minor.
+    mont: [[u64; LANES]; N],
+    _p: PhantomData<P>,
+}
+
+impl<P: FieldParams<N>, const N: usize> FpLanes<P, N> {
+    /// Word multiplications one [`Self::mul4`] issues: exactly 4 scalar
+    /// CIOS multiplies, 4·[`Fp::MUL_WORD_MULS`].
+    pub const MUL4_WORD_MULS: u64 = (LANES as u64) * Fp::<P, N>::MUL_WORD_MULS;
+    /// Word multiplications one [`Self::square4`] issues: exactly 4
+    /// scalar SOS squarings, 4·[`Fp::SQUARE_WORD_MULS`].
+    pub const SQUARE4_WORD_MULS: u64 = (LANES as u64) * Fp::<P, N>::SQUARE_WORD_MULS;
+
+    #[inline]
+    fn from_mont(mont: [[u64; LANES]; N]) -> Self {
+        FpLanes { mont, _p: PhantomData }
+    }
+
+    /// Interleave 4 scalar elements into lane form.
+    #[inline]
+    pub fn from_elems(xs: &[Fp<P, N>; LANES]) -> Self {
+        let mut mont = [[0u64; LANES]; N];
+        for (l, x) in xs.iter().enumerate() {
+            for (j, row) in mont.iter_mut().enumerate() {
+                row[l] = x.mont[j];
+            }
+        }
+        Self::from_mont(mont)
+    }
+
+    /// De-interleave back to 4 scalar elements.
+    #[inline]
+    pub fn to_elems(&self) -> [Fp<P, N>; LANES] {
+        std::array::from_fn(|l| Fp::from_mont(column(&self.mont, l)))
+    }
+
+    /// Broadcast one element into all 4 lanes.
+    #[inline]
+    pub fn splat(x: &Fp<P, N>) -> Self {
+        let mut mont = [[0u64; LANES]; N];
+        for (j, row) in mont.iter_mut().enumerate() {
+            *row = [x.mont[j]; LANES];
+        }
+        Self::from_mont(mont)
+    }
+
+    /// Interleave the first [`LANES`] elements of a slice.
+    ///
+    /// # Panics
+    /// If `xs.len() < LANES`.
+    #[inline]
+    pub fn load(xs: &[Fp<P, N>]) -> Self {
+        let head: &[Fp<P, N>; LANES] = xs[..LANES].try_into().expect("load needs >= LANES");
+        Self::from_elems(head)
+    }
+
+    /// De-interleave into the first [`LANES`] slots of a slice.
+    ///
+    /// # Panics
+    /// If `out.len() < LANES`.
+    #[inline]
+    pub fn store(&self, out: &mut [Fp<P, N>]) {
+        out[..LANES].copy_from_slice(&self.to_elems());
+    }
+
+    /// Per-lane conditional subtraction of p (values known < 2p).
+    #[inline]
+    fn reduce_once(mut t: [[u64; LANES]; N]) -> Self {
+        for l in 0..LANES {
+            let col = column(&t, l);
+            if bigint::gte(&col, &P::MODULUS) {
+                let (d, _) = bigint::sub(&col, &P::MODULUS);
+                set_column(&mut t, l, &d);
+            }
+        }
+        Self::from_mont(t)
+    }
+
+    /// 4 independent CIOS Montgomery multiplies. The limb schedule is the
+    /// scalar [`Fp`] multiply verbatim; only the innermost dimension (the
+    /// lane walk) is new, and its 4 carry chains are fully independent.
+    #[inline]
+    fn mul4_raw(a: &[[u64; LANES]; N], b: &[[u64; LANES]; N]) -> [[u64; LANES]; N] {
+        let mut t = [[0u64; LANES]; N];
+        let mut t_n = [0u64; LANES]; // t[N] per lane
+        let mut t_n1 = [0u64; LANES]; // t[N+1] per lane, 0 or 1
+        for i in 0..N {
+            // t += a[i] * b, per lane
+            let mut carry = [0u64; LANES];
+            for j in 0..N {
+                for l in 0..LANES {
+                    let (lo, hi) = mac(t[j][l], a[i][l], b[j][l], carry[l]);
+                    t[j][l] = lo;
+                    carry[l] = hi;
+                }
+            }
+            for l in 0..LANES {
+                let (s, c) = adc(t_n[l], carry[l], 0);
+                t_n[l] = s;
+                t_n1[l] = c;
+            }
+
+            // m = t[0] · (−p⁻¹) mod 2⁶⁴ ; t += m·p ; t >>= 64, per lane
+            let mut m = [0u64; LANES];
+            let mut carry = [0u64; LANES];
+            for l in 0..LANES {
+                m[l] = t[0][l].wrapping_mul(Fp::<P, N>::INV);
+                let (_, hi) = mac(t[0][l], m[l], P::MODULUS[0], 0);
+                carry[l] = hi;
+            }
+            for j in 1..N {
+                for l in 0..LANES {
+                    let (lo, hi) = mac(t[j][l], m[l], P::MODULUS[j], carry[l]);
+                    t[j - 1][l] = lo;
+                    carry[l] = hi;
+                }
+            }
+            for l in 0..LANES {
+                let (s, c) = adc(t_n[l], carry[l], 0);
+                t[N - 1][l] = s;
+                t_n[l] = t_n1[l] + c;
+            }
+        }
+        // Final conditional subtraction is data-dependent per lane —
+        // taken on each lane's own value, exactly like the scalar path.
+        for l in 0..LANES {
+            let col = column(&t, l);
+            if t_n[l] > 0 || bigint::gte(&col, &P::MODULUS) {
+                let (d, _) = bigint::sub(&col, &P::MODULUS);
+                set_column(&mut t, l, &d);
+            }
+        }
+        t
+    }
+
+    /// 4 independent SOS Montgomery squarings (scalar schedule per lane:
+    /// upper-triangle cross terms, one-bit shift doubling, diagonal,
+    /// word-by-word reduction).
+    #[inline]
+    fn square4_raw(a: &[[u64; LANES]; N]) -> [[u64; LANES]; N] {
+        debug_assert!(2 * N <= 16, "SOS scratch supports N <= 8");
+        let mut r = [[0u64; LANES]; 16];
+
+        // Upper-triangle cross products a[i]·a[j], i < j, per lane.
+        for i in 0..N {
+            let mut carry = [0u64; LANES];
+            for j in (i + 1)..N {
+                for l in 0..LANES {
+                    let (lo, hi) = mac(r[i + j][l], a[i][l], a[j][l], carry[l]);
+                    r[i + j][l] = lo;
+                    carry[l] = hi;
+                }
+            }
+            r[i + N] = carry;
+        }
+
+        // Double the cross strip: one-bit left shift across 2N limbs.
+        for l in 0..LANES {
+            r[2 * N - 1][l] = r[2 * N - 2][l] >> 63;
+        }
+        for i in (2..=(2 * N - 2)).rev() {
+            for l in 0..LANES {
+                r[i][l] = (r[i][l] << 1) | (r[i - 1][l] >> 63);
+            }
+        }
+        for l in 0..LANES {
+            r[1][l] <<= 1;
+        }
+
+        // Add the diagonal a[i]², per lane.
+        let mut carry = [0u64; LANES];
+        for i in 0..N {
+            for l in 0..LANES {
+                let (lo, hi) = mac(r[2 * i][l], a[i][l], a[i][l], carry[l]);
+                r[2 * i][l] = lo;
+                let (s, c) = adc(r[2 * i + 1][l], hi, 0);
+                r[2 * i + 1][l] = s;
+                carry[l] = c;
+            }
+        }
+        debug_assert_eq!(carry, [0u64; LANES], "a^2 fits 2N limbs");
+
+        // Word-by-word Montgomery reduction of the 2N-limb squares.
+        let mut carry2 = [0u64; LANES];
+        for i in 0..N {
+            let mut m = [0u64; LANES];
+            let mut carry = [0u64; LANES];
+            for l in 0..LANES {
+                m[l] = r[i][l].wrapping_mul(Fp::<P, N>::INV);
+                let (_, hi) = mac(r[i][l], m[l], P::MODULUS[0], 0);
+                carry[l] = hi;
+            }
+            for j in 1..N {
+                for l in 0..LANES {
+                    let (lo, hi) = mac(r[i + j][l], m[l], P::MODULUS[j], carry[l]);
+                    r[i + j][l] = lo;
+                    carry[l] = hi;
+                }
+            }
+            for l in 0..LANES {
+                let (s, c) = adc(r[i + N][l], carry2[l], carry[l]);
+                r[i + N][l] = s;
+                carry2[l] = c;
+            }
+        }
+        debug_assert_eq!(carry2, [0u64; LANES]);
+
+        let mut out = [[0u64; LANES]; N];
+        for (j, row) in out.iter_mut().enumerate() {
+            *row = r[j + N];
+        }
+        for l in 0..LANES {
+            let col = column(&out, l);
+            if bigint::gte(&col, &P::MODULUS) {
+                let (d, _) = bigint::sub(&col, &P::MODULUS);
+                set_column(&mut out, l, &d);
+            }
+        }
+        out
+    }
+
+    /// 4 independent field multiplications (counts 4 muls).
+    #[inline]
+    pub fn mul4(&self, rhs: &Self) -> Self {
+        opcount::count_muls(LANES as u64);
+        Self::from_mont(Self::mul4_raw(&self.mont, &rhs.mont))
+    }
+
+    /// 4 independent field squarings (counts 4 squares).
+    #[inline]
+    pub fn square4(&self) -> Self {
+        opcount::count_squares(LANES as u64);
+        Self::from_mont(Self::square4_raw(&self.mont))
+    }
+
+    /// 4 independent field additions (counts 4 adds).
+    #[inline]
+    pub fn add4(&self, rhs: &Self) -> Self {
+        opcount::count_adds(LANES as u64);
+        let mut s = [[0u64; LANES]; N];
+        let mut carry = [0u64; LANES];
+        for j in 0..N {
+            for l in 0..LANES {
+                let (x, c) = adc(self.mont[j][l], rhs.mont[j][l], carry[l]);
+                s[j][l] = x;
+                carry[l] = c;
+            }
+        }
+        // Both operands < p < 2^(64N−1) ⇒ no carry-out possible.
+        debug_assert_eq!(carry, [0u64; LANES]);
+        Self::reduce_once(s)
+    }
+
+    /// 4 independent field subtractions (counts 4 adds).
+    #[inline]
+    pub fn sub4(&self, rhs: &Self) -> Self {
+        opcount::count_adds(LANES as u64);
+        let mut d = [[0u64; LANES]; N];
+        let mut borrow = [0u64; LANES];
+        for j in 0..N {
+            for l in 0..LANES {
+                let (x, b) = sbb(self.mont[j][l], rhs.mont[j][l], borrow[l]);
+                d[j][l] = x;
+                borrow[l] = b;
+            }
+        }
+        // Lanes that borrowed wrap back by adding p — per lane, exactly
+        // the scalar sub's correction.
+        for l in 0..LANES {
+            if borrow[l] == 1 {
+                let col = column(&d, l);
+                let (r, _) = bigint::add(&col, &P::MODULUS);
+                set_column(&mut d, l, &r);
+            }
+        }
+        Self::from_mont(d)
+    }
+
+    /// 4 independent field doublings (counts 4 adds).
+    #[inline]
+    pub fn double4(&self) -> Self {
+        opcount::count_adds(LANES as u64);
+        let mut s = [[0u64; LANES]; N];
+        for j in (1..N).rev() {
+            for l in 0..LANES {
+                s[j][l] = (self.mont[j][l] << 1) | (self.mont[j - 1][l] >> 63);
+            }
+        }
+        for l in 0..LANES {
+            s[0][l] = self.mont[0][l] << 1;
+        }
+        // Values < p < 2^(64N−1): the shifted top bit is always zero.
+        Self::reduce_once(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::{Bls12381FpParams, Bn254FpParams, Bn254FrParams};
+    use crate::ff::Field;
+    use crate::util::rng::Rng;
+
+    type FpBn = Fp<Bn254FpParams, 4>;
+    type FpBls = Fp<Bls12381FpParams, 6>;
+
+    fn quad<F: Field>(rng: &mut Rng) -> [F; LANES] {
+        std::array::from_fn(|_| F::random(rng))
+    }
+
+    fn check_all_ops<P: FieldParams<N>, const N: usize>(
+        a: &[Fp<P, N>; LANES],
+        b: &[Fp<P, N>; LANES],
+    ) {
+        let av = FpLanes::from_elems(a);
+        let bv = FpLanes::from_elems(b);
+        let mul = av.mul4(&bv).to_elems();
+        let sq = av.square4().to_elems();
+        let add = av.add4(&bv).to_elems();
+        let sub = av.sub4(&bv).to_elems();
+        let dbl = av.double4().to_elems();
+        for l in 0..LANES {
+            assert_eq!(mul[l], a[l].mul(&b[l]), "{} mul lane {l}", P::NAME);
+            assert_eq!(sq[l], a[l].square(), "{} square lane {l}", P::NAME);
+            assert_eq!(add[l], a[l].add(&b[l]), "{} add lane {l}", P::NAME);
+            assert_eq!(sub[l], a[l].sub(&b[l]), "{} sub lane {l}", P::NAME);
+            assert_eq!(dbl[l], Field::double(&a[l]), "{} double lane {l}", P::NAME);
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_random() {
+        let mut rng = Rng::new(0xA1);
+        for _ in 0..100 {
+            check_all_ops::<Bn254FpParams, 4>(&quad(&mut rng), &quad(&mut rng));
+            check_all_ops::<Bn254FrParams, 4>(&quad(&mut rng), &quad(&mut rng));
+            check_all_ops::<Bls12381FpParams, 6>(&quad(&mut rng), &quad(&mut rng));
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_edges() {
+        // mixed edge/random lanes stress the per-lane conditional
+        // subtraction: each lane must take its own branch
+        fn edges<P: FieldParams<N>, const N: usize>() -> [Fp<P, N>; LANES] {
+            [
+                Fp::<P, N>::zero(),
+                Fp::<P, N>::one(),
+                Fp::<P, N>::one().neg(), // p − 1
+                Fp::<P, N>::from_limbs_reduce([0x8000_0000_0000_0000u64; N]),
+            ]
+        }
+        let mut rng = Rng::new(0xA2);
+        check_all_ops::<Bn254FpParams, 4>(&edges(), &edges());
+        check_all_ops::<Bls12381FpParams, 6>(&edges(), &edges());
+        check_all_ops::<Bn254FpParams, 4>(&edges(), &quad(&mut rng));
+        check_all_ops::<Bls12381FpParams, 6>(&quad(&mut rng), &edges());
+    }
+
+    #[test]
+    fn interleave_roundtrip_and_splat() {
+        let mut rng = Rng::new(0xA3);
+        let xs: [FpBn; LANES] = quad(&mut rng);
+        assert_eq!(FpLanes::from_elems(&xs).to_elems(), xs);
+        let s = FpLanes::splat(&xs[2]).to_elems();
+        assert_eq!(s, [xs[2]; LANES]);
+        let mut out = [FpBn::zero(); LANES];
+        FpLanes::load(&xs).store(&mut out);
+        assert_eq!(out, xs);
+    }
+
+    #[test]
+    fn lane_ops_count_like_four_scalar_ops() {
+        let mut rng = Rng::new(0xA4);
+        let a = FpLanes::<Bn254FpParams, 4>::from_elems(&quad(&mut rng));
+        let b = FpLanes::from_elems(&quad(&mut rng));
+        let (_, ops) = opcount::measure(|| {
+            let m = a.mul4(&b);
+            let s = m.square4();
+            s.add4(&b).sub4(&a).double4()
+        });
+        assert_eq!(ops.mul, 4);
+        assert_eq!(ops.square, 4);
+        assert_eq!(ops.add, 12);
+    }
+
+    #[test]
+    fn word_mul_consts_are_four_scalar_budgets() {
+        assert_eq!(FpLanes::<Bn254FpParams, 4>::MUL4_WORD_MULS, 4 * FpBn::MUL_WORD_MULS);
+        assert_eq!(FpLanes::<Bn254FpParams, 4>::SQUARE4_WORD_MULS, 4 * FpBn::SQUARE_WORD_MULS);
+        assert_eq!(FpLanes::<Bls12381FpParams, 6>::MUL4_WORD_MULS, 4 * FpBls::MUL_WORD_MULS);
+        assert_eq!(FpLanes::<Bls12381FpParams, 6>::SQUARE4_WORD_MULS, 4 * FpBls::SQUARE_WORD_MULS);
+    }
+}

@@ -7,6 +7,8 @@
 //! * [`bigint`] — fixed-width multi-precision primitives (compile-time
 //!   Montgomery constant derivation included);
 //! * [`fp`] — the generic Montgomery-form prime field [`fp::Fp`];
+//! * [`lanes`] — the 4-lane limb-interleaved (SoA) vectorized core
+//!   feeding NTT butterflies and batch-affine MSM fill;
 //! * [`barrett`] — the paper's "standard form" (non-Montgomery) backend
 //!   (§IV-B4), used for cross-checking and by the hardware resource models;
 //! * [`fp2`] — the quadratic extension for G2;
@@ -18,6 +20,7 @@
 
 pub mod bigint;
 pub mod fp;
+pub mod lanes;
 pub mod opcount;
 pub mod barrett;
 pub mod fp2;
@@ -29,6 +32,7 @@ pub mod codec;
 pub use codec::WordCodec;
 pub use fp::{Field, FieldParams, Fp};
 pub use fp2::Fp2;
+pub use lanes::{FpLanes, LANES};
 pub use opcount::OpCounts;
 
 /// BN254 base field (4 × 64-bit limbs, 254 bits).

@@ -38,6 +38,25 @@ pub fn count_inv() {
     INV.with(|c| c.set(c.get() + 1));
 }
 
+/// Count `n` modular multiplications at once — the 4-lane field core
+/// charges its batched ops here so lane and scalar paths stay
+/// indistinguishable to every pinned budget.
+#[inline(always)]
+pub fn count_muls(n: u64) {
+    MUL.with(|c| c.set(c.get() + n));
+}
+/// Count `n` modular squarings at once (see [`count_muls`]).
+#[inline(always)]
+pub fn count_squares(n: u64) {
+    SQUARE.with(|c| c.set(c.get() + n));
+}
+/// Count `n` modular additions/subtractions/doublings at once (see
+/// [`count_muls`]).
+#[inline(always)]
+pub fn count_adds(n: u64) {
+    ADD.with(|c| c.set(c.get() + n));
+}
+
 /// A snapshot of the per-thread counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounts {

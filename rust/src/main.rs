@@ -346,8 +346,10 @@ fn cmd_prove_stream(args: &Args) -> anyhow::Result<()> {
         let crs = ifzkp::snark::setup::CrsBn254::synthesize(nv, domain_n, seed);
         let prover = Prover::<_, _, Bn254FrParams>::new(crs);
         let (want, _) = prover.prove(&cs);
+        // one RLC fold per group instead of per-element eq_point checks
         anyhow::ensure!(
-            proof.a.eq_point(&want.a) && proof.b.eq_point(&want.b) && proof.c.eq_point(&want.c),
+            msm::batch_eq(&[(proof.a, want.a), (proof.c, want.c)], seed)
+                && msm::batch_eq(&[(proof.b, want.b)], seed),
             "streamed proof diverged from the resident prover!"
         );
         println!("verified: bit-identical to the resident prover");

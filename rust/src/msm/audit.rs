@@ -1,0 +1,112 @@
+//! Random-linear-combination batched point-equality auditing.
+//!
+//! Cross-checks like "streamed proof == resident proof" and "sharded
+//! merge == unsharded result" compare N (got, want) point pairs. Checking
+//! them one by one costs N full Jacobian comparisons (each a handful of
+//! field muls to cross-normalize Z); the RLC fold here verifies all N
+//! with **one** comparison: draw independent random coefficients rᵢ and
+//! test
+//!
+//! ```text
+//!   Σ rᵢ·(gotᵢ − wantᵢ)  ==  ∞
+//! ```
+//!
+//! If every pair matches, the sum is the identity for any choice of rᵢ.
+//! If some pair differs, the sum is a fixed nonzero point scaled by a
+//! random 128-bit coefficient plus independent terms — by
+//! Schwartz–Zippel it lands on the identity with probability ≤ 2⁻¹²⁸ per
+//! differing pair. This is the serving-side seed of the paper's batched
+//! verification story: a coordinator auditing many device results pays
+//! one fold, not N comparisons.
+//!
+//! Determinism: the caller supplies the seed, so audits are reproducible
+//! run-to-run (the repo-wide invariant); soundness needs the seed to be
+//! outside the prover's control, which holds for self-audits.
+
+use crate::ec::{scalar, CurveParams, Jacobian, ScalarLimbs};
+use crate::util::rng::Rng;
+
+/// Domain-separation constant folded into the caller's seed so an audit
+/// stream never reuses the point-generation stream of the same seed.
+const AUDIT_STREAM: u64 = 0xBA7C4_E0_0553;
+
+/// Verify N `(got, want)` Jacobian pairs with one random-linear-
+/// combination fold and a single infinity test.
+///
+/// Returns `true` iff every pair is (projectively) equal — up to the
+/// ≤ N·2⁻¹²⁸ Schwartz–Zippel false-accept bound; `false` never
+/// mis-fires on equal inputs. Single-pair calls short-circuit to an
+/// exact [`Jacobian::eq_point`], and an empty batch is vacuously true.
+pub fn batch_eq<C: CurveParams>(pairs: &[(Jacobian<C>, Jacobian<C>)], seed: u64) -> bool {
+    match pairs {
+        [] => return true,
+        [(got, want)] => return got.eq_point(want),
+        _ => {}
+    }
+    let mut rng = Rng::new(seed ^ AUDIT_STREAM);
+    let mut acc = Jacobian::<C>::infinity();
+    for (got, want) in pairs {
+        // 128 random bits per coefficient: two limbs, forced odd so a
+        // zero draw can never silently drop its pair from the fold
+        let r: ScalarLimbs = [rng.next_u64() | 1, rng.next_u64(), 0, 0];
+        let diff = got.add(&want.neg());
+        acc = acc.add(&scalar::mul::<C>(&diff, &r));
+    }
+    acc.is_infinity()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{points, Bls12381G1, Bn254G1};
+
+    fn pairs_of<C: CurveParams>(n: usize, seed: u64) -> Vec<(Jacobian<C>, Jacobian<C>)> {
+        points::generate_points_walk::<C>(n, seed)
+            .into_iter()
+            .map(|p| (p.to_jacobian(), p.to_jacobian()))
+            .collect()
+    }
+
+    #[test]
+    fn accepts_equal_pairs() {
+        assert!(batch_eq::<Bn254G1>(&[], 1));
+        assert!(batch_eq(&pairs_of::<Bn254G1>(1, 10), 2));
+        assert!(batch_eq(&pairs_of::<Bn254G1>(8, 11), 3));
+        assert!(batch_eq(&pairs_of::<Bls12381G1>(8, 12), 4));
+    }
+
+    #[test]
+    fn accepts_projectively_equal_representations() {
+        // got and want may carry different Z coordinates for the same
+        // point — the fold must see through the representation
+        let pts = points::generate_points_walk::<Bn254G1>(6, 13);
+        let pairs: Vec<_> = pts
+            .iter()
+            .map(|p| {
+                let j = p.to_jacobian();
+                (j.add(&j).add(&j.neg()), j) // same point, scrambled Z
+            })
+            .collect();
+        assert!(batch_eq(&pairs, 5));
+    }
+
+    #[test]
+    fn rejects_any_corrupted_pair() {
+        let g = Jacobian::<Bn254G1>::generator();
+        for corrupt_at in [0usize, 3, 7] {
+            let mut pairs = pairs_of::<Bn254G1>(8, 14);
+            pairs[corrupt_at].0 = pairs[corrupt_at].0.add(&g);
+            // a few seeds: rejection must not depend on a lucky draw
+            for seed in [0u64, 1, 99] {
+                assert!(!batch_eq(&pairs, seed), "corrupt_at={corrupt_at} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_pair_is_exact() {
+        let g = Jacobian::<Bn254G1>::generator();
+        assert!(batch_eq(&[(g, g)], 0));
+        assert!(!batch_eq(&[(g, g.double())], 0));
+    }
+}

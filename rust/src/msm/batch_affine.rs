@@ -15,7 +15,9 @@
 
 use super::plan::{DigitMatrix, MsmConfig, MsmPlan};
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
+use crate::ff::lanes::LANES;
 use crate::ff::Field;
+use std::fmt;
 
 /// One window's buckets, affine with explicit emptiness.
 struct AffineBuckets<C: CurveParams> {
@@ -34,14 +36,6 @@ impl<C: CurveParams> AffineBuckets<C> {
             .map(|s| s.map(|a| a.to_jacobian()).unwrap_or_else(Jacobian::infinity))
             .collect()
     }
-}
-
-/// Affine addition state for one batched lane.
-enum Lane<C: CurveParams> {
-    /// generic add: needs λ = (y2−y1)/(x2−x1)
-    Add { bucket: usize, p: Affine<C>, q: Affine<C> },
-    /// doubling: needs λ = 3x²/(2y)
-    Double { bucket: usize, p: Affine<C> },
 }
 
 /// Below this many lanes a round's shared Fermat inversion (≈380 modmuls)
@@ -70,7 +64,10 @@ pub(super) fn fill_batch_affine<C: CurveParams>(
     let mut in_round = vec![false; nbuckets];
 
     while !pending.is_empty() {
-        let mut lanes: Vec<Lane<C>> = Vec::new();
+        // (bucket, accumulated, incoming): needs λ = (y2−y1)/(x2−x1)
+        let mut adds: Vec<(usize, Affine<C>, Affine<C>)> = Vec::new();
+        // (bucket, accumulated): needs λ = 3x²/(2y)
+        let mut doubles: Vec<(usize, Affine<C>)> = Vec::new();
         for (b, p) in pending.drain(..) {
             if in_round[b] {
                 deferred.push((b, p)); // BAM conflict FIFO
@@ -82,36 +79,37 @@ pub(super) fn fill_batch_affine<C: CurveParams>(
                     buckets.slots[b] = Some(p);
                 }
                 Some(q) => {
-                    in_round[b] = true;
                     if q.x == p.x {
-                        if q.y == p.y {
-                            lanes.push(Lane::Double { bucket: b, p });
-                        } else {
+                        if q.y != p.y {
                             // cancellation: bucket empties, no arithmetic
                             buckets.slots[b] = None;
-                            in_round[b] = false;
+                        } else if p.y.is_zero() {
+                            // 2-torsion: 2P = ∞ — resolved here so the
+                            // doubling denominator 2y is never zero
+                            buckets.slots[b] = None;
+                        } else {
+                            in_round[b] = true;
+                            doubles.push((b, p));
                         }
                     } else {
-                        lanes.push(Lane::Add { bucket: b, p: q, q: p });
+                        in_round[b] = true;
+                        adds.push((b, q, p));
                     }
                 }
             }
         }
 
-        if !lanes.is_empty() && lanes.len() < MIN_BATCH {
+        let nlanes = adds.len() + doubles.len();
+        if nlanes > 0 && nlanes < MIN_BATCH {
             // Tail regime: finish everything on the Jacobian path.
             let mut jac = buckets.into_jacobian();
-            for lane in lanes {
-                match lane {
-                    Lane::Add { bucket, q, .. } => {
-                        // `q` is the incoming point; the bucket value is
-                        // already inside jac[bucket].
-                        jac[bucket] = jac[bucket].add_mixed(&q);
-                    }
-                    Lane::Double { bucket, .. } => {
-                        jac[bucket] = jac[bucket].double();
-                    }
-                }
+            for (bucket, _, q) in adds {
+                // `q` is the incoming point; the accumulated value is
+                // already inside jac[bucket].
+                jac[bucket] = jac[bucket].add_mixed(&q);
+            }
+            for (bucket, _) in doubles {
+                jac[bucket] = jac[bucket].double();
             }
             for (b, p) in deferred.drain(..).chain(pending.drain(..)) {
                 jac[b] = jac[b].add_mixed(&p);
@@ -119,47 +117,200 @@ pub(super) fn fill_batch_affine<C: CurveParams>(
             return jac;
         }
 
-        if !lanes.is_empty() {
-            // batch inversion over every lane's denominator
-            let denoms: Vec<C::Base> = lanes
-                .iter()
-                .map(|l| match l {
-                    Lane::Add { p, q, .. } => q.x.sub(&p.x),
-                    Lane::Double { p, .. } => p.y.double(),
-                })
-                .collect();
-            let invs = batch_invert(&denoms);
-            for (lane, dinv) in lanes.into_iter().zip(invs) {
-                match lane {
-                    Lane::Add { bucket, p, q } => {
-                        let lambda = q.y.sub(&p.y).mul(&dinv);
-                        let x3 = lambda.square().sub(&p.x).sub(&q.x);
-                        let y3 = lambda.mul(&p.x.sub(&x3)).sub(&p.y);
-                        buckets.slots[bucket] = Some(Affine::new(x3, y3));
-                        in_round[bucket] = false;
-                    }
-                    Lane::Double { bucket, p } => {
-                        // λ = 3x² / 2y (a = 0)
-                        let xx = p.x.square();
-                        let lambda = xx.double().add(&xx).mul(&dinv);
-                        let x3 = lambda.square().sub(&p.x.double());
-                        let y3 = lambda.mul(&p.x.sub(&x3)).sub(&p.y);
-                        buckets.slots[bucket] = Some(Affine::new(x3, y3));
-                        in_round[bucket] = false;
+        if nlanes > 0 {
+            // Batch inversion over every lane's denominator — adds first,
+            // then doublings, so the 4-wide apply groups stay contiguous.
+            let invs = loop {
+                let denoms: Vec<C::Base> = adds
+                    .iter()
+                    .map(|(_, p, q)| q.x.sub(&p.x))
+                    .chain(doubles.iter().map(|(_, p)| p.y.double()))
+                    .collect();
+                match batch_invert(&denoms) {
+                    Ok(v) => break v,
+                    Err(e) => {
+                        // Defense in depth: lane construction filters every
+                        // zero denominator (x2 ≠ x1 for adds, y ≠ 0 for
+                        // doublings), but if one slips through, resolve
+                        // that single op on the Jacobian path and retry
+                        // the rest instead of aborting the whole MSM.
+                        let (b, jac) = if e.index < adds.len() {
+                            let (b, p, q) = adds.swap_remove(e.index);
+                            (b, p.to_jacobian().add_mixed(&q))
+                        } else {
+                            let (b, p) = doubles.swap_remove(e.index - adds.len());
+                            (b, p.to_jacobian().double())
+                        };
+                        buckets.slots[b] =
+                            if jac.is_infinity() { None } else { Some(jac.to_affine()) };
+                        in_round[b] = false;
                     }
                 }
-            }
+            };
+            let (add_invs, dbl_invs) = invs.split_at(adds.len());
+            apply_adds(&mut buckets, &mut in_round, &adds, add_invs);
+            apply_doubles(&mut buckets, &mut in_round, &doubles, dbl_invs);
         }
         std::mem::swap(&mut pending, &mut deferred);
     }
     buckets.into_jacobian()
 }
 
+/// Apply the batched-affine addition λ/x3/y3 arithmetic 4 lanes at a time
+/// through the [`Field::mul4`]-family hooks (the limb-interleaved core
+/// for prime base fields, scalar loops for Fp²), with a scalar tail.
+/// Op-for-op identical to the scalar formulas — results and op counts
+/// match exactly.
+fn apply_adds<C: CurveParams>(
+    buckets: &mut AffineBuckets<C>,
+    in_round: &mut [bool],
+    adds: &[(usize, Affine<C>, Affine<C>)],
+    invs: &[C::Base],
+) {
+    let mut i = 0;
+    while i + LANES <= adds.len() {
+        let px: [C::Base; LANES] = std::array::from_fn(|l| adds[i + l].1.x);
+        let py: [C::Base; LANES] = std::array::from_fn(|l| adds[i + l].1.y);
+        let qx: [C::Base; LANES] = std::array::from_fn(|l| adds[i + l].2.x);
+        let qy: [C::Base; LANES] = std::array::from_fn(|l| adds[i + l].2.y);
+        let dinv: &[C::Base; LANES] = invs[i..i + LANES].try_into().expect("lane group");
+        let lambda = Field::mul4(&Field::sub4(&qy, &py), dinv);
+        let x3 = Field::sub4(&Field::sub4(&Field::square4(&lambda), &px), &qx);
+        let y3 = Field::sub4(&Field::mul4(&lambda, &Field::sub4(&px, &x3)), &py);
+        for l in 0..LANES {
+            let bucket = adds[i + l].0;
+            buckets.slots[bucket] = Some(Affine::new(x3[l], y3[l]));
+            in_round[bucket] = false;
+        }
+        i += LANES;
+    }
+    for ((bucket, p, q), dinv) in adds[i..].iter().zip(&invs[i..]) {
+        let lambda = q.y.sub(&p.y).mul(dinv);
+        let x3 = lambda.square().sub(&p.x).sub(&q.x);
+        let y3 = lambda.mul(&p.x.sub(&x3)).sub(&p.y);
+        buckets.slots[*bucket] = Some(Affine::new(x3, y3));
+        in_round[*bucket] = false;
+    }
+}
+
+/// Batched-affine doubling, 4 lanes at a time (see [`apply_adds`]).
+fn apply_doubles<C: CurveParams>(
+    buckets: &mut AffineBuckets<C>,
+    in_round: &mut [bool],
+    doubles: &[(usize, Affine<C>)],
+    invs: &[C::Base],
+) {
+    let mut i = 0;
+    while i + LANES <= doubles.len() {
+        let px: [C::Base; LANES] = std::array::from_fn(|l| doubles[i + l].1.x);
+        let py: [C::Base; LANES] = std::array::from_fn(|l| doubles[i + l].1.y);
+        let dinv: &[C::Base; LANES] = invs[i..i + LANES].try_into().expect("lane group");
+        // λ = 3x² / 2y (a = 0)
+        let xx = Field::square4(&px);
+        let lambda = Field::mul4(&Field::add4(&Field::double4(&xx), &xx), dinv);
+        let x3 = Field::sub4(&Field::square4(&lambda), &Field::double4(&px));
+        let y3 = Field::sub4(&Field::mul4(&lambda, &Field::sub4(&px, &x3)), &py);
+        for l in 0..LANES {
+            let bucket = doubles[i + l].0;
+            buckets.slots[bucket] = Some(Affine::new(x3[l], y3[l]));
+            in_round[bucket] = false;
+        }
+        i += LANES;
+    }
+    for ((bucket, p), dinv) in doubles[i..].iter().zip(&invs[i..]) {
+        let xx = p.x.square();
+        let lambda = xx.double().add(&xx).mul(dinv);
+        let x3 = lambda.square().sub(&p.x.double());
+        let y3 = lambda.mul(&p.x.sub(&x3)).sub(&p.y);
+        buckets.slots[*bucket] = Some(Affine::new(x3, y3));
+        in_round[*bucket] = false;
+    }
+}
+
+/// Error from [`batch_invert`]: an input was zero, hence not invertible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ZeroDenominator {
+    /// Index of the first zero input.
+    pub index: usize,
+}
+
+impl fmt::Display for ZeroDenominator {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "batch inversion input {} is zero", self.index)
+    }
+}
+
+impl std::error::Error for ZeroDenominator {}
+
 /// Montgomery-trick batch inversion (3 muls per element + 1 inversion).
-/// All inputs must be nonzero (guaranteed by lane construction).
-fn batch_invert<F: Field>(xs: &[F]) -> Vec<F> {
+///
+/// Large batches run the prefix/suffix product chains **4 lanes wide**
+/// through [`Field::mul4`]: four interleaved chains absorb the elements,
+/// the 4 chain totals fold into a single Fermat inversion, and the
+/// backward pass re-derives each chain's running inverse — a flat 9
+/// extra muls next to the serial 3n, with bit-identical outputs (each
+/// inverse is the unique canonical representative, independent of which
+/// chain its element rode).
+///
+/// Returns `Err` carrying the index of the first zero input instead of
+/// panicking, so callers can resolve the offending op out of band.
+pub fn batch_invert<F: Field>(xs: &[F]) -> Result<Vec<F>, ZeroDenominator> {
+    if xs.len() < 2 * LANES {
+        return batch_invert_serial(xs);
+    }
+    let q = xs.len() - xs.len() % LANES;
+    // forward: 4 interleaved product chains, one mul4 per group
+    let mut prefix: Vec<F> = Vec::with_capacity(q);
+    let mut acc = [F::one(); LANES];
+    for group in xs[..q].chunks_exact(LANES) {
+        prefix.extend_from_slice(&acc);
+        let g: &[F; LANES] = group.try_into().expect("exact group");
+        acc = F::mul4(&acc, g);
+    }
+    // fold the 4 chain totals, then chain the ragged tail on serially
+    let mut lane_prod = acc;
+    for l in 1..LANES {
+        lane_prod[l] = lane_prod[l - 1].mul(&acc[l]);
+    }
+    let mut tail_prefix: Vec<F> = Vec::with_capacity(xs.len() - q);
+    let mut total = lane_prod[LANES - 1];
+    for x in &xs[q..] {
+        tail_prefix.push(total);
+        total = total.mul(x);
+    }
+    let Some(mut inv) = total.inv() else {
+        let index = xs.iter().position(F::is_zero).unwrap_or(0);
+        return Err(ZeroDenominator { index });
+    };
+    let mut out = vec![F::zero(); xs.len()];
+    // scalar tail backward
+    for i in (q..xs.len()).rev() {
+        out[i] = inv.mul(&tail_prefix[i - q]);
+        inv = inv.mul(&xs[i]);
+    }
+    // per-chain inverse seeds, peeled off the folded chain totals
+    let mut seed = [F::zero(); LANES];
+    for l in (1..LANES).rev() {
+        seed[l] = inv.mul(&lane_prod[l - 1]);
+        inv = inv.mul(&acc[l]);
+    }
+    seed[0] = inv;
+    // lane backward: each group holds one element of every chain
+    for (gi, group) in xs[..q].chunks_exact(LANES).enumerate().rev() {
+        let g: &[F; LANES] = group.try_into().expect("exact group");
+        let pf: &[F; LANES] =
+            prefix[gi * LANES..(gi + 1) * LANES].try_into().expect("exact group");
+        out[gi * LANES..(gi + 1) * LANES].copy_from_slice(&F::mul4(&seed, pf));
+        seed = F::mul4(&seed, g);
+    }
+    Ok(out)
+}
+
+/// Scalar single-chain fallback for batches too small to amortize the
+/// lane seed/fold overhead.
+fn batch_invert_serial<F: Field>(xs: &[F]) -> Result<Vec<F>, ZeroDenominator> {
     if xs.is_empty() {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let mut prefix = Vec::with_capacity(xs.len());
     let mut acc = F::one();
@@ -167,13 +318,16 @@ fn batch_invert<F: Field>(xs: &[F]) -> Vec<F> {
         prefix.push(acc);
         acc = acc.mul(x);
     }
-    let mut inv = acc.inv().expect("nonzero denominators");
+    let Some(mut inv) = acc.inv() else {
+        let index = xs.iter().position(F::is_zero).unwrap_or(0);
+        return Err(ZeroDenominator { index });
+    };
     let mut out = vec![F::zero(); xs.len()];
     for i in (0..xs.len()).rev() {
         out[i] = inv.mul(&prefix[i]);
         inv = inv.mul(&xs[i]);
     }
-    out
+    Ok(out)
 }
 
 /// The (bucket, signed point) op stream for one window, read from the
@@ -269,23 +423,72 @@ mod tests {
     use crate::msm::plan::{Reduction, Slicing};
     use crate::msm::pippenger;
 
+    fn nonzero(rng: &mut crate::util::rng::Rng) -> crate::ff::FpBn254 {
+        use crate::ff::FpBn254;
+        loop {
+            let x = FpBn254::random(rng);
+            if !x.is_zero() {
+                break x;
+            }
+        }
+    }
+
     #[test]
     fn batch_invert_matches_individual() {
         use crate::ff::FpBn254;
         let mut rng = crate::util::rng::Rng::new(77);
-        let xs: Vec<FpBn254> = (0..17).map(|_| {
-            loop {
-                let x = FpBn254::random(&mut rng);
-                if !x.is_zero() {
-                    break x;
-                }
+        // lengths straddle the serial/lane threshold (2·LANES) and every
+        // ragged-tail residue of the 4-wide interleaved chains
+        for len in [1usize, 5, 7, 8, 9, 10, 11, 12, 17, 64] {
+            let xs: Vec<FpBn254> = (0..len).map(|_| nonzero(&mut rng)).collect();
+            let invs = batch_invert(&xs).unwrap();
+            for (i, (x, v)) in xs.iter().zip(&invs).enumerate() {
+                assert_eq!(x.mul(v), FpBn254::one(), "len={len} idx={i}");
             }
-        }).collect();
-        let invs = batch_invert(&xs);
-        for (x, i) in xs.iter().zip(&invs) {
-            assert_eq!(x.mul(i), FpBn254::one());
+            // the lane-interleaved chains must also match the serial
+            // reference bit-for-bit (canonical inverses)
+            assert_eq!(invs, batch_invert_serial(&xs).unwrap(), "len={len}");
         }
-        assert!(batch_invert::<FpBn254>(&[]).is_empty());
+        assert!(batch_invert::<FpBn254>(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn batch_invert_reports_zero_index() {
+        use crate::ff::FpBn254;
+        let mut rng = crate::util::rng::Rng::new(78);
+        // both the serial fallback (len < 8) and the lane path, with the
+        // zero in the lane body, lane boundary, and ragged tail
+        for len in [3usize, 8, 9, 21] {
+            for at in [0usize, len / 2, len - 1] {
+                let mut xs: Vec<FpBn254> = (0..len).map(|_| nonzero(&mut rng)).collect();
+                xs[at] = FpBn254::zero();
+                assert_eq!(
+                    batch_invert(&xs),
+                    Err(ZeroDenominator { index: at }),
+                    "len={len} at={at}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_torsion_doubling_collapses_without_panic() {
+        use crate::ff::FpBn254;
+        // A crafted y = 0 point: doubling it is the point at infinity, and
+        // its batched denominator 2y would be zero. Lane construction must
+        // filter it structurally (bucket empties, no lane) while enough
+        // real doubling lanes keep the round on the batched path.
+        let torsion = Affine::<Bn254G1>::new(FpBn254::from_u64(5), FpBn254::zero());
+        let real = points::generate_points_walk::<Bn254G1>(MIN_BATCH + 8, 4242);
+        let ops: Vec<(usize, Affine<Bn254G1>)> = std::iter::repeat((0usize, torsion))
+            .take(2)
+            .chain(real.iter().enumerate().flat_map(|(i, p)| [(i + 1, *p), (i + 1, *p)]))
+            .collect();
+        let out = fill_batch_affine(real.len() + 1, ops.into_iter());
+        assert!(out[0].is_infinity(), "2-torsion double must collapse to infinity");
+        for (i, p) in real.iter().enumerate() {
+            assert!(out[i + 1].eq_point(&p.to_jacobian().double()), "bucket {}", i + 1);
+        }
     }
 
     #[test]

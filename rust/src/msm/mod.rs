@@ -33,6 +33,9 @@
 //!   (slice-, generator- and disk-backed) folded through any resident
 //!   backend under an enforced [`crate::util::mem::MemoryBudget`] — the
 //!   host-side analogue of the paper's DDR→SAB chunk streaming.
+//! * [`audit`] — the random-linear-combination batched point-equality
+//!   checker: one RLC fold verifies N (got, want) pairs with a single
+//!   comparison instead of N.
 //!
 //! Property tests in `rust/tests/prop_msm.rs` enforce bit-exactness of
 //! every backend × slicing × reduction combination against [`naive`],
@@ -48,9 +51,12 @@ pub mod chunked;
 pub mod partial;
 pub mod precomp;
 pub mod stream;
+pub mod audit;
 
 use crate::ec::{Affine, CurveParams, Jacobian, ScalarLimbs};
 
+pub use audit::batch_eq;
+pub use batch_affine::{batch_invert, ZeroDenominator};
 pub use chunked::ChunkedPhases;
 pub use partial::{PartialMsm, ShardPolicy, ShardSpec};
 pub use pippenger::msm as msm_pippenger;

@@ -24,6 +24,7 @@
 //! is clamped so no band shrinks below `MIN_BAND` (256) elements.
 
 use super::plan::{build_stage_tables, stage_slice, NttPlan};
+use crate::ff::lanes::{FpLanes, LANES};
 use crate::ff::{Field, FieldParams, Fp};
 
 /// Sizes at or above this take the four-step path when `threads > 1`:
@@ -153,13 +154,28 @@ fn band_count(n: usize, threads: usize) -> usize {
 }
 
 /// One contiguous run of butterflies: `lo[i], hi[i] ← lo[i] ± tw[i]·hi[i]`.
+///
+/// Four butterflies per step through the limb-interleaved lane core —
+/// the per-lane algorithm is the scalar one verbatim, so results and op
+/// counts (1 mul + 2 adds per butterfly, zero squares) are identical;
+/// the ragged tail (and the half ∈ {1, 2} early stages) runs scalar.
 #[inline]
 fn butterflies<P: FieldParams<N>, const N: usize>(
     lo: &mut [Fp<P, N>],
     hi: &mut [Fp<P, N>],
     tw: &[Fp<P, N>],
 ) {
-    for ((u, v), w) in lo.iter_mut().zip(hi.iter_mut()).zip(tw) {
+    let len = lo.len();
+    let mut i = 0;
+    while i + LANES <= len {
+        let u = FpLanes::load(&lo[i..]);
+        let v = FpLanes::load(&hi[i..]);
+        let t = v.mul4(&FpLanes::load(&tw[i..]));
+        u.sub4(&t).store(&mut hi[i..]);
+        u.add4(&t).store(&mut lo[i..]);
+        i += LANES;
+    }
+    for ((u, v), w) in lo[i..].iter_mut().zip(hi[i..].iter_mut()).zip(&tw[i..]) {
         let t = v.mul(w);
         *v = u.sub(&t);
         *u = u.add(&t);
@@ -246,6 +262,36 @@ fn cross_stage<P: FieldParams<N>, const N: usize>(
     });
 }
 
+/// Elementwise `vs[i] ← vs[i] · cs[i]`, four lanes per step with a
+/// scalar tail — the shared kernel under [`pointwise`]'s serial and
+/// banded branches.
+#[inline]
+fn mul_elementwise<P: FieldParams<N>, const N: usize>(vs: &mut [Fp<P, N>], cs: &[Fp<P, N>]) {
+    let mut i = 0;
+    while i + LANES <= vs.len() {
+        FpLanes::load(&vs[i..]).mul4(&FpLanes::load(&cs[i..])).store(&mut vs[i..]);
+        i += LANES;
+    }
+    for (v, c) in vs[i..].iter_mut().zip(&cs[i..]) {
+        *v = v.mul(c);
+    }
+}
+
+/// Uniform `vs[i] ← vs[i] · k`, four lanes per step against a splatted
+/// constant — the shared kernel under [`scale_by`].
+#[inline]
+fn mul_uniform<P: FieldParams<N>, const N: usize>(vs: &mut [Fp<P, N>], k: &Fp<P, N>) {
+    let kk = FpLanes::splat(k);
+    let mut i = 0;
+    while i + LANES <= vs.len() {
+        FpLanes::load(&vs[i..]).mul4(&kk).store(&mut vs[i..]);
+        i += LANES;
+    }
+    for v in vs[i..].iter_mut() {
+        *v = v.mul(k);
+    }
+}
+
 /// Pointwise `values[i] ← values[i] · table[i]` (the coset ladders).
 fn pointwise<P: FieldParams<N>, const N: usize>(
     values: &mut [Fp<P, N>],
@@ -255,19 +301,13 @@ fn pointwise<P: FieldParams<N>, const N: usize>(
     debug_assert_eq!(values.len(), table.len());
     let bands = band_count(values.len(), threads);
     if bands == 1 {
-        for (v, c) in values.iter_mut().zip(table) {
-            *v = v.mul(c);
-        }
+        mul_elementwise(values, table);
         return;
     }
     let chunk = values.len().div_ceil(bands);
     std::thread::scope(|scope| {
         for (vc, tc) in values.chunks_mut(chunk).zip(table.chunks(chunk)) {
-            scope.spawn(move || {
-                for (v, c) in vc.iter_mut().zip(tc) {
-                    *v = v.mul(c);
-                }
-            });
+            scope.spawn(move || mul_elementwise(vc, tc));
         }
     });
 }
@@ -280,19 +320,13 @@ fn scale_by<P: FieldParams<N>, const N: usize>(
 ) {
     let bands = band_count(values.len(), threads);
     if bands == 1 {
-        for v in values.iter_mut() {
-            *v = v.mul(k);
-        }
+        mul_uniform(values, k);
         return;
     }
     let chunk = values.len().div_ceil(bands);
     std::thread::scope(|scope| {
         for vc in values.chunks_mut(chunk) {
-            scope.spawn(move || {
-                for v in vc.iter_mut() {
-                    *v = v.mul(k);
-                }
-            });
+            scope.spawn(move || mul_uniform(vc, k));
         }
     });
 }
@@ -373,6 +407,37 @@ fn row_ntts<P: FieldParams<N>, const N: usize>(
     });
 }
 
+/// One twiddled row: `row[k] ← row[k] · wj^k` for `k ≥ 1` (column 0's
+/// twiddle is 1). Four elements per step: the lane vector starts at
+/// `[wj, wj², wj³, wj⁴]` and advances by a splat of `wj⁴`, replacing
+/// two serial muls per element with two lane muls per group. Every
+/// power is a product of exact, canonically-reduced Montgomery ops, so
+/// the results are bit-identical to the serial ladder's.
+fn twiddle_row<P: FieldParams<N>, const N: usize>(row: &mut [Fp<P, N>], wj: &Fp<P, N>) {
+    let tail = &mut row[1..];
+    if tail.len() < LANES {
+        let mut w = *wj;
+        for v in tail.iter_mut() {
+            *v = v.mul(&w);
+            w = w.mul(wj);
+        }
+        return;
+    }
+    let wj2 = wj.square();
+    let wj4 = wj2.square();
+    let mut w = FpLanes::from_elems(&[*wj, wj2, wj.mul(&wj2), wj4]);
+    let step = FpLanes::splat(&wj4);
+    let mut i = 0;
+    while i + LANES <= tail.len() {
+        FpLanes::load(&tail[i..]).mul4(&w).store(&mut tail[i..]);
+        w = w.mul4(&step);
+        i += LANES;
+    }
+    for (v, wl) in tail[i..].iter_mut().zip(&w.to_elems()) {
+        *v = v.mul(wl);
+    }
+}
+
 /// The four-step twiddle pass: row `j` of the `rows × row_len` matrix
 /// multiplies elementwise by `root^(j·k)` for `k in 0..row_len` (row 0
 /// and column 0 are untouched — their twiddle is 1).
@@ -391,12 +456,7 @@ fn twiddle_rows<P: FieldParams<N>, const N: usize>(
             if j == 0 {
                 continue;
             }
-            let wj = root.pow_u64(j as u64);
-            let mut w = wj;
-            for v in row.iter_mut().skip(1) {
-                *v = v.mul(&w);
-                w = w.mul(&wj);
-            }
+            twiddle_row(row, &root.pow_u64(j as u64));
         }
     };
     if bands == 1 {

@@ -17,6 +17,7 @@
 //! thread budget ([`compute_h_with`]); [`NttPhases`] reports how the NTT
 //! wall time splits across the pipeline's stages.
 
+use crate::ff::lanes::{FpLanes, LANES};
 use crate::ff::{Field, FieldParams, Fp};
 use crate::ntt::domain::Domain;
 use crate::util::Stopwatch;
@@ -110,9 +111,20 @@ pub fn compute_h_with<P: FieldParams<N>, const N: usize>(
         .sub(&Fp::<P, N>::one());
     let z_inv = z_coset.inv()?;
 
-    let mut h = Vec::with_capacity(n);
-    for i in 0..n {
-        h.push(a[i].mul(&b[i]).sub(&c[i]).mul(&z_inv));
+    // pointwise (a·b − c)·Z⁻¹, four lanes per step (n is a power of two
+    // ≥ 2, so only n = 2 takes the scalar tail)
+    let mut h = vec![Fp::<P, N>::zero(); n];
+    let zs = FpLanes::splat(&z_inv);
+    let mut i = 0;
+    while i + LANES <= n {
+        let av = FpLanes::load(&a[i..]);
+        let bv = FpLanes::load(&b[i..]);
+        let cv = FpLanes::load(&c[i..]);
+        av.mul4(&bv).sub4(&cv).mul4(&zs).store(&mut h[i..]);
+        i += LANES;
+    }
+    for j in i..n {
+        h[j] = a[j].mul(&b[j]).sub(&c[j]).mul(&z_inv);
     }
     phases.pointwise_s = sw.secs();
 

@@ -49,12 +49,15 @@ fn served_results_match_direct_computation() {
         expected.push(msm::msm(&raw[if i % 2 == 0 { 0 } else { 1 }], &scalars));
         rxs.push(coord.submit(ps, scalars).expect("submit ok").1);
     }
+    let mut pairs = Vec::new();
     for (rx, want) in rxs.into_iter().zip(expected) {
         let res = rx.recv().expect("job completes");
         assert!(res.is_ok(), "unexpected device failure: {:?}", res.error);
-        assert!(res.output.eq_point(&want), "served result mismatch");
         assert!(res.service_s >= 0.0 && res.device_s > 0.0);
+        pairs.push((res.output, want));
     }
+    // one RLC fold audits all eight served results at once
+    assert!(msm::batch_eq(&pairs, 0xC0DE), "served results mismatch");
     let snap = coord.counters.snapshot();
     assert_eq!(snap.completed, 8);
     assert_eq!(snap.submitted, 8);
@@ -274,16 +277,19 @@ fn sharded_msm_matches_single_device_execute_both_policies() {
     // the single-device reference: plain msm::execute under the same plan
     let want = msm::execute(Backend::Parallel { threads: 2 }, &raw[0], &scalars, &shard_cfg);
 
+    let mut audit = Vec::new();
     for policy in [ShardPolicy::ChunkPoints, ShardPolicy::WindowRange] {
         let (_, rx) = coord.submit_sharded(ids[0], scalars.clone(), policy).unwrap();
         let res = rx.recv().expect("sharded job completes");
         assert!(res.is_ok(), "{policy:?}: {:?}", res.error);
-        assert!(
-            res.output.eq_point(&want),
-            "{policy:?}: sharded result must be bit-identical to msm::execute"
-        );
         assert!(res.device_s > 0.0, "{policy:?}: group makespan missing");
+        audit.push((res.output, want));
     }
+    // shard-merge audit: one RLC fold covers both policies' merges
+    assert!(
+        msm::batch_eq(&audit, 9001),
+        "sharded results must be bit-identical to msm::execute"
+    );
     let snap = coord.counters.snapshot();
     assert_eq!(snap.shard_groups, 2, "{snap:?}");
     assert_eq!(snap.completed, 2, "{snap:?}");

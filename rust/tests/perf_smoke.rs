@@ -11,8 +11,8 @@
 //! quick bench.
 
 use ifzkp::ec::{points, Bn254G1};
-use ifzkp::ff::params::Bn254FrParams;
-use ifzkp::ff::{opcount, Field, FpBls12381, FpBn254, FrBn254};
+use ifzkp::ff::params::{Bls12381FpParams, Bn254FpParams, Bn254FrParams};
+use ifzkp::ff::{opcount, Field, FpBls12381, FpBn254, FpLanes, FrBn254, LANES};
 use ifzkp::msm::{self, pippenger, Backend, MsmConfig, MsmPlan, Reduction};
 use ifzkp::ntt::{self, parallel, NttPlan};
 use ifzkp::util::rng::Rng;
@@ -163,6 +163,63 @@ fn sos_squaring_stays_cheaper_than_mul_and_counted() {
 }
 
 #[test]
+fn lane_core_word_mul_budgets_stay_pinned() {
+    // the 4-lane core must cost exactly four scalar budgets in word
+    // muls — a lane carrying hidden normalization or cross-lane work
+    // shows up here as a constant drift
+    assert_eq!(FpLanes::<Bn254FpParams, 4>::MUL4_WORD_MULS, 4 * FpBn254::MUL_WORD_MULS);
+    assert_eq!(FpLanes::<Bn254FpParams, 4>::SQUARE4_WORD_MULS, 4 * FpBn254::SQUARE_WORD_MULS);
+    assert_eq!(FpLanes::<Bls12381FpParams, 6>::MUL4_WORD_MULS, 4 * FpBls12381::MUL_WORD_MULS);
+    assert_eq!(
+        FpLanes::<Bls12381FpParams, 6>::SQUARE4_WORD_MULS,
+        4 * FpBls12381::SQUARE_WORD_MULS
+    );
+    // and the counted-op discipline: one lane op == four scalar ops, on
+    // the same counter lanes the NTT/MSM/QAP pins read
+    let mut rng = Rng::new(SEED);
+    let a: [FpBn254; LANES] = std::array::from_fn(|_| FpBn254::random(&mut rng));
+    let b: [FpBn254; LANES] = std::array::from_fn(|_| FpBn254::random(&mut rng));
+    let (_, ops) = opcount::measure(|| Field::mul4(&a, &b));
+    assert_eq!((ops.mul, ops.square, ops.add), (4, 0, 0), "mul4 op charge drifted");
+    let (_, ops) = opcount::measure(|| Field::square4(&a));
+    assert_eq!((ops.mul, ops.square, ops.add), (0, 4, 0), "square4 op charge drifted");
+    let (_, ops) = opcount::measure(|| {
+        Field::add4(&a, &b);
+        Field::sub4(&a, &b);
+        Field::double4(&a)
+    });
+    assert_eq!((ops.mul, ops.square, ops.add), (0, 0, 12), "additive op charge drifted");
+}
+
+#[test]
+fn lane_batch_invert_op_parity_stays_pinned() {
+    // the lane-fed inversion batches: the classic 3n muls + 1 inversion,
+    // plus exactly 9 bookkeeping muls (3 folding the lane totals, 6
+    // peeling the per-lane seeds) once the lane path engages at
+    // n ≥ 2·LANES — and bit-identical inverses either way
+    let mut rng = Rng::new(SEED ^ 0x1a);
+    // the Fermat ladder inside inv() counts its own muls/squares; its
+    // cost is exponent-only, so one reference measurement subtracts out
+    let probe = FpBn254::random(&mut rng);
+    let (_, inv_ops) = opcount::measure(|| probe.inv());
+    for n in [3usize, 7, 8, 9, 11, 64, 257] {
+        let xs: Vec<FpBn254> = (0..n).map(|_| FpBn254::random(&mut rng)).collect();
+        let (invs, ops) = opcount::measure(|| msm::batch_invert(&xs).expect("nonzero inputs"));
+        assert_eq!(ops.inv, 1, "n={n}: more than one real inversion");
+        assert_eq!(ops.square, inv_ops.square, "n={n}: squares outside the Fermat ladder");
+        let overhead = if n < 2 * LANES { 0 } else { 9 };
+        assert_eq!(
+            ops.mul - inv_ops.mul,
+            3 * n as u64 + overhead,
+            "n={n}: batch_invert mul overhead drifted"
+        );
+        for (x, inv) in xs.iter().zip(&invs) {
+            assert_eq!(x.inv(), Some(*inv), "n={n}: lane inverse diverged");
+        }
+    }
+}
+
+#[test]
 fn ntt_fieldmul_budgets_stay_pinned() {
     // The plan's cached twiddle tables make a transform's mul count
     // *exact*: n/2·log₂ n butterfly muls, plus one n-mul pointwise pass
@@ -222,12 +279,14 @@ fn ntt_fieldmul_budgets_stay_pinned() {
 fn four_step_mul_overhead_stays_bounded() {
     // the transpose decomposition covers the same n/2·log n butterflies
     // through its row/column sub-transforms; on top, the on-the-fly
-    // twiddle pass (step 3) costs ~2 muls per element — the apply plus
-    // the ladder step w ← w·wj — for the (n1−1)(n2−1) touched entries,
-    // plus O(√n·log n) sub-table and small-pow muls. Bound: budget +
-    // 9n/4, well under the 2x budget a per-transform stage-twiddle
-    // re-derivation would cost. (At n = 2^10: 5120 butterflies + 1922
-    // twiddle + ~154 table/pow muls = ~7196, bound 7424.)
+    // twiddle pass (step 3) costs ~2 muls per touched element: the lane
+    // ladder spends 2 lane muls (8 counted) per 4-element group — apply
+    // plus the stride step w ← w·wj⁴ — with a 1-mul/2-square row setup,
+    // for the (n1−1)(n2−1) touched entries, plus O(√n·log n) sub-table
+    // and small-pow muls. Bound: budget + 9n/4, well under the 2x budget
+    // a per-transform stage-twiddle re-derivation would cost. (At
+    // n = 2^10: 5120 butterflies + 1860 twiddle + ~154 table/pow muls
+    // ≈ 7134, bound 7424.)
     let n = 1usize << 10;
     let plan = NttPlan::<Bn254FrParams, 4>::new(n).unwrap();
     let mut rng = Rng::new(0x5EED_18);

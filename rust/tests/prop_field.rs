@@ -1,7 +1,11 @@
-//! Property tests: field axioms, backend agreement, encoding roundtrips.
+//! Property tests: field axioms, backend agreement, encoding roundtrips,
+//! and the 4-lane vectorized core against the scalar reference.
 
-use ifzkp::ff::{barrett, bigint, limbs16, Field, Fp2Bn254, FpBls12381, FpBn254, FrBls12381};
+use ifzkp::ff::fp::FieldParams;
+use ifzkp::ff::{barrett, bigint, limbs16, Field, Fp, Fp2Bn254, FpBls12381, FpBn254, FrBls12381};
+use ifzkp::ff::{FpLanes, LANES};
 use ifzkp::util::prop::{check, check_with, Config};
+use ifzkp::util::rng::Rng;
 use ifzkp::{prop_assert, prop_assert_eq};
 
 fn axioms<F: Field>(name: &'static str) {
@@ -112,6 +116,103 @@ fn sqrt_of_square_roundtrips_prop() {
         prop_assert!(r == a || r == a.neg(), "root mismatch");
         Ok(())
     });
+}
+
+/// Lane-sensitive edge values: 0, 1, p−1 (largest canonical residue) and
+/// R−1 (one below the Montgomery radix residue — every limb of its
+/// representation is in play).
+fn lane_edges<P: FieldParams<N>, const N: usize>() -> [Fp<P, N>; 4] {
+    let one = Fp::<P, N>::one();
+    let r = Fp::<P, N>::from_u64(2).pow_u64(64 * N as u64);
+    [Fp::<P, N>::zero(), one, one.neg(), r.sub(&one)]
+}
+
+/// The full lane matrix for one field: every 4-lane op against four
+/// independent scalar ops, lanes drawn from edge values and random
+/// elements alike, plus the trait-level hooks the consumers call.
+fn lane_matrix<P: FieldParams<N>, const N: usize>(name: &str) {
+    check(&format!("{name}: 4-lane ops == scalar ops"), |rng| {
+        let edges = lane_edges::<P, N>();
+        let mut draw = |rng: &mut Rng| {
+            let k = rng.below(8) as usize;
+            if k < edges.len() {
+                edges[k]
+            } else {
+                Fp::<P, N>::random(rng)
+            }
+        };
+        let a: [Fp<P, N>; LANES] = std::array::from_fn(|_| draw(rng));
+        let b: [Fp<P, N>; LANES] = std::array::from_fn(|_| draw(rng));
+        let la = FpLanes::from_elems(&a);
+        let lb = FpLanes::from_elems(&b);
+        let want_mul: [Fp<P, N>; LANES] = std::array::from_fn(|l| a[l].mul(&b[l]));
+        let want_sqr: [Fp<P, N>; LANES] = std::array::from_fn(|l| a[l].square());
+        let want_add: [Fp<P, N>; LANES] = std::array::from_fn(|l| a[l].add(&b[l]));
+        let want_sub: [Fp<P, N>; LANES] = std::array::from_fn(|l| a[l].sub(&b[l]));
+        let want_dbl: [Fp<P, N>; LANES] = std::array::from_fn(|l| a[l].double());
+        prop_assert_eq!(la.mul4(&lb).to_elems(), want_mul);
+        prop_assert_eq!(la.square4().to_elems(), want_sqr);
+        prop_assert_eq!(la.add4(&lb).to_elems(), want_add);
+        prop_assert_eq!(la.sub4(&lb).to_elems(), want_sub);
+        prop_assert_eq!(la.double4().to_elems(), want_dbl);
+        // the trait hooks the NTT/MSM/QAP consumers actually call
+        prop_assert_eq!(Field::mul4(&a, &b), want_mul);
+        prop_assert_eq!(Field::square4(&a), want_sqr);
+        prop_assert_eq!(Field::add4(&a, &b), want_add);
+        prop_assert_eq!(Field::sub4(&a, &b), want_sub);
+        prop_assert_eq!(Field::double4(&a), want_dbl);
+        Ok(())
+    });
+    check(&format!("{name}: interleave roundtrips"), |rng| {
+        let xs: [Fp<P, N>; LANES] = std::array::from_fn(|_| Fp::<P, N>::random(rng));
+        prop_assert_eq!(FpLanes::from_elems(&xs).to_elems(), xs);
+        let mut out = [Fp::<P, N>::zero(); LANES];
+        FpLanes::load(&xs).store(&mut out);
+        prop_assert_eq!(out, xs);
+        let k = Fp::<P, N>::random(rng);
+        prop_assert_eq!(FpLanes::splat(&k).to_elems(), [k; LANES]);
+        Ok(())
+    });
+    // ragged tails 1–3 past the lane groups, through the public
+    // lane-fed batch inversion (8 = 2·LANES is the lane threshold)
+    let cfg = Config { cases: 16, seed: 21 };
+    check_with(cfg, &format!("{name}: batch_invert ragged tails"), |rng| {
+        for len in [8usize, 9, 10, 11] {
+            let xs: Vec<Fp<P, N>> = (0..len)
+                .map(|_| loop {
+                    let x = Fp::<P, N>::random(rng);
+                    if !x.is_zero() {
+                        break x;
+                    }
+                })
+                .collect();
+            let invs = ifzkp::msm::batch_invert(&xs).map_err(|e| e.to_string())?;
+            for (x, inv) in xs.iter().zip(&invs) {
+                prop_assert_eq!(Some(*inv), x.inv());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lanes_match_scalar_fp_bn254() {
+    lane_matrix::<ifzkp::ff::params::Bn254FpParams, 4>("FpBn254");
+}
+
+#[test]
+fn lanes_match_scalar_fr_bn254() {
+    lane_matrix::<ifzkp::ff::params::Bn254FrParams, 4>("FrBn254");
+}
+
+#[test]
+fn lanes_match_scalar_fp_bls12381() {
+    lane_matrix::<ifzkp::ff::params::Bls12381FpParams, 6>("FpBls12381");
+}
+
+#[test]
+fn lanes_match_scalar_fr_bls12381() {
+    lane_matrix::<ifzkp::ff::params::Bls12381FrParams, 4>("FrBls12381");
 }
 
 #[test]
