@@ -4,10 +4,12 @@
 //! ```text
 //! ifzkp msm     --curve bn254|bls12_381 --size N [--backend native|sim|engine] [--threads T] [--glv]
 //! ifzkp prove   --constraints N [--stream [--budget MIB] [--verify]]
+//! ifzkp prove   --scenario mul-chain|square-chain|poseidon2|merkle|range|rollup [--curve C] [--size N]
 //! ifzkp serve   [--config serve.toml] [--jobs N] [--size N] [--devices N] [--sharded chunk|window]
 //! ifzkp serve   --load [--size N] [--devices N] [--duration S] [--json PATH]  # open-loop serving bench
 //! ifzkp sim     --curve ... [--size N] [--scaling S]
 //! ifzkp tables  [--id 1|2|4|7|8|9|10|ablation|glv|pointcache|whatif|ntt|all] [--cpu-measure N]
+//! ifzkp tables  --id scenarios [--size N] [--json PATH]   # circuit-library profiles
 //! ifzkp figures [--id 4|5|6|7|8|all]
 //! ifzkp info
 //! ```
@@ -357,6 +359,64 @@ fn cmd_prove_stream(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `prove --scenario NAME`: build one circuit-library workload, prove it
+/// on the default Table-I rig, check the transcript with the verifier,
+/// and print the phase profile.
+fn cmd_prove_scenario(args: &Args, scenario: &str) -> anyhow::Result<()> {
+    use ifzkp::ec::{Bls12381G2, Bn254G2};
+    use ifzkp::ff::params::{Bls12381FrParams, Bn254FrParams};
+    use ifzkp::ff::FieldParams;
+    use ifzkp::snark::{setup::Crs, verify, Prover, Scenario, VerifyingKey};
+    let sc = Scenario::parse(scenario).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario {scenario:?} (use {})",
+            Scenario::ALL.map(|s| s.name()).join(" | ")
+        )
+    })?;
+
+    fn run<G1, G2, P>(sc: Scenario, size: usize, seed: u64, curve: &str) -> anyhow::Result<()>
+    where
+        G1: CurveParams,
+        G2: CurveParams,
+        P: FieldParams<4>,
+    {
+        let inst = sc.build::<P, 4>(size, seed);
+        let cs = &inst.cs;
+        let domain_n = cs.num_constraints().max(2).next_power_of_two();
+        let crs = Crs::<G1, G2>::synthesize(cs.num_variables(), domain_n, seed ^ 1);
+        let vk = VerifyingKey::from_crs(&crs, cs.num_public);
+        let (proof, prof) = Prover::<G1, G2, P>::new(crs).prove(cs);
+        verify(&vk, &proof, &inst.public_inputs)
+            .map_err(|e| anyhow::anyhow!("transcript verify failed: {e}"))?;
+        println!(
+            "{curve} {} ({}): {} constraints, {} vars, {} public",
+            sc.name(),
+            inst.shape,
+            human_count(cs.num_constraints() as u64),
+            human_count(cs.num_variables() as u64),
+            cs.num_public
+        );
+        println!(
+            "proved in {} — MSM-G1 {:.1}% MSM-G2 {:.1}% NTT {:.1}% other {:.1}% — verified",
+            human_secs(prof.total_s),
+            prof.msm_g1_pct,
+            prof.msm_g2_pct,
+            prof.ntt_pct,
+            prof.other_pct
+        );
+        Ok(())
+    }
+
+    let size = args.get_usize("size", 1 << 12);
+    let seed = 20240710u64;
+    match curve_id(&args.get("curve", "bn254")) {
+        CurveId::Bn254 => run::<Bn254G1, Bn254G2, Bn254FrParams>(sc, size, seed, "BN254"),
+        CurveId::Bls12381 => {
+            run::<Bls12381G1, Bls12381G2, Bls12381FrParams>(sc, size, seed, "BLS12-381")
+        }
+    }
+}
+
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let curve = curve_id(&args.get("curve", "bls12_381"));
     let s = args.get_usize("scaling", 2) as u32;
@@ -426,6 +486,21 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
     if all || id == "ntt" {
         println!("{}", tables::whatif_ntt(args.get_usize("cpu-measure", 1 << 16)));
     }
+    // circuit-library profiles (not in `all`: proves 12 circuit/curve
+    // combinations twice — resident + streaming); --json writes the
+    // BENCH_scenarios.json artifact, IFZKP_BENCH_QUICK shrinks the build
+    if id == "scenarios" {
+        let quick = std::env::var("IFZKP_BENCH_QUICK").is_ok();
+        let size = args.get_usize("size", if quick { 400 } else { 2000 });
+        let (table, json) = tables::table_scenarios(size, 20240710);
+        println!("{table}");
+        let json_path = args.get("json", "");
+        if !json_path.is_empty() {
+            std::fs::write(&json_path, json.to_string())
+                .map_err(|e| anyhow::anyhow!("writing {json_path}: {e}"))?;
+            println!("wrote {json_path}");
+        }
+    }
     Ok(())
 }
 
@@ -493,6 +568,10 @@ fn main() -> anyhow::Result<()> {
         "prove" => {
             if args.get("stream", "") == "true" {
                 return cmd_prove_stream(&args);
+            }
+            let scenario = args.get("scenario", "");
+            if !scenario.is_empty() {
+                return cmd_prove_scenario(&args, &scenario);
             }
             let n = args.get_usize("constraints", 1 << 12);
             println!("{}", tables::table1(n, 20240710));

@@ -637,9 +637,141 @@ pub fn whatif_ntt(measure_cpu_up_to: usize) -> String {
     )
 }
 
+/// Short executor label for table cells.
+fn backend_label(b: msm::Backend) -> String {
+    match b {
+        msm::Backend::Naive => "naive".into(),
+        msm::Backend::Pippenger => "pippenger".into(),
+        msm::Backend::Parallel { threads } => format!("parallel({threads})"),
+        msm::Backend::BatchAffine => "batch-affine".into(),
+        msm::Backend::BatchAffineParallel { threads } => format!("batch-affine({threads})"),
+        msm::Backend::Chunked { threads } => format!("chunked({threads})"),
+        msm::Backend::Precomputed => "precomputed".into(),
+    }
+}
+
+/// Per-scenario prover profiles across the circuit library, both curve
+/// families. For every [`Scenario`](crate::snark::Scenario): build an
+/// instance sized to ~`size` constraints, synthesize a CRS, run the
+/// resident Table-I rig, verify the transcript, then re-prove with the
+/// streaming prover under a 1 MiB chunk budget and assert bit-identity.
+/// Returns the rendered table and the `BENCH_scenarios.json` payload
+/// (schema in BENCHMARKS.md).
+pub fn table_scenarios(size: usize, seed: u64) -> (String, crate::util::json::Json) {
+    use crate::util::json::Json;
+
+    fn profile<G1, G2, P>(
+        curve: &str,
+        size: usize,
+        seed: u64,
+        rows: &mut Vec<Vec<String>>,
+        results: &mut Vec<Json>,
+    ) where
+        G1: crate::ec::CurveParams,
+        G2: crate::ec::CurveParams,
+        P: crate::ff::FieldParams<4>,
+        G1::Base: crate::ff::WordCodec,
+        G2::Base: crate::ff::WordCodec,
+    {
+        use crate::snark::{prove_streaming, ProverConfig, Scenario, StreamingSrs, VerifyingKey};
+        use crate::util::mem::MemoryBudget;
+        for sc in Scenario::ALL {
+            let inst = sc.build::<P, 4>(size, seed);
+            let cs = &inst.cs;
+            let domain_n = cs.num_constraints().max(2).next_power_of_two();
+            let nv = cs.num_variables();
+            let crs_seed = seed ^ 0x5ce2_a210;
+            let crs = Crs::<G1, G2>::synthesize(nv, domain_n, crs_seed);
+            let vk = VerifyingKey::from_crs(&crs, cs.num_public);
+            let auto = msm::Backend::auto_for::<G1>(nv, &MsmConfig::default());
+            let prover = Prover::<G1, G2, P>::new(crs);
+            let (proof, prof) = prover.prove(cs);
+            let verified = crate::snark::verify::verify(&vk, &proof, &inst.public_inputs).is_ok();
+            // streaming replay over the generator-backed SRS view of the
+            // same CRS seed: must be bit-identical to the resident proof
+            let srs = StreamingSrs::<G1, G2>::generated(nv, domain_n, crs_seed);
+            let budget = MemoryBudget::mib(1);
+            let (sproof, report) = prove_streaming(cs, &srs, budget, &ProverConfig::default())
+                .expect("1 MiB budget admits whole chunks");
+            let identical = sproof.a.eq_point(&proof.a)
+                && sproof.b.eq_point(&proof.b)
+                && sproof.c.eq_point(&proof.c)
+                && sproof.pi.eq_point(&proof.pi);
+            rows.push(vec![
+                curve.into(),
+                sc.name().into(),
+                inst.shape.clone(),
+                cs.num_constraints().to_string(),
+                nv.to_string(),
+                cs.num_public.to_string(),
+                backend_label(auto),
+                f2(prof.msm_g1_pct),
+                f2(prof.msm_g2_pct),
+                f2(prof.ntt_pct),
+                f2(prof.other_pct),
+                report.peak_chunk_bytes.to_string(),
+                if verified && identical { "ok".into() } else { "FAIL".into() },
+            ]);
+            let mut r = Json::obj();
+            r.set("curve", curve)
+                .set("scenario", sc.name())
+                .set("shape", inst.shape.clone())
+                .set("constraints", cs.num_constraints())
+                .set("variables", nv)
+                .set("publics", cs.num_public)
+                .set("auto_backend", backend_label(auto))
+                .set("msm_g1_pct", prof.msm_g1_pct)
+                .set("msm_g2_pct", prof.msm_g2_pct)
+                .set("ntt_pct", prof.ntt_pct)
+                .set("other_pct", prof.other_pct)
+                .set("total_s", prof.total_s)
+                .set("stream_peak_bytes", report.peak_chunk_bytes)
+                .set("stream_budget_bytes", report.budget_bytes)
+                .set("verified", verified)
+                .set("stream_identical", identical);
+            results.push(r);
+        }
+    }
+
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    profile::<Bn254G1, Bn254G2, Bn254FrParams>("BN254", size, seed, &mut rows, &mut results);
+    profile::<Bls12381G1, Bls12381G2, Bls12381FrParams>(
+        "BLS12-381",
+        size,
+        seed,
+        &mut rows,
+        &mut results,
+    );
+    let table = ascii_table(
+        &format!("Scenario profiles: circuit library at ~{size} constraints (%)"),
+        &[
+            "curve", "scenario", "shape", "constr", "vars", "pub", "auto backend", "G1%", "G2%",
+            "NTT%", "other%", "stream peak B", "check",
+        ],
+        &rows,
+    );
+    let mut json = Json::obj();
+    json.set("bench", "scenarios").set("size", size).set("seed", seed).set("results", results);
+    (table, json)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn table_scenarios_round_trips_every_workload() {
+        let (t, json) = table_scenarios(250, 21);
+        assert!(t.contains("rollup") && t.contains("poseidon2"));
+        assert!(!t.contains("FAIL"), "a scenario failed verify/bit-identity:\n{t}");
+        let results = json.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 12, "6 scenarios x 2 curves");
+        for r in results {
+            assert_eq!(r.get("verified"), Some(&crate::util::json::Json::Bool(true)));
+            assert_eq!(r.get("stream_identical"), Some(&crate::util::json::Json::Bool(true)));
+        }
+    }
 
     #[test]
     fn table4_5_renders() {

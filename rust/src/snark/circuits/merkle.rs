@@ -1,0 +1,255 @@
+//! Merkle membership paths over the Poseidon2 compression function.
+//!
+//! A tree node is `compress(left, right)`; a membership proof is the
+//! leaf, the leaf index, and one sibling per level (bottom-up). The
+//! gadget allocates the index *bits* as boolean-constrained wires and
+//! selects the (left, right) ordering per level with one multiplication:
+//! `left = cur + b·(sib − cur)` and `right = cur + sib − left` (linear),
+//! so a level costs `1 + 1 + constraints_per_permutation` constraints.
+
+use super::poseidon2::Poseidon2;
+use crate::ff::{Field, FieldParams, Fp};
+use crate::snark::r1cs::{ConstraintSystem, LinearCombination};
+use crate::util::rng::Rng;
+
+type Lc<P, const N: usize> = LinearCombination<Fp<P, N>>;
+
+/// A fully materialized Merkle tree (reference implementation, used by
+/// the rollup witness generator and the property tests; membership-only
+/// workloads fold synthetic paths instead of building 2^depth leaves).
+#[derive(Clone, Debug)]
+pub struct MerkleTree<P: FieldParams<N>, const N: usize> {
+    hasher: Poseidon2<P, N>,
+    /// levels[0] = leaves, levels.last() = [root]
+    levels: Vec<Vec<Fp<P, N>>>,
+}
+
+impl<P: FieldParams<N>, const N: usize> MerkleTree<P, N> {
+    /// Build from a power-of-two leaf vector.
+    pub fn new(hasher: Poseidon2<P, N>, leaves: Vec<Fp<P, N>>) -> Self {
+        assert!(leaves.len().is_power_of_two() && leaves.len() >= 2, "need 2^d >= 2 leaves");
+        let mut levels = vec![leaves];
+        while levels.last().unwrap().len() > 1 {
+            let cur = levels.last().unwrap();
+            let next: Vec<_> =
+                cur.chunks(2).map(|p| hasher.compress(&p[0], &p[1])).collect();
+            levels.push(next);
+        }
+        MerkleTree { hasher, levels }
+    }
+
+    /// Tree depth (levels below the root).
+    pub fn depth(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    /// The root commitment.
+    pub fn root(&self) -> Fp<P, N> {
+        self.levels.last().unwrap()[0]
+    }
+
+    /// Leaf value at `index`.
+    pub fn leaf(&self, index: usize) -> Fp<P, N> {
+        self.levels[0][index]
+    }
+
+    /// The compression instance the tree hashes with.
+    pub fn hasher(&self) -> &Poseidon2<P, N> {
+        &self.hasher
+    }
+
+    /// Sibling per level, bottom-up — the membership path for `index`.
+    pub fn path(&self, index: usize) -> Vec<Fp<P, N>> {
+        (0..self.depth()).map(|lvl| self.levels[lvl][(index >> lvl) ^ 1]).collect()
+    }
+
+    /// Replace the leaf at `index` and rehash its root path.
+    pub fn update(&mut self, index: usize, leaf: Fp<P, N>) {
+        self.levels[0][index] = leaf;
+        for lvl in 0..self.depth() {
+            let parent = (index >> lvl) / 2;
+            let (l, r) = (2 * parent, 2 * parent + 1);
+            let h = self.hasher.compress(&self.levels[lvl][l], &self.levels[lvl][r]);
+            self.levels[lvl + 1][parent] = h;
+        }
+    }
+}
+
+/// Out-of-circuit root recomputation: fold `leaf` with `siblings`
+/// bottom-up, taking the right slot at level ℓ when bit ℓ of `index` is
+/// set. The reference the gadget is tested against.
+pub fn fold_path<P: FieldParams<N>, const N: usize>(
+    hasher: &Poseidon2<P, N>,
+    leaf: Fp<P, N>,
+    index: usize,
+    siblings: &[Fp<P, N>],
+) -> Fp<P, N> {
+    let mut cur = leaf;
+    for (lvl, sib) in siblings.iter().enumerate() {
+        cur = if (index >> lvl) & 1 == 1 {
+            hasher.compress(sib, &cur)
+        } else {
+            hasher.compress(&cur, sib)
+        };
+    }
+    cur
+}
+
+/// The allocated wires of one membership path: boolean-constrained
+/// direction bits and the sibling values, both bottom-up.
+#[derive(Clone, Debug)]
+pub struct PathWires {
+    /// Direction bit per level (1 = current node is the right child).
+    pub bits: Vec<usize>,
+    /// Sibling wire per level.
+    pub siblings: Vec<usize>,
+}
+
+/// Allocate (and boolean-constrain) the direction bits of `index` plus
+/// the sibling wires. Shared by membership proofs and rollup updates —
+/// an update reuses the *same* wires for the old-leaf and new-leaf root
+/// computations, so both paths provably walk the same tree slot.
+pub fn alloc_path<P: FieldParams<N>, const N: usize>(
+    cs: &mut ConstraintSystem<P, N>,
+    index: usize,
+    siblings: &[Fp<P, N>],
+) -> PathWires {
+    let bits = (0..siblings.len())
+        .map(|lvl| {
+            let b = cs.alloc(Fp::<P, N>::from_u64(((index >> lvl) & 1) as u64));
+            cs.enforce_boolean(b);
+            b
+        })
+        .collect();
+    let siblings = siblings.iter().map(|s| cs.alloc(*s)).collect();
+    PathWires { bits, siblings }
+}
+
+/// In-circuit root recomputation along `path` starting from `leaf`.
+/// Returns the root as a symbolic combination (callers typically
+/// `enforce_eq` it against a public root wire).
+pub fn root_gadget<P: FieldParams<N>, const N: usize>(
+    hasher: &Poseidon2<P, N>,
+    cs: &mut ConstraintSystem<P, N>,
+    leaf: &Lc<P, N>,
+    path: &PathWires,
+) -> Lc<P, N> {
+    let mut cur = leaf.clone();
+    for (b, sib) in path.bits.iter().zip(&path.siblings) {
+        let bl = LinearCombination::var(*b);
+        let sl = LinearCombination::var(*sib);
+        // left = cur + b·(sib − cur); right = cur + sib − left (linear)
+        let t = cs.mul_lc(&bl, &sl.minus(&cur));
+        let left = cur.plus(&LinearCombination::var(t));
+        let right = cur.plus(&sl).minus(&left);
+        cur = hasher.compress_gadget(cs, &left, &right);
+    }
+    cur
+}
+
+/// Domain-separation constant for membership circuit inputs.
+const MERKLE_SEED: u64 = 0x3c77_e019_54ab_86f2;
+
+/// The Merkle scenario circuit: `n_paths` independent membership proofs
+/// of configurable `depth` against synthetic paths; the public inputs
+/// are the roots. Returns the system and its claimed public inputs.
+pub fn membership_circuit<P: FieldParams<N>, const N: usize>(
+    depth: usize,
+    n_paths: usize,
+    seed: u64,
+) -> (ConstraintSystem<P, N>, Vec<Fp<P, N>>) {
+    assert!(depth >= 1 && depth < 64, "depth out of range");
+    let n_paths = n_paths.max(1);
+    let hasher = Poseidon2::<P, N>::standard();
+    let mut rng = Rng::new(seed ^ MERKLE_SEED);
+    struct Case<P: FieldParams<N>, const N: usize> {
+        leaf: Fp<P, N>,
+        index: usize,
+        siblings: Vec<Fp<P, N>>,
+        root: Fp<P, N>,
+    }
+    let cases: Vec<Case<P, N>> = (0..n_paths)
+        .map(|_| {
+            let leaf = Fp::<P, N>::random(&mut rng);
+            let index = rng.below(1u64 << depth) as usize;
+            let siblings: Vec<_> =
+                (0..depth).map(|_| Fp::<P, N>::random(&mut rng)).collect();
+            let root = fold_path(&hasher, leaf, index, &siblings);
+            Case { leaf, index, siblings, root }
+        })
+        .collect();
+
+    let mut cs = ConstraintSystem::<P, N>::new();
+    let root_wires: Vec<usize> = cases.iter().map(|c| cs.alloc_public(c.root)).collect();
+    for (case, root_wire) in cases.iter().zip(&root_wires) {
+        let leaf = LinearCombination::var(cs.alloc(case.leaf));
+        let path = alloc_path(&mut cs, case.index, &case.siblings);
+        let computed = root_gadget(&hasher, &mut cs, &leaf, &path);
+        cs.enforce_eq(&computed, &LinearCombination::var(*root_wire));
+    }
+    (cs, cases.iter().map(|c| c.root).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::Bn254FrParams;
+    type Fr = crate::ff::FrBn254;
+
+    fn small_hasher() -> Poseidon2<Bn254FrParams, 4> {
+        Poseidon2::with_rounds(4, 8)
+    }
+
+    #[test]
+    fn tree_paths_fold_to_root() {
+        let h = small_hasher();
+        let leaves: Vec<Fr> = (0..8).map(Fr::from_u64).collect();
+        let tree = MerkleTree::new(h.clone(), leaves);
+        assert_eq!(tree.depth(), 3);
+        for i in 0..8 {
+            assert_eq!(fold_path(&h, tree.leaf(i), i, &tree.path(i)), tree.root());
+        }
+    }
+
+    #[test]
+    fn update_rehashes_the_path() {
+        let h = small_hasher();
+        let leaves: Vec<Fr> = (0..4).map(Fr::from_u64).collect();
+        let mut tree = MerkleTree::new(h.clone(), leaves.clone());
+        let before = tree.root();
+        tree.update(2, Fr::from_u64(99));
+        assert_ne!(tree.root(), before);
+        assert_eq!(fold_path(&h, Fr::from_u64(99), 2, &tree.path(2)), tree.root());
+        // rebuilding from scratch agrees with the incremental update
+        let mut fresh = leaves;
+        fresh[2] = Fr::from_u64(99);
+        assert_eq!(MerkleTree::new(h, fresh).root(), tree.root());
+    }
+
+    #[test]
+    fn membership_circuit_satisfied_and_public() {
+        let (cs, publics) = membership_circuit::<Bn254FrParams, 4>(3, 2, 7);
+        assert!(cs.is_satisfied());
+        assert_eq!(cs.num_public, 2);
+        assert_eq!(&cs.witness[1..=2], publics.as_slice());
+    }
+
+    #[test]
+    fn wrong_direction_bit_is_rejected() {
+        let h = small_hasher();
+        let mut cs = ConstraintSystem::<Bn254FrParams, 4>::new();
+        let leaf_val = Fr::from_u64(5);
+        let siblings = [Fr::from_u64(11), Fr::from_u64(13)];
+        let root = fold_path(&h, leaf_val, 2, &siblings);
+        let root_wire = cs.alloc_public(root);
+        let leaf = LinearCombination::var(cs.alloc(leaf_val));
+        let path = alloc_path(&mut cs, 2, &siblings);
+        let computed = root_gadget(&h, &mut cs, &leaf, &path);
+        cs.enforce_eq(&computed, &LinearCombination::var(root_wire));
+        assert!(cs.is_satisfied());
+        // flipping a direction bit walks a different slot: rejected
+        let b0 = path.bits[0];
+        cs.witness[b0] = Fr::one().sub(&cs.witness[b0]);
+        assert!(!cs.is_satisfied());
+    }
+}

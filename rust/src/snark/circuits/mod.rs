@@ -1,0 +1,184 @@
+//! Circuit library — the workloads the prover is profiled against.
+//!
+//! Two synthetic chains ([`synthetic`]) provide arbitrary-size R1CS
+//! stress shapes, and four real workloads mirror what production SNARK
+//! deployments actually prove:
+//!
+//! * [`poseidon2`] — an algebraic permutation (x⁵ S-box, full/partial
+//!   rounds) and hash chains built from it,
+//! * [`merkle`] — membership paths under the Poseidon2 compression
+//!   function,
+//! * [`range`] — k-bit decomposition range checks,
+//! * [`rollup`] — batch balance transfers composing Merkle updates,
+//!   range checks and conservation constraints.
+//!
+//! Every workload comes as a triple: an out-of-circuit reference, a
+//! constraint-system builder (gadget), and a witness generator; the
+//! property tests pin gadget == reference. [`Scenario`] names them for
+//! the CLI (`prove --scenario`, `tables --id scenarios`) and builds a
+//! sized instance of each.
+
+pub mod merkle;
+pub mod poseidon2;
+pub mod range;
+pub mod rollup;
+pub mod synthetic;
+
+pub use synthetic::{mul_chain, square_chain};
+
+use crate::ff::{FieldParams, Fp};
+use crate::snark::r1cs::ConstraintSystem;
+
+/// A named prover workload, selectable from the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// Synthetic multiplication chain (`x_{i+2} = x_{i+1}·x_i`).
+    MulChain,
+    /// Synthetic square-accumulate chain (`x ← x² + c`).
+    SquareChain,
+    /// Poseidon2 hash chain (repeated full permutations).
+    Poseidon2,
+    /// Merkle membership paths under Poseidon2 compression.
+    Merkle,
+    /// k-bit range decompositions.
+    Range,
+    /// Rollup-style batch transfers (Merkle updates + ranges).
+    Rollup,
+}
+
+/// A built scenario: the constraint system, its claimed public inputs
+/// (`witness[1..=num_public]`), and a human-readable shape string.
+pub struct ScenarioInstance<P: FieldParams<N>, const N: usize> {
+    /// The satisfied constraint system.
+    pub cs: ConstraintSystem<P, N>,
+    /// Public inputs in wire order.
+    pub public_inputs: Vec<Fp<P, N>>,
+    /// Shape summary, e.g. `depth=4 paths=8`.
+    pub shape: String,
+}
+
+impl Scenario {
+    /// Every scenario, CLI order.
+    pub const ALL: [Scenario; 6] = [
+        Scenario::MulChain,
+        Scenario::SquareChain,
+        Scenario::Poseidon2,
+        Scenario::Merkle,
+        Scenario::Range,
+        Scenario::Rollup,
+    ];
+
+    /// The four real workloads (everything but the synthetic chains).
+    pub const WORKLOADS: [Scenario; 4] =
+        [Scenario::Poseidon2, Scenario::Merkle, Scenario::Range, Scenario::Rollup];
+
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::MulChain => "mul-chain",
+            Scenario::SquareChain => "square-chain",
+            Scenario::Poseidon2 => "poseidon2",
+            Scenario::Merkle => "merkle",
+            Scenario::Range => "range",
+            Scenario::Rollup => "rollup",
+        }
+    }
+
+    /// Inverse of [`Scenario::name`].
+    pub fn parse(s: &str) -> Option<Scenario> {
+        Scenario::ALL.into_iter().find(|sc| sc.name() == s)
+    }
+
+    /// Build an instance sized to roughly `size` constraints. Each
+    /// scenario translates the budget into its own shape parameters
+    /// (chain length, tree depth × path count, value count, transfer
+    /// count) so profiles at equal `size` are comparable across
+    /// workloads.
+    pub fn build<P: FieldParams<N>, const N: usize>(
+        self,
+        size: usize,
+        seed: u64,
+    ) -> ScenarioInstance<P, N> {
+        let size = size.max(1);
+        match self {
+            Scenario::MulChain => {
+                let cs = mul_chain::<P, N>(size, seed);
+                finish(cs, format!("n={size}"))
+            }
+            Scenario::SquareChain => {
+                let cs = square_chain::<P, N>(size, seed);
+                finish(cs, format!("n={size}"))
+            }
+            Scenario::Poseidon2 => {
+                // ≈241 constraints per permutation (240 + final binding)
+                let n_perms = (size / 241).max(1);
+                let (cs, _) = poseidon2::hash_chain_circuit::<P, N>(n_perms, seed);
+                finish(cs, format!("perms={n_perms}"))
+            }
+            Scenario::Merkle => {
+                // ≈243 constraints per tree level
+                let depth = (size / 243).clamp(1, 8);
+                let n_paths = (size / (depth * 243)).max(1);
+                let (cs, _) = merkle::membership_circuit::<P, N>(depth, n_paths, seed);
+                finish(cs, format!("depth={depth} paths={n_paths}"))
+            }
+            Scenario::Range => {
+                let k = 32;
+                let n_values = (size / (k + 1)).max(1);
+                let (cs, _) = range::range_circuit::<P, N>(k, n_values, seed);
+                finish(cs, format!("k={k} values={n_values}"))
+            }
+            Scenario::Rollup => {
+                let depth = (size / 1000).clamp(1, 4);
+                let amount_bits = 40;
+                // 4 root recomputations + 3 range checks + glue
+                let per_transfer = 4 * 242 * depth + 3 * (amount_bits + 1) + 5;
+                let n_transfers = (size / per_transfer).max(1);
+                let (cs, _) = rollup::rollup_circuit::<P, N>(depth, n_transfers, amount_bits, seed);
+                finish(cs, format!("depth={depth} transfers={n_transfers} k={amount_bits}"))
+            }
+        }
+    }
+}
+
+fn finish<P: FieldParams<N>, const N: usize>(
+    cs: ConstraintSystem<P, N>,
+    shape: String,
+) -> ScenarioInstance<P, N> {
+    let public_inputs = cs.witness[1..=cs.num_public].to_vec();
+    ScenarioInstance { cs, public_inputs, shape }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+
+    #[test]
+    fn names_parse_back() {
+        for sc in Scenario::ALL {
+            assert_eq!(Scenario::parse(sc.name()), Some(sc));
+        }
+        assert_eq!(Scenario::parse("no-such"), None);
+    }
+
+    #[test]
+    fn every_scenario_builds_satisfied_instances() {
+        for sc in Scenario::ALL {
+            let inst = sc.build::<Bn254FrParams, 4>(300, 11);
+            assert!(inst.cs.is_satisfied(), "{} unsatisfied", sc.name());
+            assert_eq!(inst.public_inputs.len(), inst.cs.num_public);
+            assert!(!inst.shape.is_empty());
+            let inst = sc.build::<Bls12381FrParams, 4>(300, 11);
+            assert!(inst.cs.is_satisfied(), "{} unsatisfied on bls", sc.name());
+        }
+    }
+
+    #[test]
+    fn workloads_are_the_non_synthetic_subset() {
+        for sc in Scenario::WORKLOADS {
+            assert!(sc != Scenario::MulChain && sc != Scenario::SquareChain);
+            assert!(Scenario::ALL.contains(&sc));
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Poseidon2-style permutation (t = 3, x⁵ S-box) — reference and gadget.
+//!
+//! The structure follows Poseidon2 (eprint 2023/323, the design behind
+//! Ziren's Poseidon2 chip): an external round matrix M_E = circ(2,1,1)
+//! applied to the input and after every *full* round (S-box on all three
+//! lanes), and a cheaper internal matrix M_I = [[2,1,1],[1,2,1],[1,1,3]]
+//! after every *partial* round (S-box on lane 0 only). Both matrices are
+//! sum-plus-diagonal, so a layer costs 5–6 field adds, no multiplies.
+//!
+//! Per the repo's no-transcribed-constants rule, round constants are not
+//! copied from a reference implementation: they are drawn from the
+//! deterministic seeded generator ([`crate::util::rng::Rng`]) under a
+//! domain-separated seed (domain tag ⊕ FNV-1a of the field name ⊕ round
+//! counts), and every derivation self-checks its preconditions — x⁵ is a
+//! permutation of the field (gcd(5, p−1) = 1), both round matrices are
+//! invertible, and the drawn constants are nonzero and pairwise distinct.
+//!
+//! The circuit gadget keeps all linear structure symbolic
+//! ([`LinearCombination`]) and materializes wires only inside the S-box
+//! (x², x⁴, x⁵ — 3 constraints), so a full permutation costs exactly
+//! `3·(3·R_F + R_P)` constraints: 240 at the standard (8, 56) rounds.
+
+use crate::ff::{Field, FieldParams, Fp};
+use crate::snark::r1cs::{ConstraintSystem, LinearCombination};
+use crate::util::rng::Rng;
+
+/// Permutation width (rate 2 + capacity 1).
+pub const WIDTH: usize = 3;
+/// Standard full-round count for ~255-bit fields at α = 5.
+pub const FULL_ROUNDS: usize = 8;
+/// Standard partial-round count for ~255-bit fields at α = 5.
+pub const PARTIAL_ROUNDS: usize = 56;
+/// Domain tag folded into every per-field constant seed.
+pub const POSEIDON2_DOMAIN: u64 = 0x1f2e_3d4c_5b6a_7988;
+/// Capacity-lane tag for 2-to-1 compression (arity marker).
+pub const COMPRESS_CAP: u64 = 2;
+
+/// A derived Poseidon2-style permutation instance over one scalar field.
+#[derive(Clone, Debug)]
+pub struct Poseidon2<P: FieldParams<N>, const N: usize> {
+    /// First-half full-round constants, round-major.
+    first: Vec<[Fp<P, N>; WIDTH]>,
+    /// Partial-round constants (lane 0 only).
+    partial: Vec<Fp<P, N>>,
+    /// Last-half full-round constants, round-major.
+    last: Vec<[Fp<P, N>; WIDTH]>,
+}
+
+/// FNV-1a of the field name — the per-field component of the seed.
+fn fnv1a64(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// x⁵ is a permutation of F_p iff gcd(5, p−1) = 1. Since 2⁶⁴ ≡ 1 (mod 5),
+/// p mod 5 is just the limb sum mod 5.
+fn sbox_is_permutation<P: FieldParams<N>, const N: usize>() -> bool {
+    let acc: u128 = P::MODULUS.iter().map(|&l| u128::from(l)).sum();
+    let p_mod5 = (acc % 5) as u64;
+    (p_mod5 + 4) % 5 != 0 // (p − 1) mod 5
+}
+
+/// Determinant of a 3×3 matrix of small integers, computed in-field.
+fn det3<P: FieldParams<N>, const N: usize>(m: [[u64; 3]; 3]) -> Fp<P, N> {
+    let e = |r: usize, c: usize| Fp::<P, N>::from_u64(m[r][c]);
+    let minor = |a: Fp<P, N>, b: Fp<P, N>, c: Fp<P, N>, d: Fp<P, N>| a.mul(&d).sub(&b.mul(&c));
+    let m0 = minor(e(1, 1), e(1, 2), e(2, 1), e(2, 2));
+    let m1 = minor(e(1, 0), e(1, 2), e(2, 0), e(2, 2));
+    let m2 = minor(e(1, 0), e(1, 1), e(2, 0), e(2, 1));
+    e(0, 0).mul(&m0).sub(&e(0, 1).mul(&m1)).add(&e(0, 2).mul(&m2))
+}
+
+fn sbox<P: FieldParams<N>, const N: usize>(x: &Fp<P, N>) -> Fp<P, N> {
+    let x2 = x.square();
+    x2.square().mul(x)
+}
+
+/// External layer M_E = circ(2,1,1): out_i = Σs + s_i.
+fn external<P: FieldParams<N>, const N: usize>(s: &[Fp<P, N>; WIDTH]) -> [Fp<P, N>; WIDTH] {
+    let t = s[0].add(&s[1]).add(&s[2]);
+    [t.add(&s[0]), t.add(&s[1]), t.add(&s[2])]
+}
+
+/// Internal layer M_I = [[2,1,1],[1,2,1],[1,1,3]]: out = Σs + diag·s.
+fn internal<P: FieldParams<N>, const N: usize>(s: &[Fp<P, N>; WIDTH]) -> [Fp<P, N>; WIDTH] {
+    let t = s[0].add(&s[1]).add(&s[2]);
+    [t.add(&s[0]), t.add(&s[1]), t.add(&s[2].double())]
+}
+
+type Lc<P, const N: usize> = LinearCombination<Fp<P, N>>;
+
+fn external_lc<P: FieldParams<N>, const N: usize>(s: &[Lc<P, N>; WIDTH]) -> [Lc<P, N>; WIDTH] {
+    let t = s[0].plus(&s[1]).plus(&s[2]);
+    [t.plus(&s[0]), t.plus(&s[1]), t.plus(&s[2])]
+}
+
+fn internal_lc<P: FieldParams<N>, const N: usize>(s: &[Lc<P, N>; WIDTH]) -> [Lc<P, N>; WIDTH] {
+    let t = s[0].plus(&s[1]).plus(&s[2]);
+    let two = Fp::<P, N>::from_u64(2);
+    [t.plus(&s[0]), t.plus(&s[1]), t.plus(&s[2].scaled(&two))]
+}
+
+impl<P: FieldParams<N>, const N: usize> Poseidon2<P, N> {
+    /// The standard instance: (8, 56) rounds — the usual parameterization
+    /// for ~255-bit scalar fields at α = 5.
+    pub fn standard() -> Self {
+        Self::with_rounds(FULL_ROUNDS, PARTIAL_ROUNDS)
+    }
+
+    /// Derive an instance with explicit round counts (`rf` even ≥ 2).
+    /// Reduced-round instances are for tests only — they keep the exact
+    /// constraint structure at a fraction of the cost.
+    pub fn with_rounds(rf: usize, rp: usize) -> Self {
+        assert!(rf >= 2 && rf % 2 == 0, "full rounds must be even");
+        assert!(
+            sbox_is_permutation::<P, N>(),
+            "x^5 is not a permutation of {} (gcd(5, p-1) != 1)",
+            P::NAME
+        );
+        assert!(
+            !det3::<P, N>([[2, 1, 1], [1, 2, 1], [1, 1, 2]]).is_zero(),
+            "external round matrix is singular over {}",
+            P::NAME
+        );
+        assert!(
+            !det3::<P, N>([[2, 1, 1], [1, 2, 1], [1, 1, 3]]).is_zero(),
+            "internal round matrix is singular over {}",
+            P::NAME
+        );
+        let seed = POSEIDON2_DOMAIN ^ fnv1a64(P::NAME) ^ ((rf as u64) << 32) ^ rp as u64;
+        let mut rng = Rng::new(seed);
+        let half = rf / 2;
+        let mut row = |rng: &mut Rng| {
+            [
+                Fp::<P, N>::random(rng),
+                Fp::<P, N>::random(rng),
+                Fp::<P, N>::random(rng),
+            ]
+        };
+        let first: Vec<_> = (0..half).map(|_| row(&mut rng)).collect();
+        let partial: Vec<_> = (0..rp).map(|_| Fp::<P, N>::random(&mut rng)).collect();
+        let last: Vec<_> = (0..half).map(|_| row(&mut rng)).collect();
+        let out = Poseidon2 { first, partial, last };
+        out.self_check();
+        out
+    }
+
+    /// Derivation self-check: all round constants nonzero and pairwise
+    /// distinct (a duplicate or zero draw would weaken round separation
+    /// and can only mean the generator walk is broken).
+    fn self_check(&self) {
+        let mut canon: Vec<[u64; N]> = Vec::new();
+        for c in self.constants() {
+            assert!(!c.is_zero(), "zero round constant drawn for {}", P::NAME);
+            canon.push(c.to_canonical());
+        }
+        canon.sort_unstable();
+        for w in canon.windows(2) {
+            assert!(w[0] != w[1], "duplicate round constant drawn for {}", P::NAME);
+        }
+    }
+
+    fn constants(&self) -> impl Iterator<Item = &Fp<P, N>> {
+        self.first
+            .iter()
+            .chain(self.last.iter())
+            .flatten()
+            .chain(self.partial.iter())
+    }
+
+    /// Total round count (R_F + R_P).
+    pub fn rounds(&self) -> (usize, usize) {
+        (self.first.len() + self.last.len(), self.partial.len())
+    }
+
+    /// R1CS constraints one permutation costs: 3 per S-box.
+    pub fn constraints_per_permutation(&self) -> usize {
+        let (rf, rp) = self.rounds();
+        3 * (WIDTH * rf + rp)
+    }
+
+    /// The out-of-circuit reference permutation.
+    pub fn permute(&self, input: [Fp<P, N>; WIDTH]) -> [Fp<P, N>; WIDTH] {
+        let mut s = external(&input);
+        for rc in &self.first {
+            for (x, c) in s.iter_mut().zip(rc) {
+                *x = sbox(&x.add(c));
+            }
+            s = external(&s);
+        }
+        for c in &self.partial {
+            s[0] = sbox(&s[0].add(c));
+            s = internal(&s);
+        }
+        for rc in &self.last {
+            for (x, c) in s.iter_mut().zip(rc) {
+                *x = sbox(&x.add(c));
+            }
+            s = external(&s);
+        }
+        s
+    }
+
+    /// 2-to-1 compression: permute [l, r, cap] and truncate to lane 0.
+    pub fn compress(&self, l: &Fp<P, N>, r: &Fp<P, N>) -> Fp<P, N> {
+        self.permute([*l, *r, Fp::<P, N>::from_u64(COMPRESS_CAP)])[0]
+    }
+
+    /// In-circuit permutation over symbolic lane combinations. Allocates
+    /// 3 wires per S-box; all matrix/constant structure stays symbolic.
+    pub fn permute_gadget(
+        &self,
+        cs: &mut ConstraintSystem<P, N>,
+        input: &[Lc<P, N>; WIDTH],
+    ) -> [Lc<P, N>; WIDTH] {
+        let mut s = external_lc(input);
+        for rc in &self.first {
+            for (x, c) in s.iter_mut().zip(rc) {
+                *x = sbox_gadget(cs, &x.plus(&LinearCombination::constant(*c)));
+            }
+            s = external_lc(&s);
+        }
+        for c in &self.partial {
+            s[0] = sbox_gadget(cs, &s[0].plus(&LinearCombination::constant(*c)));
+            s = internal_lc(&s);
+        }
+        for rc in &self.last {
+            for (x, c) in s.iter_mut().zip(rc) {
+                *x = sbox_gadget(cs, &x.plus(&LinearCombination::constant(*c)));
+            }
+            s = external_lc(&s);
+        }
+        s
+    }
+
+    /// In-circuit 2-to-1 compression (see [`Self::compress`]).
+    pub fn compress_gadget(
+        &self,
+        cs: &mut ConstraintSystem<P, N>,
+        l: &Lc<P, N>,
+        r: &Lc<P, N>,
+    ) -> Lc<P, N> {
+        let cap = LinearCombination::constant(Fp::<P, N>::from_u64(COMPRESS_CAP));
+        let out = self.permute_gadget(cs, &[l.clone(), r.clone(), cap]);
+        out[0].clone()
+    }
+}
+
+/// x⁵ in 3 constraints: x·x = x², x²·x² = x⁴, x⁴·x = x⁵.
+fn sbox_gadget<P: FieldParams<N>, const N: usize>(
+    cs: &mut ConstraintSystem<P, N>,
+    x: &Lc<P, N>,
+) -> Lc<P, N> {
+    let x2 = cs.mul_lc(x, x);
+    let x2l = LinearCombination::var(x2);
+    let x4 = cs.mul_lc(&x2l, &x2l);
+    let x5 = cs.mul_lc(&LinearCombination::var(x4), x);
+    LinearCombination::var(x5)
+}
+
+/// Domain-separation constant for hash-chain circuit inputs.
+const HASH_CHAIN_SEED: u64 = 0x9e11_a2b4_77c3_0d51;
+
+/// The Poseidon2 scenario circuit: `n_perms` chained permutations over a
+/// seeded initial state; the single public input is the final lane-0
+/// value. Returns the system and its claimed public inputs.
+pub fn hash_chain_circuit<P: FieldParams<N>, const N: usize>(
+    n_perms: usize,
+    seed: u64,
+) -> (ConstraintSystem<P, N>, Vec<Fp<P, N>>) {
+    let n_perms = n_perms.max(1);
+    let hasher = Poseidon2::<P, N>::standard();
+    let mut rng = Rng::new(seed ^ HASH_CHAIN_SEED);
+    let init = [
+        Fp::<P, N>::random(&mut rng),
+        Fp::<P, N>::random(&mut rng),
+        Fp::<P, N>::random(&mut rng),
+    ];
+    // reference pass first: the public output must be allocated before
+    // any private wire (the leading-publics layout)
+    let mut state = init;
+    for _ in 0..n_perms {
+        state = hasher.permute(state);
+    }
+    let out = state[0];
+
+    let mut cs = ConstraintSystem::<P, N>::new();
+    let w_out = cs.alloc_public(out);
+    let wires = init.map(|v| cs.alloc(v));
+    let mut s = wires.map(LinearCombination::var);
+    for _ in 0..n_perms {
+        s = hasher.permute_gadget(&mut cs, &s);
+    }
+    cs.enforce_eq(&s[0], &LinearCombination::var(w_out));
+    (cs, vec![out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::{Bls12381FrParams, Bn254FrParams};
+    type Fr = crate::ff::FrBn254;
+
+    #[test]
+    fn standard_instance_derives_and_sizes() {
+        let h = Poseidon2::<Bn254FrParams, 4>::standard();
+        assert_eq!(h.rounds(), (FULL_ROUNDS, PARTIAL_ROUNDS));
+        assert_eq!(h.constraints_per_permutation(), 240);
+        let h = Poseidon2::<Bls12381FrParams, 4>::standard();
+        assert_eq!(h.constraints_per_permutation(), 240);
+    }
+
+    #[test]
+    fn constants_are_field_and_round_separated() {
+        let bn = Poseidon2::<Bn254FrParams, 4>::standard();
+        let bls = Poseidon2::<Bls12381FrParams, 4>::standard();
+        assert_ne!(bn.first[0][0].to_canonical(), bls.first[0][0].to_canonical());
+        let short = Poseidon2::<Bn254FrParams, 4>::with_rounds(4, 8);
+        assert_ne!(bn.first[0][0], short.first[0][0]);
+    }
+
+    #[test]
+    fn permutation_is_deterministic_and_diffusing() {
+        let h = Poseidon2::<Bn254FrParams, 4>::standard();
+        let a = h.permute([Fr::from_u64(1), Fr::from_u64(2), Fr::from_u64(3)]);
+        let b = h.permute([Fr::from_u64(1), Fr::from_u64(2), Fr::from_u64(3)]);
+        assert_eq!(a, b);
+        let c = h.permute([Fr::from_u64(1), Fr::from_u64(2), Fr::from_u64(4)]);
+        assert!(a[0] != c[0] && a[1] != c[1] && a[2] != c[2]);
+    }
+
+    #[test]
+    fn gadget_matches_reference_small_rounds() {
+        let h = Poseidon2::<Bn254FrParams, 4>::with_rounds(4, 8);
+        let input = [Fr::from_u64(10), Fr::from_u64(20), Fr::from_u64(30)];
+        let want = h.permute(input);
+        let mut cs = ConstraintSystem::<Bn254FrParams, 4>::new();
+        let wires = input.map(|v| cs.alloc(v));
+        let out = h.permute_gadget(&mut cs, &wires.map(LinearCombination::var));
+        assert!(cs.is_satisfied());
+        for (lc, want) in out.iter().zip(want) {
+            assert_eq!(cs.eval_comb(lc), want);
+        }
+        assert_eq!(cs.num_constraints(), h.constraints_per_permutation());
+    }
+
+    #[test]
+    fn hash_chain_circuit_shape() {
+        let (cs, publics) = hash_chain_circuit::<Bn254FrParams, 4>(2, 42);
+        assert!(cs.is_satisfied());
+        assert_eq!(cs.num_public, 1);
+        assert_eq!(publics.len(), 1);
+        assert_eq!(cs.num_constraints(), 2 * 240 + 1);
+        assert_eq!(cs.witness[1], publics[0]);
+    }
+}

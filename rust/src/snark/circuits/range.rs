@@ -1,0 +1,118 @@
+//! k-bit range decomposition gadget and scenario circuit.
+//!
+//! `range_gadget` decomposes a value into `k` boolean-constrained bits
+//! and enforces that the weighted bit sum reconstructs the value, so a
+//! satisfied system proves the value lies in `[0, 2^k)`. Cost is `k`
+//! boolean constraints plus one linear reconstruction constraint.
+
+use crate::ff::{Field, FieldParams, Fp};
+use crate::snark::r1cs::{ConstraintSystem, LinearCombination};
+use crate::util::rng::Rng;
+
+type Lc<P, const N: usize> = LinearCombination<Fp<P, N>>;
+
+/// Decompose `value` into `k` boolean wires (little-endian) and enforce
+/// `Σ bit_i·2^i = value`. The witness bits come from the *canonical*
+/// representation of the evaluated combination; if the value does not
+/// fit in `k` bits the reconstruction constraint is unsatisfiable —
+/// exactly the rejection the range check is for. Returns the bit wires.
+///
+/// Panics if `k == 0` or `k >= P::BITS` (a full-width "range check"
+/// would be vacuous).
+pub fn range_gadget<P: FieldParams<N>, const N: usize>(
+    cs: &mut ConstraintSystem<P, N>,
+    value: &Lc<P, N>,
+    k: usize,
+) -> Vec<usize> {
+    assert!(k >= 1 && (k as u32) < P::BITS, "bit width out of range");
+    let limbs = cs.eval_comb(value).to_canonical();
+    let mut bits = Vec::with_capacity(k);
+    let mut sum = LinearCombination::zero();
+    let mut pow = Fp::<P, N>::one();
+    for i in 0..k {
+        let bit = (limbs[i / 64] >> (i % 64)) & 1;
+        let w = cs.alloc(Fp::<P, N>::from_u64(bit));
+        cs.enforce_boolean(w);
+        sum = sum.plus(&LinearCombination::term(w, pow));
+        pow = pow.double();
+        bits.push(w);
+    }
+    cs.enforce_eq(&sum, value);
+    bits
+}
+
+/// Domain-separation constant for the range scenario generator.
+const RANGE_SEED: u64 = 0x71d8_404b_c5e2_93a6;
+
+/// The range scenario circuit: `n_values` public values, each proven to
+/// lie in `[0, 2^k)`. Values are drawn below `2^k` so the system is
+/// satisfied; the public inputs are the values themselves.
+pub fn range_circuit<P: FieldParams<N>, const N: usize>(
+    k: usize,
+    n_values: usize,
+    seed: u64,
+) -> (ConstraintSystem<P, N>, Vec<Fp<P, N>>) {
+    assert!(k >= 1 && k <= 64, "scenario generator draws u64 values");
+    let n_values = n_values.max(1);
+    let mut rng = Rng::new(seed ^ RANGE_SEED);
+    let values: Vec<Fp<P, N>> = (0..n_values)
+        .map(|_| {
+            let mask = if k == 64 { u64::MAX } else { (1u64 << k) - 1 };
+            Fp::<P, N>::from_u64(rng.next_u64() & mask)
+        })
+        .collect();
+    let mut cs = ConstraintSystem::<P, N>::new();
+    let wires: Vec<usize> = values.iter().map(|v| cs.alloc_public(*v)).collect();
+    for w in wires {
+        range_gadget(&mut cs, &LinearCombination::var(w), k);
+    }
+    (cs, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::Bn254FrParams;
+    type Fr = crate::ff::FrBn254;
+
+    fn check(value: Fr, k: usize) -> bool {
+        let mut cs = ConstraintSystem::<Bn254FrParams, 4>::new();
+        let w = cs.alloc_public(value);
+        range_gadget(&mut cs, &LinearCombination::var(w), k);
+        cs.is_satisfied()
+    }
+
+    #[test]
+    fn accepts_in_range_rejects_beyond() {
+        assert!(check(Fr::from_u64(0), 4));
+        assert!(check(Fr::from_u64(15), 4));
+        assert!(!check(Fr::from_u64(16), 4));
+        assert!(!check(Fr::from_u64(17), 4));
+    }
+
+    #[test]
+    fn rejects_huge_field_element() {
+        // p − 1 is far outside any small range
+        assert!(!check(Fr::zero().sub(&Fr::one()), 16));
+    }
+
+    #[test]
+    fn constraint_count_is_k_plus_one_per_value() {
+        let (cs, publics) = range_circuit::<Bn254FrParams, 4>(12, 5, 9);
+        assert!(cs.is_satisfied());
+        assert_eq!(cs.num_constraints(), 5 * 13);
+        assert_eq!(cs.num_public, 5);
+        assert_eq!(&cs.witness[1..=5], publics.as_slice());
+    }
+
+    #[test]
+    fn gadget_works_on_compound_combinations() {
+        // range-check a symbolic sum, not just a bare wire
+        let mut cs = ConstraintSystem::<Bn254FrParams, 4>::new();
+        let a = cs.alloc(Fr::from_u64(100));
+        let b = cs.alloc(Fr::from_u64(27));
+        let sum = LinearCombination::var(a).plus(&LinearCombination::var(b));
+        range_gadget(&mut cs, &sum, 7);
+        assert!(cs.is_satisfied());
+    }
+}

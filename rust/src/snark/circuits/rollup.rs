@@ -1,0 +1,234 @@
+//! Rollup-style batch-transfer circuit.
+//!
+//! Composes the other gadgets into the shape a rollup prover runs: a
+//! Merkle tree of account balances, a batch of transfers, and one proof
+//! that replaying the batch takes the tree from `old_root` to
+//! `new_root` (the two public inputs). Each transfer proves:
+//!
+//! 1. sender membership under the running root, sender debit
+//!    (`new = old − amount`), and the updated running root along the
+//!    *same* path wires (so debit and credit provably hit the same slot),
+//! 2. the symmetric receiver credit,
+//! 3. balance conservation: `old_s + old_r = new_s + new_r` over the
+//!    four independently allocated balance wires,
+//! 4. range checks on the amount and both new balances (no negative
+//!    balances, no wrap-around minting).
+
+use super::merkle::{alloc_path, root_gadget, MerkleTree};
+use super::poseidon2::Poseidon2;
+use super::range::range_gadget;
+use crate::ff::{Field, FieldParams, Fp};
+use crate::snark::r1cs::{ConstraintSystem, LinearCombination};
+use crate::util::rng::Rng;
+
+/// One balance transfer between two leaf accounts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    /// Sender account index (leaf position).
+    pub from: usize,
+    /// Receiver account index (leaf position).
+    pub to: usize,
+    /// Amount moved, in base units.
+    pub amount: u64,
+}
+
+/// Witness material for one transfer, recorded while simulating the
+/// batch against the reference tree.
+struct Step<P: FieldParams<N>, const N: usize> {
+    transfer: Transfer,
+    sender_old: Fp<P, N>,
+    sender_new: Fp<P, N>,
+    sender_sibs: Vec<Fp<P, N>>,
+    receiver_old: Fp<P, N>,
+    receiver_new: Fp<P, N>,
+    receiver_sibs: Vec<Fp<P, N>>,
+}
+
+/// Build the batch-transfer circuit for `balances` (one per leaf,
+/// power-of-two count) and `transfers`, range-checking amounts and new
+/// balances to `amount_bits` bits. Returns the system and the public
+/// inputs `[old_root, new_root]`.
+///
+/// Panics on overdraft, self-transfer, out-of-range account index, or
+/// if the total supply does not fit in `amount_bits` bits (the clean
+/// no-overflow invariant: every intermediate balance is then below
+/// `2^amount_bits`, so the u64 witness arithmetic and the in-circuit
+/// range checks agree).
+pub fn batch_transfer_circuit<P: FieldParams<N>, const N: usize>(
+    balances: &[u64],
+    transfers: &[Transfer],
+    amount_bits: usize,
+) -> (ConstraintSystem<P, N>, Vec<Fp<P, N>>) {
+    assert!(amount_bits >= 1 && amount_bits <= 63, "amount_bits out of range");
+    assert!(balances.len().is_power_of_two() && balances.len() >= 2, "need 2^d >= 2 accounts");
+    let supply: u64 = balances.iter().fold(0u64, |a, b| {
+        a.checked_add(*b).expect("total supply overflows u64")
+    });
+    assert!(supply < 1u64 << amount_bits, "total supply must fit in amount_bits");
+
+    // Pass 1: simulate the batch on the reference tree, recording per-
+    // transfer membership paths *as seen at that point in the replay*.
+    let hasher = Poseidon2::<P, N>::standard();
+    let leaves: Vec<Fp<P, N>> = balances.iter().map(|b| Fp::from_u64(*b)).collect();
+    let mut tree = MerkleTree::new(hasher.clone(), leaves);
+    let mut bal = balances.to_vec();
+    let old_root = tree.root();
+    let mut steps = Vec::with_capacity(transfers.len());
+    for t in transfers {
+        assert!(t.from < bal.len() && t.to < bal.len(), "account index out of range");
+        assert!(t.from != t.to, "self-transfer not supported");
+        assert!(t.amount <= bal[t.from], "overdraft");
+        let sender_old = tree.leaf(t.from);
+        let sender_sibs = tree.path(t.from);
+        bal[t.from] -= t.amount;
+        let sender_new = Fp::from_u64(bal[t.from]);
+        tree.update(t.from, sender_new);
+        let receiver_old = tree.leaf(t.to);
+        let receiver_sibs = tree.path(t.to);
+        bal[t.to] += t.amount;
+        let receiver_new = Fp::from_u64(bal[t.to]);
+        tree.update(t.to, receiver_new);
+        steps.push(Step {
+            transfer: *t,
+            sender_old,
+            sender_new,
+            sender_sibs,
+            receiver_old,
+            receiver_new,
+            receiver_sibs,
+        });
+    }
+    let new_root = tree.root();
+
+    // Pass 2: synthesize. The running root starts at the public old
+    // root and must land on the public new root.
+    let mut cs = ConstraintSystem::<P, N>::new();
+    let w_old = cs.alloc_public(old_root);
+    let w_new = cs.alloc_public(new_root);
+    let mut running = LinearCombination::var(w_old);
+    for s in &steps {
+        let amt = LinearCombination::var(cs.alloc(Fp::from_u64(s.transfer.amount)));
+
+        // sender: membership, debit, re-root along the same path wires
+        let so = LinearCombination::var(cs.alloc(s.sender_old));
+        let path = alloc_path(&mut cs, s.transfer.from, &s.sender_sibs);
+        let got = root_gadget(&hasher, &mut cs, &so, &path);
+        cs.enforce_eq(&got, &running);
+        let sn = LinearCombination::var(cs.alloc(s.sender_new));
+        cs.enforce_eq(&sn, &so.minus(&amt));
+        running = root_gadget(&hasher, &mut cs, &sn, &path);
+
+        // receiver: membership under the debited root, credit, re-root
+        let ro = LinearCombination::var(cs.alloc(s.receiver_old));
+        let path = alloc_path(&mut cs, s.transfer.to, &s.receiver_sibs);
+        let got = root_gadget(&hasher, &mut cs, &ro, &path);
+        cs.enforce_eq(&got, &running);
+        let rn = LinearCombination::var(cs.alloc(s.receiver_new));
+        cs.enforce_eq(&rn, &ro.plus(&amt));
+        running = root_gadget(&hasher, &mut cs, &rn, &path);
+
+        // conservation over the four independent balance wires
+        cs.enforce_eq(&so.plus(&ro), &sn.plus(&rn));
+
+        // no negative balances, no wrap-around
+        range_gadget(&mut cs, &amt, amount_bits);
+        range_gadget(&mut cs, &sn, amount_bits);
+        range_gadget(&mut cs, &rn, amount_bits);
+    }
+    cs.enforce_eq(&running, &LinearCombination::var(w_new));
+    (cs, vec![old_root, new_root])
+}
+
+/// Domain-separation constant for the rollup scenario generator.
+const ROLLUP_SEED: u64 = 0x84f0_66c1_2ad9_b735;
+
+/// The rollup scenario circuit: a `2^depth`-account tree with random
+/// balances and `n_transfers` random valid transfers.
+pub fn rollup_circuit<P: FieldParams<N>, const N: usize>(
+    depth: usize,
+    n_transfers: usize,
+    amount_bits: usize,
+    seed: u64,
+) -> (ConstraintSystem<P, N>, Vec<Fp<P, N>>) {
+    assert!((1..=16).contains(&depth), "depth out of range");
+    assert!(amount_bits >= depth + 2 && amount_bits <= 63, "amount_bits too small for depth");
+    let n_transfers = n_transfers.max(1);
+    let mut rng = Rng::new(seed ^ ROLLUP_SEED);
+    let n_accounts = 1usize << depth;
+    // per-account balances below 2^(amount_bits − depth − 1) keep the
+    // total supply strictly below 2^amount_bits
+    let mut balances: Vec<u64> =
+        (0..n_accounts).map(|_| rng.below(1u64 << (amount_bits - depth - 1))).collect();
+    let initial = balances.clone();
+    let transfers: Vec<Transfer> = (0..n_transfers)
+        .map(|_| {
+            let from = rng.below(n_accounts as u64) as usize;
+            let mut to = rng.below(n_accounts as u64) as usize;
+            while to == from {
+                to = rng.below(n_accounts as u64) as usize;
+            }
+            let amount = rng.below(balances[from] + 1);
+            balances[from] -= amount;
+            balances[to] += amount;
+            Transfer { from, to, amount }
+        })
+        .collect();
+    batch_transfer_circuit(&initial, &transfers, amount_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::params::Bn254FrParams;
+    type Fr = crate::ff::FrBn254;
+
+    #[test]
+    fn batch_transfer_satisfied_and_roots_move() {
+        let transfers = [Transfer { from: 0, to: 1, amount: 5 }];
+        let (cs, publics) =
+            batch_transfer_circuit::<Bn254FrParams, 4>(&[10, 20, 30, 40], &transfers, 16);
+        assert!(cs.is_satisfied());
+        assert_eq!(cs.num_public, 2);
+        assert_ne!(publics[0], publics[1]);
+        assert_eq!(&cs.witness[1..=2], publics.as_slice());
+    }
+
+    #[test]
+    fn new_root_matches_independent_replay() {
+        let transfers =
+            [Transfer { from: 2, to: 0, amount: 7 }, Transfer { from: 0, to: 3, amount: 9 }];
+        let (_, publics) =
+            batch_transfer_circuit::<Bn254FrParams, 4>(&[4, 8, 15, 16], &transfers, 16);
+        // replay with plain u64 accounting and a fresh tree
+        let hasher = Poseidon2::<Bn254FrParams, 4>::standard();
+        let final_balances = [4 + 7 - 9, 8, 15 - 7, 16 + 9];
+        let leaves: Vec<Fr> = final_balances.iter().map(|b| Fr::from_u64(*b)).collect();
+        assert_eq!(MerkleTree::new(hasher, leaves).root(), publics[1]);
+    }
+
+    #[test]
+    fn tampered_amount_is_rejected() {
+        let transfers = [Transfer { from: 1, to: 0, amount: 3 }];
+        let (mut cs, _) =
+            batch_transfer_circuit::<Bn254FrParams, 4>(&[6, 6], &transfers, 8);
+        assert!(cs.is_satisfied());
+        // wire 3 is the first transfer's amount (after [1, old, new])
+        cs.witness[3] = cs.witness[3].add(&Fr::one());
+        assert!(!cs.is_satisfied());
+    }
+
+    #[test]
+    #[should_panic(expected = "overdraft")]
+    fn overdraft_panics_at_witness_time() {
+        let transfers = [Transfer { from: 0, to: 1, amount: 11 }];
+        let _ = batch_transfer_circuit::<Bn254FrParams, 4>(&[10, 0], &transfers, 8);
+    }
+
+    #[test]
+    fn rollup_scenario_is_satisfied() {
+        let (cs, publics) = rollup_circuit::<Bn254FrParams, 4>(2, 2, 16, 42);
+        assert!(cs.is_satisfied());
+        assert_eq!(publics.len(), 2);
+        assert_eq!(cs.num_public, 2);
+    }
+}

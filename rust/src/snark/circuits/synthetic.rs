@@ -1,74 +1,59 @@
-//! Synthetic circuits for prover workloads.
+//! Synthetic chain circuits — the original toy workloads.
 //!
 //! The paper's profiling workloads are production circuits (Filecoin-scale,
 //! up to 2^27 constraints); these generators produce structurally similar
 //! R1CS at any size: long multiplication chains with periodic additions —
-//! dense witness interaction, no shortcuts for the prover.
+//! dense witness interaction, no shortcuts for the prover. The real
+//! workloads live in the sibling modules ([`super::poseidon2`],
+//! [`super::merkle`], [`super::range`], [`super::rollup`]).
 
-use super::r1cs::ConstraintSystem;
 use crate::ff::{Field, FieldParams, Fp};
+use crate::snark::r1cs::{ConstraintSystem, LinearCombination};
 use crate::util::rng::Rng;
 
 /// A multiplication-chain circuit with `n` constraints:
 /// x_{i+2} = x_{i+1} · x_i (with periodic re-randomized linear terms so
-/// coefficients aren't all 1).
+/// coefficients aren't all 1). The two chain seeds are the public inputs.
 pub fn mul_chain<P: FieldParams<N>, const N: usize>(
     n: usize,
     seed: u64,
 ) -> ConstraintSystem<P, N> {
     let mut rng = Rng::new(seed);
     let mut cs = ConstraintSystem::<P, N>::new();
-    let mut prev = cs.alloc(Fp::<P, N>::random(&mut rng));
-    let mut cur = cs.alloc(Fp::<P, N>::random(&mut rng));
-    cs.num_public = 2;
+    let mut prev = cs.alloc_public(Fp::<P, N>::random(&mut rng));
+    let mut cur = cs.alloc_public(Fp::<P, N>::random(&mut rng));
     for i in 0..n {
         // every 8th constraint uses an affine LHS to vary the structure
-        if i % 8 == 7 {
+        let lhs = if i % 8 == 7 {
             let k = Fp::<P, N>::random(&mut rng);
-            let lhs = cs.witness[cur].add(&k);
-            let out = cs.alloc(lhs.mul(&cs.witness[prev]));
-            cs.enforce(
-                vec![(cur, Fp::<P, N>::one()), (0, k)],
-                vec![(prev, Fp::<P, N>::one())],
-                vec![(out, Fp::<P, N>::one())],
-            );
-            prev = cur;
-            cur = out;
+            LinearCombination::var(cur).plus(&LinearCombination::constant(k))
         } else {
-            let out = cs.alloc(cs.witness[cur].mul(&cs.witness[prev]));
-            cs.enforce(
-                vec![(cur, Fp::<P, N>::one())],
-                vec![(prev, Fp::<P, N>::one())],
-                vec![(out, Fp::<P, N>::one())],
-            );
-            prev = cur;
-            cur = out;
-        }
+            LinearCombination::var(cur)
+        };
+        let out = cs.mul_lc(&lhs, &LinearCombination::var(prev));
+        prev = cur;
+        cur = out;
     }
     cs
 }
 
 /// A square-accumulate circuit (x ← x² + c_i), n constraints — the shape of
 /// algebraic-hash chains (MiMC-like rounds, which dominate many real SNARK
-/// workloads).
+/// workloads). The chain seed is the public input.
 pub fn square_chain<P: FieldParams<N>, const N: usize>(
     n: usize,
     seed: u64,
 ) -> ConstraintSystem<P, N> {
     let mut rng = Rng::new(seed ^ SQUARE_CHAIN_SEED);
     let mut cs = ConstraintSystem::<P, N>::new();
-    let mut x = cs.alloc(Fp::<P, N>::random(&mut rng));
-    cs.num_public = 1;
+    let mut x = cs.alloc_public(Fp::<P, N>::random(&mut rng));
     for _ in 0..n {
         let c = Fp::<P, N>::random(&mut rng);
-        let next_val = cs.witness[x].square().add(&c);
-        let next = cs.alloc(next_val);
+        let next = cs.alloc(cs.witness[x].square().add(&c));
         // x·x = next − c   ⇔   ⟨x⟩·⟨x⟩ = ⟨next − c·1⟩
-        cs.enforce(
-            vec![(x, Fp::<P, N>::one())],
-            vec![(x, Fp::<P, N>::one())],
-            vec![(next, Fp::<P, N>::one()), (0, c.neg())],
-        );
+        let xl = LinearCombination::var(x);
+        let rhs = LinearCombination::var(next).minus(&LinearCombination::constant(c));
+        cs.enforce_lc(&xl, &xl, &rhs);
         x = next;
     }
     cs
@@ -109,5 +94,15 @@ mod tests {
         let last = cs.witness.len() - 1;
         cs.witness[last] = cs.witness[last].add(&crate::ff::FrBn254::one());
         assert!(!cs.is_satisfied());
+    }
+
+    #[test]
+    fn chains_use_the_leading_public_layout() {
+        // regression: num_public comes from alloc_public now, and the
+        // public wires stay pinned to w[1..=num_public]
+        let cs = mul_chain::<Bn254FrParams, 4>(20, 6);
+        assert_eq!(cs.num_public, 2);
+        let cs = square_chain::<Bn254FrParams, 4>(20, 6);
+        assert_eq!(cs.num_public, 1);
     }
 }

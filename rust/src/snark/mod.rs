@@ -5,8 +5,11 @@
 //! the rest. To *measure* (not assume) that breakdown, this module
 //! implements the full prover compute pipeline:
 //!
-//! * [`r1cs`] — rank-1 constraint systems with a builder and synthetic
-//!   circuit generators ([`circuits`]);
+//! * [`r1cs`] — rank-1 constraint systems with a symbolic
+//!   [`LinearCombination`] builder, plus the circuit library
+//!   ([`circuits`]): two synthetic chains and four real workloads
+//!   (Poseidon2 hash chains, Merkle membership, range decomposition,
+//!   rollup batch transfers), each selectable as a CLI [`Scenario`];
 //! * [`qap`] — the R1CS→QAP reduction: witness evaluation over the NTT
 //!   domain, coset division by the vanishing polynomial, h(x) extraction;
 //! * [`setup`] — a *structure-preserving synthetic CRS* (sizes and group
@@ -18,7 +21,13 @@
 //! * [`stream`] — the bounded-memory streaming prover: generator- or
 //!   disk-backed SRS chunk sources + [`stream::prove_streaming`] under an
 //!   enforced [`crate::util::mem::MemoryBudget`], bit-identical to the
-//!   resident path.
+//!   resident path;
+//! * [`verify`] — the transcript-consistency verifier: curve-membership
+//!   checks on every proof element plus recomputation of the
+//!   public-input commitment π over the verifying key's IC basis.
+//!   Honest about its limits: the synthetic CRS has no τ structure, so
+//!   this is consistency checking with real verifier kernels, not
+//!   cryptographic soundness.
 
 pub mod r1cs;
 pub mod circuits;
@@ -26,8 +35,11 @@ pub mod qap;
 pub mod setup;
 pub mod prover;
 pub mod stream;
+pub mod verify;
 
+pub use circuits::{Scenario, ScenarioInstance};
 pub use prover::{ProfileBreakdown, Proof, Prover, ProverConfig};
 pub use qap::NttPhases;
-pub use r1cs::ConstraintSystem;
+pub use r1cs::{ConstraintSystem, LinearCombination};
 pub use stream::{prove_streaming, StreamReport, StreamingSrs, WitnessStream};
+pub use verify::{verify, VerifyError, VerifyingKey};

@@ -30,6 +30,13 @@ pub struct Proof<G1: CurveParams, G2: CurveParams> {
     pub b: Jacobian<G2>,
     /// The 𝔾₁ C element.
     pub c: Jacobian<G1>,
+    /// The 𝔾₁ public-input commitment: the A-query MSM restricted to
+    /// the constant-one and public wires. A real Groth16 verifier
+    /// derives this from its verifying key; it is carried in the proof
+    /// here so [`super::verify`] can check transcript consistency (the
+    /// claimed public inputs reproduce the commitment over the same
+    /// CRS basis) without a pairing stack.
+    pub pi: Jacobian<G1>,
 }
 
 /// Prover-time percentage split (the Table I row format).
@@ -526,11 +533,21 @@ where
             None => self.msm_g2(&self.crs.b2_query[..nv], &witness_scalars),
         });
 
-        // -- other: final assembly -----------------------------------------
-        let proof = prof.time("other", || Proof {
-            a: a_msm,
-            b: b2_msm,
-            c: l_msm.add(&h_msm),
+        // -- other: public-input commitment + final assembly ----------------
+        // π is a (1 + num_public)-point MSM over the A-query prefix — far
+        // too small to matter in the phase profile, so it is charged to
+        // "other" and always runs the serial executor: routing it through
+        // pools/streaming would perturb their accounting (shard-group
+        // counters, chunk high-water pins) for no measurable gain. Every
+        // backend is bit-identical, so the choice is invisible in proofs.
+        let proof = prof.time("other", || {
+            let pi = msm::execute(
+                Backend::Pippenger,
+                &self.crs.a_query[..l_start],
+                &witness_scalars[..l_start],
+                &self.msm_cfg,
+            );
+            Proof { a: a_msm, b: b2_msm, c: l_msm.add(&h_msm), pi }
         });
 
         (proof, breakdown(&prof, ntt_phases))
@@ -597,6 +614,7 @@ mod tests {
         assert!(!proof.a.is_infinity());
         assert!(!proof.b.is_infinity());
         assert!(!proof.c.is_infinity());
+        assert!(!proof.pi.is_infinity());
         let sum = prof.msm_g1_pct + prof.msm_g2_pct + prof.ntt_pct + prof.other_pct;
         assert!((sum - 100.0).abs() < 1.0, "percentages sum to {sum}");
         assert!(prof.total_s > 0.0);
@@ -843,5 +861,23 @@ mod tests {
         assert!(p1.a.eq_point(&p2.a));
         assert!(p1.b.eq_point(&p2.b));
         assert!(p1.c.eq_point(&p2.c));
+        assert!(p1.pi.eq_point(&p2.pi));
+    }
+
+    #[test]
+    fn pi_commits_to_the_public_prefix() {
+        // π must equal the A-query MSM over [1, publics..] and nothing
+        // else — the anchor the verifier recomputes
+        let (prover, cs) = small_prover();
+        let (proof, _) = prover.prove(&cs);
+        let l_start = 1 + cs.num_public;
+        let scalars: Vec<_> = cs.witness[..l_start].iter().map(|w| w.to_canonical()).collect();
+        let want = msm::execute(
+            Backend::Naive,
+            &prover.crs.a_query[..l_start],
+            &scalars,
+            &MsmConfig::default(),
+        );
+        assert!(proof.pi.eq_point(&want));
     }
 }

@@ -1,10 +1,121 @@
 //! Rank-1 constraint systems: ⟨A_i, w⟩ · ⟨B_i, w⟩ = ⟨C_i, w⟩ for each
 //! constraint i, over the scalar field Fr.
+//!
+//! Gadgets compose through [`LinearCombination`], a normalized symbolic
+//! term list (sorted by wire, zero coefficients dropped): circuit builders
+//! keep whole linear layers symbolic and only materialize witness wires at
+//! multiplications, so constraint counts track multiplicative depth rather
+//! than formula size.
 
 use crate::ff::{Field, FieldParams, Fp};
 
 /// A sparse linear combination over witness indices.
 pub type Lc<F> = Vec<(usize, F)>;
+
+/// A symbolic linear combination `Σ coeff_j · w_{idx_j}`, normalized:
+/// terms are sorted by wire index, duplicate wires merged, zero
+/// coefficients dropped. Wire 0 is the constant 1, so field constants are
+/// ordinary terms on wire 0.
+#[derive(Clone, Debug, Default)]
+pub struct LinearCombination<F: Field> {
+    terms: Vec<(usize, F)>,
+}
+
+impl<F: Field> LinearCombination<F> {
+    /// The empty combination (evaluates to 0).
+    pub fn zero() -> Self {
+        LinearCombination { terms: Vec::new() }
+    }
+
+    /// A single wire with coefficient 1.
+    pub fn var(index: usize) -> Self {
+        LinearCombination { terms: vec![(index, F::one())] }
+    }
+
+    /// A field constant (a term on the constant wire 0).
+    pub fn constant(value: F) -> Self {
+        Self::term(0, value)
+    }
+
+    /// A single wire with an arbitrary coefficient.
+    pub fn term(index: usize, coeff: F) -> Self {
+        if coeff.is_zero() {
+            return Self::zero();
+        }
+        LinearCombination { terms: vec![(index, coeff)] }
+    }
+
+    /// `self + other`, merging duplicate wires.
+    pub fn plus(&self, other: &Self) -> Self {
+        self.combine(other, false)
+    }
+
+    /// `self − other`, merging duplicate wires.
+    pub fn minus(&self, other: &Self) -> Self {
+        self.combine(other, true)
+    }
+
+    /// `k · self`.
+    pub fn scaled(&self, k: &F) -> Self {
+        if k.is_zero() {
+            return Self::zero();
+        }
+        LinearCombination {
+            terms: self.terms.iter().map(|(i, c)| (*i, c.mul(k))).collect(),
+        }
+    }
+
+    /// The normalized `(wire, coefficient)` terms.
+    pub fn terms(&self) -> &[(usize, F)] {
+        &self.terms
+    }
+
+    /// Number of terms.
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Whether the combination is identically zero.
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Consume into the sparse [`Lc`] row format the matrices store.
+    pub fn into_lc(self) -> Lc<F> {
+        self.terms
+    }
+
+    // Sorted two-pointer merge; `negate` subtracts `other`.
+    fn combine(&self, other: &Self, negate: bool) -> Self {
+        let (a, b) = (&self.terms, &other.terms);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() || j < b.len() {
+            let take_a = match (a.get(i), b.get(j)) {
+                (Some(x), Some(y)) => x.0 <= y.0,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_a && j < b.len() && a[i].0 == b[j].0 {
+                let rhs = if negate { b[j].1.neg() } else { b[j].1 };
+                let c = a[i].1.add(&rhs);
+                if !c.is_zero() {
+                    out.push((a[i].0, c));
+                }
+                i += 1;
+                j += 1;
+            } else if take_a {
+                out.push(a[i]);
+                i += 1;
+            } else {
+                let c = if negate { b[j].1.neg() } else { b[j].1 };
+                out.push((b[j].0, c));
+                j += 1;
+            }
+        }
+        LinearCombination { terms: out }
+    }
+}
 
 /// An R1CS instance together with a satisfying witness.
 ///
@@ -50,6 +161,71 @@ impl<P: FieldParams<N>, const N: usize> ConstraintSystem<P, N> {
     pub fn alloc(&mut self, value: Fp<P, N>) -> usize {
         self.witness.push(value);
         self.witness.len() - 1
+    }
+
+    /// Add a *public-input* variable. The witness layout pins public
+    /// inputs to the leading slots right after the constant
+    /// (`w[1..=num_public]` — the slice the prover's L-query skips and
+    /// the verifier's IC commitment covers), so every public allocation
+    /// must happen before the first private one. Panics otherwise.
+    pub fn alloc_public(&mut self, value: Fp<P, N>) -> usize {
+        assert_eq!(
+            self.witness.len(),
+            1 + self.num_public,
+            "alloc_public after a private alloc would break the \
+             [1, publics.., privates..] witness layout"
+        );
+        self.num_public += 1;
+        self.alloc(value)
+    }
+
+    /// Add a constraint from symbolic combinations: ⟨a,w⟩·⟨b,w⟩ = ⟨c,w⟩.
+    pub fn enforce_lc(
+        &mut self,
+        a: &LinearCombination<Fp<P, N>>,
+        b: &LinearCombination<Fp<P, N>>,
+        c: &LinearCombination<Fp<P, N>>,
+    ) {
+        self.enforce(a.clone().into_lc(), b.clone().into_lc(), c.clone().into_lc());
+    }
+
+    /// Evaluate a symbolic combination against the witness.
+    pub fn eval_comb(&self, lc: &LinearCombination<Fp<P, N>>) -> Fp<P, N> {
+        let mut acc = Fp::<P, N>::zero();
+        for (idx, coeff) in lc.terms() {
+            acc = acc.add(&self.witness[*idx].mul(coeff));
+        }
+        acc
+    }
+
+    /// Materialize the product of two combinations: allocates a wire
+    /// carrying `⟨a,w⟩·⟨b,w⟩`, enforces `a·b = wire`, returns the wire.
+    /// The one place gadgets spend constraints — linear structure stays
+    /// symbolic.
+    pub fn mul_lc(
+        &mut self,
+        a: &LinearCombination<Fp<P, N>>,
+        b: &LinearCombination<Fp<P, N>>,
+    ) -> usize {
+        let value = self.eval_comb(a).mul(&self.eval_comb(b));
+        let out = self.alloc(value);
+        self.enforce_lc(a, b, &LinearCombination::var(out));
+        out
+    }
+
+    /// Enforce the linear constraint ⟨a,w⟩ = ⟨b,w⟩ (as `a · 1 = b`).
+    pub fn enforce_eq(
+        &mut self,
+        a: &LinearCombination<Fp<P, N>>,
+        b: &LinearCombination<Fp<P, N>>,
+    ) {
+        self.enforce_lc(a, &LinearCombination::constant(Fp::<P, N>::one()), b);
+    }
+
+    /// Enforce that a wire is boolean: `x · x = x` (roots 0 and 1 only).
+    pub fn enforce_boolean(&mut self, index: usize) {
+        let x = LinearCombination::var(index);
+        self.enforce_lc(&x, &x, &x);
     }
 
     /// Add a constraint ⟨a,w⟩·⟨b,w⟩ = ⟨c,w⟩.
@@ -156,5 +332,77 @@ mod tests {
         assert_eq!(a[0], Fr::from_u64(7));
         assert_eq!(b[0], Fr::from_u64(7));
         assert_eq!(c[0], Fr::from_u64(49));
+    }
+
+    type L = LinearCombination<Fr>;
+
+    #[test]
+    fn lincomb_merges_sorts_and_drops_zeros() {
+        let lc = L::term(3, Fr::from_u64(2))
+            .plus(&L::term(1, Fr::from_u64(5)))
+            .plus(&L::term(3, Fr::from_u64(4)));
+        assert_eq!(lc.terms(), &[(1, Fr::from_u64(5)), (3, Fr::from_u64(6))]);
+        let cancelled = lc.minus(&lc);
+        assert!(cancelled.is_empty());
+        assert_eq!(cancelled.len(), 0);
+        let scaled = lc.scaled(&Fr::from_u64(3));
+        assert_eq!(scaled.terms()[1], (3, Fr::from_u64(18)));
+        assert!(lc.scaled(&Fr::zero()).is_empty());
+        assert!(L::term(9, Fr::zero()).is_empty());
+    }
+
+    #[test]
+    fn lincomb_eval_and_mul_lc() {
+        // (2x + 1)(y) = z via the builder, same statement as the
+        // hand-rolled `linear_combinations_with_constants` above
+        let mut cs = Cs::new();
+        let x = cs.alloc(Fr::from_u64(4));
+        let y = cs.alloc(Fr::from_u64(3));
+        let lhs = L::var(x).scaled(&Fr::from_u64(2)).plus(&L::constant(Fr::one()));
+        assert_eq!(cs.eval_comb(&lhs), Fr::from_u64(9));
+        let z = cs.mul_lc(&lhs, &L::var(y));
+        assert_eq!(cs.witness[z], Fr::from_u64(27));
+        assert!(cs.is_satisfied());
+    }
+
+    #[test]
+    fn enforce_eq_and_boolean() {
+        let mut cs = Cs::new();
+        let b = cs.alloc(Fr::one());
+        cs.enforce_boolean(b);
+        let t = cs.alloc(Fr::from_u64(11));
+        // t = 10·b + 1
+        cs.enforce_eq(
+            &L::var(t),
+            &L::term(b, Fr::from_u64(10)).plus(&L::constant(Fr::one())),
+        );
+        assert!(cs.is_satisfied());
+        cs.witness[b] = Fr::from_u64(2); // non-boolean
+        assert!(!cs.is_satisfied());
+    }
+
+    #[test]
+    fn alloc_public_pins_leading_layout() {
+        // regression for num_public semantics: publics occupy
+        // w[1..=num_public], exactly the slots the prover's L-query
+        // slicing (l_start = 1 + num_public) assumes
+        let mut cs = Cs::new();
+        let p0 = cs.alloc_public(Fr::from_u64(10));
+        let p1 = cs.alloc_public(Fr::from_u64(20));
+        assert_eq!((p0, p1), (1, 2));
+        assert_eq!(cs.num_public, 2);
+        let x = cs.alloc(Fr::from_u64(200));
+        assert_eq!(x, 3);
+        cs.enforce_eq(&L::var(x), &L::var(p0).scaled(&Fr::from_u64(20)));
+        assert!(cs.is_satisfied());
+        assert_eq!(&cs.witness[1..=cs.num_public], &[Fr::from_u64(10), Fr::from_u64(20)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "alloc_public after a private alloc")]
+    fn alloc_public_after_private_panics() {
+        let mut cs = Cs::new();
+        cs.alloc(Fr::from_u64(1));
+        cs.alloc_public(Fr::from_u64(2));
     }
 }

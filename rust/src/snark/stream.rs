@@ -389,7 +389,21 @@ where
         &ledger,
     )?;
 
-    let proof = Proof { a: a_msm, b: b2_msm, c: l_msm.add(&h_msm) };
+    // π (public-input commitment): the A-query prefix over [1, publics..].
+    // Streams through the same chunk lane and ledger as the query MSMs —
+    // its (tiny, ≤ one chunk) charge is released before the report reads
+    // the high-water mark, so the pinned peak/fixed accounting is
+    // unchanged. Bit-identical to the resident prover's π.
+    let pi = msm_stream(
+        &mut srs.a_stream(l_start)?,
+        &mut WitnessStream::new(&cs.witness[..l_start]),
+        g1_backend,
+        &cfg.msm,
+        chunk_g1,
+        &ledger,
+    )?;
+
+    let proof = Proof { a: a_msm, b: b2_msm, c: l_msm.add(&h_msm), pi };
     let report = StreamReport {
         peak_chunk_bytes: ledger.peak_bytes(),
         fixed_bytes: ledger.fixed_bytes(),
@@ -435,6 +449,7 @@ mod tests {
         assert!(got.a.eq_point(&want.a));
         assert!(got.b.eq_point(&want.b));
         assert!(got.c.eq_point(&want.c));
+        assert!(got.pi.eq_point(&want.pi));
         assert!(report.peak_chunk_bytes <= report.budget_bytes);
         assert_eq!(report.chunk_points_g2, 16);
     }
@@ -450,6 +465,7 @@ mod tests {
         assert!(got.a.eq_point(&want.a));
         assert!(got.b.eq_point(&want.b));
         assert!(got.c.eq_point(&want.c));
+        assert!(got.pi.eq_point(&want.pi));
         std::fs::remove_dir_all(&dir).ok();
     }
 

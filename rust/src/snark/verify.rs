@@ -1,0 +1,208 @@
+//! Transcript-consistency verifier for the synthetic pipeline.
+//!
+//! A real Groth16 verifier checks one pairing equation against a
+//! verifying key distilled from the toxic-waste CRS. This repo's CRS is
+//! *synthetic* (deterministic generator multiples, no τ structure — see
+//! [`super::setup`]), so a pairing check is not meaningful here and no
+//! pairing stack exists. What **can** be checked — and what the
+//! soundness tests exercise — is transcript consistency:
+//!
+//! 1. the claimed public-input count matches the verifying key,
+//! 2. every proof element is a valid, non-infinity curve point (a
+//!    bit-flipped serialized proof lands off-curve with overwhelming
+//!    probability),
+//! 3. the proof's public-input commitment π equals the MSM of the
+//!    claimed publics over the verifying key's IC basis (the A-query
+//!    prefix the prover committed with) — a wrong or reordered public
+//!    input cannot reproduce it.
+//!
+//! This is **not** a cryptographic soundness check: a malicious prover
+//! who controls the whole transcript can forge all of it. It is the
+//! honest-verifier shape the serving tier and the CLI round-trip
+//! through, with the same MSM kernels a real verifier would run.
+
+use super::prover::Proof;
+use super::setup::Crs;
+use crate::ec::{Affine, CurveParams, Jacobian};
+use crate::ff::{Field, FieldParams, Fp};
+use crate::msm::{self, Backend, MsmConfig};
+use std::fmt;
+
+/// Why a proof was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VerifyError {
+    /// A proof element is off-curve or the point at infinity.
+    OffCurve(&'static str),
+    /// The verifier was handed the wrong number of public inputs.
+    InputCount {
+        /// Public inputs the verifying key expects.
+        expected: usize,
+        /// Public inputs the caller supplied.
+        got: usize,
+    },
+    /// The claimed public inputs do not reproduce the proof's
+    /// public-input commitment π over the IC basis.
+    PublicInputMismatch,
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::OffCurve(el) => write!(f, "proof element {el} is not a valid curve point"),
+            VerifyError::InputCount { expected, got } => {
+                write!(f, "expected {expected} public inputs, got {got}")
+            }
+            VerifyError::PublicInputMismatch => {
+                write!(f, "public inputs do not match the proof's commitment")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// The verifier's half of the transcript: the IC basis (the A-query
+/// prefix covering the constant-one wire and the public wires).
+pub struct VerifyingKey<G1: CurveParams> {
+    /// `ic[0]` pairs with the constant 1, `ic[1..]` with the publics.
+    pub ic: Vec<Affine<G1>>,
+}
+
+impl<G1: CurveParams> VerifyingKey<G1> {
+    /// Distill the verifying key for a circuit with `num_public` public
+    /// inputs from the CRS the prover ran with.
+    ///
+    /// Panics if the CRS is smaller than `1 + num_public` (programmer
+    /// error: the CRS could not have covered the circuit either).
+    pub fn from_crs<G2: CurveParams>(crs: &Crs<G1, G2>, num_public: usize) -> Self {
+        assert!(crs.a_query.len() > num_public, "CRS smaller than the public prefix");
+        VerifyingKey { ic: crs.a_query[..1 + num_public].to_vec() }
+    }
+
+    /// Public inputs this key expects.
+    pub fn num_public(&self) -> usize {
+        self.ic.len() - 1
+    }
+}
+
+/// Check a proof transcript against `public_inputs` (wire order, without
+/// the leading constant 1). See the module docs for exactly what this
+/// does — and does not — establish.
+pub fn verify<G1, G2, P>(
+    vk: &VerifyingKey<G1>,
+    proof: &Proof<G1, G2>,
+    public_inputs: &[Fp<P, 4>],
+) -> Result<(), VerifyError>
+where
+    G1: CurveParams,
+    G2: CurveParams,
+    P: FieldParams<4>,
+{
+    if public_inputs.len() != vk.num_public() {
+        return Err(VerifyError::InputCount {
+            expected: vk.num_public(),
+            got: public_inputs.len(),
+        });
+    }
+    check_element(&proof.a, "a")?;
+    check_element(&proof.b, "b")?;
+    check_element(&proof.c, "c")?;
+    check_element(&proof.pi, "pi")?;
+
+    // Recompute the commitment from the claimed publics over the IC
+    // basis: [1, publics..] in canonical form, same kernel dispatch as
+    // the prover (every backend is bit-identical, so Pippenger is fine).
+    let mut scalars = Vec::with_capacity(1 + public_inputs.len());
+    scalars.push(Fp::<P, 4>::one().to_canonical());
+    scalars.extend(public_inputs.iter().map(Fp::to_canonical));
+    let expected = msm::execute(Backend::Pippenger, &vk.ic, &scalars, &MsmConfig::default());
+    if !expected.eq_point(&proof.pi) {
+        return Err(VerifyError::PublicInputMismatch);
+    }
+    Ok(())
+}
+
+fn check_element<C: CurveParams>(
+    p: &Jacobian<C>,
+    name: &'static str,
+) -> Result<(), VerifyError> {
+    if p.is_infinity() || !p.is_on_curve() {
+        return Err(VerifyError::OffCurve(name));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::{Bn254G1, Bn254G2};
+    use crate::ff::params::Bn254FrParams;
+    use crate::snark::setup::CrsBn254;
+    use crate::snark::{circuits, ConstraintSystem, Prover};
+    type Fr = crate::ff::FrBn254;
+
+    fn rig() -> (
+        Prover<Bn254G1, Bn254G2, Bn254FrParams>,
+        ConstraintSystem<Bn254FrParams, 4>,
+        VerifyingKey<Bn254G1>,
+        Vec<Fr>,
+    ) {
+        let cs = circuits::mul_chain::<Bn254FrParams, 4>(120, 5);
+        let domain_n = cs.num_constraints().max(2).next_power_of_two();
+        let crs = CrsBn254::synthesize(cs.num_variables(), domain_n, 6);
+        let vk = VerifyingKey::from_crs(&crs, cs.num_public);
+        let publics = cs.witness[1..=cs.num_public].to_vec();
+        (Prover::new(crs), cs, vk, publics)
+    }
+
+    #[test]
+    fn honest_round_trip_verifies() {
+        let (prover, cs, vk, publics) = rig();
+        let (proof, _) = prover.prove(&cs);
+        assert_eq!(verify(&vk, &proof, &publics), Ok(()));
+    }
+
+    #[test]
+    fn wrong_public_input_rejected() {
+        let (prover, cs, vk, mut publics) = rig();
+        let (proof, _) = prover.prove(&cs);
+        publics[0] = publics[0].add(&Fr::one());
+        assert_eq!(verify(&vk, &proof, &publics), Err(VerifyError::PublicInputMismatch));
+        // reordering two distinct publics must also fail
+        let (prover2, cs2, vk2, mut p2) = rig();
+        let (proof2, _) = prover2.prove(&cs2);
+        assert_ne!(p2[0], p2[1]);
+        p2.swap(0, 1);
+        assert_eq!(verify(&vk2, &proof2, &p2), Err(VerifyError::PublicInputMismatch));
+    }
+
+    #[test]
+    fn input_count_is_checked() {
+        let (prover, cs, vk, publics) = rig();
+        let (proof, _) = prover.prove(&cs);
+        let err = verify(&vk, &proof, &publics[..1]).unwrap_err();
+        assert_eq!(err, VerifyError::InputCount { expected: 2, got: 1 });
+    }
+
+    #[test]
+    fn bit_flipped_elements_rejected() {
+        let (prover, cs, vk, publics) = rig();
+        let (mut proof, _) = prover.prove(&cs);
+        let good_y = proof.a.y;
+        proof.a.y = proof.a.y.add(&Field::one());
+        assert_eq!(verify(&vk, &proof, &publics), Err(VerifyError::OffCurve("a")));
+        proof.a.y = good_y;
+        proof.pi = Jacobian::infinity();
+        assert_eq!(verify(&vk, &proof, &publics), Err(VerifyError::OffCurve("pi")));
+    }
+
+    #[test]
+    fn substituted_pi_on_curve_still_mismatches() {
+        // an attacker swapping π for a different valid point must hit the
+        // commitment check, not the curve check
+        let (prover, cs, vk, publics) = rig();
+        let (mut proof, _) = prover.prove(&cs);
+        proof.pi = proof.pi.add(&Jacobian::generator());
+        assert_eq!(verify(&vk, &proof, &publics), Err(VerifyError::PublicInputMismatch));
+    }
+}

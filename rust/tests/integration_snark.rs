@@ -182,6 +182,240 @@ fn streaming_prover_heavy() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// Soundness suite: every scenario, both curves. Each negative path must be
+// rejected at the layer that owns it — witness tampering by `is_satisfied`,
+// proof bit-flips by the curve checks, wrong publics by the π commitment.
+// CI runs these in release mode (`cargo test --release soundness_`).
+// ---------------------------------------------------------------------------
+
+fn soundness_negative_paths<G1, G2, P>()
+where
+    G1: ifzkp::ec::CurveParams,
+    G2: ifzkp::ec::CurveParams,
+    P: ifzkp::ff::FieldParams<4>,
+{
+    use ifzkp::ff::{Field, Fp};
+    use ifzkp::snark::{verify, Scenario, VerifyError, VerifyingKey};
+    for sc in Scenario::ALL {
+        let inst = sc.build::<P, 4>(260, 77);
+        assert!(inst.cs.is_satisfied(), "{}", sc.name());
+
+        // tampered witness: adding 1 to a mid-witness private wire must
+        // break satisfaction (every allocated wire is constrained)
+        let mut tampered = inst.cs.clone();
+        let idx = tampered.witness.len() / 2;
+        tampered.witness[idx] = tampered.witness[idx].add(&Fp::<P, 4>::one());
+        assert!(!tampered.is_satisfied(), "{}: tamper survived", sc.name());
+
+        let domain_n = inst.cs.num_constraints().max(2).next_power_of_two();
+        let crs = Crs::<G1, G2>::synthesize(inst.cs.num_variables(), domain_n, 9);
+        let vk = VerifyingKey::from_crs(&crs, inst.cs.num_public);
+        let (proof, _) = Prover::new(crs).prove(&inst.cs);
+        assert_eq!(verify(&vk, &proof, &inst.public_inputs), Ok(()), "{}", sc.name());
+
+        // wrong public input
+        let mut wrong = inst.public_inputs.clone();
+        wrong[0] = wrong[0].add(&Fp::<P, 4>::one());
+        assert_eq!(
+            verify(&vk, &proof, &wrong),
+            Err(VerifyError::PublicInputMismatch),
+            "{}",
+            sc.name()
+        );
+
+        // bit-flipped proof element lands off-curve
+        let mut flipped = ifzkp::snark::Proof { a: proof.a, b: proof.b, c: proof.c, pi: proof.pi };
+        flipped.a.y = flipped.a.y.add(&Field::one());
+        assert_eq!(
+            verify(&vk, &flipped, &inst.public_inputs),
+            Err(VerifyError::OffCurve("a")),
+            "{}",
+            sc.name()
+        );
+
+        // substituted-but-valid π must hit the commitment check
+        let mut swapped = ifzkp::snark::Proof { a: proof.a, b: proof.b, c: proof.c, pi: proof.pi };
+        swapped.pi = swapped.pi.add(&ifzkp::ec::Jacobian::generator());
+        assert_eq!(
+            verify(&vk, &swapped, &inst.public_inputs),
+            Err(VerifyError::PublicInputMismatch),
+            "{}",
+            sc.name()
+        );
+    }
+}
+
+#[test]
+fn soundness_negative_paths_bn254() {
+    soundness_negative_paths::<Bn254G1, Bn254G2, Bn254FrParams>();
+}
+
+#[test]
+fn soundness_negative_paths_bls12_381() {
+    soundness_negative_paths::<Bls12381G1, Bls12381G2, Bls12381FrParams>();
+}
+
+#[test]
+fn soundness_forged_merkle_sibling_rejected() {
+    // constraint-level rejection: swap one sibling witness after synthesis
+    // and the recomputed root no longer meets the public root
+    use ifzkp::ff::Field;
+    use ifzkp::snark::circuits::merkle::{alloc_path, fold_path, root_gadget};
+    use ifzkp::snark::circuits::poseidon2::Poseidon2;
+    use ifzkp::snark::LinearCombination;
+    use ifzkp::util::rng::Rng;
+    type Fr = ifzkp::ff::FrBn254;
+    let hasher = Poseidon2::<Bn254FrParams, 4>::standard();
+    let mut rng = Rng::new(88);
+    let leaf = Fr::random(&mut rng);
+    let index = 5usize;
+    let sibs: Vec<Fr> = (0..4).map(|_| Fr::random(&mut rng)).collect();
+    let root = fold_path(&hasher, leaf, index, &sibs);
+    let mut cs = ifzkp::snark::ConstraintSystem::<Bn254FrParams, 4>::new();
+    let w_root = cs.alloc_public(root);
+    let leaf_lc = LinearCombination::var(cs.alloc(leaf));
+    let path = alloc_path(&mut cs, index, &sibs);
+    let got = root_gadget(&hasher, &mut cs, &leaf_lc, &path);
+    cs.enforce_eq(&got, &LinearCombination::var(w_root));
+    assert!(cs.is_satisfied());
+    // forge sibling at level 2
+    cs.witness[path.siblings[2]] = cs.witness[path.siblings[2]].add(&Fr::one());
+    assert!(!cs.is_satisfied(), "forged sibling must be rejected");
+}
+
+#[test]
+fn soundness_overflowed_range_value_rejected() {
+    // constraint-level rejection: a value at exactly 2^k cannot satisfy
+    // the k-bit decomposition, nor can the −1 wrap-around candidate
+    use ifzkp::ff::Field;
+    use ifzkp::snark::circuits::range::range_gadget;
+    use ifzkp::snark::LinearCombination;
+    type Fr = ifzkp::ff::FrBn254;
+    for value in [Fr::from_u64(1u64 << 16), Fr::zero().sub(&Fr::one())] {
+        let mut cs = ifzkp::snark::ConstraintSystem::<Bn254FrParams, 4>::new();
+        let w = cs.alloc_public(value);
+        range_gadget(&mut cs, &LinearCombination::var(w), 16);
+        assert!(!cs.is_satisfied());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-runtime differential matrix: every scenario must prove bit-
+// identically across {resident, streaming} × {full-width, GLV} ×
+// {Pippenger, Chunked, auto} — and verify. One baseline proof per
+// scenario anchors the comparison.
+// ---------------------------------------------------------------------------
+
+fn differential_matrix<G1, G2, P>(seed: u64)
+where
+    G1: ifzkp::ec::CurveParams,
+    G2: ifzkp::ec::CurveParams,
+    P: ifzkp::ff::FieldParams<4>,
+    G1::Base: ifzkp::ff::WordCodec,
+    G2::Base: ifzkp::ff::WordCodec,
+{
+    use ifzkp::msm::Backend;
+    use ifzkp::snark::{
+        prove_streaming, verify, ProverConfig, Scenario, StreamingSrs, VerifyingKey,
+    };
+    use ifzkp::util::MemoryBudget;
+    for sc in Scenario::ALL {
+        let inst = sc.build::<P, 4>(240, seed);
+        let nv = inst.cs.num_variables();
+        let domain_n = inst.cs.num_constraints().max(2).next_power_of_two();
+        let crs_seed = seed ^ 0xd1f;
+        let crs = Crs::<G1, G2>::synthesize(nv, domain_n, crs_seed);
+        let vk = VerifyingKey::from_crs(&crs, inst.cs.num_public);
+        let (want, _) = Prover::new(crs).prove(&inst.cs);
+        assert_eq!(verify(&vk, &want, &inst.public_inputs), Ok(()), "{}", sc.name());
+
+        let configs = |glv: bool| {
+            let base = if glv {
+                ProverConfig::<G1, G2>::default().glv()
+            } else {
+                ProverConfig::<G1, G2>::default()
+            };
+            [
+                base.clone().backend(Backend::Pippenger),
+                base.clone().backend(Backend::Chunked { threads: 2 }),
+                base.auto_backend(),
+            ]
+        };
+        for glv in [false, true] {
+            for (ci, cfg) in configs(glv).into_iter().enumerate() {
+                let label = format!("{} glv={glv} cfg={ci}", sc.name());
+                // resident
+                let crs = Crs::<G1, G2>::synthesize(nv, domain_n, crs_seed);
+                let (got, _) = Prover::with_config(crs, cfg.clone()).prove(&inst.cs);
+                assert!(
+                    got.a.eq_point(&want.a)
+                        && got.b.eq_point(&want.b)
+                        && got.c.eq_point(&want.c)
+                        && got.pi.eq_point(&want.pi),
+                    "resident diverged: {label}"
+                );
+                assert_eq!(verify(&vk, &got, &inst.public_inputs), Ok(()), "{label}");
+                // streaming, same config, chunk-identical SRS
+                let srs = StreamingSrs::<G1, G2>::generated(nv, domain_n, crs_seed);
+                let (got, report) =
+                    prove_streaming(&inst.cs, &srs, MemoryBudget::mib(1), &cfg).unwrap();
+                assert!(
+                    got.a.eq_point(&want.a)
+                        && got.b.eq_point(&want.b)
+                        && got.c.eq_point(&want.c)
+                        && got.pi.eq_point(&want.pi),
+                    "streaming diverged: {label}"
+                );
+                assert!(report.peak_chunk_bytes <= report.budget_bytes, "{label}");
+                assert_eq!(verify(&vk, &got, &inst.public_inputs), Ok(()), "{label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scenario_differential_matrix_bn254() {
+    differential_matrix::<Bn254G1, Bn254G2, Bn254FrParams>(101);
+}
+
+#[test]
+fn scenario_differential_matrix_bls12_381() {
+    differential_matrix::<Bls12381G1, Bls12381G2, Bls12381FrParams>(102);
+}
+
+/// The repeated-SRS serving case: one prover with fixed-base tables over
+/// the CRS queries serves two same-shape instances, each bit-identical to
+/// an untabled prover. `IFZKP_HEAVY_TESTS=1` runs the 2^14 acceptance
+/// size; the default stays debug-friendly.
+#[test]
+fn scenario_point_cache_repeated_srs() {
+    use ifzkp::snark::{verify, ProverConfig, Scenario, VerifyingKey};
+    let size: usize =
+        if std::env::var("IFZKP_HEAVY_TESTS").is_ok() { 1 << 14 } else { 600 };
+    let a = Scenario::Poseidon2.build::<Bn254FrParams, 4>(size, 301);
+    let b = Scenario::Poseidon2.build::<Bn254FrParams, 4>(size, 302);
+    assert_eq!(a.cs.num_variables(), b.cs.num_variables(), "same shape required");
+    let nv = a.cs.num_variables();
+    let domain_n = a.cs.num_constraints().max(2).next_power_of_two();
+    let crs = Crs::<Bn254G1, Bn254G2>::synthesize(nv, domain_n, 303);
+    let vk = VerifyingKey::from_crs(&crs, a.cs.num_public);
+    let cached = Prover::with_config(crs, ProverConfig::default().point_cache());
+    for inst in [&a, &b] {
+        let (got, _) = cached.prove(&inst.cs);
+        let plain = Prover::new(Crs::<Bn254G1, Bn254G2>::synthesize(nv, domain_n, 303));
+        let (want, _) = plain.prove(&inst.cs);
+        assert!(
+            got.a.eq_point(&want.a)
+                && got.b.eq_point(&want.b)
+                && got.c.eq_point(&want.c)
+                && got.pi.eq_point(&want.pi),
+            "table-fed proof diverged"
+        );
+        assert_eq!(verify(&vk, &got, &inst.public_inputs), Ok(()));
+    }
+}
+
 #[test]
 fn profile_split_stable_across_runs() {
     let cs = circuits::mul_chain::<Bn254FrParams, 4>(600, 31340);
